@@ -1,0 +1,123 @@
+//! End-to-end driver (DESIGN.md §"End-to-end validation"): exercises the
+//! whole three-layer stack on a realistic workload.
+//!
+//! * trains the HBAE (≈2.4 M params) + BAE for a few hundred Adam steps
+//!   through the AOT `train_step` artifacts (L2/L1 fwd+bwd on PJRT),
+//!   logging the loss curve,
+//! * compresses the bench-scale multi-species combustion field at several
+//!   error bounds, reporting CR / NRMSE per bound,
+//! * decompresses and re-verifies the guarantee from the archive alone.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! cargo run --release --example e2e_s3d [-- --steps 300]
+//! ```
+
+use attn_reduce::compressor::{mean_channel_nrmse, HierCompressor};
+use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
+use attn_reduce::data;
+use attn_reduce::linalg::norm2_f32;
+use attn_reduce::model::ParamStore;
+use attn_reduce::runtime::Runtime;
+use attn_reduce::tensor::{block_origins, extract_block};
+use attn_reduce::util::cli::Args;
+
+fn main() -> attn_reduce::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let steps = args.get_usize("steps", 300)?;
+
+    let rt = Runtime::open("artifacts")?;
+    let mut cfg = PipelineConfig {
+        dataset: dataset_preset(DatasetKind::S3d, Scale::Bench),
+        model: model_preset(DatasetKind::S3d),
+        train: Default::default(),
+        tau: 0.0,
+    };
+    cfg.train.steps = steps;
+    cfg.train.log_every = 20;
+
+    println!("== e2e_s3d: bench-scale S3D surrogate ==");
+    let t0 = std::time::Instant::now();
+    let field = data::generate(&cfg.dataset);
+    println!(
+        "generated {:?} ({:.1} MB) in {:.1}s",
+        cfg.dataset.dims,
+        (field.len() * 4) as f64 / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- train (fresh every run: this example IS the training demo) ---
+    let ckpt = std::path::PathBuf::from("results/ckpt-e2e");
+    std::fs::create_dir_all(&ckpt)?;
+    std::fs::remove_file(ParamStore::default_path(&ckpt, &cfg.model.hbae_group)).ok();
+    std::fs::remove_file(ParamStore::default_path(&ckpt, &cfg.model.bae_group)).ok();
+    let (comp, reports) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
+    println!("\n-- loss curves --");
+    for r in &reports {
+        println!("{}:", r.group);
+        for &(s, l) in &r.losses {
+            println!("  step {s:>4}: {l:.4e}");
+        }
+        println!("  ({:.1}s, {:.2} steps/s)", r.wall_s, r.steps as f64 / r.wall_s);
+    }
+
+    // --- compress across bounds ---
+    println!("\n-- compression sweep (paper-accounting CR) --");
+    println!(
+        "{:>10} {:>12} {:>10} {:>10} {:>12} {:>10}",
+        "target", "tau", "CR", "CR(all)", "meanNRMSE", "GAE-coeff"
+    );
+    let d = cfg.dataset.gae_block_len();
+    let range = field.range() as f64;
+    for target in [3e-3f64, 1e-3, 3e-4, 1e-4] {
+        let tau = PipelineConfig::tau_for_nrmse(target, range, d);
+        let (archive, recon) = comp.compress(&field, tau)?;
+        let stats = comp.stats(&archive);
+        let e = mean_channel_nrmse(&field, &recon);
+        let gcof = archive.section("GCOF").map(|b| b.len()).unwrap_or(0);
+        println!(
+            "{target:>10.0e} {tau:>12.4e} {:>10.1} {:>10.1} {e:>12.3e} {gcof:>9}B",
+            stats.cr, stats.cr_total
+        );
+
+        // verify the bound from a decompression of the serialized archive
+        let bytes = archive.to_bytes();
+        let archive2 = attn_reduce::compressor::Archive::from_bytes(&bytes)?;
+        let hbae = ParamStore::load(
+            ParamStore::default_path(&ckpt, &cfg.model.hbae_group),
+            &cfg.model.hbae_group,
+        )?;
+        let bae = ParamStore::load(
+            ParamStore::default_path(&ckpt, &cfg.model.bae_group),
+            &cfg.model.bae_group,
+        )?;
+        let recon2 = HierCompressor::decompress(&rt, &archive2, &hbae, &[bae])?;
+        let origins = block_origins(&cfg.dataset.dims, &cfg.dataset.gae_block);
+        let (mut a, mut b) = (vec![0f32; d], vec![0f32; d]);
+        let mut worst: f64 = 0.0;
+        for o in &origins {
+            extract_block(&field, o, &cfg.dataset.gae_block, &mut a);
+            extract_block(&recon2, o, &cfg.dataset.gae_block, &mut b);
+            let diff: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
+            worst = worst.max(norm2_f32(&diff) / tau as f64);
+        }
+        assert!(worst <= 1.001, "bound violated: {worst}");
+    }
+
+    println!("\n-- runtime execution stats --");
+    let mut stats = rt.all_stats();
+    stats.sort_by(|a, b| a.0.cmp(&b.0));
+    for (name, s) in stats {
+        if s.calls > 0 {
+            println!(
+                "  {name:<34} {:>6} calls, {:>8.2} ms avg",
+                s.calls,
+                s.total_us as f64 / s.calls as f64 / 1e3
+            );
+        }
+    }
+    println!("\ntotal wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

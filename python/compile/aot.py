@@ -1,0 +1,151 @@
+"""AOT compiler: lower every model entry point to HLO text + manifest.
+
+Python's only job in this repo — runs once at build time (`make artifacts`)
+and never again; the rust binary is self-contained afterwards.
+
+Interchange is HLO **text**, not `lowered.compile().serialize()`: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--groups s3d_hbae_L128 ...]
+
+Output layout:
+    artifacts/manifest.json
+    artifacts/<group>/<entry>.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> list:
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args]
+
+
+def _out_sig(fn, args) -> list:
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, tuple):
+        outs = (outs,)
+    return [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs]
+
+
+def lower_group(group: str, entries, out_dir: str, manifest: dict,
+                extra: dict) -> None:
+    gdir = os.path.join(out_dir, group)
+    os.makedirs(gdir, exist_ok=True)
+    ginfo = {"entries": {}, **extra}
+    for name, fn, args in entries:
+        t0 = time.time()
+        # wrap so every entry returns a tuple (return_tuple=True unwrap on
+        # the rust side is uniform: to_tuple()).
+        def tup_fn(*a, _fn=fn):
+            out = _fn(*a)
+            return out if isinstance(out, tuple) else (out,)
+        lowered = jax.jit(tup_fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(gdir, fname), "w") as f:
+            f.write(text)
+        ginfo["entries"][name] = {
+            "file": f"{group}/{fname}",
+            "inputs": _sig(args),
+            "outputs": _out_sig(tup_fn, args),
+            "hlo_bytes": len(text),
+        }
+        print(f"  {group}/{name}: {len(text)/1e3:.0f} kB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    manifest["groups"][group] = ginfo
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip cleanly."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(base):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--groups", nargs="*", default=None,
+                    help="subset of group names to (re)build")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    hbaes, baes, pipes = configs.default_groups()
+    manifest = {
+        "version": 1,
+        "fingerprint": input_fingerprint(),
+        "jax_version": jax.__version__,
+        "adam": {"b1": model.ADAM_B1, "b2": model.ADAM_B2,
+                 "eps": model.ADAM_EPS},
+        "groups": {},
+    }
+
+    want = set(args.groups) if args.groups else None
+    t0 = time.time()
+    for cfg in hbaes:
+        if want and cfg.group not in want:
+            continue
+        print(f"[aot] {cfg.group} (param_dim={model.hbae_spec(cfg).total})",
+              flush=True)
+        lower_group(cfg.group, model.hbae_entries(cfg), out_dir, manifest,
+                    {"kind": "hbae", "config": configs.to_manifest_dict(cfg),
+                     "param_dim": model.hbae_spec(cfg).total,
+                     "layout": model.hbae_spec(cfg).layout()})
+    for cfg in baes:
+        if want and cfg.group not in want:
+            continue
+        print(f"[aot] {cfg.group} (param_dim={model.bae_spec(cfg).total})",
+              flush=True)
+        lower_group(cfg.group, model.bae_entries(cfg), out_dir, manifest,
+                    {"kind": "bae", "config": configs.to_manifest_dict(cfg),
+                     "param_dim": model.bae_spec(cfg).total,
+                     "layout": model.bae_spec(cfg).layout()})
+    for pc in pipes:
+        if want and pc.group not in want:
+            continue
+        print(f"[aot] {pc.group}", flush=True)
+        lower_group(pc.group, model.pipe_entries(pc.hbae, pc.bae), out_dir,
+                    manifest,
+                    {"kind": "pipe", "config": configs.to_manifest_dict(pc),
+                     "hbae_group": pc.hbae.group, "bae_group": pc.bae.group})
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['groups'])} groups in "
+          f"{time.time()-t0:.0f}s -> {out_dir}/manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

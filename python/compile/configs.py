@@ -1,0 +1,160 @@
+"""Shared model/dataset configuration for the AOT compile path.
+
+These configs are the single source of truth for every shape that crosses
+the python -> rust boundary. `aot.py` serializes them into
+``artifacts/manifest.json``; the rust side (`rust/src/config`) mirrors the
+same presets and validates against the manifest at load time.
+
+Scales:
+  * ``bench`` (default) — sizes that let the full experiment suite run on a
+    CPU box in minutes.  Block shapes per dataset keep the paper's geometry
+    (S3D species x 5 x 4 x 4, E3SM 6 x 16 x 16, XGC 39 x 39) but shrink the
+    species count / field extent.
+  * ``paper`` — the paper's full shapes (S3D 58x50x640x640 etc.); same
+    artifacts work because blocks, not fields, are the unit of compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class HbaeConfig:
+    """Hyper-block autoencoder (paper §II-B1).
+
+    Encoder: block_dim -> hidden -> (ReLU) -> embed; LayerNorm; one
+    self-attention layer over the k block embeddings with a residual
+    connection (Eq. 6); flatten k*embed -> latent.  Decoder mirrors.
+    """
+
+    name: str
+    block_dim: int          # flattened AE block size
+    k: int                  # blocks per hyper-block
+    hidden: int             # encoder/decoder hidden width
+    embed: int              # per-block embedding dim (d in the paper)
+    latent: int             # L_h
+    batch: int              # hyper-blocks per AOT call
+    attention: bool = True  # False => 'HBAE-woa' ablation variant (Fig. 5)
+
+    @property
+    def group(self) -> str:
+        suffix = "" if self.attention else "_woa"
+        return f"{self.name}_hbae_L{self.latent}{suffix}"
+
+
+@dataclasses.dataclass(frozen=True)
+class BaeConfig:
+    """Block-wise residual autoencoder (paper §II-C, Eqs. 7-8)."""
+
+    name: str
+    block_dim: int
+    hidden: int
+    latent: int             # L_b
+    batch: int              # blocks per AOT call
+
+    @property
+    def group(self) -> str:
+        return f"{self.name}_bae_L{self.latent}"
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeConfig:
+    """Fused HBAE -> residual -> BAE -> reconstruction forward pass.
+
+    One artifact for the compression hot path so the rust coordinator makes
+    a single PJRT call per hyper-block batch instead of four.
+    """
+
+    hbae: HbaeConfig
+    bae: BaeConfig
+
+    @property
+    def group(self) -> str:
+        return f"{self.hbae.name}_pipe_L{self.hbae.latent}_{self.bae.latent}"
+
+
+# ---------------------------------------------------------------------------
+# Dataset presets (bench scale).  Geometry mirrors the paper §III-A.
+# ---------------------------------------------------------------------------
+
+def s3d_hbae(latent: int = 128, attention: bool = True,
+             species: int = 16) -> HbaeConfig:
+    # paper: 58 species, AE block 58x5x4x4, k=10 temporal blocks/hyper-block
+    return HbaeConfig(
+        name="s3d", block_dim=species * 5 * 4 * 4, k=10,
+        hidden=512, embed=128, latent=latent, batch=32, attention=attention,
+    )
+
+
+def s3d_bae(latent: int = 16, species: int = 16) -> BaeConfig:
+    return BaeConfig(name="s3d", block_dim=species * 5 * 4 * 4,
+                     hidden=256, latent=latent, batch=320)
+
+
+def e3sm_hbae(latent: int = 64) -> HbaeConfig:
+    # paper: PSL blocks 6x16x16, 5 blocks/hyper-block
+    return HbaeConfig(name="e3sm", block_dim=6 * 16 * 16, k=5,
+                      hidden=512, embed=128, latent=latent, batch=32)
+
+
+def e3sm_bae(latent: int = 16) -> BaeConfig:
+    return BaeConfig(name="e3sm", block_dim=6 * 16 * 16,
+                     hidden=256, latent=latent, batch=160)
+
+
+def xgc_hbae(latent: int = 64) -> HbaeConfig:
+    # paper: one 39x39 velocity histogram per block, 8 toroidal copies per
+    # hyper-block
+    return HbaeConfig(name="xgc", block_dim=39 * 39, k=8,
+                      hidden=512, embed=128, latent=latent, batch=32)
+
+
+def xgc_bae(latent: int = 16) -> BaeConfig:
+    return BaeConfig(name="xgc", block_dim=39 * 39,
+                     hidden=256, latent=latent, batch=256)
+
+
+def default_groups() -> Tuple[List[HbaeConfig], List[BaeConfig], List[PipeConfig]]:
+    """Everything `make artifacts` builds.
+
+    Includes the three dataset presets, the Fig.-4 latent sweep variants,
+    and the Fig.-5 no-attention ablation.
+    """
+    hbaes: List[HbaeConfig] = [
+        s3d_hbae(128), e3sm_hbae(64), xgc_hbae(64),
+        # Fig. 4: HierAE-{32,64,256} (128 already present)
+        s3d_hbae(32), s3d_hbae(64), s3d_hbae(256),
+        # Fig. 5: HBAE without self-attention, full latent sweep
+        s3d_hbae(32, attention=False), s3d_hbae(64, attention=False),
+        s3d_hbae(128, attention=False), s3d_hbae(256, attention=False),
+    ]
+    baes: List[BaeConfig] = [
+        s3d_bae(16), e3sm_bae(16), xgc_bae(16),
+        # Fig. 4: BAE latent sweep
+        s3d_bae(8), s3d_bae(32), s3d_bae(64), s3d_bae(128),
+    ]
+    pipes: List[PipeConfig] = [
+        PipeConfig(s3d_hbae(128), s3d_bae(16)),
+        PipeConfig(e3sm_hbae(64), e3sm_bae(16)),
+        PipeConfig(xgc_hbae(64), xgc_bae(16)),
+    ]
+    return hbaes, baes, pipes
+
+
+def to_manifest_dict(cfg) -> Dict:
+    d = dataclasses.asdict(cfg)
+    if isinstance(cfg, PipeConfig):
+        d = {"hbae": dataclasses.asdict(cfg.hbae),
+             "bae": dataclasses.asdict(cfg.bae)}
+    d["group"] = cfg.group
+    return d
+
+
+if __name__ == "__main__":  # quick inspection helper
+    h, b, p = default_groups()
+    print(json.dumps({"hbae": [to_manifest_dict(c) for c in h],
+                      "bae": [to_manifest_dict(c) for c in b],
+                      "pipe": [to_manifest_dict(c) for c in p]}, indent=2))

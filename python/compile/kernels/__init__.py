@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the model HLO).
+
+All kernels run under ``interpret=True`` so they lower to plain HLO that the
+CPU PJRT plugin (and the rust `xla` crate) can execute.  Each exposes a
+jax-differentiable entry point via ``jax.custom_vjp`` whose forward AND
+backward passes are themselves Pallas kernels.
+
+Hardware adaptation note (DESIGN.md §3): the paper trains on A100s; here
+tiles are sized for a TPU-style VMEM scratchpad (~16 MB) and the MXU, with
+BlockSpec index maps expressing the HBM<->VMEM schedule the CUDA version
+would express with threadblocks.
+"""
+
+from .attention import attention
+from .linear import linear
+from .layernorm import layernorm
+
+__all__ = ["attention", "linear", "layernorm"]

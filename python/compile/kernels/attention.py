@@ -1,0 +1,108 @@
+"""Pallas self-attention kernel (Eq. 3) with a Pallas backward pass.
+
+The HBAE applies attention over the ``n`` block embeddings of one
+hyper-block (n = k <= 10, d = 128), so a whole hyper-block tile
+``[n, d]`` is tiny (n*d*4 B ~ 5 KB) and trivially VMEM-resident.  The grid
+axis is the hyper-block batch: program ``i`` owns hyper-block ``i`` — the
+BlockSpec index map is the HBM->VMEM schedule.  On a real TPU the two
+``[n,d] @ [d,n]``-shaped contractions map onto the MXU; here we lower with
+``interpret=True`` (mandatory for CPU PJRT — see DESIGN.md §3).
+
+Forward saves the softmax matrix ``p`` (n x n, negligible) so the backward
+kernel avoids recomputing the row-max/exp reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, p_ref, *, scale: float):
+    q = q_ref[0]                        # [n, d]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = jnp.dot(q, k.T) * scale         # [n, n]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    p_ref[0] = p
+    o_ref[0] = jnp.dot(p, v)
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, p_ref, do_ref,
+                dq_ref, dk_ref, dv_ref, *, scale: float):
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    p = p_ref[0]
+    do = do_ref[0]
+    dv_ref[0] = jnp.dot(p.T, do)                            # [n, d]
+    dp = jnp.dot(do, v.T)                                   # [n, n]
+    # softmax jacobian-vector product: ds = p * (dp - sum(dp * p, -1))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = ds * scale
+    dq_ref[0] = jnp.dot(ds, k)
+    dk_ref[0] = jnp.dot(ds.T, q)
+
+
+def _row_spec(n: int, d: int) -> pl.BlockSpec:
+    return pl.BlockSpec((1, n, d), lambda i: (i, 0, 0))
+
+
+def _sq_spec(n: int) -> pl.BlockSpec:
+    return pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))
+
+
+def _attention_fwd_impl(q, k, v):
+    bsz, n, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    out_shapes = (
+        jax.ShapeDtypeStruct((bsz, n, d), q.dtype),
+        jax.ShapeDtypeStruct((bsz, n, n), q.dtype),
+    )
+    o, p = pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale),
+        grid=(bsz,),
+        in_specs=[_row_spec(n, d)] * 3,
+        out_specs=(_row_spec(n, d), _sq_spec(n)),
+        out_shape=out_shapes,
+        interpret=True,
+    )(q, k, v)
+    return o, p
+
+
+@jax.custom_vjp
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """softmax(q kᵀ / sqrt(d)) v over [B, n, d] inputs (Eq. 3)."""
+    o, _ = _attention_fwd_impl(q, k, v)
+    return o
+
+
+def _attention_fwd(q, k, v):
+    o, p = _attention_fwd_impl(q, k, v)
+    return o, (q, k, v, p)
+
+
+def _attention_bwd(res, do):
+    q, k, v, p = res
+    bsz, n, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    out_shapes = tuple(jax.ShapeDtypeStruct((bsz, n, d), q.dtype)
+                       for _ in range(3))
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale),
+        grid=(bsz,),
+        in_specs=[_row_spec(n, d), _row_spec(n, d), _row_spec(n, d),
+                  _sq_spec(n), _row_spec(n, d)],
+        out_specs=(_row_spec(n, d), _row_spec(n, d), _row_spec(n, d)),
+        out_shape=out_shapes,
+        interpret=True,
+    )(q, k, v, p, do)
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

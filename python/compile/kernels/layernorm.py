@@ -1,0 +1,125 @@
+"""Row-wise LayerNorm Pallas kernel with a Pallas backward pass.
+
+Used twice in the model: Eq. 6's `norm` over the k block embeddings before
+self-attention, and the BAE's residual re-scaling (paper §II-C).  Rows are
+independent, so the grid tiles the batch dimension; each program holds a
+``[tm, D]`` tile plus the ``[D]`` affine params in VMEM.
+
+Forward saves the per-row mean and reciprocal std (2 floats/row) so the
+backward kernel skips the reduction re-derivation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(dim: int, cap: int) -> int:
+    t = min(dim, cap)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _fwd_kernel(x_ref, g_ref, b_ref, y_ref, mu_ref, rs_ref, *, eps: float):
+    x = x_ref[...]                                     # [tm, D]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    y_ref[...] = (x - mu) * rstd * g_ref[...] + b_ref[...]
+    mu_ref[...] = mu
+    rs_ref[...] = rstd
+
+
+def _bwd_kernel(x_ref, g_ref, mu_ref, rs_ref, dy_ref,
+                dx_ref, dg_ref, db_ref):
+    x = x_ref[...]
+    gamma = g_ref[...]
+    mu = mu_ref[...]
+    rstd = rs_ref[...]
+    dy = dy_ref[...]
+    xhat = (x - mu) * rstd                             # [tm, D]
+    dg_ref[...] = jnp.sum(dy * xhat, axis=0, keepdims=True)
+    db_ref[...] = jnp.sum(dy, axis=0, keepdims=True)
+    dxh = dy * gamma
+    d = x.shape[-1]
+    # dx = rstd * (dxh - mean(dxh) - xhat * mean(dxh * xhat))
+    m1 = jnp.sum(dxh, axis=-1, keepdims=True) / d
+    m2 = jnp.sum(dxh * xhat, axis=-1, keepdims=True) / d
+    dx_ref[...] = rstd * (dxh - m1 - xhat * m2)
+
+
+def _fwd_impl(x, gamma, beta, eps):
+    bsz, d = x.shape
+    tm = _tile(bsz, 128)
+    g2, b2 = gamma.reshape(1, d), beta.reshape(1, d)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, eps=eps),
+        grid=(bsz // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, d), x.dtype),
+            jax.ShapeDtypeStruct((bsz, 1), x.dtype),
+            jax.ShapeDtypeStruct((bsz, 1), x.dtype),
+        ),
+        interpret=True,
+    )(x, g2, b2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    """Row-wise layernorm over the last axis of x [B, D]."""
+    y, _, _ = _fwd_impl(x, gamma, beta, eps)
+    return y
+
+
+def _layernorm_fwd(x, gamma, beta, eps):
+    y, mu, rstd = _fwd_impl(x, gamma, beta, eps)
+    return y, (x, gamma, mu, rstd)
+
+
+def _layernorm_bwd(eps, res, dy):
+    x, gamma, mu, rstd = res
+    bsz, d = x.shape
+    tm = bsz  # single tile: dgamma/dbeta reduce over the whole batch
+    g2 = gamma.reshape(1, d)
+    dx, dg, db = pl.pallas_call(
+        _bwd_kernel,
+        grid=(bsz // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, d), x.dtype),
+            jax.ShapeDtypeStruct((1, d), x.dtype),
+            jax.ShapeDtypeStruct((1, d), x.dtype),
+        ),
+        interpret=True,
+    )(x, g2, mu, rstd, dy)
+    return dx, dg.reshape(d), db.reshape(d)
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

@@ -1,0 +1,124 @@
+"""Fused linear(+bias)(+ReLU) Pallas kernel with Pallas backward kernels.
+
+Forward: ``y = act(x @ w + b)`` with x ``[B, K]``, w ``[K, N]``.  The grid
+tiles rows of ``x`` and columns of ``w``; each program keeps an
+``[tm, K]`` x ``[K, tn]`` working set in VMEM and emits one ``[tm, tn]``
+output tile — the MXU-shaped inner product.  Tile sizes are chosen as the
+largest divisors of B and N below caps so every shape in the model (block
+dims 1280/1536/1521, hiddens 512/256, embeds/latents down to 8) tiles
+exactly with no padding logic in-kernel.
+
+Backward:
+  * ``dx = g @ wᵀ`` reuses the forward matmul kernel (bias-free, no act).
+  * ``dw = xᵀ @ g`` has its own kernel gridded over (K-tiles, N-tiles) with
+    the full batch resident per program.
+  * ``db = Σ_B g`` is a row-sum kernel gridded over N-tiles.
+
+where ``g = dy * 1[y > 0]`` for ReLU (mask applied in the dw/db/dx feeds).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile(dim: int, cap: int) -> int:
+    """Largest divisor of `dim` that is <= cap (>=1)."""
+    t = min(dim, cap)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    y = jnp.dot(x_ref[...], w_ref[...])            # [tm, K] @ [K, tn]
+    y = y + b_ref[...]                             # [1, tn] broadcast
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _matmul(x, w, b, act: str):
+    bsz, kdim = x.shape
+    ndim = w.shape[1]
+    tm, tn = _tile(bsz, 128), _tile(ndim, 256)
+    b2 = b.reshape(1, ndim)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act),
+        grid=(bsz // tm, ndim // tn),
+        in_specs=[
+            pl.BlockSpec((tm, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((kdim, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ndim), x.dtype),
+        interpret=True,
+    )(x, w, b2)
+
+
+def _dw_kernel(x_ref, g_ref, dw_ref):
+    dw_ref[...] = jnp.dot(x_ref[...].T, g_ref[...])   # [tk, B]ᵀ… -> [tk, tn]
+
+
+def _dw(x, g):
+    bsz, kdim = x.shape
+    ndim = g.shape[1]
+    tk, tn = _tile(kdim, 256), _tile(ndim, 256)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid=(kdim // tk, ndim // tn),
+        in_specs=[
+            pl.BlockSpec((bsz, tk), lambda i, j: (0, i)),
+            pl.BlockSpec((bsz, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tk, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((kdim, ndim), x.dtype),
+        interpret=True,
+    )(x, g)
+
+
+def _db_kernel(g_ref, db_ref):
+    db_ref[...] = jnp.sum(g_ref[...], axis=0, keepdims=True)
+
+
+def _db(g):
+    bsz, ndim = g.shape
+    tn = _tile(ndim, 512)
+    out = pl.pallas_call(
+        _db_kernel,
+        grid=(ndim // tn,),
+        in_specs=[pl.BlockSpec((bsz, tn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, ndim), g.dtype),
+        interpret=True,
+    )(g)
+    return out.reshape(ndim)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x: jax.Array, w: jax.Array, b: jax.Array,
+           act: str = "none") -> jax.Array:
+    """Fused y = act(x @ w + b); act in {"none", "relu"}."""
+    return _matmul(x, w, b, act)
+
+
+def _linear_fwd(x, w, b, act):
+    y = _matmul(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _linear_bwd(act, res, dy):
+    x, w, y = res
+    g = jnp.where(y > 0.0, dy, 0.0) if act == "relu" else dy
+    # dx = g @ wᵀ — forward kernel with zero bias, no activation.
+    zb = jnp.zeros((w.shape[0],), dtype=x.dtype)
+    dx = _matmul(g, w.T, zb, "none")
+    return dx, _dw(x, g), _db(g)
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,337 @@
+"""Layer-2 JAX model: HBAE, BAE, Adam train steps, fused pipeline.
+
+Everything here is written against a **single flat float32 parameter
+vector** per model, with static pack/unpack offsets, so the rust FFI
+surface stays tiny: every AOT entry point takes/returns a handful of
+literals instead of a pytree.  The layout is recorded in
+``artifacts/manifest.json`` and mirrored by ``rust/src/model``.
+
+Architecture (paper §II-B/C):
+
+  HBAE  encode:  block --E--> embed --LN--> self-attention (+residual,
+                 Eq. 6) --> flatten k*d --> linear --> latent L_h
+        decode:  L_h --> linear --> reshape k x d --> LN --> attention
+                 (+residual) --> D --> blocks
+  BAE   encode:  LN(residual) --E--> latent L_b
+        decode:  L_b --D--> residual estimate (original scale; Eq. 8)
+
+E and D are two fully-connected layers with a ReLU in the middle (paper
+§II-B1).  All dense layers, layernorms and attention run through the
+Pallas kernels in ``kernels/`` (interpret=True), forward and backward.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import BaeConfig, HbaeConfig
+from .kernels import attention, linear, layernorm
+
+# Adam defaults — paper §III-C uses Adam with lr 1e-3; lr arrives as a
+# runtime scalar so the rust trainer can schedule it.
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter packing
+# ---------------------------------------------------------------------------
+
+class ParamSpec:
+    """Ordered (name, shape) list with static offsets into a flat vector."""
+
+    def __init__(self) -> None:
+        self._entries: List[Tuple[str, Tuple[int, ...], int]] = []
+        self._total = 0
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        size = 1
+        for s in shape:
+            size *= s
+        self._entries.append((name, shape, self._total))
+        self._total += size
+
+    @property
+    def total(self) -> int:
+        return self._total
+
+    def unpack(self, flat: jax.Array) -> Dict[str, jax.Array]:
+        out = {}
+        for name, shape, off in self._entries:
+            size = 1
+            for s in shape:
+                size *= s
+            out[name] = jax.lax.slice(flat, (off,), (off + size,)).reshape(shape)
+        return out
+
+    def init(self, key: jax.Array) -> jax.Array:
+        """Glorot-uniform weights, zero biases, unit gammas — concatenated."""
+        parts = []
+        for name, shape, _ in self._entries:
+            key, sub = jax.random.split(key)
+            if name.endswith("_g"):                     # layernorm gamma
+                parts.append(jnp.ones(shape, jnp.float32).ravel())
+            elif len(shape) == 1:                        # biases / beta
+                parts.append(jnp.zeros(shape, jnp.float32))
+            else:
+                fan_in, fan_out = shape[0], shape[1]
+                lim = (6.0 / (fan_in + fan_out)) ** 0.5
+                parts.append(jax.random.uniform(
+                    sub, shape, jnp.float32, -lim, lim).ravel())
+        return jnp.concatenate(parts)
+
+    def layout(self) -> List[Dict]:
+        return [{"name": n, "shape": list(s), "offset": o}
+                for n, s, o in self._entries]
+
+
+def hbae_spec(cfg: HbaeConfig) -> ParamSpec:
+    sp = ParamSpec()
+    bd, h, d, kd, lh = (cfg.block_dim, cfg.hidden, cfg.embed,
+                        cfg.k * cfg.embed, cfg.latent)
+    sp.add("enc_w1", (bd, h)); sp.add("enc_b1", (h,))
+    sp.add("enc_w2", (h, d)); sp.add("enc_b2", (d,))
+    if cfg.attention:
+        sp.add("ln1_g", (d,)); sp.add("ln1_b", (d,))
+        sp.add("wq1", (d, d)); sp.add("wk1", (d, d)); sp.add("wv1", (d, d))
+    sp.add("proj_w", (kd, lh)); sp.add("proj_b", (lh,))
+    sp.add("dep_w", (lh, kd)); sp.add("dep_b", (kd,))
+    if cfg.attention:
+        sp.add("ln2_g", (d,)); sp.add("ln2_b", (d,))
+        sp.add("wq2", (d, d)); sp.add("wk2", (d, d)); sp.add("wv2", (d, d))
+    sp.add("dec_w1", (d, h)); sp.add("dec_b1", (h,))
+    sp.add("dec_w2", (h, bd)); sp.add("dec_b2", (bd,))
+    return sp
+
+
+def bae_spec(cfg: BaeConfig) -> ParamSpec:
+    sp = ParamSpec()
+    bd, h, lb = cfg.block_dim, cfg.hidden, cfg.latent
+    sp.add("ln_g", (bd,)); sp.add("ln_b", (bd,))
+    sp.add("enc_w1", (bd, h)); sp.add("enc_b1", (h,))
+    sp.add("enc_w2", (h, lb)); sp.add("enc_b2", (lb,))
+    sp.add("dec_w1", (lb, h)); sp.add("dec_b1", (h,))
+    sp.add("dec_w2", (h, bd)); sp.add("dec_b2", (bd,))
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# HBAE forward
+# ---------------------------------------------------------------------------
+
+def _attend(e2: jax.Array, p: Dict[str, jax.Array], which: str,
+            nh: int, k: int, d: int) -> jax.Array:
+    """Eq. 6: Atten(norm(e)) + e over the k embeddings of each hyper-block."""
+    ln = layernorm(e2, p[f"ln{which}_g"], p[f"ln{which}_b"])
+    zb = jnp.zeros((d,), jnp.float32)
+    q = linear(ln, p[f"wq{which}"], zb)
+    kk = linear(ln, p[f"wk{which}"], zb)
+    v = linear(ln, p[f"wv{which}"], zb)
+    att = attention(q.reshape(nh, k, d), kk.reshape(nh, k, d),
+                    v.reshape(nh, k, d))
+    return att.reshape(nh * k, d) + e2
+
+
+def hbae_encode(cfg: HbaeConfig, theta: jax.Array,
+                batch: jax.Array) -> jax.Array:
+    """[Nh, k, block_dim] -> [Nh, L_h]."""
+    p = hbae_spec(cfg).unpack(theta)
+    nh, k, bd = batch.shape
+    d = cfg.embed
+    x = batch.reshape(nh * k, bd)
+    hid = linear(x, p["enc_w1"], p["enc_b1"], "relu")
+    e = linear(hid, p["enc_w2"], p["enc_b2"])
+    if cfg.attention:
+        e = _attend(e, p, "1", nh, k, d)
+    flat = e.reshape(nh, k * d)
+    return linear(flat, p["proj_w"], p["proj_b"])
+
+
+def hbae_decode(cfg: HbaeConfig, theta: jax.Array,
+                lat: jax.Array) -> jax.Array:
+    """[Nh, L_h] -> [Nh, k, block_dim]."""
+    p = hbae_spec(cfg).unpack(theta)
+    nh = lat.shape[0]
+    k, d, bd = cfg.k, cfg.embed, cfg.block_dim
+    z = linear(lat, p["dep_w"], p["dep_b"]).reshape(nh * k, d)
+    if cfg.attention:
+        z = _attend(z, p, "2", nh, k, d)
+    hid = linear(z, p["dec_w1"], p["dec_b1"], "relu")
+    out = linear(hid, p["dec_w2"], p["dec_b2"])
+    return out.reshape(nh, k, bd)
+
+
+def hbae_apply(cfg: HbaeConfig, theta: jax.Array,
+               batch: jax.Array) -> jax.Array:
+    return hbae_decode(cfg, theta, hbae_encode(cfg, theta, batch))
+
+
+# ---------------------------------------------------------------------------
+# BAE forward
+# ---------------------------------------------------------------------------
+
+def bae_encode(cfg: BaeConfig, phi: jax.Array, r: jax.Array) -> jax.Array:
+    """Residual blocks [Nb, block_dim] -> latents [Nb, L_b] (Eq. 7)."""
+    p = bae_spec(cfg).unpack(phi)
+    xn = layernorm(r, p["ln_g"], p["ln_b"])
+    hid = linear(xn, p["enc_w1"], p["enc_b1"], "relu")
+    return linear(hid, p["enc_w2"], p["enc_b2"])
+
+
+def bae_decode(cfg: BaeConfig, phi: jax.Array, lat: jax.Array) -> jax.Array:
+    """Latents -> residual estimate in the original scale (Eq. 8)."""
+    p = bae_spec(cfg).unpack(phi)
+    hid = linear(lat, p["dec_w1"], p["dec_b1"], "relu")
+    return linear(hid, p["dec_w2"], p["dec_b2"])
+
+
+def bae_apply(cfg: BaeConfig, phi: jax.Array, r: jax.Array) -> jax.Array:
+    return bae_decode(cfg, phi, bae_encode(cfg, phi, r))
+
+
+# ---------------------------------------------------------------------------
+# Adam train steps
+# ---------------------------------------------------------------------------
+
+def _adam_step(loss_fn, theta, m, v, t, lr, batch):
+    loss, g = jax.value_and_grad(loss_fn)(theta, batch)
+    t = t + 1.0
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    theta = theta - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return theta, m, v, t, loss
+
+
+def hbae_train_step(cfg: HbaeConfig, theta, m, v, t, lr, batch):
+    """One Adam step on MSE(hbae(batch), batch); batch [Nh, k, block_dim]."""
+    def loss_fn(th, b):
+        return jnp.mean(jnp.square(hbae_apply(cfg, th, b) - b))
+    return _adam_step(loss_fn, theta, m, v, t, lr, batch)
+
+
+def bae_train_step(cfg: BaeConfig, phi, m, v, t, lr, rbatch):
+    """One Adam step on MSE(bae(r), r); rbatch [Nb, block_dim]."""
+    def loss_fn(ph, r):
+        return jnp.mean(jnp.square(bae_apply(cfg, ph, r) - r))
+    return _adam_step(loss_fn, phi, m, v, t, lr, rbatch)
+
+
+# ---------------------------------------------------------------------------
+# Fused pipeline entry points (compression / decompression hot path)
+# ---------------------------------------------------------------------------
+
+def _quantize(x: jax.Array, bin_size: jax.Array) -> jax.Array:
+    """Mid-tread uniform quantization to bin centers; bin<=0 disables.
+
+    Returns the *dequantized* values.  The rust side recovers the integer
+    codes exactly as round(x_q / bin) for entropy coding (§II-E).
+    """
+    q = jnp.round(x / jnp.where(bin_size > 0, bin_size, 1.0)) * bin_size
+    return jnp.where(bin_size > 0, q, x)
+
+
+def pipe_forward(hcfg: HbaeConfig, bcfg: BaeConfig, theta, phi,
+                 batch, bin_h, bin_b):
+    """Full compression forward: batch [Nh, k, Bd], scalar quant bins.
+
+    Returns (L_h_q, L_b_q, recon) where latents are already dequantized
+    through the same bins the reconstruction used, so the stored codes and
+    the reported error are consistent (paper §III-E / Table II).
+    """
+    nh, k, bd = batch.shape
+    lh = _quantize(hbae_encode(hcfg, theta, batch), bin_h)
+    y = hbae_decode(hcfg, theta, lh)
+    r = (batch - y).reshape(nh * k, bd)
+    lb = _quantize(bae_encode(bcfg, phi, r), bin_b)
+    rhat = bae_decode(bcfg, phi, lb).reshape(nh, k, bd)
+    return lh, lb, y + rhat
+
+
+def pipe_decode(hcfg: HbaeConfig, bcfg: BaeConfig, theta, phi, lh, lb):
+    """Decompression: dequantized latents -> reconstruction [Nh, k, Bd]."""
+    y = hbae_decode(hcfg, theta, lh)
+    rhat = bae_decode(bcfg, phi, lb).reshape(y.shape)
+    return y + rhat
+
+
+# ---------------------------------------------------------------------------
+# Entry-point builders for aot.py
+# ---------------------------------------------------------------------------
+
+def hbae_entries(cfg: HbaeConfig):
+    """(name, fn, example_args) tuples to lower for one HBAE group."""
+    sp = hbae_spec(cfg)
+    pdim = sp.total
+    f32 = jnp.float32
+    vec = lambda n: jax.ShapeDtypeStruct((n,), f32)
+    scal = jax.ShapeDtypeStruct((), f32)
+    batch = jax.ShapeDtypeStruct((cfg.batch, cfg.k, cfg.block_dim), f32)
+    lat = jax.ShapeDtypeStruct((cfg.batch, cfg.latent), f32)
+    seed = zlib.crc32(cfg.group.encode()) & 0x7FFFFFFF  # stable across runs
+
+    def init():
+        return (sp.init(jax.random.PRNGKey(seed)),)
+
+    return [
+        ("init", init, ()),
+        ("train_step",
+         lambda th, m, v, t, lr, b: hbae_train_step(cfg, th, m, v, t, lr, b),
+         (vec(pdim), vec(pdim), vec(pdim), scal, scal, batch)),
+        ("encode", lambda th, b: (hbae_encode(cfg, th, b),),
+         (vec(pdim), batch)),
+        ("decode", lambda th, l: (hbae_decode(cfg, th, l),),
+         (vec(pdim), lat)),
+    ]
+
+
+def bae_entries(cfg: BaeConfig):
+    sp = bae_spec(cfg)
+    pdim = sp.total
+    f32 = jnp.float32
+    vec = lambda n: jax.ShapeDtypeStruct((n,), f32)
+    scal = jax.ShapeDtypeStruct((), f32)
+    rbatch = jax.ShapeDtypeStruct((cfg.batch, cfg.block_dim), f32)
+    lat = jax.ShapeDtypeStruct((cfg.batch, cfg.latent), f32)
+    seed = zlib.crc32(cfg.group.encode()) & 0x7FFFFFFF  # stable across runs
+
+    def init():
+        return (sp.init(jax.random.PRNGKey(seed)),)
+
+    return [
+        ("init", init, ()),
+        ("train_step",
+         lambda ph, m, v, t, lr, r: bae_train_step(cfg, ph, m, v, t, lr, r),
+         (vec(pdim), vec(pdim), vec(pdim), scal, scal, rbatch)),
+        ("encode", lambda ph, r: (bae_encode(cfg, ph, r),),
+         (vec(pdim), rbatch)),
+        ("decode", lambda ph, l: (bae_decode(cfg, ph, l),),
+         (vec(pdim), lat)),
+    ]
+
+
+def pipe_entries(hcfg: HbaeConfig, bcfg: BaeConfig):
+    assert hcfg.block_dim == bcfg.block_dim
+    assert bcfg.batch == hcfg.batch * hcfg.k, \
+        "pipe requires BAE batch == Nh * k"
+    f32 = jnp.float32
+    vec = lambda n: jax.ShapeDtypeStruct((n,), f32)
+    scal = jax.ShapeDtypeStruct((), f32)
+    batch = jax.ShapeDtypeStruct((hcfg.batch, hcfg.k, hcfg.block_dim), f32)
+    lath = jax.ShapeDtypeStruct((hcfg.batch, hcfg.latent), f32)
+    latb = jax.ShapeDtypeStruct((bcfg.batch, bcfg.latent), f32)
+    ph, pb = hbae_spec(hcfg).total, bae_spec(bcfg).total
+    return [
+        ("forward",
+         lambda th, phi, b, bh, bb: pipe_forward(hcfg, bcfg, th, phi, b, bh, bb),
+         (vec(ph), vec(pb), batch, scal, scal)),
+        ("decode",
+         lambda th, phi, lh, lb: (pipe_decode(hcfg, bcfg, th, phi, lh, lb),),
+         (vec(ph), vec(pb), lath, latb)),
+    ]

@@ -1,0 +1,79 @@
+"""AOT path: lowering produces parseable HLO text + a consistent manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import configs, model
+from compile.aot import to_hlo_text, input_fingerprint, lower_group
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = configs.HbaeConfig(name="tiny", block_dim=20, k=3, hidden=16,
+                          embed=8, latent=4, batch=2)
+TINY_B = configs.BaeConfig(name="tiny", block_dim=20, hidden=12, latent=4,
+                           batch=6)
+
+
+def test_hlo_text_is_hlo(tmp_path):
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_lower_group_writes_all_entries(tmp_path):
+    man = {"groups": {}}
+    lower_group(TINY.group, model.hbae_entries(TINY), str(tmp_path), man,
+                {"kind": "hbae", "param_dim": model.hbae_spec(TINY).total})
+    ginfo = man["groups"][TINY.group]
+    assert set(ginfo["entries"]) == {"init", "train_step", "encode", "decode"}
+    for name, ent in ginfo["entries"].items():
+        path = tmp_path / ent["file"]
+        assert path.exists() and path.stat().st_size == ent["hlo_bytes"]
+        assert path.read_text().startswith("HloModule")
+
+
+def test_manifest_signatures_match_specs(tmp_path):
+    man = {"groups": {}}
+    lower_group(TINY_B.group, model.bae_entries(TINY_B), str(tmp_path), man,
+                {"kind": "bae"})
+    ent = man["groups"][TINY_B.group]["entries"]["train_step"]
+    pdim = model.bae_spec(TINY_B).total
+    assert ent["inputs"][0]["shape"] == [pdim]          # phi
+    assert ent["inputs"][5]["shape"] == [TINY_B.batch, TINY_B.block_dim]
+    assert ent["outputs"][0]["shape"] == [pdim]          # phi'
+    assert ent["outputs"][4]["shape"] == []              # scalar loss
+    enc = man["groups"][TINY_B.group]["entries"]["encode"]
+    assert enc["outputs"][0]["shape"] == [TINY_B.batch, TINY_B.latent]
+
+
+def test_fingerprint_stable():
+    assert input_fingerprint() == input_fingerprint()
+
+
+def test_default_groups_unique_names():
+    h, b, p = configs.default_groups()
+    names = [c.group for c in h] + [c.group for c in b] + [c.group for c in p]
+    assert len(names) == len(set(names))
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built")
+def test_built_manifest_covers_default_groups():
+    path = os.path.join(os.path.dirname(__file__),
+                        "../../artifacts/manifest.json")
+    man = json.load(open(path))
+    h, b, p = configs.default_groups()
+    for cfg in list(h) + list(b) + list(p):
+        assert cfg.group in man["groups"], cfg.group
+    # every referenced file exists
+    root = os.path.dirname(path)
+    for g in man["groups"].values():
+        for ent in g["entries"].values():
+            assert os.path.exists(os.path.join(root, ent["file"]))

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, fwd and bwd.
+
+Hypothesis sweeps shapes; every property asserts allclose against ref.py.
+This is the core correctness signal for everything the rust runtime
+executes — the kernels lower into every artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, linear, layernorm
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def rng(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 6), n=st.integers(1, 12),
+       d=st.sampled_from([1, 3, 8, 16, 64, 128]), seed=st.integers(0, 99))
+def test_attention_fwd_matches_ref(b, n, d, seed):
+    q, k, v = rng(seed, b, n, d), rng(seed + 1, b, n, d), rng(seed + 2, b, n, d)
+    np.testing.assert_allclose(attention(q, k, v),
+                               ref.attention_ref(q, k, v), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 4), n=st.integers(2, 10),
+       d=st.sampled_from([4, 16, 32]), seed=st.integers(0, 99))
+def test_attention_grads_match_ref(b, n, d, seed):
+    q, k, v = rng(seed, b, n, d), rng(seed + 1, b, n, d), rng(seed + 2, b, n, d)
+
+    def f(fn):
+        return lambda *a: jnp.sum(jnp.sin(fn(*a)))
+
+    g = jax.grad(f(attention), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f(ref.attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-4)
+
+
+def test_attention_rows_sum_preserved():
+    """Attention output of constant V rows is that constant (softmax sums 1)."""
+    q, k = rng(0, 2, 5, 8), rng(1, 2, 5, 8)
+    v = jnp.ones((2, 5, 8)) * 3.25
+    np.testing.assert_allclose(attention(q, k, v), v, **TOL)
+
+
+def test_attention_permutation_equivariance():
+    """Permuting the n axis of q permutes outputs the same way."""
+    q, k, v = rng(3, 1, 6, 16), rng(4, 1, 6, 16), rng(5, 1, 6, 16)
+    perm = jnp.array([3, 1, 5, 0, 4, 2])
+    out = attention(q, k, v)
+    out_p = attention(q[:, perm], k, v)
+    np.testing.assert_allclose(out[:, perm], out_p, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(bsz=st.sampled_from([1, 3, 7, 32, 130]),
+       kdim=st.sampled_from([1, 5, 17, 64]),
+       ndim=st.sampled_from([1, 8, 39, 257]),
+       act=st.sampled_from(["none", "relu"]), seed=st.integers(0, 99))
+def test_linear_fwd_matches_ref(bsz, kdim, ndim, act, seed):
+    x, w = rng(seed, bsz, kdim), rng(seed + 1, kdim, ndim)
+    b = rng(seed + 2, ndim)
+    np.testing.assert_allclose(linear(x, w, b, act),
+                               ref.linear_ref(x, w, b, act), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bsz=st.sampled_from([2, 9, 32]), kdim=st.sampled_from([3, 16]),
+       ndim=st.sampled_from([2, 13]), act=st.sampled_from(["none", "relu"]),
+       seed=st.integers(0, 99))
+def test_linear_grads_match_ref(bsz, kdim, ndim, act, seed):
+    x, w = rng(seed, bsz, kdim), rng(seed + 1, kdim, ndim)
+    b = rng(seed + 2, ndim)
+
+    def f(fn):
+        return lambda *a: jnp.sum(jnp.cos(fn(*a, act)))
+
+    g = jax.grad(f(linear), argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f(ref.linear_ref), argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(g, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-4)
+
+
+def test_linear_relu_clamps():
+    x = jnp.array([[-10.0, 10.0]])
+    w = jnp.eye(2)
+    b = jnp.zeros(2)
+    out = np.asarray(linear(x, w, b, "relu"))
+    assert out[0, 0] == 0.0 and out[0, 1] == 10.0
+
+
+def test_linear_model_shapes():
+    """The exact shapes the three dataset presets feed the kernel."""
+    for bsz, kdim, ndim in [(320, 1280, 512), (512, 128, 512),
+                            (160, 1536, 256), (256, 1521, 256),
+                            (32, 1280, 128), (256, 256, 16)]:
+        x, w = rng(0, bsz, kdim), rng(1, kdim, ndim)
+        b = rng(2, ndim)
+        np.testing.assert_allclose(linear(x, w, b, "relu"),
+                                   ref.linear_ref(x, w, b, "relu"), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(bsz=st.sampled_from([1, 2, 7, 33, 128]),
+       d=st.sampled_from([2, 3, 17, 128, 1521]), seed=st.integers(0, 99))
+def test_layernorm_fwd_matches_ref(bsz, d, seed):
+    x = rng(seed, bsz, d)
+    g, b = rng(seed + 1, d), rng(seed + 2, d)
+    np.testing.assert_allclose(layernorm(x, g, b),
+                               ref.layernorm_ref(x, g, b), **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bsz=st.sampled_from([2, 9]), d=st.sampled_from([4, 33]),
+       seed=st.integers(0, 99))
+def test_layernorm_grads_match_ref(bsz, d, seed):
+    x = rng(seed, bsz, d)
+    g, b = rng(seed + 1, d), rng(seed + 2, d)
+
+    def f(fn):
+        return lambda *a: jnp.sum(jnp.tanh(fn(*a)))
+
+    gr1 = jax.grad(f(layernorm), argnums=(0, 1, 2))(x, g, b)
+    gr2 = jax.grad(f(ref.layernorm_ref), argnums=(0, 1, 2))(x, g, b)
+    for a, b_ in zip(gr1, gr2):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-4)
+
+
+def test_layernorm_output_standardized():
+    x = rng(7, 16, 256)
+    y = np.asarray(layernorm(x, jnp.ones(256), jnp.zeros(256)))
+    np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_affine():
+    x = rng(8, 4, 32)
+    g = jnp.full((32,), 2.0)
+    b = jnp.full((32,), -1.0)
+    base = np.asarray(layernorm(x, jnp.ones(32), jnp.zeros(32)))
+    out = np.asarray(layernorm(x, g, b))
+    np.testing.assert_allclose(out, base * 2.0 - 1.0, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,193 @@
+"""L2 correctness: parameter packing, shapes, training dynamics, pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY_H = configs.HbaeConfig(name="tiny", block_dim=40, k=4, hidden=32,
+                            embed=16, latent=8, batch=4)
+TINY_H_WOA = configs.HbaeConfig(name="tiny", block_dim=40, k=4, hidden=32,
+                                embed=16, latent=8, batch=4, attention=False)
+TINY_B = configs.BaeConfig(name="tiny", block_dim=40, hidden=24, latent=4,
+                           batch=16)
+
+
+def batch_for(cfg, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed),
+                             (cfg.batch, cfg.k, cfg.block_dim), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Param spec / packing
+# ---------------------------------------------------------------------------
+
+def test_spec_offsets_are_contiguous():
+    for sp in (model.hbae_spec(TINY_H), model.hbae_spec(TINY_H_WOA),
+               model.bae_spec(TINY_B)):
+        expect = 0
+        for ent in sp.layout():
+            assert ent["offset"] == expect
+            n = 1
+            for s in ent["shape"]:
+                n *= s
+            expect += n
+        assert sp.total == expect
+
+
+def test_unpack_round_trips_values():
+    sp = model.bae_spec(TINY_B)
+    flat = jnp.arange(sp.total, dtype=jnp.float32)
+    parts = sp.unpack(flat)
+    # reassemble in layout order and compare
+    re = jnp.concatenate([parts[e["name"]].ravel() for e in sp.layout()])
+    np.testing.assert_array_equal(re, flat)
+
+
+def test_init_deterministic_and_scaled():
+    sp = model.hbae_spec(TINY_H)
+    a = sp.init(jax.random.PRNGKey(7))
+    b = sp.init(jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(a, b)
+    parts = sp.unpack(a)
+    assert float(jnp.max(jnp.abs(parts["enc_w1"]))) < 1.0  # glorot bounded
+    np.testing.assert_array_equal(parts["enc_b1"], 0.0)
+    np.testing.assert_array_equal(parts["ln1_g"], 1.0)
+
+
+def test_woa_spec_has_no_attention_params():
+    names = {e["name"] for e in model.hbae_spec(TINY_H_WOA).layout()}
+    assert not names & {"wq1", "wk1", "wv1", "wq2", "wk2", "wv2",
+                        "ln1_g", "ln2_g"}
+    assert model.hbae_spec(TINY_H_WOA).total < model.hbae_spec(TINY_H).total
+
+
+# ---------------------------------------------------------------------------
+# Forward shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [TINY_H, TINY_H_WOA])
+def test_hbae_shapes(cfg):
+    theta = model.hbae_spec(cfg).init(jax.random.PRNGKey(0))
+    b = batch_for(cfg)
+    lat = model.hbae_encode(cfg, theta, b)
+    assert lat.shape == (cfg.batch, cfg.latent)
+    y = model.hbae_decode(cfg, theta, lat)
+    assert y.shape == b.shape
+
+
+def test_bae_shapes():
+    phi = model.bae_spec(TINY_B).init(jax.random.PRNGKey(0))
+    r = jax.random.normal(jax.random.PRNGKey(1),
+                          (TINY_B.batch, TINY_B.block_dim))
+    lat = model.bae_encode(TINY_B, phi, r)
+    assert lat.shape == (TINY_B.batch, TINY_B.latent)
+    rhat = model.bae_decode(TINY_B, phi, lat)
+    assert rhat.shape == r.shape
+
+
+def test_dataset_preset_shapes_consistent():
+    """Presets must satisfy the pipe constraint Nb == Nh * k."""
+    for h, b in [(configs.s3d_hbae(), configs.s3d_bae()),
+                 (configs.e3sm_hbae(), configs.e3sm_bae()),
+                 (configs.xgc_hbae(), configs.xgc_bae())]:
+        assert h.block_dim == b.block_dim
+        assert b.batch == h.batch * h.k
+
+
+# ---------------------------------------------------------------------------
+# Training dynamics
+# ---------------------------------------------------------------------------
+
+def run_steps(step_fn, theta, batch, n, lr=1e-2):
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    t = jnp.float32(0)
+    losses = []
+    for _ in range(n):
+        theta, m, v, t, loss = step_fn(theta, m, v, t, jnp.float32(lr), batch)
+        losses.append(float(loss))
+    return theta, losses
+
+
+def test_hbae_training_reduces_loss():
+    theta = model.hbae_spec(TINY_H).init(jax.random.PRNGKey(0))
+    step = jax.jit(lambda *a: model.hbae_train_step(TINY_H, *a))
+    _, losses = run_steps(step, theta, batch_for(TINY_H), 40)
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_hbae_woa_training_reduces_loss():
+    theta = model.hbae_spec(TINY_H_WOA).init(jax.random.PRNGKey(0))
+    step = jax.jit(lambda *a: model.hbae_train_step(TINY_H_WOA, *a))
+    _, losses = run_steps(step, theta, batch_for(TINY_H_WOA), 40)
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_bae_training_reduces_loss():
+    phi = model.bae_spec(TINY_B).init(jax.random.PRNGKey(0))
+    r = 0.1 * jax.random.normal(jax.random.PRNGKey(3),
+                                (TINY_B.batch, TINY_B.block_dim))
+    step = jax.jit(lambda *a: model.bae_train_step(TINY_B, *a))
+    _, losses = run_steps(step, phi, r, 40)
+    assert losses[-1] < 0.5 * losses[0]
+
+
+def test_adam_step_counter_increments():
+    theta = model.bae_spec(TINY_B).init(jax.random.PRNGKey(0))
+    r = jnp.ones((TINY_B.batch, TINY_B.block_dim))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    _, _, _, t, _ = model.bae_train_step(TINY_B, theta, m, v,
+                                         jnp.float32(4.0), jnp.float32(1e-3), r)
+    assert float(t) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Fused pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipe_forward_decode_consistent():
+    theta = model.hbae_spec(TINY_H).init(jax.random.PRNGKey(0))
+    phi = model.bae_spec(TINY_B).init(jax.random.PRNGKey(1))
+    b = batch_for(TINY_H)
+    lh, lb, recon = model.pipe_forward(TINY_H, TINY_B, theta, phi, b,
+                                       jnp.float32(0.0), jnp.float32(0.0))
+    recon2 = model.pipe_decode(TINY_H, TINY_B, theta, phi, lh, lb)
+    np.testing.assert_allclose(recon, recon2, rtol=1e-5, atol=1e-5)
+
+
+def test_pipe_quantization_snaps_latents():
+    theta = model.hbae_spec(TINY_H).init(jax.random.PRNGKey(0))
+    phi = model.bae_spec(TINY_B).init(jax.random.PRNGKey(1))
+    b = batch_for(TINY_H)
+    bin_h = 0.25
+    lh, lb, _ = model.pipe_forward(TINY_H, TINY_B, theta, phi, b,
+                                   jnp.float32(bin_h), jnp.float32(0.1))
+    codes = np.asarray(lh) / bin_h
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+def test_pipe_zero_bin_means_no_quantization():
+    theta = model.hbae_spec(TINY_H).init(jax.random.PRNGKey(0))
+    phi = model.bae_spec(TINY_B).init(jax.random.PRNGKey(1))
+    b = batch_for(TINY_H)
+    lh, _, _ = model.pipe_forward(TINY_H, TINY_B, theta, phi, b,
+                                  jnp.float32(0.0), jnp.float32(0.0))
+    np.testing.assert_allclose(lh, model.hbae_encode(TINY_H, theta, b),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pipe_quantization_error_bounded_by_half_bin():
+    theta = model.hbae_spec(TINY_H).init(jax.random.PRNGKey(0))
+    phi = model.bae_spec(TINY_B).init(jax.random.PRNGKey(1))
+    b = batch_for(TINY_H)
+    raw = np.asarray(model.hbae_encode(TINY_H, theta, b))
+    for bin_h in (0.05, 0.5):
+        lh, _, _ = model.pipe_forward(TINY_H, TINY_B, theta, phi, b,
+                                      jnp.float32(bin_h), jnp.float32(0.0))
+        assert np.max(np.abs(np.asarray(lh) - raw)) <= bin_h / 2 + 1e-6

@@ -1,0 +1,63 @@
+//! Entropy-stage throughput (paper §II-E): quantizer, Huffman, index-set
+//! codec, ZSTD. Run: `cargo bench --bench coder`.
+
+use attn_reduce::coder::{
+    decode_index_sets, encode_index_sets, huffman_decode, huffman_encode, indexset,
+    zstd_compress, zstd_decompress, Quantizer,
+};
+use attn_reduce::util::bench::{black_box, Bench};
+use attn_reduce::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(7);
+
+    // latent-like data: zero-peaked gaussian codes
+    let n = 100_000;
+    let latents: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.3) as f32).collect();
+    let q = Quantizer::new(0.005);
+
+    b.run_items("quantizer/code 100k f32", n as f64, || {
+        black_box(q.codes(black_box(&latents)));
+    });
+
+    let codes = q.codes(&latents);
+    b.run_items("huffman/encode 100k codes", n as f64, || {
+        black_box(huffman_encode(black_box(&codes)));
+    });
+    let enc = huffman_encode(&codes);
+    println!(
+        "    (huffman: {} -> {} bytes, {:.2} bits/code)",
+        n * 4,
+        enc.len(),
+        enc.len() as f64 * 8.0 / n as f64
+    );
+    b.run_items("huffman/decode 100k codes", n as f64, || {
+        black_box(huffman_decode(black_box(&enc)).unwrap());
+    });
+
+    // GAE-like index sets: leading indices
+    let sets: Vec<Vec<usize>> = (0..20_000).map(|i| (0..(i % 9)).collect()).collect();
+    b.run_items("indexset/encode 20k sets", sets.len() as f64, || {
+        black_box(encode_index_sets(black_box(&sets), 1521).unwrap());
+    });
+    let ienc = encode_index_sets(&sets, 1521).unwrap();
+    b.run_items("indexset/decode 20k sets", sets.len() as f64, || {
+        black_box(
+            decode_index_sets(black_box(&ienc), indexset::max_raw_size(sets.len(), 1521))
+                .unwrap(),
+        );
+    });
+
+    // zstd on bitmap-like data
+    let bitmap: Vec<u8> = (0..200_000).map(|i| if i % 17 < 2 { 0xFF } else { 0 }).collect();
+    b.run_items("zstd/compress 200kB bitmaps", bitmap.len() as f64, || {
+        black_box(zstd_compress(black_box(&bitmap)).unwrap());
+    });
+    let z = zstd_compress(&bitmap).unwrap();
+    b.run_items("zstd/decompress", bitmap.len() as f64, || {
+        black_box(zstd_decompress(black_box(&z), bitmap.len()).unwrap());
+    });
+
+    b.write_csv("results/bench/coder.csv").unwrap();
+}

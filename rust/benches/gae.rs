@@ -1,0 +1,48 @@
+//! GAE stage cost (Algorithm 1): PCA fit + per-block correction, at each
+//! dataset's GAE block geometry. Run: `cargo bench --bench gae`.
+
+use attn_reduce::compressor::gae_apply;
+use attn_reduce::util::bench::{black_box, Bench};
+use attn_reduce::util::rng::Rng;
+
+fn make_case(n_blocks: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let rank = 4;
+    let dirs: Vec<f64> = (0..rank * d).map(|_| rng.normal()).collect();
+    let mut orig = vec![0f32; n_blocks * d];
+    let mut recon = vec![0f32; n_blocks * d];
+    for b in 0..n_blocks {
+        for i in 0..d {
+            recon[b * d + i] = rng.normal() as f32;
+        }
+        for k in 0..rank {
+            let w = rng.normal() / (k + 1) as f64;
+            for i in 0..d {
+                orig[b * d + i] = recon[b * d + i] + (w * dirs[k * d + i]) as f32;
+            }
+        }
+    }
+    (orig, recon)
+}
+
+fn main() {
+    let mut b = Bench::new();
+    // geometries: S3D 5x4x4=80, E3SM 16x16=256, XGC 39x39=1521
+    for &(name, d, n_blocks, tau) in &[
+        ("s3d d=80", 80usize, 4096usize, 0.6f32),
+        ("e3sm d=256", 256, 1024, 1.2),
+        ("xgc d=1521", 1521, 128, 3.0),
+    ] {
+        let (orig, recon0) = make_case(n_blocks, d, 42);
+        b.run_items(
+            &format!("gae_apply/{name} x{n_blocks} blocks"),
+            (n_blocks * d) as f64,
+            || {
+                let mut recon = recon0.clone();
+                let taus = vec![tau; n_blocks];
+                black_box(gae_apply(black_box(&orig), &mut recon, d, &taus).unwrap());
+            },
+        );
+    }
+    b.write_csv("results/bench/gae.csv").unwrap();
+}

@@ -1,0 +1,38 @@
+//! Linalg substrate: covariance accumulation + symmetric eigensolver at
+//! the three GAE block sizes. Run: `cargo bench --bench pca`.
+
+use attn_reduce::linalg::{covariance, eigh_symmetric, Pca};
+use attn_reduce::util::bench::{black_box, Bench};
+use attn_reduce::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(3);
+    for &(name, d, rows) in
+        &[("d=80", 80usize, 8192usize), ("d=256", 256, 2048), ("d=1521", 1521, 256)]
+    {
+        let data: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        b.run_items(&format!("covariance/{name} x{rows}"), (rows * d) as f64, || {
+            black_box(covariance(black_box(&data), d));
+        });
+        let cov = covariance(&data, d);
+        if d <= 256 {
+            b.run(&format!("eigh/{name}"), || {
+                black_box(eigh_symmetric(black_box(&cov), d).unwrap());
+            });
+        } else {
+            // O(d^3): run a single timed shot for the big case
+            let t0 = std::time::Instant::now();
+            black_box(eigh_symmetric(&cov, d).unwrap());
+            println!("eigh/{name}: single shot {:.2}s", t0.elapsed().as_secs_f64());
+        }
+        let pca = Pca::fit(&data[..rows.min(512) * d], d).unwrap();
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0.0f64; d];
+        b.run_items(&format!("pca_project/{name}"), (d * d) as f64, || {
+            pca.project(black_box(&x), &mut c);
+            black_box(&c);
+        });
+    }
+    b.write_csv("results/bench/pca.csv").unwrap();
+}

@@ -1,0 +1,71 @@
+//! End-to-end pipeline throughput: sequential vs streaming coordinator at
+//! several queue depths, plus full compress (with GAE) on a smoke field.
+//! Run: `cargo bench --bench pipeline` (needs `make artifacts`; trains a
+//! small model on first run, cached under results/ckpt-bench).
+
+use attn_reduce::compressor::HierCompressor;
+use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
+use attn_reduce::coordinator::stream_compress;
+use attn_reduce::data::{self, Normalizer};
+use attn_reduce::runtime::Runtime;
+use attn_reduce::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        println!("skipping: run `make artifacts` first");
+        return;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    let rt = Runtime::open(dir).unwrap();
+    let mut b = Bench::new();
+
+    let mut cfg = PipelineConfig {
+        dataset: dataset_preset(DatasetKind::S3d, Scale::Smoke),
+        model: model_preset(DatasetKind::S3d),
+        train: Default::default(),
+        tau: 0.0,
+    };
+    cfg.train.steps = 40;
+    cfg.train.log_every = 1000;
+    let field = data::generate(&cfg.dataset);
+    let ckpt = std::path::PathBuf::from("results/ckpt-bench");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field).unwrap();
+    let bytes = (field.len() * 4) as f64;
+
+    let stats = Normalizer::fit(cfg.dataset.normalization, &field);
+    let mut norm = field.clone();
+    Normalizer::apply(&stats, &mut norm);
+
+    // sequential AE pass (tau=0: no GAE) vs streaming at queue depths
+    b.run_items("pipeline/sequential compress (no GAE)", bytes, || {
+        black_box(comp.compress(black_box(&field), 0.0).unwrap());
+    });
+    for depth in [0usize, 2, 8] {
+        b.run_items(&format!("pipeline/stream q={depth}"), bytes, || {
+            black_box(stream_compress(&comp, black_box(&field), depth).unwrap());
+        });
+    }
+
+    // full compress incl. GAE + entropy
+    let tau = PipelineConfig::tau_for_nrmse(
+        1e-3,
+        field.range() as f64,
+        cfg.dataset.gae_block_len(),
+    );
+    b.run_items("pipeline/full compress (GAE @1e-3)", bytes, || {
+        black_box(comp.compress(black_box(&field), tau).unwrap());
+    });
+
+    // decompression
+    let (archive, _) = comp.compress(&field, tau).unwrap();
+    b.run_items("pipeline/decompress", bytes, || {
+        black_box(
+            HierCompressor::decompress(&rt, black_box(&archive), &comp.hbae, &comp.baes)
+                .unwrap(),
+        );
+    });
+
+    b.write_csv("results/bench/pipeline.csv").unwrap();
+}

@@ -1,0 +1,101 @@
+//! PJRT execution latency per AOT entry point — the L3 hot-path unit
+//! costs (encode / decode / fused pipe / train_step).
+//! Run: `cargo bench --bench runtime_exec` (needs `make artifacts`).
+
+use attn_reduce::runtime::{HostTensor, Runtime};
+use attn_reduce::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        println!("skipping: run `make artifacts` first");
+        return;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    let rt = Runtime::open(dir).unwrap();
+    let mut b = Bench::new();
+
+    let hg = "s3d_hbae_L128";
+    let bg = "s3d_bae_L16";
+    let pg = "s3d_pipe_L128_16";
+
+    let theta = rt.load(hg, "init").unwrap().run(&[]).unwrap().remove(0);
+    let phi = rt.load(bg, "init").unwrap().run(&[]).unwrap().remove(0);
+
+    let enc = rt.load(hg, "encode").unwrap();
+    let bsig = enc.info.inputs[1].clone();
+    let batch = HostTensor::new(
+        bsig.shape.clone(),
+        (0..bsig.len()).map(|i| ((i % 101) as f32 / 101.0 - 0.5)).collect(),
+    );
+    let elems = bsig.len() as f64;
+
+    b.run_items("hbae/encode [32,10,1280]", elems, || {
+        black_box(enc.run(&[theta.clone(), batch.clone()]).unwrap());
+    });
+    let lat = enc.run(&[theta.clone(), batch.clone()]).unwrap().remove(0);
+    let dec = rt.load(hg, "decode").unwrap();
+    b.run_items("hbae/decode", elems, || {
+        black_box(dec.run(&[theta.clone(), lat.clone()]).unwrap());
+    });
+
+    let benc = rt.load(bg, "encode").unwrap();
+    let rsig = benc.info.inputs[1].clone();
+    let resid = HostTensor::new(
+        rsig.shape.clone(),
+        (0..rsig.len()).map(|i| ((i % 89) as f32 / 890.0)).collect(),
+    );
+    b.run_items("bae/encode [320,1280]", elems, || {
+        black_box(benc.run(&[phi.clone(), resid.clone()]).unwrap());
+    });
+
+    let fwd = rt.load(pg, "forward").unwrap();
+    let zero = HostTensor::scalar(0.005);
+    b.run_items("pipe/forward (fused)", elems, || {
+        black_box(
+            fwd.run(&[theta.clone(), phi.clone(), batch.clone(), zero.clone(), zero.clone()])
+                .unwrap(),
+        );
+    });
+
+    let step = rt.load(bg, "train_step").unwrap();
+    let pdim = rt.param_dim(bg).unwrap();
+    let m = HostTensor::vec(vec![0.0; pdim]);
+    let v = HostTensor::vec(vec![0.0; pdim]);
+    let t = HostTensor::scalar(0.0);
+    let lr = HostTensor::scalar(1e-3);
+    b.run_items("bae/train_step [320,1280]", elems, || {
+        black_box(
+            step.run(&[
+                phi.clone(),
+                m.clone(),
+                v.clone(),
+                t.clone(),
+                lr.clone(),
+                resid.clone(),
+            ])
+            .unwrap(),
+        );
+    });
+
+    let hstep = rt.load(hg, "train_step").unwrap();
+    let hdim = rt.param_dim(hg).unwrap();
+    let hm = HostTensor::vec(vec![0.0; hdim]);
+    let hv = HostTensor::vec(vec![0.0; hdim]);
+    b.run_items("hbae/train_step [32,10,1280]", elems, || {
+        black_box(
+            hstep
+                .run(&[
+                    theta.clone(),
+                    hm.clone(),
+                    hv.clone(),
+                    t.clone(),
+                    lr.clone(),
+                    batch.clone(),
+                ])
+                .unwrap(),
+        );
+    });
+
+    b.write_csv("results/bench/runtime_exec.csv").unwrap();
+}

@@ -1,0 +1,271 @@
+//! GBAE — the block-autoencoder baseline (Fig. 4/5 "Baseline", ref [16]).
+//!
+//! "A block-based compressor which divides the original data into blocks
+//! and compresses the block data with a set of cascaded fully connected
+//! layers" (paper §III-D). We reuse the BAE artifact groups (same
+//! architecture: FC encoder/decoder with ReLU) trained directly on raw
+//! normalized blocks instead of residuals, plus optionally the GAE bound
+//! (ref [16]'s GBAE) and a stacked residual corrector (the GAETC
+//! stand-in — DESIGN.md §4).
+
+use crate::coder::Quantizer;
+use crate::config::{DatasetConfig, TrainConfig};
+use crate::data::{Blocking, Normalizer};
+use crate::model::ParamStore;
+use crate::runtime::{HostTensor, Runtime};
+use crate::tensor::Tensor;
+use crate::train::{train_bae, TrainReport};
+use crate::Result;
+use anyhow::ensure;
+
+/// Block-AE baseline compressor.
+pub struct GbaeCompressor<'a> {
+    pub rt: &'a Runtime,
+    pub dataset: DatasetConfig,
+    /// Primary block AE (trained on raw blocks).
+    pub ae: ParamStore,
+    /// Optional residual corrector (GAETC-like stack).
+    pub corrector: Option<ParamStore>,
+}
+
+/// Result of a baseline compression pass.
+#[derive(Debug)]
+pub struct GbaeResult {
+    /// Reconstruction in the original domain.
+    pub recon: Tensor,
+    /// Paper-accounting compressed bytes (latents [+ GAE sections]).
+    pub payload_bytes: usize,
+    pub gae_coeffs: usize,
+}
+
+impl<'a> GbaeCompressor<'a> {
+    /// Gather all valid blocks of a normalized field as rows.
+    fn block_rows(dataset: &DatasetConfig, norm: &Tensor) -> (Blocking, Vec<f32>) {
+        let blocking = Blocking::new(dataset);
+        let bd = blocking.block_dim();
+        let total = blocking.num_hyperblocks();
+        let mut rows = Vec::with_capacity(blocking.num_blocks() * bd);
+        let mut buf = vec![0f32; blocking.k * bd];
+        for h in 0..total {
+            blocking.gather(norm, h, 1, &mut buf);
+            for j in 0..blocking.k {
+                if blocking.is_valid(h, j) {
+                    rows.extend_from_slice(&buf[j * bd..(j + 1) * bd]);
+                }
+            }
+        }
+        (blocking, rows)
+    }
+
+    /// Train (or load) the baseline AE on raw blocks.
+    pub fn prepare(
+        rt: &'a Runtime,
+        dataset: &DatasetConfig,
+        group: &str,
+        ckpt_dir: &std::path::Path,
+        field: &Tensor,
+        train: &TrainConfig,
+        with_corrector: Option<&str>,
+    ) -> Result<(Self, Vec<TrainReport>)> {
+        let mut reports = Vec::new();
+        let stats = Normalizer::fit(dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+        let (_, rows) = Self::block_rows(dataset, &norm);
+        let bd: usize = dataset.block_dim();
+
+        let path = ckpt_dir.join(format!("gbae_{group}.ckpt"));
+        let ae = if path.exists() {
+            ParamStore::load(&path, group)?
+        } else {
+            let mut store = ParamStore::init(rt, group)?;
+            let rep = train_bae(rt, &mut store, &rows, bd, train)?;
+            reports.push(rep);
+            store.save(&path)?;
+            store
+        };
+
+        let corrector = if let Some(cg) = with_corrector {
+            let cpath = ckpt_dir.join(format!("gbae_corr_{cg}.ckpt"));
+            if cpath.exists() {
+                Some(ParamStore::load(&cpath, cg)?)
+            } else {
+                // residuals of the primary AE
+                let enc = rt.load(&ae.group, "encode")?;
+                let dec = rt.load(&ae.group, "decode")?;
+                let nb = enc.info.inputs[1].shape[0];
+                let n_rows = rows.len() / bd;
+                let phi = HostTensor::vec(ae.theta.clone());
+                let mut resid = Vec::with_capacity(rows.len());
+                for r0 in (0..n_rows).step_by(nb) {
+                    let mut batch = vec![0f32; nb * bd];
+                    let n_here = (n_rows - r0).min(nb);
+                    batch[..n_here * bd]
+                        .copy_from_slice(&rows[r0 * bd..(r0 + n_here) * bd]);
+                    let lat = enc
+                        .run(&[phi.clone(), HostTensor::new(vec![nb, bd], batch.clone())])?
+                        .remove(0);
+                    let y = dec.run(&[phi.clone(), lat])?.remove(0);
+                    for i in 0..n_here * bd {
+                        resid.push(batch[i] - y.data[i]);
+                    }
+                }
+                let mut store = ParamStore::init(rt, cg)?;
+                let rep = train_bae(rt, &mut store, &resid, bd, train)?;
+                reports.push(rep);
+                store.save(&cpath)?;
+                Some(store)
+            }
+        } else {
+            None
+        };
+
+        Ok((
+            Self { rt, dataset: dataset.clone(), ae, corrector },
+            reports,
+        ))
+    }
+
+    /// Compress + reconstruct. `latent_bin` 0 disables quantization
+    /// (Fig. 4/5 ablation accounting: raw f32 latents); `tau` 0 disables
+    /// the GAE bound.
+    pub fn compress(&self, field: &Tensor, latent_bin: f32, tau: f32) -> Result<GbaeResult> {
+        let stats = Normalizer::fit(self.dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+
+        let blocking = Blocking::new(&self.dataset);
+        let bd = blocking.block_dim();
+        let enc = self.rt.load(&self.ae.group, "encode")?;
+        let dec = self.rt.load(&self.ae.group, "decode")?;
+        let nb = enc.info.inputs[1].shape[0];
+        let lat_dim = enc.info.outputs[0].shape[1];
+        let q = Quantizer::new(latent_bin.max(0.0));
+        let phi = HostTensor::vec(self.ae.theta.clone());
+
+        let total_hb = blocking.num_hyperblocks();
+        let k = blocking.k;
+        ensure!(nb % k == 0, "bae batch not a multiple of k");
+        let hb_per_batch = nb / k;
+
+        let mut recon = Tensor::zeros(self.dataset.dims.clone());
+        let mut latent_codes: Vec<i32> = Vec::new();
+        let mut n_latents = 0usize;
+        let mut batch = vec![0f32; nb * bd];
+        for h0 in (0..total_hb).step_by(hb_per_batch) {
+            blocking.gather(&norm, h0, hb_per_batch, &mut batch);
+            let mut lat = enc
+                .run(&[phi.clone(), HostTensor::new(vec![nb, bd], batch.clone())])?
+                .remove(0);
+            q.snap(&mut lat.data);
+            let y = dec.run(&[phi.clone(), lat.clone()])?.remove(0);
+            let mut recon_batch = y.data.clone();
+            if let Some(corr) = &self.corrector {
+                let cenc = self.rt.load(&corr.group, "encode")?;
+                let cdec = self.rt.load(&corr.group, "decode")?;
+                let cphi = HostTensor::vec(corr.theta.clone());
+                let resid: Vec<f32> =
+                    batch.iter().zip(&recon_batch).map(|(&a, &b)| a - b).collect();
+                let mut clat = cenc
+                    .run(&[cphi.clone(), HostTensor::new(vec![nb, bd], resid)])?
+                    .remove(0);
+                q.snap(&mut clat.data);
+                let rhat = cdec.run(&[cphi, clat.clone()])?.remove(0);
+                for i in 0..recon_batch.len() {
+                    recon_batch[i] += rhat.data[i];
+                }
+                for hi in 0..hb_per_batch {
+                    let h = h0 + hi;
+                    if h >= total_hb {
+                        break;
+                    }
+                    for j in 0..k {
+                        if blocking.is_valid(h, j) {
+                            let r = hi * k + j;
+                            n_latents += lat_dim;
+                            if q.enabled() {
+                                latent_codes.extend(
+                                    clat.data[r * lat_dim..(r + 1) * lat_dim]
+                                        .iter()
+                                        .map(|&v| q.code(v)),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // primary latents of valid blocks
+            for hi in 0..hb_per_batch {
+                let h = h0 + hi;
+                if h >= total_hb {
+                    break;
+                }
+                for j in 0..k {
+                    if blocking.is_valid(h, j) {
+                        let r = hi * k + j;
+                        n_latents += lat_dim;
+                        if q.enabled() {
+                            latent_codes.extend(
+                                lat.data[r * lat_dim..(r + 1) * lat_dim]
+                                    .iter()
+                                    .map(|&v| q.code(v)),
+                            );
+                        }
+                    }
+                }
+            }
+            blocking.scatter(&mut recon, h0, hb_per_batch, &recon_batch);
+        }
+
+        // latent payload
+        let mut payload = if q.enabled() {
+            crate::coder::huffman_encode(&latent_codes).len()
+        } else {
+            n_latents * 4
+        };
+
+        // optional GAE bound (same machinery as the main pipeline)
+        let mut gae_coeffs = 0usize;
+        if tau > 0.0 {
+            let d = self.dataset.gae_block_len();
+            let origins =
+                crate::tensor::block_origins(&self.dataset.dims, &self.dataset.gae_block);
+            let taus = crate::compressor::gae_taus(&self.dataset, &stats, tau, &origins);
+            let mut orig_rows = vec![0f32; origins.len() * d];
+            let mut rec_rows = vec![0f32; origins.len() * d];
+            for (bi, o) in origins.iter().enumerate() {
+                crate::tensor::extract_block(
+                    &norm,
+                    o,
+                    &self.dataset.gae_block,
+                    &mut orig_rows[bi * d..(bi + 1) * d],
+                );
+                crate::tensor::extract_block(
+                    &recon,
+                    o,
+                    &self.dataset.gae_block,
+                    &mut rec_rows[bi * d..(bi + 1) * d],
+                );
+            }
+            let out = crate::compressor::gae_apply(&orig_rows, &mut rec_rows, d, &taus)?;
+            for (bi, o) in origins.iter().enumerate() {
+                crate::tensor::scatter_block(
+                    &mut recon,
+                    o,
+                    &self.dataset.gae_block,
+                    &rec_rows[bi * d..(bi + 1) * d],
+                );
+            }
+            let codes: Vec<i32> =
+                out.corrections.iter().flat_map(|c| c.codes.iter().copied()).collect();
+            payload += crate::coder::huffman_encode(&codes).len();
+            let sets: Vec<Vec<usize>> =
+                out.corrections.iter().map(|c| c.indices.clone()).collect();
+            payload += crate::coder::encode_index_sets(&sets, d)?.len();
+            gae_coeffs = out.total_coeffs;
+        }
+
+        Normalizer::invert(&stats, &mut recon);
+        Ok(GbaeResult { recon, payload_bytes: payload, gae_coeffs })
+    }
+}

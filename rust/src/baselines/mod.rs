@@ -1,0 +1,20 @@
+//! Baseline compressors the paper compares against (§III-E).
+//!
+//! * [`sz3_like`] — prediction-based, error-bounded: N-D Lorenzo
+//!   predictor + linear error quantization + Huffman + ZSTD (the
+//!   algorithmic core of SZ/SZ3; DESIGN.md §4 documents the substitution
+//!   for the real SZ3 binary).
+//! * [`zfp_like`] — transform-based, fixed precision: 4^d block
+//!   decorrelating lift (ZFP's transform) + per-block exponent + scaled
+//!   integer coefficients + Huffman.
+//! * [`gbae`] — the block-autoencoder baseline of Fig. 4/5 ("Baseline")
+//!   and ref [16] (GBAE: block AE + GAE bound). With a stacked residual
+//!   corrector it also stands in for GAETC.
+
+pub mod gbae;
+pub mod sz3_like;
+pub mod zfp_like;
+
+pub use gbae::GbaeCompressor;
+pub use sz3_like::Sz3Like;
+pub use zfp_like::ZfpLike;

@@ -1,0 +1,162 @@
+//! Bit-level writer/reader (LSB-first within each byte).
+
+/// Append-only bit writer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// bits already used in the last byte (0..8; 0 means byte-aligned)
+    fill: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n <= 64), LSB first.
+    pub fn write_bits(&mut self, mut v: u64, mut n: u32) {
+        debug_assert!(n <= 64);
+        while n > 0 {
+            if self.fill == 0 {
+                self.bytes.push(0);
+            }
+            let free = 8 - self.fill;
+            let take = free.min(n);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            let last = self.bytes.last_mut().unwrap();
+            *last |= ((v & mask) as u8) << self.fill;
+            self.fill = (self.fill + take) % 8;
+            v >>= take;
+            n -= take;
+        }
+    }
+
+    pub fn write_bit(&mut self, b: bool) {
+        self.write_bits(b as u64, 1);
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.bytes.len() * 8 - if self.fill == 0 { 0 } else { (8 - self.fill) as usize }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// Sequential bit reader over a byte slice (LSB-first).
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Read `n` bits (LSB-first). Returns None past the end.
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if self.pos + n as usize > self.bytes.len() * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte = self.bytes[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(n - got);
+            let mask = ((1u16 << take) - 1) as u8;
+            let bits = (byte >> off) & mask;
+            out |= (bits as u64) << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Some(out)
+    }
+
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read_bits(1).map(|b| b != 0)
+    }
+
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Skip to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        self.pos = self.pos.div_ceil(8) * 8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_bits_round_trip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn multi_bit_values_round_trip() {
+        let mut rng = Rng::new(2);
+        let vals: Vec<(u64, u32)> = (0..500)
+            .map(|_| {
+                let n = 1 + rng.below(64) as u32;
+                let v = rng.next_u64() & if n == 64 { u64::MAX } else { (1 << n) - 1 };
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &vals {
+            w.write_bits(v, n);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.read_bits(n), Some(v), "n={n}");
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8), Some(0b101)); // padded zeros within byte
+        assert_eq!(r.read_bits(1), None);
+    }
+
+    #[test]
+    fn align_byte() {
+        let mut w = BitWriter::new();
+        w.write_bits(0x3, 2);
+        w.write_bits(0xAB, 8);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        r.read_bits(2).unwrap();
+        r.align_byte();
+        assert_eq!(r.bit_pos(), 8);
+    }
+}

@@ -1,0 +1,151 @@
+//! PCA basis index-set codec (paper §II-E, Fig. 3).
+//!
+//! Each GAE block stores which basis vectors its correction used. Entropy
+//! coding the raw integer indices gains little, so — following the paper —
+//! each set becomes a binary sequence ('1' = vector selected), truncated
+//! to the **shortest prefix containing all the 1s**; we store that prefix
+//! length plus the prefix bits. All blocks' prefixes are concatenated and
+//! the whole stream is ZSTD-compressed.
+//!
+//! Uncompressed layout (little-endian):
+//!   u32 n_blocks | u32 dim | n_blocks x u32 prefix_len | bit-packed
+//!   prefixes (LSB-first, contiguous)
+
+use super::bitstream::{BitReader, BitWriter};
+use super::lossless::{zstd_compress, zstd_decompress};
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Encode per-block selected index sets (each sorted ascending, indices
+/// `< dim`).
+pub fn encode_index_sets(sets: &[Vec<usize>], dim: usize) -> Result<Vec<u8>> {
+    let mut raw = Vec::new();
+    raw.extend_from_slice(&(sets.len() as u32).to_le_bytes());
+    raw.extend_from_slice(&(dim as u32).to_le_bytes());
+    let mut prefix_lens = Vec::with_capacity(sets.len());
+    for set in sets {
+        let plen = match set.last() {
+            None => 0usize,
+            Some(&m) => {
+                ensure!(m < dim, "index {m} out of range (dim {dim})");
+                m + 1
+            }
+        };
+        prefix_lens.push(plen);
+        raw.extend_from_slice(&(plen as u32).to_le_bytes());
+    }
+    let mut bits = BitWriter::new();
+    for (set, &plen) in sets.iter().zip(&prefix_lens) {
+        let mut mask = vec![false; plen];
+        for &j in set {
+            ensure!(j < plen, "unsorted index set");
+            mask[j] = true;
+        }
+        for b in mask {
+            bits.write_bit(b);
+        }
+    }
+    raw.extend_from_slice(bits.as_bytes());
+    zstd_compress(&raw)
+}
+
+/// Decode an [`encode_index_sets`] stream.
+pub fn decode_index_sets(bytes: &[u8], max_raw: usize) -> Result<Vec<Vec<usize>>> {
+    let raw = zstd_decompress(bytes, max_raw)?;
+    ensure!(raw.len() >= 8, "indexset: truncated header");
+    let n_blocks = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
+    let _dim = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    let mut off = 8;
+    ensure!(raw.len() >= off + n_blocks * 4, "indexset: truncated lens");
+    let mut prefix_lens = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        prefix_lens.push(u32::from_le_bytes(raw[off..off + 4].try_into().unwrap()) as usize);
+        off += 4;
+    }
+    let total_bits: usize = prefix_lens.iter().sum();
+    if raw[off..].len() * 8 < total_bits {
+        bail!("indexset: truncated bitstream");
+    }
+    let mut r = BitReader::new(&raw[off..]);
+    let mut out = Vec::with_capacity(n_blocks);
+    for &plen in &prefix_lens {
+        let mut set = Vec::new();
+        for j in 0..plen {
+            if r.read_bit().unwrap_or(false) {
+                set.push(j);
+            }
+        }
+        out.push(set);
+    }
+    Ok(out)
+}
+
+/// Upper bound for the decompressed stream (decode safety cap).
+pub fn max_raw_size(n_blocks: usize, dim: usize) -> usize {
+    8 + n_blocks * 4 + (n_blocks * dim).div_ceil(8) + 64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn round_trip(sets: &[Vec<usize>], dim: usize) {
+        let enc = encode_index_sets(sets, dim).unwrap();
+        let dec = decode_index_sets(&enc, max_raw_size(sets.len(), dim)).unwrap();
+        assert_eq!(dec, sets);
+    }
+
+    #[test]
+    fn empty_sets() {
+        round_trip(&[vec![], vec![], vec![]], 80);
+        round_trip(&[], 80);
+    }
+
+    #[test]
+    fn leading_coefficients_compress_well() {
+        // typical GAE pattern: each block selects the top-M indices
+        let sets: Vec<Vec<usize>> = (0..500).map(|i| (0..(i % 7)).collect()).collect();
+        let enc = encode_index_sets(&sets, 1521).unwrap();
+        // raw storage of u32 indices would be Σ|set|*4 ≈ 6 KB; prefixes are
+        // tiny because the 1s are leading
+        assert!(enc.len() < 1200, "got {} bytes", enc.len());
+        round_trip(&sets, 1521);
+    }
+
+    #[test]
+    fn scattered_indices() {
+        let mut rng = Rng::new(8);
+        let dim = 256;
+        let sets: Vec<Vec<usize>> = (0..100)
+            .map(|_| {
+                let m = rng.below(12);
+                let mut s: Vec<usize> = (0..m).map(|_| rng.below(dim)).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        round_trip(&sets, dim);
+    }
+
+    #[test]
+    fn full_selection() {
+        let sets = vec![(0..80).collect::<Vec<_>>()];
+        round_trip(&sets, 80);
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(encode_index_sets(&[vec![80]], 80).is_err());
+    }
+
+    #[test]
+    fn prefix_property_matches_paper() {
+        // the stored prefix ends at the last '1' — verify via size ordering:
+        // a set {0} costs less than {255} at the same cardinality
+        let small = encode_index_sets(&vec![vec![0]; 200], 256).unwrap();
+        let large = encode_index_sets(&vec![vec![255]; 200], 256).unwrap();
+        assert!(small.len() <= large.len());
+    }
+}

@@ -1,0 +1,58 @@
+//! Lossless byte compression backend — ZSTD, exactly as the paper uses
+//! for the concatenated index bitmaps (§II-E, Fig. 3).
+
+use crate::Result;
+use anyhow::Context;
+
+/// Compress bytes with ZSTD (level 19 — these are tiny metadata streams,
+//  so we favor ratio over speed).
+pub fn zstd_compress(data: &[u8]) -> Result<Vec<u8>> {
+    zstd::bulk::compress(data, 19).context("zstd compress")
+}
+
+/// Decompress a [`zstd_compress`] stream; `max_size` caps the output as a
+/// safety bound against corrupt archives.
+pub fn zstd_decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+    zstd::bulk::decompress(data, max_size).context("zstd decompress")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn round_trip_structured() {
+        // runs of 1s/0s like the Fig.-3 bitmaps
+        let mut data = Vec::new();
+        for i in 0..200 {
+            data.extend(std::iter::repeat(0xFFu8).take(i % 7));
+            data.extend(std::iter::repeat(0x00u8).take(13 - i % 7));
+        }
+        let c = zstd_compress(&data).unwrap();
+        assert!(c.len() < data.len() / 4, "{} vs {}", c.len(), data.len());
+        let d = zstd_decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn round_trip_random() {
+        let mut rng = Rng::new(4);
+        let data: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+        let c = zstd_compress(&data).unwrap();
+        let d = zstd_decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn empty_round_trip() {
+        let c = zstd_compress(&[]).unwrap();
+        let d = zstd_decompress(&c, 16).unwrap();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn corrupt_stream_errors() {
+        assert!(zstd_decompress(&[1, 2, 3, 4], 100).is_err());
+    }
+}

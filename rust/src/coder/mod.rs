@@ -1,0 +1,22 @@
+//! Entropy-coding substrate (paper §II-E).
+//!
+//! * [`quantizer`] — uniform mid-tread quantization of latent/PCA
+//!   coefficients to bin centers.
+//! * [`huffman`] — canonical Huffman codec over i32 symbols.
+//! * [`bitstream`] — bit-level reader/writer used by the Huffman codec,
+//!   the index-set codec, and the ZFP-like baseline.
+//! * [`indexset`] — Fig. 3 shortest-prefix bitmap encoding of PCA basis
+//!   index sets, concatenated and ZSTD-compressed.
+//! * [`lossless`] — ZSTD wrapper (the paper's lossless backend).
+
+pub mod bitstream;
+pub mod huffman;
+pub mod indexset;
+pub mod lossless;
+pub mod quantizer;
+
+pub use bitstream::{BitReader, BitWriter};
+pub use huffman::{huffman_decode, huffman_encode};
+pub use indexset::{decode_index_sets, encode_index_sets};
+pub use lossless::{zstd_compress, zstd_decompress};
+pub use quantizer::Quantizer;

@@ -1,0 +1,206 @@
+//! Compressed archive container (DESIGN.md §5).
+//!
+//! Layout (little-endian):
+//! ```text
+//!   "ARDC" | u16 version | u32 header_len | header JSON (UTF-8) |
+//!   u32 n_sections | n x ( [u8;4] tag | u64 len | bytes )
+//! ```
+//!
+//! Sections used by the pipeline:
+//!   HLAT — HBAE latent codes (Huffman)        } counted in CR
+//!   BLAT — BAE latent codes (Huffman)         } counted in CR
+//!   GCOF — GAE coefficient codes (Huffman)    } counted in CR
+//!   GIDX — GAE index sets (Fig. 3 + ZSTD)     } counted in CR
+//!   GBAS — PCA basis, f32 (amortized like model params — the paper's CR
+//!          counts latents + coefficients + index info; §III-C)
+
+use crate::util::json::Value;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+const MAGIC: &[u8; 4] = b"ARDC";
+const VERSION: u16 = 1;
+
+/// Sections whose bytes count toward the paper's compression ratio.
+pub const CR_SECTIONS: [&str; 4] = ["HLAT", "BLAT", "GCOF", "GIDX"];
+
+/// A tagged-section archive with a JSON header.
+#[derive(Debug, Clone)]
+pub struct Archive {
+    pub header: Value,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Archive {
+    pub fn new(header: Value) -> Self {
+        Self { header, sections: Vec::new() }
+    }
+
+    pub fn add_section(&mut self, tag: &str, bytes: Vec<u8>) {
+        assert_eq!(tag.len(), 4, "tags are 4 ASCII chars");
+        assert!(
+            !self.sections.iter().any(|(t, _)| t == tag),
+            "duplicate section {tag}"
+        );
+        self.sections.push((tag.to_string(), bytes));
+    }
+
+    pub fn section(&self, tag: &str) -> Result<&[u8]> {
+        self.sections
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, b)| b.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("archive missing section {tag}"))
+    }
+
+    pub fn has_section(&self, tag: &str) -> bool {
+        self.sections.iter().any(|(t, _)| t == tag)
+    }
+
+    pub fn section_sizes(&self) -> Vec<(String, usize)> {
+        self.sections.iter().map(|(t, b)| (t.clone(), b.len())).collect()
+    }
+
+    /// Bytes counted toward the paper's CR (latents + GAE coeffs + index
+    /// info; basis and header excluded, like the paper's accounting).
+    pub fn cr_payload_bytes(&self) -> usize {
+        self.sections
+            .iter()
+            .filter(|(t, _)| CR_SECTIONS.contains(&t.as_str()))
+            .map(|(_, b)| b.len())
+            .sum()
+    }
+
+    /// Total on-disk bytes (honest accounting, reported alongside).
+    pub fn total_bytes(&self) -> usize {
+        let header = self.header.to_string_compact().into_bytes();
+        4 + 2
+            + 4
+            + header.len()
+            + 4
+            + self
+                .sections
+                .iter()
+                .map(|(_, b)| 4 + 8 + b.len())
+                .sum::<usize>()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = self.header.to_string_compact().into_bytes();
+        let mut out = Vec::with_capacity(self.total_bytes());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(&header);
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (tag, bytes) in &self.sections {
+            out.extend_from_slice(tag.as_bytes());
+            out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+            out.extend_from_slice(bytes);
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() >= 10, "archive truncated");
+        if &bytes[0..4] != MAGIC {
+            bail!("not an ARDC archive");
+        }
+        let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+        ensure!(version == VERSION, "unsupported archive version {version}");
+        let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+        ensure!(bytes.len() >= 10 + hlen + 4, "archive header truncated");
+        let header = Value::parse(std::str::from_utf8(&bytes[10..10 + hlen])?)?;
+        let mut off = 10 + hlen;
+        let n = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        let mut sections = Vec::with_capacity(n);
+        for _ in 0..n {
+            ensure!(bytes.len() >= off + 12, "section header truncated");
+            let tag = std::str::from_utf8(&bytes[off..off + 4])?.to_string();
+            let len =
+                u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap()) as usize;
+            off += 12;
+            ensure!(bytes.len() >= off + len, "section {tag} truncated");
+            sections.push((tag, bytes[off..off + len].to_vec()));
+            off += len;
+        }
+        Ok(Self { header, sections })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample() -> Archive {
+        let mut a = Archive::new(json::obj(vec![
+            ("tau", json::num(0.5)),
+            ("dataset", json::s("s3d")),
+        ]));
+        a.add_section("HLAT", vec![1, 2, 3]);
+        a.add_section("GBAS", vec![9; 100]);
+        a.add_section("GIDX", vec![]);
+        a
+    }
+
+    #[test]
+    fn round_trip() {
+        let a = sample();
+        let bytes = a.to_bytes();
+        assert_eq!(bytes.len(), a.total_bytes());
+        let b = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(b.header.get("dataset").unwrap().as_str(), Some("s3d"));
+        assert_eq!(b.section("HLAT").unwrap(), &[1, 2, 3]);
+        assert_eq!(b.section("GBAS").unwrap().len(), 100);
+        assert_eq!(b.section("GIDX").unwrap().len(), 0);
+        assert!(b.section("NOPE").is_err());
+    }
+
+    #[test]
+    fn cr_payload_excludes_basis() {
+        let a = sample();
+        assert_eq!(a.cr_payload_bytes(), 3); // HLAT + GIDX only
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Archive::from_bytes(&bytes).is_err());
+        let bytes2 = sample().to_bytes();
+        assert!(Archive::from_bytes(&bytes2[..bytes2.len() - 5]).is_err());
+        assert!(Archive::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("attn_reduce_fmt_test");
+        let path = dir.join("a.ardc");
+        sample().save(&path).unwrap();
+        let back = Archive::load(&path).unwrap();
+        assert_eq!(back.section("HLAT").unwrap(), &[1, 2, 3]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_sections_panic() {
+        let mut a = sample();
+        a.add_section("HLAT", vec![]);
+    }
+}

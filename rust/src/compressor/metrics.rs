@@ -1,0 +1,145 @@
+//! Evaluation metrics (paper §III-A/B).
+
+use crate::tensor::Tensor;
+
+/// NRMSE (Eq. 11): `sqrt(||Ω − Ω^G||² / N) / (max(Ω) − min(Ω))`.
+pub fn nrmse(orig: &Tensor, recon: &Tensor) -> f64 {
+    assert_eq!(orig.shape(), recon.shape());
+    let n = orig.len() as f64;
+    let sq: f64 = orig
+        .data()
+        .iter()
+        .zip(recon.data())
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum();
+    let range = (orig.range() as f64).max(1e-30);
+    (sq / n).sqrt() / range
+}
+
+/// Per-channel NRMSE along the first axis (Fig. 9: one value per species).
+pub fn nrmse_per_channel(orig: &Tensor, recon: &Tensor) -> Vec<f64> {
+    assert_eq!(orig.shape(), recon.shape());
+    let channels = orig.shape()[0];
+    let per = orig.len() / channels;
+    (0..channels)
+        .map(|c| {
+            let a = &orig.data()[c * per..(c + 1) * per];
+            let b = &recon.data()[c * per..(c + 1) * per];
+            let sq: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = x as f64 - y as f64;
+                    d * d
+                })
+                .sum();
+            let lo = a.iter().copied().fold(f32::INFINITY, f32::min) as f64;
+            let hi = a.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+            (sq / per as f64).sqrt() / (hi - lo).max(1e-30)
+        })
+        .collect()
+}
+
+/// Mean of per-channel NRMSE (the paper's reported S3D metric).
+pub fn mean_channel_nrmse(orig: &Tensor, recon: &Tensor) -> f64 {
+    let per = nrmse_per_channel(orig, recon);
+    per.iter().sum::<f64>() / per.len() as f64
+}
+
+/// Compression ratio (Eq. 12): raw f32 bytes / compressed bytes.
+pub fn compression_ratio(n_points: usize, compressed_bytes: usize) -> f64 {
+    (n_points * 4) as f64 / compressed_bytes.max(1) as f64
+}
+
+/// PSNR in dB relative to the data range.
+pub fn psnr(orig: &Tensor, recon: &Tensor) -> f64 {
+    let e = nrmse(orig, recon);
+    -20.0 * e.max(1e-30).log10()
+}
+
+/// Maximum per-point relative error |a-b| / range (Fig. 8's histogram is
+/// built from these values).
+pub fn relative_point_errors(orig: &Tensor, recon: &Tensor) -> Vec<f64> {
+    let range = (orig.range() as f64).max(1e-30);
+    orig.data()
+        .iter()
+        .zip(recon.data())
+        .map(|(&a, &b)| ((a as f64 - b as f64) / range).abs())
+        .collect()
+}
+
+/// Histogram of values in log10 space between `lo` and `hi` (Fig. 8).
+pub fn log_histogram(values: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<(f64, usize)> {
+    assert!(lo > 0.0 && hi > lo && bins > 0);
+    let (llo, lhi) = (lo.log10(), hi.log10());
+    let mut counts = vec![0usize; bins];
+    for &v in values {
+        if v <= 0.0 {
+            continue;
+        }
+        let f = ((v.log10() - llo) / (lhi - llo) * bins as f64).floor();
+        let idx = (f.max(0.0) as usize).min(bins - 1);
+        counts[idx] += 1;
+    }
+    (0..bins)
+        .map(|i| {
+            let center = 10f64.powf(llo + (i as f64 + 0.5) / bins as f64 * (lhi - llo));
+            (center, counts[i])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: Vec<f32>) -> Tensor {
+        Tensor::from_vec(v)
+    }
+
+    #[test]
+    fn identical_data_zero_nrmse() {
+        let a = t(vec![1.0, 2.0, 3.0]);
+        assert_eq!(nrmse(&a, &a.clone()), 0.0);
+        assert!(psnr(&a, &a.clone()) > 200.0);
+    }
+
+    #[test]
+    fn nrmse_matches_hand_computation() {
+        let a = t(vec![0.0, 2.0]); // range 2
+        let b = t(vec![1.0, 2.0]); // mse = 0.5, rmse = sqrt(0.5)
+        let e = nrmse(&a, &b);
+        assert!((e - (0.5f64).sqrt() / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_channel_isolates_errors() {
+        let a = Tensor::new(vec![2, 2], vec![0.0, 1.0, 0.0, 1.0]);
+        let b = Tensor::new(vec![2, 2], vec![0.0, 1.0, 0.5, 1.0]);
+        let per = nrmse_per_channel(&a, &b);
+        assert_eq!(per[0], 0.0);
+        assert!(per[1] > 0.0);
+        assert!((mean_channel_nrmse(&a, &b) - per[1] / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cr_accounting() {
+        assert_eq!(compression_ratio(100, 4), 100.0);
+        assert_eq!(compression_ratio(100, 400), 1.0);
+    }
+
+    #[test]
+    fn log_histogram_counts_everything_in_range() {
+        let vals = vec![1e-5, 1e-4, 1e-3, 5e-4, 2e-5];
+        let h = log_histogram(&vals, 1e-6, 1e-2, 8);
+        let total: usize = h.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 5);
+        // out-of-range clamps to edge bins rather than dropping
+        let h2 = log_histogram(&[1e-9, 1.0], 1e-6, 1e-2, 8);
+        let total2: usize = h2.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total2, 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! The paper's compression system: hierarchical AE pipeline ([`pipeline`]),
+//! PCA error-bound guarantee ([`gae`], Algorithm 1), archive container
+//! ([`format`]) and evaluation metrics ([`metrics`]).
+
+pub mod format;
+pub mod gae;
+pub mod metrics;
+pub mod pipeline;
+
+pub use format::Archive;
+pub use gae::{coeff_bin, gae_apply, gae_decode, BlockCorrection, GaeOutput};
+pub use metrics::{
+    compression_ratio, log_histogram, mean_channel_nrmse, nrmse, nrmse_per_channel,
+    psnr, relative_point_errors,
+};
+pub use pipeline::{gae_taus, CompressStats, HierCompressor};

@@ -1,0 +1,701 @@
+//! The hierarchical compression pipeline (paper Fig. 1).
+//!
+//! `HierCompressor` owns trained parameters for one HBAE plus zero or more
+//! residual BAEs (0 = the Fig.-5 "HBAE" ablation, 1 = the paper's method,
+//! 2 = the Fig.-4 "StackAE" variant) and drives:
+//!
+//! ```text
+//!  compress:   normalize -> hyper-block batches -> HBAE encode -> quantize
+//!              -> HBAE decode -> residual -> BAE encode -> quantize ->
+//!              BAE decode -> recon -> GAE (Algorithm 1) -> entropy stage
+//!              -> Archive
+//!  decompress: Archive -> entropy decode -> HBAE/BAE decode -> GAE
+//!              corrections -> denormalize
+//! ```
+//!
+//! All tensor math runs in the AOT HLO artifacts through PJRT; this module
+//! is pure orchestration + the entropy stage.
+
+use crate::coder::{
+    decode_index_sets, encode_index_sets, huffman_decode, huffman_encode, indexset,
+    Quantizer,
+};
+use crate::config::{DatasetConfig, ModelConfig, Normalization, PipelineConfig};
+use crate::data::{Blocking, NormStats, Normalizer};
+use crate::linalg::Pca;
+use crate::model::ParamStore;
+use crate::runtime::{HostTensor, Runtime};
+use crate::tensor::{block_origins, extract_block, scatter_block, Tensor};
+use crate::train::{train_bae, train_hbae, TrainReport};
+use crate::util::json::{self, Value};
+use crate::Result;
+use anyhow::{ensure, Context};
+
+use super::format::Archive;
+use super::gae::{gae_apply, gae_decode, BlockCorrection};
+
+/// Latent payload encoding modes (HLAT/BLAT section headers).
+const MODE_RAW: u8 = 0;
+const MODE_HUFF: u8 = 1;
+
+/// Compression statistics for reporting.
+#[derive(Debug, Clone)]
+pub struct CompressStats {
+    pub archive_bytes: usize,
+    pub cr_payload_bytes: usize,
+    /// Paper-accounting CR (latents + GAE coeffs + indices).
+    pub cr: f64,
+    /// CR counting every archive byte incl. basis + header.
+    pub cr_total: f64,
+    pub gae_corrected_blocks: usize,
+    pub gae_total_coeffs: usize,
+    pub section_sizes: Vec<(String, usize)>,
+}
+
+/// Trained hierarchical compressor for one dataset config.
+pub struct HierCompressor<'a> {
+    pub rt: &'a Runtime,
+    pub dataset: DatasetConfig,
+    pub model: ModelConfig,
+    pub hbae: ParamStore,
+    /// 0, 1, or 2 stacked residual BAEs (group of each recorded in header).
+    pub baes: Vec<ParamStore>,
+}
+
+impl<'a> HierCompressor<'a> {
+    /// Train (or load cached checkpoints for) the full stack.
+    pub fn prepare(
+        rt: &'a Runtime,
+        cfg: &PipelineConfig,
+        ckpt_dir: &std::path::Path,
+        field: &Tensor,
+    ) -> Result<(Self, Vec<TrainReport>)> {
+        let mut reports = Vec::new();
+        let blocking = Blocking::new(&cfg.dataset);
+        let stats = Normalizer::fit(cfg.dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+
+        // HBAE
+        let hpath = ParamStore::default_path(ckpt_dir, &cfg.model.hbae_group);
+        let hbae = if hpath.exists() {
+            ParamStore::load(&hpath, &cfg.model.hbae_group)?
+        } else {
+            let mut store = ParamStore::init(rt, &cfg.model.hbae_group)?;
+            let rep = train_hbae(rt, &mut store, &blocking, &norm, &cfg.train)?;
+            reports.push(rep);
+            store.save(&hpath)?;
+            store
+        };
+
+        // BAE on HBAE residuals
+        let bpath = ParamStore::default_path(ckpt_dir, &cfg.model.bae_group);
+        let mut this = Self {
+            rt,
+            dataset: cfg.dataset.clone(),
+            model: cfg.model.clone(),
+            hbae,
+            baes: Vec::new(),
+        };
+        let bae = if bpath.exists() {
+            ParamStore::load(&bpath, &cfg.model.bae_group)?
+        } else {
+            let residuals = this.hbae_residuals(&norm)?;
+            let mut store = ParamStore::init(rt, &cfg.model.bae_group)?;
+            let rep = train_bae(
+                rt,
+                &mut store,
+                &residuals,
+                blocking.block_dim(),
+                &cfg.train,
+            )?;
+            reports.push(rep);
+            store.save(&bpath)?;
+            store
+        };
+        this.baes.push(bae);
+        Ok((this, reports))
+    }
+
+    /// Residual rows (valid blocks only) of the *current stack* (HBAE +
+    /// any already-attached BAEs) over a normalized field — the training
+    /// set for the next residual BAE (Eq. 7 input; also the StackAE
+    /// second-corrector input).
+    pub fn stack_residuals(&self, norm: &Tensor) -> Result<Vec<f32>> {
+        if self.baes.is_empty() {
+            return self.hbae_residuals(norm);
+        }
+        let blocking = Blocking::new(&self.dataset);
+        let bd = blocking.block_dim();
+        let (_, _, recon) =
+            self.forward_all(norm, Quantizer::disabled(), Quantizer::disabled())?;
+        let mut out = Vec::with_capacity(blocking.num_blocks() * bd);
+        let mut a = vec![0f32; bd];
+        let mut b = vec![0f32; bd];
+        for h in 0..blocking.num_hyperblocks() {
+            for j in 0..blocking.k {
+                if let Some(origin) = blocking.origin(h, j) {
+                    extract_block(norm, &origin, &blocking.ae_block, &mut a);
+                    extract_block(&recon, &origin, &blocking.ae_block, &mut b);
+                    out.extend(a.iter().zip(&b).map(|(&x, &y)| x - y));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Residual rows (valid blocks only) of the HBAE over a normalized
+    /// field — the BAE training set (Eq. 7 input).
+    pub fn hbae_residuals(&self, norm: &Tensor) -> Result<Vec<f32>> {
+        let blocking = Blocking::new(&self.dataset);
+        let bd = blocking.block_dim();
+        let enc = self.rt.load(&self.hbae.group, "encode")?;
+        let dec = self.rt.load(&self.hbae.group, "decode")?;
+        let nh_batch = enc.info.inputs[1].shape[0];
+        let k = blocking.k;
+        let total_hb = blocking.num_hyperblocks();
+        let mut out = Vec::with_capacity(blocking.num_blocks() * bd);
+        let mut batch = vec![0f32; nh_batch * k * bd];
+        let theta = HostTensor::vec(self.hbae.theta.clone());
+        for h0 in (0..total_hb).step_by(nh_batch) {
+            blocking.gather(norm, h0, nh_batch, &mut batch);
+            let bt = HostTensor::new(vec![nh_batch, k, bd], batch.clone());
+            let lat = enc.run(&[theta.clone(), bt.clone()])?.remove(0);
+            let y = dec.run(&[theta.clone(), lat])?.remove(0);
+            for hi in 0..nh_batch {
+                let h = h0 + hi;
+                if h >= total_hb {
+                    break;
+                }
+                for j in 0..k {
+                    if blocking.is_valid(h, j) {
+                        let o = (hi * k + j) * bd;
+                        out.extend(
+                            batch[o..o + bd]
+                                .iter()
+                                .zip(&y.data[o..o + bd])
+                                .map(|(&x, &yy)| x - yy),
+                        );
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Does the fused `pipe/forward` artifact apply to this stack?
+    /// (§Perf: one PJRT call per batch instead of four, with the residual
+    /// and quantization computed in-graph — no intermediate host copies.)
+    fn fused_pipe(&self) -> Option<std::rc::Rc<crate::runtime::Executable>> {
+        if self.baes.len() != 1 || std::env::var_os("ATTN_REDUCE_NO_FUSE").is_some() {
+            return None;
+        }
+        let pg = self.model.pipe_group.as_ref()?;
+        let ginfo = self.rt.manifest.groups.get(pg)?;
+        if ginfo.hbae_group.as_deref() != Some(self.hbae.group.as_str())
+            || ginfo.bae_group.as_deref() != Some(self.baes[0].group.as_str())
+        {
+            return None;
+        }
+        self.rt.load(pg, "forward").ok()
+    }
+
+    /// Forward the full AE stack over a normalized field.
+    ///
+    /// Returns `(hbae latent rows, per-BAE latent rows for valid blocks,
+    /// reconstruction in the normalized domain)`.
+    fn forward_all(
+        &self,
+        norm: &Tensor,
+        qh: Quantizer,
+        qb: Quantizer,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>, Tensor)> {
+        if let Some(fwd) = self.fused_pipe() {
+            return self.forward_all_fused(&fwd, norm, qh, qb);
+        }
+        let blocking = Blocking::new(&self.dataset);
+        let bd = blocking.block_dim();
+        let k = blocking.k;
+        let enc = self.rt.load(&self.hbae.group, "encode")?;
+        let dec = self.rt.load(&self.hbae.group, "decode")?;
+        let nh_batch = enc.info.inputs[1].shape[0];
+        let lh_dim = enc.info.outputs[0].shape[1];
+        let total_hb = blocking.num_hyperblocks();
+        let theta = HostTensor::vec(self.hbae.theta.clone());
+
+        let mut lh_all = Vec::with_capacity(total_hb * lh_dim);
+        let mut lb_all: Vec<Vec<f32>> = self.baes.iter().map(|_| Vec::new()).collect();
+        let mut recon = Tensor::zeros(self.dataset.dims.clone());
+        let mut batch = vec![0f32; nh_batch * k * bd];
+
+        for h0 in (0..total_hb).step_by(nh_batch) {
+            blocking.gather(norm, h0, nh_batch, &mut batch);
+            let bt = HostTensor::new(vec![nh_batch, k, bd], batch.clone());
+            let mut lh = enc.run(&[theta.clone(), bt])?.remove(0);
+            qh.snap(&mut lh.data);
+            let y = dec.run(&[theta.clone(), lh.clone()])?.remove(0);
+
+            // residual cascade through the stacked BAEs
+            let mut resid: Vec<f32> =
+                batch.iter().zip(&y.data).map(|(&x, &yy)| x - yy).collect();
+            let mut recon_batch = y.data.clone();
+            for (bi, bae) in self.baes.iter().enumerate() {
+                let benc = self.rt.load(&bae.group, "encode")?;
+                let bdec = self.rt.load(&bae.group, "decode")?;
+                let nb = benc.info.inputs[1].shape[0];
+                ensure!(nb == nh_batch * k, "bae batch mismatch");
+                let phi = HostTensor::vec(bae.theta.clone());
+                let rt_in = HostTensor::new(vec![nb, bd], resid.clone());
+                let mut lb = benc.run(&[phi.clone(), rt_in])?.remove(0);
+                qb.snap(&mut lb.data);
+                let rhat = bdec.run(&[phi, lb.clone()])?.remove(0);
+                for i in 0..resid.len() {
+                    recon_batch[i] += rhat.data[i];
+                    resid[i] -= rhat.data[i];
+                }
+                // collect latents of valid blocks
+                let lb_dim = lb.shape[1];
+                for hi in 0..nh_batch {
+                    let h = h0 + hi;
+                    if h >= total_hb {
+                        break;
+                    }
+                    for j in 0..k {
+                        if blocking.is_valid(h, j) {
+                            let r = hi * k + j;
+                            lb_all[bi]
+                                .extend_from_slice(&lb.data[r * lb_dim..(r + 1) * lb_dim]);
+                        }
+                    }
+                }
+            }
+            // collect hyper-block latents + scatter recon
+            let n_here = (total_hb - h0).min(nh_batch);
+            lh_all.extend_from_slice(&lh.data[..n_here * lh_dim]);
+            blocking.scatter(&mut recon, h0, nh_batch, &recon_batch);
+        }
+        Ok((lh_all, lb_all, recon))
+    }
+
+    /// Hot-path variant of [`Self::forward_all`] over the fused artifact.
+    fn forward_all_fused(
+        &self,
+        fwd: &crate::runtime::Executable,
+        norm: &Tensor,
+        qh: Quantizer,
+        qb: Quantizer,
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>, Tensor)> {
+        let blocking = Blocking::new(&self.dataset);
+        let bd = blocking.block_dim();
+        let k = blocking.k;
+        let nh_batch = fwd.info.inputs[2].shape[0];
+        let lh_dim = fwd.info.outputs[0].shape[1];
+        let lb_dim = fwd.info.outputs[1].shape[1];
+        let total_hb = blocking.num_hyperblocks();
+        let theta = HostTensor::vec(self.hbae.theta.clone());
+        let phi = HostTensor::vec(self.baes[0].theta.clone());
+        // bin <= 0 disables quantization inside the graph (model.py)
+        let bin_h = HostTensor::scalar(if qh.enabled() { qh.bin } else { 0.0 });
+        let bin_b = HostTensor::scalar(if qb.enabled() { qb.bin } else { 0.0 });
+
+        let mut lh_all = Vec::with_capacity(total_hb * lh_dim);
+        let mut lb_all: Vec<Vec<f32>> = vec![Vec::new()];
+        let mut recon = Tensor::zeros(self.dataset.dims.clone());
+        let mut batch = vec![0f32; nh_batch * k * bd];
+        for h0 in (0..total_hb).step_by(nh_batch) {
+            blocking.gather(norm, h0, nh_batch, &mut batch);
+            let outs = fwd.run(&[
+                theta.clone(),
+                phi.clone(),
+                HostTensor::new(vec![nh_batch, k, bd], batch.clone()),
+                bin_h.clone(),
+                bin_b.clone(),
+            ])?;
+            let (lh, lb, rc) = (&outs[0], &outs[1], &outs[2]);
+            let n_here = (total_hb - h0).min(nh_batch);
+            lh_all.extend_from_slice(&lh.data[..n_here * lh_dim]);
+            for hi in 0..n_here {
+                for j in 0..k {
+                    if blocking.is_valid(h0 + hi, j) {
+                        let r = hi * k + j;
+                        lb_all[0].extend_from_slice(&lb.data[r * lb_dim..(r + 1) * lb_dim]);
+                    }
+                }
+            }
+            blocking.scatter(&mut recon, h0, nh_batch, &rc.data);
+        }
+        Ok((lh_all, lb_all, recon))
+    }
+
+    /// Decode latent rows back into a normalized-domain reconstruction.
+    fn decode_all(
+        rt: &Runtime,
+        dataset: &DatasetConfig,
+        hbae: &ParamStore,
+        baes: &[ParamStore],
+        lh_all: &[f32],
+        lb_all: &[Vec<f32>],
+    ) -> Result<Tensor> {
+        let blocking = Blocking::new(dataset);
+        let k = blocking.k;
+        let dec = rt.load(&hbae.group, "decode")?;
+        let nh_batch = dec.info.inputs[1].shape[0];
+        let lh_dim = dec.info.inputs[1].shape[1];
+        let total_hb = blocking.num_hyperblocks();
+        ensure!(lh_all.len() == total_hb * lh_dim, "HLAT length mismatch");
+        let theta = HostTensor::vec(hbae.theta.clone());
+
+        let mut recon = Tensor::zeros(dataset.dims.clone());
+        // per-BAE read cursors over valid-block latents
+        let mut cursors = vec![0usize; baes.len()];
+        for h0 in (0..total_hb).step_by(nh_batch) {
+            let n_here = (total_hb - h0).min(nh_batch);
+            let mut lh = vec![0f32; nh_batch * lh_dim];
+            lh[..n_here * lh_dim]
+                .copy_from_slice(&lh_all[h0 * lh_dim..(h0 + n_here) * lh_dim]);
+            let y = dec
+                .run(&[theta.clone(), HostTensor::new(vec![nh_batch, lh_dim], lh)])?
+                .remove(0);
+            let mut recon_batch = y.data.clone();
+            for (bi, bae) in baes.iter().enumerate() {
+                let bdec = rt.load(&bae.group, "decode")?;
+                let nb = bdec.info.inputs[1].shape[0];
+                let lb_dim = bdec.info.inputs[1].shape[1];
+                let mut lb = vec![0f32; nb * lb_dim];
+                for hi in 0..nh_batch {
+                    let h = h0 + hi;
+                    if h >= total_hb {
+                        break;
+                    }
+                    for j in 0..k {
+                        if blocking.is_valid(h, j) {
+                            let r = hi * k + j;
+                            let c = cursors[bi];
+                            lb[r * lb_dim..(r + 1) * lb_dim].copy_from_slice(
+                                &lb_all[bi][c..c + lb_dim],
+                            );
+                            cursors[bi] += lb_dim;
+                        }
+                    }
+                }
+                let phi = HostTensor::vec(bae.theta.clone());
+                let rhat = bdec
+                    .run(&[phi, HostTensor::new(vec![nb, lb_dim], lb)])?
+                    .remove(0);
+                for i in 0..recon_batch.len() {
+                    recon_batch[i] += rhat.data[i];
+                }
+            }
+            blocking.scatter(&mut recon, h0, nh_batch, &recon_batch);
+        }
+        Ok(recon)
+    }
+
+    /// Compress a field with per-GAE-block ℓ2 bound `tau` (original
+    /// units; `tau <= 0` disables GAE). Returns the archive and the final
+    /// reconstruction in the **original** domain.
+    pub fn compress(&self, field: &Tensor, tau: f32) -> Result<(Archive, Tensor)> {
+        ensure!(field.shape() == &self.dataset.dims[..], "field shape mismatch");
+        let stats = Normalizer::fit(self.dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+
+        let qh = Quantizer::new(self.model.bin_hbae.max(0.0));
+        let qb = Quantizer::new(self.model.bin_bae.max(0.0));
+        let (lh_all, lb_all, mut recon) = self.forward_all(&norm, qh, qb)?;
+
+        // ---- GAE stage (normalized domain; per-block tau from channel
+        // scale so the bound transfers exactly to original units) ----
+        let gae_sections = if tau > 0.0 {
+            let d = self.dataset.gae_block_len();
+            let origins = block_origins(&self.dataset.dims, &self.dataset.gae_block);
+            let taus = gae_taus(&self.dataset, &stats, tau, &origins);
+            let mut orig_rows = vec![0f32; origins.len() * d];
+            let mut recon_rows = vec![0f32; origins.len() * d];
+            for (bi, o) in origins.iter().enumerate() {
+                extract_block(&norm, o, &self.dataset.gae_block, &mut orig_rows[bi * d..(bi + 1) * d]);
+                extract_block(&recon, o, &self.dataset.gae_block, &mut recon_rows[bi * d..(bi + 1) * d]);
+            }
+            let out = gae_apply(&orig_rows, &mut recon_rows, d, &taus)?;
+            for (bi, o) in origins.iter().enumerate() {
+                scatter_block(&mut recon, o, &self.dataset.gae_block, &recon_rows[bi * d..(bi + 1) * d]);
+            }
+            Some((out, origins.len()))
+        } else {
+            None
+        };
+
+        // ---- entropy stage + archive ----
+        let mut header = vec![
+            ("dataset", self.dataset.to_json()),
+            ("model", self.model.to_json()),
+            ("norm", stats.to_json()),
+            ("tau", json::num(tau as f64)),
+            (
+                "bae_groups",
+                Value::Arr(self.baes.iter().map(|b| json::s(b.group.as_str())).collect()),
+            ),
+            ("hbae_group", json::s(self.hbae.group.as_str())),
+        ];
+        let (gae_out, n_gae_blocks) = match &gae_sections {
+            Some((o, n)) => (Some(o), *n),
+            None => (None, 0),
+        };
+        header.push(("gae_blocks", json::num(n_gae_blocks as f64)));
+        let mut archive = Archive::new(json::obj(header));
+        archive.add_section("HLAT", encode_latents(&lh_all, qh));
+        archive.add_section("BLAT", encode_latent_groups(&lb_all, qb));
+        if let Some(out) = gae_out {
+            let codes: Vec<i32> = out
+                .corrections
+                .iter()
+                .flat_map(|c| c.codes.iter().copied())
+                .collect();
+            archive.add_section("GCOF", huffman_encode(&codes));
+            let sets: Vec<Vec<usize>> =
+                out.corrections.iter().map(|c| c.indices.clone()).collect();
+            archive.add_section(
+                "GIDX",
+                encode_index_sets(&sets, self.dataset.gae_block_len())?,
+            );
+            archive.add_section("GBAS", out.pca.basis_f32_bytes());
+        }
+
+        Normalizer::invert(&stats, &mut recon);
+        Ok((archive, recon))
+    }
+
+    /// Compression statistics for an archive produced by [`Self::compress`].
+    pub fn stats(&self, archive: &Archive) -> CompressStats {
+        let n_points = self.dataset.total_points();
+        let payload = archive.cr_payload_bytes();
+        let total = archive.total_bytes();
+        CompressStats {
+            archive_bytes: total,
+            cr_payload_bytes: payload,
+            cr: super::metrics::compression_ratio(n_points, payload),
+            cr_total: super::metrics::compression_ratio(n_points, total),
+            gae_corrected_blocks: 0, // filled by compress_with_stats
+            gae_total_coeffs: 0,
+            section_sizes: archive.section_sizes(),
+        }
+    }
+
+    /// Decompress an archive (static: only needs the trained params).
+    pub fn decompress(
+        rt: &Runtime,
+        archive: &Archive,
+        hbae: &ParamStore,
+        baes: &[ParamStore],
+    ) -> Result<Tensor> {
+        let h = &archive.header;
+        let dataset = DatasetConfig::from_json(h.req("dataset")?)?;
+        let model = ModelConfig::from_json(h.req("model")?)?;
+        let stats = NormStats::from_json(h.req("norm")?)?;
+        let tau = h.req("tau")?.as_f64().unwrap_or(0.0) as f32;
+        ensure!(hbae.group == h.req("hbae_group")?.as_str().unwrap_or(""), "hbae group mismatch");
+
+        let qh = Quantizer::new(model.bin_hbae.max(0.0));
+        let qb = Quantizer::new(model.bin_bae.max(0.0));
+        let lh_all = decode_latents(archive.section("HLAT")?, qh)?;
+        let lb_all = decode_latent_groups(archive.section("BLAT")?, qb, baes.len())?;
+
+        let mut recon = Self::decode_all(rt, &dataset, hbae, baes, &lh_all, &lb_all)?;
+
+        if tau > 0.0 && archive.has_section("GBAS") {
+            let d = dataset.gae_block_len();
+            let origins = block_origins(&dataset.dims, &dataset.gae_block);
+            let taus = gae_taus(&dataset, &stats, tau, &origins);
+            let pca = Pca::from_f32_bytes(archive.section("GBAS")?, d)?;
+            let sets = decode_index_sets(
+                archive.section("GIDX")?,
+                indexset::max_raw_size(origins.len(), d),
+            )?;
+            ensure!(sets.len() == origins.len(), "GIDX count mismatch");
+            let (codes, _) = huffman_decode(archive.section("GCOF")?)?;
+            let mut corrections = Vec::with_capacity(sets.len());
+            let mut cur = 0usize;
+            for set in sets {
+                let n = set.len();
+                ensure!(cur + n <= codes.len(), "GCOF underrun");
+                corrections.push(BlockCorrection {
+                    indices: set,
+                    codes: codes[cur..cur + n].to_vec(),
+                });
+                cur += n;
+            }
+            let mut rows = vec![0f32; origins.len() * d];
+            for (bi, o) in origins.iter().enumerate() {
+                extract_block(&recon, o, &dataset.gae_block, &mut rows[bi * d..(bi + 1) * d]);
+            }
+            gae_decode(&mut rows, d, &taus, &pca, &corrections)?;
+            for (bi, o) in origins.iter().enumerate() {
+                scatter_block(&mut recon, o, &dataset.gae_block, &rows[bi * d..(bi + 1) * d]);
+            }
+        }
+
+        Normalizer::invert(&stats, &mut recon);
+        Ok(recon)
+    }
+}
+
+/// Per-GAE-block bounds in the normalized domain: `τ_norm = τ / scale_ch`
+/// (the GAE block lies within one channel, so the bound transfers exactly
+/// back to original units).
+pub fn gae_taus(
+    dataset: &DatasetConfig,
+    stats: &NormStats,
+    tau_orig: f32,
+    origins: &[Vec<usize>],
+) -> Vec<f32> {
+    match dataset.normalization {
+        Normalization::ZScore => {
+            let s = stats.channels[0].1.max(1e-30);
+            vec![(tau_orig as f64 / s) as f32; origins.len()]
+        }
+        Normalization::PerSpeciesMeanRange => origins
+            .iter()
+            .map(|o| {
+                let ch = o[0].min(stats.channels.len() - 1);
+                let s = stats.channels[ch].1.max(1e-30);
+                (tau_orig as f64 / s) as f32
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Latent section codecs
+// ---------------------------------------------------------------------------
+
+/// Encode latent rows: Huffman over integer codes when quantized, raw f32
+/// otherwise (the ablation configs disable quantization).
+fn encode_latents(values: &[f32], q: Quantizer) -> Vec<u8> {
+    let mut out = Vec::new();
+    if q.enabled() {
+        out.push(MODE_HUFF);
+        let codes: Vec<i32> = values.iter().map(|&v| q.code(v)).collect();
+        out.extend(huffman_encode(&codes));
+    } else {
+        out.push(MODE_RAW);
+        out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+        for &v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+fn decode_latents(bytes: &[u8], q: Quantizer) -> Result<Vec<f32>> {
+    ensure!(!bytes.is_empty(), "latent section empty");
+    match bytes[0] {
+        MODE_HUFF => {
+            ensure!(q.enabled(), "archive quantized but config bin is 0");
+            let (codes, _) = huffman_decode(&bytes[1..])?;
+            Ok(q.dequant_all(&codes))
+        }
+        MODE_RAW => {
+            ensure!(bytes.len() >= 9, "raw latent header");
+            let n = u64::from_le_bytes(bytes[1..9].try_into().unwrap()) as usize;
+            ensure!(bytes.len() == 9 + n * 4, "raw latent length");
+            Ok(bytes[9..]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect())
+        }
+        m => anyhow::bail!("unknown latent mode {m}"),
+    }
+}
+
+/// Concatenate one latent stream per stacked BAE (u32 count prefix).
+fn encode_latent_groups(groups: &[Vec<f32>], q: Quantizer) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(groups.len() as u32).to_le_bytes());
+    for g in groups {
+        let payload = encode_latents(g, q);
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend(payload);
+    }
+    out
+}
+
+fn decode_latent_groups(bytes: &[u8], q: Quantizer, expect: usize) -> Result<Vec<Vec<f32>>> {
+    ensure!(bytes.len() >= 4, "BLAT header");
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    ensure!(n == expect, "archive has {n} BAE streams, loaded {expect} BAEs");
+    let mut off = 4;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = u64::from_le_bytes(
+            bytes
+                .get(off..off + 8)
+                .context("BLAT length")?
+                .try_into()
+                .unwrap(),
+        ) as usize;
+        off += 8;
+        out.push(decode_latents(bytes.get(off..off + len).context("BLAT body")?, q)?);
+        off += len;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latent_codec_round_trips_quantized() {
+        let q = Quantizer::new(0.05);
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 * 0.31).sin()).collect();
+        let enc = encode_latents(&vals, q);
+        let dec = decode_latents(&enc, q).unwrap();
+        for (a, b) in vals.iter().zip(&dec) {
+            assert!((a - b).abs() <= 0.025 + 1e-6);
+        }
+        // snapped values round-trip exactly
+        let mut snapped = vals.clone();
+        q.snap(&mut snapped);
+        let enc2 = encode_latents(&snapped, q);
+        let dec2 = decode_latents(&enc2, q).unwrap();
+        assert_eq!(snapped, dec2);
+    }
+
+    #[test]
+    fn latent_codec_round_trips_raw() {
+        let q = Quantizer::disabled();
+        let vals: Vec<f32> = (0..50).map(|i| (i as f32).exp() % 7.0).collect();
+        let dec = decode_latents(&encode_latents(&vals, q), q).unwrap();
+        assert_eq!(vals, dec);
+    }
+
+    #[test]
+    fn latent_groups_round_trip() {
+        let q = Quantizer::new(0.1);
+        let mut g1: Vec<f32> = (0..30).map(|i| i as f32 * 0.3).collect();
+        let mut g2: Vec<f32> = (0..10).map(|i| -(i as f32) * 0.7).collect();
+        q.snap(&mut g1);
+        q.snap(&mut g2);
+        let groups = vec![g1.clone(), g2.clone()];
+        let enc = encode_latent_groups(&groups, q);
+        let dec = decode_latent_groups(&enc, q, 2).unwrap();
+        assert_eq!(dec, groups);
+        assert!(decode_latent_groups(&enc, q, 1).is_err());
+    }
+
+    #[test]
+    fn gae_taus_scale_per_species() {
+        use crate::config::{dataset_preset, DatasetKind, Scale};
+        let d = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+        let stats = NormStats {
+            kind: Normalization::PerSpeciesMeanRange,
+            channels: (0..16).map(|i| (0.0, 1.0 + i as f64)).collect(),
+        };
+        let origins = block_origins(&d.dims, &d.gae_block);
+        let taus = gae_taus(&d, &stats, 2.0, &origins);
+        // block for species 0 has scale 1 -> tau 2; species 1 -> tau 1
+        let per_species = origins.len() / 16;
+        assert!((taus[0] - 2.0).abs() < 1e-6);
+        assert!((taus[per_species] - 1.0).abs() < 1e-6);
+    }
+}

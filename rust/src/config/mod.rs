@@ -1,0 +1,390 @@
+//! Configuration system.
+//!
+//! Presets mirror `python/compile/configs.py` (the manifest is the source
+//! of truth for shapes; [`crate::runtime::Runtime`] validates group names
+//! and dims against it at load time). Configs serialize to JSON (in-house
+//! writer) for the archive header and experiment records.
+
+use crate::util::json::{self, Value};
+use anyhow::bail;
+
+/// Which scientific application the data comes from (paper §III-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DatasetKind {
+    S3d,
+    E3sm,
+    Xgc,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "s3d" => Ok(Self::S3d),
+            "e3sm" => Ok(Self::E3sm),
+            "xgc" => Ok(Self::Xgc),
+            other => bail!("unknown dataset {other:?} (s3d|e3sm|xgc)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::S3d => "s3d",
+            Self::E3sm => "e3sm",
+            Self::Xgc => "xgc",
+        }
+    }
+}
+
+/// Paper §III-A normalizations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Normalization {
+    /// z-score over the whole field (E3SM, XGC).
+    ZScore,
+    /// per-species mean 0 / range 1 (S3D).
+    PerSpeciesMeanRange,
+}
+
+impl Normalization {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::ZScore => "z_score",
+            Self::PerSpeciesMeanRange => "per_species_mean_range",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s {
+            "z_score" => Ok(Self::ZScore),
+            "per_species_mean_range" => Ok(Self::PerSpeciesMeanRange),
+            other => bail!("unknown normalization {other:?}"),
+        }
+    }
+}
+
+/// Geometry of one dataset instance plus how it is blocked / hyper-blocked.
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    pub kind: DatasetKind,
+    /// Full field shape, e.g. S3D `[species, t, x, y]`.
+    pub dims: Vec<usize>,
+    /// AE block shape (same rank as `dims`); flattens to the model's
+    /// `block_dim`.
+    pub ae_block: Vec<usize>,
+    /// Blocks per hyper-block (grouped along `hyper_axis`).
+    pub k: usize,
+    /// Axis along which consecutive blocks form a hyper-block
+    /// (S3D/E3SM: time; XGC: toroidal cross-section).
+    pub hyper_axis: usize,
+    /// GAE post-processing block shape (paper §II-D uses a different,
+    /// usually smaller, blocking than the AE stage).
+    pub gae_block: Vec<usize>,
+    /// Normalization applied before the AE stage.
+    pub normalization: Normalization,
+    /// Generator seed (synthetic substitutes — DESIGN.md §4).
+    pub seed: u64,
+}
+
+impl DatasetConfig {
+    pub fn block_dim(&self) -> usize {
+        self.ae_block.iter().product()
+    }
+
+    pub fn gae_block_len(&self) -> usize {
+        self.gae_block.iter().product()
+    }
+
+    pub fn total_points(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s(self.kind.name())),
+            ("dims", json::arr_usize(&self.dims)),
+            ("ae_block", json::arr_usize(&self.ae_block)),
+            ("k", json::num(self.k as f64)),
+            ("hyper_axis", json::num(self.hyper_axis as f64)),
+            ("gae_block", json::arr_usize(&self.gae_block)),
+            ("normalization", json::s(self.normalization.name())),
+            ("seed", json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> crate::Result<Self> {
+        Ok(Self {
+            kind: DatasetKind::parse(v.req("kind")?.as_str().unwrap_or(""))?,
+            dims: v.req("dims")?.usize_vec()?,
+            ae_block: v.req("ae_block")?.usize_vec()?,
+            k: v.req("k")?.as_usize().unwrap_or(0),
+            hyper_axis: v.req("hyper_axis")?.as_usize().unwrap_or(0),
+            gae_block: v.req("gae_block")?.usize_vec()?,
+            normalization: Normalization::parse(
+                v.req("normalization")?.as_str().unwrap_or(""),
+            )?,
+            seed: v.req("seed")?.as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// Model group names + quantization setup for one dataset preset.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub hbae_group: String,
+    pub bae_group: String,
+    pub pipe_group: Option<String>,
+    /// Latent quantization bin sizes (paper §III-E: S3D 0.005/0.005,
+    /// E3SM 0.01/0.1, XGC 0.1/0.1). `0.0` disables quantization.
+    pub bin_hbae: f32,
+    pub bin_bae: f32,
+}
+
+impl ModelConfig {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("hbae_group", json::s(&self.hbae_group)),
+            ("bae_group", json::s(&self.bae_group)),
+            (
+                "pipe_group",
+                self.pipe_group
+                    .as_ref()
+                    .map(|s| json::s(s.as_str()))
+                    .unwrap_or(Value::Null),
+            ),
+            ("bin_hbae", json::num(self.bin_hbae as f64)),
+            ("bin_bae", json::num(self.bin_bae as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> crate::Result<Self> {
+        Ok(Self {
+            hbae_group: v.req("hbae_group")?.as_str().unwrap_or("").to_string(),
+            bae_group: v.req("bae_group")?.as_str().unwrap_or("").to_string(),
+            pipe_group: v
+                .get("pipe_group")
+                .and_then(|p| p.as_str())
+                .map(|s| s.to_string()),
+            bin_hbae: v.req("bin_hbae")?.as_f64().unwrap_or(0.0) as f32,
+            bin_bae: v.req("bin_bae")?.as_f64().unwrap_or(0.0) as f32,
+        })
+    }
+}
+
+/// Training hyper-parameters (paper §III-C: Adam, lr 1e-3, MSE).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 1e-3, log_every: 25, seed: 0 }
+    }
+}
+
+/// Full pipeline configuration for a compression run.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub dataset: DatasetConfig,
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    /// Per-GAE-block ℓ2 error bound τ. Usually derived from a target
+    /// NRMSE via [`PipelineConfig::tau_for_nrmse`].
+    pub tau: f32,
+}
+
+impl PipelineConfig {
+    /// τ such that if every block hits it exactly, dataset NRMSE ≈ target
+    /// (Eq. 11): `τ = nrmse · range · sqrt(D_block)`.
+    pub fn tau_for_nrmse(nrmse: f64, value_range: f64, gae_block_len: usize) -> f32 {
+        (nrmse * value_range * (gae_block_len as f64).sqrt()) as f32
+    }
+}
+
+/// Scale of the synthetic datasets (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CPU-box friendly default.
+    Bench,
+    /// Tiny: CI / unit tests.
+    Smoke,
+    /// The paper's full dims (S3D 58x50x640x640 — 9.5 GB).
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "bench" => Ok(Self::Bench),
+            "smoke" => Ok(Self::Smoke),
+            "paper" => Ok(Self::Paper),
+            other => bail!("unknown scale {other:?} (bench|smoke|paper)"),
+        }
+    }
+}
+
+/// Dataset preset matching the python side's bench-scale geometry.
+pub fn dataset_preset(kind: DatasetKind, scale: Scale) -> DatasetConfig {
+    match kind {
+        DatasetKind::S3d => {
+            // paper: 58 species x 50 t x 640 x 640; AE block 58x5x4x4; k=10
+            // hyper-block = 10 consecutive temporal blocks; GAE per species
+            // with 5x4x4 blocks.
+            // bench keeps T=50 so 10 temporal blocks form exactly one
+            // hyper-block per spatial tile, as in the paper.
+            let (species, t, x, y) = match scale {
+                Scale::Paper => (58, 50, 640, 640),
+                Scale::Bench => (16, 50, 64, 64),
+                Scale::Smoke => (16, 10, 16, 16),
+            };
+            DatasetConfig {
+                kind,
+                dims: vec![species, t, x, y],
+                ae_block: vec![species, 5, 4, 4],
+                k: 10,
+                hyper_axis: 1,
+                gae_block: vec![1, 5, 4, 4],
+                normalization: Normalization::PerSpeciesMeanRange,
+                seed: 31,
+            }
+        }
+        DatasetKind::E3sm => {
+            // paper: 720 t x 240 x 1440; blocks 6x16x16; k=5; GAE 16x16.
+            let (t, h, w) = match scale {
+                Scale::Paper => (720, 240, 1440),
+                Scale::Bench => (120, 96, 192),
+                Scale::Smoke => (24, 32, 32),
+            };
+            DatasetConfig {
+                kind,
+                dims: vec![t, h, w],
+                ae_block: vec![6, 16, 16],
+                k: 5,
+                hyper_axis: 0,
+                gae_block: vec![1, 16, 16],
+                normalization: Normalization::ZScore,
+                seed: 47,
+            }
+        }
+        DatasetKind::Xgc => {
+            // paper: 8 planes x 16395 nodes x 39 x 39; block = one
+            // histogram; hyper-block = 8 toroidal copies of one node.
+            let nodes = match scale {
+                Scale::Paper => 16395,
+                Scale::Bench => 2048,
+                Scale::Smoke => 128,
+            };
+            DatasetConfig {
+                kind,
+                dims: vec![8, nodes, 39, 39],
+                ae_block: vec![1, 1, 39, 39],
+                k: 8,
+                hyper_axis: 0,
+                gae_block: vec![1, 1, 39, 39],
+                normalization: Normalization::ZScore,
+                seed: 63,
+            }
+        }
+    }
+}
+
+/// Model preset matching `configs.default_groups()` on the python side.
+pub fn model_preset(kind: DatasetKind) -> ModelConfig {
+    match kind {
+        DatasetKind::S3d => ModelConfig {
+            hbae_group: "s3d_hbae_L128".into(),
+            bae_group: "s3d_bae_L16".into(),
+            pipe_group: Some("s3d_pipe_L128_16".into()),
+            bin_hbae: 0.005,
+            bin_bae: 0.005,
+        },
+        DatasetKind::E3sm => ModelConfig {
+            hbae_group: "e3sm_hbae_L64".into(),
+            bae_group: "e3sm_bae_L16".into(),
+            pipe_group: Some("e3sm_pipe_L64_16".into()),
+            bin_hbae: 0.01,
+            bin_bae: 0.1,
+        },
+        DatasetKind::Xgc => ModelConfig {
+            hbae_group: "xgc_hbae_L64".into(),
+            bae_group: "xgc_bae_L16".into(),
+            pipe_group: Some("xgc_pipe_L64_16".into()),
+            bin_hbae: 0.1,
+            bin_bae: 0.1,
+        },
+    }
+}
+
+/// Everything needed for `attn-reduce compress --dataset <kind>`.
+pub fn pipeline_preset(kind: DatasetKind, scale: Scale, tau: f32) -> PipelineConfig {
+    PipelineConfig {
+        dataset: dataset_preset(kind, scale),
+        model: model_preset(kind),
+        train: TrainConfig::default(),
+        tau,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_block_dims_match_manifest_groups() {
+        // s3d bench: 16*5*4*4 = 1280 (the python preset's block_dim)
+        let d = dataset_preset(DatasetKind::S3d, Scale::Bench);
+        assert_eq!(d.block_dim(), 1280);
+        let d = dataset_preset(DatasetKind::E3sm, Scale::Bench);
+        assert_eq!(d.block_dim(), 1536);
+        let d = dataset_preset(DatasetKind::Xgc, Scale::Bench);
+        assert_eq!(d.block_dim(), 1521);
+    }
+
+    #[test]
+    fn tau_from_nrmse_scales_with_block() {
+        let t1 = PipelineConfig::tau_for_nrmse(1e-3, 1.0, 80);
+        let t2 = PipelineConfig::tau_for_nrmse(1e-3, 1.0, 320);
+        assert!((t2 / t1 - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quant_bins_match_paper() {
+        assert_eq!(model_preset(DatasetKind::S3d).bin_hbae, 0.005);
+        assert_eq!(model_preset(DatasetKind::E3sm).bin_hbae, 0.01);
+        assert_eq!(model_preset(DatasetKind::E3sm).bin_bae, 0.1);
+        assert_eq!(model_preset(DatasetKind::Xgc).bin_bae, 0.1);
+    }
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc] {
+            assert_eq!(DatasetKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(DatasetKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn dataset_config_json_round_trip() {
+        let d = dataset_preset(DatasetKind::S3d, Scale::Bench);
+        let v = d.to_json();
+        let text = v.to_string_pretty();
+        let back = DatasetConfig::from_json(
+            &crate::util::json::Value::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.dims, d.dims);
+        assert_eq!(back.kind, d.kind);
+        assert_eq!(back.normalization, d.normalization);
+    }
+
+    #[test]
+    fn model_config_json_round_trip() {
+        let m = model_preset(DatasetKind::E3sm);
+        let back = ModelConfig::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.hbae_group, m.hbae_group);
+        assert_eq!(back.pipe_group, m.pipe_group);
+        assert_eq!(back.bin_bae, m.bin_bae);
+    }
+}

@@ -1,0 +1,247 @@
+//! Streaming coordinator (L3).
+//!
+//! PJRT wrapper types are `!Send`, so the orchestrator pins the PJRT stage
+//! to the calling thread and pipelines the CPU-side stages around it with
+//! scoped worker threads + bounded channels (backpressure):
+//!
+//! ```text
+//!   [gather thread] --(batches, cap Q)--> [PJRT stage, this thread]
+//!        --(latents+recon, cap Q)--> [sink thread: quantize codes,
+//!                                     scatter recon, entropy accounting]
+//! ```
+//!
+//! The bounded channels keep the PJRT executor saturated while the gather
+//! and entropy stages overlap with it; `queue_depth` trades memory for
+//! smoothing. Used by the `climate_stream` example and the pipeline
+//! bench; per-stage busy times are reported for the perf log.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::time::Instant;
+
+use crate::coder::Quantizer;
+use crate::compressor::HierCompressor;
+use crate::data::{Blocking, Normalizer};
+use crate::runtime::HostTensor;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::ensure;
+
+/// Per-stage timing + throughput of one streaming pass.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub hyperblocks: usize,
+    pub batches: usize,
+    pub raw_bytes: usize,
+    pub latent_bytes: usize,
+    pub wall_s: f64,
+    pub gather_busy_s: f64,
+    pub pjrt_busy_s: f64,
+    pub sink_busy_s: f64,
+}
+
+impl StreamStats {
+    pub fn throughput_mb_s(&self) -> f64 {
+        self.raw_bytes as f64 / 1e6 / self.wall_s.max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hyper-blocks in {} batches, {:.1} MB in {:.2}s ({:.1} MB/s); busy: gather {:.2}s, pjrt {:.2}s, sink {:.2}s",
+            self.hyperblocks,
+            self.batches,
+            self.raw_bytes as f64 / 1e6,
+            self.wall_s,
+            self.throughput_mb_s(),
+            self.gather_busy_s,
+            self.pjrt_busy_s,
+            self.sink_busy_s
+        )
+    }
+}
+
+struct BatchMsg {
+    h0: usize,
+    data: Vec<f32>, // [nh, k, bd]
+    gather_s: f64,
+}
+
+struct LatentMsg {
+    h0: usize,
+    lh: Vec<f32>,
+    lb: Vec<f32>,
+    recon: Vec<f32>,
+    gather_s: f64,
+    pjrt_s: f64,
+}
+
+/// Output of a streaming compression pass.
+pub struct StreamOutput {
+    /// Reconstruction in the normalized domain (pre-GAE).
+    pub recon: Tensor,
+    /// Quantized latent codes (HBAE then BAE streams).
+    pub lh_codes: Vec<i32>,
+    pub lb_codes: Vec<i32>,
+    pub stats: StreamStats,
+}
+
+/// Stream a normalized field through the AE stack with pipelined stages.
+///
+/// Functionally equivalent to the sequential path in
+/// [`HierCompressor::compress`] up to the entropy stage; exists to
+/// demonstrate + measure the overlapped L3 design.
+pub fn stream_forward(
+    comp: &HierCompressor<'_>,
+    norm: &Tensor,
+    queue_depth: usize,
+) -> Result<StreamOutput> {
+    ensure!(comp.baes.len() == 1, "streaming path expects exactly one BAE");
+    let blocking = Blocking::new(&comp.dataset);
+    let bd = blocking.block_dim();
+    let k = blocking.k;
+    let enc = comp.rt.load(&comp.hbae.group, "encode")?;
+    let dec = comp.rt.load(&comp.hbae.group, "decode")?;
+    let benc = comp.rt.load(&comp.baes[0].group, "encode")?;
+    let bdec = comp.rt.load(&comp.baes[0].group, "decode")?;
+    let nh_batch = enc.info.inputs[1].shape[0];
+    let lh_dim = enc.info.outputs[0].shape[1];
+    let lb_dim = benc.info.outputs[0].shape[1];
+    let total_hb = blocking.num_hyperblocks();
+    let qh = Quantizer::new(comp.model.bin_hbae.max(0.0));
+    let qb = Quantizer::new(comp.model.bin_bae.max(0.0));
+
+    let theta = HostTensor::vec(comp.hbae.theta.clone());
+    let phi = HostTensor::vec(comp.baes[0].theta.clone());
+
+    let t0 = Instant::now();
+    let mut stats = StreamStats {
+        raw_bytes: norm.len() * 4,
+        ..Default::default()
+    };
+
+    let (batch_tx, batch_rx): (SyncSender<BatchMsg>, Receiver<BatchMsg>) =
+        std::sync::mpsc::sync_channel(queue_depth);
+    let (lat_tx, lat_rx): (SyncSender<LatentMsg>, Receiver<LatentMsg>) =
+        std::sync::mpsc::sync_channel(queue_depth);
+
+    let mut recon = Tensor::zeros(comp.dataset.dims.clone());
+    let mut lh_codes: Vec<i32> = Vec::new();
+    let mut lb_codes: Vec<i32> = Vec::new();
+    let mut sink_busy = 0.0f64;
+    let mut gather_busy = 0.0f64;
+    let mut pjrt_busy = 0.0f64;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- stage 1: gather (worker thread) ----
+        let blocking_ref = &blocking;
+        scope.spawn(move || {
+            for h0 in (0..total_hb).step_by(nh_batch) {
+                let g0 = Instant::now();
+                let mut data = vec![0f32; nh_batch * k * bd];
+                blocking_ref.gather(norm, h0, nh_batch, &mut data);
+                let gather_s = g0.elapsed().as_secs_f64();
+                if batch_tx.send(BatchMsg { h0, data, gather_s }).is_err() {
+                    return; // downstream hung up
+                }
+            }
+        });
+
+        // ---- stage 3: sink (worker thread) ----
+        let sink = scope.spawn(move || {
+            let mut recon = Tensor::zeros(blocking_ref.dims.clone());
+            let mut lh_codes = Vec::new();
+            let mut lb_codes = Vec::new();
+            let mut busy = 0.0f64;
+            let mut gather_busy = 0.0;
+            let mut pjrt_busy = 0.0;
+            let mut batches = 0usize;
+            for msg in lat_rx {
+                let s0 = Instant::now();
+                gather_busy += msg.gather_s;
+                pjrt_busy += msg.pjrt_s;
+                batches += 1;
+                let n_here = (total_hb - msg.h0).min(nh_batch);
+                if qh.enabled() {
+                    lh_codes.extend(
+                        msg.lh[..n_here * lh_dim].iter().map(|&v| qh.code(v)),
+                    );
+                }
+                if qb.enabled() {
+                    for hi in 0..n_here {
+                        for j in 0..k {
+                            if blocking_ref.is_valid(msg.h0 + hi, j) {
+                                let r = hi * k + j;
+                                lb_codes.extend(
+                                    msg.lb[r * lb_dim..(r + 1) * lb_dim]
+                                        .iter()
+                                        .map(|&v| qb.code(v)),
+                                );
+                            }
+                        }
+                    }
+                }
+                blocking_ref.scatter(&mut recon, msg.h0, nh_batch, &msg.recon);
+                busy += s0.elapsed().as_secs_f64();
+            }
+            (recon, lh_codes, lb_codes, busy, gather_busy, pjrt_busy, batches)
+        });
+
+        // ---- stage 2: PJRT (this thread — the client is !Send) ----
+        for msg in batch_rx {
+            let p0 = Instant::now();
+            let bt = HostTensor::new(vec![nh_batch, k, bd], msg.data.clone());
+            let mut lh = enc.run(&[theta.clone(), bt])?.remove(0);
+            qh.snap(&mut lh.data);
+            let y = dec.run(&[theta.clone(), lh.clone()])?.remove(0);
+            let resid: Vec<f32> =
+                msg.data.iter().zip(&y.data).map(|(&a, &b)| a - b).collect();
+            let mut lb = benc
+                .run(&[phi.clone(), HostTensor::new(vec![nh_batch * k, bd], resid)])?
+                .remove(0);
+            qb.snap(&mut lb.data);
+            let rhat = bdec.run(&[phi.clone(), lb.clone()])?.remove(0);
+            let recon_batch: Vec<f32> =
+                y.data.iter().zip(&rhat.data).map(|(&a, &b)| a + b).collect();
+            let pjrt_s = p0.elapsed().as_secs_f64();
+            let _ = lat_tx.send(LatentMsg {
+                h0: msg.h0,
+                lh: lh.data,
+                lb: lb.data,
+                recon: recon_batch,
+                gather_s: msg.gather_s,
+                pjrt_s,
+            });
+        }
+        drop(lat_tx);
+        let (r, lh, lb, busy, g, p, batches) =
+            sink.join().map_err(|_| anyhow::anyhow!("sink panicked"))?;
+        recon = r;
+        lh_codes = lh;
+        lb_codes = lb;
+        sink_busy = busy;
+        gather_busy = g;
+        pjrt_busy = p;
+        stats.batches = batches;
+        Ok(())
+    })?;
+
+    stats.hyperblocks = total_hb;
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    stats.gather_busy_s = gather_busy;
+    stats.pjrt_busy_s = pjrt_busy;
+    stats.sink_busy_s = sink_busy;
+    stats.latent_bytes = lh_codes.len() * 4 + lb_codes.len() * 4;
+
+    Ok(StreamOutput { recon, lh_codes, lb_codes, stats })
+}
+
+/// Convenience wrapper: normalize, stream, report.
+pub fn stream_compress(
+    comp: &HierCompressor<'_>,
+    field: &Tensor,
+    queue_depth: usize,
+) -> Result<StreamOutput> {
+    let stats = Normalizer::fit(comp.dataset.normalization, field);
+    let mut norm = field.clone();
+    Normalizer::apply(&stats, &mut norm);
+    stream_forward(comp, &norm, queue_depth)
+}

@@ -1,0 +1,258 @@
+//! Blocking + hyper-blocking (paper §II, Fig. 1 left).
+//!
+//! The field is tiled by the AE block shape (ceil division; edge blocks
+//! zero-padded). Blocks are then grouped into hyper-blocks of `k`
+//! consecutive blocks along the configured `hyper_axis` (time for
+//! S3D/E3SM, toroidal plane for XGC). If the block count along that axis
+//! is not a multiple of `k`, the last group is padded with zero blocks;
+//! the [`BlockLayout`] records validity so scatter ignores padding and CR
+//! accounting can skip it.
+
+use crate::config::DatasetConfig;
+use crate::tensor::{extract_block, scatter_block, Tensor};
+
+/// Resolved blocking geometry for one dataset config.
+#[derive(Debug, Clone)]
+pub struct Blocking {
+    pub dims: Vec<usize>,
+    pub ae_block: Vec<usize>,
+    pub k: usize,
+    pub hyper_axis: usize,
+    /// Blocks along each dim (ceil).
+    pub counts: Vec<usize>,
+    /// Hyper-groups along the hyper axis (ceil of counts[axis]/k).
+    pub hyper_groups: usize,
+}
+
+/// Where hyper-block `h`, slot `j` lives in the field; `None` = padding.
+pub type BlockLayout = Vec<Vec<Option<Vec<usize>>>>;
+
+impl Blocking {
+    pub fn new(cfg: &DatasetConfig) -> Self {
+        let counts: Vec<usize> = cfg
+            .dims
+            .iter()
+            .zip(&cfg.ae_block)
+            .map(|(&d, &b)| d.div_ceil(b))
+            .collect();
+        let hyper_groups = counts[cfg.hyper_axis].div_ceil(cfg.k);
+        Self {
+            dims: cfg.dims.clone(),
+            ae_block: cfg.ae_block.clone(),
+            k: cfg.k,
+            hyper_axis: cfg.hyper_axis,
+            counts,
+            hyper_groups,
+        }
+    }
+
+    pub fn block_dim(&self) -> usize {
+        self.ae_block.iter().product()
+    }
+
+    /// Total hyper-blocks (including ones whose tail slots are padding).
+    pub fn num_hyperblocks(&self) -> usize {
+        let others: usize = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(d, _)| d != self.hyper_axis)
+            .map(|(_, &c)| c)
+            .product();
+        others * self.hyper_groups
+    }
+
+    /// Number of *valid* (non-padding) blocks.
+    pub fn num_blocks(&self) -> usize {
+        self.counts.iter().product()
+    }
+
+    /// Origin of hyper-block `h`, slot `j` (`None` if padding).
+    ///
+    /// Hyper-blocks enumerate the non-hyper axes row-major (outer) with the
+    /// hyper-group index innermost; slot `j` advances along the hyper axis.
+    pub fn origin(&self, h: usize, j: usize) -> Option<Vec<usize>> {
+        assert!(j < self.k);
+        let rank = self.dims.len();
+        let groups = self.hyper_groups;
+        let g = h % groups;
+        let mut rest = h / groups;
+        // decode the non-hyper block coordinates row-major
+        let mut coord = vec![0usize; rank];
+        for d in (0..rank).rev() {
+            if d == self.hyper_axis {
+                continue;
+            }
+            coord[d] = rest % self.counts[d];
+            rest /= self.counts[d];
+        }
+        let axis_idx = g * self.k + j;
+        if axis_idx >= self.counts[self.hyper_axis] {
+            return None; // padding slot
+        }
+        coord[self.hyper_axis] = axis_idx;
+        Some(
+            coord
+                .iter()
+                .zip(&self.ae_block)
+                .map(|(&c, &b)| c * b)
+                .collect(),
+        )
+    }
+
+    /// Full layout table `[num_hyperblocks][k]`.
+    pub fn layout(&self) -> BlockLayout {
+        (0..self.num_hyperblocks())
+            .map(|h| (0..self.k).map(|j| self.origin(h, j)).collect())
+            .collect()
+    }
+
+    /// Extract hyper-blocks `[h0, h0+n)` into a contiguous `[n, k, bd]`
+    /// buffer (padding slots are zero).
+    pub fn gather(&self, t: &Tensor, h0: usize, n: usize, out: &mut [f32]) {
+        let bd = self.block_dim();
+        assert_eq!(out.len(), n * self.k * bd);
+        out.fill(0.0);
+        for hi in 0..n {
+            let h = h0 + hi;
+            if h >= self.num_hyperblocks() {
+                continue; // batch padding beyond the dataset
+            }
+            for j in 0..self.k {
+                if let Some(origin) = self.origin(h, j) {
+                    let slot = &mut out[(hi * self.k + j) * bd..(hi * self.k + j + 1) * bd];
+                    extract_block(t, &origin, &self.ae_block, slot);
+                }
+            }
+        }
+    }
+
+    /// Scatter a `[n, k, bd]` buffer back (inverse of [`Self::gather`];
+    /// padding slots are ignored).
+    pub fn scatter(&self, t: &mut Tensor, h0: usize, n: usize, data: &[f32]) {
+        let bd = self.block_dim();
+        assert_eq!(data.len(), n * self.k * bd);
+        for hi in 0..n {
+            let h = h0 + hi;
+            if h >= self.num_hyperblocks() {
+                continue;
+            }
+            for j in 0..self.k {
+                if let Some(origin) = self.origin(h, j) {
+                    let slot = &data[(hi * self.k + j) * bd..(hi * self.k + j + 1) * bd];
+                    scatter_block(t, &origin, &self.ae_block, slot);
+                }
+            }
+        }
+    }
+
+    /// Is slot `j` of hyper-block `h` a real block?
+    pub fn is_valid(&self, h: usize, j: usize) -> bool {
+        h < self.num_hyperblocks() && self.origin(h, j).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{dataset_preset, DatasetKind, Normalization, Scale};
+
+    fn tiny_cfg() -> DatasetConfig {
+        DatasetConfig {
+            kind: DatasetKind::E3sm,
+            dims: vec![12, 8, 8],
+            ae_block: vec![2, 4, 4],
+            k: 3,
+            hyper_axis: 0,
+            gae_block: vec![1, 4, 4],
+            normalization: Normalization::ZScore,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn counts_and_hyperblocks() {
+        let b = Blocking::new(&tiny_cfg());
+        assert_eq!(b.counts, vec![6, 2, 2]);
+        assert_eq!(b.hyper_groups, 2);
+        assert_eq!(b.num_hyperblocks(), 8);
+        assert_eq!(b.num_blocks(), 24);
+        assert_eq!(b.block_dim(), 32);
+    }
+
+    #[test]
+    fn every_block_appears_exactly_once() {
+        let b = Blocking::new(&tiny_cfg());
+        let mut seen = std::collections::HashSet::new();
+        for h in 0..b.num_hyperblocks() {
+            for j in 0..b.k {
+                if let Some(o) = b.origin(h, j) {
+                    assert!(seen.insert(o.clone()), "duplicate origin {o:?}");
+                }
+            }
+        }
+        assert_eq!(seen.len(), b.num_blocks());
+    }
+
+    #[test]
+    fn padding_when_axis_not_divisible() {
+        // 5 blocks along the hyper axis, k=3 -> group 1 has one padding slot
+        let mut cfg = tiny_cfg();
+        cfg.dims = vec![10, 8, 8]; // 5 blocks of 2
+        let b = Blocking::new(&cfg);
+        assert_eq!(b.hyper_groups, 2);
+        let padded = (0..b.num_hyperblocks())
+            .flat_map(|h| (0..b.k).map(move |j| (h, j)))
+            .filter(|&(h, j)| !b.is_valid(h, j))
+            .count();
+        assert_eq!(padded, 4); // (6-5) padding slot x 4 spatial tiles
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let cfg = tiny_cfg();
+        let b = Blocking::new(&cfg);
+        let n: usize = cfg.dims.iter().product();
+        let t = Tensor::new(cfg.dims.clone(), (0..n).map(|i| i as f32).collect());
+        let nh = b.num_hyperblocks();
+        let mut buf = vec![0f32; nh * b.k * b.block_dim()];
+        b.gather(&t, 0, nh, &mut buf);
+        let mut t2 = Tensor::zeros(cfg.dims.clone());
+        b.scatter(&mut t2, 0, nh, &buf);
+        assert_eq!(t.data(), t2.data());
+    }
+
+    #[test]
+    fn gather_beyond_end_zero_fills() {
+        let cfg = tiny_cfg();
+        let b = Blocking::new(&cfg);
+        let t = Tensor::zeros(cfg.dims.clone());
+        let mut buf = vec![7f32; 2 * b.k * b.block_dim()];
+        b.gather(&t, b.num_hyperblocks() - 1, 2, &mut buf);
+        // the second hyperblock in the batch is past the end -> zeros
+        assert!(buf[b.k * b.block_dim()..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn preset_geometry_matches_paper() {
+        // s3d bench: 50/5 = 10 temporal blocks = exactly one hyper-group
+        let b = Blocking::new(&dataset_preset(DatasetKind::S3d, Scale::Bench));
+        assert_eq!(b.counts[1], 10);
+        assert_eq!(b.hyper_groups, 1);
+        // xgc: 8 planes = k
+        let b = Blocking::new(&dataset_preset(DatasetKind::Xgc, Scale::Bench));
+        assert_eq!(b.counts[0], 8);
+        assert_eq!(b.hyper_groups, 1);
+        assert_eq!(b.k, 8);
+    }
+
+    #[test]
+    fn xgc_hyperblock_is_one_node_across_planes() {
+        let b = Blocking::new(&dataset_preset(DatasetKind::Xgc, Scale::Smoke));
+        // slot j of any hyper-block must differ only in the plane coord
+        let o0 = b.origin(5, 0).unwrap();
+        let o3 = b.origin(5, 3).unwrap();
+        assert_eq!(o0[1..], o3[1..]);
+        assert_eq!(o3[0] - o0[0], 3);
+    }
+}

@@ -1,0 +1,163 @@
+//! Synthetic E3SM PSL surrogate (DESIGN.md §4).
+//!
+//! The real data is hourly sea-level pressure from a 25 km atmosphere run,
+//! cube-to-sphere projected to `[t, lat, lon]`. PSL is globally smooth
+//! with a zonal (latitude) base profile, synoptic-scale traveling waves,
+//! a diurnal cycle, fixed terrain-like spatial bias, and weak red noise —
+//! exactly the ingredients below.
+
+use crate::tensor::Tensor;
+use crate::util::parallel::par_map;
+use crate::util::rng::Rng;
+
+/// Generate `[t, h, w]` (pressure in Pa-like units ~ 101000 ± 3000).
+pub fn generate_e3sm(dims: &[usize], seed: u64) -> Tensor {
+    assert_eq!(dims.len(), 3, "e3sm dims are [t, h, w]");
+    let (t, h, w) = (dims[0], dims[1], dims[2]);
+    let mut rng = Rng::new(seed);
+    let tau = std::f64::consts::TAU;
+
+    // synoptic waves: zonal wavenumbers with eastward phase speeds
+    struct Wave {
+        kx: f64,
+        ky: f64,
+        speed: f64,
+        amp: f64,
+        phase: f64,
+    }
+    let waves: Vec<Wave> = (0..8)
+        .map(|i| Wave {
+            kx: (1 + i % 5) as f64,
+            ky: (1 + i % 3) as f64,
+            speed: rng.range(0.5, 3.0),
+            amp: 400.0 / (1.0 + i as f64),
+            phase: rng.range(0.0, tau),
+        })
+        .collect();
+
+    // fixed terrain-like bias: a few smooth bumps
+    let mut brng = rng.fork(2);
+    let bumps: Vec<(f64, f64, f64, f64)> = (0..6)
+        .map(|_| {
+            (
+                brng.uniform(),
+                brng.uniform(),
+                brng.range(0.05, 0.2),
+                brng.range(-800.0, 800.0),
+            )
+        })
+        .collect();
+
+    // red noise: AR(1) in time per coarse cell, bilinearly upsampled
+    let (gh, gw) = (h.div_ceil(8).max(2), w.div_ceil(8).max(2));
+    let mut nrng = rng.fork(3);
+    let mut red = vec![0.0f64; gh * gw];
+    let mut red_frames: Vec<Vec<f64>> = Vec::with_capacity(t);
+    // small-amplitude red noise: the PSL field's sub-synoptic residual is
+    // tiny relative to the ~8000 Pa dynamic range (noise floor << the
+    // paper's NRMSE targets; DESIGN.md §4)
+    for _ in 0..t {
+        for v in red.iter_mut() {
+            *v = 0.95 * *v + 2.0 * nrng.normal();
+        }
+        red_frames.push(red.clone());
+    }
+
+    let plane = h * w;
+    let frames: Vec<Vec<f32>> = par_map(t, |ti| {
+        let tt = ti as f64;
+        let mut frame = vec![0f32; plane];
+        let rf = &red_frames[ti];
+        for yi in 0..h {
+            let lat = yi as f64 / (h - 1).max(1) as f64; // 0..1 (S->N)
+            // zonal base: subtropical highs / subpolar lows
+            let zonal = 101_000.0 + 1500.0 * (lat * tau).cos() - 900.0 * ((lat - 0.5) * 2.0 * tau).cos();
+            for xi in 0..w {
+                let lon = xi as f64 / w as f64;
+                let mut v = zonal;
+                // diurnal cycle (hourly timesteps, period 24)
+                v += 120.0 * ((tt / 24.0 + lon) * tau).sin();
+                for wv in &waves {
+                    v += wv.amp
+                        * ((wv.kx * lon + wv.ky * lat) * tau - wv.speed * tt * 0.05 * tau
+                            + wv.phase)
+                            .sin()
+                        * (0.3 + 0.7 * (lat * std::f64::consts::PI).sin()); // mid-lat emphasis
+                }
+                for &(bx, by, bw, bamp) in &bumps {
+                    let mut dx = (lon - bx).abs();
+                    dx = dx.min(1.0 - dx); // periodic longitude
+                    let d2 = dx * dx + (lat - by) * (lat - by);
+                    v += bamp * (-d2 / (2.0 * bw * bw)).exp();
+                }
+                // upsample red noise bilinearly
+                let gy = lat * (gh - 1) as f64;
+                let gx = lon * (gw - 1) as f64;
+                let (y0, x0) = (gy as usize, gx as usize);
+                let (y1, x1) = ((y0 + 1).min(gh - 1), (x0 + 1).min(gw - 1));
+                let (fy, fx) = (gy - y0 as f64, gx - x0 as f64);
+                let n = rf[y0 * gw + x0] * (1.0 - fy) * (1.0 - fx)
+                    + rf[y0 * gw + x1] * (1.0 - fy) * fx
+                    + rf[y1 * gw + x0] * fy * (1.0 - fx)
+                    + rf[y1 * gw + x1] * fy * fx;
+                v += n;
+                frame[yi * w + xi] = v as f32;
+            }
+        }
+        frame
+    });
+
+    let mut data = Vec::with_capacity(t * plane);
+    for f in frames {
+        data.extend(f);
+    }
+    Tensor::new(dims.to_vec(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realistic_pressure_range() {
+        let t = generate_e3sm(&[6, 24, 48], 1);
+        assert!(t.min() > 90_000.0, "min {}", t.min());
+        assert!(t.max() < 112_000.0, "max {}", t.max());
+        assert!((t.mean() - 101_000.0).abs() < 3_000.0, "mean {}", t.mean());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_e3sm(&[4, 16, 32], 7);
+        let b = generate_e3sm(&[4, 16, 32], 7);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn spatially_smooth() {
+        // neighbor diffs tiny vs field range
+        let t = generate_e3sm(&[2, 32, 64], 3);
+        let w = 64;
+        let mut max_step = 0f32;
+        let frame = &t.data()[0..32 * 64];
+        for y in 0..32 {
+            for x in 0..w - 1 {
+                max_step = max_step.max((frame[y * w + x + 1] - frame[y * w + x]).abs());
+            }
+        }
+        assert!(max_step < 0.15 * t.range(), "{max_step} vs {}", t.range());
+    }
+
+    #[test]
+    fn temporally_correlated() {
+        let t = generate_e3sm(&[12, 16, 32], 5);
+        let plane = 16 * 32;
+        let d01: f64 = (0..plane)
+            .map(|i| (t.data()[i] - t.data()[plane + i]).abs() as f64)
+            .sum();
+        let d0n: f64 = (0..plane)
+            .map(|i| (t.data()[i] - t.data()[11 * plane + i]).abs() as f64)
+            .sum();
+        assert!(d01 < d0n, "adjacent {d01} vs distant {d0n}");
+    }
+}

@@ -1,0 +1,74 @@
+//! Raw little-endian f32 file I/O — the interchange format scientific
+//! codes (and SZ3/ZFP CLIs) use for field dumps.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// Write a tensor as raw little-endian f32 (shape is external metadata).
+pub fn write_f32_file(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for &v in t.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a raw little-endian f32 file into a tensor of the given shape.
+pub fn read_f32_file(path: impl AsRef<Path>, shape: Vec<usize>) -> Result<Tensor> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let expected: usize = shape.iter().product();
+    let mut r = BufReader::new(f);
+    let mut bytes = Vec::with_capacity(expected * 4);
+    r.read_to_end(&mut bytes)?;
+    ensure!(
+        bytes.len() == expected * 4,
+        "{}: {} bytes != shape {:?} ({} bytes)",
+        path.display(),
+        bytes.len(),
+        shape,
+        expected * 4
+    );
+    let data = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Tensor::new(shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("attn_reduce_io_test");
+        let path = dir.join("t.f32");
+        let t = Tensor::new(vec![2, 3], vec![1.5, -2.25, 0.0, f32::MIN, f32::MAX, 3.0]);
+        write_f32_file(&path, &t).unwrap();
+        let back = read_f32_file(&path, vec![2, 3]).unwrap();
+        assert_eq!(back.data(), t.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let dir = std::env::temp_dir().join("attn_reduce_io_test2");
+        let path = dir.join("t.f32");
+        write_f32_file(&path, &Tensor::from_vec(vec![1.0, 2.0])).unwrap();
+        assert!(read_f32_file(&path, vec![3]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

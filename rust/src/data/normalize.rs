@@ -1,0 +1,198 @@
+//! Normalization (paper §III-A): z-score over the field (E3SM, XGC) or
+//! per-species mean-0 / range-1 (S3D). Stats are stored in the archive
+//! header so decompression can denormalize.
+
+use crate::config::Normalization;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// Per-channel affine stats: `x_norm = (x - offset) / scale`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormStats {
+    pub kind: Normalization,
+    /// One `(offset, scale)` per channel (1 channel for z-score, one per
+    /// species for S3D). Scale is guaranteed non-zero.
+    pub channels: Vec<(f64, f64)>,
+}
+
+impl NormStats {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s(self.kind.name())),
+            (
+                "channels",
+                Value::Arr(
+                    self.channels
+                        .iter()
+                        .map(|&(o, s)| Value::Arr(vec![Value::Num(o), Value::Num(s)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let kind = Normalization::parse(v.req("kind")?.as_str().unwrap_or(""))?;
+        let channels = v
+            .req("channels")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("channels not array"))?
+            .iter()
+            .map(|pair| {
+                let o = pair.idx(0).and_then(|x| x.as_f64()).unwrap_or(0.0);
+                let s = pair.idx(1).and_then(|x| x.as_f64()).unwrap_or(1.0);
+                (o, s)
+            })
+            .collect();
+        Ok(Self { kind, channels })
+    }
+}
+
+/// Fits and applies normalization.
+pub struct Normalizer;
+
+impl Normalizer {
+    /// Fit stats on `t`. For [`Normalization::PerSpeciesMeanRange`] the
+    /// first dim is the species/channel axis.
+    pub fn fit(kind: Normalization, t: &Tensor) -> NormStats {
+        match kind {
+            Normalization::ZScore => {
+                let mean = t.mean();
+                let std = t.std().max(1e-30);
+                NormStats { kind, channels: vec![(mean, std)] }
+            }
+            Normalization::PerSpeciesMeanRange => {
+                let species = t.shape()[0];
+                let per = t.len() / species;
+                let channels = (0..species)
+                    .map(|s| {
+                        let slice = &t.data()[s * per..(s + 1) * per];
+                        let mean =
+                            slice.iter().map(|&x| x as f64).sum::<f64>() / per as f64;
+                        let mut lo = f64::INFINITY;
+                        let mut hi = f64::NEG_INFINITY;
+                        for &x in slice {
+                            lo = lo.min(x as f64);
+                            hi = hi.max(x as f64);
+                        }
+                        let range = (hi - lo).max(1e-30);
+                        (mean, range)
+                    })
+                    .collect();
+                NormStats { kind, channels }
+            }
+        }
+    }
+
+    /// Normalize in place.
+    pub fn apply(stats: &NormStats, t: &mut Tensor) {
+        match stats.kind {
+            Normalization::ZScore => {
+                let (o, s) = stats.channels[0];
+                for v in t.data_mut() {
+                    *v = ((*v as f64 - o) / s) as f32;
+                }
+            }
+            Normalization::PerSpeciesMeanRange => {
+                let species = stats.channels.len();
+                let per = t.len() / species;
+                for (si, &(o, s)) in stats.channels.iter().enumerate() {
+                    for v in &mut t.data_mut()[si * per..(si + 1) * per] {
+                        *v = ((*v as f64 - o) / s) as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Invert normalization in place.
+    pub fn invert(stats: &NormStats, t: &mut Tensor) {
+        match stats.kind {
+            Normalization::ZScore => {
+                let (o, s) = stats.channels[0];
+                for v in t.data_mut() {
+                    *v = (*v as f64 * s + o) as f32;
+                }
+            }
+            Normalization::PerSpeciesMeanRange => {
+                let species = stats.channels.len();
+                let per = t.len() / species;
+                for (si, &(o, s)) in stats.channels.iter().enumerate() {
+                    for v in &mut t.data_mut()[si * per..(si + 1) * per] {
+                        *v = (*v as f64 * s + o) as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_tensor(shape: Vec<usize>, seed: u64, scale: f64, off: f64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n = shape.iter().product();
+        Tensor::new(
+            shape,
+            (0..n).map(|_| (rng.normal() * scale + off) as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn zscore_standardizes_and_inverts() {
+        let mut t = random_tensor(vec![10, 20], 1, 250.0, 101_000.0);
+        let orig = t.clone();
+        let stats = Normalizer::fit(Normalization::ZScore, &t);
+        Normalizer::apply(&stats, &mut t);
+        assert!(t.mean().abs() < 1e-3);
+        assert!((t.std() - 1.0).abs() < 1e-3);
+        Normalizer::invert(&stats, &mut t);
+        for (a, b) in t.data().iter().zip(orig.data()) {
+            assert!((a - b).abs() < 0.1, "{a} vs {b}"); // f32 at 1e5 magnitude
+        }
+    }
+
+    #[test]
+    fn per_species_mean0_range1() {
+        let mut t = Tensor::new(
+            vec![2, 4],
+            vec![0.0, 1.0, 2.0, 3.0, 100.0, 200.0, 300.0, 400.0],
+        );
+        let stats = Normalizer::fit(Normalization::PerSpeciesMeanRange, &t);
+        Normalizer::apply(&stats, &mut t);
+        for s in 0..2 {
+            let slice = &t.data()[s * 4..(s + 1) * 4];
+            let mean: f32 = slice.iter().sum::<f32>() / 4.0;
+            let range = slice.iter().cloned().fold(f32::MIN, f32::max)
+                - slice.iter().cloned().fold(f32::MAX, f32::min);
+            assert!(mean.abs() < 1e-6, "species {s} mean {mean}");
+            assert!((range - 1.0).abs() < 1e-6, "species {s} range {range}");
+        }
+    }
+
+    #[test]
+    fn constant_channel_does_not_divide_by_zero() {
+        let mut t = Tensor::new(vec![1, 4], vec![5.0; 4]);
+        let stats = Normalizer::fit(Normalization::PerSpeciesMeanRange, &t);
+        Normalizer::apply(&stats, &mut t);
+        assert!(t.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stats_json_round_trip() {
+        let t = random_tensor(vec![3, 8], 2, 1.0, 0.0);
+        let stats = Normalizer::fit(Normalization::PerSpeciesMeanRange, &t);
+        let v = stats.to_json();
+        let back = NormStats::from_json(&Value::parse(&v.to_string_compact()).unwrap())
+            .unwrap();
+        assert_eq!(back.kind, stats.kind);
+        assert_eq!(back.channels.len(), stats.channels.len());
+        for (a, b) in back.channels.iter().zip(&stats.channels) {
+            assert!((a.0 - b.0).abs() < 1e-12 && (a.1 - b.1).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Synthetic XGC F-data surrogate (DESIGN.md §4).
+//!
+//! The real data is a gyrokinetic particle distribution: at each of 16 395
+//! mesh nodes on each of 8 toroidal cross-sections, a 39x39 2-D velocity
+//! histogram (`v_parallel` x `v_perp`). Physically these are near-
+//! bi-Maxwellian with temperature/flow varying smoothly over the mesh,
+//! and the 8 toroidal planes are near-copies (the paper aggregates the 8
+//! histograms at one node into a hyper-block precisely because of that).
+//!
+//! We generate anisotropic Gaussians whose moments (density, parallel
+//! flow, T_par, T_perp) vary smoothly with node index, identical across
+//! planes up to a small phase perturbation + noise.
+
+use crate::tensor::Tensor;
+use crate::util::parallel::par_map;
+use crate::util::rng::Rng;
+
+/// Generate `[planes, nodes, vx, vy]`.
+pub fn generate_xgc(dims: &[usize], seed: u64) -> Tensor {
+    assert_eq!(dims.len(), 4, "xgc dims are [planes, nodes, vx, vy]");
+    let (planes, nodes, nvx, nvy) = (dims[0], dims[1], dims[2], dims[3]);
+    let tau = std::f64::consts::TAU;
+
+    // smooth node profiles via a few Fourier components over node index
+    let mut rng = Rng::new(seed);
+    let comps: Vec<(f64, f64, f64)> = (0..5)
+        .map(|i| (rng.range(0.5, 3.0) * (i + 1) as f64, rng.range(0.0, tau), rng.uniform()))
+        .collect();
+    let profile = |x: f64, which: usize| -> f64 {
+        let mut v = 0.0;
+        for (j, &(k, ph, a)) in comps.iter().enumerate() {
+            v += a * ((k * x + ph + which as f64 * 1.7 + j as f64) * tau * 0.2).sin();
+        }
+        v / comps.len() as f64
+    };
+
+    let hist = nvx * nvy;
+    let per_plane = nodes * hist;
+    let frames: Vec<Vec<f32>> = par_map(planes * nodes, |pn| {
+        let plane = pn / nodes;
+        let node = pn % nodes;
+        let x = node as f64 / nodes.max(2) as f64;
+        // plane-to-plane perturbation is small (strong toroidal correlation)
+        let eps = 0.015 * plane as f64;
+        let density = 1.0 + 0.5 * profile(x, 0) + 0.02 * (plane as f64 * 2.1).sin();
+        let u_par = 0.25 * profile(x + eps, 1); // parallel flow shift
+        let t_par = (0.8 + 0.4 * profile(x + eps, 2)).max(0.25);
+        let t_perp = (0.8 + 0.4 * profile(x + eps, 3)).max(0.25);
+        let mut nrng = Rng::new(seed ^ (pn as u64).wrapping_mul(0x9E37));
+        let mut out = vec![0f32; hist];
+        for ix in 0..nvx {
+            let vx = (ix as f64 / (nvx - 1) as f64 - 0.5) * 6.0; // v_par grid
+            for iy in 0..nvy {
+                let vy = iy as f64 / (nvy - 1) as f64 * 3.0; // v_perp >= 0
+                let e = ((vx - u_par) * (vx - u_par)) / (2.0 * t_par)
+                    + (vy * vy) / (2.0 * t_perp);
+                // v_perp Jacobian (gyro average) ~ vy
+                let f = density * (vy + 0.05) * (-e).exp();
+                // particle-count shot noise, kept below the paper's NRMSE
+                // targets (DESIGN.md §4)
+                let noise = 1.0 + 5e-4 * nrng.normal();
+                out[ix * nvy + iy] = (f * noise) as f32;
+            }
+        }
+        out
+    });
+
+    let mut data = vec![0f32; planes * per_plane];
+    for (pn, h) in frames.into_iter().enumerate() {
+        let plane = pn / nodes;
+        let node = pn % nodes;
+        let off = plane * per_plane + node * hist;
+        data[off..off + hist].copy_from_slice(&h);
+    }
+    Tensor::new(dims.to_vec(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_nonneg() {
+        let t = generate_xgc(&[2, 8, 13, 13], 1);
+        assert_eq!(t.shape(), &[2, 8, 13, 13]);
+        assert!(t.min() >= 0.0, "distribution function is non-negative");
+        assert!(t.max() > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate_xgc(&[2, 4, 9, 9], 3);
+        let b = generate_xgc(&[2, 4, 9, 9], 3);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn planes_strongly_correlated() {
+        // the 8 toroidal cross-sections at one node must be near-copies
+        let t = generate_xgc(&[4, 6, 15, 15], 5);
+        let hist = 15 * 15;
+        let per_plane = 6 * hist;
+        for node in 0..6 {
+            let h0 = &t.data()[node * hist..(node + 1) * hist];
+            let h3 = &t.data()[3 * per_plane + node * hist..3 * per_plane + (node + 1) * hist];
+            let num: f64 = h0.iter().zip(h3).map(|(&a, &b)| (a as f64) * b as f64).sum();
+            let na: f64 = h0.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+            let nb: f64 = h3.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+            let cos = num / (na * nb + 1e-30);
+            assert!(cos > 0.98, "node {node}: plane cos-sim {cos}");
+        }
+    }
+
+    #[test]
+    fn histograms_vary_across_nodes() {
+        let t = generate_xgc(&[1, 16, 15, 15], 7);
+        let hist = 15 * 15;
+        let h0 = &t.data()[0..hist];
+        let h8 = &t.data()[8 * hist..9 * hist];
+        let diff: f64 = h0.iter().zip(h8).map(|(&a, &b)| ((a - b) as f64).abs()).sum();
+        assert!(diff > 1e-3, "nodes should differ, diff={diff}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment harness: one runner per table/figure of the paper
+//! (DESIGN.md §6). Each writes CSV rows into `results/<id>/` and prints
+//! an ASCII rendering.
+
+mod plot;
+mod runners;
+
+pub use plot::{ascii_curves, Series};
+pub use runners::{run_experiment, EXPERIMENTS};
+
+use crate::Result;
+use std::io::Write;
+
+/// Append-or-create a CSV file with a header.
+pub struct Csv {
+    path: std::path::PathBuf,
+    rows: Vec<String>,
+    header: String,
+}
+
+impl Csv {
+    pub fn new(dir: &str, name: &str, header: &str) -> Self {
+        Self {
+            path: std::path::Path::new("results").join(dir).join(name),
+            rows: Vec::new(),
+            header: header.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.join(","));
+    }
+
+    pub fn rowf(&mut self, cells: std::fmt::Arguments<'_>) {
+        self.rows.push(format!("{cells}"));
+    }
+
+    pub fn save(&self) -> Result<std::path::PathBuf> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(&self.path)?;
+        writeln!(f, "{}", self.header)?;
+        for r in &self.rows {
+            writeln!(f, "{r}")?;
+        }
+        Ok(self.path.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_rows() {
+        let mut c = Csv::new("test_csv", "t.csv", "a,b");
+        c.row(&["1".into(), "2".into()]);
+        c.rowf(format_args!("{},{}", 3, 4.5));
+        let path = c.save().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4.5\n");
+        std::fs::remove_dir_all("results/test_csv").ok();
+    }
+}

@@ -1,0 +1,113 @@
+//! ASCII log-log curve plotting for terminal output of the figure
+//! experiments (CR on x, NRMSE on y — the paper's Fig. 4/5/6/9 axes).
+
+/// One labelled curve.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    /// `(x, y)` points (e.g. compression ratio, NRMSE).
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Self { label: label.into(), points }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+/// Render curves on a log-log grid.
+pub fn ascii_curves(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    let (w, h) = (72usize, 22usize);
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|&(x, y)| x > 0.0 && y > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}: (no points)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x.log10());
+        x1 = x1.max(x.log10());
+        y0 = y0.min(y.log10());
+        y1 = y1.max(y.log10());
+    }
+    if (x1 - x0).abs() < 1e-9 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-9 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; w]; h];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if x <= 0.0 || y <= 0.0 {
+                continue;
+            }
+            let gx = ((x.log10() - x0) / (x1 - x0) * (w - 1) as f64).round() as usize;
+            let gy = ((y.log10() - y0) / (y1 - y0) * (h - 1) as f64).round() as usize;
+            grid[h - 1 - gy.min(h - 1)][gx.min(w - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==  (log-log; y: {ylabel}, x: {xlabel})\n"));
+    for (i, row) in grid.iter().enumerate() {
+        let ylab = if i == 0 {
+            format!("{:8.1e}", 10f64.powf(y1))
+        } else if i == h - 1 {
+            format!("{:8.1e}", 10f64.powf(y0))
+        } else {
+            "        ".to_string()
+        };
+        out.push_str(&format!("{ylab} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "          {:<10.3e}{:>width$.3e}\n",
+        10f64.powf(x0),
+        10f64.powf(x1),
+        width = w - 8
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "          {} = {} ({} pts)\n",
+            GLYPHS[si % GLYPHS.len()],
+            s.label,
+            s.points.len()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panic() {
+        let s = vec![
+            Series::new("ours", vec![(10.0, 1e-3), (100.0, 1e-2), (1000.0, 1e-1)]),
+            Series::new("sz3", vec![(5.0, 1e-3), (50.0, 1e-2)]),
+        ];
+        let out = ascii_curves("Fig 6", "CR", "NRMSE", &s);
+        assert!(out.contains("ours"));
+        assert!(out.contains('*'));
+        assert!(out.lines().count() > 20);
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let out = ascii_curves("empty", "x", "y", &[Series::new("none", vec![])]);
+        assert!(out.contains("no points"));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let out = ascii_curves("p", "x", "y", &[Series::new("one", vec![(1.0, 1.0)])]);
+        assert!(out.contains("one"));
+    }
+}

@@ -1,0 +1,753 @@
+//! Experiment runners — one per table/figure of the paper (DESIGN.md §6).
+//!
+//! Every runner writes CSV rows under `results/<id>/` and prints an ASCII
+//! rendering; EXPERIMENTS.md records paper-vs-measured for each. Default
+//! training is shortened vs the paper (CPU box); `--steps` raises it.
+
+use std::path::PathBuf;
+
+use crate::baselines::{GbaeCompressor, Sz3Like, ZfpLike};
+use crate::compressor::{
+    log_histogram, mean_channel_nrmse, nrmse, nrmse_per_channel, relative_point_errors,
+    HierCompressor,
+};
+use crate::config::{
+    dataset_preset, model_preset, DatasetConfig, DatasetKind, ModelConfig,
+    PipelineConfig, Scale, TrainConfig,
+};
+use crate::data;
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::train::train_bae;
+use crate::util::cli::Args;
+use crate::Result;
+
+use super::{ascii_curves, Csv, Series};
+
+/// Known experiment ids.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+];
+
+/// Dispatch an experiment by id.
+pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => table1(args),
+        "table2" => table2(args),
+        "fig4" => fig4(args),
+        "fig5" => fig5(args),
+        "fig6" => fig6(args),
+        "fig7" => fig7(args),
+        "fig8" => fig8(args),
+        "fig9" => fig9(args),
+        _ => anyhow::bail!("unknown experiment {id:?} (have: {EXPERIMENTS:?})"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared context
+// ---------------------------------------------------------------------------
+
+struct Ctx {
+    rt: Runtime,
+    ckpt: PathBuf,
+    scale: Scale,
+    train: TrainConfig,
+}
+
+fn ctx(args: &Args) -> Result<Ctx> {
+    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let ckpt = PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
+    std::fs::create_dir_all(&ckpt)?;
+    let scale = Scale::parse(args.get_or("scale", "bench"))?;
+    let mut train = TrainConfig::default();
+    train.steps = args.get_usize("steps", 200)?;
+    train.log_every = 50;
+    Ok(Ctx { rt, ckpt, scale, train })
+}
+
+/// NRMSE metric matching the paper's reporting (mean per-species for S3D).
+fn report_nrmse(kind: DatasetKind, orig: &Tensor, recon: &Tensor) -> f64 {
+    match kind {
+        DatasetKind::S3d => mean_channel_nrmse(orig, recon),
+        _ => nrmse(orig, recon),
+    }
+}
+
+/// Train/load a custom (hbae, [baes...]) stack with checkpoint names that
+/// encode the full stack (fig-4 sweeps share HBAEs across BAE variants).
+fn prepare_stack<'a>(
+    c: &'a Ctx,
+    dataset: &DatasetConfig,
+    hbae_group: &str,
+    bae_groups: &[&str],
+    field: &Tensor,
+) -> Result<HierCompressor<'a>> {
+    use crate::data::Normalizer;
+    let stats = Normalizer::fit(dataset.normalization, field);
+    let mut norm = field.clone();
+    Normalizer::apply(&stats, &mut norm);
+
+    let hpath = c.ckpt.join(format!("{hbae_group}.ckpt"));
+    let hbae = if hpath.exists() {
+        ParamStore::load(&hpath, hbae_group)?
+    } else {
+        let mut store = ParamStore::init(&c.rt, hbae_group)?;
+        let blocking = crate::data::Blocking::new(dataset);
+        let rep = crate::train::train_hbae(&c.rt, &mut store, &blocking, &norm, &c.train)?;
+        eprintln!("[exp] {}", rep.summary());
+        store.save(&hpath)?;
+        store
+    };
+    let mut comp = HierCompressor {
+        rt: &c.rt,
+        dataset: dataset.clone(),
+        model: ModelConfig {
+            hbae_group: hbae_group.to_string(),
+            bae_group: bae_groups.first().unwrap_or(&"").to_string(),
+            pipe_group: None,
+            bin_hbae: 0.0,
+            bin_bae: 0.0,
+        },
+        hbae,
+        baes: Vec::new(),
+    };
+    let mut tag = hbae_group.to_string();
+    for g in bae_groups {
+        tag = format!("{tag}+{g}");
+        let bpath = c.ckpt.join(format!("{tag}.ckpt"));
+        let bae = if bpath.exists() {
+            ParamStore::load(&bpath, g)?
+        } else {
+            let resid = comp.stack_residuals(&norm)?;
+            let mut store = ParamStore::init(&c.rt, g)?;
+            let rep = train_bae(&c.rt, &mut store, &resid, dataset.block_dim(), &c.train)?;
+            eprintln!("[exp] {}", rep.summary());
+            store.save(&bpath)?;
+            store
+        };
+        comp.baes.push(bae);
+    }
+    Ok(comp)
+}
+
+/// One (CR, NRMSE) point from the hierarchical stack.
+fn hier_point(
+    kind: DatasetKind,
+    comp: &HierCompressor<'_>,
+    field: &Tensor,
+    tau: f32,
+) -> Result<(f64, f64)> {
+    let (archive, recon) = comp.compress(field, tau)?;
+    let stats = comp.stats(&archive);
+    Ok((stats.cr, report_nrmse(kind, field, &recon)))
+}
+
+// ---------------------------------------------------------------------------
+// Table I — dataset info
+// ---------------------------------------------------------------------------
+
+fn table1(_args: &Args) -> Result<()> {
+    let mut csv = Csv::new("table1", "table1.csv", "application,domain,scale,dims,total_mb");
+    println!("\nTable I: Datasets Information (paper vs bench substitutes)");
+    println!("{:<8} {:<12} {:<7} {:<28} {:>10}", "app", "domain", "scale", "dims", "size");
+    for (kind, domain) in [
+        (DatasetKind::S3d, "Combustion"),
+        (DatasetKind::E3sm, "Climate"),
+        (DatasetKind::Xgc, "Plasma"),
+    ] {
+        for scale in [Scale::Paper, Scale::Bench] {
+            let cfg = dataset_preset(kind, scale);
+            let mb = cfg.total_points() as f64 * 4.0 / 1e6;
+            let dims = format!("{:?}", cfg.dims);
+            let sname = if scale == Scale::Paper { "paper" } else { "bench" };
+            println!(
+                "{:<8} {:<12} {:<7} {:<28} {:>8.1} MB",
+                kind.name(), domain, sname, dims, mb
+            );
+            csv.row(&[
+                kind.name().into(),
+                domain.into(),
+                sname.into(),
+                format!("{:?}", cfg.dims).replace(',', "x"),
+                format!("{mb:.1}"),
+            ]);
+        }
+    }
+    let p = csv.save()?;
+    println!("-> {}", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table II — quantization bin sweep, HBAE-only vs BAE-only
+// ---------------------------------------------------------------------------
+
+fn table2(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let mut csv = Csv::new("table2", "table2.csv", "dataset,quantized_ae,bin,nrmse");
+    println!("\nTable II: reconstruction error vs quantization bin size");
+    for kind in [DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc] {
+        let bins: &[f64] = match kind {
+            DatasetKind::S3d => &[0.005, 0.01, 0.05, 0.1, 0.5],
+            DatasetKind::E3sm => &[0.001, 0.005, 0.01, 0.05, 0.1],
+            DatasetKind::Xgc => &[0.05, 0.1, 0.2, 0.4, 0.8],
+        };
+        let dataset = dataset_preset(kind, c.scale);
+        let field = data::generate(&dataset);
+        let model = model_preset(kind);
+        let mut comp = prepare_stack(&c, &dataset, &model.hbae_group, &[&model.bae_group], &field)?;
+        for which in ["HBAE", "BAE"] {
+            print!("{:<5} {:<5}", kind.name(), which);
+            for &bin in bins {
+                comp.model.bin_hbae = if which == "HBAE" { bin as f32 } else { 0.0 };
+                comp.model.bin_bae = if which == "BAE" { bin as f32 } else { 0.0 };
+                let (_, recon) = comp.compress(&field, 0.0)?;
+                let e = report_nrmse(kind, &field, &recon);
+                print!("  {bin}:{e:.2e}");
+                csv.row(&[
+                    kind.name().into(),
+                    which.into(),
+                    bin.to_string(),
+                    format!("{e:.4e}"),
+                ]);
+            }
+            println!();
+        }
+    }
+    let p = csv.save()?;
+    println!("-> {}", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — latent-size ablation on S3D
+// ---------------------------------------------------------------------------
+
+// Trimmed vs the paper's grids (8..128 x 32..256) to keep the full
+// battery CPU-tractable; pass --full for the complete sweep.
+const BAE_SWEEP: &[usize] = &[8, 16, 64];
+const HBAE_SWEEP: &[usize] = &[32, 128, 256];
+const BAE_SWEEP_FULL: &[usize] = &[8, 16, 32, 64, 128];
+const HBAE_SWEEP_FULL: &[usize] = &[32, 64, 128, 256];
+
+fn sweeps(args: &Args) -> (&'static [usize], &'static [usize]) {
+    if args.flag("full") {
+        (BAE_SWEEP_FULL, HBAE_SWEEP_FULL)
+    } else {
+        (BAE_SWEEP, HBAE_SWEEP)
+    }
+}
+
+fn fig4(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let (bae_sweep, hbae_sweep) = sweeps(args);
+    let kind = DatasetKind::S3d;
+    let dataset = dataset_preset(kind, c.scale);
+    let field = data::generate(&dataset);
+    let mut csv = Csv::new("fig4", "fig4.csv", "series,cr,nrmse");
+    let mut series = Vec::new();
+
+    // Baseline: block AE with latent sweep (no quant, no GAE — §III-D)
+    let mut pts = Vec::new();
+    for &lb in bae_sweep {
+        let group = format!("s3d_bae_L{lb}");
+        let (gb, _) = GbaeCompressor::prepare(
+            &c.rt, &dataset, &group, &c.ckpt, &field, &c.train, None,
+        )?;
+        let res = gb.compress(&field, 0.0, 0.0)?;
+        let cr = (dataset.total_points() * 4) as f64 / res.payload_bytes as f64;
+        let e = report_nrmse(kind, &field, &res.recon);
+        csv.row(&["Baseline".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("Baseline", pts));
+
+    // HierAE-N: HBAE latent sweep x BAE latent sweep
+    for &lh in hbae_sweep {
+        let hbae_group = format!("s3d_hbae_L{lh}");
+        let mut pts = Vec::new();
+        for &lb in bae_sweep {
+            let bae_group = format!("s3d_bae_L{lb}");
+            let comp = prepare_stack(&c, &dataset, &hbae_group, &[&bae_group], &field)?;
+            let (cr, e) = hier_point(kind, &comp, &field, 0.0)?;
+            csv.row(&[format!("HierAE-{lh}"), format!("{cr:.2}"), format!("{e:.4e}")]);
+            pts.push((cr, e));
+        }
+        series.push(Series::new(format!("HierAE-{lh}"), pts));
+    }
+
+    // StackAE: one HBAE-128 + two residual BAEs
+    let mut pts = Vec::new();
+    for &lb in &[8usize, 16] {
+        let bg = format!("s3d_bae_L{lb}");
+        let comp = prepare_stack(&c, &dataset, "s3d_hbae_L128", &[&bg, &bg], &field)?;
+        let (cr, e) = hier_point(kind, &comp, &field, 0.0)?;
+        csv.row(&["StackAE".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("StackAE", pts));
+
+    println!("{}", ascii_curves("Fig. 4 — latent ablation (S3D)", "CR", "NRMSE", &series));
+    let p = csv.save()?;
+    println!("-> {}", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — component ablation on S3D
+// ---------------------------------------------------------------------------
+
+fn fig5(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let (bae_sweep, hbae_sweep) = sweeps(args);
+    let kind = DatasetKind::S3d;
+    let dataset = dataset_preset(kind, c.scale);
+    let field = data::generate(&dataset);
+    let mut csv = Csv::new("fig5", "fig5.csv", "series,cr,nrmse");
+    let mut series = Vec::new();
+
+    // Baseline (same as fig4)
+    let mut pts = Vec::new();
+    for &lb in bae_sweep {
+        let group = format!("s3d_bae_L{lb}");
+        let (gb, _) = GbaeCompressor::prepare(
+            &c.rt, &dataset, &group, &c.ckpt, &field, &c.train, None,
+        )?;
+        let res = gb.compress(&field, 0.0, 0.0)?;
+        let cr = (dataset.total_points() * 4) as f64 / res.payload_bytes as f64;
+        let e = report_nrmse(kind, &field, &res.recon);
+        csv.row(&["Baseline".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("Baseline", pts));
+
+    // HBAE-woa and HBAE: hyper-block AE alone, latent sweep, +/- attention
+    for (label, suffix) in [("HBAE-woa", "_woa"), ("HBAE", "")] {
+        let mut pts = Vec::new();
+        for &lh in hbae_sweep {
+            let group = format!("s3d_hbae_L{lh}{suffix}");
+            let comp = prepare_stack(&c, &dataset, &group, &[], &field)?;
+            let (cr, e) = hier_point(kind, &comp, &field, 0.0)?;
+            csv.row(&[label.into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+            pts.push((cr, e));
+        }
+        series.push(Series::new(label, pts));
+    }
+
+    // full HierAE (HBAE-128 + BAE sweep)
+    let mut pts = Vec::new();
+    for &lb in bae_sweep {
+        let bg = format!("s3d_bae_L{lb}");
+        let comp = prepare_stack(&c, &dataset, "s3d_hbae_L128", &[&bg], &field)?;
+        let (cr, e) = hier_point(kind, &comp, &field, 0.0)?;
+        csv.row(&["HierAE".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("HierAE", pts));
+
+    println!("{}", ascii_curves("Fig. 5 — component ablation (S3D)", "CR", "NRMSE", &series));
+    let p = csv.save()?;
+    println!("-> {}", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — comparison vs SZ3-like / ZFP-like (+ GBAE/GAETC on S3D)
+// ---------------------------------------------------------------------------
+
+fn fig6_one(c: &Ctx, kind: DatasetKind, csv: &mut Csv) -> Result<Vec<Series>> {
+    let dataset = dataset_preset(kind, c.scale);
+    let field = data::generate(&dataset);
+    let model = model_preset(kind);
+    let mut series = Vec::new();
+
+    // ours: trained stack + paper quant bins + tau sweep
+    let mut comp =
+        prepare_stack(c, &dataset, &model.hbae_group, &[&model.bae_group], &field)?;
+    comp.model.bin_hbae = model.bin_hbae;
+    comp.model.bin_bae = model.bin_bae;
+    let mut pts = Vec::new();
+    for target in [3e-3f64, 1e-3, 3e-4, 1e-4] {
+        let tau = PipelineConfig::tau_for_nrmse(
+            target,
+            field.range() as f64,
+            dataset.gae_block_len(),
+        );
+        let (cr, e) = hier_point(kind, &comp, &field, tau)?;
+        csv.row(&[kind.name().into(), "ours".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("ours", pts));
+
+    // SZ3-like: pointwise eps sweep
+    let mut pts = Vec::new();
+    for rel in [3e-3f32, 1e-3, 3e-4, 1e-4, 3e-5] {
+        let eps = rel * field.range();
+        let bytes = Sz3Like::new(eps).compress(&field)?;
+        let back = Sz3Like::decompress(&bytes)?;
+        let cr = (field.len() * 4) as f64 / bytes.len() as f64;
+        let e = report_nrmse(kind, &field, &back);
+        csv.row(&[kind.name().into(), "sz3".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("SZ3-like", pts));
+
+    // ZFP-like: precision sweep
+    let mut pts = Vec::new();
+    for p in [6u32, 8, 10, 12, 14, 16] {
+        let bytes = ZfpLike::new(p).compress(&field)?;
+        let back = ZfpLike::decompress(&bytes)?;
+        let cr = (field.len() * 4) as f64 / bytes.len() as f64;
+        let e = report_nrmse(kind, &field, &back);
+        csv.row(&[kind.name().into(), "zfp".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
+        pts.push((cr, e));
+    }
+    series.push(Series::new("ZFP-like", pts));
+
+    // S3D extra: GBAE and GAETC-like (block AE [+corrector] + GAE)
+    if kind == DatasetKind::S3d {
+        for (label, corrector) in [("GBAE", None), ("GAETC-like", Some("s3d_bae_L16"))] {
+            let (gb, _) = GbaeCompressor::prepare(
+                &c.rt, &dataset, "s3d_bae_L16", &c.ckpt, &field, &c.train, corrector,
+            )?;
+            let mut pts = Vec::new();
+            for target in [3e-3f64, 1e-3, 3e-4, 1e-4] {
+                let tau = PipelineConfig::tau_for_nrmse(
+                    target,
+                    field.range() as f64,
+                    dataset.gae_block_len(),
+                );
+                let res = gb.compress(&field, model.bin_bae, tau)?;
+                let cr = (dataset.total_points() * 4) as f64 / res.payload_bytes as f64;
+                let e = report_nrmse(kind, &field, &res.recon);
+                csv.row(&[
+                    kind.name().into(),
+                    label.to_lowercase(),
+                    format!("{cr:.2}"),
+                    format!("{e:.4e}"),
+                ]);
+                pts.push((cr, e));
+            }
+            series.push(Series::new(label, pts));
+        }
+    }
+    Ok(series)
+}
+
+fn fig6(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let kinds: Vec<DatasetKind> = match args.get("dataset") {
+        Some(d) => vec![DatasetKind::parse(d)?],
+        None => vec![DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc],
+    };
+    for kind in kinds {
+        // one CSV per dataset so partial runs never clobber earlier ones
+        let mut csv = Csv::new(
+            "fig6",
+            &format!("fig6_{}.csv", kind.name()),
+            "dataset,series,cr,nrmse",
+        );
+        let series = fig6_one(&c, kind, &mut csv)?;
+        println!(
+            "{}",
+            ascii_curves(
+                &format!("Fig. 6 — comparison ({})", kind.name()),
+                "CR",
+                "NRMSE",
+                &series
+            )
+        );
+        let p = csv.save()?;
+        println!("-> {}", p.display());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7/8 shared: three compressors tuned to CR ≈ 100 on S3D
+// ---------------------------------------------------------------------------
+
+struct Cr100 {
+    label: String,
+    recon: Tensor,
+    cr: f64,
+    nrmse: f64,
+}
+
+fn compress_at_cr100(c: &Ctx) -> Result<(Tensor, Vec<Cr100>)> {
+    let kind = DatasetKind::S3d;
+    let dataset = dataset_preset(kind, c.scale);
+    let field = data::generate(&dataset);
+    let model = model_preset(kind);
+    let mut out = Vec::new();
+
+    // ours: binary-search tau for CR in [80, 125]
+    let mut comp =
+        prepare_stack(c, &dataset, &model.hbae_group, &[&model.bae_group], &field)?;
+    comp.model.bin_hbae = model.bin_hbae;
+    comp.model.bin_bae = model.bin_bae;
+    let range = field.range() as f64;
+    let d = dataset.gae_block_len();
+    let (mut lo, mut hi) = (1e-5f64, 1e-2f64);
+    let mut best: Option<Cr100> = None;
+    for _ in 0..8 {
+        let mid = (lo * hi).sqrt(); // geometric bisection over NRMSE target
+        let tau = PipelineConfig::tau_for_nrmse(mid, range, d);
+        let (archive, recon) = comp.compress(&field, tau)?;
+        let cr = comp.stats(&archive).cr;
+        let e = report_nrmse(kind, &field, &recon);
+        best = Some(Cr100 { label: "ours".into(), recon, cr, nrmse: e });
+        if (80.0..=125.0).contains(&cr) {
+            break;
+        }
+        if cr > 125.0 {
+            hi = mid; // too compressed -> tighten bound
+        } else {
+            lo = mid;
+        }
+    }
+    out.push(best.unwrap());
+
+    // sz3: sweep eps to CR ~ 100
+    let mut best: Option<Cr100> = None;
+    for rel in [1e-4f32, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2] {
+        let eps = rel * field.range();
+        let bytes = Sz3Like::new(eps).compress(&field)?;
+        let cr = (field.len() * 4) as f64 / bytes.len() as f64;
+        let keep = match &best {
+            None => true,
+            Some(b) => (cr - 100.0).abs() < (b.cr - 100.0).abs(),
+        };
+        if keep {
+            let back = Sz3Like::decompress(&bytes)?;
+            let e = report_nrmse(kind, &field, &back);
+            best = Some(Cr100 { label: "sz3".into(), recon: back, cr, nrmse: e });
+        }
+    }
+    out.push(best.unwrap());
+
+    // zfp: precision sweep to CR ~ 100
+    let mut best: Option<Cr100> = None;
+    for p in [2u32, 3, 4, 5, 6, 8, 10] {
+        let bytes = ZfpLike::new(p).compress(&field)?;
+        let cr = (field.len() * 4) as f64 / bytes.len() as f64;
+        let keep = match &best {
+            None => true,
+            Some(b) => (cr - 100.0).abs() < (b.cr - 100.0).abs(),
+        };
+        if keep {
+            let back = ZfpLike::decompress(&bytes)?;
+            let e = report_nrmse(kind, &field, &back);
+            best = Some(Cr100 { label: "zfp".into(), recon: back, cr, nrmse: e });
+        }
+    }
+    out.push(best.unwrap());
+    Ok((field, out))
+}
+
+/// Write an 8-bit PGM of a 2-D slice normalized to the slice range.
+fn write_pgm(path: &std::path::Path, img: &[f32], w: usize, h: usize) -> Result<()> {
+    use std::io::Write;
+    let lo = img.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = img.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "P5\n{w} {h}\n255")?;
+    let bytes: Vec<u8> = img.iter().map(|&v| ((v - lo) * scale) as u8).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Extract species-0 frame (mid-time) from an S3D tensor.
+fn species0_frame(t: &Tensor) -> (Vec<f32>, usize, usize) {
+    let dims = t.shape();
+    let (ts, x, y) = (dims[1], dims[2], dims[3]);
+    let mid = ts / 2;
+    let off = mid * x * y; // species 0
+    (t.data()[off..off + x * y].to_vec(), y, x)
+}
+
+fn fig7(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let (field, results) = compress_at_cr100(&c)?;
+    let dir = std::path::Path::new("results/fig7");
+    let (orig_img, w, h) = species0_frame(&field);
+    write_pgm(&dir.join("original.pgm"), &orig_img, w, h)?;
+    // zoomed crop (center quarter)
+    let crop = |img: &[f32]| -> Vec<f32> {
+        let (cw, ch) = (w / 4, h / 4);
+        let (x0, y0) = (w * 3 / 8, h * 3 / 8);
+        let mut out = Vec::with_capacity(cw * ch);
+        for yy in 0..ch {
+            for xx in 0..cw {
+                out.push(img[(y0 + yy) * w + (x0 + xx)]);
+            }
+        }
+        out
+    };
+    write_pgm(&dir.join("original_zoom.pgm"), &crop(&orig_img), w / 4, h / 4)?;
+    let mut csv = Csv::new("fig7", "fig7.csv", "compressor,cr,nrmse,image");
+    println!("\nFig. 7 — reconstructions at CR≈100 (S3D species 0):");
+    for r in &results {
+        let (img, _, _) = species0_frame(&r.recon);
+        let p = dir.join(format!("{}.pgm", r.label));
+        write_pgm(&p, &img, w, h)?;
+        write_pgm(&dir.join(format!("{}_zoom.pgm", r.label)), &crop(&img), w / 4, h / 4)?;
+        println!("  {:<6} CR={:7.1}  NRMSE={:.3e}  -> {}", r.label, r.cr, r.nrmse, p.display());
+        csv.row(&[
+            r.label.clone(),
+            format!("{:.1}", r.cr),
+            format!("{:.4e}", r.nrmse),
+            p.display().to_string(),
+        ]);
+    }
+    let p = csv.save()?;
+    println!("-> {}", p.display());
+    Ok(())
+}
+
+fn fig8(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let (field, results) = compress_at_cr100(&c)?;
+    let mut csv = Csv::new("fig8", "fig8.csv", "compressor,bin_center,count");
+    println!("\nFig. 8 — histogram of relative point error at CR≈100 (S3D):");
+    for r in &results {
+        let errs = relative_point_errors(&field, &r.recon);
+        let hist = log_histogram(&errs, 1e-8, 1e-1, 28);
+        let maxc = hist.iter().map(|&(_, n)| n).max().unwrap_or(1).max(1);
+        println!("  {} (CR {:.0}, NRMSE {:.2e}):", r.label, r.cr, r.nrmse);
+        for &(center, count) in &hist {
+            if count == 0 {
+                continue;
+            }
+            let bar = "#".repeat(1 + count * 50 / maxc);
+            println!("    {center:9.1e} |{bar} {count}");
+            csv.row(&[r.label.clone(), format!("{center:.3e}"), count.to_string()]);
+        }
+    }
+    let p = csv.save()?;
+    println!("-> {}", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — per-species NRMSE vs CR on S3D
+// ---------------------------------------------------------------------------
+
+fn fig9(args: &Args) -> Result<()> {
+    let c = ctx(args)?;
+    let kind = DatasetKind::S3d;
+    let dataset = dataset_preset(kind, c.scale);
+    let field = data::generate(&dataset);
+    let model = model_preset(kind);
+    let species = dataset.dims[0];
+    let per = field.len() / species;
+    let mut csv = Csv::new("fig9", "fig9.csv", "species,series,cr,nrmse");
+
+    // ours: per-species CR = species raw bytes / (amortized latents +
+    // that species' GAE payload) — the paper's accounting (§III-G)
+    let mut comp =
+        prepare_stack(&c, &dataset, &model.hbae_group, &[&model.bae_group], &field)?;
+    comp.model.bin_hbae = model.bin_hbae;
+    comp.model.bin_bae = model.bin_bae;
+    let gae_blocks_per_species =
+        crate::tensor::block_origins(&dataset.dims, &dataset.gae_block).len() / species;
+    for target in [1e-3f64, 3e-4, 1e-4] {
+        let tau = PipelineConfig::tau_for_nrmse(
+            target,
+            field.range() as f64,
+            dataset.gae_block_len(),
+        );
+        let (archive, recon) = comp.compress(&field, tau)?;
+        let per_species_err = nrmse_per_channel(&field, &recon);
+        let latent_bytes = archive.section("HLAT")?.len() + archive.section("BLAT")?.len();
+        // split GAE payload per species by re-encoding per-species streams
+        let d = dataset.gae_block_len();
+        let sets = crate::coder::decode_index_sets(
+            archive.section("GIDX")?,
+            crate::coder::indexset::max_raw_size(gae_blocks_per_species * species, d),
+        )?;
+        let (codes, _) = crate::coder::huffman_decode(archive.section("GCOF")?)?;
+        let mut cursor = 0usize;
+        for s in 0..species {
+            let s_sets: Vec<Vec<usize>> =
+                sets[s * gae_blocks_per_species..(s + 1) * gae_blocks_per_species].to_vec();
+            let n_codes: usize = s_sets.iter().map(|x| x.len()).sum();
+            let s_codes = &codes[cursor..cursor + n_codes];
+            cursor += n_codes;
+            let gae_bytes = crate::coder::huffman_encode(s_codes).len()
+                + crate::coder::encode_index_sets(&s_sets, d)?.len();
+            let payload = latent_bytes / species + gae_bytes;
+            let cr = (per * 4) as f64 / payload.max(1) as f64;
+            csv.row(&[
+                s.to_string(),
+                "ours".into(),
+                format!("{cr:.2}"),
+                format!("{:.4e}", per_species_err[s]),
+            ]);
+        }
+    }
+
+    // sz3 / zfp: compress each species' [t, x, y] field separately
+    for s in 0..species {
+        let sub = Tensor::new(
+            dataset.dims[1..].to_vec(),
+            field.data()[s * per..(s + 1) * per].to_vec(),
+        );
+        for rel in [1e-3f32, 3e-4, 1e-4] {
+            let eps = rel * sub.range();
+            let bytes = Sz3Like::new(eps).compress(&sub)?;
+            let back = Sz3Like::decompress(&bytes)?;
+            let cr = (sub.len() * 4) as f64 / bytes.len() as f64;
+            csv.row(&[
+                s.to_string(),
+                "sz3".into(),
+                format!("{cr:.2}"),
+                format!("{:.4e}", nrmse(&sub, &back)),
+            ]);
+        }
+        for p in [6u32, 10, 14] {
+            let bytes = ZfpLike::new(p).compress(&sub)?;
+            let back = ZfpLike::decompress(&bytes)?;
+            let cr = (sub.len() * 4) as f64 / bytes.len() as f64;
+            csv.row(&[
+                s.to_string(),
+                "zfp".into(),
+                format!("{cr:.2}"),
+                format!("{:.4e}", nrmse(&sub, &back)),
+            ]);
+        }
+    }
+    let p = csv.save()?;
+    // terminal rendering: first 4 species
+    let text = std::fs::read_to_string(&p)?;
+    let mut series: Vec<Series> = Vec::new();
+    for s in 0..4.min(species) {
+        for name in ["ours", "sz3", "zfp"] {
+            let pts: Vec<(f64, f64)> = text
+                .lines()
+                .skip(1)
+                .filter_map(|l| {
+                    let c: Vec<&str> = l.split(',').collect();
+                    if c[0] == s.to_string() && c[1] == name {
+                        Some((c[2].parse().ok()?, c[3].parse().ok()?))
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            series.push(Series::new(format!("sp{s}-{name}"), pts));
+        }
+    }
+    println!(
+        "{}",
+        ascii_curves("Fig. 9 — per-species (first 4 shown)", "CR", "NRMSE", &series)
+    );
+    println!("-> {}", p.display());
+    Ok(())
+}

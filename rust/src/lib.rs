@@ -1,0 +1,36 @@
+//! # attn-reduce
+//!
+//! Production reproduction of *“Attention Based Machine Learning Methods
+//! for Data Reduction with Guaranteed Error Bounds”* (Li, Lee, Rangarajan,
+//! Ranka — 2024): an attention-based hierarchical compressor for scientific
+//! data with per-block ℓ2 error guarantees.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L1** — Pallas kernels (attention / fused linear / layernorm),
+//!   authored in `python/compile/kernels/`, lowered once into HLO.
+//! * **L2** — JAX model (HBAE, BAE, Adam train steps, fused pipeline),
+//!   AOT-lowered by `python/compile/aot.py` into `artifacts/`.
+//! * **L3** — this crate: the coordinator that loads those artifacts via
+//!   PJRT ([`runtime`]), drives training ([`train`]), runs the
+//!   compression pipeline with the GAE error-bound stage ([`compressor`]),
+//!   and reproduces every table/figure of the paper ([`experiments`]).
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! binary is self-contained.
+
+pub mod baselines;
+pub mod coder;
+pub mod compressor;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

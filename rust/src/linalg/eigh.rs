@@ -1,0 +1,302 @@
+//! Dense symmetric eigensolver: Householder tridiagonalization (`tred2`)
+//! followed by implicit-shift QL with eigenvector accumulation (`tql2`).
+//!
+//! Classic EISPACK algorithms (Numerical Recipes §11.2–11.3), O(n³),
+//! numerically robust for the residual covariance matrices the GAE stage
+//! produces (n = GAE block length: 80 for S3D, 256 for E3SM, 1521 for XGC).
+
+use crate::Result;
+use anyhow::bail;
+
+/// Eigen-decomposition of a symmetric matrix (row-major `a`, `n x n`).
+///
+/// Returns `(eigenvalues, eigenvectors)` sorted by **descending**
+/// eigenvalue; eigenvectors are the *columns* of the returned row-major
+/// matrix `v` (i.e. `v[i*n + j]` is component `i` of eigenvector `j`),
+/// matching the paper's basis-matrix convention `U`.
+pub fn eigh_symmetric(a: &[f64], n: usize) -> Result<(Vec<f64>, Vec<f64>)> {
+    if a.len() != n * n {
+        bail!("eigh: matrix len {} != n^2 ({n})", a.len());
+    }
+    if n == 0 {
+        return Ok((vec![], vec![]));
+    }
+    // verify symmetry (cheap guard against caller bugs)
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = (a[i * n + j] - a[j * n + i]).abs();
+            let scale = a[i * n + j].abs().max(a[j * n + i].abs()).max(1.0);
+            if d > 1e-8 * scale {
+                bail!("eigh: matrix not symmetric at ({i},{j}): {d}");
+            }
+        }
+    }
+
+    let mut v = a.to_vec(); // will become the eigenvector matrix
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal
+
+    tred2(&mut v, n, &mut d, &mut e);
+    tql2(&mut v, n, &mut d, &mut e)?;
+
+    // sort descending by eigenvalue, permuting columns of v
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let mut dv = vec![0.0; n];
+    let mut vv = vec![0.0; n * n];
+    for (newj, &oldj) in order.iter().enumerate() {
+        dv[newj] = d[oldj];
+        for i in 0..n {
+            vv[i * n + newj] = v[i * n + oldj];
+        }
+    }
+    Ok((dv, vv))
+}
+
+/// Householder reduction to tridiagonal form (Numerical Recipes `tred2`).
+fn tred2(v: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += v[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = v[i * n + l];
+            } else {
+                for k in 0..=l {
+                    v[i * n + k] /= scale;
+                    h += v[i * n + k] * v[i * n + k];
+                }
+                let mut f = v[i * n + l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                v[i * n + l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    v[j * n + i] = v[i * n + j] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += v[j * n + k] * v[i * n + k];
+                    }
+                    for k in (j + 1)..=l {
+                        g += v[k * n + j] * v[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * v[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = v[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        v[j * n + k] -= f * e[k] + g * v[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = v[i * n + l];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += v[i * n + k] * v[k * n + j];
+                }
+                for k in 0..i {
+                    v[k * n + j] -= g * v[k * n + i];
+                }
+            }
+        }
+        d[i] = v[i * n + i];
+        v[i * n + i] = 1.0;
+        for j in 0..i {
+            v[j * n + i] = 0.0;
+            v[i * n + j] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL with eigenvector accumulation (`tql2`).
+fn tql2(v: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) -> Result<()> {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                bail!("tql2: no convergence after 50 iterations");
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sgn = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sgn);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = v[k * n + i + 1];
+                    v[k * n + i + 1] = s * v[k * n + i] + c * f;
+                    v[k * n + i] = c * v[k * n + i] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn check_decomposition(a: &[f64], n: usize, tol: f64) {
+        let (vals, vecs) = eigh_symmetric(a, n).unwrap();
+        // descending order
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "not sorted: {vals:?}");
+        }
+        // A v_j = lambda_j v_j
+        for j in 0..n {
+            for i in 0..n {
+                let mut av = 0.0;
+                for k in 0..n {
+                    av += a[i * n + k] * vecs[k * n + j];
+                }
+                let lv = vals[j] * vecs[i * n + j];
+                assert!(
+                    (av - lv).abs() < tol,
+                    "residual at ({i},{j}): {av} vs {lv}"
+                );
+            }
+        }
+        // orthonormal columns
+        for j1 in 0..n {
+            for j2 in 0..n {
+                let mut dp = 0.0;
+                for i in 0..n {
+                    dp += vecs[i * n + j1] * vecs[i * n + j2];
+                }
+                let want = if j1 == j2 { 1.0 } else { 0.0 };
+                assert!((dp - want).abs() < tol, "orthonormality ({j1},{j2}): {dp}");
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        let (vals, _) = eigh_symmetric(&a, 3).unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+        check_decomposition(&a, 3, 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3 and 1
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let (vals, _) = eigh_symmetric(&a, 2).unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_symmetric_psd_sizes() {
+        let mut rng = Rng::new(5);
+        for &n in &[1usize, 2, 3, 5, 16, 40] {
+            // A = B Bᵀ / n — symmetric PSD
+            let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    let mut acc = 0.0;
+                    for k in 0..n {
+                        acc += b[i * n + k] * b[j * n + k];
+                    }
+                    a[i * n + j] = acc / n as f64;
+                }
+            }
+            check_decomposition(&a, n, 1e-8);
+            let (vals, _) = eigh_symmetric(&a, n).unwrap();
+            assert!(vals.iter().all(|&l| l > -1e-9), "PSD: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Rng::new(11);
+        let n = 24;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let x = rng.normal();
+                a[i * n + j] = x;
+                a[j * n + i] = x;
+            }
+        }
+        let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        let (vals, _) = eigh_symmetric(&a, n).unwrap();
+        let sum: f64 = vals.iter().sum();
+        assert!((trace - sum).abs() < 1e-8 * trace.abs().max(1.0));
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        assert!(eigh_symmetric(&a, 2).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_len() {
+        assert!(eigh_symmetric(&[1.0; 5], 2).is_err());
+    }
+}

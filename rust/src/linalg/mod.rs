@@ -1,0 +1,82 @@
+//! Linear-algebra substrate for the GAE stage (paper §II-D).
+//!
+//! The error-bound guarantee needs a PCA basis over the residual blocks:
+//! covariance accumulation, a dense symmetric eigensolver, and
+//! project/reconstruct helpers. Implemented from scratch (no LAPACK):
+//! Householder tridiagonalization + implicit-shift QL — the classic
+//! EISPACK `tred2`/`tql2` pair — in f64 for stability.
+
+mod eigh;
+mod pca;
+
+pub use eigh::eigh_symmetric;
+pub use pca::{covariance, Pca};
+
+/// y = A x for row-major `a` of shape `[m, n]`.
+pub fn matvec(a: &[f64], m: usize, n: usize, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+}
+
+/// y = Aᵀ x for row-major `a` of shape `[m, n]` (no transpose copy).
+pub fn matvec_t(a: &[f64], m: usize, n: usize, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(x.len(), m);
+    assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        let xi = x[i];
+        for j in 0..n {
+            y[j] += row[j] * xi;
+        }
+    }
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// ℓ2 norm of an f32 slice, accumulated in f64 (the GAE bound check).
+pub fn norm2_f32(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let x = vec![3.0, -2.0];
+        let mut y = vec![0.0; 2];
+        matvec(&a, 2, 2, &x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn matvec_t_is_transpose() {
+        // A = [[1,2,3],[4,5,6]]
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = vec![1.0, 1.0];
+        let mut y = vec![0.0; 3];
+        matvec_t(&a, 2, 3, &x, &mut y);
+        assert_eq!(y, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn norm2_matches_manual() {
+        assert!((norm2_f32(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,223 @@
+//! PCA over residual blocks (paper §II-D, Eq. 9).
+//!
+//! The GAE stage runs PCA on the residuals Ω − Ω^R of the *entire*
+//! dataset: each flattened GAE block is one instance; the basis matrix
+//! `U` (eigenvectors of the residual covariance, descending eigenvalue) is
+//! shared by all blocks and stored once in the archive.
+//!
+//! The paper does not center the residuals before projection — Eq. 9 is
+//! `c = Uᵀ(x − x^R)` with exact recovery `Uc` — so this PCA is
+//! *uncentered* (a.k.a. the autocorrelation basis): covariance is
+//! `Σ xxᵀ / N` without mean subtraction. That keeps the per-block
+//! correction self-contained (no mean vector needed at decode).
+
+use crate::util::parallel;
+use crate::Result;
+
+use super::eigh_symmetric;
+
+/// Accumulate the (uncentered) covariance `Σ_b x_b x_bᵀ / N` of `n`-dim
+/// rows stored contiguously in `rows`.
+pub fn covariance(rows: &[f32], n: usize) -> Vec<f64> {
+    assert!(n > 0 && rows.len() % n == 0);
+    let count = rows.len() / n;
+    // parallel over row-chunks, each thread accumulates a private matrix
+    let threads = parallel::num_threads().min(count.max(1));
+    let chunk = count.div_ceil(threads.max(1));
+    let partials = parallel::par_map(threads, |t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(count);
+        let mut acc = vec![0.0f64; n * n];
+        for r in lo..hi {
+            let row = &rows[r * n..(r + 1) * n];
+            // rank-1 update, upper triangle only
+            for i in 0..n {
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let acc_row = &mut acc[i * n..(i + 1) * n];
+                for j in i..n {
+                    acc_row[j] += xi * row[j] as f64;
+                }
+            }
+        }
+        acc
+    });
+    let mut cov = vec![0.0f64; n * n];
+    for p in partials {
+        for (c, v) in cov.iter_mut().zip(p) {
+            *c += v;
+        }
+    }
+    let scale = 1.0 / count.max(1) as f64;
+    for i in 0..n {
+        for j in i..n {
+            let v = cov[i * n + j] * scale;
+            cov[i * n + j] = v;
+            cov[j * n + i] = v;
+        }
+    }
+    cov
+}
+
+/// A fitted PCA basis.
+#[derive(Debug, Clone)]
+pub struct Pca {
+    /// Row-major `n x n`; column `j` is the j-th basis vector (descending
+    /// eigenvalue) — the paper's `U`.
+    pub basis: Vec<f64>,
+    /// Descending eigenvalues.
+    pub eigenvalues: Vec<f64>,
+    pub n: usize,
+}
+
+impl Pca {
+    /// Fit on residual rows (each `n` long, concatenated).
+    pub fn fit(rows: &[f32], n: usize) -> Result<Self> {
+        let cov = covariance(rows, n);
+        let (eigenvalues, basis) = eigh_symmetric(&cov, n)?;
+        Ok(Self { basis, eigenvalues, n })
+    }
+
+    /// Project a residual onto the basis: `c = Uᵀ x` (Eq. 9).
+    pub fn project(&self, x: &[f32], c: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert_eq!(c.len(), n);
+        for j in 0..n {
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += self.basis[i * n + j] * x[i] as f64;
+            }
+            c[j] = acc;
+        }
+    }
+
+    /// Accumulate `x += Σ_{j in sel} c_j u_j` (Eq. 10 correction).
+    pub fn add_reconstruction(&self, sel: &[(usize, f64)], x: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        for &(j, cj) in sel {
+            for i in 0..n {
+                x[i] += (self.basis[i * n + j] * cj) as f32;
+            }
+        }
+    }
+
+    /// Serialize basis as f32 bytes (stored in the archive; §II-E counts
+    /// it toward the compressed size).
+    pub fn basis_f32_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.basis.len() * 4);
+        for &v in &self.basis {
+            out.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize (inverse of [`Self::basis_f32_bytes`]).
+    pub fn from_f32_bytes(bytes: &[u8], n: usize) -> Result<Self> {
+        anyhow::ensure!(bytes.len() == n * n * 4, "basis byte length");
+        let basis: Vec<f64> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64)
+            .collect();
+        Ok(Self { basis, eigenvalues: vec![0.0; n], n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synthetic_rows(n: usize, count: usize, rank: usize, seed: u64) -> Vec<f32> {
+        // low-rank structure + small noise
+        let mut rng = Rng::new(seed);
+        let dirs: Vec<f64> = (0..rank * n).map(|_| rng.normal()).collect();
+        let mut rows = vec![0f32; count * n];
+        for r in 0..count {
+            for k in 0..rank {
+                let w = rng.normal() * (rank - k) as f64; // decreasing power
+                for i in 0..n {
+                    rows[r * n + i] += (w * dirs[k * n + i]) as f32;
+                }
+            }
+            for i in 0..n {
+                rows[r * n + i] += (0.01 * rng.normal()) as f32;
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn covariance_matches_naive() {
+        let n = 6;
+        let rows = synthetic_rows(n, 40, 2, 3);
+        let cov = covariance(&rows, n);
+        // naive check at a few entries
+        let count = rows.len() / n;
+        for &(i, j) in &[(0usize, 0usize), (1, 4), (5, 5), (2, 3)] {
+            let mut acc = 0.0;
+            for r in 0..count {
+                acc += rows[r * n + i] as f64 * rows[r * n + j] as f64;
+            }
+            acc /= count as f64;
+            assert!((cov[i * n + j] - acc).abs() < 1e-9);
+            assert_eq!(cov[i * n + j], cov[j * n + i]);
+        }
+    }
+
+    #[test]
+    fn full_projection_recovers_exactly() {
+        let n = 10;
+        let rows = synthetic_rows(n, 50, 3, 7);
+        let pca = Pca::fit(&rows, n).unwrap();
+        let x = &rows[20 * n..21 * n];
+        let mut c = vec![0.0; n];
+        pca.project(x, &mut c);
+        // full reconstruction U c == x (complete basis)
+        let mut rec = vec![0f32; n];
+        let sel: Vec<(usize, f64)> = (0..n).map(|j| (j, c[j])).collect();
+        pca.add_reconstruction(&sel, &mut rec);
+        for i in 0..n {
+            assert!((rec[i] - x[i]).abs() < 1e-3, "{} vs {}", rec[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn leading_coefficients_capture_most_energy() {
+        let n = 12;
+        let rank = 2;
+        let rows = synthetic_rows(n, 200, rank, 11);
+        let pca = Pca::fit(&rows, n).unwrap();
+        // eigenvalues concentrated in the first `rank`
+        let total: f64 = pca.eigenvalues.iter().sum();
+        let lead: f64 = pca.eigenvalues[..rank].iter().sum();
+        assert!(lead / total > 0.95, "lead fraction {}", lead / total);
+        // projecting a row: top-rank coefficients shrink the residual a lot
+        let x = &rows[0..n];
+        let mut c = vec![0.0; n];
+        pca.project(x, &mut c);
+        let mut corrected: Vec<f32> = x.iter().map(|&v| -v).collect(); // -(x) + Uc ≈ 0
+        let sel: Vec<(usize, f64)> = (0..rank).map(|j| (j, c[j])).collect();
+        pca.add_reconstruction(&sel, &mut corrected);
+        let before = crate::linalg::norm2_f32(x);
+        let after = crate::linalg::norm2_f32(&corrected);
+        assert!(after < 0.3 * before, "{after} vs {before}");
+    }
+
+    #[test]
+    fn basis_serialization_round_trip() {
+        let n = 8;
+        let rows = synthetic_rows(n, 30, 2, 13);
+        let pca = Pca::fit(&rows, n).unwrap();
+        let bytes = pca.basis_f32_bytes();
+        assert_eq!(bytes.len(), n * n * 4);
+        let back = Pca::from_f32_bytes(&bytes, n).unwrap();
+        for (a, b) in pca.basis.iter().zip(&back.basis) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert!(Pca::from_f32_bytes(&bytes[1..], n).is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! attn-reduce CLI — the L3 launcher.
+//!
+//! ```text
+//! attn-reduce generate   --dataset s3d --scale bench --out field.f32
+//! attn-reduce train      --dataset s3d [--steps N] [--ckpt-dir DIR]
+//! attn-reduce compress   --dataset s3d --nrmse 1e-3 [--in field.f32]
+//!                        --out data.ardc
+//! attn-reduce decompress --in data.ardc --out recon.f32 [--ckpt-dir DIR]
+//! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
+//! attn-reduce info       # manifest + platform summary
+//! ```
+
+use attn_reduce::compressor::{self, HierCompressor};
+use attn_reduce::config::{self, DatasetKind, Scale};
+use attn_reduce::data;
+use attn_reduce::experiments;
+use attn_reduce::model::ParamStore;
+use attn_reduce::runtime::Runtime;
+use attn_reduce::util::cli::Args;
+use attn_reduce::Result;
+
+const USAGE: &str = "\
+attn-reduce — attention-based data reduction with guaranteed error bounds
+
+USAGE:
+  attn-reduce <command> [options]
+
+COMMANDS:
+  generate     synthesize a dataset (--dataset s3d|e3sm|xgc --scale bench --out F)
+  train        train HBAE+BAE for a dataset preset (--dataset D --steps N)
+  compress     compress (--dataset D --nrmse 1e-3 | --tau T) [--in F] --out A
+  decompress   decompress an archive (--in A --out F)
+  experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
+  info         show artifact manifest + platform
+COMMON OPTIONS:
+  --artifacts DIR   (default: ./artifacts)
+  --ckpt-dir DIR    (default: ./results/ckpt)
+  --scale bench|smoke|paper
+  --steps N         training steps (default 300)
+  --quiet
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["quiet", "retrain", "full"])?;
+    if args.flag("quiet") {
+        std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    }
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "generate" => cmd_generate(&args),
+        "train" => cmd_train(&args),
+        "compress" => cmd_compress(&args),
+        "decompress" => cmd_decompress(&args),
+        "experiment" => {
+            let id = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("experiment id required"))?;
+            experiments::run_experiment(id, &args)
+        }
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn pipeline_cfg(args: &Args) -> Result<config::PipelineConfig> {
+    let kind = DatasetKind::parse(args.get_or("dataset", "s3d"))?;
+    let scale = Scale::parse(args.get_or("scale", "bench"))?;
+    let mut cfg = config::pipeline_preset(kind, scale, 0.0);
+    cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
+    cfg.train.lr = args.get_f32("lr", cfg.train.lr)?;
+    Ok(cfg)
+}
+
+fn load_field(args: &Args, cfg: &config::DatasetConfig) -> Result<attn_reduce::tensor::Tensor> {
+    match args.get("in") {
+        Some(path) if path.ends_with(".f32") => {
+            data::read_f32_file(path, cfg.dims.clone())
+        }
+        _ => Ok(data::generate(cfg)),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = pipeline_cfg(args)?;
+    let out = args.get_or("out", "field.f32");
+    let t = data::generate(&cfg.dataset);
+    data::write_f32_file(out, &t)?;
+    println!(
+        "wrote {} ({} points, {:.1} MB, range [{:.4}, {:.4}])",
+        out,
+        t.len(),
+        (t.len() * 4) as f64 / 1e6,
+        t.min(),
+        t.max()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = pipeline_cfg(args)?;
+    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let ckpt = std::path::PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
+    if args.flag("retrain") {
+        std::fs::remove_file(ParamStore::default_path(&ckpt, &cfg.model.hbae_group)).ok();
+        std::fs::remove_file(ParamStore::default_path(&ckpt, &cfg.model.bae_group)).ok();
+    }
+    let field = load_field(args, &cfg.dataset)?;
+    let (_, reports) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
+    if reports.is_empty() {
+        println!("checkpoints already present in {} (use --retrain)", ckpt.display());
+    }
+    for r in &reports {
+        println!("{}", r.summary());
+    }
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let cfg = pipeline_cfg(args)?;
+    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let ckpt = std::path::PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
+    let field = load_field(args, &cfg.dataset)?;
+    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
+    // bound: --tau wins, else --nrmse target converted per Eq. 11
+    let tau = if let Some(t) = args.get("tau") {
+        t.parse::<f32>()?
+    } else {
+        let target = args.get_f64("nrmse", 1e-3)?;
+        config::PipelineConfig::tau_for_nrmse(
+            target,
+            field.range() as f64,
+            cfg.dataset.gae_block_len(),
+        )
+    };
+    let (archive, recon) = comp.compress(&field, tau)?;
+    let out = args.get_or("out", "data.ardc");
+    archive.save(out)?;
+    let stats = comp.stats(&archive);
+    let e = compressor::nrmse(&field, &recon);
+    println!("archive: {out} ({} bytes)", stats.archive_bytes);
+    println!(
+        "CR (paper accounting) = {:.1}, CR (total bytes) = {:.1}",
+        stats.cr, stats.cr_total
+    );
+    println!("NRMSE = {e:.3e} (tau = {tau:.4e})");
+    for (tag, sz) in &stats.section_sizes {
+        println!("  section {tag}: {sz} bytes");
+    }
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let ckpt = std::path::PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
+    let archive = compressor::Archive::load(
+        args.get("in").ok_or_else(|| anyhow::anyhow!("--in archive required"))?,
+    )?;
+    let hgroup = archive
+        .header
+        .req("hbae_group")?
+        .as_str()
+        .unwrap_or("")
+        .to_string();
+    let bgroups: Vec<String> = archive
+        .header
+        .req("bae_groups")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_str().map(String::from))
+        .collect();
+    let hbae = ParamStore::load(ParamStore::default_path(&ckpt, &hgroup), &hgroup)?;
+    let baes: Vec<ParamStore> = bgroups
+        .iter()
+        .map(|g| ParamStore::load(ParamStore::default_path(&ckpt, g), g))
+        .collect::<Result<_>>()?;
+    let recon = HierCompressor::decompress(&rt, &archive, &hbae, &baes)?;
+    let out = args.get_or("out", "recon.f32");
+    data::write_f32_file(out, &recon)?;
+    println!("wrote {out} ({} points)", recon.len());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    println!("platform: {}", rt.platform());
+    println!("jax: {}", rt.manifest.jax_version);
+    let mut groups: Vec<_> = rt.manifest.groups.iter().collect();
+    groups.sort_by_key(|(name, _)| name.to_string());
+    for (name, g) in groups {
+        println!(
+            "  {name} [{}] param_dim={:?} entries={:?}",
+            g.kind,
+            g.param_dim,
+            g.entries.keys().collect::<Vec<_>>()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Model parameter store + checkpointing.
+//!
+//! Parameters live as the **flat f32 vector** the AOT entry points take
+//! (layout recorded in the manifest; packing logic lives on the python
+//! side — rust only needs the total dim and, for diagnostics, the layout
+//! names). Adam state (m, v, step) is carried alongside so training can
+//! resume.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+
+const MAGIC: &[u8; 4] = b"ARCK";
+const VERSION: u16 = 1;
+
+/// Parameters + optimizer state for one model group.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    pub group: String,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl ParamStore {
+    /// Initialize from the group's AOT `init` entry (Glorot, seeded on the
+    /// python side by the group name — deterministic across runs).
+    pub fn init(rt: &Runtime, group: &str) -> Result<Self> {
+        let pdim = rt.param_dim(group)?;
+        let init = rt.load(group, "init")?;
+        let out = init.run(&[])?;
+        let theta = out.into_iter().next().unwrap().data;
+        ensure!(theta.len() == pdim, "init returned {} != {pdim}", theta.len());
+        Ok(Self {
+            group: group.to_string(),
+            m: vec![0.0; pdim],
+            v: vec![0.0; pdim],
+            step: 0.0,
+            theta,
+        })
+    }
+
+    pub fn param_dim(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// The four optimizer-state tensors in train_step input order.
+    pub fn as_inputs(&self) -> [HostTensor; 4] {
+        [
+            HostTensor::vec(self.theta.clone()),
+            HostTensor::vec(self.m.clone()),
+            HostTensor::vec(self.v.clone()),
+            HostTensor::scalar(self.step),
+        ]
+    }
+
+    /// Absorb train_step outputs `(theta', m', v', t', loss)`; returns loss.
+    pub fn absorb(&mut self, mut outs: Vec<HostTensor>) -> Result<f32> {
+        ensure!(outs.len() == 5, "train_step returned {} outputs", outs.len());
+        let loss = outs.pop().unwrap().scalar_value();
+        self.step = outs.pop().unwrap().scalar_value();
+        self.v = outs.pop().unwrap().data;
+        self.m = outs.pop().unwrap().data;
+        self.theta = outs.pop().unwrap().data;
+        Ok(loss)
+    }
+
+    /// Save a checkpoint (binary; magic + group + θ/m/v/step).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        let gb = self.group.as_bytes();
+        w.write_all(&(gb.len() as u32).to_le_bytes())?;
+        w.write_all(gb)?;
+        w.write_all(&(self.theta.len() as u64).to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        for vec in [&self.theta, &self.m, &self.v] {
+            for &x in vec {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load a checkpoint; verifies the group name matches.
+    pub fn load(path: impl AsRef<Path>, expect_group: &str) -> Result<Self> {
+        let path = path.as_ref();
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "{}: not a checkpoint", path.display());
+        let mut b2 = [0u8; 2];
+        r.read_exact(&mut b2)?;
+        ensure!(u16::from_le_bytes(b2) == VERSION, "checkpoint version");
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let glen = u32::from_le_bytes(b4) as usize;
+        let mut gb = vec![0u8; glen];
+        r.read_exact(&mut gb)?;
+        let group = String::from_utf8(gb)?;
+        if group != expect_group {
+            bail!(
+                "checkpoint {} is for group {group:?}, expected {expect_group:?}",
+                path.display()
+            );
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let pdim = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b4)?;
+        let step = f32::from_le_bytes(b4);
+        let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect())
+        };
+        let theta = read_vec(pdim)?;
+        let m = read_vec(pdim)?;
+        let v = read_vec(pdim)?;
+        Ok(Self { group, theta, m, v, step })
+    }
+
+    /// Canonical checkpoint path for a group.
+    pub fn default_path(dir: impl AsRef<Path>, group: &str) -> std::path::PathBuf {
+        dir.as_ref().join(format!("{group}.ckpt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        ParamStore {
+            group: "test_group".into(),
+            theta: (0..100).map(|i| i as f32 * 0.1).collect(),
+            m: vec![0.5; 100],
+            v: vec![0.25; 100],
+            step: 42.0,
+        }
+    }
+
+    #[test]
+    fn checkpoint_round_trip() {
+        let dir = std::env::temp_dir().join("attn_reduce_ckpt_test");
+        let path = dir.join("test_group.ckpt");
+        let s = store();
+        s.save(&path).unwrap();
+        let back = ParamStore::load(&path, "test_group").unwrap();
+        assert_eq!(back.theta, s.theta);
+        assert_eq!(back.m, s.m);
+        assert_eq!(back.v, s.v);
+        assert_eq!(back.step, s.step);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn group_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("attn_reduce_ckpt_test2");
+        let path = dir.join("x.ckpt");
+        store().save(&path).unwrap();
+        assert!(ParamStore::load(&path, "other_group").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn absorb_updates_state() {
+        let mut s = store();
+        let outs = vec![
+            HostTensor::vec(vec![1.0; 100]),
+            HostTensor::vec(vec![2.0; 100]),
+            HostTensor::vec(vec![3.0; 100]),
+            HostTensor::scalar(43.0),
+            HostTensor::scalar(0.125),
+        ];
+        let loss = s.absorb(outs).unwrap();
+        assert_eq!(loss, 0.125);
+        assert_eq!(s.step, 43.0);
+        assert_eq!(s.theta[0], 1.0);
+        assert_eq!(s.m[0], 2.0);
+        assert_eq!(s.v[0], 3.0);
+    }
+
+    #[test]
+    fn absorb_rejects_wrong_arity() {
+        let mut s = store();
+        assert!(s.absorb(vec![HostTensor::scalar(1.0)]).is_err());
+    }
+}

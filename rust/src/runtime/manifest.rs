@@ -1,0 +1,208 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::json::Value;
+use crate::Result;
+use anyhow::{anyhow, Context};
+
+/// Shape + dtype of one literal crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            shape: v.req("shape")?.usize_vec()?,
+            dtype: v.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered entry point.
+#[derive(Debug, Clone)]
+pub struct EntryInfo {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub hlo_bytes: usize,
+}
+
+impl EntryInfo {
+    fn from_json(v: &Value) -> Result<Self> {
+        let sigs = |key: &str| -> Result<Vec<TensorSig>> {
+            v.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not an array"))?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: v.req("file")?.as_str().unwrap_or("").to_string(),
+            inputs: sigs("inputs")?,
+            outputs: sigs("outputs")?,
+            hlo_bytes: v.get("hlo_bytes").and_then(|b| b.as_usize()).unwrap_or(0),
+        })
+    }
+}
+
+/// One parameter-layout element (name/shape/offset into the flat vector).
+#[derive(Debug, Clone)]
+pub struct LayoutEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// A model group (one HBAE / BAE / fused-pipe config).
+#[derive(Debug, Clone)]
+pub struct GroupInfo {
+    pub kind: String,
+    pub entries: HashMap<String, EntryInfo>,
+    pub param_dim: Option<usize>,
+    pub layout: Vec<LayoutEntry>,
+    pub config: Option<Value>,
+    pub hbae_group: Option<String>,
+    pub bae_group: Option<String>,
+}
+
+impl GroupInfo {
+    fn from_json(v: &Value) -> Result<Self> {
+        let mut entries = HashMap::new();
+        for (name, ev) in v
+            .req("entries")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("entries not an object"))?
+        {
+            entries.insert(name.clone(), EntryInfo::from_json(ev)?);
+        }
+        let layout = v
+            .get("layout")
+            .and_then(|l| l.as_arr())
+            .map(|items| {
+                items
+                    .iter()
+                    .map(|e| -> Result<LayoutEntry> {
+                        Ok(LayoutEntry {
+                            name: e.req("name")?.as_str().unwrap_or("").to_string(),
+                            shape: e.req("shape")?.usize_vec()?,
+                            offset: e.req("offset")?.as_usize().unwrap_or(0),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .transpose()?
+            .unwrap_or_default();
+        Ok(Self {
+            kind: v.req("kind")?.as_str().unwrap_or("").to_string(),
+            entries,
+            param_dim: v.get("param_dim").and_then(|p| p.as_usize()),
+            layout,
+            config: v.get("config").cloned(),
+            hbae_group: v
+                .get("hbae_group")
+                .and_then(|g| g.as_str())
+                .map(String::from),
+            bae_group: v
+                .get("bae_group")
+                .and_then(|g| g.as_str())
+                .map(String::from),
+        })
+    }
+}
+
+/// Top-level manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub fingerprint: String,
+    pub jax_version: String,
+    pub groups: HashMap<String, GroupInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let mut groups = HashMap::new();
+        for (name, gv) in v
+            .req("groups")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("groups not an object"))?
+        {
+            groups.insert(
+                name.clone(),
+                GroupInfo::from_json(gv).with_context(|| format!("group {name}"))?,
+            );
+        }
+        Ok(Self {
+            version: v.req("version")?.as_usize().unwrap_or(0) as u32,
+            fingerprint: v.req("fingerprint")?.as_str().unwrap_or("").to_string(),
+            jax_version: v.req("jax_version")?.as_str().unwrap_or("").to_string(),
+            groups,
+        })
+    }
+
+    /// Convenience: a numeric field from a group's config echo.
+    pub fn group_config_usize(&self, group: &str, key: &str) -> Option<usize> {
+        self.groups
+            .get(group)?
+            .config
+            .as_ref()?
+            .get(key)?
+            .as_usize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let text = r#"{
+          "version": 1, "fingerprint": "abc", "jax_version": "0.9",
+          "groups": {
+            "g": {"kind": "bae", "param_dim": 10,
+                  "layout": [{"name": "w", "shape": [2, 5], "offset": 0}],
+                  "entries": {"encode": {"file": "g/encode.hlo.txt",
+                    "inputs": [{"shape": [2, 3], "dtype": "float32"}],
+                    "outputs": [{"shape": [2], "dtype": "float32"}]}}}
+          }}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.groups["g"].param_dim, Some(10));
+        assert_eq!(m.groups["g"].layout[0].shape, vec![2, 5]);
+        let e = &m.groups["g"].entries["encode"];
+        assert_eq!(e.inputs[0].len(), 6);
+        assert_eq!(e.outputs[0].shape, vec![2]);
+    }
+
+    #[test]
+    fn scalar_shapes_parse_as_empty() {
+        let sig = TensorSig::from_json(
+            &Value::parse(r#"{"shape": [], "dtype": "float32"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sig.shape, Vec::<usize>::new());
+        assert_eq!(sig.len(), 1);
+    }
+}

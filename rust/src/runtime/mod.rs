@@ -1,0 +1,225 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them on the CPU client.
+//!
+//! Interchange is HLO **text** — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, which sidesteps xla_extension 0.5.1's rejection of
+//! jax ≥ 0.5 64-bit-id protos (see /opt/xla-example/README.md).
+//!
+//! PJRT wrapper types hold raw pointers and are `!Send`; the
+//! [`crate::coordinator`] keeps one [`Runtime`] on a dedicated worker
+//! thread and feeds it plain `Vec<f32>` payloads over channels.
+
+mod manifest;
+
+pub use manifest::{EntryInfo, GroupInfo, LayoutEntry, Manifest, TensorSig};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+
+/// Host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar_value(&self) -> f32 {
+        self.data[0]
+    }
+}
+
+fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &t.shape, bytes)
+        .map_err(|e| anyhow!("literal create failed: {e:?}"))
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal read: {e:?}"))?;
+    Ok(HostTensor::new(dims, data))
+}
+
+/// Cumulative execution statistics for one entry point.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_us: u64,
+}
+
+/// A compiled entry point.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: EntryInfo,
+    pub group: String,
+    pub name: String,
+    stats: RefCell<ExecStats>,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}/{}: expected {} inputs, got {}",
+                self.group, self.name, self.info.inputs.len(), inputs.len()
+            );
+        }
+        for (i, (t, sig)) in inputs.iter().zip(&self.info.inputs).enumerate() {
+            if t.shape != sig.shape {
+                bail!(
+                    "{}/{} input {i}: shape {:?} != manifest {:?}",
+                    self.group, self.name, t.shape, sig.shape
+                );
+            }
+        }
+        let t0 = Instant::now();
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}/{}: {e:?}", self.group, self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers every entry with return_tuple=True.
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let hosts: Vec<HostTensor> =
+            outs.iter().map(from_literal).collect::<Result<_>>()?;
+        let mut st = self.stats.borrow_mut();
+        st.calls += 1;
+        st.total_us += t0.elapsed().as_micros() as u64;
+        Ok(hosts)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+}
+
+/// Artifact registry + executable cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (reads `manifest.json`, creates the CPU client).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(root.join("manifest.json"))
+            .context("run `make artifacts` first")?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, root, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts location relative to the crate root.
+    pub fn open_default() -> Result<Self> {
+        Self::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch cached) compiled executable for `group/entry`.
+    pub fn load(&self, group: &str, entry: &str) -> Result<Rc<Executable>> {
+        let key = (group.to_string(), entry.to_string());
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let ginfo = self
+            .manifest
+            .groups
+            .get(group)
+            .ok_or_else(|| anyhow!("group {group:?} not in manifest"))?;
+        let einfo = ginfo
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("entry {group}/{entry} not in manifest"))?;
+        let path = self.root.join(&einfo.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {group}/{entry}: {e:?}"))?;
+        let compiled = Rc::new(Executable {
+            exe,
+            info: einfo.clone(),
+            group: group.to_string(),
+            name: entry.to_string(),
+            stats: RefCell::new(ExecStats::default()),
+        });
+        tracing_compile(group, entry, t0);
+        self.cache.borrow_mut().insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Group metadata (kind, param_dim, config echo).
+    pub fn group(&self, group: &str) -> Result<&GroupInfo> {
+        self.manifest
+            .groups
+            .get(group)
+            .ok_or_else(|| anyhow!("group {group:?} not in manifest"))
+    }
+
+    /// Total flat parameter dimension for a model group.
+    pub fn param_dim(&self, group: &str) -> Result<usize> {
+        self.group(group)?
+            .param_dim
+            .ok_or_else(|| anyhow!("group {group:?} has no param_dim"))
+    }
+
+    /// Aggregate execution stats across every cached executable.
+    pub fn all_stats(&self) -> Vec<(String, ExecStats)> {
+        self.cache
+            .borrow()
+            .iter()
+            .map(|((g, e), exe)| (format!("{g}/{e}"), exe.stats()))
+            .collect()
+    }
+}
+
+fn tracing_compile(group: &str, entry: &str, t0: Instant) {
+    if std::env::var_os("ATTN_REDUCE_QUIET").is_none() {
+        eprintln!(
+            "[runtime] compiled {group}/{entry} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,254 @@
+//! Dense row-major nd-array substrate.
+//!
+//! Deliberately minimal: the compute-heavy math lives in the AOT HLO
+//! artifacts; the coordinator only needs shape bookkeeping, block
+//! extraction/scatter (the paper's §II blocking), and a few reductions.
+
+use std::fmt;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.data.len() < 2 {
+            return 0.0;
+        }
+        let mu = self.mean();
+        let var = self
+            .data
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mu;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64;
+        var.sqrt()
+    }
+
+    /// Range max - min (the NRMSE denominator, Eq. 11).
+    pub fn range(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.max() - self.min()
+        }
+    }
+}
+
+/// Extract a hyper-rectangular block starting at `origin` with `size`,
+/// flattened row-major into `out`. Out-of-range positions are zero-padded
+/// so edge blocks keep a fixed shape (the AOT batch shapes are static).
+pub fn extract_block(t: &Tensor, origin: &[usize], size: &[usize], out: &mut [f32]) {
+    let rank = t.shape.len();
+    assert_eq!(origin.len(), rank);
+    assert_eq!(size.len(), rank);
+    assert_eq!(out.len(), size.iter().product::<usize>());
+    let strides = t.strides();
+    let mut idx = vec![0usize; rank];
+    for (oi, slot) in out.iter_mut().enumerate() {
+        // decode oi -> multi-index within the block
+        let mut rem = oi;
+        for d in (0..rank).rev() {
+            idx[d] = rem % size[d];
+            rem /= size[d];
+        }
+        let mut pos = 0usize;
+        let mut inside = true;
+        for d in 0..rank {
+            let p = origin[d] + idx[d];
+            if p >= t.shape[d] {
+                inside = false;
+                break;
+            }
+            pos += p * strides[d];
+        }
+        *slot = if inside { t.data[pos] } else { 0.0 };
+    }
+}
+
+/// Scatter a flattened block back into the tensor (inverse of
+/// [`extract_block`]; positions outside the tensor are dropped).
+pub fn scatter_block(t: &mut Tensor, origin: &[usize], size: &[usize], block: &[f32]) {
+    let rank = t.shape.len();
+    let strides = t.strides();
+    let mut idx = vec![0usize; rank];
+    for (oi, &val) in block.iter().enumerate() {
+        let mut rem = oi;
+        for d in (0..rank).rev() {
+            idx[d] = rem % size[d];
+            rem /= size[d];
+        }
+        let mut pos = 0usize;
+        let mut inside = true;
+        for d in 0..rank {
+            let p = origin[d] + idx[d];
+            if p >= t.shape[d] {
+                inside = false;
+                break;
+            }
+            pos += p * strides[d];
+        }
+        if inside {
+            t.data[pos] = val;
+        }
+    }
+}
+
+/// All block origins for tiling `shape` with `size` (ceil division — edge
+/// blocks are padded by [`extract_block`]). Row-major order.
+pub fn block_origins(shape: &[usize], size: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(shape.len(), size.len());
+    let counts: Vec<usize> = shape
+        .iter()
+        .zip(size)
+        .map(|(&s, &b)| s.div_ceil(b))
+        .collect();
+    let total: usize = counts.iter().product();
+    let mut out = Vec::with_capacity(total);
+    for i in 0..total {
+        let mut rem = i;
+        let mut origin = vec![0usize; shape.len()];
+        for d in (0..shape.len()).rev() {
+            origin[d] = (rem % counts[d]) * size[d];
+            rem /= counts[d];
+        }
+        out.push(origin);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::zeros(vec![2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn extract_then_scatter_round_trips() {
+        let data: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let t = Tensor::new(vec![4, 6], data);
+        let mut block = vec![0.0; 6];
+        extract_block(&t, &[1, 2], &[2, 3], &mut block);
+        assert_eq!(block, vec![8.0, 9.0, 10.0, 14.0, 15.0, 16.0]);
+        let mut t2 = Tensor::zeros(vec![4, 6]);
+        scatter_block(&mut t2, &[1, 2], &[2, 3], &block);
+        let mut back = vec![0.0; 6];
+        extract_block(&t2, &[1, 2], &[2, 3], &mut back);
+        assert_eq!(back, block);
+    }
+
+    #[test]
+    fn edge_blocks_zero_padded() {
+        let t = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let mut block = vec![9.0; 2];
+        extract_block(&t, &[2], &[2], &mut block);
+        assert_eq!(block, vec![3.0, 0.0]);
+    }
+
+    #[test]
+    fn block_origins_cover_with_ceil() {
+        let origins = block_origins(&[5, 4], &[2, 2]);
+        assert_eq!(origins.len(), 3 * 2);
+        assert_eq!(origins[0], vec![0, 0]);
+        assert_eq!(origins[5], vec![4, 2]);
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.max(), 4.0);
+        assert_eq!(t.range(), 3.0);
+        assert!((t.mean() - 2.5).abs() < 1e-9);
+    }
+}

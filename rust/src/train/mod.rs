@@ -1,0 +1,155 @@
+//! Training driver (paper §III-C: Adam, lr 1e-3, MSE; HBAE first, then
+//! the BAE on HBAE residuals).
+//!
+//! The rust side owns the loop — batching, shuffling, logging, checkpoint
+//! cadence — and calls the AOT `train_step` artifact for the math. One
+//! PJRT call per step; parameters stay host-side between steps (the perf
+//! pass revisits this with device-resident buffers if it shows up in the
+//! profile).
+
+use std::time::Instant;
+
+use crate::config::TrainConfig;
+use crate::data::Blocking;
+use crate::model::ParamStore;
+use crate::runtime::{HostTensor, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::Result;
+use anyhow::ensure;
+
+/// Loss trace from one training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub group: String,
+    pub steps: usize,
+    /// `(step, loss)` samples at `log_every` cadence plus the final step.
+    pub losses: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub wall_s: f64,
+}
+
+impl TrainReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} steps, loss {:.3e} -> {:.3e} ({:.1}s)",
+            self.group,
+            self.steps,
+            self.losses.first().map(|&(_, l)| l).unwrap_or(f32::NAN),
+            self.final_loss,
+            self.wall_s
+        )
+    }
+}
+
+/// Train any model group whose `train_step` signature is
+/// `(theta, m, v, t, lr, batch)`; `fill_batch` provides each step's batch.
+pub fn train_model(
+    rt: &Runtime,
+    store: &mut ParamStore,
+    cfg: &TrainConfig,
+    mut fill_batch: impl FnMut(usize, &mut [f32]),
+) -> Result<TrainReport> {
+    let step_exe = rt.load(&store.group, "train_step")?;
+    ensure!(
+        step_exe.info.inputs.len() == 6,
+        "{}: unexpected train_step arity",
+        store.group
+    );
+    let batch_sig = step_exe.info.inputs[5].clone();
+    let mut batch = vec![0f32; batch_sig.len()];
+    let lr = HostTensor::scalar(cfg.lr);
+
+    let t0 = Instant::now();
+    let mut losses = Vec::new();
+    let mut final_loss = f32::NAN;
+    for s in 0..cfg.steps {
+        fill_batch(s, &mut batch);
+        let [theta, m, v, t] = store.as_inputs();
+        let outs = step_exe.run(&[
+            theta,
+            m,
+            v,
+            t,
+            lr.clone(),
+            HostTensor::new(batch_sig.shape.clone(), batch.clone()),
+        ])?;
+        let loss = store.absorb(outs)?;
+        ensure!(loss.is_finite(), "{}: loss diverged at step {s}", store.group);
+        if s % cfg.log_every.max(1) == 0 || s + 1 == cfg.steps {
+            losses.push((s, loss));
+            if std::env::var_os("ATTN_REDUCE_QUIET").is_none() {
+                eprintln!("[train {}] step {s}: loss {loss:.4e}", store.group);
+            }
+        }
+        final_loss = loss;
+    }
+    Ok(TrainReport {
+        group: store.group.clone(),
+        steps: cfg.steps,
+        losses,
+        final_loss,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Train an HBAE on hyper-blocks sampled from a (normalized) field.
+pub fn train_hbae(
+    rt: &Runtime,
+    store: &mut ParamStore,
+    blocking: &Blocking,
+    field: &Tensor,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let step_exe = rt.load(&store.group, "train_step")?;
+    let shape = &step_exe.info.inputs[5].shape;
+    ensure!(shape.len() == 3, "hbae batch must be [Nh, k, bd]");
+    let (nh, k, bd) = (shape[0], shape[1], shape[2]);
+    ensure!(k == blocking.k && bd == blocking.block_dim(), "geometry mismatch");
+    let total = blocking.num_hyperblocks();
+    let mut rng = Rng::new(cfg.seed ^ 0x4842);
+    let mut order: Vec<usize> = (0..total).collect();
+    let mut cursor = usize::MAX; // force initial shuffle
+    train_model(rt, store, cfg, move |_, batch| {
+        for slot in 0..nh {
+            if cursor >= total {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let h = order[cursor];
+            cursor += 1;
+            blocking.gather(field, h, 1, &mut batch[slot * k * bd..(slot + 1) * k * bd]);
+        }
+    })
+}
+
+/// Train a BAE on residual rows `[num_rows, bd]` (flattened).
+pub fn train_bae(
+    rt: &Runtime,
+    store: &mut ParamStore,
+    residuals: &[f32],
+    bd: usize,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    ensure!(residuals.len() % bd == 0, "residual buffer not a multiple of bd");
+    let rows = residuals.len() / bd;
+    ensure!(rows > 0, "no residual rows");
+    let step_exe = rt.load(&store.group, "train_step")?;
+    let shape = &step_exe.info.inputs[5].shape;
+    ensure!(shape.len() == 2 && shape[1] == bd, "bae batch must be [Nb, {bd}]");
+    let nb = shape[0];
+    let mut rng = Rng::new(cfg.seed ^ 0x4241);
+    let mut order: Vec<usize> = (0..rows).collect();
+    let mut cursor = usize::MAX;
+    train_model(rt, store, cfg, move |_, batch| {
+        for slot in 0..nb {
+            if cursor >= rows {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let r = order[cursor];
+            cursor += 1;
+            batch[slot * bd..(slot + 1) * bd].copy_from_slice(&residuals[r * bd..(r + 1) * bd]);
+        }
+    })
+}

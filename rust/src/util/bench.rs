@@ -1,0 +1,212 @@
+//! Micro-benchmark harness (criterion substitute; DESIGN.md §4).
+//!
+//! Plain `harness = false` benches call [`Bench::run`] per case: warmup,
+//! then timed iterations until a wall-clock budget or max-iter cap, then
+//! mean / median / p95 / stddev over per-iteration times. Results print as
+//! a table and can be appended to a CSV for EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional throughput denominator (elements/bytes per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / (self.mean_ns * 1e-9))
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} k/s", r / 1e3)
+    } else {
+        format!("{r:.1} /s")
+    }
+}
+
+pub struct Bench {
+    pub budget: Duration,
+    pub warmup: Duration,
+    pub max_iters: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            budget: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let mut b = Self::default();
+        // quick mode for CI / smoke runs
+        if std::env::var_os("BENCH_FAST").is_some() {
+            b.budget = Duration::from_millis(300);
+            b.warmup = Duration::from_millis(50);
+        }
+        b
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Stats {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Benchmark with a throughput denominator (items or bytes per iter).
+    pub fn run_items<F: FnMut()>(&mut self, name: &str, items: f64, mut f: F) -> &Stats {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items(&mut self, name: &str, items: Option<f64>, f: &mut dyn FnMut()) -> &Stats {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // timed
+        let mut times = Vec::with_capacity(256);
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && times.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_nanos() as f64);
+        }
+        if times.is_empty() {
+            times.push(0.0);
+        }
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times.len();
+        let mean = times.iter().sum::<f64>() / n as f64;
+        let median = sorted[n / 2];
+        let p95 = sorted[((n as f64) * 0.95) as usize % n];
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            stddev_ns: var.sqrt(),
+            items_per_iter: items,
+        };
+        let tp = stats
+            .throughput_per_sec()
+            .map(|r| format!("  [{}]", fmt_rate(r)))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>10}  median {:>10}  p95 {:>10}  ±{:>9}  n={}{}",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+            fmt_ns(stats.stddev_ns),
+            stats.iters,
+            tp
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Append all results to a CSV (for EXPERIMENTS.md §Perf bookkeeping).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::fs::File::create(path)?;
+        writeln!(w, "name,iters,mean_ns,median_ns,p95_ns,stddev_ns,items_per_iter")?;
+        for s in &self.results {
+            writeln!(
+                w,
+                "{},{},{:.1},{:.1},{:.1},{:.1},{}",
+                s.name,
+                s.iters,
+                s.mean_ns,
+                s.median_ns,
+                s.p95_ns,
+                s.stddev_ns,
+                s.items_per_iter.map(|x| x.to_string()).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench {
+            budget: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            max_iters: 1000,
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        let s = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters >= 1);
+    }
+
+    #[test]
+    fn csv_written(){
+        let mut b = Bench {
+            budget: Duration::from_millis(5),
+            warmup: Duration::from_millis(1),
+            max_iters: 10,
+            results: vec![],
+        };
+        b.run_items("x", 100.0, || {});
+        let path = std::env::temp_dir().join("attn_reduce_bench_test.csv");
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() == 2);
+        assert!(text.contains("x,"));
+    }
+}

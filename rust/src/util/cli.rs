@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (clap substitute; DESIGN.md §4).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::HashMap;
+
+use crate::Result;
+use anyhow::bail;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name). `flag_names` lists
+    /// options that take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if i + 1 < raw.len() {
+                    out.options.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    bail!("option --{body} needs a value");
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.get_f64(name, default as f64)? as f32)
+    }
+
+    /// Comma-separated f64 list.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse::<f64>().map_err(Into::into))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(
+            &sv(&["compress", "--dataset", "s3d", "--tau=0.5", "--verbose", "out.ar"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["compress", "out.ar"]);
+        assert_eq!(a.get("dataset"), Some("s3d"));
+        assert_eq!(a.get_f64("tau", 0.0).unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--dataset"]), &[]).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--taus", "0.1, 0.2,0.3"]), &[]).unwrap();
+        assert_eq!(a.get_f64_list("taus", &[]).unwrap(), vec![0.1, 0.2, 0.3]);
+        assert_eq!(a.get_f64_list("other", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+        assert_eq!(a.get_or("name", "x"), "x");
+    }
+}

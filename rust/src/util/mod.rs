@@ -1,0 +1,12 @@
+//! In-repo infrastructure substrate.
+//!
+//! This box builds offline against a minimal vendored crate set (xla,
+//! anyhow, zstd). Everything one would normally pull from crates.io —
+//! JSON, CLI parsing, RNG, a thread pool, a bench harness, property
+//! testing — is implemented here instead (DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;

@@ -1,0 +1,116 @@
+//! Scoped-thread data parallelism (rayon substitute; DESIGN.md §4).
+//!
+//! The GAE stage (Algorithm 1) and the baselines are embarrassingly
+//! parallel over blocks; `par_chunks_mut` / `par_map` split work across
+//! `available_parallelism()` OS threads with `std::thread::scope`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (env `ATTN_REDUCE_THREADS` overrides).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ATTN_REDUCE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel map with work stealing over an index range; preserves order.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    struct SendPtr<T>(*mut Option<T>);
+    unsafe impl<T: Send> Send for SendPtr<T> {}
+    unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let slots = SendPtr(out.as_mut_ptr());
+    let slots_ref = &slots;
+    // SAFETY: each index is claimed exactly once via the atomic counter, so
+    // every Option slot is written by at most one thread; the vec itself is
+    // not resized while the scope is alive.
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let val = f(i);
+                unsafe {
+                    *slots_ref.0.add(i) = Some(val);
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Parallel for-each over mutable chunks of a slice.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let threads = num_threads().min(chunks.len().max(1));
+    if threads <= 1 {
+        for (i, c) in chunks {
+            f(i, c);
+        }
+        return;
+    }
+    let work = std::sync::Mutex::new(chunks);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                match item {
+                    Some((i, c)) => f(i, c),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_every_chunk_once() {
+        let mut data = vec![0u32; 103]; // non-divisible length
+        par_chunks_mut(&mut data, 10, |i, c| {
+            for v in c.iter_mut() {
+                *v += 1 + i as u32;
+            }
+        });
+        assert!(data.iter().all(|&v| v >= 1));
+        assert_eq!(data[0], 1);
+        assert_eq!(data[102], 11); // chunk index 10
+    }
+}

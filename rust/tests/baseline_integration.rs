@@ -1,0 +1,145 @@
+//! Baseline compressors on real synthetic fields: error-bound / rate
+//! behaviour that Fig. 6 depends on.
+
+use attn_reduce::baselines::{GbaeCompressor, Sz3Like, ZfpLike};
+use attn_reduce::compressor::nrmse;
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
+use attn_reduce::data;
+use attn_reduce::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        return None;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    Some(Runtime::open(dir).expect("open artifacts"))
+}
+
+#[test]
+fn sz3_like_bound_and_monotone_rate_on_all_datasets() {
+    for kind in [DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc] {
+        let cfg = dataset_preset(kind, Scale::Smoke);
+        let field = data::generate(&cfg);
+        let range = field.range();
+        let mut last_bytes = usize::MAX;
+        for rel_eps in [1e-2f32, 1e-3, 1e-4] {
+            let eps = rel_eps * range;
+            let bytes = Sz3Like::new(eps).compress(&field).unwrap();
+            let back = Sz3Like::decompress(&bytes).unwrap();
+            let max_err = field
+                .data()
+                .iter()
+                .zip(back.data())
+                .map(|(&a, &b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(max_err <= eps * 1.0001, "{kind:?} eps={eps}: {max_err}");
+            assert!(
+                bytes.len() >= last_bytes.min(bytes.len()),
+                "rate should grow as eps shrinks"
+            );
+            last_bytes = bytes.len();
+        }
+    }
+}
+
+#[test]
+fn zfp_like_rate_distortion_on_e3sm() {
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let mut last_err = f64::INFINITY;
+    let mut last_bytes = 0usize;
+    for p in [6u32, 12, 20] {
+        let bytes = ZfpLike::new(p).compress(&field).unwrap();
+        let back = ZfpLike::decompress(&bytes).unwrap();
+        let e = nrmse(&field, &back);
+        assert!(e < last_err, "p={p}: {e} !< {last_err}");
+        assert!(bytes.len() > last_bytes);
+        last_err = e;
+        last_bytes = bytes.len();
+    }
+    assert!(last_err < 1e-4, "high precision should be accurate: {last_err}");
+}
+
+#[test]
+fn gbae_baseline_trains_and_bounds() {
+    let Some(rt) = runtime() else { return };
+    let cfg = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let mut train = TrainConfig::default();
+    train.steps = 20;
+    train.log_every = 1000;
+    let ckpt = std::env::temp_dir().join("attn_reduce_gbae_test");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let (gbae, reports) = GbaeCompressor::prepare(
+        &rt,
+        &cfg,
+        "s3d_bae_L16",
+        &ckpt,
+        &field,
+        &train,
+        None,
+    )
+    .unwrap();
+    for r in &reports {
+        assert!(r.final_loss < r.losses[0].1);
+    }
+    // without GAE: lossy recon, some payload
+    let res = gbae.compress(&field, 0.0, 0.0).unwrap();
+    assert_eq!(res.recon.shape(), field.shape());
+    let e0 = nrmse(&field, &res.recon);
+    assert!(e0 > 0.0 && e0 < 0.5, "plausible AE error: {e0}");
+
+    // with GAE at a bound: error drops below the bound-implied NRMSE
+    let tau = attn_reduce::config::PipelineConfig::tau_for_nrmse(
+        2e-3,
+        field.range() as f64,
+        cfg.gae_block_len(),
+    );
+    let res2 = gbae.compress(&field, 0.0, tau).unwrap();
+    let e = nrmse(&field, &res2.recon);
+    assert!(e <= 2e-3 * 1.01, "GAE-bounded NRMSE {e}");
+    assert!(res2.payload_bytes > res.payload_bytes);
+    assert!(res2.gae_coeffs > 0);
+}
+
+#[test]
+fn hier_beats_gbae_at_matched_payload_shape() {
+    // the paper's central claim at ablation level: hierarchical (HBAE+BAE)
+    // reaches lower NRMSE than the block-AE baseline at comparable payload.
+    // At smoke scale + few steps we only assert the qualitative ordering
+    // of AE reconstruction error with the same latent budget per block.
+    let Some(rt) = runtime() else { return };
+    let cfg = dataset_preset(DatasetKind::Xgc, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let mut train = TrainConfig::default();
+    train.steps = 30;
+    train.log_every = 1000;
+
+    let ckpt = std::env::temp_dir().join("attn_reduce_cmp_test");
+    std::fs::create_dir_all(&ckpt).unwrap();
+
+    let pcfg = attn_reduce::config::PipelineConfig {
+        dataset: cfg.clone(),
+        model: attn_reduce::config::model_preset(DatasetKind::Xgc),
+        train: train.clone(),
+        tau: 0.0,
+    };
+    let (hier, _) =
+        attn_reduce::compressor::HierCompressor::prepare(&rt, &pcfg, &ckpt, &field).unwrap();
+    let (_, hier_recon) = hier.compress(&field, 0.0).unwrap();
+    let e_hier = nrmse(&field, &hier_recon);
+
+    let (gbae, _) = GbaeCompressor::prepare(
+        &rt, &cfg, "xgc_bae_L16", &ckpt, &field, &train, None,
+    )
+    .unwrap();
+    let res = gbae.compress(&field, 0.0, 0.0).unwrap();
+    let e_gbae = nrmse(&field, &res.recon);
+
+    eprintln!("hier NRMSE {e_hier:.3e} vs gbae NRMSE {e_gbae:.3e}");
+    // hier uses HBAE latent (64/hyper-block) + BAE latent (16/block) vs
+    // gbae 16/block: hier has more capacity and inter-block context; it
+    // should reconstruct better.
+    assert!(e_hier < e_gbae, "hierarchical should beat block baseline");
+}

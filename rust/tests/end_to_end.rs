@@ -1,0 +1,214 @@
+//! End-to-end integration: generate → train → compress → decompress →
+//! verify the per-block error bound and metrics, at smoke scale, for all
+//! three dataset presets. Requires `make artifacts`.
+
+use attn_reduce::compressor::{gae_taus, nrmse, Archive, HierCompressor};
+use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
+use attn_reduce::data::{self, Normalizer};
+use attn_reduce::linalg::norm2_f32;
+use attn_reduce::model::ParamStore;
+use attn_reduce::runtime::Runtime;
+use attn_reduce::tensor::{block_origins, extract_block};
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    Some(Runtime::open(dir).expect("open artifacts"))
+}
+
+fn smoke_cfg(kind: DatasetKind) -> PipelineConfig {
+    let mut cfg = PipelineConfig {
+        dataset: dataset_preset(kind, Scale::Smoke),
+        model: model_preset(kind),
+        train: Default::default(),
+        tau: 0.0,
+    };
+    cfg.train.steps = 25;
+    cfg.train.log_every = 1000;
+    cfg
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("attn_reduce_e2e_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Core assertion: the per-GAE-block ℓ2 bound holds in the ORIGINAL domain.
+fn assert_bound_holds(
+    cfg: &PipelineConfig,
+    field: &attn_reduce::tensor::Tensor,
+    recon: &attn_reduce::tensor::Tensor,
+    tau: f32,
+) {
+    let d = cfg.dataset.gae_block_len();
+    let origins = block_origins(&cfg.dataset.dims, &cfg.dataset.gae_block);
+    let mut a = vec![0f32; d];
+    let mut b = vec![0f32; d];
+    let mut worst = 0f64;
+    for o in &origins {
+        extract_block(field, o, &cfg.dataset.gae_block, &mut a);
+        extract_block(recon, o, &cfg.dataset.gae_block, &mut b);
+        let diff: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
+        let e = norm2_f32(&diff);
+        worst = worst.max(e / tau as f64);
+        assert!(
+            e <= tau as f64 * 1.001,
+            "block at {o:?}: ||err|| = {e} > tau = {tau}"
+        );
+    }
+    eprintln!("worst block error / tau = {worst:.3}");
+}
+
+fn run_dataset(kind: DatasetKind, tag: &str) {
+    let Some(rt) = runtime() else { return };
+    let cfg = smoke_cfg(kind);
+    let field = data::generate(&cfg.dataset);
+    let ckpt = ckpt_dir(tag);
+    let (comp, reports) =
+        HierCompressor::prepare(&rt, &cfg, &ckpt, &field).expect("prepare");
+    // training ran (first time) and reduced loss
+    for r in &reports {
+        assert!(r.final_loss < r.losses[0].1, "{}", r.summary());
+    }
+
+    let tau = PipelineConfig::tau_for_nrmse(
+        2e-3,
+        field.range() as f64,
+        cfg.dataset.gae_block_len(),
+    );
+    let (archive, recon) = comp.compress(&field, tau).expect("compress");
+    assert_eq!(recon.shape(), field.shape());
+    assert_bound_holds(&cfg, &field, &recon, tau);
+
+    // NRMSE consistent with the bound construction (Eq. 11): if every
+    // block is at most tau, dataset NRMSE <= target
+    let e = nrmse(&field, &recon);
+    assert!(e <= 2e-3 * 1.01, "NRMSE {e}");
+    assert!(e > 0.0, "lossy compressor should not be exact");
+
+    // archive round-trips through bytes
+    let bytes = archive.to_bytes();
+    let archive2 = Archive::from_bytes(&bytes).expect("parse");
+
+    // decompress reproduces the compressor's reconstruction
+    let hbae = ParamStore::load(
+        ParamStore::default_path(&ckpt, &cfg.model.hbae_group),
+        &cfg.model.hbae_group,
+    )
+    .unwrap();
+    let bae = ParamStore::load(
+        ParamStore::default_path(&ckpt, &cfg.model.bae_group),
+        &cfg.model.bae_group,
+    )
+    .unwrap();
+    let recon2 = HierCompressor::decompress(&rt, &archive2, &hbae, &[bae]).expect("decompress");
+    let max_d = recon
+        .data()
+        .iter()
+        .zip(recon2.data())
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    let scale = field.range();
+    assert!(
+        max_d <= 2e-5 * scale,
+        "decompress disagrees with compress by {max_d} (range {scale})"
+    );
+    // the decompressed output satisfies the bound too
+    assert_bound_holds(&cfg, &field, &recon2, tau);
+
+    // compression actually compresses (paper accounting)
+    let stats = comp.stats(&archive);
+    assert!(stats.cr > 1.0, "CR = {}", stats.cr);
+}
+
+#[test]
+fn s3d_end_to_end() {
+    run_dataset(DatasetKind::S3d, "s3d");
+}
+
+#[test]
+fn e3sm_end_to_end() {
+    run_dataset(DatasetKind::E3sm, "e3sm");
+}
+
+#[test]
+fn xgc_end_to_end() {
+    run_dataset(DatasetKind::Xgc, "xgc");
+}
+
+#[test]
+fn tighter_tau_gives_lower_error_and_bigger_archive() {
+    let Some(rt) = runtime() else { return };
+    let cfg = smoke_cfg(DatasetKind::S3d);
+    let field = data::generate(&cfg.dataset);
+    let ckpt = ckpt_dir("s3d_tau");
+    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field).unwrap();
+    let range = field.range() as f64;
+    let d = cfg.dataset.gae_block_len();
+    let tau_loose = PipelineConfig::tau_for_nrmse(5e-3, range, d);
+    let tau_tight = PipelineConfig::tau_for_nrmse(5e-4, range, d);
+    let (a_loose, r_loose) = comp.compress(&field, tau_loose).unwrap();
+    let (a_tight, r_tight) = comp.compress(&field, tau_tight).unwrap();
+    assert!(nrmse(&field, &r_tight) < nrmse(&field, &r_loose));
+    assert!(a_tight.cr_payload_bytes() > a_loose.cr_payload_bytes());
+}
+
+#[test]
+fn gae_disabled_when_tau_zero() {
+    let Some(rt) = runtime() else { return };
+    let cfg = smoke_cfg(DatasetKind::S3d);
+    let field = data::generate(&cfg.dataset);
+    let ckpt = ckpt_dir("s3d_notau");
+    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field).unwrap();
+    let (archive, _) = comp.compress(&field, 0.0).unwrap();
+    assert!(!archive.has_section("GCOF"));
+    assert!(!archive.has_section("GBAS"));
+}
+
+#[test]
+fn streaming_coordinator_matches_sequential() {
+    let Some(rt) = runtime() else { return };
+    let cfg = smoke_cfg(DatasetKind::E3sm);
+    let field = data::generate(&cfg.dataset);
+    let ckpt = ckpt_dir("e3sm_stream");
+    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field).unwrap();
+    let out = attn_reduce::coordinator::stream_compress(&comp, &field, 4).unwrap();
+    // same AE stack sequentially (tau=0 so recon is the AE output)
+    let (_, recon_seq) = comp.compress(&field, 0.0).unwrap();
+    // stream recon is normalized-domain; denormalize to compare
+    let stats = Normalizer::fit(cfg.dataset.normalization, &field);
+    let mut stream_recon = out.recon;
+    Normalizer::invert(&stats, &mut stream_recon);
+    let max_d = recon_seq
+        .data()
+        .iter()
+        .zip(stream_recon.data())
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    assert!(
+        max_d <= 1e-4 * field.range(),
+        "stream vs sequential differ by {max_d}"
+    );
+    assert!(out.stats.batches > 0);
+    // e3sm smoke: 24/6 = 4 temporal blocks -> 1 padded hyper-group x 2x2 tiles
+    assert_eq!(out.stats.hyperblocks, 4);
+    eprintln!("{}", out.stats.summary());
+}
+
+#[test]
+fn normalized_taus_transfer_to_original_domain() {
+    // unit-level check of the tau conversion the bound relies on
+    let cfg = smoke_cfg(DatasetKind::S3d);
+    let field = data::generate(&cfg.dataset);
+    let stats = Normalizer::fit(cfg.dataset.normalization, &field);
+    let origins = block_origins(&cfg.dataset.dims, &cfg.dataset.gae_block);
+    let taus = gae_taus(&cfg.dataset, &stats, 0.5, &origins);
+    for (o, &t) in origins.iter().zip(&taus) {
+        let ch = o[0];
+        let scale = stats.channels[ch].1;
+        assert!((t as f64 * scale - 0.5).abs() < 1e-6);
+    }
+}

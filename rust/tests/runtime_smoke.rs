@@ -1,0 +1,154 @@
+//! Integration smoke test: load real AOT artifacts, execute them via PJRT,
+//! and check numerics against invariants the python tests established.
+//!
+//! Requires `make artifacts` (skipped otherwise).
+
+use attn_reduce::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    Some(Runtime::open(dir).expect("open artifacts"))
+}
+
+#[test]
+fn init_encode_decode_round_trip_shapes() {
+    let Some(rt) = runtime() else { return };
+    let group = "s3d_bae_L16";
+    let pdim = rt.param_dim(group).unwrap();
+
+    let init = rt.load(group, "init").unwrap();
+    let theta = &init.run(&[]).unwrap()[0];
+    assert_eq!(theta.shape, vec![pdim]);
+    // glorot weights bounded; layernorm gammas are exactly 1
+    let mx = theta.data.iter().fold(0f32, |a, &b| a.max(b.abs()));
+    assert!(mx > 0.0 && mx <= 1.0, "max |theta| = {mx}");
+
+    let enc = rt.load(group, "encode").unwrap();
+    let batch_sig = &enc.info.inputs[1];
+    let n: usize = batch_sig.len();
+    let r = HostTensor::new(batch_sig.shape.clone(),
+                            (0..n).map(|i| (i as f32 * 0.37).sin() * 0.1).collect());
+    let lat = &enc.run(&[theta.clone(), r.clone()]).unwrap()[0];
+    assert_eq!(lat.shape, enc.info.outputs[0].shape);
+
+    let dec = rt.load(group, "decode").unwrap();
+    let rhat = &dec.run(&[theta.clone(), lat.clone()]).unwrap()[0];
+    assert_eq!(rhat.shape, r.shape);
+    assert!(rhat.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_decreases_loss_via_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let group = "s3d_bae_L16";
+    let pdim = rt.param_dim(group).unwrap();
+    let init = rt.load(group, "init").unwrap();
+    let step = rt.load(group, "train_step").unwrap();
+
+    let mut theta = init.run(&[]).unwrap().remove(0);
+    let mut m = HostTensor::vec(vec![0.0; pdim]);
+    let mut v = HostTensor::vec(vec![0.0; pdim]);
+    let mut t = HostTensor::scalar(0.0);
+    let lr = HostTensor::scalar(1e-3);
+    let bs = step.info.inputs[5].clone();
+    let batch = HostTensor::new(
+        bs.shape.clone(),
+        (0..bs.len()).map(|i| ((i % 97) as f32 / 97.0 - 0.5) * 0.2).collect(),
+    );
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let mut out = step
+            .run(&[theta.clone(), m.clone(), v.clone(), t.clone(), lr.clone(), batch.clone()])
+            .unwrap();
+        let loss = out.pop().unwrap().scalar_value();
+        t = out.pop().unwrap();
+        v = out.pop().unwrap();
+        m = out.pop().unwrap();
+        theta = out.pop().unwrap();
+        losses.push(loss);
+    }
+    assert_eq!(t.scalar_value(), 8.0, "adam step counter");
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss should drop: {losses:?}"
+    );
+}
+
+#[test]
+fn pipe_forward_matches_separate_calls() {
+    let Some(rt) = runtime() else { return };
+    let hg = "s3d_hbae_L128";
+    let bg = "s3d_bae_L16";
+    let pg = "s3d_pipe_L128_16";
+
+    let theta = rt.load(hg, "init").unwrap().run(&[]).unwrap().remove(0);
+    let phi = rt.load(bg, "init").unwrap().run(&[]).unwrap().remove(0);
+
+    let fwd = rt.load(pg, "forward").unwrap();
+    let bsig = fwd.info.inputs[2].clone();
+    let batch = HostTensor::new(
+        bsig.shape.clone(),
+        (0..bsig.len()).map(|i| ((i * 31 % 101) as f32 / 101.0 - 0.5)).collect(),
+    );
+    let zero = HostTensor::scalar(0.0);
+    let outs = fwd
+        .run(&[theta.clone(), phi.clone(), batch.clone(), zero.clone(), zero.clone()])
+        .unwrap();
+    let (lh, lb, recon) = (&outs[0], &outs[1], &outs[2]);
+
+    // separate-call path must agree
+    let enc = rt.load(hg, "encode").unwrap();
+    let lh2 = &enc.run(&[theta.clone(), batch.clone()]).unwrap()[0];
+    let max_d = lh
+        .data
+        .iter()
+        .zip(&lh2.data)
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    assert!(max_d < 1e-4, "hbae latents disagree by {max_d}");
+
+    // pipe decode(lh, lb) must reproduce recon
+    let dec = rt.load(pg, "decode").unwrap();
+    let recon2 = &dec.run(&[theta, phi, lh.clone(), lb.clone()]).unwrap()[0];
+    let max_r = recon
+        .data
+        .iter()
+        .zip(&recon2.data)
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    assert!(max_r < 1e-4, "pipe decode disagrees by {max_r}");
+}
+
+#[test]
+fn quantized_latents_snap_to_bins() {
+    let Some(rt) = runtime() else { return };
+    let pg = "s3d_pipe_L128_16";
+    let theta = rt.load("s3d_hbae_L128", "init").unwrap().run(&[]).unwrap().remove(0);
+    let phi = rt.load("s3d_bae_L16", "init").unwrap().run(&[]).unwrap().remove(0);
+    let fwd = rt.load(pg, "forward").unwrap();
+    let bsig = fwd.info.inputs[2].clone();
+    let batch = HostTensor::new(
+        bsig.shape.clone(),
+        (0..bsig.len()).map(|i| ((i * 13 % 89) as f32 / 89.0 - 0.5)).collect(),
+    );
+    let bin = 0.05f32;
+    let outs = fwd
+        .run(&[theta, phi, batch, HostTensor::scalar(bin), HostTensor::scalar(0.0)])
+        .unwrap();
+    for &x in &outs[0].data {
+        let code = x / bin;
+        assert!((code - code.round()).abs() < 1e-3, "latent {x} not on grid");
+    }
+}
+
+#[test]
+fn manifest_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let enc = rt.load("s3d_bae_L16", "encode").unwrap();
+    let bad = HostTensor::new(vec![1], vec![0.0]);
+    assert!(enc.run(&[bad.clone(), bad]).is_err());
+}
