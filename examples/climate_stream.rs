@@ -1,6 +1,7 @@
 //! Streaming compression of the E3SM-like climate field through the L3
-//! coordinator: pipelined gather → PJRT → entropy/scatter stages over
-//! bounded channels, with per-stage busy times and end-to-end throughput.
+//! coordinator, routed through the unified codec: pipelined gather →
+//! PJRT → entropy/scatter stages over bounded channels, producing the
+//! same self-describing archive as the one-shot path.
 //!
 //! Demonstrates the backpressure design: a queue depth of 0 (rendezvous)
 //! serializes the stages; deeper queues let the gather and sink stages
@@ -10,10 +11,12 @@
 //! cargo run --release --example climate_stream [-- --steps 150]
 //! ```
 
-use attn_reduce::compressor::{nrmse, HierCompressor};
-use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
-use attn_reduce::coordinator::stream_compress;
-use attn_reduce::data::{self, Normalizer};
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, ErrorBound};
+use attn_reduce::compressor::nrmse;
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
+use attn_reduce::data;
 use attn_reduce::runtime::Runtime;
 use attn_reduce::util::cli::Args;
 
@@ -21,48 +24,54 @@ fn main() -> attn_reduce::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, &[])?;
 
-    let rt = Runtime::open("artifacts")?;
-    let mut cfg = PipelineConfig {
-        dataset: dataset_preset(DatasetKind::E3sm, Scale::Bench),
-        model: model_preset(DatasetKind::E3sm),
-        train: Default::default(),
-        tau: 0.0,
-    };
-    cfg.train.steps = args.get_usize("steps", 150)?;
+    let rt = Rc::new(Runtime::open("artifacts")?);
+    let dataset = dataset_preset(DatasetKind::E3sm, Scale::Bench);
 
     println!("== climate_stream: E3SM PSL surrogate, streaming coordinator ==");
-    let field = data::generate(&cfg.dataset);
+    let field = data::generate(&dataset);
     println!(
         "field {:?} ({:.1} MB), range [{:.0}, {:.0}] Pa",
-        cfg.dataset.dims,
+        dataset.dims,
         (field.len() * 4) as f64 / 1e6,
         field.min(),
         field.max()
     );
 
-    let ckpt = std::path::PathBuf::from("results/ckpt");
-    std::fs::create_dir_all(&ckpt)?;
-    let (comp, reports) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
-    for r in &reports {
-        println!("trained {}", r.summary());
-    }
+    let mut builder = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Bench)
+        .ckpt_dir("results/ckpt")
+        .train(TrainConfig { steps: args.get_usize("steps", 150)?, ..TrainConfig::default() });
+    let codec = builder.build_hier(DatasetKind::E3sm, &field)?;
 
-    println!("\n-- queue-depth sweep (backpressure tuning) --");
+    let bound = ErrorBound::Nrmse(1e-3);
+    println!("\n-- queue-depth sweep (backpressure tuning, bound {bound}) --");
     for depth in [0usize, 1, 2, 4, 8] {
-        let out = stream_compress(&comp, &field, depth)?;
-        println!("queue={depth}: {}", out.stats.summary());
+        let (_, stats) = codec.compress_streaming(&field, &bound, depth)?;
+        println!("queue={depth}: {}", stats.summary());
     }
 
-    // correctness cross-check against the sequential path
-    let out = stream_compress(&comp, &field, 4)?;
-    let stats = Normalizer::fit(cfg.dataset.normalization, &field);
-    let mut recon = out.recon;
-    Normalizer::invert(&stats, &mut recon);
+    // correctness cross-check (AE-only, GAE off, so the comparison is
+    // exact): the streamed archive decodes to the sequential recon
+    let (archive_stream, _) = codec.compress_streaming(&field, &ErrorBound::None, 4)?;
+    let (archive_seq, recon_seq) = codec.compress_with_recon(&field, &ErrorBound::None)?;
+    let recon_stream = codec.decompress(&archive_stream)?;
+    let max_d = recon_seq
+        .data()
+        .iter()
+        .zip(recon_stream.data())
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    let s = archive_stats(&archive_stream)?;
     println!(
-        "\nstreamed AE reconstruction NRMSE = {:.3e} (quantized latents: {} HBAE, {} BAE codes)",
-        nrmse(&field, &recon),
-        out.lh_codes.len(),
-        out.lb_codes.len()
+        "\nstreamed archive: CR = {:.1}, NRMSE = {:.3e}, max |stream - seq| = {max_d:.3e}",
+        s.cr,
+        nrmse(&field, &recon_stream)
     );
+    println!(
+        "sequential archive bytes = {}, streamed = {}",
+        archive_seq.total_bytes(),
+        archive_stream.total_bytes()
+    );
+    assert!(max_d <= 1e-4 * field.range(), "stream vs sequential differ by {max_d}");
     Ok(())
 }

@@ -1,12 +1,13 @@
-//! End-to-end driver (DESIGN.md §"End-to-end validation"): exercises the
-//! whole three-layer stack on a realistic workload.
+//! End-to-end driver: exercises the whole three-layer stack on a
+//! realistic workload through the unified codec API.
 //!
 //! * trains the HBAE (≈2.4 M params) + BAE for a few hundred Adam steps
 //!   through the AOT `train_step` artifacts (L2/L1 fwd+bwd on PJRT),
 //!   logging the loss curve,
 //! * compresses the bench-scale multi-species combustion field at several
-//!   error bounds, reporting CR / NRMSE per bound,
-//! * decompresses and re-verifies the guarantee from the archive alone.
+//!   typed NRMSE bounds, reporting CR / NRMSE per bound,
+//! * restores each archive from its serialized bytes alone (header-driven
+//!   codec reconstruction) and re-verifies the guarantee.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 //!
@@ -14,7 +15,10 @@
 //! cargo run --release --example e2e_s3d [-- --steps 300]
 //! ```
 
-use attn_reduce::compressor::{mean_channel_nrmse, HierCompressor};
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, ErrorBound, HierCodec};
+use attn_reduce::compressor::{mean_channel_nrmse, Archive, HierCompressor};
 use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
 use attn_reduce::data;
 use attn_reduce::linalg::norm2_f32;
@@ -28,7 +32,7 @@ fn main() -> attn_reduce::Result<()> {
     let args = Args::parse(&raw, &[])?;
     let steps = args.get_usize("steps", 300)?;
 
-    let rt = Runtime::open("artifacts")?;
+    let rt = Rc::new(Runtime::open("artifacts")?);
     let mut cfg = PipelineConfig {
         dataset: dataset_preset(DatasetKind::S3d, Scale::Bench),
         model: model_preset(DatasetKind::S3d),
@@ -62,44 +66,41 @@ fn main() -> attn_reduce::Result<()> {
         }
         println!("  ({:.1}s, {:.2} steps/s)", r.wall_s, r.steps as f64 / r.wall_s);
     }
+    let codec = HierCodec::new(comp);
+    let mut builder = CodecBuilder::new().runtime(rt.clone()).ckpt_dir(&ckpt);
 
-    // --- compress across bounds ---
+    // --- compress across typed bounds ---
     println!("\n-- compression sweep (paper-accounting CR) --");
     println!(
-        "{:>10} {:>12} {:>10} {:>10} {:>12} {:>10}",
-        "target", "tau", "CR", "CR(all)", "meanNRMSE", "GAE-coeff"
+        "{:>12} {:>10} {:>10} {:>12} {:>10}",
+        "bound", "CR", "CR(all)", "meanNRMSE", "GCOF"
     );
-    let d = cfg.dataset.gae_block_len();
-    let range = field.range() as f64;
+    let dataset = &cfg.dataset;
+    let d = dataset.gae_block_len();
     for target in [3e-3f64, 1e-3, 3e-4, 1e-4] {
-        let tau = PipelineConfig::tau_for_nrmse(target, range, d);
-        let (archive, recon) = comp.compress(&field, tau)?;
-        let stats = comp.stats(&archive);
+        let bound = ErrorBound::Nrmse(target);
+        let (archive, recon) = codec.compress_with_recon(&field, &bound)?;
+        let stats = archive_stats(&archive)?;
         let e = mean_channel_nrmse(&field, &recon);
         let gcof = archive.section("GCOF").map(|b| b.len()).unwrap_or(0);
         println!(
-            "{target:>10.0e} {tau:>12.4e} {:>10.1} {:>10.1} {e:>12.3e} {gcof:>9}B",
-            stats.cr, stats.cr_total
+            "{:>12} {:>10.1} {:>10.1} {e:>12.3e} {gcof:>9}B",
+            bound.to_string(),
+            stats.cr,
+            stats.cr_total
         );
 
-        // verify the bound from a decompression of the serialized archive
-        let bytes = archive.to_bytes();
-        let archive2 = attn_reduce::compressor::Archive::from_bytes(&bytes)?;
-        let hbae = ParamStore::load(
-            ParamStore::default_path(&ckpt, &cfg.model.hbae_group),
-            &cfg.model.hbae_group,
-        )?;
-        let bae = ParamStore::load(
-            ParamStore::default_path(&ckpt, &cfg.model.bae_group),
-            &cfg.model.bae_group,
-        )?;
-        let recon2 = HierCompressor::decompress(&rt, &archive2, &hbae, &[bae])?;
-        let origins = block_origins(&cfg.dataset.dims, &cfg.dataset.gae_block);
+        // verify the bound via a header-driven restore of the serialized
+        // archive (no preset flags, no manual checkpoint plumbing)
+        let archive2 = Archive::from_bytes(&archive.to_bytes())?;
+        let recon2 = builder.for_archive(&archive2)?.decompress(&archive2)?;
+        let tau = bound.gae_tau(dataset, field.range() as f64);
+        let origins = block_origins(&dataset.dims, &dataset.gae_block);
         let (mut a, mut b) = (vec![0f32; d], vec![0f32; d]);
         let mut worst: f64 = 0.0;
         for o in &origins {
-            extract_block(&field, o, &cfg.dataset.gae_block, &mut a);
-            extract_block(&recon2, o, &cfg.dataset.gae_block, &mut b);
+            extract_block(&field, o, &dataset.gae_block, &mut a);
+            extract_block(&recon2, o, &dataset.gae_block, &mut b);
             let diff: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
             worst = worst.max(norm2_f32(&diff) / tau as f64);
         }

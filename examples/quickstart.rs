@@ -1,13 +1,17 @@
-//! Quickstart: train the hierarchical compressor on a small synthetic
-//! S3D-like field, compress with a guaranteed error bound, decompress,
-//! and verify the bound. (~1 minute on a laptop-class CPU.)
+//! Quickstart: build the hierarchical codec through `CodecBuilder`, train
+//! on a small synthetic S3D-like field, compress with a typed error
+//! bound, restore from the archive header alone, and verify the
+//! guarantee. (~1 minute on a laptop-class CPU.)
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use attn_reduce::compressor::{nrmse, HierCompressor};
-use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, ErrorBound};
+use attn_reduce::compressor::{nrmse, Archive};
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
 use attn_reduce::data;
 use attn_reduce::linalg::norm2_f32;
 use attn_reduce::runtime::Runtime;
@@ -15,58 +19,56 @@ use attn_reduce::tensor::{block_origins, extract_block};
 
 fn main() -> attn_reduce::Result<()> {
     // 1. open the AOT artifacts (python never runs from here on)
-    let rt = Runtime::open("artifacts")?;
+    let rt = Rc::new(Runtime::open("artifacts")?);
     println!("PJRT platform: {}", rt.platform());
 
     // 2. a small synthetic multi-species combustion field (16 species
     //    with strong inter-species correlation — the structure the
     //    hyper-block attention exploits)
-    let mut cfg = PipelineConfig {
-        dataset: dataset_preset(DatasetKind::S3d, Scale::Smoke),
-        model: model_preset(DatasetKind::S3d),
-        train: Default::default(),
-        tau: 0.0,
-    };
-    cfg.train.steps = 60;
-    let field = data::generate(&cfg.dataset);
+    let dataset = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+    let field = data::generate(&dataset);
     println!(
         "field: {:?} = {} points ({:.1} MB)",
-        cfg.dataset.dims,
+        dataset.dims,
         field.len(),
         (field.len() * 4) as f64 / 1e6
     );
 
-    // 3. train HBAE + BAE (cached under results/ckpt-quickstart)
-    let ckpt = std::path::PathBuf::from("results/ckpt-quickstart");
-    std::fs::create_dir_all(&ckpt)?;
-    let (comp, reports) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
-    for r in &reports {
-        println!("trained {}", r.summary());
-    }
+    // 3. one builder resolves presets, checkpoints, and the runtime;
+    //    training runs once and is cached under results/ckpt-quickstart
+    let mut builder = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Smoke)
+        .ckpt_dir("results/ckpt-quickstart")
+        .train(TrainConfig { steps: 60, ..TrainConfig::default() });
+    let codec = builder.build_hier(DatasetKind::S3d, &field)?;
 
-    // 4. compress with a per-block l2 bound targeting NRMSE 1e-3
-    let tau = PipelineConfig::tau_for_nrmse(
-        1e-3,
-        field.range() as f64,
-        cfg.dataset.gae_block_len(),
-    );
-    let (archive, recon) = comp.compress(&field, tau)?;
-    let stats = comp.stats(&archive);
+    // 4. compress with a typed bound: dataset NRMSE <= 1e-3 (Eq. 11 maps
+    //    it onto the per-GAE-block l2 tau the pipeline guarantees)
+    let bound = ErrorBound::Nrmse(1e-3);
+    let (archive, recon) = codec.compress_with_recon(&field, &bound)?;
+    let stats = archive_stats(&archive)?;
     println!(
-        "compressed: CR = {:.1} (paper accounting) / {:.1} (all bytes), NRMSE = {:.3e}",
+        "compressed under {bound}: CR = {:.1} (paper accounting) / {:.1} (all bytes), NRMSE = {:.3e}",
         stats.cr,
         stats.cr_total,
         nrmse(&field, &recon)
     );
 
-    // 5. verify the guarantee: EVERY GAE block satisfies ||err||_2 <= tau
-    let d = cfg.dataset.gae_block_len();
-    let origins = block_origins(&cfg.dataset.dims, &cfg.dataset.gae_block);
+    // 5. restore from the serialized bytes alone — the archive header
+    //    names the codec, dataset, and model groups
+    let archive2 = Archive::from_bytes(&archive.to_bytes())?;
+    let restored = builder.for_archive(&archive2)?.decompress(&archive2)?;
+
+    // 6. verify the guarantee: EVERY GAE block satisfies ||err||_2 <= tau
+    let tau = bound.gae_tau(&dataset, field.range() as f64);
+    let d = dataset.gae_block_len();
+    let origins = block_origins(&dataset.dims, &dataset.gae_block);
     let mut worst: f64 = 0.0;
     let (mut a, mut b) = (vec![0f32; d], vec![0f32; d]);
     for o in &origins {
-        extract_block(&field, o, &cfg.dataset.gae_block, &mut a);
-        extract_block(&recon, o, &cfg.dataset.gae_block, &mut b);
+        extract_block(&field, o, &dataset.gae_block, &mut a);
+        extract_block(&restored, o, &dataset.gae_block, &mut b);
         let diff: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
         worst = worst.max(norm2_f32(&diff) / tau as f64);
     }

@@ -1,5 +1,5 @@
 //! XGC fusion use case: compress gyrokinetic velocity histograms while
-//! preserving physics moments.
+//! preserving physics moments, through the unified codec API.
 //!
 //! The paper's error bound is an ℓ2 guarantee per 39x39 histogram; this
 //! example additionally reports what downstream plasma analysis cares
@@ -11,8 +11,11 @@
 //! cargo run --release --example xgc_histograms [-- --steps 150]
 //! ```
 
-use attn_reduce::compressor::{nrmse, HierCompressor};
-use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, ErrorBound};
+use attn_reduce::compressor::nrmse;
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
 use attn_reduce::data;
 use attn_reduce::runtime::Runtime;
 use attn_reduce::util::cli::Args;
@@ -44,36 +47,26 @@ fn main() -> attn_reduce::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, &[])?;
 
-    let rt = Runtime::open("artifacts")?;
-    let mut cfg = PipelineConfig {
-        dataset: dataset_preset(DatasetKind::Xgc, Scale::Bench),
-        model: model_preset(DatasetKind::Xgc),
-        train: Default::default(),
-        tau: 0.0,
-    };
-    cfg.train.steps = args.get_usize("steps", 150)?;
+    let rt = Rc::new(Runtime::open("artifacts")?);
+    let dataset = dataset_preset(DatasetKind::Xgc, Scale::Bench);
 
     println!("== xgc_histograms: gyrokinetic F-data surrogate ==");
-    let field = data::generate(&cfg.dataset);
-    let dims = cfg.dataset.dims.clone();
+    let field = data::generate(&dataset);
+    let dims = dataset.dims.clone();
     println!("field {dims:?} ({:.1} MB)", (field.len() * 4) as f64 / 1e6);
 
-    let ckpt = std::path::PathBuf::from("results/ckpt");
-    std::fs::create_dir_all(&ckpt)?;
-    let (comp, reports) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
-    for r in &reports {
-        println!("trained {}", r.summary());
-    }
+    let mut builder = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Bench)
+        .ckpt_dir("results/ckpt")
+        .train(TrainConfig { steps: args.get_usize("steps", 150)?, ..TrainConfig::default() });
+    let codec = builder.build_hier(DatasetKind::Xgc, &field)?;
 
-    let tau = PipelineConfig::tau_for_nrmse(
-        1e-3,
-        field.range() as f64,
-        cfg.dataset.gae_block_len(),
-    );
-    let (archive, recon) = comp.compress(&field, tau)?;
-    let stats = comp.stats(&archive);
+    let bound = ErrorBound::Nrmse(1e-3);
+    let (archive, recon) = codec.compress_with_recon(&field, &bound)?;
+    let stats = archive_stats(&archive)?;
     println!(
-        "\nCR = {:.1} (paper accounting), NRMSE = {:.3e}",
+        "\nbound {bound}: CR = {:.1} (paper accounting), NRMSE = {:.3e}",
         stats.cr,
         nrmse(&field, &recon)
     );

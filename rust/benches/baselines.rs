@@ -1,36 +1,43 @@
 //! Baseline compressor throughput (SZ3-like, ZFP-like) on bench-scale
-//! fields — the comparison cost side of Fig. 6.
+//! fields, constructed through the unified `CodecBuilder` — the
+//! comparison cost side of Fig. 6.
 //! Run: `cargo bench --bench baselines`.
 
-use attn_reduce::baselines::{Sz3Like, ZfpLike};
+use attn_reduce::codec::{Codec, CodecBuilder, CodecKind, ErrorBound};
 use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
 use attn_reduce::data;
 use attn_reduce::util::bench::{black_box, Bench};
 
 fn main() {
     let mut b = Bench::new();
+    let mut builder = CodecBuilder::new().scale(Scale::Smoke);
     for kind in [DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc] {
         let cfg = dataset_preset(kind, Scale::Smoke);
         let field = data::generate(&cfg);
         let bytes_raw = (field.len() * 4) as f64;
-        let eps = 1e-3 * field.range();
+        // pointwise bound = direct eps, so the sz3 numbers measure the
+        // compressor, not a search
+        let sz3_bound = ErrorBound::PointwiseAbs((1e-3 * field.range()) as f64);
 
+        let sz3 = builder.build(CodecKind::Sz3, kind, &field).unwrap();
         b.run_items(&format!("sz3_like/compress {}", kind.name()), bytes_raw, || {
-            black_box(Sz3Like::new(eps).compress(black_box(&field)).unwrap());
+            black_box(sz3.compress(black_box(&field), &sz3_bound).unwrap());
         });
-        let enc = Sz3Like::new(eps).compress(&field).unwrap();
-        println!("    (sz3 CR = {:.1})", bytes_raw / enc.len() as f64);
+        let enc = sz3.compress(&field, &sz3_bound).unwrap();
+        println!("    (sz3 CR = {:.1})", bytes_raw / enc.total_bytes() as f64);
         b.run_items(&format!("sz3_like/decompress {}", kind.name()), bytes_raw, || {
-            black_box(Sz3Like::decompress(black_box(&enc)).unwrap());
+            black_box(sz3.decompress(black_box(&enc)).unwrap());
         });
 
+        // ErrorBound::None = the fixed default precision (no search)
+        let zfp = builder.build(CodecKind::Zfp, kind, &field).unwrap();
         b.run_items(&format!("zfp_like/compress {}", kind.name()), bytes_raw, || {
-            black_box(ZfpLike::new(12).compress(black_box(&field)).unwrap());
+            black_box(zfp.compress(black_box(&field), &ErrorBound::None).unwrap());
         });
-        let zenc = ZfpLike::new(12).compress(&field).unwrap();
-        println!("    (zfp CR = {:.1})", bytes_raw / zenc.len() as f64);
+        let zenc = zfp.compress(&field, &ErrorBound::None).unwrap();
+        println!("    (zfp CR = {:.1})", bytes_raw / zenc.total_bytes() as f64);
         b.run_items(&format!("zfp_like/decompress {}", kind.name()), bytes_raw, || {
-            black_box(ZfpLike::decompress(black_box(&zenc)).unwrap());
+            black_box(zfp.decompress(black_box(&zenc)).unwrap());
         });
     }
     b.write_csv("results/bench/baselines.csv").unwrap();

@@ -1,0 +1,70 @@
+//! Trait-object dispatch overhead of the unified `Codec` API on the
+//! SZ3-like hot path. Run: `cargo bench --bench codec_dispatch`.
+//!
+//! Three variants over the same field + bound:
+//!   1. `Sz3Like::new(eps).compress` — the raw pre-codec entry point
+//!   2. `Sz3Codec` called through the concrete type (static dispatch)
+//!   3. the same value behind `Box<dyn Codec>` (vtable dispatch)
+//!
+//! Compression runs millions of point predictions per call, so one
+//! virtual call + archive assembly must be (and is) noise; the printed
+//! ratio makes that visible in CI logs.
+
+use attn_reduce::baselines::Sz3Like;
+use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
+use attn_reduce::data;
+use attn_reduce::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let bytes_raw = (field.len() * 4) as f64;
+    let eps = 1e-3 * field.range();
+    let bound = ErrorBound::PointwiseAbs(eps as f64);
+
+    // 1. raw struct call
+    let raw = Sz3Like::new(eps);
+    b.run_items("dispatch/raw Sz3Like::compress", bytes_raw, || {
+        black_box(raw.compress(black_box(&field)).unwrap());
+    });
+
+    // 2. concrete codec (static dispatch, includes archive assembly)
+    let concrete = Sz3Codec::new(cfg.clone());
+    b.run_items("dispatch/concrete Sz3Codec", bytes_raw, || {
+        black_box(concrete.compress(black_box(&field), &bound).unwrap());
+    });
+
+    // 3. trait object (dynamic dispatch)
+    let boxed: Box<dyn Codec> = Box::new(Sz3Codec::new(cfg.clone()));
+    b.run_items("dispatch/Box<dyn Codec>", bytes_raw, || {
+        black_box(boxed.compress(black_box(&field), &bound).unwrap());
+    });
+
+    // decompress side, same three shapes
+    let archive = boxed.compress(&field, &bound).unwrap();
+    let sz3_bytes = archive.section("SZ3B").unwrap().to_vec();
+    b.run_items("dispatch/raw Sz3Like::decompress", bytes_raw, || {
+        black_box(Sz3Like::decompress(black_box(&sz3_bytes)).unwrap());
+    });
+    b.run_items("dispatch/Box<dyn Codec> decompress", bytes_raw, || {
+        black_box(boxed.decompress(black_box(&archive)).unwrap());
+    });
+
+    // headline number: dyn-dispatch cost relative to the raw call
+    let raw_ns = b.results.iter().find(|s| s.name.contains("raw Sz3Like::compress"));
+    let dyn_ns = b
+        .results
+        .iter()
+        .find(|s| s.name.contains("Box<dyn Codec>") && !s.name.contains("decompress"));
+    if let (Some(r), Some(d)) = (raw_ns, dyn_ns) {
+        println!(
+            "\ntrait-object overhead on compress: {:+.2}% (raw {:.3} ms, dyn {:.3} ms)",
+            (d.mean_ns / r.mean_ns - 1.0) * 100.0,
+            r.mean_ns / 1e6,
+            d.mean_ns / 1e6
+        );
+    }
+    b.write_csv("results/bench/codec_dispatch.csv").unwrap();
+}

@@ -1,9 +1,9 @@
 //! Entropy-stage throughput (paper §II-E): quantizer, Huffman, index-set
-//! codec, ZSTD. Run: `cargo bench --bench coder`.
+//! codec, LZSS. Run: `cargo bench --bench coder`.
 
 use attn_reduce::coder::{
     decode_index_sets, encode_index_sets, huffman_decode, huffman_encode, indexset,
-    zstd_compress, zstd_decompress, Quantizer,
+    lossless_compress, lossless_decompress, Quantizer,
 };
 use attn_reduce::util::bench::{black_box, Bench};
 use attn_reduce::util::rng::Rng;
@@ -49,14 +49,14 @@ fn main() {
         );
     });
 
-    // zstd on bitmap-like data
+    // lossless LZSS on bitmap-like data
     let bitmap: Vec<u8> = (0..200_000).map(|i| if i % 17 < 2 { 0xFF } else { 0 }).collect();
-    b.run_items("zstd/compress 200kB bitmaps", bitmap.len() as f64, || {
-        black_box(zstd_compress(black_box(&bitmap)).unwrap());
+    b.run_items("lossless/compress 200kB bitmaps", bitmap.len() as f64, || {
+        black_box(lossless_compress(black_box(&bitmap)).unwrap());
     });
-    let z = zstd_compress(&bitmap).unwrap();
-    b.run_items("zstd/decompress", bitmap.len() as f64, || {
-        black_box(zstd_decompress(black_box(&z), bitmap.len()).unwrap());
+    let z = lossless_compress(&bitmap).unwrap();
+    b.run_items("lossless/decompress", bitmap.len() as f64, || {
+        black_box(lossless_decompress(black_box(&z), bitmap.len()).unwrap());
     });
 
     b.write_csv("results/bench/coder.csv").unwrap();

@@ -1,12 +1,14 @@
-//! End-to-end pipeline throughput: sequential vs streaming coordinator at
-//! several queue depths, plus full compress (with GAE) on a smoke field.
+//! End-to-end pipeline throughput through the unified codec: sequential
+//! vs streaming coordinator at several queue depths, plus full compress
+//! (with GAE) and header-driven decompress on a smoke field.
 //! Run: `cargo bench --bench pipeline` (needs `make artifacts`; trains a
 //! small model on first run, cached under results/ckpt-bench).
 
-use attn_reduce::compressor::HierCompressor;
-use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
-use attn_reduce::coordinator::stream_compress;
-use attn_reduce::data::{self, Normalizer};
+use std::rc::Rc;
+
+use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound};
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
+use attn_reduce::data;
 use attn_reduce::runtime::Runtime;
 use attn_reduce::util::bench::{black_box, Bench};
 
@@ -17,54 +19,43 @@ fn main() {
         return;
     }
     std::env::set_var("ATTN_REDUCE_QUIET", "1");
-    let rt = Runtime::open(dir).unwrap();
+    let rt = Rc::new(Runtime::open(dir).unwrap());
     let mut b = Bench::new();
 
-    let mut cfg = PipelineConfig {
-        dataset: dataset_preset(DatasetKind::S3d, Scale::Smoke),
-        model: model_preset(DatasetKind::S3d),
-        train: Default::default(),
-        tau: 0.0,
-    };
-    cfg.train.steps = 40;
-    cfg.train.log_every = 1000;
-    let field = data::generate(&cfg.dataset);
-    let ckpt = std::path::PathBuf::from("results/ckpt-bench");
-    std::fs::create_dir_all(&ckpt).unwrap();
-    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field).unwrap();
+    let dataset = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+    let field = data::generate(&dataset);
     let bytes = (field.len() * 4) as f64;
+    let mut builder = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Smoke)
+        .ckpt_dir("results/ckpt-bench")
+        .train(TrainConfig { steps: 40, log_every: 1000, ..TrainConfig::default() });
+    let codec = builder.build_hier(DatasetKind::S3d, &field).unwrap();
 
-    let stats = Normalizer::fit(cfg.dataset.normalization, &field);
-    let mut norm = field.clone();
-    Normalizer::apply(&stats, &mut norm);
-
-    // sequential AE pass (tau=0: no GAE) vs streaming at queue depths
+    // sequential AE pass (no GAE) vs streaming at queue depths
     b.run_items("pipeline/sequential compress (no GAE)", bytes, || {
-        black_box(comp.compress(black_box(&field), 0.0).unwrap());
+        black_box(codec.compress(black_box(&field), &ErrorBound::None).unwrap());
     });
     for depth in [0usize, 2, 8] {
         b.run_items(&format!("pipeline/stream q={depth}"), bytes, || {
-            black_box(stream_compress(&comp, black_box(&field), depth).unwrap());
+            black_box(
+                codec
+                    .compress_streaming(black_box(&field), &ErrorBound::None, depth)
+                    .unwrap(),
+            );
         });
     }
 
-    // full compress incl. GAE + entropy
-    let tau = PipelineConfig::tau_for_nrmse(
-        1e-3,
-        field.range() as f64,
-        cfg.dataset.gae_block_len(),
-    );
-    b.run_items("pipeline/full compress (GAE @1e-3)", bytes, || {
-        black_box(comp.compress(black_box(&field), tau).unwrap());
+    // full compress incl. GAE + entropy under a typed bound
+    let bound = ErrorBound::Nrmse(1e-3);
+    b.run_items("pipeline/full compress (GAE @nrmse 1e-3)", bytes, || {
+        black_box(codec.compress(black_box(&field), &bound).unwrap());
     });
 
-    // decompression
-    let (archive, _) = comp.compress(&field, tau).unwrap();
+    // decompression through the trait surface
+    let archive = codec.compress(&field, &bound).unwrap();
     b.run_items("pipeline/decompress", bytes, || {
-        black_box(
-            HierCompressor::decompress(&rt, black_box(&archive), &comp.hbae, &comp.baes)
-                .unwrap(),
-        );
+        black_box(codec.decompress(black_box(&archive)).unwrap());
     });
 
     b.write_csv("results/bench/pipeline.csv").unwrap();

@@ -7,8 +7,16 @@
 //! normalized blocks instead of residuals, plus optionally the GAE bound
 //! (ref [16]'s GBAE) and a stacked residual corrector (the GAETC
 //! stand-in — DESIGN.md §4).
+//!
+//! [`crate::codec::GbaeCodec`] wraps this into the unified `Codec` trait
+//! with full archive round trips; the [`GbaeCompressor::compress`] path
+//! below keeps the paper-accounting payload numbers the Fig. 4/5/6
+//! experiment runners report.
 
-use crate::coder::Quantizer;
+use std::rc::Rc;
+
+use crate::coder::{huffman_encode, Quantizer};
+use crate::compressor::gae_bound_stage;
 use crate::config::{DatasetConfig, TrainConfig};
 use crate::data::{Blocking, Normalizer};
 use crate::model::ParamStore;
@@ -18,9 +26,10 @@ use crate::train::{train_bae, TrainReport};
 use crate::Result;
 use anyhow::ensure;
 
-/// Block-AE baseline compressor.
-pub struct GbaeCompressor<'a> {
-    pub rt: &'a Runtime,
+/// Block-AE baseline compressor. Owns its runtime handle, like
+/// [`crate::compressor::HierCompressor`].
+pub struct GbaeCompressor {
+    pub rt: Rc<Runtime>,
     pub dataset: DatasetConfig,
     /// Primary block AE (trained on raw blocks).
     pub ae: ParamStore,
@@ -38,7 +47,17 @@ pub struct GbaeResult {
     pub gae_coeffs: usize,
 }
 
-impl<'a> GbaeCompressor<'a> {
+impl GbaeCompressor {
+    /// Canonical checkpoint path for a baseline AE group.
+    pub fn ckpt_path(ckpt_dir: &std::path::Path, group: &str) -> std::path::PathBuf {
+        ckpt_dir.join(format!("gbae_{group}.ckpt"))
+    }
+
+    /// Canonical checkpoint path for a corrector group.
+    pub fn corrector_ckpt_path(ckpt_dir: &std::path::Path, group: &str) -> std::path::PathBuf {
+        ckpt_dir.join(format!("gbae_corr_{group}.ckpt"))
+    }
+
     /// Gather all valid blocks of a normalized field as rows.
     fn block_rows(dataset: &DatasetConfig, norm: &Tensor) -> (Blocking, Vec<f32>) {
         let blocking = Blocking::new(dataset);
@@ -59,7 +78,7 @@ impl<'a> GbaeCompressor<'a> {
 
     /// Train (or load) the baseline AE on raw blocks.
     pub fn prepare(
-        rt: &'a Runtime,
+        rt: &Rc<Runtime>,
         dataset: &DatasetConfig,
         group: &str,
         ckpt_dir: &std::path::Path,
@@ -74,7 +93,7 @@ impl<'a> GbaeCompressor<'a> {
         let (_, rows) = Self::block_rows(dataset, &norm);
         let bd: usize = dataset.block_dim();
 
-        let path = ckpt_dir.join(format!("gbae_{group}.ckpt"));
+        let path = Self::ckpt_path(ckpt_dir, group);
         let ae = if path.exists() {
             ParamStore::load(&path, group)?
         } else {
@@ -86,7 +105,7 @@ impl<'a> GbaeCompressor<'a> {
         };
 
         let corrector = if let Some(cg) = with_corrector {
-            let cpath = ckpt_dir.join(format!("gbae_corr_{cg}.ckpt"));
+            let cpath = Self::corrector_ckpt_path(ckpt_dir, cg);
             if cpath.exists() {
                 Some(ParamStore::load(&cpath, cg)?)
             } else {
@@ -121,26 +140,27 @@ impl<'a> GbaeCompressor<'a> {
         };
 
         Ok((
-            Self { rt, dataset: dataset.clone(), ae, corrector },
+            Self { rt: rt.clone(), dataset: dataset.clone(), ae, corrector },
             reports,
         ))
     }
 
-    /// Compress + reconstruct. `latent_bin` 0 disables quantization
-    /// (Fig. 4/5 ablation accounting: raw f32 latents); `tau` 0 disables
-    /// the GAE bound.
-    pub fn compress(&self, field: &Tensor, latent_bin: f32, tau: f32) -> Result<GbaeResult> {
-        let stats = Normalizer::fit(self.dataset.normalization, field);
-        let mut norm = field.clone();
-        Normalizer::apply(&stats, &mut norm);
-
+    /// Forward the AE (+ optional corrector) over a **normalized** field.
+    ///
+    /// Returns `(primary latent rows, corrector latent rows, recon)` with
+    /// latent rows collected for valid blocks only, quantizer-snapped, and
+    /// the reconstruction still in the normalized domain.
+    pub fn forward(
+        &self,
+        norm: &Tensor,
+        q: Quantizer,
+    ) -> Result<(Vec<f32>, Option<Vec<f32>>, Tensor)> {
         let blocking = Blocking::new(&self.dataset);
         let bd = blocking.block_dim();
         let enc = self.rt.load(&self.ae.group, "encode")?;
         let dec = self.rt.load(&self.ae.group, "decode")?;
         let nb = enc.info.inputs[1].shape[0];
         let lat_dim = enc.info.outputs[0].shape[1];
-        let q = Quantizer::new(latent_bin.max(0.0));
         let phi = HostTensor::vec(self.ae.theta.clone());
 
         let total_hb = blocking.num_hyperblocks();
@@ -149,18 +169,19 @@ impl<'a> GbaeCompressor<'a> {
         let hb_per_batch = nb / k;
 
         let mut recon = Tensor::zeros(self.dataset.dims.clone());
-        let mut latent_codes: Vec<i32> = Vec::new();
-        let mut n_latents = 0usize;
+        let mut lat_rows: Vec<f32> = Vec::new();
+        let mut corr_rows: Vec<f32> = Vec::new();
         let mut batch = vec![0f32; nb * bd];
         for h0 in (0..total_hb).step_by(hb_per_batch) {
-            blocking.gather(&norm, h0, hb_per_batch, &mut batch);
+            blocking.gather(norm, h0, hb_per_batch, &mut batch);
             let mut lat = enc
                 .run(&[phi.clone(), HostTensor::new(vec![nb, bd], batch.clone())])?
                 .remove(0);
             q.snap(&mut lat.data);
             let y = dec.run(&[phi.clone(), lat.clone()])?.remove(0);
             let mut recon_batch = y.data.clone();
-            if let Some(corr) = &self.corrector {
+
+            let clat = if let Some(corr) = &self.corrector {
                 let cenc = self.rt.load(&corr.group, "encode")?;
                 let cdec = self.rt.load(&corr.group, "decode")?;
                 let cphi = HostTensor::vec(corr.theta.clone());
@@ -174,27 +195,12 @@ impl<'a> GbaeCompressor<'a> {
                 for i in 0..recon_batch.len() {
                     recon_batch[i] += rhat.data[i];
                 }
-                for hi in 0..hb_per_batch {
-                    let h = h0 + hi;
-                    if h >= total_hb {
-                        break;
-                    }
-                    for j in 0..k {
-                        if blocking.is_valid(h, j) {
-                            let r = hi * k + j;
-                            n_latents += lat_dim;
-                            if q.enabled() {
-                                latent_codes.extend(
-                                    clat.data[r * lat_dim..(r + 1) * lat_dim]
-                                        .iter()
-                                        .map(|&v| q.code(v)),
-                                );
-                            }
-                        }
-                    }
-                }
-            }
-            // primary latents of valid blocks
+                Some(clat)
+            } else {
+                None
+            };
+
+            // collect valid-block latent rows in block order
             for hi in 0..hb_per_batch {
                 let h = h0 + hi;
                 if h >= total_hb {
@@ -203,66 +209,127 @@ impl<'a> GbaeCompressor<'a> {
                 for j in 0..k {
                     if blocking.is_valid(h, j) {
                         let r = hi * k + j;
-                        n_latents += lat_dim;
-                        if q.enabled() {
-                            latent_codes.extend(
-                                lat.data[r * lat_dim..(r + 1) * lat_dim]
-                                    .iter()
-                                    .map(|&v| q.code(v)),
-                            );
+                        lat_rows.extend_from_slice(&lat.data[r * lat_dim..(r + 1) * lat_dim]);
+                        if let Some(c) = &clat {
+                            let cd = c.shape[1];
+                            corr_rows.extend_from_slice(&c.data[r * cd..(r + 1) * cd]);
                         }
                     }
                 }
             }
             blocking.scatter(&mut recon, h0, hb_per_batch, &recon_batch);
         }
+        let corr = if self.corrector.is_some() { Some(corr_rows) } else { None };
+        Ok((lat_rows, corr, recon))
+    }
+
+    /// Decode latent rows (valid blocks, block order) back into a
+    /// **normalized**-domain reconstruction — the inverse of
+    /// [`Self::forward`]'s latent collection.
+    pub fn decode(&self, lat_rows: &[f32], corr_rows: Option<&[f32]>) -> Result<Tensor> {
+        let blocking = Blocking::new(&self.dataset);
+        let dec = self.rt.load(&self.ae.group, "decode")?;
+        let nb = dec.info.inputs[1].shape[0];
+        let lat_dim = dec.info.inputs[1].shape[1];
+        let phi = HostTensor::vec(self.ae.theta.clone());
+
+        let total_hb = blocking.num_hyperblocks();
+        let k = blocking.k;
+        ensure!(nb % k == 0, "bae batch not a multiple of k");
+        let hb_per_batch = nb / k;
+        ensure!(
+            lat_rows.len() == blocking.num_blocks() * lat_dim,
+            "GLAT length mismatch: {} != {} blocks x {lat_dim}",
+            lat_rows.len(),
+            blocking.num_blocks()
+        );
+        ensure!(
+            corr_rows.is_some() == self.corrector.is_some(),
+            "archive corrector stream does not match loaded corrector"
+        );
+
+        let mut recon = Tensor::zeros(self.dataset.dims.clone());
+        let mut cursor = 0usize;
+        let mut ccursor = 0usize;
+        for h0 in (0..total_hb).step_by(hb_per_batch) {
+            // fill the batch's latent rows (padding rows stay zero)
+            let mut lb = vec![0f32; nb * lat_dim];
+            let row_of = |hi: usize, j: usize| hi * k + j;
+            let mut valid: Vec<(usize, usize)> = Vec::new();
+            for hi in 0..hb_per_batch {
+                let h = h0 + hi;
+                if h >= total_hb {
+                    break;
+                }
+                for j in 0..k {
+                    if blocking.is_valid(h, j) {
+                        valid.push((hi, j));
+                    }
+                }
+            }
+            for &(hi, j) in &valid {
+                let r = row_of(hi, j);
+                lb[r * lat_dim..(r + 1) * lat_dim]
+                    .copy_from_slice(&lat_rows[cursor..cursor + lat_dim]);
+                cursor += lat_dim;
+            }
+            let y = dec
+                .run(&[phi.clone(), HostTensor::new(vec![nb, lat_dim], lb)])?
+                .remove(0);
+            let mut recon_batch = y.data;
+
+            if let (Some(corr), Some(crows)) = (&self.corrector, corr_rows) {
+                let cdec = self.rt.load(&corr.group, "decode")?;
+                let cd = cdec.info.inputs[1].shape[1];
+                ensure!(cdec.info.inputs[1].shape[0] == nb, "corrector batch mismatch");
+                let mut cb = vec![0f32; nb * cd];
+                for &(hi, j) in &valid {
+                    let r = row_of(hi, j);
+                    ensure!(ccursor + cd <= crows.len(), "GCLT underrun");
+                    cb[r * cd..(r + 1) * cd].copy_from_slice(&crows[ccursor..ccursor + cd]);
+                    ccursor += cd;
+                }
+                let cphi = HostTensor::vec(corr.theta.clone());
+                let rhat = cdec
+                    .run(&[cphi, HostTensor::new(vec![nb, cd], cb)])?
+                    .remove(0);
+                for i in 0..recon_batch.len() {
+                    recon_batch[i] += rhat.data[i];
+                }
+            }
+            blocking.scatter(&mut recon, h0, hb_per_batch, &recon_batch);
+        }
+        Ok(recon)
+    }
+
+    /// Compress + reconstruct with paper-accounting payload bytes.
+    /// `latent_bin` 0 disables quantization (Fig. 4/5 ablation accounting:
+    /// raw f32 latents); `tau` 0 disables the GAE bound.
+    pub fn compress(&self, field: &Tensor, latent_bin: f32, tau: f32) -> Result<GbaeResult> {
+        let stats = Normalizer::fit(self.dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+
+        let q = Quantizer::new(latent_bin.max(0.0));
+        let (lat_rows, corr_rows, mut recon) = self.forward(&norm, q)?;
 
         // latent payload
+        let n_latents = lat_rows.len() + corr_rows.as_ref().map_or(0, |c| c.len());
         let mut payload = if q.enabled() {
-            crate::coder::huffman_encode(&latent_codes).len()
+            let mut codes = q.codes(&lat_rows);
+            if let Some(c) = &corr_rows {
+                codes.extend(q.codes(c));
+            }
+            huffman_encode(&codes).len()
         } else {
             n_latents * 4
         };
 
         // optional GAE bound (same machinery as the main pipeline)
         let mut gae_coeffs = 0usize;
-        if tau > 0.0 {
-            let d = self.dataset.gae_block_len();
-            let origins =
-                crate::tensor::block_origins(&self.dataset.dims, &self.dataset.gae_block);
-            let taus = crate::compressor::gae_taus(&self.dataset, &stats, tau, &origins);
-            let mut orig_rows = vec![0f32; origins.len() * d];
-            let mut rec_rows = vec![0f32; origins.len() * d];
-            for (bi, o) in origins.iter().enumerate() {
-                crate::tensor::extract_block(
-                    &norm,
-                    o,
-                    &self.dataset.gae_block,
-                    &mut orig_rows[bi * d..(bi + 1) * d],
-                );
-                crate::tensor::extract_block(
-                    &recon,
-                    o,
-                    &self.dataset.gae_block,
-                    &mut rec_rows[bi * d..(bi + 1) * d],
-                );
-            }
-            let out = crate::compressor::gae_apply(&orig_rows, &mut rec_rows, d, &taus)?;
-            for (bi, o) in origins.iter().enumerate() {
-                crate::tensor::scatter_block(
-                    &mut recon,
-                    o,
-                    &self.dataset.gae_block,
-                    &rec_rows[bi * d..(bi + 1) * d],
-                );
-            }
-            let codes: Vec<i32> =
-                out.corrections.iter().flat_map(|c| c.codes.iter().copied()).collect();
-            payload += crate::coder::huffman_encode(&codes).len();
-            let sets: Vec<Vec<usize>> =
-                out.corrections.iter().map(|c| c.indices.clone()).collect();
-            payload += crate::coder::encode_index_sets(&sets, d)?.len();
-            gae_coeffs = out.total_coeffs;
+        if let Some(g) = gae_bound_stage(&self.dataset, &stats, tau, &norm, &mut recon)? {
+            payload += g.gcof.len() + g.gidx.len();
+            gae_coeffs = g.total_coeffs;
         }
 
         Normalizer::invert(&stats, &mut recon);

@@ -5,7 +5,7 @@
 //! (inclusion–exclusion over the corner hypercube, up to 3 fastest-moving
 //! dims), quantize the prediction error to `code = round(err / (2·eps))`
 //! — which guarantees the pointwise bound |x − x̂| ≤ eps — and entropy-
-//! code the (heavily zero-peaked) codes with Huffman + ZSTD. Values whose
+//! code the (heavily zero-peaked) codes with Huffman + LZSS. Values whose
 //! code exceeds the code range are stored raw ("unpredictable", as SZ
 //! does).
 //!
@@ -13,7 +13,7 @@
 //! default path (SZ3 adds regression predictors and adaptive selection;
 //! crossover *shapes* against learned compressors are preserved).
 
-use crate::coder::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::coder::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::ensure;
@@ -47,7 +47,7 @@ impl Sz3Like {
             out.extend_from_slice(&r.to_le_bytes());
         }
         let huff = huffman_encode(&codes);
-        let z = zstd_compress(&huff)?;
+        let z = lossless_compress(&huff)?;
         out.extend_from_slice(&(z.len() as u64).to_le_bytes());
         out.extend(z);
         Ok(out)
@@ -75,7 +75,7 @@ impl Sz3Like {
         let n_points: usize = shape.iter().product();
         // huffman stream ≤ table (5 B/symbol) + ~8 B/value worst case
         let cap = n_points.saturating_mul(13) + (1 << 20);
-        let huff = zstd_decompress(&bytes[off..off + zlen], cap)?;
+        let huff = lossless_decompress(&bytes[off..off + zlen], cap)?;
         let (codes, _) = huffman_decode(&huff)?;
         Self::decode_codes(&codes, &raws, shape, eps)
     }

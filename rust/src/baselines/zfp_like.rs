@@ -8,7 +8,7 @@
 //! shift-truncate + Huffman stage controlled by `precision` (bits kept per
 //! coefficient) — the same fixed-precision rate-distortion knob.
 
-use crate::coder::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::coder::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::ensure;
@@ -75,11 +75,11 @@ impl ZfpLike {
         }
         out.extend_from_slice(&(exps.len() as u64).to_le_bytes());
         let exp_bytes: Vec<u8> = exps.iter().flat_map(|e| e.to_le_bytes()).collect();
-        let zexp = zstd_compress(&exp_bytes)?;
+        let zexp = lossless_compress(&exp_bytes)?;
         out.extend_from_slice(&(zexp.len() as u64).to_le_bytes());
         out.extend(zexp);
         let huff = huffman_encode(&codes);
-        let z = zstd_compress(&huff)?;
+        let z = lossless_compress(&huff)?;
         out.extend_from_slice(&(z.len() as u64).to_le_bytes());
         out.extend(z);
         Ok(out)
@@ -99,7 +99,7 @@ impl ZfpLike {
         off += 8;
         let zel = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
         off += 8;
-        let exp_bytes = zstd_decompress(&bytes[off..off + zel], n_exp * 2 + 16)?;
+        let exp_bytes = lossless_decompress(&bytes[off..off + zel], n_exp * 2 + 16)?;
         off += zel;
         let exps: Vec<i16> = exp_bytes
             .chunks_exact(2)
@@ -107,7 +107,7 @@ impl ZfpLike {
             .collect();
         let zl = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
         off += 8;
-        let huff = zstd_decompress(&bytes[off..off + zl], 1 << 30)?;
+        let huff = lossless_decompress(&bytes[off..off + zl], 1 << 30)?;
         let (codes, _) = huffman_decode(&huff)?;
 
         let d = rank.min(3);

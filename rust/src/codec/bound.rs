@@ -1,0 +1,240 @@
+//! Typed error bounds — the single vocabulary every codec speaks.
+//!
+//! Replaces the raw-`f32` `tau` / `eps` / `precision` trio that each
+//! compressor used to take: callers state *what* accuracy they need, and
+//! each codec derives its own knob from it (per-block ℓ2 τ for the
+//! GAE-bounded codecs via Eq. 11, pointwise ε for the SZ3-like predictor,
+//! a certified precision search for the ZFP-like transform).
+
+use crate::compressor::nrmse;
+use crate::config::{DatasetConfig, PipelineConfig};
+use crate::linalg::norm2_f32;
+use crate::tensor::{block_origins, extract_block, Tensor};
+use crate::util::json::{self, Value};
+use crate::Result;
+use anyhow::bail;
+
+/// A typed error-bound request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorBound {
+    /// Target dataset NRMSE (range-normalized RMSE), e.g. `1e-3`.
+    Nrmse(f64),
+    /// Per-GAE-block ℓ2 bound τ in original units (paper §II-D).
+    L2Tau(f64),
+    /// Pointwise absolute bound: every `|x - x̂| <= a`.
+    PointwiseAbs(f64),
+    /// Best effort, no guarantee (each codec's default fidelity).
+    None,
+}
+
+impl ErrorBound {
+    /// Parse the CLI syntax: `nrmse:1e-3`, `tau:0.5`, `abs:1e-4`, `none`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("none") {
+            return Ok(Self::None);
+        }
+        let Some((kind, value)) = s.split_once(':') else {
+            bail!("bad bound {s:?} (expected nrmse:X | tau:X | abs:X | none)");
+        };
+        let v: f64 = value
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad bound value {value:?} in {s:?}"))?;
+        if !v.is_finite() || v <= 0.0 {
+            bail!("bound value must be positive and finite, got {v}");
+        }
+        match kind.trim().to_ascii_lowercase().as_str() {
+            "nrmse" => Ok(Self::Nrmse(v)),
+            "tau" | "l2" => Ok(Self::L2Tau(v)),
+            "abs" | "pointwise" => Ok(Self::PointwiseAbs(v)),
+            other => bail!("unknown bound kind {other:?} (nrmse | tau | abs | none)"),
+        }
+    }
+
+    /// The kind tag used in archive headers and CLI output.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Nrmse(_) => "nrmse",
+            Self::L2Tau(_) => "tau",
+            Self::PointwiseAbs(_) => "abs",
+            Self::None => "none",
+        }
+    }
+
+    /// The numeric bound (0 for `None`).
+    pub fn value(&self) -> f64 {
+        match *self {
+            Self::Nrmse(v) | Self::L2Tau(v) | Self::PointwiseAbs(v) => v,
+            Self::None => 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s(self.kind())),
+            ("value", json::num(self.value())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let kind = v.req("kind")?.as_str().unwrap_or("");
+        let value = v.req("value")?.as_f64().unwrap_or(0.0);
+        match kind {
+            "none" => Ok(Self::None),
+            "nrmse" => Ok(Self::Nrmse(value)),
+            "tau" => Ok(Self::L2Tau(value)),
+            "abs" => Ok(Self::PointwiseAbs(value)),
+            other => bail!("unknown bound kind {other:?} in archive header"),
+        }
+    }
+
+    /// Per-GAE-block ℓ2 bound τ (original units) that certifies this
+    /// request for the GAE-bounded codecs (hier, gbae).
+    ///
+    /// * `Nrmse` uses Eq. 11: `τ = target · range · sqrt(D_block)` — if
+    ///   every block meets τ, dataset NRMSE ≤ target.
+    /// * `PointwiseAbs(a)` maps conservatively to `τ = a`: a block ℓ2
+    ///   within `a` bounds every point in it by `a`.
+    /// * `None` disables the GAE stage (τ = 0).
+    pub fn gae_tau(&self, dataset: &DatasetConfig, field_range: f64) -> f32 {
+        match *self {
+            Self::Nrmse(t) => {
+                PipelineConfig::tau_for_nrmse(t, field_range, dataset.gae_block_len())
+            }
+            Self::L2Tau(t) => t as f32,
+            Self::PointwiseAbs(a) => a as f32,
+            Self::None => 0.0,
+        }
+    }
+
+    /// Pointwise ε certifying this request for the SZ3-like predictor.
+    ///
+    /// * `Nrmse(t)`: `|err| ≤ t·range` everywhere implies RMSE ≤ t·range,
+    ///   i.e. NRMSE ≤ t.
+    /// * `L2Tau(τ)`: `ε = τ / sqrt(D_block)` makes every GAE block's ℓ2 at
+    ///   most τ.
+    /// * `None`: best-effort default `1e-3 · range`.
+    pub fn pointwise_eps(&self, dataset: &DatasetConfig, field_range: f64) -> f32 {
+        match *self {
+            Self::Nrmse(t) => (t * field_range) as f32,
+            Self::L2Tau(t) => (t / (dataset.gae_block_len() as f64).sqrt()) as f32,
+            Self::PointwiseAbs(a) => a as f32,
+            Self::None => (1e-3 * field_range) as f32,
+        }
+    }
+
+    /// Measure whether a reconstruction satisfies this bound (used by the
+    /// ZFP-like precision search and the integration tests).
+    pub fn satisfied_by(
+        &self,
+        orig: &Tensor,
+        recon: &Tensor,
+        dataset: &DatasetConfig,
+    ) -> bool {
+        match *self {
+            Self::None => true,
+            Self::Nrmse(t) => nrmse(orig, recon) <= t,
+            Self::PointwiseAbs(a) => orig
+                .data()
+                .iter()
+                .zip(recon.data())
+                .all(|(&x, &y)| (x - y).abs() as f64 <= a),
+            Self::L2Tau(t) => {
+                let d = dataset.gae_block_len();
+                let origins = block_origins(&dataset.dims, &dataset.gae_block);
+                let mut a = vec![0f32; d];
+                let mut b = vec![0f32; d];
+                origins.iter().all(|o| {
+                    extract_block(orig, o, &dataset.gae_block, &mut a);
+                    extract_block(recon, o, &dataset.gae_block, &mut b);
+                    let diff: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| x - y).collect();
+                    norm2_f32(&diff) <= t
+                })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::None => write!(f, "none"),
+            _ => write!(f, "{}:{:e}", self.kind(), self.value()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{dataset_preset, DatasetKind, Scale};
+
+    #[test]
+    fn parses_all_kinds() {
+        assert_eq!(ErrorBound::parse("nrmse:1e-3").unwrap(), ErrorBound::Nrmse(1e-3));
+        assert_eq!(ErrorBound::parse("tau:0.5").unwrap(), ErrorBound::L2Tau(0.5));
+        assert_eq!(ErrorBound::parse("abs:1e-4").unwrap(), ErrorBound::PointwiseAbs(1e-4));
+        assert_eq!(ErrorBound::parse("none").unwrap(), ErrorBound::None);
+        assert_eq!(ErrorBound::parse(" NRMSE:2e-2 ").unwrap(), ErrorBound::Nrmse(2e-2));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for bad in ["", "nrmse", "nrmse:", "nrmse:x", "nrmse:-1", "nrmse:inf", "l3:0.5", "0.5"] {
+            assert!(ErrorBound::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        for b in [
+            ErrorBound::Nrmse(1e-3),
+            ErrorBound::L2Tau(0.25),
+            ErrorBound::PointwiseAbs(1e-4),
+            ErrorBound::None,
+        ] {
+            let back = ErrorBound::from_json(&b.to_json()).unwrap();
+            assert_eq!(back, b);
+        }
+    }
+
+    #[test]
+    fn tau_and_eps_derivations() {
+        let d = dataset_preset(DatasetKind::E3sm, Scale::Smoke); // gae block 16x16
+        let range = 2.0;
+        let tau = ErrorBound::Nrmse(1e-3).gae_tau(&d, range);
+        assert!((tau as f64 - 1e-3 * 2.0 * 16.0).abs() < 1e-9); // sqrt(256) = 16
+        assert_eq!(ErrorBound::L2Tau(0.5).gae_tau(&d, range), 0.5);
+        assert_eq!(ErrorBound::PointwiseAbs(0.1).gae_tau(&d, range), 0.1);
+        assert_eq!(ErrorBound::None.gae_tau(&d, range), 0.0);
+
+        let eps = ErrorBound::L2Tau(1.6).pointwise_eps(&d, range);
+        assert!((eps - 0.1).abs() < 1e-6); // 1.6 / 16
+        assert_eq!(ErrorBound::Nrmse(1e-3).pointwise_eps(&d, range), 2e-3);
+    }
+
+    #[test]
+    fn satisfied_by_measures_each_kind() {
+        let d = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let orig = crate::data::generate(&d);
+        let mut recon = orig.clone();
+        for v in recon.data_mut() {
+            *v += 1e-4;
+        }
+        assert!(ErrorBound::PointwiseAbs(2e-4).satisfied_by(&orig, &recon, &d));
+        assert!(!ErrorBound::PointwiseAbs(5e-5).satisfied_by(&orig, &recon, &d));
+        assert!(ErrorBound::None.satisfied_by(&orig, &recon, &d));
+        // block l2 of constant 1e-4 offset over 256 points = 1.6e-3
+        assert!(ErrorBound::L2Tau(2e-3).satisfied_by(&orig, &recon, &d));
+        assert!(!ErrorBound::L2Tau(1e-3).satisfied_by(&orig, &recon, &d));
+    }
+
+    #[test]
+    fn display_is_parseable() {
+        for b in [ErrorBound::Nrmse(1e-3), ErrorBound::L2Tau(0.5), ErrorBound::None] {
+            let s = b.to_string();
+            assert_eq!(ErrorBound::parse(&s).unwrap(), b, "{s}");
+        }
+    }
+}

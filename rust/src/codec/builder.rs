@@ -1,0 +1,247 @@
+//! [`CodecBuilder`] — one construction path for every codec.
+//!
+//! Resolves dataset/model presets, opens the PJRT runtime lazily (only
+//! the learned codecs need it — `sz3`/`zfp` build and run without
+//! artifacts), trains or loads cached checkpoints, and — the key piece
+//! for self-describing archives — rebuilds the right codec **from an
+//! archive header alone** via [`CodecBuilder::for_archive`], so
+//! `attn-reduce decompress` needs no dataset or preset flags.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use crate::baselines::GbaeCompressor;
+use crate::compressor::{Archive, HierCompressor};
+use crate::config::{
+    dataset_preset, model_preset, DatasetConfig, DatasetKind, ModelConfig, PipelineConfig,
+    Scale, TrainConfig,
+};
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{bail, Context};
+
+use super::{Codec, GbaeCodec, HierCodec, Sz3Codec, ZfpCodec};
+
+/// The codecs the unified API can construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    Hier,
+    Sz3,
+    Zfp,
+    Gbae,
+}
+
+/// All codec ids, in CLI help order.
+pub const CODEC_IDS: [&str; 4] = ["hier", "sz3", "zfp", "gbae"];
+
+impl CodecKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "hier" => Ok(Self::Hier),
+            "sz3" => Ok(Self::Sz3),
+            "zfp" => Ok(Self::Zfp),
+            "gbae" => Ok(Self::Gbae),
+            other => bail!("unknown codec {other:?} (have: {CODEC_IDS:?})"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hier => "hier",
+            Self::Sz3 => "sz3",
+            Self::Zfp => "zfp",
+            Self::Gbae => "gbae",
+        }
+    }
+}
+
+/// Builder resolving presets, runtime, and checkpoints into codecs.
+pub struct CodecBuilder {
+    artifacts: PathBuf,
+    ckpt_dir: PathBuf,
+    scale: Scale,
+    train: TrainConfig,
+    rt: Option<Rc<Runtime>>,
+}
+
+impl Default for CodecBuilder {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            ckpt_dir: PathBuf::from("results/ckpt"),
+            scale: Scale::Bench,
+            train: TrainConfig::default(),
+            rt: None,
+        }
+    }
+}
+
+impl CodecBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// AOT artifacts directory (default `artifacts`).
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Checkpoint cache directory (default `results/ckpt`).
+    pub fn ckpt_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.ckpt_dir = dir.into();
+        self
+    }
+
+    /// Dataset scale preset (default [`Scale::Bench`]).
+    pub fn scale(mut self, scale: Scale) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    /// Training hyper-parameters used when checkpoints are absent.
+    pub fn train(mut self, train: TrainConfig) -> Self {
+        self.train = train;
+        self
+    }
+
+    /// Inject an already-open runtime (shared across builders/codecs).
+    pub fn runtime(mut self, rt: Rc<Runtime>) -> Self {
+        self.rt = Some(rt);
+        self
+    }
+
+    /// The runtime handle, opening `artifacts/` on first use.
+    pub fn runtime_handle(&mut self) -> Result<Rc<Runtime>> {
+        if let Some(rt) = &self.rt {
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(Runtime::open(&self.artifacts)?);
+        self.rt = Some(rt.clone());
+        Ok(rt)
+    }
+
+    fn dataset(&self, kind: DatasetKind) -> DatasetConfig {
+        dataset_preset(kind, self.scale)
+    }
+
+    /// Build a codec for a dataset preset. `field` is the training input
+    /// for the learned codecs when no checkpoint is cached yet (the
+    /// baselines ignore it).
+    pub fn build(
+        &mut self,
+        codec: CodecKind,
+        kind: DatasetKind,
+        field: &Tensor,
+    ) -> Result<Box<dyn Codec>> {
+        Ok(match codec {
+            CodecKind::Sz3 => Box::new(Sz3Codec::new(self.dataset(kind))),
+            CodecKind::Zfp => Box::new(ZfpCodec::new(self.dataset(kind))),
+            CodecKind::Hier => Box::new(self.build_hier(kind, field)?),
+            CodecKind::Gbae => Box::new(self.build_gbae(kind, field)?),
+        })
+    }
+
+    /// Typed variant of [`Self::build`] for the hierarchical codec (the
+    /// concrete type exposes [`HierCodec::compress_streaming`]).
+    pub fn build_hier(&mut self, kind: DatasetKind, field: &Tensor) -> Result<HierCodec> {
+        let rt = self.runtime_handle()?;
+        let cfg = PipelineConfig {
+            dataset: self.dataset(kind),
+            model: model_preset(kind),
+            train: self.train.clone(),
+            tau: 0.0,
+        };
+        std::fs::create_dir_all(&self.ckpt_dir)?;
+        let (comp, _reports) = HierCompressor::prepare(&rt, &cfg, &self.ckpt_dir, field)?;
+        Ok(HierCodec::new(comp))
+    }
+
+    /// Typed variant of [`Self::build`] for the GBAE baseline codec.
+    pub fn build_gbae(&mut self, kind: DatasetKind, field: &Tensor) -> Result<GbaeCodec> {
+        let rt = self.runtime_handle()?;
+        let dataset = self.dataset(kind);
+        let model = model_preset(kind);
+        std::fs::create_dir_all(&self.ckpt_dir)?;
+        let (comp, _reports) = GbaeCompressor::prepare(
+            &rt,
+            &dataset,
+            &model.bae_group,
+            &self.ckpt_dir,
+            field,
+            &self.train,
+            None,
+        )?;
+        Ok(GbaeCodec::new(comp, model.bin_bae))
+    }
+
+    /// Rebuild the codec an archive was written with, using only its
+    /// header: codec id, dataset config, and model group names all come
+    /// from the archive. Learned codecs load their cached checkpoints
+    /// (decompression never trains — a missing checkpoint is an error).
+    pub fn for_archive(&mut self, archive: &Archive) -> Result<Box<dyn Codec>> {
+        let h = &archive.header;
+        let id = archive
+            .header_str("codec")
+            .context("archive header missing codec id (pre-codec archive?)")?
+            .to_string();
+        let dataset = DatasetConfig::from_json(h.req("dataset")?)?;
+        Ok(match id.as_str() {
+            "sz3" => Box::new(Sz3Codec::new(dataset)),
+            "zfp" => Box::new(ZfpCodec::new(dataset)),
+            "hier" => {
+                let model = ModelConfig::from_json(h.req("model")?)?;
+                let rt = self.runtime_handle()?;
+                let hgroup = archive.header_str("hbae_group")?.to_string();
+                let bgroups: Vec<String> = h
+                    .req("bae_groups")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_str().map(String::from))
+                    .collect();
+                let hbae = ParamStore::load(
+                    ParamStore::default_path(&self.ckpt_dir, &hgroup),
+                    &hgroup,
+                )
+                .context("loading HBAE checkpoint (run `attn-reduce train` first)")?;
+                let baes: Vec<ParamStore> = bgroups
+                    .iter()
+                    .map(|g| ParamStore::load(ParamStore::default_path(&self.ckpt_dir, g), g))
+                    .collect::<Result<_>>()
+                    .context("loading BAE checkpoint (run `attn-reduce train` first)")?;
+                Box::new(HierCodec::new(HierCompressor {
+                    rt,
+                    dataset,
+                    model,
+                    hbae,
+                    baes,
+                }))
+            }
+            "gbae" => {
+                let rt = self.runtime_handle()?;
+                let group = archive.header_str("ae_group")?.to_string();
+                let bin = h.req("latent_bin")?.as_f64().unwrap_or(0.0) as f32;
+                let ae = ParamStore::load(
+                    GbaeCompressor::ckpt_path(&self.ckpt_dir, &group),
+                    &group,
+                )
+                .context("loading GBAE checkpoint (compress with --codec gbae first)")?;
+                let corrector = match h.get("corrector_group").and_then(|v| v.as_str()) {
+                    Some(cg) => Some(ParamStore::load(
+                        GbaeCompressor::corrector_ckpt_path(&self.ckpt_dir, cg),
+                        cg,
+                    )?),
+                    None => None,
+                };
+                Box::new(GbaeCodec::new(
+                    GbaeCompressor { rt, dataset, ae, corrector },
+                    bin,
+                ))
+            }
+            other => bail!("unknown codec {other:?} in archive header"),
+        })
+    }
+}

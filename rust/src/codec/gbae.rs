@@ -1,0 +1,120 @@
+//! [`Codec`] adapter for the GBAE block-autoencoder baseline.
+//!
+//! The old `GbaeCompressor::compress(field, latent_bin, tau)` only
+//! *accounted* payload bytes and had no decompression at all; this
+//! adapter produces a full self-describing archive (sections `GLAT`,
+//! optional `GCLT`, plus the GAE trio) and implements the symmetric
+//! decode path, so the baseline now round-trips exactly like the
+//! hierarchical codec it is compared against.
+
+use crate::baselines::GbaeCompressor;
+use crate::coder::{decode_latents, encode_latents, Quantizer};
+use crate::compressor::{gae_bound_stage, gae_restore_stage, Archive};
+use crate::data::{NormStats, Normalizer};
+use crate::tensor::Tensor;
+use crate::util::json::{self, Value};
+use crate::Result;
+use anyhow::ensure;
+
+use super::{base_header, Codec, ErrorBound};
+
+/// Block-AE baseline codec (GBAE; with a corrector it is GAETC-like).
+pub struct GbaeCodec {
+    comp: GbaeCompressor,
+    /// Latent quantization bin (0 = raw f32 latents).
+    latent_bin: f32,
+}
+
+impl GbaeCodec {
+    pub fn new(comp: GbaeCompressor, latent_bin: f32) -> Self {
+        Self { comp, latent_bin }
+    }
+
+    /// The underlying baseline compressor.
+    pub fn compressor(&self) -> &GbaeCompressor {
+        &self.comp
+    }
+}
+
+impl Codec for GbaeCodec {
+    fn id(&self) -> &str {
+        "gbae"
+    }
+
+    fn compress(&self, field: &Tensor, bound: &ErrorBound) -> Result<Archive> {
+        self.compress_with_recon(field, bound).map(|(archive, _)| archive)
+    }
+
+    fn compress_with_recon(
+        &self,
+        field: &Tensor,
+        bound: &ErrorBound,
+    ) -> Result<(Archive, Tensor)> {
+        let dataset = &self.comp.dataset;
+        ensure!(
+            field.shape() == &dataset.dims[..],
+            "field shape {:?} != dataset dims {:?}",
+            field.shape(),
+            dataset.dims
+        );
+        let stats = Normalizer::fit(dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+
+        let q = Quantizer::new(self.latent_bin.max(0.0));
+        let (lat_rows, corr_rows, mut recon) = self.comp.forward(&norm, q)?;
+
+        let tau = bound.gae_tau(dataset, field.range() as f64);
+        let gae = gae_bound_stage(dataset, &stats, tau, &norm, &mut recon)?;
+
+        let mut header = base_header(self.id(), dataset, bound);
+        header.push(("norm".to_string(), stats.to_json()));
+        header.push(("tau".to_string(), json::num(tau as f64)));
+        header.push(("latent_bin".to_string(), json::num(self.latent_bin as f64)));
+        header.push(("ae_group".to_string(), json::s(self.comp.ae.group.as_str())));
+        header.push((
+            "corrector_group".to_string(),
+            self.comp
+                .corrector
+                .as_ref()
+                .map(|c| json::s(c.group.as_str()))
+                .unwrap_or(Value::Null),
+        ));
+        let mut archive = Archive::new(Value::Obj(header));
+        archive.add_section("GLAT", encode_latents(&lat_rows, q));
+        if let Some(c) = &corr_rows {
+            archive.add_section("GCLT", encode_latents(c, q));
+        }
+        if let Some(g) = gae {
+            archive.add_section("GCOF", g.gcof);
+            archive.add_section("GIDX", g.gidx);
+            archive.add_section("GBAS", g.gbas);
+        }
+
+        Normalizer::invert(&stats, &mut recon);
+        Ok((archive, recon))
+    }
+
+    fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        let h = &archive.header;
+        let dataset = crate::config::DatasetConfig::from_json(h.req("dataset")?)?;
+        let stats = NormStats::from_json(h.req("norm")?)?;
+        let tau = h.req("tau")?.as_f64().unwrap_or(0.0) as f32;
+        let bin = h.req("latent_bin")?.as_f64().unwrap_or(0.0) as f32;
+        ensure!(
+            h.req("ae_group")?.as_str().unwrap_or("") == self.comp.ae.group,
+            "archive AE group mismatch"
+        );
+        let q = Quantizer::new(bin.max(0.0));
+        let lat_rows = decode_latents(archive.section("GLAT")?, q)?;
+        let corr_rows = if archive.has_section("GCLT") {
+            Some(decode_latents(archive.section("GCLT")?, q)?)
+        } else {
+            None
+        };
+        let mut recon = self.comp.decode(&lat_rows, corr_rows.as_deref())?;
+        gae_restore_stage(&dataset, &stats, tau, archive, &mut recon)?;
+        Normalizer::invert(&stats, &mut recon);
+        Ok(recon)
+    }
+}

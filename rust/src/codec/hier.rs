@@ -1,0 +1,98 @@
+//! [`Codec`] adapter for the paper's hierarchical attention pipeline.
+//!
+//! Owns a trained [`HierCompressor`] (runtime handle + HBAE/BAE params)
+//! and maps the typed [`ErrorBound`] onto the per-GAE-block ℓ2 τ the
+//! pipeline guarantees. Also hosts the streaming entry point that routes
+//! the L3 coordinator through the same archive assembly as the one-shot
+//! path, so streaming and sequential compression share all config code.
+
+use crate::coder::Quantizer;
+use crate::compressor::{gae_bound_stage, Archive, HierCompressor};
+use crate::coordinator::{stream_forward, StreamStats};
+use crate::data::Normalizer;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::ensure;
+
+use super::{Codec, ErrorBound};
+
+/// Hierarchical (HBAE + BAE + GAE) codec.
+pub struct HierCodec {
+    comp: HierCompressor,
+}
+
+impl HierCodec {
+    pub fn new(comp: HierCompressor) -> Self {
+        Self { comp }
+    }
+
+    /// The underlying pipeline (for experiment runners that sweep
+    /// quantization bins or inspect the trained stack).
+    pub fn compressor(&self) -> &HierCompressor {
+        &self.comp
+    }
+
+    pub fn compressor_mut(&mut self) -> &mut HierCompressor {
+        &mut self.comp
+    }
+
+    /// Compress through the streaming coordinator (pipelined gather →
+    /// PJRT → sink stages over bounded channels) instead of the
+    /// sequential loop. Produces the **same self-describing archive** as
+    /// [`Codec::compress`]; returns the per-stage timing alongside.
+    pub fn compress_streaming(
+        &self,
+        field: &Tensor,
+        bound: &ErrorBound,
+        queue_depth: usize,
+    ) -> Result<(Archive, StreamStats)> {
+        let dataset = &self.comp.dataset;
+        ensure!(field.shape() == &dataset.dims[..], "field shape mismatch");
+        let qh = Quantizer::new(self.comp.model.bin_hbae.max(0.0));
+        let qb = Quantizer::new(self.comp.model.bin_bae.max(0.0));
+        ensure!(
+            qh.enabled() && qb.enabled(),
+            "streaming archive path requires quantized latents (bins > 0)"
+        );
+
+        let stats = Normalizer::fit(dataset.normalization, field);
+        let mut norm = field.clone();
+        Normalizer::apply(&stats, &mut norm);
+
+        let out = stream_forward(&self.comp, &norm, queue_depth)?;
+        let lh_all = qh.dequant_all(&out.lh_codes);
+        let lb_all = vec![qb.dequant_all(&out.lb_codes)];
+
+        let tau = bound.gae_tau(dataset, field.range() as f64);
+        let mut recon = out.recon;
+        let gae = gae_bound_stage(dataset, &stats, tau, &norm, &mut recon)?;
+        let mut archive = self.comp.build_archive(&stats, tau, &lh_all, &lb_all, gae);
+        archive.set_header("bound", bound.to_json());
+        Ok((archive, out.stats))
+    }
+}
+
+impl Codec for HierCodec {
+    fn id(&self) -> &str {
+        "hier"
+    }
+
+    fn compress(&self, field: &Tensor, bound: &ErrorBound) -> Result<Archive> {
+        self.compress_with_recon(field, bound).map(|(archive, _)| archive)
+    }
+
+    fn compress_with_recon(
+        &self,
+        field: &Tensor,
+        bound: &ErrorBound,
+    ) -> Result<(Archive, Tensor)> {
+        let tau = bound.gae_tau(&self.comp.dataset, field.range() as f64);
+        let (mut archive, recon) = self.comp.compress(field, tau)?;
+        archive.set_header("bound", bound.to_json());
+        Ok((archive, recon))
+    }
+
+    fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        self.comp.decompress(archive)
+    }
+}

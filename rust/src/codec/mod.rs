@@ -1,0 +1,117 @@
+//! Unified compression API: one [`Codec`] trait + typed [`ErrorBound`]
+//! across the hierarchical pipeline, every baseline, and the streaming
+//! coordinator.
+//!
+//! The paper's headline claim is a comparison of error-bounded
+//! compressors under shared accounting; this module is that comparison's
+//! API surface. Every compressor is a [`Codec`]:
+//!
+//! ```text
+//!   fn id(&self) -> &str;
+//!   fn compress(&self, field, bound: &ErrorBound) -> Result<Archive>;
+//!   fn decompress(&self, archive) -> Result<Tensor>;
+//! ```
+//!
+//! Archives are **self-describing**: the header records the codec id, the
+//! full [`DatasetConfig`], normalization stats, and model group names, so
+//! [`CodecBuilder::for_archive`] restores a field from the bytes alone —
+//! no preset flags. Construction goes through [`CodecBuilder`], which
+//! resolves presets, lazily opens the PJRT runtime (only learned codecs
+//! need it), and caches training checkpoints.
+//!
+//! | old entry point                              | unified API |
+//! |----------------------------------------------|-------------|
+//! | `HierCompressor::prepare` + `compress(f,tau)`| `builder.build(Hier, kind, &f)` + `codec.compress(&f, &bound)` |
+//! | `Sz3Like::new(eps).compress` / static decode | `builder.build(Sz3, ..)` — ε derived from the bound |
+//! | `ZfpLike::new(precision)`                    | `builder.build(Zfp, ..)` — precision certified against the bound |
+//! | `GbaeCompressor::compress(f, bin, tau)`      | `builder.build(Gbae, ..)` — now with a real decode path |
+//! | `coordinator::stream_compress`               | `HierCodec::compress_streaming` — same archive as one-shot |
+
+mod bound;
+mod builder;
+mod gbae;
+mod hier;
+mod sz3;
+mod zfp;
+
+pub use bound::ErrorBound;
+pub use builder::{CodecBuilder, CodecKind, CODEC_IDS};
+pub use gbae::GbaeCodec;
+pub use hier::HierCodec;
+pub use sz3::Sz3Codec;
+pub use zfp::ZfpCodec;
+
+use crate::compressor::{compression_ratio, Archive, CompressStats};
+use crate::config::DatasetConfig;
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::Result;
+
+/// An error-bounded compressor behind the unified API.
+pub trait Codec {
+    /// Stable codec id, recorded in archive headers (`hier`, `sz3`, ...).
+    fn id(&self) -> &str;
+
+    /// Compress a field under a typed error bound into a self-describing
+    /// archive.
+    fn compress(&self, field: &Tensor, bound: &ErrorBound) -> Result<Archive>;
+
+    /// Restore a field from an archive produced by this codec.
+    fn decompress(&self, archive: &Archive) -> Result<Tensor>;
+
+    /// Compress and also return the reconstruction. The default decodes
+    /// the archive it just built; codecs whose forward pass already
+    /// yields the reconstruction (hier, gbae) override this to avoid the
+    /// second pass.
+    fn compress_with_recon(
+        &self,
+        field: &Tensor,
+        bound: &ErrorBound,
+    ) -> Result<(Archive, Tensor)> {
+        let archive = self.compress(field, bound)?;
+        let recon = self.decompress(&archive)?;
+        Ok((archive, recon))
+    }
+}
+
+/// Common archive header fields every codec writes (codec id, bound,
+/// dataset config) — the base of self-description.
+pub(crate) fn base_header(
+    id: &str,
+    dataset: &DatasetConfig,
+    bound: &ErrorBound,
+) -> Vec<(String, Value)> {
+    vec![
+        ("codec".to_string(), crate::util::json::s(id)),
+        ("bound".to_string(), bound.to_json()),
+        ("dataset".to_string(), dataset.to_json()),
+    ]
+}
+
+/// Compression statistics computed from a self-describing archive alone
+/// (the dataset geometry comes from the header).
+pub fn archive_stats(archive: &Archive) -> Result<CompressStats> {
+    let dataset = DatasetConfig::from_json(archive.header.req("dataset")?)?;
+    let n_points = dataset.total_points();
+    let payload = archive.cr_payload_bytes();
+    let total = archive.total_bytes();
+    Ok(CompressStats {
+        archive_bytes: total,
+        cr_payload_bytes: payload,
+        cr: compression_ratio(n_points, payload),
+        cr_total: compression_ratio(n_points, total),
+        gae_corrected_blocks: 0,
+        gae_total_coeffs: 0,
+        section_sizes: archive.section_sizes(),
+    })
+}
+
+/// The error bound an archive was written under (`None` for pre-codec
+/// archives without the header field).
+pub fn archive_bound(archive: &Archive) -> ErrorBound {
+    archive
+        .header
+        .get("bound")
+        .and_then(|v| ErrorBound::from_json(v).ok())
+        .unwrap_or(ErrorBound::None)
+}

@@ -1,0 +1,57 @@
+//! [`Codec`] adapter for the SZ3-like prediction-based compressor.
+//!
+//! Wraps [`Sz3Like`]'s raw byte stream into a self-describing [`Archive`]
+//! (section `SZ3B`) and derives the pointwise ε from the typed
+//! [`ErrorBound`], fixing the old asymmetric `new(eps).compress` /
+//! static-`decompress` surface.
+
+use crate::baselines::Sz3Like;
+use crate::compressor::Archive;
+use crate::config::DatasetConfig;
+use crate::tensor::Tensor;
+use crate::util::json;
+use crate::Result;
+use anyhow::ensure;
+
+use super::{base_header, Codec, ErrorBound};
+
+/// SZ3-like codec (Lorenzo predictor + error quantization + entropy).
+pub struct Sz3Codec {
+    dataset: DatasetConfig,
+}
+
+impl Sz3Codec {
+    pub fn new(dataset: DatasetConfig) -> Self {
+        Self { dataset }
+    }
+}
+
+impl Codec for Sz3Codec {
+    fn id(&self) -> &str {
+        "sz3"
+    }
+
+    fn compress(&self, field: &Tensor, bound: &ErrorBound) -> Result<Archive> {
+        ensure!(
+            field.shape() == &self.dataset.dims[..],
+            "field shape {:?} != dataset dims {:?}",
+            field.shape(),
+            self.dataset.dims
+        );
+        let eps = bound.pointwise_eps(&self.dataset, field.range() as f64);
+        ensure!(
+            eps.is_finite() && eps > 0.0,
+            "bound {bound} yields eps {eps} (constant field or zero bound?)"
+        );
+        let bytes = Sz3Like::new(eps).compress(field)?;
+        let mut header = base_header(self.id(), &self.dataset, bound);
+        header.push(("eps".to_string(), json::num(eps as f64)));
+        let mut archive = Archive::new(crate::util::json::Value::Obj(header));
+        archive.add_section("SZ3B", bytes);
+        Ok(archive)
+    }
+
+    fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        Sz3Like::decompress(archive.section("SZ3B")?)
+    }
+}

@@ -1,0 +1,101 @@
+//! [`Codec`] adapter for the ZFP-like transform compressor.
+//!
+//! ZFP's knob is fixed precision, which has no closed-form map to an
+//! error bound — so the adapter *certifies* the bound instead: binary
+//! search over precision, decompressing each trial and keeping the
+//! smallest precision whose reconstruction measurably satisfies the
+//! requested [`ErrorBound`]. The error is monotone non-increasing in
+//! precision, so the search is sound.
+
+use crate::baselines::ZfpLike;
+use crate::compressor::Archive;
+use crate::config::DatasetConfig;
+use crate::tensor::Tensor;
+use crate::util::json;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+use super::{base_header, Codec, ErrorBound};
+
+/// Precision used for `ErrorBound::None` (best effort; matches the old
+/// bench default).
+const DEFAULT_PRECISION: u32 = 12;
+const MAX_PRECISION: u32 = 26;
+
+/// ZFP-like codec (4^d block transform + fixed precision), bound-certified.
+pub struct ZfpCodec {
+    dataset: DatasetConfig,
+}
+
+impl ZfpCodec {
+    pub fn new(dataset: DatasetConfig) -> Self {
+        Self { dataset }
+    }
+
+    /// Smallest precision whose reconstruction satisfies `bound`, with its
+    /// compressed bytes.
+    fn certify(&self, field: &Tensor, bound: &ErrorBound) -> Result<(u32, Vec<u8>)> {
+        let meets = |p: u32| -> Result<Option<Vec<u8>>> {
+            let bytes = ZfpLike::new(p).compress(field)?;
+            let recon = ZfpLike::decompress(&bytes)?;
+            if bound.satisfied_by(field, &recon, &self.dataset) {
+                Ok(Some(bytes))
+            } else {
+                Ok(None)
+            }
+        };
+        // binary search the smallest satisfying precision in [1, 26]
+        let (mut lo, mut hi) = (1u32, MAX_PRECISION);
+        let mut best: Option<(u32, Vec<u8>)> = None;
+        while lo <= hi {
+            let mid = (lo + hi) / 2;
+            match meets(mid)? {
+                Some(bytes) => {
+                    best = Some((mid, bytes));
+                    if mid == 1 {
+                        break;
+                    }
+                    hi = mid - 1;
+                }
+                None => lo = mid + 1,
+            }
+        }
+        match best {
+            Some(found) => Ok(found),
+            None => bail!(
+                "zfp-like codec cannot certify bound {bound} even at precision \
+                 {MAX_PRECISION} (transform is near-lossless, not lossless)"
+            ),
+        }
+    }
+}
+
+impl Codec for ZfpCodec {
+    fn id(&self) -> &str {
+        "zfp"
+    }
+
+    fn compress(&self, field: &Tensor, bound: &ErrorBound) -> Result<Archive> {
+        ensure!(
+            field.shape() == &self.dataset.dims[..],
+            "field shape {:?} != dataset dims {:?}",
+            field.shape(),
+            self.dataset.dims
+        );
+        let (precision, bytes) = match bound {
+            ErrorBound::None => {
+                (DEFAULT_PRECISION, ZfpLike::new(DEFAULT_PRECISION).compress(field)?)
+            }
+            _ => self.certify(field, bound)?,
+        };
+        let mut header = base_header(self.id(), &self.dataset, bound);
+        header.push(("precision".to_string(), json::num(precision as f64)));
+        let mut archive = Archive::new(crate::util::json::Value::Obj(header));
+        archive.add_section("ZFPB", bytes);
+        Ok(archive)
+    }
+
+    fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        ZfpLike::decompress(archive.section("ZFPB")?)
+    }
+}

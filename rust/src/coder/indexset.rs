@@ -5,14 +5,14 @@
 //! each set becomes a binary sequence ('1' = vector selected), truncated
 //! to the **shortest prefix containing all the 1s**; we store that prefix
 //! length plus the prefix bits. All blocks' prefixes are concatenated and
-//! the whole stream is ZSTD-compressed.
+//! the whole stream is lossless-compressed (LZSS).
 //!
 //! Uncompressed layout (little-endian):
 //!   u32 n_blocks | u32 dim | n_blocks x u32 prefix_len | bit-packed
 //!   prefixes (LSB-first, contiguous)
 
 use super::bitstream::{BitReader, BitWriter};
-use super::lossless::{zstd_compress, zstd_decompress};
+use super::lossless::{lossless_compress, lossless_decompress};
 use crate::Result;
 use anyhow::{bail, ensure};
 
@@ -46,12 +46,12 @@ pub fn encode_index_sets(sets: &[Vec<usize>], dim: usize) -> Result<Vec<u8>> {
         }
     }
     raw.extend_from_slice(bits.as_bytes());
-    zstd_compress(&raw)
+    lossless_compress(&raw)
 }
 
 /// Decode an [`encode_index_sets`] stream.
 pub fn decode_index_sets(bytes: &[u8], max_raw: usize) -> Result<Vec<Vec<usize>>> {
-    let raw = zstd_decompress(bytes, max_raw)?;
+    let raw = lossless_decompress(bytes, max_raw)?;
     ensure!(raw.len() >= 8, "indexset: truncated header");
     let n_blocks = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
     let _dim = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;

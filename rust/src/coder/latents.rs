@@ -1,0 +1,157 @@
+//! Latent-row payload codec (HLAT/BLAT/GLAT section bodies).
+//!
+//! Shared by the hierarchical pipeline and the GBAE baseline codec:
+//! Huffman over integer codes when a quantizer is active, raw f32
+//! otherwise (the ablation configs disable quantization).
+
+use super::huffman::{huffman_decode, huffman_encode};
+use super::quantizer::Quantizer;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// Latent payload encoding modes (section body headers).
+const MODE_RAW: u8 = 0;
+const MODE_HUFF: u8 = 1;
+
+/// Encode latent rows: Huffman over integer codes when quantized, raw f32
+/// otherwise.
+pub fn encode_latents(values: &[f32], q: Quantizer) -> Vec<u8> {
+    let mut out = Vec::new();
+    if q.enabled() {
+        out.push(MODE_HUFF);
+        let codes: Vec<i32> = values.iter().map(|&v| q.code(v)).collect();
+        out.extend(huffman_encode(&codes));
+    } else {
+        out.push(MODE_RAW);
+        out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+        for &v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode an [`encode_latents`] payload.
+pub fn decode_latents(bytes: &[u8], q: Quantizer) -> Result<Vec<f32>> {
+    ensure!(!bytes.is_empty(), "latent section empty");
+    match bytes[0] {
+        MODE_HUFF => {
+            ensure!(q.enabled(), "archive quantized but config bin is 0");
+            let (codes, _) = huffman_decode(&bytes[1..])?;
+            Ok(q.dequant_all(&codes))
+        }
+        MODE_RAW => {
+            ensure!(bytes.len() >= 9, "raw latent header");
+            let n = u64::from_le_bytes(bytes[1..9].try_into().unwrap()) as usize;
+            // guard the multiply against adversarial counts before using it
+            ensure!(n <= (bytes.len() - 9) / 4, "raw latent length");
+            ensure!(bytes.len() == 9 + n * 4, "raw latent length");
+            Ok(bytes[9..]
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect())
+        }
+        m => anyhow::bail!("unknown latent mode {m}"),
+    }
+}
+
+/// Concatenate one latent stream per stacked AE (u32 count prefix).
+pub fn encode_latent_groups(groups: &[Vec<f32>], q: Quantizer) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(groups.len() as u32).to_le_bytes());
+    for g in groups {
+        let payload = encode_latents(g, q);
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend(payload);
+    }
+    out
+}
+
+/// Decode an [`encode_latent_groups`] payload, checking the stream count.
+pub fn decode_latent_groups(bytes: &[u8], q: Quantizer, expect: usize) -> Result<Vec<Vec<f32>>> {
+    ensure!(bytes.len() >= 4, "latent group header");
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    ensure!(n == expect, "archive has {n} latent streams, loaded {expect} decoders");
+    let mut off = 4;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = u64::from_le_bytes(
+            bytes
+                .get(off..off + 8)
+                .context("latent group length")?
+                .try_into()
+                .unwrap(),
+        ) as usize;
+        off += 8;
+        let end = off.checked_add(len).context("latent group length overflow")?;
+        out.push(decode_latents(bytes.get(off..end).context("latent group body")?, q)?);
+        off = end;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latent_codec_round_trips_quantized() {
+        let q = Quantizer::new(0.05);
+        let vals: Vec<f32> = (0..100).map(|i| (i as f32 * 0.31).sin()).collect();
+        let enc = encode_latents(&vals, q);
+        let dec = decode_latents(&enc, q).unwrap();
+        for (a, b) in vals.iter().zip(&dec) {
+            assert!((a - b).abs() <= 0.025 + 1e-6);
+        }
+        // snapped values round-trip exactly
+        let mut snapped = vals.clone();
+        q.snap(&mut snapped);
+        let enc2 = encode_latents(&snapped, q);
+        let dec2 = decode_latents(&enc2, q).unwrap();
+        assert_eq!(snapped, dec2);
+    }
+
+    #[test]
+    fn latent_codec_round_trips_raw() {
+        let q = Quantizer::disabled();
+        let vals: Vec<f32> = (0..50).map(|i| (i as f32).exp() % 7.0).collect();
+        let dec = decode_latents(&encode_latents(&vals, q), q).unwrap();
+        assert_eq!(vals, dec);
+    }
+
+    #[test]
+    fn latent_groups_round_trip() {
+        let q = Quantizer::new(0.1);
+        let mut g1: Vec<f32> = (0..30).map(|i| i as f32 * 0.3).collect();
+        let mut g2: Vec<f32> = (0..10).map(|i| -(i as f32) * 0.7).collect();
+        q.snap(&mut g1);
+        q.snap(&mut g2);
+        let groups = vec![g1.clone(), g2.clone()];
+        let enc = encode_latent_groups(&groups, q);
+        let dec = decode_latent_groups(&enc, q, 2).unwrap();
+        assert_eq!(dec, groups);
+        assert!(decode_latent_groups(&enc, q, 1).is_err());
+    }
+
+    #[test]
+    fn adversarial_raw_count_errors_not_panics() {
+        // MODE_RAW with a u64::MAX element count must error before the
+        // `9 + n * 4` length arithmetic
+        let mut bytes = vec![0u8]; // MODE_RAW
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_latents(&bytes, Quantizer::disabled()).is_err());
+        // and a group whose declared length overflows the offset
+        let mut g = vec![1, 0, 0, 0]; // one group
+        g.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_latent_groups(&g, Quantizer::disabled(), 1).is_err());
+    }
+
+    #[test]
+    fn truncated_latents_error() {
+        let q = Quantizer::new(0.1);
+        let enc = encode_latents(&[1.0, 2.0, 3.0], q);
+        for cut in 0..enc.len() {
+            assert!(decode_latents(&enc[..cut], q).is_err(), "cut {cut}");
+        }
+    }
+}

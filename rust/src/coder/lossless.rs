@@ -1,19 +1,230 @@
-//! Lossless byte compression backend — ZSTD, exactly as the paper uses
-//! for the concatenated index bitmaps (§II-E, Fig. 3).
+//! Lossless byte compression backend for the concatenated index bitmaps
+//! (§II-E, Fig. 3) and the baseline compressors' entropy streams.
+//!
+//! The paper uses ZSTD; the build container has no zstd crate, so this is
+//! an in-tree LZSS (LZ77 + flag-bit literals) with a 64 KiB window,
+//! hash-chain matching, and unbounded match lengths (varint-coded), which
+//! captures the long-run / repeated-period structure those streams have.
+//! The format is self-framing (magic + raw length) and every decode path
+//! returns `Err` on corrupt input — never panics.
+//!
+//! Layout:
+//! ```text
+//!   0xB3 | varint raw_len | groups of: flags u8 (LSB first, 1 = literal)
+//!        then 8 tokens: literal = raw byte,
+//!                       match   = u16 LE distance | varint (len - 4)
+//! ```
 
 use crate::Result;
-use anyhow::Context;
+use anyhow::{bail, ensure, Context};
 
-/// Compress bytes with ZSTD (level 19 — these are tiny metadata streams,
-//  so we favor ratio over speed).
-pub fn zstd_compress(data: &[u8]) -> Result<Vec<u8>> {
-    zstd::bulk::compress(data, 19).context("zstd compress")
+const MAGIC_LZ: u8 = 0xB3;
+const MIN_MATCH: usize = 4;
+const MAX_DIST: usize = 65_535;
+const HASH_BITS: u32 = 15;
+const MAX_CHAIN: usize = 64;
+
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
 }
 
-/// Decompress a [`zstd_compress`] stream; `max_size` caps the output as a
-/// safety bound against corrupt archives.
-pub fn zstd_decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
-    zstd::bulk::decompress(data, max_size).context("zstd decompress")
+fn read_varint(data: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *data.get(*pos).context("lossless: varint truncated")?;
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        ensure!(shift < 64, "lossless: varint overflow");
+    }
+}
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Token writer: buffers up to 8 tokens so the flags byte precedes them.
+struct TokenWriter<'a> {
+    out: &'a mut Vec<u8>,
+    flags: u8,
+    n: u32,
+    buf: Vec<u8>,
+}
+
+impl<'a> TokenWriter<'a> {
+    fn new(out: &'a mut Vec<u8>) -> Self {
+        Self { out, flags: 0, n: 0, buf: Vec::with_capacity(64) }
+    }
+
+    fn literal(&mut self, b: u8) {
+        self.flags |= 1 << self.n;
+        self.buf.push(b);
+        self.bump();
+    }
+
+    fn matched(&mut self, dist: u16, len: usize) {
+        self.buf.extend_from_slice(&dist.to_le_bytes());
+        push_varint(&mut self.buf, (len - MIN_MATCH) as u64);
+        self.bump();
+    }
+
+    fn bump(&mut self) {
+        self.n += 1;
+        if self.n == 8 {
+            self.flush();
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.n > 0 {
+            self.out.push(self.flags);
+            self.out.extend_from_slice(&self.buf);
+            self.flags = 0;
+            self.n = 0;
+            self.buf.clear();
+        }
+    }
+}
+
+/// Compress bytes (LZSS). Worst case ~12.5% expansion on random data.
+pub fn lossless_compress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = vec![MAGIC_LZ];
+    push_varint(&mut out, data.len() as u64);
+    if data.is_empty() {
+        return Ok(out);
+    }
+
+    // hash chains: head[h] = most recent position with that 4-byte hash,
+    // prev is a window-sized ring (slot i & WMASK holds the previous
+    // position in i's chain) — fixed 512 KiB of bookkeeping regardless of
+    // input size, valid because matches beyond MAX_DIST are discarded
+    // before any slot can be overwritten by a newer position
+    const WINDOW: usize = MAX_DIST + 1; // power of two (1 << 16)
+    const WMASK: usize = WINDOW - 1;
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut prev = vec![usize::MAX; WINDOW];
+    let mut w = TokenWriter::new(&mut out);
+
+    let mut i = 0usize;
+    while i < data.len() {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= data.len() {
+            let mut cand = head[hash4(data, i)];
+            let mut chain = 0usize;
+            while cand != usize::MAX && chain < MAX_CHAIN {
+                let dist = i - cand;
+                if dist > MAX_DIST {
+                    break; // chains go from recent to old: all further are too far
+                }
+                let max_len = data.len() - i;
+                let mut l = 0usize;
+                // overlap (dist < len) is fine: cand + l only reads bytes
+                // the decoder will already have produced
+                while l < max_len && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = dist;
+                    if l == max_len {
+                        break;
+                    }
+                }
+                let next = prev[cand & WMASK];
+                if next == usize::MAX || next >= cand {
+                    break; // end of chain, or the ring slot was recycled
+                }
+                cand = next;
+                chain += 1;
+            }
+        }
+
+        if best_len >= MIN_MATCH {
+            w.matched(best_dist as u16, best_len);
+            let end = i + best_len;
+            while i < end {
+                if i + MIN_MATCH <= data.len() {
+                    let h = hash4(data, i);
+                    prev[i & WMASK] = head[h];
+                    head[h] = i;
+                }
+                i += 1;
+            }
+        } else {
+            w.literal(data[i]);
+            if i + MIN_MATCH <= data.len() {
+                let h = hash4(data, i);
+                prev[i & WMASK] = head[h];
+                head[h] = i;
+            }
+            i += 1;
+        }
+    }
+    w.flush();
+    Ok(out)
+}
+
+/// Decompress a [`lossless_compress`] stream; `max_size` caps the output
+/// as a safety bound against corrupt archives.
+pub fn lossless_decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+    ensure!(!data.is_empty(), "lossless: empty input");
+    if data[0] != MAGIC_LZ {
+        bail!("lossless: bad magic {:#04x}", data[0]);
+    }
+    let mut pos = 1usize;
+    let raw_len = read_varint(data, &mut pos)? as usize;
+    ensure!(
+        raw_len <= max_size,
+        "lossless: declared size {raw_len} exceeds cap {max_size}"
+    );
+    let mut out = Vec::with_capacity(raw_len);
+    while out.len() < raw_len {
+        let flags = *data.get(pos).context("lossless: flags truncated")?;
+        pos += 1;
+        for bit in 0..8u8 {
+            if out.len() == raw_len {
+                break;
+            }
+            if flags & (1 << bit) != 0 {
+                out.push(*data.get(pos).context("lossless: literal truncated")?);
+                pos += 1;
+            } else {
+                let lo = *data.get(pos).context("lossless: match truncated")?;
+                let hi = *data.get(pos + 1).context("lossless: match truncated")?;
+                pos += 2;
+                let dist = u16::from_le_bytes([lo, hi]) as usize;
+                ensure!(dist >= 1 && dist <= out.len(), "lossless: bad distance {dist}");
+                let extra = read_varint(data, &mut pos)?;
+                // bound-check BEFORE widening arithmetic: an adversarial
+                // varint must not overflow `+ MIN_MATCH` below
+                ensure!(extra <= raw_len as u64, "lossless: match length {extra} absurd");
+                let len = extra as usize + MIN_MATCH;
+                ensure!(out.len() + len <= raw_len, "lossless: match overruns output");
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    ensure!(pos == data.len(), "lossless: {} trailing bytes", data.len() - pos);
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -29,9 +240,9 @@ mod tests {
             data.extend(std::iter::repeat(0xFFu8).take(i % 7));
             data.extend(std::iter::repeat(0x00u8).take(13 - i % 7));
         }
-        let c = zstd_compress(&data).unwrap();
+        let c = lossless_compress(&data).unwrap();
         assert!(c.len() < data.len() / 4, "{} vs {}", c.len(), data.len());
-        let d = zstd_decompress(&c, data.len()).unwrap();
+        let d = lossless_decompress(&c, data.len()).unwrap();
         assert_eq!(d, data);
     }
 
@@ -39,20 +250,75 @@ mod tests {
     fn round_trip_random() {
         let mut rng = Rng::new(4);
         let data: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
-        let c = zstd_compress(&data).unwrap();
-        let d = zstd_decompress(&c, data.len()).unwrap();
+        let c = lossless_compress(&data).unwrap();
+        let d = lossless_decompress(&c, data.len()).unwrap();
         assert_eq!(d, data);
+        // flag-bit scheme bounds expansion on incompressible data
+        assert!(c.len() <= data.len() + data.len() / 8 + 16);
     }
 
     #[test]
     fn empty_round_trip() {
-        let c = zstd_compress(&[]).unwrap();
-        let d = zstd_decompress(&c, 16).unwrap();
+        let c = lossless_compress(&[]).unwrap();
+        let d = lossless_decompress(&c, 16).unwrap();
         assert!(d.is_empty());
     }
 
     #[test]
     fn corrupt_stream_errors() {
-        assert!(zstd_decompress(&[1, 2, 3, 4], 100).is_err());
+        assert!(lossless_decompress(&[1, 2, 3, 4], 100).is_err());
+        assert!(lossless_decompress(&[], 100).is_err());
+    }
+
+    #[test]
+    fn truncations_error_never_panic() {
+        let data: Vec<u8> = (0..500u32).map(|i| (i % 91) as u8).collect();
+        let c = lossless_compress(&data).unwrap();
+        for cut in 0..c.len() {
+            assert!(lossless_decompress(&c[..cut], data.len()).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn cap_is_enforced() {
+        let data = vec![7u8; 1000];
+        let c = lossless_compress(&data).unwrap();
+        assert!(lossless_decompress(&c, 999).is_err());
+        assert!(lossless_decompress(&c, 1000).is_ok());
+    }
+
+    #[test]
+    fn adversarial_match_length_errors_not_panics() {
+        // one literal then a match whose varint length is u64::MAX: the
+        // decoder must reject it before any widening arithmetic
+        let mut s = vec![super::MAGIC_LZ, 10]; // raw_len = 10
+        s.push(0b0000_0001); // token 0 literal, token 1 match
+        s.push(b'A');
+        s.extend_from_slice(&1u16.to_le_bytes()); // dist 1
+        s.extend_from_slice(&[0xFF; 9]); // varint u64::MAX ...
+        s.push(0x01);
+        assert!(lossless_decompress(&s, 100).is_err());
+    }
+
+    #[test]
+    fn long_overlapping_runs() {
+        // dist-1 match of length far beyond 255 exercises the varint path
+        let data = vec![0xABu8; 100_000];
+        let c = lossless_compress(&data).unwrap();
+        assert!(c.len() < 64, "run should collapse, got {}", c.len());
+        assert_eq!(lossless_decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn matches_beyond_window_still_round_trip() {
+        // two identical 1 KiB blocks separated by > 64 KiB of noise still
+        // round-trip (the second block simply doesn't reference the first)
+        let mut rng = Rng::new(9);
+        let block: Vec<u8> = (0..1024).map(|_| rng.next_u64() as u8).collect();
+        let mut data = block.clone();
+        data.extend((0..70_000).map(|_| rng.next_u64() as u8));
+        data.extend_from_slice(&block);
+        let c = lossless_compress(&data).unwrap();
+        assert_eq!(lossless_decompress(&c, data.len()).unwrap(), data);
     }
 }

@@ -6,17 +6,21 @@
 //! * [`bitstream`] — bit-level reader/writer used by the Huffman codec,
 //!   the index-set codec, and the ZFP-like baseline.
 //! * [`indexset`] — Fig. 3 shortest-prefix bitmap encoding of PCA basis
-//!   index sets, concatenated and ZSTD-compressed.
-//! * [`lossless`] — ZSTD wrapper (the paper's lossless backend).
+//!   index sets, concatenated and lossless-compressed.
+//! * [`lossless`] — LZSS lossless backend (in-tree ZSTD substitute).
+//! * [`latents`] — latent-row payload codec shared by the hierarchical
+//!   pipeline and the GBAE baseline codec.
 
 pub mod bitstream;
 pub mod huffman;
 pub mod indexset;
+pub mod latents;
 pub mod lossless;
 pub mod quantizer;
 
 pub use bitstream::{BitReader, BitWriter};
 pub use huffman::{huffman_decode, huffman_encode};
 pub use indexset::{decode_index_sets, encode_index_sets};
-pub use lossless::{zstd_compress, zstd_decompress};
+pub use latents::{decode_latent_groups, decode_latents, encode_latent_groups, encode_latents};
+pub use lossless::{lossless_compress, lossless_decompress};
 pub use quantizer::Quantizer;

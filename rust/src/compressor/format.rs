@@ -6,13 +6,20 @@
 //!   u32 n_sections | n x ( [u8;4] tag | u64 len | bytes )
 //! ```
 //!
-//! Sections used by the pipeline:
+//! Sections used by the codecs:
 //!   HLAT — HBAE latent codes (Huffman)        } counted in CR
 //!   BLAT — BAE latent codes (Huffman)         } counted in CR
+//!   GLAT — GBAE primary latent codes          } counted in CR
+//!   GCLT — GBAE corrector latent codes        } counted in CR
 //!   GCOF — GAE coefficient codes (Huffman)    } counted in CR
-//!   GIDX — GAE index sets (Fig. 3 + ZSTD)     } counted in CR
+//!   GIDX — GAE index sets (Fig. 3 + LZSS)     } counted in CR
+//!   SZ3B — SZ3-like whole-stream payload      } counted in CR
+//!   ZFPB — ZFP-like whole-stream payload      } counted in CR
 //!   GBAS — PCA basis, f32 (amortized like model params — the paper's CR
 //!          counts latents + coefficients + index info; §III-C)
+//!
+//! Unknown section tags are preserved verbatim by the parser, so newer
+//! writers stay readable by older readers (forward compatibility).
 
 use crate::util::json::Value;
 use crate::Result;
@@ -22,7 +29,8 @@ const MAGIC: &[u8; 4] = b"ARDC";
 const VERSION: u16 = 1;
 
 /// Sections whose bytes count toward the paper's compression ratio.
-pub const CR_SECTIONS: [&str; 4] = ["HLAT", "BLAT", "GCOF", "GIDX"];
+pub const CR_SECTIONS: [&str; 8] =
+    ["HLAT", "BLAT", "GLAT", "GCLT", "GCOF", "GIDX", "SZ3B", "ZFPB"];
 
 /// A tagged-section archive with a JSON header.
 #[derive(Debug, Clone)]
@@ -55,6 +63,31 @@ impl Archive {
 
     pub fn has_section(&self, tag: &str) -> bool {
         self.sections.iter().any(|(t, _)| t == tag)
+    }
+
+    /// Set (insert or replace) a header field. Codec wrappers use this to
+    /// stamp the codec id and error bound into pipeline-built archives.
+    pub fn set_header(&mut self, key: &str, val: Value) {
+        match &mut self.header {
+            Value::Obj(pairs) => {
+                if let Some(pair) = pairs.iter_mut().find(|(k, _)| k == key) {
+                    pair.1 = val;
+                } else {
+                    pairs.push((key.to_string(), val));
+                }
+            }
+            other => {
+                *other = Value::Obj(vec![(key.to_string(), val)]);
+            }
+        }
+    }
+
+    /// Required string header field (readable error on absence/mistype).
+    pub fn header_str(&self, key: &str) -> Result<&str> {
+        self.header
+            .req(key)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("header field {key:?} is not a string"))
     }
 
     pub fn section_sizes(&self) -> Vec<(String, usize)> {
@@ -101,6 +134,9 @@ impl Archive {
         out
     }
 
+    /// Parse an archive. Corrupt or truncated input always returns `Err`
+    /// (all offset arithmetic is overflow-checked — never panics), and
+    /// unknown section tags are preserved for forward compatibility.
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         ensure!(bytes.len() >= 10, "archive truncated");
         if &bytes[0..4] != MAGIC {
@@ -109,21 +145,39 @@ impl Archive {
         let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
         ensure!(version == VERSION, "unsupported archive version {version}");
         let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
-        ensure!(bytes.len() >= 10 + hlen + 4, "archive header truncated");
-        let header = Value::parse(std::str::from_utf8(&bytes[10..10 + hlen])?)?;
-        let mut off = 10 + hlen;
+        let header_end = 10usize
+            .checked_add(hlen)
+            .ok_or_else(|| anyhow::anyhow!("archive header length overflow"))?;
+        ensure!(
+            bytes.len() >= header_end + 4,
+            "archive header truncated ({} of {} bytes)",
+            bytes.len(),
+            header_end + 4
+        );
+        let header = Value::parse(std::str::from_utf8(&bytes[10..header_end])?)?;
+        let mut off = header_end;
         let n = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
         off += 4;
+        // cheap sanity cap: every section needs at least a 12-byte header
+        ensure!(
+            n <= bytes.len().saturating_sub(off) / 12,
+            "archive declares {n} sections, impossible in {} bytes",
+            bytes.len()
+        );
         let mut sections = Vec::with_capacity(n);
         for _ in 0..n {
             ensure!(bytes.len() >= off + 12, "section header truncated");
             let tag = std::str::from_utf8(&bytes[off..off + 4])?.to_string();
-            let len =
-                u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap()) as usize;
+            let len = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+            let len = usize::try_from(len)
+                .map_err(|_| anyhow::anyhow!("section {tag} length overflow"))?;
             off += 12;
-            ensure!(bytes.len() >= off + len, "section {tag} truncated");
-            sections.push((tag, bytes[off..off + len].to_vec()));
-            off += len;
+            let end = off
+                .checked_add(len)
+                .ok_or_else(|| anyhow::anyhow!("section {tag} length overflow"))?;
+            ensure!(bytes.len() >= end, "section {tag} truncated");
+            sections.push((tag, bytes[off..end].to_vec()));
+            off = end;
         }
         Ok(Self { header, sections })
     }
@@ -202,5 +256,26 @@ mod tests {
     fn duplicate_sections_panic() {
         let mut a = sample();
         a.add_section("HLAT", vec![]);
+    }
+
+    #[test]
+    fn set_header_inserts_and_replaces() {
+        let mut a = sample();
+        a.set_header("codec", json::s("sz3"));
+        assert_eq!(a.header_str("codec").unwrap(), "sz3");
+        a.set_header("codec", json::s("zfp"));
+        assert_eq!(a.header_str("codec").unwrap(), "zfp");
+        // existing keys untouched
+        assert_eq!(a.header_str("dataset").unwrap(), "s3d");
+        assert!(a.header_str("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_sections_survive_round_trip() {
+        let mut a = sample();
+        a.add_section("ZZZZ", vec![42; 7]); // future writer's section
+        let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.section("ZZZZ").unwrap(), &[42; 7]);
+        assert_eq!(b.section("HLAT").unwrap(), &[1, 2, 3]);
     }
 }

@@ -12,11 +12,18 @@
 //! selection always lands within τ_b/4 of the exact residual, making the
 //! greedy loop guaranteed to terminate (§7 of DESIGN.md).
 
-use crate::coder::Quantizer;
+use crate::coder::{
+    decode_index_sets, encode_index_sets, huffman_decode, huffman_encode, indexset, Quantizer,
+};
+use crate::config::{DatasetConfig, Normalization};
+use crate::data::NormStats;
 use crate::linalg::{norm2_f32, Pca};
+use crate::tensor::{block_origins, extract_block, scatter_block, Tensor};
 use crate::util::parallel::par_map;
 use crate::Result;
 use anyhow::ensure;
+
+use super::format::Archive;
 
 /// Per-block output of Algorithm 1.
 #[derive(Debug, Clone, Default)]
@@ -184,6 +191,132 @@ pub fn gae_decode(
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Archive-level GAE stage, shared by every error-bounded codec
+// (hierarchical pipeline, GBAE baseline, streaming coordinator)
+// ---------------------------------------------------------------------------
+
+/// Per-GAE-block bounds in the normalized domain: `τ_norm = τ / scale_ch`
+/// (the GAE block lies within one channel, so the bound transfers exactly
+/// back to original units).
+pub fn gae_taus(
+    dataset: &DatasetConfig,
+    stats: &NormStats,
+    tau_orig: f32,
+    origins: &[Vec<usize>],
+) -> Vec<f32> {
+    match dataset.normalization {
+        Normalization::ZScore => {
+            let s = stats.channels[0].1.max(1e-30);
+            vec![(tau_orig as f64 / s) as f32; origins.len()]
+        }
+        Normalization::PerSpeciesMeanRange => origins
+            .iter()
+            .map(|o| {
+                let ch = o[0].min(stats.channels.len() - 1);
+                let s = stats.channels[ch].1.max(1e-30);
+                (tau_orig as f64 / s) as f32
+            })
+            .collect(),
+    }
+}
+
+/// Encoded GAE sections ready to append to an [`Archive`].
+#[derive(Debug)]
+pub struct GaeSections {
+    pub gcof: Vec<u8>,
+    pub gidx: Vec<u8>,
+    pub gbas: Vec<u8>,
+    pub n_blocks: usize,
+    pub corrected_blocks: usize,
+    pub total_coeffs: usize,
+}
+
+/// Run Algorithm 1 over a normalized field and its reconstruction:
+/// corrects `recon` **in place** so every GAE block meets the ℓ2 bound
+/// `tau` (original units), and returns the entropy-coded sections.
+/// `tau <= 0` disables the stage (`None`).
+pub fn gae_bound_stage(
+    dataset: &DatasetConfig,
+    stats: &NormStats,
+    tau: f32,
+    norm: &Tensor,
+    recon: &mut Tensor,
+) -> Result<Option<GaeSections>> {
+    if tau <= 0.0 {
+        return Ok(None);
+    }
+    let d = dataset.gae_block_len();
+    let origins = block_origins(&dataset.dims, &dataset.gae_block);
+    let taus = gae_taus(dataset, stats, tau, &origins);
+    let mut orig_rows = vec![0f32; origins.len() * d];
+    let mut recon_rows = vec![0f32; origins.len() * d];
+    for (bi, o) in origins.iter().enumerate() {
+        extract_block(norm, o, &dataset.gae_block, &mut orig_rows[bi * d..(bi + 1) * d]);
+        extract_block(recon, o, &dataset.gae_block, &mut recon_rows[bi * d..(bi + 1) * d]);
+    }
+    let out = gae_apply(&orig_rows, &mut recon_rows, d, &taus)?;
+    for (bi, o) in origins.iter().enumerate() {
+        scatter_block(recon, o, &dataset.gae_block, &recon_rows[bi * d..(bi + 1) * d]);
+    }
+    let codes: Vec<i32> =
+        out.corrections.iter().flat_map(|c| c.codes.iter().copied()).collect();
+    let sets: Vec<Vec<usize>> = out.corrections.iter().map(|c| c.indices.clone()).collect();
+    Ok(Some(GaeSections {
+        gcof: huffman_encode(&codes),
+        gidx: encode_index_sets(&sets, d)?,
+        gbas: out.pca.basis_f32_bytes(),
+        n_blocks: origins.len(),
+        corrected_blocks: out.corrected_blocks,
+        total_coeffs: out.total_coeffs,
+    }))
+}
+
+/// Decoder side of [`gae_bound_stage`]: read the GCOF/GIDX/GBAS sections
+/// and apply the stored corrections to `recon` (normalized domain) in
+/// place. A `tau <= 0` archive or one without GAE sections is a no-op.
+pub fn gae_restore_stage(
+    dataset: &DatasetConfig,
+    stats: &NormStats,
+    tau: f32,
+    archive: &Archive,
+    recon: &mut Tensor,
+) -> Result<()> {
+    if tau <= 0.0 || !archive.has_section("GBAS") {
+        return Ok(());
+    }
+    let d = dataset.gae_block_len();
+    let origins = block_origins(&dataset.dims, &dataset.gae_block);
+    let taus = gae_taus(dataset, stats, tau, &origins);
+    let pca = Pca::from_f32_bytes(archive.section("GBAS")?, d)?;
+    let sets = decode_index_sets(
+        archive.section("GIDX")?,
+        indexset::max_raw_size(origins.len(), d),
+    )?;
+    ensure!(sets.len() == origins.len(), "GIDX count mismatch");
+    let (codes, _) = huffman_decode(archive.section("GCOF")?)?;
+    let mut corrections = Vec::with_capacity(sets.len());
+    let mut cur = 0usize;
+    for set in sets {
+        let n = set.len();
+        ensure!(cur + n <= codes.len(), "GCOF underrun");
+        corrections.push(BlockCorrection {
+            indices: set,
+            codes: codes[cur..cur + n].to_vec(),
+        });
+        cur += n;
+    }
+    let mut rows = vec![0f32; origins.len() * d];
+    for (bi, o) in origins.iter().enumerate() {
+        extract_block(recon, o, &dataset.gae_block, &mut rows[bi * d..(bi + 1) * d]);
+    }
+    gae_decode(&mut rows, d, &taus, &pca, &corrections)?;
+    for (bi, o) in origins.iter().enumerate() {
+        scatter_block(recon, o, &dataset.gae_block, &rows[bi * d..(bi + 1) * d]);
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -318,6 +451,65 @@ mod tests {
             gae_apply(&orig, &mut recon, d, &taus).unwrap();
             check_bound(&orig, &recon, d, &taus);
         }
+    }
+
+    #[test]
+    fn gae_taus_scale_per_species() {
+        use crate::config::{dataset_preset, DatasetKind, Scale};
+        let d = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+        let stats = NormStats {
+            kind: Normalization::PerSpeciesMeanRange,
+            channels: (0..16).map(|i| (0.0, 1.0 + i as f64)).collect(),
+        };
+        let origins = block_origins(&d.dims, &d.gae_block);
+        let taus = gae_taus(&d, &stats, 2.0, &origins);
+        // block for species 0 has scale 1 -> tau 2; species 1 -> tau 1
+        let per_species = origins.len() / 16;
+        assert!((taus[0] - 2.0).abs() < 1e-6);
+        assert!((taus[per_species] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bound_and_restore_stages_round_trip() {
+        use crate::config::{dataset_preset, DatasetKind, Scale};
+        use crate::util::json;
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let norm = crate::data::generate(&cfg); // any field works as "normalized"
+        let stats = NormStats { kind: Normalization::ZScore, channels: vec![(0.0, 1.0)] };
+        // a lossy reconstruction: smooth the field
+        let mut recon = norm.clone();
+        for v in recon.data_mut() {
+            *v *= 0.97;
+        }
+        let base = recon.clone();
+        let tau = 0.5f32;
+        let sections = gae_bound_stage(&cfg, &stats, tau, &norm, &mut recon)
+            .unwrap()
+            .expect("stage should run");
+        assert!(sections.corrected_blocks > 0);
+        let mut archive = Archive::new(json::obj(vec![]));
+        archive.add_section("GCOF", sections.gcof);
+        archive.add_section("GIDX", sections.gidx);
+        archive.add_section("GBAS", sections.gbas);
+        let mut restored = base.clone();
+        gae_restore_stage(&cfg, &stats, tau, &archive, &mut restored).unwrap();
+        for (a, b) in recon.data().iter().zip(restored.data()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // every block within tau
+        let d = cfg.gae_block_len();
+        let origins = block_origins(&cfg.dims, &cfg.gae_block);
+        let (mut x, mut y) = (vec![0f32; d], vec![0f32; d]);
+        for o in &origins {
+            extract_block(&norm, o, &cfg.gae_block, &mut x);
+            extract_block(&restored, o, &cfg.gae_block, &mut y);
+            let diff: Vec<f32> = x.iter().zip(&y).map(|(&a, &b)| a - b).collect();
+            assert!(norm2_f32(&diff) <= tau as f64 * 1.001);
+        }
+        // tau = 0 is a no-op on both sides
+        let mut untouched = base.clone();
+        assert!(gae_bound_stage(&cfg, &stats, 0.0, &norm, &mut untouched).unwrap().is_none());
+        assert_eq!(untouched.data(), base.data());
     }
 
     #[test]

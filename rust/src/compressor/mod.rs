@@ -1,6 +1,10 @@
 //! The paper's compression system: hierarchical AE pipeline ([`pipeline`]),
 //! PCA error-bound guarantee ([`gae`], Algorithm 1), archive container
 //! ([`format`]) and evaluation metrics ([`metrics`]).
+//!
+//! The unified entry point for callers is the [`crate::codec`] layer
+//! (`Codec` trait + `CodecBuilder`); this module holds the hierarchical
+//! machinery behind it.
 
 pub mod format;
 pub mod gae;
@@ -8,9 +12,12 @@ pub mod metrics;
 pub mod pipeline;
 
 pub use format::Archive;
-pub use gae::{coeff_bin, gae_apply, gae_decode, BlockCorrection, GaeOutput};
+pub use gae::{
+    coeff_bin, gae_apply, gae_bound_stage, gae_decode, gae_restore_stage, gae_taus,
+    BlockCorrection, GaeOutput, GaeSections,
+};
 pub use metrics::{
     compression_ratio, log_histogram, mean_channel_nrmse, nrmse, nrmse_per_channel,
     psnr, relative_point_errors,
 };
-pub use pipeline::{gae_taus, CompressStats, HierCompressor};
+pub use pipeline::{CompressStats, HierCompressor};

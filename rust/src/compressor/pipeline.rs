@@ -1,8 +1,9 @@
 //! The hierarchical compression pipeline (paper Fig. 1).
 //!
-//! `HierCompressor` owns trained parameters for one HBAE plus zero or more
-//! residual BAEs (0 = the Fig.-5 "HBAE" ablation, 1 = the paper's method,
-//! 2 = the Fig.-4 "StackAE" variant) and drives:
+//! `HierCompressor` owns the runtime handle plus trained parameters for
+//! one HBAE and zero or more residual BAEs (0 = the Fig.-5 "HBAE"
+//! ablation, 1 = the paper's method, 2 = the Fig.-4 "StackAE" variant)
+//! and drives:
 //!
 //! ```text
 //!  compress:   normalize -> hyper-block batches -> HBAE encode -> quantize
@@ -14,29 +15,27 @@
 //! ```
 //!
 //! All tensor math runs in the AOT HLO artifacts through PJRT; this module
-//! is pure orchestration + the entropy stage.
+//! is pure orchestration + the entropy stage. Most callers should reach it
+//! through [`crate::codec::HierCodec`] / [`crate::codec::CodecBuilder`],
+//! which wrap it behind the unified [`crate::codec::Codec`] trait.
+
+use std::rc::Rc;
 
 use crate::coder::{
-    decode_index_sets, encode_index_sets, huffman_decode, huffman_encode, indexset,
-    Quantizer,
+    decode_latent_groups, decode_latents, encode_latent_groups, encode_latents, Quantizer,
 };
-use crate::config::{DatasetConfig, ModelConfig, Normalization, PipelineConfig};
+use crate::config::{DatasetConfig, ModelConfig, PipelineConfig};
 use crate::data::{Blocking, NormStats, Normalizer};
-use crate::linalg::Pca;
 use crate::model::ParamStore;
 use crate::runtime::{HostTensor, Runtime};
-use crate::tensor::{block_origins, extract_block, scatter_block, Tensor};
+use crate::tensor::{extract_block, Tensor};
 use crate::train::{train_bae, train_hbae, TrainReport};
 use crate::util::json::{self, Value};
 use crate::Result;
-use anyhow::{ensure, Context};
+use anyhow::ensure;
 
 use super::format::Archive;
-use super::gae::{gae_apply, gae_decode, BlockCorrection};
-
-/// Latent payload encoding modes (HLAT/BLAT section headers).
-const MODE_RAW: u8 = 0;
-const MODE_HUFF: u8 = 1;
+use super::gae::{gae_bound_stage, gae_restore_stage, GaeSections};
 
 /// Compression statistics for reporting.
 #[derive(Debug, Clone)]
@@ -53,8 +52,12 @@ pub struct CompressStats {
 }
 
 /// Trained hierarchical compressor for one dataset config.
-pub struct HierCompressor<'a> {
-    pub rt: &'a Runtime,
+///
+/// Owns its [`Runtime`] handle (`Rc`, the PJRT client is `!Send`), so the
+/// value is self-contained — callers no longer thread a runtime borrow
+/// through every call site.
+pub struct HierCompressor {
+    pub rt: Rc<Runtime>,
     pub dataset: DatasetConfig,
     pub model: ModelConfig,
     pub hbae: ParamStore,
@@ -62,10 +65,10 @@ pub struct HierCompressor<'a> {
     pub baes: Vec<ParamStore>,
 }
 
-impl<'a> HierCompressor<'a> {
+impl HierCompressor {
     /// Train (or load cached checkpoints for) the full stack.
     pub fn prepare(
-        rt: &'a Runtime,
+        rt: &Rc<Runtime>,
         cfg: &PipelineConfig,
         ckpt_dir: &std::path::Path,
         field: &Tensor,
@@ -91,7 +94,7 @@ impl<'a> HierCompressor<'a> {
         // BAE on HBAE residuals
         let bpath = ParamStore::default_path(ckpt_dir, &cfg.model.bae_group);
         let mut this = Self {
-            rt,
+            rt: rt.clone(),
             dataset: cfg.dataset.clone(),
             model: cfg.model.clone(),
             hbae,
@@ -391,6 +394,43 @@ impl<'a> HierCompressor<'a> {
         Ok(recon)
     }
 
+    /// Assemble the self-describing archive from forward-pass outputs.
+    /// Shared by the sequential path and the streaming coordinator path
+    /// ([`crate::codec::HierCodec::compress_streaming`]).
+    pub fn build_archive(
+        &self,
+        stats: &NormStats,
+        tau: f32,
+        lh_all: &[f32],
+        lb_all: &[Vec<f32>],
+        gae: Option<GaeSections>,
+    ) -> Archive {
+        let qh = Quantizer::new(self.model.bin_hbae.max(0.0));
+        let qb = Quantizer::new(self.model.bin_bae.max(0.0));
+        let header = vec![
+            ("codec", json::s("hier")),
+            ("dataset", self.dataset.to_json()),
+            ("model", self.model.to_json()),
+            ("norm", stats.to_json()),
+            ("tau", json::num(tau as f64)),
+            (
+                "bae_groups",
+                Value::Arr(self.baes.iter().map(|b| json::s(b.group.as_str())).collect()),
+            ),
+            ("hbae_group", json::s(self.hbae.group.as_str())),
+            ("gae_blocks", json::num(gae.as_ref().map_or(0, |g| g.n_blocks) as f64)),
+        ];
+        let mut archive = Archive::new(json::obj(header));
+        archive.add_section("HLAT", encode_latents(lh_all, qh));
+        archive.add_section("BLAT", encode_latent_groups(lb_all, qb));
+        if let Some(g) = gae {
+            archive.add_section("GCOF", g.gcof);
+            archive.add_section("GIDX", g.gidx);
+            archive.add_section("GBAS", g.gbas);
+        }
+        archive
+    }
+
     /// Compress a field with per-GAE-block ℓ2 bound `tau` (original
     /// units; `tau <= 0` disables GAE). Returns the archive and the final
     /// reconstruction in the **original** domain.
@@ -404,62 +444,10 @@ impl<'a> HierCompressor<'a> {
         let qb = Quantizer::new(self.model.bin_bae.max(0.0));
         let (lh_all, lb_all, mut recon) = self.forward_all(&norm, qh, qb)?;
 
-        // ---- GAE stage (normalized domain; per-block tau from channel
-        // scale so the bound transfers exactly to original units) ----
-        let gae_sections = if tau > 0.0 {
-            let d = self.dataset.gae_block_len();
-            let origins = block_origins(&self.dataset.dims, &self.dataset.gae_block);
-            let taus = gae_taus(&self.dataset, &stats, tau, &origins);
-            let mut orig_rows = vec![0f32; origins.len() * d];
-            let mut recon_rows = vec![0f32; origins.len() * d];
-            for (bi, o) in origins.iter().enumerate() {
-                extract_block(&norm, o, &self.dataset.gae_block, &mut orig_rows[bi * d..(bi + 1) * d]);
-                extract_block(&recon, o, &self.dataset.gae_block, &mut recon_rows[bi * d..(bi + 1) * d]);
-            }
-            let out = gae_apply(&orig_rows, &mut recon_rows, d, &taus)?;
-            for (bi, o) in origins.iter().enumerate() {
-                scatter_block(&mut recon, o, &self.dataset.gae_block, &recon_rows[bi * d..(bi + 1) * d]);
-            }
-            Some((out, origins.len()))
-        } else {
-            None
-        };
-
-        // ---- entropy stage + archive ----
-        let mut header = vec![
-            ("dataset", self.dataset.to_json()),
-            ("model", self.model.to_json()),
-            ("norm", stats.to_json()),
-            ("tau", json::num(tau as f64)),
-            (
-                "bae_groups",
-                Value::Arr(self.baes.iter().map(|b| json::s(b.group.as_str())).collect()),
-            ),
-            ("hbae_group", json::s(self.hbae.group.as_str())),
-        ];
-        let (gae_out, n_gae_blocks) = match &gae_sections {
-            Some((o, n)) => (Some(o), *n),
-            None => (None, 0),
-        };
-        header.push(("gae_blocks", json::num(n_gae_blocks as f64)));
-        let mut archive = Archive::new(json::obj(header));
-        archive.add_section("HLAT", encode_latents(&lh_all, qh));
-        archive.add_section("BLAT", encode_latent_groups(&lb_all, qb));
-        if let Some(out) = gae_out {
-            let codes: Vec<i32> = out
-                .corrections
-                .iter()
-                .flat_map(|c| c.codes.iter().copied())
-                .collect();
-            archive.add_section("GCOF", huffman_encode(&codes));
-            let sets: Vec<Vec<usize>> =
-                out.corrections.iter().map(|c| c.indices.clone()).collect();
-            archive.add_section(
-                "GIDX",
-                encode_index_sets(&sets, self.dataset.gae_block_len())?,
-            );
-            archive.add_section("GBAS", out.pca.basis_f32_bytes());
-        }
+        // GAE stage (normalized domain; per-block tau from channel scale
+        // so the bound transfers exactly to original units)
+        let gae = gae_bound_stage(&self.dataset, &stats, tau, &norm, &mut recon)?;
+        let archive = self.build_archive(&stats, tau, &lh_all, &lb_all, gae);
 
         Normalizer::invert(&stats, &mut recon);
         Ok((archive, recon))
@@ -481,8 +469,31 @@ impl<'a> HierCompressor<'a> {
         }
     }
 
-    /// Decompress an archive (static: only needs the trained params).
-    pub fn decompress(
+    /// Decompress an archive with this compressor's trained parameters,
+    /// verifying they match the groups recorded in the archive header.
+    /// (The method twin of [`Self::decompress_with_params`] — the codec
+    /// trait's symmetric `compress`/`decompress` surface routes here.)
+    pub fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        let h = &archive.header;
+        let want: Vec<&str> = h
+            .req("bae_groups")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str())
+            .collect();
+        let have: Vec<&str> = self.baes.iter().map(|b| b.group.as_str()).collect();
+        ensure!(
+            want == have,
+            "archive BAE stack {want:?} != loaded {have:?}"
+        );
+        Self::decompress_with_params(&self.rt, archive, &self.hbae, &self.baes)
+    }
+
+    /// Decompress an archive given explicitly-loaded parameters (static:
+    /// used by [`crate::codec::CodecBuilder::for_archive`] when restoring
+    /// from the header's recorded groups).
+    pub fn decompress_with_params(
         rt: &Runtime,
         archive: &Archive,
         hbae: &ParamStore,
@@ -493,7 +504,10 @@ impl<'a> HierCompressor<'a> {
         let model = ModelConfig::from_json(h.req("model")?)?;
         let stats = NormStats::from_json(h.req("norm")?)?;
         let tau = h.req("tau")?.as_f64().unwrap_or(0.0) as f32;
-        ensure!(hbae.group == h.req("hbae_group")?.as_str().unwrap_or(""), "hbae group mismatch");
+        ensure!(
+            hbae.group == h.req("hbae_group")?.as_str().unwrap_or(""),
+            "hbae group mismatch"
+        );
 
         let qh = Quantizer::new(model.bin_hbae.max(0.0));
         let qb = Quantizer::new(model.bin_bae.max(0.0));
@@ -501,201 +515,8 @@ impl<'a> HierCompressor<'a> {
         let lb_all = decode_latent_groups(archive.section("BLAT")?, qb, baes.len())?;
 
         let mut recon = Self::decode_all(rt, &dataset, hbae, baes, &lh_all, &lb_all)?;
-
-        if tau > 0.0 && archive.has_section("GBAS") {
-            let d = dataset.gae_block_len();
-            let origins = block_origins(&dataset.dims, &dataset.gae_block);
-            let taus = gae_taus(&dataset, &stats, tau, &origins);
-            let pca = Pca::from_f32_bytes(archive.section("GBAS")?, d)?;
-            let sets = decode_index_sets(
-                archive.section("GIDX")?,
-                indexset::max_raw_size(origins.len(), d),
-            )?;
-            ensure!(sets.len() == origins.len(), "GIDX count mismatch");
-            let (codes, _) = huffman_decode(archive.section("GCOF")?)?;
-            let mut corrections = Vec::with_capacity(sets.len());
-            let mut cur = 0usize;
-            for set in sets {
-                let n = set.len();
-                ensure!(cur + n <= codes.len(), "GCOF underrun");
-                corrections.push(BlockCorrection {
-                    indices: set,
-                    codes: codes[cur..cur + n].to_vec(),
-                });
-                cur += n;
-            }
-            let mut rows = vec![0f32; origins.len() * d];
-            for (bi, o) in origins.iter().enumerate() {
-                extract_block(&recon, o, &dataset.gae_block, &mut rows[bi * d..(bi + 1) * d]);
-            }
-            gae_decode(&mut rows, d, &taus, &pca, &corrections)?;
-            for (bi, o) in origins.iter().enumerate() {
-                scatter_block(&mut recon, o, &dataset.gae_block, &rows[bi * d..(bi + 1) * d]);
-            }
-        }
-
+        gae_restore_stage(&dataset, &stats, tau, archive, &mut recon)?;
         Normalizer::invert(&stats, &mut recon);
         Ok(recon)
-    }
-}
-
-/// Per-GAE-block bounds in the normalized domain: `τ_norm = τ / scale_ch`
-/// (the GAE block lies within one channel, so the bound transfers exactly
-/// back to original units).
-pub fn gae_taus(
-    dataset: &DatasetConfig,
-    stats: &NormStats,
-    tau_orig: f32,
-    origins: &[Vec<usize>],
-) -> Vec<f32> {
-    match dataset.normalization {
-        Normalization::ZScore => {
-            let s = stats.channels[0].1.max(1e-30);
-            vec![(tau_orig as f64 / s) as f32; origins.len()]
-        }
-        Normalization::PerSpeciesMeanRange => origins
-            .iter()
-            .map(|o| {
-                let ch = o[0].min(stats.channels.len() - 1);
-                let s = stats.channels[ch].1.max(1e-30);
-                (tau_orig as f64 / s) as f32
-            })
-            .collect(),
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Latent section codecs
-// ---------------------------------------------------------------------------
-
-/// Encode latent rows: Huffman over integer codes when quantized, raw f32
-/// otherwise (the ablation configs disable quantization).
-fn encode_latents(values: &[f32], q: Quantizer) -> Vec<u8> {
-    let mut out = Vec::new();
-    if q.enabled() {
-        out.push(MODE_HUFF);
-        let codes: Vec<i32> = values.iter().map(|&v| q.code(v)).collect();
-        out.extend(huffman_encode(&codes));
-    } else {
-        out.push(MODE_RAW);
-        out.extend_from_slice(&(values.len() as u64).to_le_bytes());
-        for &v in values {
-            out.extend_from_slice(&v.to_le_bytes());
-        }
-    }
-    out
-}
-
-fn decode_latents(bytes: &[u8], q: Quantizer) -> Result<Vec<f32>> {
-    ensure!(!bytes.is_empty(), "latent section empty");
-    match bytes[0] {
-        MODE_HUFF => {
-            ensure!(q.enabled(), "archive quantized but config bin is 0");
-            let (codes, _) = huffman_decode(&bytes[1..])?;
-            Ok(q.dequant_all(&codes))
-        }
-        MODE_RAW => {
-            ensure!(bytes.len() >= 9, "raw latent header");
-            let n = u64::from_le_bytes(bytes[1..9].try_into().unwrap()) as usize;
-            ensure!(bytes.len() == 9 + n * 4, "raw latent length");
-            Ok(bytes[9..]
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect())
-        }
-        m => anyhow::bail!("unknown latent mode {m}"),
-    }
-}
-
-/// Concatenate one latent stream per stacked BAE (u32 count prefix).
-fn encode_latent_groups(groups: &[Vec<f32>], q: Quantizer) -> Vec<u8> {
-    let mut out = Vec::new();
-    out.extend_from_slice(&(groups.len() as u32).to_le_bytes());
-    for g in groups {
-        let payload = encode_latents(g, q);
-        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-        out.extend(payload);
-    }
-    out
-}
-
-fn decode_latent_groups(bytes: &[u8], q: Quantizer, expect: usize) -> Result<Vec<Vec<f32>>> {
-    ensure!(bytes.len() >= 4, "BLAT header");
-    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-    ensure!(n == expect, "archive has {n} BAE streams, loaded {expect} BAEs");
-    let mut off = 4;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        let len = u64::from_le_bytes(
-            bytes
-                .get(off..off + 8)
-                .context("BLAT length")?
-                .try_into()
-                .unwrap(),
-        ) as usize;
-        off += 8;
-        out.push(decode_latents(bytes.get(off..off + len).context("BLAT body")?, q)?);
-        off += len;
-    }
-    Ok(out)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn latent_codec_round_trips_quantized() {
-        let q = Quantizer::new(0.05);
-        let vals: Vec<f32> = (0..100).map(|i| (i as f32 * 0.31).sin()).collect();
-        let enc = encode_latents(&vals, q);
-        let dec = decode_latents(&enc, q).unwrap();
-        for (a, b) in vals.iter().zip(&dec) {
-            assert!((a - b).abs() <= 0.025 + 1e-6);
-        }
-        // snapped values round-trip exactly
-        let mut snapped = vals.clone();
-        q.snap(&mut snapped);
-        let enc2 = encode_latents(&snapped, q);
-        let dec2 = decode_latents(&enc2, q).unwrap();
-        assert_eq!(snapped, dec2);
-    }
-
-    #[test]
-    fn latent_codec_round_trips_raw() {
-        let q = Quantizer::disabled();
-        let vals: Vec<f32> = (0..50).map(|i| (i as f32).exp() % 7.0).collect();
-        let dec = decode_latents(&encode_latents(&vals, q), q).unwrap();
-        assert_eq!(vals, dec);
-    }
-
-    #[test]
-    fn latent_groups_round_trip() {
-        let q = Quantizer::new(0.1);
-        let mut g1: Vec<f32> = (0..30).map(|i| i as f32 * 0.3).collect();
-        let mut g2: Vec<f32> = (0..10).map(|i| -(i as f32) * 0.7).collect();
-        q.snap(&mut g1);
-        q.snap(&mut g2);
-        let groups = vec![g1.clone(), g2.clone()];
-        let enc = encode_latent_groups(&groups, q);
-        let dec = decode_latent_groups(&enc, q, 2).unwrap();
-        assert_eq!(dec, groups);
-        assert!(decode_latent_groups(&enc, q, 1).is_err());
-    }
-
-    #[test]
-    fn gae_taus_scale_per_species() {
-        use crate::config::{dataset_preset, DatasetKind, Scale};
-        let d = dataset_preset(DatasetKind::S3d, Scale::Smoke);
-        let stats = NormStats {
-            kind: Normalization::PerSpeciesMeanRange,
-            channels: (0..16).map(|i| (0.0, 1.0 + i as f64)).collect(),
-        };
-        let origins = block_origins(&d.dims, &d.gae_block);
-        let taus = gae_taus(&d, &stats, 2.0, &origins);
-        // block for species 0 has scale 1 -> tau 2; species 1 -> tau 1
-        let per_species = origins.len() / 16;
-        assert!((taus[0] - 2.0).abs() < 1e-6);
-        assert!((taus[per_species] - 1.0).abs() < 1e-6);
     }
 }

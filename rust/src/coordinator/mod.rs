@@ -88,9 +88,12 @@ pub struct StreamOutput {
 ///
 /// Functionally equivalent to the sequential path in
 /// [`HierCompressor::compress`] up to the entropy stage; exists to
-/// demonstrate + measure the overlapped L3 design.
+/// demonstrate + measure the overlapped L3 design. The unified-codec
+/// entry point is [`crate::codec::HierCodec::compress_streaming`], which
+/// runs this and then assembles the same self-describing archive as the
+/// one-shot path.
 pub fn stream_forward(
-    comp: &HierCompressor<'_>,
+    comp: &HierCompressor,
     norm: &Tensor,
     queue_depth: usize,
 ) -> Result<StreamOutput> {
@@ -236,7 +239,7 @@ pub fn stream_forward(
 
 /// Convenience wrapper: normalize, stream, report.
 pub fn stream_compress(
-    comp: &HierCompressor<'_>,
+    comp: &HierCompressor,
     field: &Tensor,
     queue_depth: usize,
 ) -> Result<StreamOutput> {

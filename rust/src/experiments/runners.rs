@@ -5,8 +5,10 @@
 //! training is shortened vs the paper (CPU box); `--steps` raises it.
 
 use std::path::PathBuf;
+use std::rc::Rc;
 
 use crate::baselines::{GbaeCompressor, Sz3Like, ZfpLike};
+use crate::codec::{archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound};
 use crate::compressor::{
     log_histogram, mean_channel_nrmse, nrmse, nrmse_per_channel, relative_point_errors,
     HierCompressor,
@@ -50,20 +52,22 @@ pub fn run_experiment(id: &str, args: &Args) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 struct Ctx {
-    rt: Runtime,
+    rt: Rc<Runtime>,
     ckpt: PathBuf,
     scale: Scale,
     train: TrainConfig,
 }
 
 fn ctx(args: &Args) -> Result<Ctx> {
-    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let rt = Rc::new(Runtime::open(args.get_or("artifacts", "artifacts"))?);
     let ckpt = PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
     std::fs::create_dir_all(&ckpt)?;
     let scale = Scale::parse(args.get_or("scale", "bench"))?;
-    let mut train = TrainConfig::default();
-    train.steps = args.get_usize("steps", 200)?;
-    train.log_every = 50;
+    let train = TrainConfig {
+        steps: args.get_usize("steps", 200)?,
+        log_every: 50,
+        ..TrainConfig::default()
+    };
     Ok(Ctx { rt, ckpt, scale, train })
 }
 
@@ -77,13 +81,13 @@ fn report_nrmse(kind: DatasetKind, orig: &Tensor, recon: &Tensor) -> f64 {
 
 /// Train/load a custom (hbae, [baes...]) stack with checkpoint names that
 /// encode the full stack (fig-4 sweeps share HBAEs across BAE variants).
-fn prepare_stack<'a>(
-    c: &'a Ctx,
+fn prepare_stack(
+    c: &Ctx,
     dataset: &DatasetConfig,
     hbae_group: &str,
     bae_groups: &[&str],
     field: &Tensor,
-) -> Result<HierCompressor<'a>> {
+) -> Result<HierCompressor> {
     use crate::data::Normalizer;
     let stats = Normalizer::fit(dataset.normalization, field);
     let mut norm = field.clone();
@@ -101,7 +105,7 @@ fn prepare_stack<'a>(
         store
     };
     let mut comp = HierCompressor {
-        rt: &c.rt,
+        rt: c.rt.clone(),
         dataset: dataset.clone(),
         model: ModelConfig {
             hbae_group: hbae_group.to_string(),
@@ -135,7 +139,7 @@ fn prepare_stack<'a>(
 /// One (CR, NRMSE) point from the hierarchical stack.
 fn hier_point(
     kind: DatasetKind,
-    comp: &HierCompressor<'_>,
+    comp: &HierCompressor,
     field: &Tensor,
     tau: f32,
 ) -> Result<(f64, f64)> {
@@ -381,30 +385,27 @@ fn fig6_one(c: &Ctx, kind: DatasetKind, csv: &mut Csv) -> Result<Vec<Series>> {
     }
     series.push(Series::new("ours", pts));
 
-    // SZ3-like: pointwise eps sweep
-    let mut pts = Vec::new();
-    for rel in [3e-3f32, 1e-3, 3e-4, 1e-4, 3e-5] {
-        let eps = rel * field.range();
-        let bytes = Sz3Like::new(eps).compress(&field)?;
-        let back = Sz3Like::decompress(&bytes)?;
-        let cr = (field.len() * 4) as f64 / bytes.len() as f64;
-        let e = report_nrmse(kind, &field, &back);
-        csv.row(&[kind.name().into(), "sz3".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
-        pts.push((cr, e));
+    // SZ3-like / ZFP-like through the unified codec API at the SAME
+    // NRMSE targets as ours — the shared-bound accounting Fig. 6 is about
+    let mut builder = CodecBuilder::new().scale(c.scale);
+    for (label, ck) in [("SZ3-like", CodecKind::Sz3), ("ZFP-like", CodecKind::Zfp)] {
+        let codec = builder.build(ck, kind, &field)?;
+        let mut pts = Vec::new();
+        for target in [3e-3f64, 1e-3, 3e-4, 1e-4] {
+            let (archive, back) =
+                codec.compress_with_recon(&field, &ErrorBound::Nrmse(target))?;
+            let cr = archive_stats(&archive)?.cr;
+            let e = report_nrmse(kind, &field, &back);
+            csv.row(&[
+                kind.name().into(),
+                codec.id().into(),
+                format!("{cr:.2}"),
+                format!("{e:.4e}"),
+            ]);
+            pts.push((cr, e));
+        }
+        series.push(Series::new(label, pts));
     }
-    series.push(Series::new("SZ3-like", pts));
-
-    // ZFP-like: precision sweep
-    let mut pts = Vec::new();
-    for p in [6u32, 8, 10, 12, 14, 16] {
-        let bytes = ZfpLike::new(p).compress(&field)?;
-        let back = ZfpLike::decompress(&bytes)?;
-        let cr = (field.len() * 4) as f64 / bytes.len() as f64;
-        let e = report_nrmse(kind, &field, &back);
-        csv.row(&[kind.name().into(), "zfp".into(), format!("{cr:.2}"), format!("{e:.4e}")]);
-        pts.push((cr, e));
-    }
-    series.push(Series::new("ZFP-like", pts));
 
     // S3D extra: GBAE and GAETC-like (block AE [+corrector] + GAE)
     if kind == DatasetKind::S3d {

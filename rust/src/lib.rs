@@ -3,22 +3,77 @@
 //! Production reproduction of *“Attention Based Machine Learning Methods
 //! for Data Reduction with Guaranteed Error Bounds”* (Li, Lee, Rangarajan,
 //! Ranka — 2024): an attention-based hierarchical compressor for scientific
-//! data with per-block ℓ2 error guarantees.
+//! data with per-block ℓ2 error guarantees, plus the baselines it is
+//! compared against — all behind one unified, error-bounded API.
 //!
-//! Three-layer architecture (see `DESIGN.md`):
+//! ## The unified `Codec` API
+//!
+//! Every compressor in the crate — the paper's hierarchical pipeline
+//! (`hier`), the SZ3-like predictor (`sz3`), the ZFP-like transform
+//! (`zfp`), and the block-AE baseline (`gbae`) — implements
+//! [`codec::Codec`]:
+//!
+//! ```ignore
+//! use attn_reduce::codec::{Codec, CodecBuilder, CodecKind, ErrorBound};
+//!
+//! let mut builder = CodecBuilder::new().scale(Scale::Smoke);
+//! let codec = builder.build(CodecKind::Sz3, DatasetKind::E3sm, &field)?;
+//! let archive = codec.compress(&field, &ErrorBound::Nrmse(1e-3))?;
+//! archive.save("data.ardc")?;
+//!
+//! // later, from the bytes alone — the archive is self-describing:
+//! let archive = attn_reduce::compressor::Archive::load("data.ardc")?;
+//! let restored = CodecBuilder::new().for_archive(&archive)?.decompress(&archive)?;
+//! ```
+//!
+//! Bounds are typed ([`codec::ErrorBound`]): `Nrmse(1e-3)`, `L2Tau(0.5)`
+//! (the paper's per-GAE-block ℓ2 τ), `PointwiseAbs(1e-4)`, or `None`.
+//! Each codec derives its own knob from the bound (Eq.-11 τ, pointwise ε,
+//! or a certified precision search) instead of taking a raw `f32`.
+//!
+//! ### Migrating from the pre-codec entry points
+//!
+//! | old                                                     | new |
+//! |---------------------------------------------------------|-----|
+//! | `HierCompressor::prepare(&rt, &cfg, &ckpt, &field)`     | `CodecBuilder::new().runtime(rt).build_hier(kind, &field)` |
+//! | `comp.compress(&field, tau)`                            | `codec.compress_with_recon(&field, &ErrorBound::L2Tau(tau))` |
+//! | `HierCompressor::decompress(&rt, &ar, &hbae, &baes)`    | `builder.for_archive(&ar)?.decompress(&ar)` |
+//! | `Sz3Like::new(eps).compress(&f)` / `Sz3Like::decompress`| `builder.build(CodecKind::Sz3, kind, &f)` + trait calls |
+//! | `ZfpLike::new(precision).compress(&f)`                  | `builder.build(CodecKind::Zfp, kind, &f)` (bound-certified) |
+//! | `GbaeCompressor::compress(&f, bin, tau)`                | `builder.build(CodecKind::Gbae, kind, &f)` (adds decode) |
+//! | `coordinator::stream_compress(&comp, &f, depth)`        | `HierCodec::compress_streaming(&f, &bound, depth)` |
+//!
+//! The low-level types remain public for experiment runners that sweep
+//! internals (quantization bins, custom AE stacks).
+//!
+//! ## Three-layer architecture (see README.md)
+//!
 //! * **L1** — Pallas kernels (attention / fused linear / layernorm),
 //!   authored in `python/compile/kernels/`, lowered once into HLO.
 //! * **L2** — JAX model (HBAE, BAE, Adam train steps, fused pipeline),
 //!   AOT-lowered by `python/compile/aot.py` into `artifacts/`.
 //! * **L3** — this crate: the coordinator that loads those artifacts via
 //!   PJRT ([`runtime`]), drives training ([`train`]), runs the
-//!   compression pipeline with the GAE error-bound stage ([`compressor`]),
-//!   and reproduces every table/figure of the paper ([`experiments`]).
+//!   compression codecs ([`codec`], [`compressor`], [`baselines`]),
+//!   streams through [`coordinator`], and reproduces every table/figure
+//!   of the paper ([`experiments`]).
 //!
 //! Python never runs on the request path; after `make artifacts` the
-//! binary is self-contained.
+//! binary is self-contained. Without artifacts the crate still builds
+//! and the pure-rust codecs (`sz3`, `zfp`) are fully functional — the
+//! learned codecs error at runtime until the real `xla` backend and
+//! artifacts are present.
+
+// Hot-loop indexing idioms used deliberately throughout the numeric code.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::useless_vec
+)]
 
 pub mod baselines;
+pub mod codec;
 pub mod coder;
 pub mod compressor;
 pub mod config;

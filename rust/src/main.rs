@@ -1,16 +1,19 @@
-//! attn-reduce CLI — the L3 launcher.
+//! attn-reduce CLI — the L3 launcher over the unified codec API.
 //!
 //! ```text
 //! attn-reduce generate   --dataset s3d --scale bench --out field.f32
 //! attn-reduce train      --dataset s3d [--steps N] [--ckpt-dir DIR]
-//! attn-reduce compress   --dataset s3d --nrmse 1e-3 [--in field.f32]
-//!                        --out data.ardc
-//! attn-reduce decompress --in data.ardc --out recon.f32 [--ckpt-dir DIR]
+//! attn-reduce compress   --codec hier|sz3|zfp|gbae --bound nrmse:1e-3
+//!                        [--dataset D] [--in field.f32] --out data.ardc
+//! attn-reduce decompress --in data.ardc --out recon.f32
 //! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
 //! attn-reduce info       # manifest + platform summary
 //! ```
 
-use attn_reduce::compressor::{self, HierCompressor};
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound};
+use attn_reduce::compressor::{self, Archive, HierCompressor};
 use attn_reduce::config::{self, DatasetKind, Scale};
 use attn_reduce::data;
 use attn_reduce::experiments;
@@ -28,12 +31,14 @@ USAGE:
 COMMANDS:
   generate     synthesize a dataset (--dataset s3d|e3sm|xgc --scale bench --out F)
   train        train HBAE+BAE for a dataset preset (--dataset D --steps N)
-  compress     compress (--dataset D --nrmse 1e-3 | --tau T) [--in F] --out A
-  decompress   decompress an archive (--in A --out F)
+  compress     compress (--codec hier|sz3|zfp|gbae) (--bound nrmse:1e-3|tau:T|abs:A|none)
+               [--dataset D] [--in F] [--stream Q] --out A
+  decompress   decompress an archive using only its header (--in A --out F)
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         show artifact manifest + platform
+  help         show this message
 COMMON OPTIONS:
-  --artifacts DIR   (default: ./artifacts)
+  --artifacts DIR   (default: ./artifacts; only the learned codecs need it)
   --ckpt-dir DIR    (default: ./results/ckpt)
   --scale bench|smoke|paper
   --steps N         training steps (default 300)
@@ -53,15 +58,15 @@ fn main() {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quiet", "retrain", "full"])?;
+    let args = Args::parse(raw, &["quiet", "retrain", "full", "help"])?;
     if args.flag("quiet") {
         std::env::set_var("ATTN_REDUCE_QUIET", "1");
     }
-    let cmd = args
-        .positional
-        .first()
-        .map(|s| s.as_str())
-        .unwrap_or("help");
+    if args.flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "generate" => cmd_generate(&args),
         "train" => cmd_train(&args),
@@ -75,35 +80,68 @@ fn run(raw: &[String]) -> Result<()> {
             experiments::run_experiment(id, &args)
         }
         "info" => cmd_info(&args),
-        _ => {
-            eprintln!("{USAGE}");
+        "help" | "-h" => {
+            println!("{USAGE}");
             Ok(())
+        }
+        other => {
+            // unknown subcommand is a usage error: report + exit non-zero
+            eprintln!("error: unknown command {other:?}");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
         }
     }
 }
 
-fn pipeline_cfg(args: &Args) -> Result<config::PipelineConfig> {
-    let kind = DatasetKind::parse(args.get_or("dataset", "s3d"))?;
-    let scale = Scale::parse(args.get_or("scale", "bench"))?;
-    let mut cfg = config::pipeline_preset(kind, scale, 0.0);
-    cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
-    cfg.train.lr = args.get_f32("lr", cfg.train.lr)?;
-    Ok(cfg)
+fn dataset_kind(args: &Args) -> Result<DatasetKind> {
+    DatasetKind::parse(args.get_or("dataset", "s3d"))
+}
+
+fn scale(args: &Args) -> Result<Scale> {
+    Scale::parse(args.get_or("scale", "bench"))
+}
+
+/// Builder wired to the common CLI options.
+fn builder(args: &Args) -> Result<CodecBuilder> {
+    let d = config::TrainConfig::default();
+    let train = config::TrainConfig {
+        steps: args.get_usize("steps", d.steps)?,
+        lr: args.get_f32("lr", d.lr)?,
+        ..d
+    };
+    Ok(CodecBuilder::new()
+        .artifacts(args.get_or("artifacts", "artifacts"))
+        .ckpt_dir(args.get_or("ckpt-dir", "results/ckpt"))
+        .scale(scale(args)?)
+        .train(train))
+}
+
+/// The typed bound from `--bound`, with `--nrmse` / `--tau` kept as
+/// legacy spellings. Default: `nrmse:1e-3`.
+fn bound(args: &Args) -> Result<ErrorBound> {
+    if let Some(b) = args.get("bound") {
+        return ErrorBound::parse(b);
+    }
+    if let Some(t) = args.get("tau") {
+        return ErrorBound::parse(&format!("tau:{t}"));
+    }
+    if let Some(t) = args.get("nrmse") {
+        return ErrorBound::parse(&format!("nrmse:{t}"));
+    }
+    Ok(ErrorBound::Nrmse(1e-3))
 }
 
 fn load_field(args: &Args, cfg: &config::DatasetConfig) -> Result<attn_reduce::tensor::Tensor> {
     match args.get("in") {
-        Some(path) if path.ends_with(".f32") => {
-            data::read_f32_file(path, cfg.dims.clone())
-        }
+        Some(path) if path.ends_with(".f32") => data::read_f32_file(path, cfg.dims.clone()),
         _ => Ok(data::generate(cfg)),
     }
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let cfg = pipeline_cfg(args)?;
+    let cfg = config::dataset_preset(dataset_kind(args)?, scale(args)?);
     let out = args.get_or("out", "field.f32");
-    let t = data::generate(&cfg.dataset);
+    let t = data::generate(&cfg);
     data::write_f32_file(out, &t)?;
     println!(
         "wrote {} ({} points, {:.1} MB, range [{:.4}, {:.4}])",
@@ -117,8 +155,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = pipeline_cfg(args)?;
-    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let kind = dataset_kind(args)?;
+    let mut cfg = config::pipeline_preset(kind, scale(args)?, 0.0);
+    cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
+    cfg.train.lr = args.get_f32("lr", cfg.train.lr)?;
+    let rt = Rc::new(Runtime::open(args.get_or("artifacts", "artifacts"))?);
     let ckpt = std::path::PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
     if args.flag("retrain") {
         std::fs::remove_file(ParamStore::default_path(&ckpt, &cfg.model.hbae_group)).ok();
@@ -136,33 +177,47 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    let cfg = pipeline_cfg(args)?;
-    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
-    let ckpt = std::path::PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
-    let field = load_field(args, &cfg.dataset)?;
-    let (comp, _) = HierCompressor::prepare(&rt, &cfg, &ckpt, &field)?;
-    // bound: --tau wins, else --nrmse target converted per Eq. 11
-    let tau = if let Some(t) = args.get("tau") {
-        t.parse::<f32>()?
-    } else {
-        let target = args.get_f64("nrmse", 1e-3)?;
-        config::PipelineConfig::tau_for_nrmse(
-            target,
-            field.range() as f64,
-            cfg.dataset.gae_block_len(),
-        )
-    };
-    let (archive, recon) = comp.compress(&field, tau)?;
+    let kind = dataset_kind(args)?;
+    let codec_kind = CodecKind::parse(args.get_or("codec", "hier"))?;
+    let bound = bound(args)?;
+    let cfg = config::dataset_preset(kind, scale(args)?);
+    let field = load_field(args, &cfg)?;
     let out = args.get_or("out", "data.ardc");
+    let mut b = builder(args)?;
+
+    // streaming path (hier only): pipelined coordinator, same archive
+    if let Some(depth) = args.get("stream") {
+        anyhow::ensure!(
+            codec_kind == CodecKind::Hier,
+            "--stream is only supported by the hier codec"
+        );
+        let hier = b.build_hier(kind, &field)?;
+        let (archive, stats) = hier.compress_streaming(&field, &bound, depth.parse()?)?;
+        archive.save(out)?;
+        println!("streamed: {}", stats.summary());
+        report_archive(out, &archive, None)?;
+        return Ok(());
+    }
+
+    let codec = b.build(codec_kind, kind, &field)?;
+    let (archive, recon) = codec.compress_with_recon(&field, &bound)?;
     archive.save(out)?;
-    let stats = comp.stats(&archive);
     let e = compressor::nrmse(&field, &recon);
+    println!("codec = {}, bound = {bound}", codec.id());
+    report_archive(out, &archive, Some(e))?;
+    Ok(())
+}
+
+fn report_archive(out: &str, archive: &Archive, nrmse: Option<f64>) -> Result<()> {
+    let stats = archive_stats(archive)?;
     println!("archive: {out} ({} bytes)", stats.archive_bytes);
     println!(
         "CR (paper accounting) = {:.1}, CR (total bytes) = {:.1}",
         stats.cr, stats.cr_total
     );
-    println!("NRMSE = {e:.3e} (tau = {tau:.4e})");
+    if let Some(e) = nrmse {
+        println!("NRMSE = {e:.3e}");
+    }
     for (tag, sz) in &stats.section_sizes {
         println!("  section {tag}: {sz} bytes");
     }
@@ -170,34 +225,17 @@ fn cmd_compress(args: &Args) -> Result<()> {
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
-    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
-    let ckpt = std::path::PathBuf::from(args.get_or("ckpt-dir", "results/ckpt"));
-    let archive = compressor::Archive::load(
+    let archive = Archive::load(
         args.get("in").ok_or_else(|| anyhow::anyhow!("--in archive required"))?,
     )?;
-    let hgroup = archive
-        .header
-        .req("hbae_group")?
-        .as_str()
-        .unwrap_or("")
-        .to_string();
-    let bgroups: Vec<String> = archive
-        .header
-        .req("bae_groups")?
-        .as_arr()
-        .unwrap_or(&[])
-        .iter()
-        .filter_map(|v| v.as_str().map(String::from))
-        .collect();
-    let hbae = ParamStore::load(ParamStore::default_path(&ckpt, &hgroup), &hgroup)?;
-    let baes: Vec<ParamStore> = bgroups
-        .iter()
-        .map(|g| ParamStore::load(ParamStore::default_path(&ckpt, g), g))
-        .collect::<Result<_>>()?;
-    let recon = HierCompressor::decompress(&rt, &archive, &hbae, &baes)?;
+    // the archive header carries codec id + dataset + groups: no preset
+    // flags needed, only --ckpt-dir/--artifacts for the learned codecs
+    let mut b = builder(args)?;
+    let codec = b.for_archive(&archive)?;
+    let recon = codec.decompress(&archive)?;
     let out = args.get_or("out", "recon.f32");
     data::write_f32_file(out, &recon)?;
-    println!("wrote {out} ({} points)", recon.len());
+    println!("codec = {} -> wrote {out} ({} points)", codec.id(), recon.len());
     Ok(())
 }
 

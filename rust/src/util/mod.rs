@@ -1,7 +1,7 @@
 //! In-repo infrastructure substrate.
 //!
 //! This box builds offline against a minimal vendored crate set (xla,
-//! anyhow, zstd). Everything one would normally pull from crates.io —
+//! anyhow). Everything one would normally pull from crates.io —
 //! JSON, CLI parsing, RNG, a thread pool, a bench harness, property
 //! testing — is implemented here instead (DESIGN.md §4).
 

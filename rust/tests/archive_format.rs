@@ -1,0 +1,114 @@
+//! Archive container robustness: byte-level round trips, corruption and
+//! truncation always returning `Err` (never panicking), and
+//! unknown-section tolerance for forward compatibility.
+
+use attn_reduce::compressor::Archive;
+use attn_reduce::util::json;
+
+fn sample() -> Archive {
+    let mut a = Archive::new(json::obj(vec![
+        ("codec", json::s("sz3")),
+        ("tau", json::num(0.5)),
+        ("note", json::s("round-trip \"quoted\" + unicode é")),
+    ]));
+    a.add_section("HLAT", (0u16..700).flat_map(|v| v.to_le_bytes()).collect());
+    a.add_section("GBAS", vec![9; 100]);
+    a.add_section("GIDX", vec![]);
+    a
+}
+
+#[test]
+fn byte_round_trip_preserves_everything() {
+    let a = sample();
+    let bytes = a.to_bytes();
+    assert_eq!(bytes.len(), a.total_bytes());
+    let b = Archive::from_bytes(&bytes).unwrap();
+    assert_eq!(b.header_str("codec").unwrap(), "sz3");
+    assert_eq!(
+        b.header_str("note").unwrap(),
+        "round-trip \"quoted\" + unicode é"
+    );
+    assert_eq!(b.section("HLAT").unwrap(), a.section("HLAT").unwrap());
+    assert_eq!(b.section("GBAS").unwrap().len(), 100);
+    assert_eq!(b.section("GIDX").unwrap().len(), 0);
+    // and the round trip is a fixed point
+    assert_eq!(b.to_bytes(), bytes);
+}
+
+#[test]
+fn unknown_sections_are_tolerated_and_preserved() {
+    // a future writer adds sections this reader has never heard of
+    let mut a = sample();
+    a.add_section("XNEW", vec![1, 2, 3, 4, 5]);
+    a.add_section("YNEW", vec![]);
+    let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+    assert_eq!(b.section("XNEW").unwrap(), &[1, 2, 3, 4, 5]);
+    assert!(b.has_section("YNEW"));
+    // known sections still decode
+    assert_eq!(b.section("HLAT").unwrap(), a.section("HLAT").unwrap());
+    // and re-serializing keeps them
+    let c = Archive::from_bytes(&b.to_bytes()).unwrap();
+    assert!(c.has_section("XNEW"));
+}
+
+#[test]
+fn every_truncation_errors_never_panics() {
+    let bytes = sample().to_bytes();
+    for cut in 0..bytes.len() {
+        let r = Archive::from_bytes(&bytes[..cut]);
+        assert!(r.is_err(), "prefix of {cut} bytes should not parse");
+    }
+}
+
+#[test]
+fn corrupted_fields_error_never_panic() {
+    let good = sample().to_bytes();
+
+    // bad magic
+    let mut b = good.clone();
+    b[0] = b'X';
+    assert!(Archive::from_bytes(&b).is_err());
+
+    // unsupported version
+    let mut b = good.clone();
+    b[4] = 0xFF;
+    b[5] = 0xFF;
+    assert!(Archive::from_bytes(&b).is_err());
+
+    // header length pointing past the end
+    let mut b = good.clone();
+    b[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Archive::from_bytes(&b).is_err());
+
+    // absurd section count
+    let hlen = u32::from_le_bytes(good[6..10].try_into().unwrap()) as usize;
+    let mut b = good.clone();
+    b[10 + hlen..10 + hlen + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Archive::from_bytes(&b).is_err());
+
+    // section length overflowing the buffer
+    let mut b = good.clone();
+    let sec0 = 10 + hlen + 4; // first section header: tag + u64 len
+    b[sec0 + 4..sec0 + 12].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(Archive::from_bytes(&b).is_err());
+
+    // header JSON corrupted (turn a quote into garbage)
+    let mut b = good.clone();
+    b[10] = 0xFB; // invalid UTF-8 start byte inside the header
+    assert!(Archive::from_bytes(&b).is_err());
+
+    // empty input
+    assert!(Archive::from_bytes(&[]).is_err());
+}
+
+#[test]
+fn single_byte_flips_never_panic() {
+    // not every flip must fail (payload bytes are opaque), but none may
+    // panic; headers/framing flips must keep returning structured errors
+    let good = sample().to_bytes();
+    for i in 0..good.len() {
+        let mut b = good.clone();
+        b[i] ^= 0xA5;
+        let _ = Archive::from_bytes(&b); // Err or Ok — just must not panic
+    }
+}

@@ -1,19 +1,21 @@
 //! Baseline compressors on real synthetic fields: error-bound / rate
 //! behaviour that Fig. 6 depends on.
 
+use std::rc::Rc;
+
 use attn_reduce::baselines::{GbaeCompressor, Sz3Like, ZfpLike};
 use attn_reduce::compressor::nrmse;
 use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
 use attn_reduce::data;
 use attn_reduce::runtime::Runtime;
 
-fn runtime() -> Option<Runtime> {
+fn runtime() -> Option<Rc<Runtime>> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !std::path::Path::new(dir).join("manifest.json").exists() {
         return None;
     }
     std::env::set_var("ATTN_REDUCE_QUIET", "1");
-    Some(Runtime::open(dir).expect("open artifacts"))
+    Some(Rc::new(Runtime::open(dir).expect("open artifacts")))
 }
 
 #[test]
@@ -66,9 +68,7 @@ fn gbae_baseline_trains_and_bounds() {
     let Some(rt) = runtime() else { return };
     let cfg = dataset_preset(DatasetKind::S3d, Scale::Smoke);
     let field = data::generate(&cfg);
-    let mut train = TrainConfig::default();
-    train.steps = 20;
-    train.log_every = 1000;
+    let train = TrainConfig { steps: 20, log_every: 1000, ..TrainConfig::default() };
     let ckpt = std::env::temp_dir().join("attn_reduce_gbae_test");
     std::fs::create_dir_all(&ckpt).unwrap();
     let (gbae, reports) = GbaeCompressor::prepare(
@@ -112,9 +112,7 @@ fn hier_beats_gbae_at_matched_payload_shape() {
     let Some(rt) = runtime() else { return };
     let cfg = dataset_preset(DatasetKind::Xgc, Scale::Smoke);
     let field = data::generate(&cfg);
-    let mut train = TrainConfig::default();
-    train.steps = 30;
-    train.log_every = 1000;
+    let train = TrainConfig { steps: 30, log_every: 1000, ..TrainConfig::default() };
 
     let ckpt = std::env::temp_dir().join("attn_reduce_cmp_test");
     std::fs::create_dir_all(&ckpt).unwrap();

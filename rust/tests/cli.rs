@@ -1,0 +1,153 @@
+//! CLI behavior tests over the real binary: exit codes (unknown
+//! subcommands must fail non-zero) and the full
+//! generate → compress → decompress round trip for the pure-rust codecs,
+//! with decompression driven by the archive header alone.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_attn-reduce"))
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("attn_reduce_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn read_f32(path: &std::path::Path) -> Vec<f32> {
+    std::fs::read(path)
+        .unwrap()
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero_with_usage() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success(), "unknown command must fail");
+    assert_eq!(out.status.code(), Some(2), "usage errors exit 2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown command"), "{stderr}");
+    assert!(stderr.contains("USAGE"), "{stderr}");
+}
+
+#[test]
+fn no_args_exits_nonzero() {
+    let out = bin().output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn help_exits_zero() {
+    for spelling in ["help", "--help", "-h"] {
+        let out = bin().arg(spelling).output().unwrap();
+        assert!(out.status.success(), "{spelling} is not an error");
+        assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"), "{spelling}");
+    }
+}
+
+#[test]
+fn bad_bound_flag_exits_nonzero() {
+    let out = bin()
+        .args(["compress", "--codec", "sz3", "--bound", "l7:0.1"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bound"));
+}
+
+#[test]
+fn sz3_cli_round_trip_restores_from_header_alone() {
+    let field_p = tmp("field.f32");
+    let archive_p = tmp("field.ardc");
+    let recon_p = tmp("recon.f32");
+
+    let out = bin()
+        .args(["generate", "--dataset", "e3sm", "--scale", "smoke", "--out"])
+        .arg(&field_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args([
+            "compress", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset", "e3sm",
+            "--scale", "smoke", "--in",
+        ])
+        .arg(&field_p)
+        .arg("--out")
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("codec = sz3"), "{stdout}");
+
+    // decompress: ONLY --in/--out — dataset, scale, codec all come from
+    // the archive header
+    let out = bin()
+        .arg("decompress")
+        .arg("--in")
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&recon_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let orig = read_f32(&field_p);
+    let recon = read_f32(&recon_p);
+    assert_eq!(orig.len(), recon.len());
+    let (lo, hi) = orig
+        .iter()
+        .fold((f32::INFINITY, f32::NEG_INFINITY), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    let range = (hi - lo) as f64;
+    let mse: f64 = orig
+        .iter()
+        .zip(&recon)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / orig.len() as f64;
+    let nrmse = mse.sqrt() / range;
+    assert!(nrmse <= 1e-3 * 1.0001, "CLI round trip NRMSE {nrmse}");
+}
+
+#[test]
+fn zfp_cli_round_trip_restores_from_header_alone() {
+    let field_p = tmp("zfield.f32");
+    let archive_p = tmp("zfield.ardc");
+    let recon_p = tmp("zrecon.f32");
+
+    assert!(bin()
+        .args(["generate", "--dataset", "s3d", "--scale", "smoke", "--out"])
+        .arg(&field_p)
+        .status()
+        .unwrap()
+        .success());
+    let out = bin()
+        .args([
+            "compress", "--codec", "zfp", "--bound", "nrmse:1e-3", "--dataset", "s3d",
+            "--scale", "smoke", "--in",
+        ])
+        .arg(&field_p)
+        .arg("--out")
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(bin()
+        .arg("decompress")
+        .arg("--in")
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&recon_p)
+        .status()
+        .unwrap()
+        .success());
+    let orig = read_f32(&field_p);
+    let recon = read_f32(&recon_p);
+    assert_eq!(orig.len(), recon.len());
+}

@@ -1,0 +1,246 @@
+//! Unified-codec acceptance tests: every codec compresses under a typed
+//! `ErrorBound` into a self-describing archive, and `for_archive`
+//! restores the field from the serialized bytes alone (no dataset or
+//! preset flags) with the stated bound verified.
+//!
+//! `sz3` / `zfp` are pure rust and run everywhere; `hier` / `gbae` need
+//! the PJRT artifacts and skip (like the other integration tests) when
+//! `artifacts/manifest.json` is absent.
+
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound};
+use attn_reduce::compressor::{nrmse, Archive};
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
+use attn_reduce::data;
+use attn_reduce::runtime::Runtime;
+use attn_reduce::tensor::Tensor;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    Some(Rc::new(Runtime::open(dir).expect("open artifacts")))
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("attn_reduce_codec_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Serialize, reparse, rebuild the codec from the header alone, decode,
+/// and verify the bound against the original field.
+fn round_trip_and_verify(
+    builder: &mut CodecBuilder,
+    archive: Archive,
+    field: &Tensor,
+    bound: &ErrorBound,
+    kind: DatasetKind,
+    slack: f64,
+) -> Tensor {
+    let bytes = archive.to_bytes();
+    let archive2 = Archive::from_bytes(&bytes).expect("reparse archive");
+    // decode knowing NOTHING but the bytes (+ checkpoint dir for learned)
+    let codec = builder.for_archive(&archive2).expect("rebuild codec from header");
+    let recon = codec.decompress(&archive2).expect("decompress");
+    assert_eq!(recon.shape(), field.shape());
+
+    let dataset = dataset_preset(kind, Scale::Smoke);
+    match *bound {
+        ErrorBound::Nrmse(t) => {
+            let e = nrmse(field, &recon);
+            assert!(e <= t * slack, "NRMSE {e} > {t} (codec {})", codec.id());
+            assert!(e > 0.0, "lossy codec should not be exact");
+        }
+        _ => {
+            assert!(
+                bound.satisfied_by(field, &recon, &dataset),
+                "bound {bound} violated by codec {}",
+                codec.id()
+            );
+        }
+    }
+    let stats = archive_stats(&archive2).expect("stats from header");
+    assert!(stats.cr > 1.0, "should actually compress: CR {}", stats.cr);
+    recon
+}
+
+#[test]
+fn sz3_codec_meets_nrmse_bound_from_archive_alone() {
+    for kind in [DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc] {
+        let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+        let mut b = CodecBuilder::new().scale(Scale::Smoke);
+        let bound = ErrorBound::Nrmse(1e-3);
+        let codec = b.build(CodecKind::Sz3, kind, &field).unwrap();
+        assert_eq!(codec.id(), "sz3");
+        let archive = codec.compress(&field, &bound).unwrap();
+        round_trip_and_verify(&mut b, archive, &field, &bound, kind, 1.0001);
+    }
+}
+
+#[test]
+fn sz3_codec_honors_abs_and_tau_bounds() {
+    let kind = DatasetKind::E3sm;
+    let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+    let mut b = CodecBuilder::new().scale(Scale::Smoke);
+    let codec = b.build(CodecKind::Sz3, kind, &field).unwrap();
+    let abs = ErrorBound::PointwiseAbs((1e-3 * field.range()) as f64);
+    let archive = codec.compress(&field, &abs).unwrap();
+    round_trip_and_verify(&mut b, archive, &field, &abs, kind, 1.0);
+    let tau = ErrorBound::L2Tau((5e-3 * field.range()) as f64);
+    let archive = codec.compress(&field, &tau).unwrap();
+    round_trip_and_verify(&mut b, archive, &field, &tau, kind, 1.0);
+}
+
+#[test]
+fn zfp_codec_certifies_bounds_by_precision_search() {
+    let kind = DatasetKind::E3sm;
+    let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+    let mut b = CodecBuilder::new().scale(Scale::Smoke);
+    let codec = b.build(CodecKind::Zfp, kind, &field).unwrap();
+    assert_eq!(codec.id(), "zfp");
+    for bound in [
+        ErrorBound::Nrmse(1e-3),
+        ErrorBound::PointwiseAbs((5e-3 * field.range()) as f64),
+    ] {
+        let archive = codec.compress(&field, &bound).unwrap();
+        let p = archive.header.req("precision").unwrap().as_usize().unwrap();
+        assert!((1..=26).contains(&p), "certified precision {p}");
+        round_trip_and_verify(&mut b, archive, &field, &bound, kind, 1.0001);
+    }
+    // tighter bound must certify at >= precision of a looser one
+    let loose = codec.compress(&field, &ErrorBound::Nrmse(1e-2)).unwrap();
+    let tight = codec.compress(&field, &ErrorBound::Nrmse(1e-4)).unwrap();
+    let lp = loose.header.req("precision").unwrap().as_usize().unwrap();
+    let tp = tight.header.req("precision").unwrap().as_usize().unwrap();
+    assert!(tp >= lp, "tight {tp} vs loose {lp}");
+}
+
+#[test]
+fn baseline_archives_are_self_describing() {
+    let kind = DatasetKind::S3d;
+    let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+    let mut b = CodecBuilder::new().scale(Scale::Smoke);
+    let codec = b.build(CodecKind::Sz3, kind, &field).unwrap();
+    let archive = codec.compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    assert_eq!(archive.header_str("codec").unwrap(), "sz3");
+    assert_eq!(
+        archive.header.req("dataset").unwrap().req("kind").unwrap().as_str(),
+        Some("s3d")
+    );
+    let bound = attn_reduce::codec::archive_bound(&archive);
+    assert_eq!(bound, ErrorBound::Nrmse(1e-3));
+}
+
+#[test]
+fn hier_codec_end_to_end_with_header_only_restore() {
+    let Some(rt) = runtime() else { return };
+    let kind = DatasetKind::S3d;
+    let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+    let ckpt = ckpt_dir("hier");
+    let mut b = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Smoke)
+        .ckpt_dir(&ckpt)
+        .train(TrainConfig { steps: 25, log_every: 1000, ..TrainConfig::default() });
+    let codec = b.build(CodecKind::Hier, kind, &field).unwrap();
+    assert_eq!(codec.id(), "hier");
+    let bound = ErrorBound::Nrmse(2e-3);
+    let (archive, recon) = codec.compress_with_recon(&field, &bound).unwrap();
+    let e = nrmse(&field, &recon);
+    assert!(e <= 2e-3 * 1.01, "NRMSE {e}");
+
+    let restored = round_trip_and_verify(&mut b, archive, &field, &bound, kind, 1.01);
+    // header-only restore agrees with the compressor's reconstruction
+    let max_d = recon
+        .data()
+        .iter()
+        .zip(restored.data())
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    assert!(max_d <= 2e-5 * field.range(), "restore disagrees by {max_d}");
+
+    // the typed L2Tau bound holds per GAE block too
+    let dataset = dataset_preset(kind, Scale::Smoke);
+    let tau = bound.gae_tau(&dataset, field.range() as f64);
+    assert!(ErrorBound::L2Tau(tau as f64 * 1.001).satisfied_by(&field, &restored, &dataset));
+}
+
+#[test]
+fn gbae_codec_end_to_end_with_header_only_restore() {
+    let Some(rt) = runtime() else { return };
+    let kind = DatasetKind::S3d;
+    let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+    let ckpt = ckpt_dir("gbae");
+    let mut b = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Smoke)
+        .ckpt_dir(&ckpt)
+        .train(TrainConfig { steps: 25, log_every: 1000, ..TrainConfig::default() });
+    let codec = b.build(CodecKind::Gbae, kind, &field).unwrap();
+    assert_eq!(codec.id(), "gbae");
+    let bound = ErrorBound::Nrmse(2e-3);
+    let (archive, recon) = codec.compress_with_recon(&field, &bound).unwrap();
+    assert!(archive.has_section("GLAT"));
+    let e = nrmse(&field, &recon);
+    assert!(e <= 2e-3 * 1.01, "NRMSE {e}");
+
+    let restored = round_trip_and_verify(&mut b, archive, &field, &bound, kind, 1.01);
+    let max_d = recon
+        .data()
+        .iter()
+        .zip(restored.data())
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    assert!(max_d <= 2e-5 * field.range(), "restore disagrees by {max_d}");
+}
+
+#[test]
+fn streaming_archive_matches_one_shot() {
+    let Some(rt) = runtime() else { return };
+    let kind = DatasetKind::E3sm;
+    let field = data::generate(&dataset_preset(kind, Scale::Smoke));
+    let ckpt = ckpt_dir("stream");
+    let mut b = CodecBuilder::new()
+        .runtime(rt)
+        .scale(Scale::Smoke)
+        .ckpt_dir(&ckpt)
+        .train(TrainConfig { steps: 25, log_every: 1000, ..TrainConfig::default() });
+    let codec = b.build_hier(kind, &field).unwrap();
+
+    // AE-only (bound None): streamed archive decodes to the sequential
+    // path's reconstruction (GAE disabled so the comparison is exact up
+    // to fused-vs-unfused float ordering)
+    let (stream_archive, stats) =
+        codec.compress_streaming(&field, &ErrorBound::None, 4).unwrap();
+    assert!(stats.batches > 0);
+    let stream_recon = codec.decompress(&stream_archive).unwrap();
+    let (_, seq_recon) = codec.compress_with_recon(&field, &ErrorBound::None).unwrap();
+    let max_d = seq_recon
+        .data()
+        .iter()
+        .zip(stream_recon.data())
+        .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+    assert!(max_d <= 1e-4 * field.range(), "stream vs one-shot differ by {max_d}");
+
+    // and under a real bound, the streamed archive honors it on its own
+    let bound = ErrorBound::Nrmse(2e-3);
+    let (bounded_archive, _) = codec.compress_streaming(&field, &bound, 4).unwrap();
+    let bounded_recon = codec.decompress(&bounded_archive).unwrap();
+    let e = nrmse(&field, &bounded_recon);
+    assert!(e <= 2e-3 * 1.01, "streamed NRMSE {e}");
+}
+
+#[test]
+fn unknown_codec_id_is_rejected() {
+    let mut archive = Archive::new(attn_reduce::util::json::obj(vec![]));
+    archive.set_header("codec", attn_reduce::util::json::s("quantum"));
+    archive.set_header(
+        "dataset",
+        dataset_preset(DatasetKind::S3d, Scale::Smoke).to_json(),
+    );
+    let err = CodecBuilder::new().for_archive(&archive).unwrap_err();
+    assert!(format!("{err:#}").contains("quantum"), "{err:#}");
+}

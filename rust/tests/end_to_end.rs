@@ -2,22 +2,23 @@
 //! verify the per-block error bound and metrics, at smoke scale, for all
 //! three dataset presets. Requires `make artifacts`.
 
+use std::rc::Rc;
+
 use attn_reduce::compressor::{gae_taus, nrmse, Archive, HierCompressor};
 use attn_reduce::config::{dataset_preset, model_preset, DatasetKind, PipelineConfig, Scale};
 use attn_reduce::data::{self, Normalizer};
 use attn_reduce::linalg::norm2_f32;
-use attn_reduce::model::ParamStore;
 use attn_reduce::runtime::Runtime;
 use attn_reduce::tensor::{block_origins, extract_block};
 
-fn runtime() -> Option<Runtime> {
+fn runtime() -> Option<Rc<Runtime>> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !std::path::Path::new(dir).join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return None;
     }
     std::env::set_var("ATTN_REDUCE_QUIET", "1");
-    Some(Runtime::open(dir).expect("open artifacts"))
+    Some(Rc::new(Runtime::open(dir).expect("open artifacts")))
 }
 
 fn smoke_cfg(kind: DatasetKind) -> PipelineConfig {
@@ -95,18 +96,9 @@ fn run_dataset(kind: DatasetKind, tag: &str) {
     let bytes = archive.to_bytes();
     let archive2 = Archive::from_bytes(&bytes).expect("parse");
 
-    // decompress reproduces the compressor's reconstruction
-    let hbae = ParamStore::load(
-        ParamStore::default_path(&ckpt, &cfg.model.hbae_group),
-        &cfg.model.hbae_group,
-    )
-    .unwrap();
-    let bae = ParamStore::load(
-        ParamStore::default_path(&ckpt, &cfg.model.bae_group),
-        &cfg.model.bae_group,
-    )
-    .unwrap();
-    let recon2 = HierCompressor::decompress(&rt, &archive2, &hbae, &[bae]).expect("decompress");
+    // decompress (now a method, symmetric with compress) reproduces the
+    // compressor's reconstruction from the parsed archive
+    let recon2 = comp.decompress(&archive2).expect("decompress");
     let max_d = recon
         .data()
         .iter()
