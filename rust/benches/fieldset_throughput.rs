@@ -1,0 +1,122 @@
+//! Dataset-level (FieldSet) compression throughput: serial seed vs the
+//! block-parallel executor, per codec, on a synthetic multi-species S3D
+//! set. Emits `BENCH_fieldset.json` (MB/s, CR, speedup) next to the CWD.
+//!
+//! Run: `cargo bench --bench fieldset_throughput`
+//! (`BENCH_FAST=1` shrinks to smoke scale for CI.)
+
+use std::time::Instant;
+
+use attn_reduce::codec::{archive_stats, Codec, ErrorBound, Sz3Codec, ZfpCodec};
+use attn_reduce::config::{DatasetKind, Scale};
+use attn_reduce::engine::{compress_set_parallel, CodecExt, FieldSet};
+use attn_reduce::util::json::{self, Value};
+use attn_reduce::util::parallel::{num_threads, with_thread_limit};
+
+fn median_secs(mut f: impl FnMut(), iters: usize) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    if n % 2 == 1 {
+        times[n / 2]
+    } else {
+        // true median for even sample counts (with 2 samples, picking
+        // times[1] would report the worst case, not the middle)
+        (times[n / 2 - 1] + times[n / 2]) / 2.0
+    }
+}
+
+fn bench_codec<C: Codec + Sync>(
+    name: &str,
+    codec: &C,
+    set: &FieldSet,
+    bound: &ErrorBound,
+    iters: usize,
+) -> Value {
+    let raw_mb = set.raw_bytes() as f64 / 1e6;
+    // serial seed: whole pipeline forced to one thread
+    let serial_s = median_secs(
+        || {
+            with_thread_limit(1, || {
+                codec.compress_set(set, bound).expect("serial compress_set");
+            });
+        },
+        iters,
+    );
+    // block-parallel engine: per-field jobs + per-block work items
+    let parallel_s = median_secs(
+        || {
+            compress_set_parallel(codec, set, bound).expect("parallel compress_set");
+        },
+        iters,
+    );
+    let archive = compress_set_parallel(codec, set, bound).unwrap();
+    let stats = archive_stats(&archive).expect("archive stats");
+    let speedup = serial_s / parallel_s.max(1e-12);
+    println!(
+        "{name:>4}: serial {:>8.2} MB/s | parallel {:>8.2} MB/s | speedup {speedup:>5.2}x | CR {:.1}",
+        raw_mb / serial_s,
+        raw_mb / parallel_s,
+        stats.cr
+    );
+    json::obj(vec![
+        ("codec", json::s(name)),
+        ("raw_mb", json::num(raw_mb)),
+        ("serial_s", json::num(serial_s)),
+        ("parallel_s", json::num(parallel_s)),
+        ("mb_s_serial", json::num(raw_mb / serial_s)),
+        ("mb_s_parallel", json::num(raw_mb / parallel_s)),
+        ("speedup", json::num(speedup)),
+        ("cr_payload", json::num(stats.cr)),
+        ("cr_total", json::num(stats.cr_total)),
+        ("archive_bytes", json::num(stats.archive_bytes as f64)),
+    ])
+}
+
+fn main() {
+    let fast = std::env::var_os("BENCH_FAST").is_some();
+    let (scale, n_vars, iters) = if fast {
+        (Scale::Smoke, 4, 2)
+    } else {
+        (Scale::Bench, 4, 3)
+    };
+    let set = FieldSet::generate(DatasetKind::S3d, scale, n_vars);
+    println!(
+        "fieldset: s3d x {n_vars} vars, {:.1} MB raw, {} threads",
+        set.raw_bytes() as f64 / 1e6,
+        num_threads()
+    );
+    // closed-form bounds only, so the numbers measure the compressors,
+    // not the zfp precision search
+    let sz3 = bench_codec(
+        "sz3",
+        &Sz3Codec::new(set.dataset().clone()),
+        &set,
+        &ErrorBound::Nrmse(1e-3),
+        iters,
+    );
+    let zfp = bench_codec(
+        "zfp",
+        &ZfpCodec::new(set.dataset().clone()),
+        &set,
+        &ErrorBound::None,
+        iters,
+    );
+    let report = json::obj(vec![
+        ("dataset", json::s("s3d")),
+        ("scale", json::s(if fast { "smoke" } else { "bench" })),
+        ("n_vars", json::num(n_vars as f64)),
+        ("threads", json::num(num_threads() as f64)),
+        ("codecs", Value::Arr(vec![sz3, zfp])),
+    ]);
+    std::fs::write("BENCH_fieldset.json", report.to_string_pretty())
+        .expect("write BENCH_fieldset.json");
+    println!("wrote BENCH_fieldset.json");
+}

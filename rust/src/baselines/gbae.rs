@@ -313,7 +313,9 @@ impl GbaeCompressor {
         let q = Quantizer::new(latent_bin.max(0.0));
         let (lat_rows, corr_rows, mut recon) = self.forward(&norm, q)?;
 
-        // latent payload
+        // latent payload (Quantizer::codes fans out over the shared
+        // executor with fixed chunking — order-identical at any thread
+        // count)
         let n_latents = lat_rows.len() + corr_rows.as_ref().map_or(0, |c| c.len());
         let mut payload = if q.enabled() {
             let mut codes = q.codes(&lat_rows);

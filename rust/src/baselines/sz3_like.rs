@@ -12,8 +12,16 @@
 //! This is the same algorithm family and error-control mechanism as SZ3's
 //! default path (SZ3 adds regression predictors and adaptive selection;
 //! crossover *shapes* against learned compressors are preserved).
+//!
+//! Lorenzo prediction is serial *within* a lattice (each point depends on
+//! already-reconstructed neighbors), but the leading batch dims are
+//! independent — encode and decode fan batches out across the shared
+//! [`crate::engine::Executor`], concatenating per-batch streams in batch
+//! order, so the byte stream is identical to the serial one at every
+//! thread count.
 
 use crate::coder::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
+use crate::engine::{reuse_f32, Executor};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::ensure;
@@ -80,7 +88,45 @@ impl Sz3Like {
         Self::decode_codes(&codes, &raws, shape, eps)
     }
 
-    /// Lorenzo-predict + quantize. Returns (codes, raw values).
+    /// Lorenzo-predict + quantize one lattice. `recon` is a scratch
+    /// buffer of `vol` zeros; appends to `codes` / `raws`.
+    fn encode_lattice(
+        &self,
+        src: &[f32],
+        lattice: &[usize],
+        recon: &mut [f32],
+        codes: &mut Vec<i32>,
+        raws: &mut Vec<f32>,
+    ) {
+        let two_eps = 2.0 * self.eps;
+        for i in 0..src.len() {
+            let pred = lorenzo_predict(recon, lattice, i);
+            let err = src[i] - pred;
+            let code = (err / two_eps).round();
+            let mut stored = false;
+            if code.is_finite() && code.abs() < MAX_CODE as f32 {
+                let c = code as i32;
+                let rec = pred + c as f32 * two_eps;
+                // verify after f32 rounding — SZ falls back to the
+                // unpredictable path whenever quantization cannot
+                // certify the bound exactly
+                if (src[i] - rec).abs() <= self.eps {
+                    codes.push(c);
+                    recon[i] = rec;
+                    stored = true;
+                }
+            }
+            if !stored {
+                codes.push(UNPRED);
+                raws.push(src[i]);
+                recon[i] = src[i];
+            }
+        }
+    }
+
+    /// Lorenzo-predict + quantize. Returns (codes, raw values). Batches
+    /// (leading dims) run block-parallel; streams concatenate in batch
+    /// order, so the output matches the serial encoder byte for byte.
     fn encode_codes(&self, t: &Tensor) -> (Vec<i32>, Vec<f32>) {
         let shape = t.shape();
         let rank = shape.len();
@@ -90,36 +136,20 @@ impl Sz3Like {
         let lattice = &shape[rank - lor..];
         let batch: usize = shape[..rank - lor].iter().product();
         let vol: usize = lattice.iter().product();
-        let mut recon = vec![0f32; vol];
+        let parts: Vec<(Vec<i32>, Vec<f32>)> =
+            Executor::global().par_map_scratch(batch, |b, scratch| {
+                let recon = reuse_f32(&mut scratch.f32_a, vol);
+                let src = &t.data()[b * vol..(b + 1) * vol];
+                let mut codes = Vec::with_capacity(vol);
+                let mut raws = Vec::new();
+                self.encode_lattice(src, lattice, recon, &mut codes, &mut raws);
+                (codes, raws)
+            });
         let mut codes = Vec::with_capacity(t.len());
         let mut raws = Vec::new();
-        let two_eps = 2.0 * self.eps;
-        for b in 0..batch {
-            let src = &t.data()[b * vol..(b + 1) * vol];
-            recon.fill(0.0);
-            for i in 0..vol {
-                let pred = lorenzo_predict(&recon, lattice, i);
-                let err = src[i] - pred;
-                let code = (err / two_eps).round();
-                let mut stored = false;
-                if code.is_finite() && code.abs() < MAX_CODE as f32 {
-                    let c = code as i32;
-                    let rec = pred + c as f32 * two_eps;
-                    // verify after f32 rounding — SZ falls back to the
-                    // unpredictable path whenever quantization cannot
-                    // certify the bound exactly
-                    if (src[i] - rec).abs() <= self.eps {
-                        codes.push(c);
-                        recon[i] = rec;
-                        stored = true;
-                    }
-                }
-                if !stored {
-                    codes.push(UNPRED);
-                    raws.push(src[i]);
-                    recon[i] = src[i];
-                }
-            }
+        for (c, r) in parts {
+            codes.extend(c);
+            raws.extend(r);
         }
         (codes, raws)
     }
@@ -136,21 +166,38 @@ impl Sz3Like {
         let batch: usize = shape[..rank - lor].iter().product();
         let vol: usize = lattice.iter().product();
         ensure!(codes.len() == batch * vol, "sz3: code count mismatch");
+        // per-batch raw-value offsets, so batches decode independently
+        let mut raw_starts = Vec::with_capacity(batch + 1);
+        let mut acc = 0usize;
+        raw_starts.push(0);
+        for b in 0..batch {
+            acc += codes[b * vol..(b + 1) * vol]
+                .iter()
+                .filter(|&&c| c == UNPRED)
+                .count();
+            raw_starts.push(acc);
+        }
+        ensure!(acc == raws.len(), "sz3: raw count mismatch");
         let two_eps = 2.0 * eps;
         let mut data = vec![0f32; batch * vol];
-        let mut raw_it = raws.iter();
-        for b in 0..batch {
-            let dst = &mut data[b * vol..(b + 1) * vol];
+        if vol == 0 {
+            return Ok(Tensor::new(shape, data));
+        }
+        crate::util::parallel::par_chunks_mut(&mut data, vol, |b, dst| {
+            let braws = &raws[raw_starts[b]..raw_starts[b + 1]];
+            let mut ri = 0usize;
             for i in 0..vol {
                 let pred = lorenzo_predict(dst, &lattice, i);
                 let code = codes[b * vol + i];
                 dst[i] = if code == UNPRED {
-                    *raw_it.next().ok_or_else(|| anyhow::anyhow!("sz3: raw underrun"))?
+                    let v = braws[ri];
+                    ri += 1;
+                    v
                 } else {
                     pred + code as f32 * two_eps
                 };
             }
-        }
+        });
         Ok(Tensor::new(shape, data))
     }
 }

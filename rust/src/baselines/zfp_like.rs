@@ -8,7 +8,14 @@
 //! shift-truncate + Huffman stage controlled by `precision` (bits kept per
 //! coefficient) — the same fixed-precision rate-distortion knob.
 
+//! Every 4^d block is independent, so both directions run block-parallel
+//! on the shared [`crate::engine::Executor`]: compression fans out over
+//! batches (or origin chunks when there is a single batch) and
+//! decompression over individual blocks, with streams concatenated in
+//! block order — byte-identical to the serial path at every thread count.
+
 use crate::coder::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
+use crate::engine::{reuse_f32, reuse_i64, Executor};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::ensure;
@@ -30,6 +37,40 @@ impl ZfpLike {
         Self { precision }
     }
 
+    /// Transform + truncate the blocks at `origins` of one lattice,
+    /// appending one exponent and `bsz` codes per block.
+    fn encode_blocks(
+        &self,
+        sub: &Tensor,
+        origins: &[Vec<usize>],
+        d: usize,
+        blk: &mut [f32],
+        ints: &mut [i64],
+        exps: &mut Vec<i16>,
+        codes: &mut Vec<i32>,
+    ) {
+        let bsz = blk.len();
+        for o in origins {
+            crate::tensor::extract_block(sub, o, &vec![BLOCK; d], blk);
+            // block exponent
+            let maxabs = blk.iter().fold(0f32, |a, &x| a.max(x.abs()));
+            let e = if maxabs > 0.0 { maxabs.log2().ceil() as i32 } else { 0 };
+            exps.push(e as i16);
+            let scale = 2f64.powi(FRAC_BITS as i32 - e);
+            for i in 0..bsz {
+                ints[i] = (blk[i] as f64 * scale).round() as i64;
+            }
+            fwd_transform(ints, d);
+            // keep `precision` MSBs (relative to FRAC_BITS), rounding
+            // to nearest to avoid floor bias
+            let shift = FRAC_BITS - self.precision;
+            let half = if shift > 0 { 1i64 << (shift - 1) } else { 0 };
+            for &v in ints.iter() {
+                codes.push(((v + half) >> shift) as i32);
+            }
+        }
+    }
+
     pub fn compress(&self, t: &Tensor) -> Result<Vec<u8>> {
         let shape = t.shape().to_vec();
         let rank = shape.len();
@@ -40,31 +81,40 @@ impl ZfpLike {
         let bsz = BLOCK.pow(d as u32);
         let origins = crate::tensor::block_origins(&lattice, &vec![BLOCK; d]);
 
-        let mut exps: Vec<i16> = Vec::new();
+        // block-parallel: over batches when there are several, over
+        // origin chunks of the single lattice otherwise; parts
+        // concatenate in block order either way
+        let parts: Vec<(Vec<i16>, Vec<i32>)> = if batch == 0 || vol == 0 {
+            Vec::new()
+        } else if batch > 1 {
+            Executor::global().par_map_scratch(batch, |b, s| {
+                let sub =
+                    Tensor::new(lattice.clone(), t.data()[b * vol..(b + 1) * vol].to_vec());
+                let blk = reuse_f32(&mut s.f32_a, bsz);
+                let ints = reuse_i64(&mut s.i64_a, bsz);
+                let mut exps = Vec::with_capacity(origins.len());
+                let mut codes = Vec::with_capacity(origins.len() * bsz);
+                self.encode_blocks(&sub, &origins, d, blk, ints, &mut exps, &mut codes);
+                (exps, codes)
+            })
+        } else {
+            const ORIGIN_CHUNK: usize = 64;
+            let chunks: Vec<&[Vec<usize>]> = origins.chunks(ORIGIN_CHUNK).collect();
+            let sub = Tensor::new(lattice.clone(), t.data().to_vec());
+            Executor::global().par_map_scratch(chunks.len(), |ci, s| {
+                let blk = reuse_f32(&mut s.f32_a, bsz);
+                let ints = reuse_i64(&mut s.i64_a, bsz);
+                let mut exps = Vec::with_capacity(chunks[ci].len());
+                let mut codes = Vec::with_capacity(chunks[ci].len() * bsz);
+                self.encode_blocks(&sub, chunks[ci], d, blk, ints, &mut exps, &mut codes);
+                (exps, codes)
+            })
+        };
+        let mut exps: Vec<i16> = Vec::with_capacity(batch * origins.len());
         let mut codes: Vec<i32> = Vec::with_capacity(t.len());
-        let mut blk = vec![0f32; bsz];
-        let mut ints = vec![0i64; bsz];
-        for b in 0..batch {
-            let sub = Tensor::new(lattice.clone(), t.data()[b * vol..(b + 1) * vol].to_vec());
-            for o in &origins {
-                crate::tensor::extract_block(&sub, o, &vec![BLOCK; d], &mut blk);
-                // block exponent
-                let maxabs = blk.iter().fold(0f32, |a, &x| a.max(x.abs()));
-                let e = if maxabs > 0.0 { maxabs.log2().ceil() as i32 } else { 0 };
-                exps.push(e as i16);
-                let scale = 2f64.powi(FRAC_BITS as i32 - e);
-                for i in 0..bsz {
-                    ints[i] = (blk[i] as f64 * scale).round() as i64;
-                }
-                fwd_transform(&mut ints, d);
-                // keep `precision` MSBs (relative to FRAC_BITS), rounding
-                // to nearest to avoid floor bias
-                let shift = FRAC_BITS - self.precision;
-                let half = if shift > 0 { 1i64 << (shift - 1) } else { 0 };
-                for &v in ints.iter() {
-                    codes.push(((v + half) >> shift) as i32);
-                }
-            }
+        for (e, c) in parts {
+            exps.extend(e);
+            codes.extend(c);
         }
 
         let mut out = Vec::new();
@@ -88,6 +138,10 @@ impl ZfpLike {
     pub fn decompress(bytes: &[u8]) -> Result<Tensor> {
         ensure!(bytes.len() > 5, "zfp: truncated");
         let precision = bytes[0] as u32;
+        ensure!(
+            (1..=FRAC_BITS).contains(&precision),
+            "zfp: corrupt precision {precision}"
+        );
         let rank = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
         let mut off = 5;
         let mut shape = Vec::with_capacity(rank);
@@ -119,27 +173,44 @@ impl ZfpLike {
         ensure!(codes.len() == batch * origins.len() * bsz, "zfp: code count");
         ensure!(exps.len() == batch * origins.len(), "zfp: exponent count");
 
-        let mut data = vec![0f32; batch * vol];
-        let mut ints = vec![0i64; bsz];
-        let mut blk = vec![0f32; bsz];
         let shift = FRAC_BITS - precision;
-        let mut ci = 0usize;
-        let mut ei = 0usize;
+        // every block decodes independently (codes/exps are indexed by
+        // global block number); blocks are decoded in groups to amortize
+        // allocations, then scattered serially
+        const DEC_GROUP: usize = 64;
+        let n_blocks = batch * origins.len();
+        let n_groups = n_blocks.div_ceil(DEC_GROUP);
+        let groups: Vec<Vec<f32>> = Executor::global().par_map_scratch(n_groups, |g, s| {
+            let lo = g * DEC_GROUP;
+            let hi = (lo + DEC_GROUP).min(n_blocks);
+            let mut out = vec![0f32; (hi - lo) * bsz];
+            for bi in lo..hi {
+                let ints = reuse_i64(&mut s.i64_a, bsz);
+                for (i, v) in ints.iter_mut().enumerate() {
+                    *v = (codes[bi * bsz + i] as i64) << shift;
+                }
+                inv_transform(ints, d);
+                let e = exps[bi] as i32;
+                let scale = 2f64.powi(e - FRAC_BITS as i32);
+                let dst = &mut out[(bi - lo) * bsz..(bi - lo + 1) * bsz];
+                for (i, &v) in ints.iter().enumerate() {
+                    dst[i] = (v as f64 * scale) as f32;
+                }
+            }
+            out
+        });
+        let mut data = vec![0f32; batch * vol];
         for b in 0..batch {
             let mut sub = Tensor::new(lattice.clone(), vec![0f32; vol]);
-            for o in &origins {
-                for v in ints.iter_mut() {
-                    *v = (codes[ci] as i64) << shift;
-                    ci += 1;
-                }
-                inv_transform(&mut ints, d);
-                let e = exps[ei] as i32;
-                ei += 1;
-                let scale = 2f64.powi(e - FRAC_BITS as i32);
-                for i in 0..bsz {
-                    blk[i] = (ints[i] as f64 * scale) as f32;
-                }
-                crate::tensor::scatter_block(&mut sub, o, &vec![BLOCK; d], &blk);
+            for (oi, o) in origins.iter().enumerate() {
+                let bi = b * origins.len() + oi;
+                let (g, r) = (bi / DEC_GROUP, bi % DEC_GROUP);
+                crate::tensor::scatter_block(
+                    &mut sub,
+                    o,
+                    &vec![BLOCK; d],
+                    &groups[g][r * bsz..(r + 1) * bsz],
+                );
             }
             data[b * vol..(b + 1) * vol].copy_from_slice(sub.data());
         }

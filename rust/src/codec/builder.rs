@@ -20,7 +20,7 @@ use crate::model::ParamStore;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::Result;
-use anyhow::{bail, Context};
+use anyhow::{bail, ensure, Context};
 
 use super::{Codec, GbaeCodec, HierCodec, Sz3Codec, ZfpCodec};
 
@@ -181,7 +181,19 @@ impl CodecBuilder {
     /// header: codec id, dataset config, and model group names all come
     /// from the archive. Learned codecs load their cached checkpoints
     /// (decompression never trains — a missing checkpoint is an error).
+    ///
+    /// For a v2 multi-field container the codec is rebuilt from the
+    /// first embedded field archive (all fields of a set share the codec,
+    /// dataset config, and model groups); pair it with
+    /// [`crate::engine::CodecExt::decompress_set`].
     pub fn for_archive(&mut self, archive: &Archive) -> Result<Box<dyn Codec>> {
+        if archive.is_multi_field() {
+            ensure!(
+                archive.field_count() > 0,
+                "v2 container holds no field archives"
+            );
+            return self.for_archive(&archive.field_archive(0)?);
+        }
         let h = &archive.header;
         let id = archive
             .header_str("codec")

@@ -89,10 +89,14 @@ pub(crate) fn base_header(
 }
 
 /// Compression statistics computed from a self-describing archive alone
-/// (the dataset geometry comes from the header).
+/// (the dataset geometry comes from the header). Works for both v1
+/// single-field archives and v2 multi-field containers — the CR
+/// numerator of a set is `total_points x field_count`, the denominator
+/// the summed per-field payloads.
 pub fn archive_stats(archive: &Archive) -> Result<CompressStats> {
     let dataset = DatasetConfig::from_json(archive.header.req("dataset")?)?;
-    let n_points = dataset.total_points();
+    let fields = if archive.is_multi_field() { archive.field_count().max(1) } else { 1 };
+    let n_points = dataset.total_points() * fields;
     let payload = archive.cr_payload_bytes();
     let total = archive.total_bytes();
     Ok(CompressStats {

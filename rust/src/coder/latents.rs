@@ -19,7 +19,9 @@ pub fn encode_latents(values: &[f32], q: Quantizer) -> Vec<u8> {
     let mut out = Vec::new();
     if q.enabled() {
         out.push(MODE_HUFF);
-        let codes: Vec<i32> = values.iter().map(|&v| q.code(v)).collect();
+        // chunk-parallel on the shared executor, order-identical at any
+        // thread count (the largest quantization site in the codebase)
+        let codes = q.codes(values);
         out.extend(huffman_encode(&codes));
     } else {
         out.push(MODE_RAW);

@@ -14,15 +14,32 @@
 //!        then 8 tokens: literal = raw byte,
 //!                       match   = u16 LE distance | varint (len - 4)
 //! ```
+//!
+//! Streams larger than [`PAR_CHUNK`] use the chunked container instead
+//! (magic 0xB4): fixed-size input chunks compressed independently on the
+//! shared [`crate::engine::Executor`] and framed back to back. Chunk
+//! boundaries depend only on the input length, so the bytes are
+//! identical at every thread count; the decoder dispatches on the magic,
+//! so 0xB3 streams from v1 archives keep decoding unchanged.
+//! ```text
+//!   0xB4 | varint raw_len | varint n_chunks |
+//!   n x ( varint chunk_compressed_len | 0xB3 stream )
+//! ```
 
+use crate::engine::Executor;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 
 const MAGIC_LZ: u8 = 0xB3;
+const MAGIC_LZ_CHUNKED: u8 = 0xB4;
 const MIN_MATCH: usize = 4;
 const MAX_DIST: usize = 65_535;
 const HASH_BITS: u32 = 15;
 const MAX_CHAIN: usize = 64;
+
+/// Input-chunk size of the parallel container. Each chunk restarts the
+/// LZ window, trading a sliver of ratio for block parallelism.
+pub const PAR_CHUNK: usize = 256 * 1024;
 
 fn push_varint(out: &mut Vec<u8>, mut v: u64) {
     loop {
@@ -101,7 +118,29 @@ impl<'a> TokenWriter<'a> {
 }
 
 /// Compress bytes (LZSS). Worst case ~12.5% expansion on random data.
+/// Inputs above [`PAR_CHUNK`] use the chunked block-parallel container.
 pub fn lossless_compress(data: &[u8]) -> Result<Vec<u8>> {
+    if data.len() > PAR_CHUNK {
+        return lossless_compress_chunked(data);
+    }
+    lossless_compress_single(data)
+}
+
+fn lossless_compress_chunked(data: &[u8]) -> Result<Vec<u8>> {
+    let chunks: Vec<&[u8]> = data.chunks(PAR_CHUNK).collect();
+    let parts =
+        Executor::global().try_par_map(chunks.len(), |i| lossless_compress_single(chunks[i]))?;
+    let mut out = vec![MAGIC_LZ_CHUNKED];
+    push_varint(&mut out, data.len() as u64);
+    push_varint(&mut out, parts.len() as u64);
+    for p in &parts {
+        push_varint(&mut out, p.len() as u64);
+        out.extend_from_slice(p);
+    }
+    Ok(out)
+}
+
+fn lossless_compress_single(data: &[u8]) -> Result<Vec<u8>> {
     let mut out = vec![MAGIC_LZ];
     push_varint(&mut out, data.len() as u64);
     if data.is_empty() {
@@ -180,8 +219,63 @@ pub fn lossless_compress(data: &[u8]) -> Result<Vec<u8>> {
 }
 
 /// Decompress a [`lossless_compress`] stream; `max_size` caps the output
-/// as a safety bound against corrupt archives.
+/// as a safety bound against corrupt archives. Dispatches on the magic:
+/// plain 0xB3 streams (v1 archives) and chunked 0xB4 containers both
+/// decode.
 pub fn lossless_decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+    ensure!(!data.is_empty(), "lossless: empty input");
+    match data[0] {
+        MAGIC_LZ => lossless_decompress_single(data, max_size),
+        MAGIC_LZ_CHUNKED => lossless_decompress_chunked(data, max_size),
+        m => bail!("lossless: bad magic {m:#04x}"),
+    }
+}
+
+fn lossless_decompress_chunked(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+    let mut pos = 1usize;
+    let raw_len = read_varint(data, &mut pos)? as usize;
+    ensure!(
+        raw_len <= max_size,
+        "lossless: declared size {raw_len} exceeds cap {max_size}"
+    );
+    let n_chunks = read_varint(data, &mut pos)? as usize;
+    // every chunk needs at least its length varint + magic + raw varint
+    ensure!(
+        n_chunks <= data.len().saturating_sub(pos).max(1),
+        "lossless: {n_chunks} chunks impossible in {} bytes",
+        data.len()
+    );
+    ensure!(
+        n_chunks == raw_len.div_ceil(PAR_CHUNK).max(1),
+        "lossless: chunk count {n_chunks} inconsistent with size {raw_len}"
+    );
+    let mut spans = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        let clen = read_varint(data, &mut pos)? as usize;
+        let end = pos
+            .checked_add(clen)
+            .ok_or_else(|| anyhow::anyhow!("lossless: chunk length overflow"))?;
+        ensure!(end <= data.len(), "lossless: chunk truncated");
+        spans.push(&data[pos..end]);
+        pos = end;
+    }
+    ensure!(pos == data.len(), "lossless: {} trailing bytes", data.len() - pos);
+    let parts = Executor::global().try_par_map(spans.len(), |i| {
+        lossless_decompress_single(spans[i], PAR_CHUNK)
+    })?;
+    let mut out = Vec::with_capacity(raw_len);
+    for p in parts {
+        out.extend(p);
+    }
+    ensure!(
+        out.len() == raw_len,
+        "lossless: chunked payload {} != declared {raw_len}",
+        out.len()
+    );
+    Ok(out)
+}
+
+fn lossless_decompress_single(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
     ensure!(!data.is_empty(), "lossless: empty input");
     if data[0] != MAGIC_LZ {
         bail!("lossless: bad magic {:#04x}", data[0]);
@@ -307,6 +401,47 @@ mod tests {
         let c = lossless_compress(&data).unwrap();
         assert!(c.len() < 64, "run should collapse, got {}", c.len());
         assert_eq!(lossless_decompress(&c, data.len()).unwrap(), data);
+    }
+
+    fn big_structured(len: usize) -> Vec<u8> {
+        let mut rng = Rng::new(21);
+        let mut data = Vec::with_capacity(len);
+        while data.len() < len {
+            let run = 1 + (rng.next_u64() % 32) as usize;
+            let byte = (rng.next_u64() % 7) as u8 * 31;
+            data.extend(std::iter::repeat(byte).take(run.min(len - data.len())));
+        }
+        data
+    }
+
+    #[test]
+    fn chunked_container_round_trips() {
+        // > PAR_CHUNK triggers the block-parallel 0xB4 container
+        let data = big_structured(PAR_CHUNK * 2 + 12_345);
+        let c = lossless_compress(&data).unwrap();
+        assert_eq!(c[0], super::MAGIC_LZ_CHUNKED);
+        assert!(c.len() < data.len());
+        assert_eq!(lossless_decompress(&c, data.len()).unwrap(), data);
+        // cap enforced on the container too
+        assert!(lossless_decompress(&c, data.len() - 1).is_err());
+    }
+
+    #[test]
+    fn chunked_bytes_identical_at_any_thread_count() {
+        let data = big_structured(PAR_CHUNK + 999);
+        let parallel = lossless_compress(&data).unwrap();
+        let serial =
+            crate::util::parallel::with_thread_limit(1, || lossless_compress(&data).unwrap());
+        assert_eq!(parallel, serial);
+    }
+
+    #[test]
+    fn chunked_truncation_errors_never_panic() {
+        let data = big_structured(PAR_CHUNK + 10);
+        let c = lossless_compress(&data).unwrap();
+        for cut in [0, 1, 2, c.len() / 2, c.len() - 1] {
+            assert!(lossless_decompress(&c[..cut], data.len()).is_err(), "cut {cut}");
+        }
     }
 
     #[test]

@@ -49,9 +49,13 @@ impl Quantizer {
         code as f32 * self.bin
     }
 
-    /// Quantize a whole slice to codes.
+    /// Quantize a whole slice to codes. Large slices fan out over the
+    /// shared executor in fixed 16 Ki-element chunks, so the code stream
+    /// is identical at every thread count.
     pub fn codes(&self, xs: &[f32]) -> Vec<i32> {
-        xs.iter().map(|&x| self.code(x)).collect()
+        crate::util::parallel::par_flat_map_chunks(xs, 16 * 1024, |_, chunk| {
+            chunk.iter().map(|&x| self.code(x)).collect()
+        })
     }
 
     /// Dequantize a whole slice.

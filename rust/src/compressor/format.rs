@@ -1,12 +1,12 @@
 //! Compressed archive container (DESIGN.md §5).
 //!
-//! Layout (little-endian):
+//! Layout (little-endian), shared by both container versions:
 //! ```text
 //!   "ARDC" | u16 version | u32 header_len | header JSON (UTF-8) |
 //!   u32 n_sections | n x ( [u8;4] tag | u64 len | bytes )
 //! ```
 //!
-//! Sections used by the codecs:
+//! **Version 1** is a single-field archive. Sections used by the codecs:
 //!   HLAT — HBAE latent codes (Huffman)        } counted in CR
 //!   BLAT — BAE latent codes (Huffman)         } counted in CR
 //!   GLAT — GBAE primary latent codes          } counted in CR
@@ -18,15 +18,27 @@
 //!   GBAS — PCA basis, f32 (amortized like model params — the paper's CR
 //!          counts latents + coefficients + index info; §III-C)
 //!
+//! **Version 2** is the multi-field *dataset container* produced by
+//! [`crate::engine::CodecExt::compress_set`]: section `F000`..`F999`
+//! holds field *i*'s complete v1 archive, and the header carries the
+//! field-name list (`fields`) plus the shared per-field stats dictionary
+//! (`stats`). CR accounting recurses into the embedded field archives —
+//! payload sections only, headers excluded — so multi-field ratios match
+//! the paper's accounting.
+//!
 //! Unknown section tags are preserved verbatim by the parser, so newer
-//! writers stay readable by older readers (forward compatibility).
+//! writers stay readable by older readers (forward compatibility), and
+//! v1 archives parse and decompress unchanged (backward compatibility).
 
 use crate::util::json::Value;
 use crate::Result;
 use anyhow::{bail, ensure};
 
 const MAGIC: &[u8; 4] = b"ARDC";
-const VERSION: u16 = 1;
+/// Single-field archive (the seed format — still written by every codec).
+pub const VERSION_V1: u16 = 1;
+/// Multi-field dataset container (engine `compress_set`).
+pub const VERSION_V2: u16 = 2;
 
 /// Sections whose bytes count toward the paper's compression ratio.
 pub const CR_SECTIONS: [&str; 8] =
@@ -36,12 +48,85 @@ pub const CR_SECTIONS: [&str; 8] =
 #[derive(Debug, Clone)]
 pub struct Archive {
     pub header: Value,
+    version: u16,
     sections: Vec<(String, Vec<u8>)>,
 }
 
 impl Archive {
     pub fn new(header: Value) -> Self {
-        Self { header, sections: Vec::new() }
+        Self { header, version: VERSION_V1, sections: Vec::new() }
+    }
+
+    /// A new (empty) multi-field v2 container.
+    pub fn new_v2(header: Value) -> Self {
+        Self { header, version: VERSION_V2, sections: Vec::new() }
+    }
+
+    /// Container version (1 = single field, 2 = multi-field set).
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Is this a multi-field dataset container?
+    pub fn is_multi_field(&self) -> bool {
+        self.version == VERSION_V2
+    }
+
+    /// Section tag of field `i` in a v2 container.
+    pub fn field_tag(i: usize) -> String {
+        assert!(i < 1000, "v2 containers hold at most 1000 fields");
+        format!("F{i:03}")
+    }
+
+    /// Field names recorded in a v2 header, in section order. Every
+    /// entry must be a string — silently dropping a malformed entry
+    /// would misalign names with `F`-section indices.
+    pub fn field_names(&self) -> Result<Vec<String>> {
+        ensure!(self.version == VERSION_V2, "not a multi-field container");
+        self.header
+            .req("fields")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("v2 header `fields` is not an array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.as_str().map(String::from).ok_or_else(|| {
+                    anyhow::anyhow!("v2 header `fields[{i}]` is not a string")
+                })
+            })
+            .collect()
+    }
+
+    /// Number of embedded field archives in a v2 container.
+    pub fn field_count(&self) -> usize {
+        self.sections
+            .iter()
+            .filter(|(t, _)| Self::is_field_tag(t))
+            .count()
+    }
+
+    fn is_field_tag(tag: &str) -> bool {
+        tag.len() == 4
+            && tag.starts_with('F')
+            && tag[1..].bytes().all(|b| b.is_ascii_digit())
+    }
+
+    /// Append a field's complete v1 archive to a v2 container.
+    pub fn add_field_archive(&mut self, sub: &Archive) {
+        assert_eq!(self.version, VERSION_V2, "field sections only in v2");
+        let tag = Self::field_tag(self.field_count());
+        self.add_section(&tag, sub.to_bytes());
+    }
+
+    /// Parse the embedded v1 archive of field `i` in a v2 container.
+    pub fn field_archive(&self, i: usize) -> Result<Archive> {
+        ensure!(self.version == VERSION_V2, "not a multi-field container");
+        let sub = Archive::from_bytes(self.section(&Self::field_tag(i))?)?;
+        ensure!(
+            sub.version == VERSION_V1,
+            "nested multi-field containers are not supported"
+        );
+        Ok(sub)
     }
 
     pub fn add_section(&mut self, tag: &str, bytes: Vec<u8>) {
@@ -90,13 +175,54 @@ impl Archive {
             .ok_or_else(|| anyhow::anyhow!("header field {key:?} is not a string"))
     }
 
+    /// Per-section sizes. In a v2 container the embedded field archives
+    /// are expanded, entries namespaced `"<field>/<TAG>"` (field name
+    /// from the header, falling back to the section tag), so multi-field
+    /// reports stay per-section like single-field ones.
     pub fn section_sizes(&self) -> Vec<(String, usize)> {
-        self.sections.iter().map(|(t, b)| (t.clone(), b.len())).collect()
+        if self.version != VERSION_V2 {
+            return self.sections.iter().map(|(t, b)| (t.clone(), b.len())).collect();
+        }
+        let names = self.field_names().unwrap_or_default();
+        let mut out = Vec::new();
+        let mut fi = 0usize;
+        for (tag, bytes) in &self.sections {
+            if Self::is_field_tag(tag) {
+                let field = names.get(fi).cloned().unwrap_or_else(|| tag.clone());
+                fi += 1;
+                match Archive::from_bytes(bytes) {
+                    Ok(sub) => {
+                        for (t, sz) in sub.section_sizes() {
+                            out.push((format!("{field}/{t}"), sz));
+                        }
+                    }
+                    Err(_) => out.push((tag.clone(), bytes.len())),
+                }
+            } else {
+                out.push((tag.clone(), bytes.len()));
+            }
+        }
+        out
     }
 
     /// Bytes counted toward the paper's CR (latents + GAE coeffs + index
     /// info; basis and header excluded, like the paper's accounting).
+    ///
+    /// For a v2 container this recurses into every embedded field
+    /// archive and sums *their* payload sections — the per-field headers
+    /// and the container framing are excluded, so the set's CR equals
+    /// `total_points(all fields) / sum(per-field payload)` exactly as if
+    /// each field were measured alone.
     pub fn cr_payload_bytes(&self) -> usize {
+        if self.version == VERSION_V2 {
+            return self
+                .sections
+                .iter()
+                .filter(|(t, _)| Self::is_field_tag(t))
+                .filter_map(|(_, b)| Archive::from_bytes(b).ok())
+                .map(|sub| sub.cr_payload_bytes())
+                .sum();
+        }
         self.sections
             .iter()
             .filter(|(t, _)| CR_SECTIONS.contains(&t.as_str()))
@@ -122,7 +248,7 @@ impl Archive {
         let header = self.header.to_string_compact().into_bytes();
         let mut out = Vec::with_capacity(self.total_bytes());
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
         out.extend_from_slice(&(header.len() as u32).to_le_bytes());
         out.extend_from_slice(&header);
         out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
@@ -143,7 +269,10 @@ impl Archive {
             bail!("not an ARDC archive");
         }
         let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
-        ensure!(version == VERSION, "unsupported archive version {version}");
+        ensure!(
+            version == VERSION_V1 || version == VERSION_V2,
+            "unsupported archive version {version}"
+        );
         let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
         let header_end = 10usize
             .checked_add(hlen)
@@ -179,7 +308,7 @@ impl Archive {
             sections.push((tag, bytes[off..end].to_vec()));
             off = end;
         }
-        Ok(Self { header, sections })
+        Ok(Self { header, version, sections })
     }
 
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
@@ -268,6 +397,71 @@ mod tests {
         // existing keys untouched
         assert_eq!(a.header_str("dataset").unwrap(), "s3d");
         assert!(a.header_str("nope").is_err());
+    }
+
+    fn sample_v2() -> Archive {
+        // two embedded single-field archives with different payloads
+        let mut f0 = Archive::new(json::obj(vec![("codec", json::s("sz3"))]));
+        f0.add_section("SZ3B", vec![7; 10]);
+        f0.add_section("GBAS", vec![1; 40]); // basis: never counted
+        let mut f1 = Archive::new(json::obj(vec![("codec", json::s("sz3"))]));
+        f1.add_section("SZ3B", vec![8; 25]);
+        let mut v2 = Archive::new_v2(json::obj(vec![
+            ("codec", json::s("sz3")),
+            (
+                "fields",
+                Value::Arr(vec![json::s("temp"), json::s("pressure")]),
+            ),
+        ]));
+        v2.add_field_archive(&f0);
+        v2.add_field_archive(&f1);
+        v2
+    }
+
+    #[test]
+    fn v2_round_trips_with_version_and_fields() {
+        let v2 = sample_v2();
+        assert_eq!(v2.version(), VERSION_V2);
+        assert!(v2.is_multi_field());
+        let back = Archive::from_bytes(&v2.to_bytes()).unwrap();
+        assert_eq!(back.version(), VERSION_V2);
+        assert_eq!(back.field_count(), 2);
+        assert_eq!(back.field_names().unwrap(), vec!["temp", "pressure"]);
+        let f1 = back.field_archive(1).unwrap();
+        assert_eq!(f1.section("SZ3B").unwrap(), &[8; 25]);
+        assert!(back.field_archive(2).is_err());
+    }
+
+    #[test]
+    fn v2_accounting_counts_per_field_payload_only() {
+        // pins the paper accounting for multi-field containers: the CR
+        // payload is the sum of the embedded archives' payload sections
+        // (10 + 25 here) — per-field headers, the GBAS basis, and the
+        // container framing are all excluded
+        let v2 = sample_v2();
+        assert_eq!(v2.cr_payload_bytes(), 10 + 25);
+        // and it survives serialization
+        let back = Archive::from_bytes(&v2.to_bytes()).unwrap();
+        assert_eq!(back.cr_payload_bytes(), 35);
+        // total bytes count everything (framing + embedded headers)
+        assert!(back.total_bytes() > 35 + 40);
+        // section sizes are expanded and namespaced by field name
+        let sizes = back.section_sizes();
+        assert!(sizes.contains(&("temp/SZ3B".to_string(), 10)));
+        assert!(sizes.contains(&("temp/GBAS".to_string(), 40)));
+        assert!(sizes.contains(&("pressure/SZ3B".to_string(), 25)));
+    }
+
+    #[test]
+    fn v1_archives_still_parse_as_single_field() {
+        let a = sample();
+        assert_eq!(a.version(), VERSION_V1);
+        assert!(!a.is_multi_field());
+        let back = Archive::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(back.version(), VERSION_V1);
+        assert!(back.field_names().is_err());
+        // the F-tag filter never hides ordinary v1 sections
+        assert_eq!(back.cr_payload_bytes(), 3);
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::coder::{
 };
 use crate::config::{DatasetConfig, Normalization};
 use crate::data::NormStats;
+use crate::engine::Executor;
 use crate::linalg::{norm2_f32, Pca};
 use crate::tensor::{block_origins, extract_block, scatter_block, Tensor};
 use crate::util::parallel::par_map;
@@ -71,76 +72,81 @@ pub fn gae_apply(
     }
     let pca = Pca::fit(&residuals, d)?;
 
-    // Algorithm 1 per block, in parallel; corrections are applied to the
-    // recon rows afterwards (each row owned by exactly one result).
-    let results: Vec<(BlockCorrection, Vec<f32>)> = par_map(n_blocks, |b| {
-        let x = &orig[b * d..(b + 1) * d];
-        let xr = &recon[b * d..(b + 1) * d];
-        let tau = taus[b] as f64;
-        let r = &residuals[b * d..(b + 1) * d];
-        let delta = norm2_f32(r);
-        if delta <= tau {
-            return (BlockCorrection::default(), Vec::new());
-        }
-        let q = Quantizer::new(coeff_bin(taus[b], d));
-        // project and sort coefficients by energy (Alg. 1 line 6)
-        let mut c = vec![0.0f64; d];
-        pca.project(r, &mut c);
-        let mut order: Vec<usize> = (0..d).collect();
-        order.sort_by(|&i, &j| (c[j] * c[j]).partial_cmp(&(c[i] * c[i])).unwrap());
+    // Algorithm 1 per block, in parallel on the shared executor (scratch
+    // arenas hold the per-block coefficient vector); corrections are
+    // applied to the recon rows afterwards (each row owned by exactly
+    // one result).
+    let results: Vec<(BlockCorrection, Vec<f32>)> =
+        Executor::global().par_map_scratch(n_blocks, |b, scratch| {
+            let x = &orig[b * d..(b + 1) * d];
+            let xr = &recon[b * d..(b + 1) * d];
+            let tau = taus[b] as f64;
+            let r = &residuals[b * d..(b + 1) * d];
+            let delta = norm2_f32(r);
+            if delta <= tau {
+                return (BlockCorrection::default(), Vec::new());
+            }
+            let q = Quantizer::new(coeff_bin(taus[b], d));
+            // project and sort coefficients by energy (Alg. 1 line 6)
+            scratch.f64_a.clear();
+            scratch.f64_a.resize(d, 0.0);
+            let c = &mut scratch.f64_a;
+            pca.project(r, c);
+            let mut order: Vec<usize> = (0..d).collect();
+            order.sort_by(|&i, &j| (c[j] * c[j]).partial_cmp(&(c[i] * c[i])).unwrap());
 
-        // greedy: add quantized coefficients until the bound holds
-        let mut corrected: Vec<f32> = xr.to_vec();
-        let mut sel_idx: Vec<usize> = Vec::new();
-        let mut sel_codes: Vec<i32> = Vec::new();
-        let mut m = 0usize;
-        loop {
-            // extend selection (Alg. 1 lines 9-13); batch a few per exact
-            // norm check to amortize the O(d) reconstruction cost
-            let add = ((d - m) / 8).clamp(1, 16);
-            let mut grew = false;
-            for &j in order.iter().skip(m).take(add) {
-                let code = q.code(c[j] as f32);
-                if code == 0 {
-                    continue; // contributes nothing after quantization
+            // greedy: add quantized coefficients until the bound holds
+            let mut corrected: Vec<f32> = xr.to_vec();
+            let mut sel_idx: Vec<usize> = Vec::new();
+            let mut sel_codes: Vec<i32> = Vec::new();
+            let mut m = 0usize;
+            loop {
+                // extend selection (Alg. 1 lines 9-13); batch a few per exact
+                // norm check to amortize the O(d) reconstruction cost
+                let add = ((d - m) / 8).clamp(1, 16);
+                let mut grew = false;
+                for &j in order.iter().skip(m).take(add) {
+                    let code = q.code(c[j] as f32);
+                    if code == 0 {
+                        continue; // contributes nothing after quantization
+                    }
+                    let cq = q.dequant(code) as f64;
+                    for i in 0..d {
+                        corrected[i] += (pca.basis[i * d + j] * cq) as f32;
+                    }
+                    sel_idx.push(j);
+                    sel_codes.push(code);
+                    grew = true;
                 }
-                let cq = q.dequant(code) as f64;
+                m += add;
+                // exact bound check (Alg. 1 line 12)
+                let mut sq = 0.0f64;
                 for i in 0..d {
-                    corrected[i] += (pca.basis[i * d + j] * cq) as f32;
+                    let e = x[i] as f64 - corrected[i] as f64;
+                    sq += e * e;
                 }
-                sel_idx.push(j);
-                sel_codes.push(code);
-                grew = true;
-            }
-            m += add;
-            // exact bound check (Alg. 1 line 12)
-            let mut sq = 0.0f64;
-            for i in 0..d {
-                let e = x[i] as f64 - corrected[i] as f64;
-                sq += e * e;
-            }
-            if sq.sqrt() <= tau {
-                break;
-            }
-            if m >= d {
-                // with bin = tau/(2*sqrt(d)) a full selection is within
-                // tau/4 of exact recovery; reaching here means the basis
-                // itself is degenerate — grew guards infinite loops.
-                if !grew {
+                if sq.sqrt() <= tau {
                     break;
                 }
+                if m >= d {
+                    // with bin = tau/(2*sqrt(d)) a full selection is within
+                    // tau/4 of exact recovery; reaching here means the basis
+                    // itself is degenerate — grew guards infinite loops.
+                    if !grew {
+                        break;
+                    }
+                }
             }
-        }
-        // sort selection ascending for the index-set codec
-        let mut pairs: Vec<(usize, i32)> =
-            sel_idx.into_iter().zip(sel_codes).collect();
-        pairs.sort_unstable_by_key(|&(j, _)| j);
-        let corr = BlockCorrection {
-            indices: pairs.iter().map(|&(j, _)| j).collect(),
-            codes: pairs.iter().map(|&(_, code)| code).collect(),
-        };
-        (corr, corrected)
-    });
+            // sort selection ascending for the index-set codec
+            let mut pairs: Vec<(usize, i32)> =
+                sel_idx.into_iter().zip(sel_codes).collect();
+            pairs.sort_unstable_by_key(|&(j, _)| j);
+            let corr = BlockCorrection {
+                indices: pairs.iter().map(|&(j, _)| j).collect(),
+                codes: pairs.iter().map(|&(_, code)| code).collect(),
+            };
+            (corr, corrected)
+        });
 
     let mut corrections = Vec::with_capacity(n_blocks);
     let mut corrected_blocks = 0;

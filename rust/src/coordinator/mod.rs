@@ -164,9 +164,9 @@ pub fn stream_forward(
                 batches += 1;
                 let n_here = (total_hb - msg.h0).min(nh_batch);
                 if qh.enabled() {
-                    lh_codes.extend(
-                        msg.lh[..n_here * lh_dim].iter().map(|&v| qh.code(v)),
-                    );
+                    // block-parallel on the shared executor (Quantizer::codes
+                    // chunks deterministically)
+                    lh_codes.extend(qh.codes(&msg.lh[..n_here * lh_dim]));
                 }
                 if qb.enabled() {
                     for hi in 0..n_here {

@@ -1,0 +1,472 @@
+//! [`Executor`] — the shared block-parallel work engine.
+//!
+//! One persistent pool of OS worker threads serves every data-parallel
+//! stage in the crate: the baselines' per-block loops, the GAE bound
+//! stage (Algorithm 1), the lossless coder's chunk streams, the
+//! streaming coordinator's sink stage, and the engine's per-field jobs.
+//! It replaces the previous ad-hoc `std::thread::scope` spawns in
+//! `util/parallel`, which paid a thread spawn/join per call and had no
+//! buffer reuse.
+//!
+//! Design:
+//!
+//! * **Fork-join batches over a persistent pool.** A batch is an index
+//!   range `0..n` drained through an atomic counter (work stealing,
+//!   order-preserving output). The submitting thread participates, so a
+//!   pool of `T` threads yields `T`-way parallelism with `T - 1` workers.
+//! * **Per-thread scratch arenas.** Every pool thread owns a
+//!   [`Scratch`] (thread-local, reused across batches), so per-block
+//!   temporaries (rows, coefficient vectors, transform buffers) stop
+//!   hitting the allocator in hot loops.
+//! * **Panic propagation.** A panicking work item stops the batch and
+//!   the *original payload* is resumed on the submitting thread —
+//!   `par_map` used to abort with a misleading `unwrap` on a `None`
+//!   slot.
+//! * **Deterministic by construction.** Work items are independent and
+//!   outputs land in submission order, so results are byte-identical
+//!   for 1 thread and N threads. Nested batches run inline on the
+//!   already-parallel thread (same structure at every thread count).
+//!
+//! Thread-count resolution lives in [`crate::util::parallel`]:
+//! CLI `--threads` override > `ATTN_REDUCE_THREADS` env > available
+//! parallelism, with a thread-local limit for determinism tests.
+
+use std::cell::{Cell, RefCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+use crate::util::parallel::num_threads;
+
+type Payload = Box<dyn std::any::Any + Send + 'static>;
+
+/// Per-thread reusable buffers. Each pool thread (and the submitting
+/// thread) owns one, persistent across batches — hot loops index into
+/// cleared-and-resized buffers instead of allocating.
+#[derive(Default)]
+pub struct Scratch {
+    pub f32_a: Vec<f32>,
+    pub f32_b: Vec<f32>,
+    pub f64_a: Vec<f64>,
+    pub i64_a: Vec<i64>,
+    pub i32_a: Vec<i32>,
+    pub bytes: Vec<u8>,
+}
+
+/// Clear + zero-fill a scratch `f32` buffer to `len`, returning the slice.
+pub fn reuse_f32(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(len, 0.0);
+    &mut buf[..]
+}
+
+/// Clear + zero-fill a scratch `i64` buffer to `len`, returning the slice.
+pub fn reuse_i64(buf: &mut Vec<i64>, len: usize) -> &mut [i64] {
+    buf.clear();
+    buf.resize(len, 0);
+    &mut buf[..]
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// RAII guard marking this thread as executing pool work (nested batches
+/// run inline — identical structure at every thread count, and no
+/// deadlock on the single batch slot).
+struct PoolGuard {
+    prev: bool,
+}
+
+impl PoolGuard {
+    fn enter() -> Self {
+        let prev = IN_POOL.with(|f| f.replace(true));
+        Self { prev }
+    }
+}
+
+impl Drop for PoolGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL.with(|f| f.set(prev));
+    }
+}
+
+/// Type-erased handle to the in-flight batch (fn pointer + pointer to a
+/// stack-allocated `BatchData` in the submitter's frame). Sound because
+/// the submitter blocks until every worker has finished the batch.
+#[derive(Clone, Copy)]
+struct JobSlot {
+    run: unsafe fn(*const (), usize),
+    data: *const (),
+}
+
+// SAFETY: the pointers are only dereferenced while the submitting
+// thread keeps the batch alive (it waits for `remaining == 0`).
+unsafe impl Send for JobSlot {}
+
+struct State {
+    epoch: u64,
+    job: Option<JobSlot>,
+    /// Workers that have not yet finished (or skipped) the current batch.
+    remaining: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work_cv: Condvar,
+    /// Submitters wait here for batch completion / a free job slot.
+    done_cv: Condvar,
+}
+
+struct BatchData<'a, T, F> {
+    next: &'a AtomicUsize,
+    n: usize,
+    /// Total participants (submitter + workers `0..limit-1`).
+    limit: usize,
+    f: &'a F,
+    out: *mut Option<T>,
+    panic: &'a Mutex<Option<Payload>>,
+}
+
+fn drain<T, F>(b: &BatchData<'_, T, F>)
+where
+    T: Send,
+    F: Fn(usize, &mut Scratch) -> T + Sync,
+{
+    SCRATCH.with(|cell| {
+        let mut borrow = cell.borrow_mut();
+        let scratch: &mut Scratch = &mut borrow;
+        loop {
+            let i = b.next.fetch_add(1, Ordering::Relaxed);
+            if i >= b.n {
+                break;
+            }
+            match catch_unwind(AssertUnwindSafe(|| (b.f)(i, &mut *scratch))) {
+                // SAFETY: index `i` is claimed exactly once via the
+                // atomic counter; the output vec outlives the batch.
+                Ok(v) => unsafe { *b.out.add(i) = Some(v) },
+                Err(payload) => {
+                    let mut slot = b.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    b.next.store(b.n, Ordering::Relaxed); // stop the batch
+                    break;
+                }
+            }
+        }
+    });
+}
+
+unsafe fn run_batch<T, F>(data: *const (), worker_id: usize)
+where
+    T: Send,
+    F: Fn(usize, &mut Scratch) -> T + Sync,
+{
+    let b = &*(data as *const BatchData<'_, T, F>);
+    // the submitter occupies one participant slot; workers beyond the
+    // batch's effective thread count just report done
+    if worker_id + 1 < b.limit {
+        drain(b);
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = st.job {
+                        seen = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        {
+            let _guard = PoolGuard::enter();
+            // SAFETY: the submitter keeps the batch alive until we
+            // decrement `remaining` below.
+            unsafe { (job.run)(job.data, id) };
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Persistent fork-join worker pool with per-thread scratch arenas.
+pub struct Executor {
+    shared: &'static Shared,
+    workers: usize,
+    /// Join handles, present only for non-global executors (tests).
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Pool sized for `threads`-way parallelism (the submitting thread
+    /// counts as one; `threads - 1` workers are spawned).
+    pub fn new(threads: usize) -> Self {
+        let workers = threads.max(1) - 1;
+        // leaked so worker threads can hold a 'static reference; an
+        // Executor is either the process-wide global or a short-lived
+        // test fixture, so the leak is bounded and intentional
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }));
+        let handles = (0..workers)
+            .map(|id| {
+                std::thread::Builder::new()
+                    .name(format!("attn-exec-{id}"))
+                    .spawn(move || worker_loop(shared, id))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Self { shared, workers, handles }
+    }
+
+    /// The process-wide pool, sized once from the thread policy at first
+    /// use. Capacity is capped at `max(available_parallelism, 64)` so an
+    /// absurd `--threads`/`ATTN_REDUCE_THREADS` value cannot spawn
+    /// unbounded OS threads; requests above the cap simply use every
+    /// pool thread (per-batch `eff` is re-derived from the policy).
+    pub fn global() -> &'static Executor {
+        static GLOBAL: OnceLock<Executor> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            Executor::new(num_threads().clamp(avail, avail.max(64)))
+        })
+    }
+
+    /// Maximum parallelism this pool can deliver (workers + submitter).
+    pub fn capacity(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Parallel map preserving order: `out[i] = f(i, scratch)`. Panics in
+    /// `f` stop the batch and are re-raised with the original payload.
+    pub fn par_map_scratch<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut Scratch) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        // nested batch (already on a pool thread): run inline with a
+        // fresh scratch — the thread-local one is borrowed by the outer
+        // batch's drain
+        if IN_POOL.with(|flag| flag.get()) {
+            let mut scratch = Scratch::default();
+            return (0..n).map(|i| f(i, &mut scratch)).collect();
+        }
+        let eff = num_threads().min(n).min(self.capacity());
+        if eff <= 1 {
+            let _guard = PoolGuard::enter();
+            return SCRATCH.with(|cell| {
+                let mut borrow = cell.borrow_mut();
+                let scratch: &mut Scratch = &mut borrow;
+                (0..n).map(|i| f(i, &mut *scratch)).collect()
+            });
+        }
+
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let next = AtomicUsize::new(0);
+        let panic_slot: Mutex<Option<Payload>> = Mutex::new(None);
+        let batch = BatchData {
+            next: &next,
+            n,
+            limit: eff,
+            f: &f,
+            out: out.as_mut_ptr(),
+            panic: &panic_slot,
+        };
+
+        // install the batch (one in flight at a time; concurrent
+        // submitters queue on the slot)
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.job.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = Some(JobSlot {
+                run: run_batch::<T, F>,
+                data: &batch as *const _ as *const (),
+            });
+            st.epoch = st.epoch.wrapping_add(1);
+            st.remaining = self.workers;
+            self.shared.work_cv.notify_all();
+        }
+
+        // the submitter is participant number `limit - 1`
+        {
+            let _guard = PoolGuard::enter();
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| drain(&batch))) {
+                let mut slot = panic_slot.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+                next.store(n, Ordering::Relaxed);
+            }
+        }
+
+        // wait for every worker to finish (or skip) the batch, then free
+        // the slot for queued submitters
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining != 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            self.shared.done_cv.notify_all();
+        }
+
+        if let Some(payload) = panic_slot.into_inner().unwrap() {
+            resume_unwind(payload);
+        }
+        out.into_iter()
+            .map(|slot| slot.expect("executor: unfilled output slot"))
+            .collect()
+    }
+
+    /// [`Self::par_map_scratch`] without the scratch argument.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.par_map_scratch(n, |i, _| f(i))
+    }
+
+    /// Fallible parallel map: all items run (no short-circuit), then the
+    /// first error by index is returned.
+    pub fn try_par_map<T, F>(&self, n: usize, f: F) -> crate::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> crate::Result<T> + Sync,
+    {
+        let results = self.par_map(n, f);
+        results.into_iter().collect()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_reuses_pool() {
+        let ex = Executor::new(4);
+        for round in 0..5 {
+            let out = ex.par_map(257, |i| i * 2 + round);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * 2 + round);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_are_reused() {
+        let ex = Executor::new(3);
+        // first round grows the arena; later rounds must see capacity
+        let caps: Vec<usize> = ex.par_map_scratch(64, |_, s| {
+            reuse_f32(&mut s.f32_a, 4096);
+            s.f32_a.capacity()
+        });
+        assert!(caps.iter().all(|&c| c >= 4096));
+        let again = ex.par_map_scratch(64, |_, s| s.f32_a.capacity());
+        // at least the submitting thread's arena persists across batches
+        assert!(again.iter().any(|&c| c >= 4096));
+    }
+
+    #[test]
+    fn propagates_original_panic_payload() {
+        let ex = Executor::new(4);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            ex.par_map(100, |i| {
+                if i == 37 {
+                    panic!("work item {i} exploded");
+                }
+                i
+            })
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("work item 37 exploded"), "payload lost: {msg:?}");
+        // pool still usable after a panicked batch
+        assert_eq!(ex.par_map(8, |i| i), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_batches_run_inline() {
+        let ex = Executor::new(4);
+        let out = ex.par_map(16, |i| {
+            // nested call on a pool thread: must not deadlock
+            let inner = Executor::global().par_map(8, move |j| i * 8 + j);
+            inner.iter().sum::<usize>()
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (0..8).map(|j| i * 8 + j).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn try_par_map_reports_first_error_by_index() {
+        let ex = Executor::new(4);
+        let r = ex.try_par_map(50, |i| {
+            if i == 20 || i == 31 {
+                anyhow::bail!("item {i} failed")
+            }
+            Ok(i)
+        });
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("item 20"), "{msg}");
+        let ok = ex
+            .try_par_map(4, |i| -> crate::Result<usize> { Ok(i * 2) })
+            .unwrap();
+        assert_eq!(ok, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let ex = Executor::new(2);
+        assert!(ex.par_map(0, |i| i).is_empty());
+        assert_eq!(ex.par_map(1, |i| i + 9), vec![9]);
+    }
+}

@@ -1,0 +1,191 @@
+//! [`FieldSet`] — a named collection of variables over one dataset
+//! geometry.
+//!
+//! The paper's headline S3D result is a *multi-variable* dataset (100+
+//! species per grid point); E3SM restart files likewise carry many
+//! climate variables on the same grid. A `FieldSet` models that: every
+//! field shares the [`DatasetConfig`] dims / blocking / normalization
+//! policy, and the engine compresses the whole set into one Archive v2
+//! container ([`super::CodecExt::compress_set`]).
+
+use crate::config::{dataset_preset, DatasetConfig, DatasetKind, Scale};
+use crate::data;
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Named fields sharing one dataset geometry.
+#[derive(Debug, Clone)]
+pub struct FieldSet {
+    dataset: DatasetConfig,
+    names: Vec<String>,
+    fields: Vec<Tensor>,
+}
+
+impl FieldSet {
+    /// An empty set over `dataset`'s geometry.
+    pub fn new(dataset: DatasetConfig) -> Self {
+        Self { dataset, names: Vec::new(), fields: Vec::new() }
+    }
+
+    /// Add a field. Its shape must match the dataset dims, and names must
+    /// be unique within the set and filesystem-safe: archive headers are
+    /// untrusted input, and v2 decompression splices field names into
+    /// output paths, so path separators and control bytes are rejected
+    /// here (the one choke point both compress and decompress go through).
+    pub fn push(&mut self, name: impl Into<String>, field: Tensor) -> Result<()> {
+        let name = name.into();
+        ensure!(
+            !name.is_empty() && name.len() <= 128,
+            "field name must be 1..=128 bytes"
+        );
+        ensure!(
+            !name
+                .chars()
+                .any(|c| c == '/' || c == '\\' || c == ':' || c.is_control()),
+            "field name {name:?} contains path separators or control characters"
+        );
+        ensure!(
+            field.shape() == &self.dataset.dims[..],
+            "field {name:?} shape {:?} != dataset dims {:?}",
+            field.shape(),
+            self.dataset.dims
+        );
+        if self.names.iter().any(|n| *n == name) {
+            bail!("duplicate field name {name:?} in set");
+        }
+        self.names.push(name);
+        self.fields.push(field);
+        Ok(())
+    }
+
+    /// Synthesize a multi-variable set from a dataset preset: `n_vars`
+    /// fields named `var00..`, each generated with a distinct seed so the
+    /// variables are decorrelated (like distinct species / restart
+    /// variables).
+    pub fn generate(kind: DatasetKind, scale: Scale, n_vars: usize) -> Self {
+        let base = dataset_preset(kind, scale);
+        let mut set = Self::new(base.clone());
+        for v in 0..n_vars {
+            let mut cfg = base.clone();
+            cfg.seed = base.seed.wrapping_add(1000 * (v as u64 + 1));
+            let field = data::generate(&cfg);
+            set.push(format!("var{v:02}"), field).expect("generated field fits preset");
+        }
+        set
+    }
+
+    /// Load fields from raw `.f32` files; each file name (stem) becomes
+    /// the field name.
+    pub fn from_files<P: AsRef<std::path::Path>>(
+        dataset: DatasetConfig,
+        paths: &[P],
+    ) -> Result<Self> {
+        let mut set = Self::new(dataset);
+        for p in paths {
+            let p = p.as_ref();
+            let name = p
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .map(String::from)
+                .unwrap_or_else(|| format!("field{:02}", set.len()));
+            let field = data::read_f32_file(p, set.dataset.dims.clone())?;
+            set.push(name, field)?;
+        }
+        Ok(set)
+    }
+
+    pub fn dataset(&self) -> &DatasetConfig {
+        &self.dataset
+    }
+
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn field(&self, i: usize) -> &Tensor {
+        &self.fields[i]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.fields[i])
+    }
+
+    /// `(name, field)` pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(|n| n.as_str()).zip(self.fields.iter())
+    }
+
+    /// Total points across all fields (the CR numerator for a set).
+    pub fn total_points(&self) -> usize {
+        self.dataset.total_points() * self.fields.len()
+    }
+
+    /// Raw f32 bytes across all fields.
+    pub fn raw_bytes(&self) -> usize {
+        self.total_points() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_makes_distinct_named_variables() {
+        let set = FieldSet::generate(DatasetKind::S3d, Scale::Smoke, 3);
+        assert_eq!(set.len(), 3);
+        assert_eq!(set.names(), &["var00", "var01", "var02"]);
+        assert_eq!(set.field(0).shape(), &set.dataset().dims[..]);
+        assert_ne!(set.field(0).data(), set.field(1).data());
+        assert_eq!(set.total_points(), set.dataset().total_points() * 3);
+        assert!(set.by_name("var01").is_some());
+        assert!(set.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn push_validates_shape_and_name() {
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let good = data::generate(&cfg);
+        let mut set = FieldSet::new(cfg);
+        set.push("t", good.clone()).unwrap();
+        assert!(set.push("t", good.clone()).is_err(), "duplicate name");
+        let bad = Tensor::zeros(vec![2, 2]);
+        assert!(set.push("u", bad).is_err(), "shape mismatch");
+        assert_eq!(set.len(), 1);
+    }
+
+    #[test]
+    fn push_rejects_path_traversal_names() {
+        // v2 headers are untrusted; names are spliced into output paths
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let good = data::generate(&cfg);
+        let mut set = FieldSet::new(cfg);
+        for bad in ["../../escape", "a/b", "a\\b", "C:evil", "", "x\0y"] {
+            assert!(set.push(bad, good.clone()).is_err(), "{bad:?} accepted");
+        }
+        set.push("ok_name-1.2", good).unwrap();
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let dir = std::env::temp_dir().join("attn_reduce_fieldset_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = data::generate(&cfg);
+        let pa = dir.join("temp.f32");
+        data::write_f32_file(&pa, &a).unwrap();
+        let set = FieldSet::from_files(cfg, &[&pa]).unwrap();
+        assert_eq!(set.names(), &["temp"]);
+        assert_eq!(set.field(0).data(), a.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

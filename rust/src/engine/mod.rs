@@ -1,0 +1,226 @@
+//! Dataset-level compression engine: multi-field archives + the shared
+//! block-parallel executor.
+//!
+//! The paper's headline result (8× over SZ3) is on the *multi-variable*
+//! S3D dataset — 100+ species per grid point — yet a single [`Codec`]
+//! call compresses one field into one archive. This module scales the
+//! crate from field-level to dataset-level:
+//!
+//! * [`FieldSet`] — named variables sharing one [`DatasetConfig`]
+//!   geometry (dims, blocking, normalization policy), built from the
+//!   synthetic S3D/E3SM/XGC loaders ([`FieldSet::generate`]), raw files
+//!   ([`FieldSet::from_files`]), or pushed tensors.
+//! * [`CodecExt::compress_set`] / [`CodecExt::decompress_set`] — pack
+//!   every field of a set into one self-describing **Archive v2**
+//!   container: per-field sections (`F000`..), a shared stats dictionary
+//!   in the header, and CR accounting that recurses into the per-field
+//!   payloads (headers excluded — the paper's accounting). v1
+//!   single-field archives remain fully readable: `Archive::from_bytes`
+//!   accepts both versions and `CodecBuilder::for_archive` restores
+//!   either.
+//! * [`Executor`] — the persistent fork-join worker pool (+ per-thread
+//!   [`Scratch`] arenas) behind every block-parallel stage: the SZ3-like
+//!   and ZFP-like baselines, the GBAE latent coder, the hier GAE bound
+//!   stage (Algorithm 1), the lossless coder's chunk streams, and the
+//!   streaming coordinator's sink stage. Work items are independent and
+//!   order-preserving, so archives are byte-identical at every thread
+//!   count (1 thread ≡ N threads).
+//!
+//! Thread knobs: CLI `--threads N` > `ATTN_REDUCE_THREADS` >
+//! `available_parallelism()` (see [`crate::util::parallel`]).
+//!
+//! ```ignore
+//! use attn_reduce::engine::{CodecExt, FieldSet};
+//!
+//! let set = FieldSet::generate(DatasetKind::S3d, Scale::Bench, 16);
+//! let codec = builder.build(CodecKind::Sz3, DatasetKind::S3d, set.field(0))?;
+//! let archive = codec.compress_set(&set, &ErrorBound::Nrmse(1e-3))?; // one v2 container
+//! let restored = codec.decompress_set(&archive)?;                    // all fields, in order
+//! ```
+
+mod executor;
+mod fieldset;
+
+pub use executor::{reuse_f32, reuse_i64, Executor, Scratch};
+pub use fieldset::FieldSet;
+
+use crate::codec::{Codec, ErrorBound};
+use crate::compressor::Archive;
+use crate::config::DatasetConfig;
+use crate::util::json::{self, Value};
+use crate::Result;
+use anyhow::{ensure, Context};
+
+/// Dataset-level extension of the [`Codec`] trait: compress/decompress a
+/// whole [`FieldSet`] into/from one Archive v2 container. Blanket-implemented
+/// for every codec (including `dyn Codec`), so the single-field API is
+/// untouched.
+pub trait CodecExt: Codec {
+    /// Compress every field of `set` under `bound` into one v2 container.
+    /// Fields are processed in order (the PJRT-backed codecs are
+    /// single-threaded by construction); each field's *blocks* still fan
+    /// out across the [`Executor`]. For `Sync` codecs,
+    /// [`compress_set_parallel`] adds field-level parallelism on top.
+    fn compress_set(&self, set: &FieldSet, bound: &ErrorBound) -> Result<Archive> {
+        ensure!(!set.is_empty(), "cannot compress an empty field set");
+        let subs: Vec<Archive> = set
+            .iter()
+            .map(|(name, field)| {
+                self.compress(field, bound)
+                    .with_context(|| format!("compressing field {name:?}"))
+            })
+            .collect::<Result<_>>()?;
+        pack_set(self.id(), set, bound, subs)
+    }
+
+    /// Restore every field of a v2 container, in recorded order.
+    fn decompress_set(&self, archive: &Archive) -> Result<FieldSet> {
+        ensure!(
+            archive.is_multi_field(),
+            "not a multi-field (v2) archive — use Codec::decompress"
+        );
+        let names = archive.field_names()?;
+        let dataset = DatasetConfig::from_json(archive.header.req("dataset")?)?;
+        ensure!(
+            names.len() == archive.field_count(),
+            "v2 header lists {} fields but container has {} sections",
+            names.len(),
+            archive.field_count()
+        );
+        let mut set = FieldSet::new(dataset);
+        for (i, name) in names.iter().enumerate() {
+            let sub = archive.field_archive(i)?;
+            let field = self
+                .decompress(&sub)
+                .with_context(|| format!("decompressing field {name:?}"))?;
+            set.push(name.clone(), field)?;
+        }
+        Ok(set)
+    }
+}
+
+impl<C: Codec + ?Sized> CodecExt for C {}
+
+/// Field-parallel variant of [`CodecExt::compress_set`] for `Sync`
+/// codecs (the pure-rust `sz3` / `zfp` baselines): per-field jobs fan
+/// out across the [`Executor`], and each field's per-block work runs
+/// inline on its worker. Produces a container byte-identical to the
+/// serial path.
+pub fn compress_set_parallel<C>(
+    codec: &C,
+    set: &FieldSet,
+    bound: &ErrorBound,
+) -> Result<Archive>
+where
+    C: Codec + Sync,
+{
+    ensure!(!set.is_empty(), "cannot compress an empty field set");
+    let subs = Executor::global().try_par_map(set.len(), |i| {
+        codec
+            .compress(set.field(i), bound)
+            .with_context(|| format!("compressing field {:?}", set.names()[i]))
+    })?;
+    pack_set(codec.id(), set, bound, subs)
+}
+
+/// Assemble the v2 container: header (codec id, bound, dataset, field
+/// names, shared stats dictionary) + one embedded v1 archive per field.
+fn pack_set(
+    codec_id: &str,
+    set: &FieldSet,
+    bound: &ErrorBound,
+    subs: Vec<Archive>,
+) -> Result<Archive> {
+    ensure!(set.len() <= 1000, "v2 containers hold at most 1000 fields");
+    ensure!(subs.len() == set.len());
+    // shared stats dictionary: one entry per field with the value range
+    // (CR denominators, bound derivations) and the normalization stats
+    // when the codec recorded them
+    let stats: Vec<(String, Value)> = set
+        .iter()
+        .zip(&subs)
+        .map(|((name, field), sub)| {
+            let mut entry = vec![
+                ("min".to_string(), json::num(field.min() as f64)),
+                ("max".to_string(), json::num(field.max() as f64)),
+                ("range".to_string(), json::num(field.range() as f64)),
+            ];
+            if let Some(norm) = sub.header.get("norm") {
+                entry.push(("norm".to_string(), norm.clone()));
+            }
+            (name.to_string(), Value::Obj(entry))
+        })
+        .collect();
+    let header = json::obj(vec![
+        ("codec", json::s(codec_id)),
+        ("bound", bound.to_json()),
+        ("dataset", set.dataset().to_json()),
+        (
+            "fields",
+            Value::Arr(set.names().iter().map(|n| json::s(n.as_str())).collect()),
+        ),
+        ("stats", Value::Obj(stats)),
+    ]);
+    let mut archive = Archive::new_v2(header);
+    for sub in &subs {
+        archive.add_field_archive(sub);
+    }
+    Ok(archive)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Sz3Codec;
+    use crate::config::{DatasetKind, Scale};
+
+    #[test]
+    fn set_round_trip_preserves_names_and_order() {
+        let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 3);
+        let codec = Sz3Codec::new(set.dataset().clone());
+        let bound = ErrorBound::Nrmse(1e-3);
+        let archive = codec.compress_set(&set, &bound).unwrap();
+        assert!(archive.is_multi_field());
+        assert_eq!(archive.field_count(), 3);
+        let back = codec.decompress_set(&archive).unwrap();
+        assert_eq!(back.names(), set.names());
+        for (i, (_, orig)) in set.iter().enumerate() {
+            let e = crate::compressor::nrmse(orig, back.field(i));
+            assert!(e <= 1e-3, "field {i}: NRMSE {e}");
+        }
+    }
+
+    #[test]
+    fn parallel_and_serial_set_compression_are_identical() {
+        let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 4);
+        let codec = Sz3Codec::new(set.dataset().clone());
+        let bound = ErrorBound::Nrmse(1e-3);
+        let serial = codec.compress_set(&set, &bound).unwrap();
+        let parallel = compress_set_parallel(&codec, &set, &bound).unwrap();
+        assert_eq!(serial.to_bytes(), parallel.to_bytes());
+    }
+
+    #[test]
+    fn header_carries_shared_stats_dictionary() {
+        let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 2);
+        let codec = Sz3Codec::new(set.dataset().clone());
+        let archive = codec.compress_set(&set, &ErrorBound::Nrmse(1e-3)).unwrap();
+        let stats = archive.header.req("stats").unwrap();
+        for name in set.names() {
+            let entry = stats.req(name).unwrap();
+            assert!(entry.req("range").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_set_and_v1_misuse_are_errors() {
+        let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 1);
+        let codec = Sz3Codec::new(set.dataset().clone());
+        let empty = FieldSet::new(set.dataset().clone());
+        assert!(codec.compress_set(&empty, &ErrorBound::None).is_err());
+        let v1 = codec
+            .compress(set.field(0), &ErrorBound::Nrmse(1e-3))
+            .unwrap();
+        assert!(codec.decompress_set(&v1).is_err());
+    }
+}

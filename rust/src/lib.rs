@@ -31,6 +31,18 @@
 //! Each codec derives its own knob from the bound (Eq.-11 τ, pointwise ε,
 //! or a certified precision search) instead of taking a raw `f32`.
 //!
+//! ## The dataset engine
+//!
+//! [`engine`] scales the codec API from field-level to dataset-level:
+//! [`engine::FieldSet`] groups named variables over one geometry,
+//! [`engine::CodecExt::compress_set`] packs them into one multi-field
+//! Archive v2 container (v1 archives stay readable), and
+//! [`engine::Executor`] — a persistent worker pool with per-thread
+//! scratch arenas — runs every block-parallel stage (baselines, GAE,
+//! lossless coder, streaming sink) with byte-deterministic output at any
+//! thread count (`--threads` > `ATTN_REDUCE_THREADS` >
+//! `available_parallelism`).
+//!
 //! ### Migrating from the pre-codec entry points
 //!
 //! | old                                                     | new |
@@ -79,6 +91,7 @@ pub mod compressor;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod experiments;
 pub mod linalg;
 pub mod model;

@@ -16,15 +16,27 @@ use crate::Result;
 
 use super::eigh_symmetric;
 
+/// Maximum number of partial matrices the parallel covariance
+/// accumulation materializes. Bounds peak memory at `16 · n² · 8` bytes
+/// (the old thread-derived partition's worst case) while keeping chunk
+/// boundaries a function of the *row count only* — never the thread
+/// count — so the partial-sum order, and with it every downstream basis
+/// bit, is identical at any `--threads` setting.
+const COV_MAX_CHUNKS: usize = 16;
+/// Minimum rows per chunk (don't split tiny inputs).
+const COV_MIN_CHUNK_ROWS: usize = 512;
+
 /// Accumulate the (uncentered) covariance `Σ_b x_b x_bᵀ / N` of `n`-dim
 /// rows stored contiguously in `rows`.
 pub fn covariance(rows: &[f32], n: usize) -> Vec<f64> {
     assert!(n > 0 && rows.len() % n == 0);
     let count = rows.len() / n;
-    // parallel over row-chunks, each thread accumulates a private matrix
-    let threads = parallel::num_threads().min(count.max(1));
-    let chunk = count.div_ceil(threads.max(1));
-    let partials = parallel::par_map(threads, |t| {
+    // parallel over deterministically-sized row-chunks, each
+    // accumulating a private matrix; partials are then summed in chunk
+    // order (deterministic)
+    let chunk = count.div_ceil(COV_MAX_CHUNKS).max(COV_MIN_CHUNK_ROWS);
+    let n_chunks = count.div_ceil(chunk).max(1);
+    let partials = parallel::par_map(n_chunks, |t| {
         let lo = t * chunk;
         let hi = ((t + 1) * chunk).min(count);
         let mut acc = vec![0.0f64; n * n];

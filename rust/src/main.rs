@@ -5,6 +5,8 @@
 //! attn-reduce train      --dataset s3d [--steps N] [--ckpt-dir DIR]
 //! attn-reduce compress   --codec hier|sz3|zfp|gbae --bound nrmse:1e-3
 //!                        [--dataset D] [--in field.f32] --out data.ardc
+//! attn-reduce compress   --all-vars [--vars N]    # one Archive v2 per dataset
+//! attn-reduce compress   --in a.f32,b.f32,...     # multi-input -> Archive v2
 //! attn-reduce decompress --in data.ardc --out recon.f32
 //! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
 //! attn-reduce info       # manifest + platform summary
@@ -16,10 +18,12 @@ use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, CodecKind, ErrorBou
 use attn_reduce::compressor::{self, Archive, HierCompressor};
 use attn_reduce::config::{self, DatasetKind, Scale};
 use attn_reduce::data;
+use attn_reduce::engine::{CodecExt, FieldSet};
 use attn_reduce::experiments;
 use attn_reduce::model::ParamStore;
 use attn_reduce::runtime::Runtime;
 use attn_reduce::util::cli::Args;
+use attn_reduce::util::parallel;
 use attn_reduce::Result;
 
 const USAGE: &str = "\
@@ -33,7 +37,11 @@ COMMANDS:
   train        train HBAE+BAE for a dataset preset (--dataset D --steps N)
   compress     compress (--codec hier|sz3|zfp|gbae) (--bound nrmse:1e-3|tau:T|abs:A|none)
                [--dataset D] [--in F] [--stream Q] --out A
-  decompress   decompress an archive using only its header (--in A --out F)
+               multi-field (one Archive v2 per dataset):
+                 --all-vars [--vars N]   synthesize N variables (default 8)
+                 --in a.f32,b.f32,...    load several fields
+  decompress   decompress an archive using only its header (--in A --out F;
+               a v2 archive writes one F.<field>.f32 per field)
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         show artifact manifest + platform
   help         show this message
@@ -42,6 +50,8 @@ COMMON OPTIONS:
   --ckpt-dir DIR    (default: ./results/ckpt)
   --scale bench|smoke|paper
   --steps N         training steps (default 300)
+  --threads N       worker threads (precedence: --threads >
+                    ATTN_REDUCE_THREADS > available_parallelism)
   --quiet
 ";
 
@@ -58,9 +68,16 @@ fn main() {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quiet", "retrain", "full", "help"])?;
+    let args = Args::parse(raw, &["quiet", "retrain", "full", "help", "all-vars"])?;
     if args.flag("quiet") {
         std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    }
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads expects a positive integer, got {t:?}"))?;
+        anyhow::ensure!(n > 0, "--threads must be at least 1");
+        parallel::set_thread_override(n);
     }
     if args.flag("help") {
         println!("{USAGE}");
@@ -181,9 +198,44 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let codec_kind = CodecKind::parse(args.get_or("codec", "hier"))?;
     let bound = bound(args)?;
     let cfg = config::dataset_preset(kind, scale(args)?);
-    let field = load_field(args, &cfg)?;
     let out = args.get_or("out", "data.ardc");
     let mut b = builder(args)?;
+
+    // multi-field mode: --all-vars (synthetic variables) or a
+    // comma-separated --in list; one Archive v2 container per dataset
+    let multi_in: Option<Vec<&str>> = args
+        .get("in")
+        .filter(|s| s.contains(','))
+        .map(|s| s.split(',').map(str::trim).filter(|p| !p.is_empty()).collect());
+    if args.flag("all-vars") || multi_in.is_some() {
+        anyhow::ensure!(
+            args.get("stream").is_none(),
+            "--stream is not supported in multi-field mode"
+        );
+        anyhow::ensure!(
+            !(args.flag("all-vars") && args.get("in").is_some()),
+            "--all-vars synthesizes variables and cannot be combined with --in \
+             (for multiple real inputs use --in a.f32,b.f32,... without --all-vars)"
+        );
+        let set = match multi_in {
+            Some(paths) => FieldSet::from_files(cfg.clone(), &paths)?,
+            None => FieldSet::generate(kind, scale(args)?, args.get_usize("vars", 8)?),
+        };
+        anyhow::ensure!(!set.is_empty(), "multi-field mode needs at least one field");
+        let codec = b.build(codec_kind, kind, set.field(0))?;
+        let archive = codec.compress_set(&set, &bound)?;
+        archive.save(out)?;
+        println!(
+            "fields = {} [{}], codec = {}, bound = {bound}",
+            set.len(),
+            set.names().join(", "),
+            codec.id()
+        );
+        report_archive(out, &archive, None)?;
+        return Ok(());
+    }
+
+    let field = load_field(args, &cfg)?;
 
     // streaming path (hier only): pipelined coordinator, same archive
     if let Some(depth) = args.get("stream") {
@@ -232,8 +284,19 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     // flags needed, only --ckpt-dir/--artifacts for the learned codecs
     let mut b = builder(args)?;
     let codec = b.for_archive(&archive)?;
-    let recon = codec.decompress(&archive)?;
     let out = args.get_or("out", "recon.f32");
+    if archive.is_multi_field() {
+        let set = codec.decompress_set(&archive)?;
+        let stem = out.strip_suffix(".f32").unwrap_or(out);
+        for (name, field) in set.iter() {
+            let path = format!("{stem}.{name}.f32");
+            data::write_f32_file(&path, field)?;
+            println!("  wrote {path} ({} points)", field.len());
+        }
+        println!("codec = {} -> {} fields restored", codec.id(), set.len());
+        return Ok(());
+    }
+    let recon = codec.decompress(&archive)?;
     data::write_f32_file(out, &recon)?;
     println!("codec = {} -> wrote {out} ({} points)", codec.id(), recon.len());
     Ok(())

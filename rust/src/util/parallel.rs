@@ -1,13 +1,69 @@
-//! Scoped-thread data parallelism (rayon substitute; DESIGN.md §4).
+//! Data-parallel entry points, routed through the shared
+//! [`crate::engine::Executor`] pool (DESIGN.md §4).
 //!
-//! The GAE stage (Algorithm 1) and the baselines are embarrassingly
-//! parallel over blocks; `par_chunks_mut` / `par_map` split work across
-//! `available_parallelism()` OS threads with `std::thread::scope`.
+//! The GAE stage (Algorithm 1), the baselines, the lossless coder, and
+//! the dataset generators are embarrassingly parallel over blocks;
+//! `par_map` / `par_chunks_mut` / `par_flat_map_chunks` split that work
+//! across the persistent worker pool. Outputs are order-preserving and
+//! items independent, so every result is byte-identical at any thread
+//! count.
+//!
+//! Thread-count precedence (satellite of the engine refactor):
+//!
+//! 1. [`with_thread_limit`] — thread-local, for scoped forcing (tests,
+//!    the serial legs of benches);
+//! 2. [`set_thread_override`] — process-wide, wired to the CLI
+//!    `--threads N` flag;
+//! 3. `ATTN_REDUCE_THREADS` environment variable;
+//! 4. `std::thread::available_parallelism()`.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Number of worker threads to use (env `ATTN_REDUCE_THREADS` overrides).
+use crate::engine::Executor;
+
+/// Process-wide thread-count override (0 = unset). Set by `--threads`.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static THREAD_LIMIT: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Set the process-wide thread count (the CLI `--threads N` flag). Takes
+/// precedence over `ATTN_REDUCE_THREADS`; `0` clears the override.
+pub fn set_thread_override(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with parallelism forced to at most `n` on this thread (and
+/// the pool batches it submits). Used by determinism tests and the
+/// serial baselines of the fieldset bench. The previous limit is
+/// restored even if `f` panics (asserting test closures must not leak a
+/// serial limit into later tests on the same thread).
+pub fn with_thread_limit<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            THREAD_LIMIT.with(|l| l.set(prev));
+        }
+    }
+    let _restore = Restore(THREAD_LIMIT.with(|l| l.replace(n.max(1))));
+    f()
+}
+
+/// Number of worker threads to use. Precedence: [`with_thread_limit`] >
+/// [`set_thread_override`] (`--threads`) > `ATTN_REDUCE_THREADS` >
+/// `available_parallelism()`.
 pub fn num_threads() -> usize {
+    let limit = THREAD_LIMIT.with(|l| l.get());
+    if limit > 0 {
+        return limit;
+    }
+    let over = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if over > 0 {
+        return over;
+    }
     if let Ok(v) = std::env::var("ATTN_REDUCE_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -17,41 +73,14 @@ pub fn num_threads() -> usize {
 }
 
 /// Parallel map with work stealing over an index range; preserves order.
+/// A panicking work item stops the batch and its original payload is
+/// re-raised here.
 pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = num_threads().min(n.max(1));
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
-    }
-    struct SendPtr<T>(*mut Option<T>);
-    unsafe impl<T: Send> Send for SendPtr<T> {}
-    unsafe impl<T: Send> Sync for SendPtr<T> {}
-
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = AtomicUsize::new(0);
-    let slots = SendPtr(out.as_mut_ptr());
-    let slots_ref = &slots;
-    // SAFETY: each index is claimed exactly once via the atomic counter, so
-    // every Option slot is written by at most one thread; the vec itself is
-    // not resized while the scope is alive.
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let val = f(i);
-                unsafe {
-                    *slots_ref.0.add(i) = Some(val);
-                }
-            });
-        }
-    });
-    out.into_iter().map(|x| x.unwrap()).collect()
+    Executor::global().par_map(n, f)
 }
 
 /// Parallel for-each over mutable chunks of a slice.
@@ -62,25 +91,35 @@ where
 {
     assert!(chunk > 0);
     let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
-    let threads = num_threads().min(chunks.len().max(1));
-    if threads <= 1 {
-        for (i, c) in chunks {
+    let n = chunks.len();
+    let work = std::sync::Mutex::new(chunks);
+    // each work item takes exactly one (index, chunk) pair; chunk
+    // identity rides with its index, so assignment order is irrelevant
+    Executor::global().par_map(n, |_| {
+        let item = work.lock().unwrap().pop();
+        if let Some((i, c)) = item {
             f(i, c);
         }
-        return;
-    }
-    let work = std::sync::Mutex::new(chunks);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let item = work.lock().unwrap().pop();
-                match item {
-                    Some((i, c)) => f(i, c),
-                    None => break,
-                }
-            });
-        }
     });
+}
+
+/// Map fixed-size chunks of `data` in parallel and concatenate the
+/// results in chunk order. Chunk boundaries depend only on `chunk`, so
+/// the output is identical at every thread count.
+pub fn par_flat_map_chunks<T, U, F>(data: &[T], chunk: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &[T]) -> Vec<U> + Sync,
+{
+    assert!(chunk > 0);
+    let chunks: Vec<&[T]> = data.chunks(chunk).collect();
+    let parts = Executor::global().par_map(chunks.len(), |i| f(i, chunks[i]));
+    let mut out = Vec::with_capacity(data.len());
+    for p in parts {
+        out.extend(p);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -112,5 +151,54 @@ mod tests {
         assert!(data.iter().all(|&v| v >= 1));
         assert_eq!(data[0], 1);
         assert_eq!(data[102], 11); // chunk index 10
+    }
+
+    #[test]
+    fn par_map_propagates_panic_payload() {
+        // regression: a panicking worker used to leave `None` slots and
+        // abort via `unwrap()` with a misleading message
+        let err = std::panic::catch_unwind(|| {
+            par_map(64, |i| {
+                if i == 11 {
+                    panic!("original payload {i}");
+                }
+                i
+            })
+        })
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("original payload 11"), "got {msg:?}");
+    }
+
+    #[test]
+    fn flat_map_chunks_concatenates_in_order() {
+        let data: Vec<u32> = (0..1000).collect();
+        let out = par_flat_map_chunks(&data, 37, |_, c| c.iter().map(|&v| v * 2).collect());
+        assert_eq!(out.len(), data.len());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 * 2);
+        }
+    }
+
+    #[test]
+    fn thread_limit_is_scoped_and_restored() {
+        let before = num_threads();
+        let inside = with_thread_limit(1, || {
+            assert_eq!(num_threads(), 1);
+            par_map(100, |i| i) // runs serially, same result
+        });
+        assert_eq!(inside, (0..100).collect::<Vec<_>>());
+        assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn results_identical_serial_vs_parallel() {
+        let parallel = par_map(500, |i| (i as f64).sqrt());
+        let serial = with_thread_limit(1, || par_map(500, |i| (i as f64).sqrt()));
+        assert_eq!(parallel, serial);
     }
 }

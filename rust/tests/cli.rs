@@ -116,6 +116,67 @@ fn sz3_cli_round_trip_restores_from_header_alone() {
 }
 
 #[test]
+fn all_vars_cli_builds_one_v2_archive_and_restores_every_field() {
+    let archive_p = tmp("multis3d.ardc");
+    let recon_p = tmp("multirecon.f32");
+
+    // one invocation, multi-species synthetic S3D config -> one archive
+    let out = bin()
+        .args([
+            "compress",
+            "--all-vars",
+            "--vars",
+            "3",
+            "--codec",
+            "sz3",
+            "--bound",
+            "nrmse:1e-3",
+            "--dataset",
+            "s3d",
+            "--scale",
+            "smoke",
+            "--threads",
+            "2",
+            "--out",
+        ])
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fields = 3"), "{stdout}");
+    assert!(stdout.contains("var00"), "{stdout}");
+
+    // decompress from the container alone: one .f32 per field
+    let out = bin()
+        .arg("decompress")
+        .arg("--in")
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&recon_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("3 fields restored"), "{stdout}");
+    for name in ["var00", "var01", "var02"] {
+        let p = recon_p.with_file_name(format!("multirecon.{name}.f32"));
+        assert!(p.exists(), "missing per-field output {}", p.display());
+        assert!(!read_f32(&p).is_empty());
+    }
+}
+
+#[test]
+fn threads_flag_rejects_garbage() {
+    let out = bin()
+        .args(["compress", "--codec", "sz3", "--scale", "smoke", "--threads", "zero"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("threads"));
+}
+
+#[test]
 fn zfp_cli_round_trip_restores_from_header_alone() {
     let field_p = tmp("zfield.f32");
     let archive_p = tmp("zfield.ardc");

@@ -1,0 +1,166 @@
+//! Dataset-level engine acceptance tests: multi-field Archive v2
+//! containers round-trip every field within the stated bound from the
+//! serialized bytes alone, v1 single-field archives stay readable, and
+//! compression is byte-deterministic across thread counts for every
+//! codec.
+//!
+//! `sz3` / `zfp` are pure rust and run everywhere; `hier` / `gbae` need
+//! the PJRT artifacts and skip (like the other integration tests) when
+//! `artifacts/manifest.json` is absent.
+
+use std::rc::Rc;
+
+use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound};
+use attn_reduce::compressor::Archive;
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale, TrainConfig};
+use attn_reduce::data;
+use attn_reduce::engine::{compress_set_parallel, CodecExt, FieldSet};
+use attn_reduce::runtime::Runtime;
+use attn_reduce::util::parallel::with_thread_limit;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    Some(Rc::new(Runtime::open(dir).expect("open artifacts")))
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("attn_reduce_engine_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The acceptance scenario: one multi-species S3D set -> one Archive v2
+/// that round-trips every field within the bound, restored from the
+/// bytes alone via `for_archive`.
+#[test]
+fn s3d_multi_species_set_round_trips_within_bound() {
+    let set = FieldSet::generate(DatasetKind::S3d, Scale::Smoke, 5);
+    let bound = ErrorBound::Nrmse(1e-3);
+    let mut b = CodecBuilder::new().scale(Scale::Smoke);
+    let codec = b.build(CodecKind::Sz3, DatasetKind::S3d, set.field(0)).unwrap();
+    let archive = codec.compress_set(&set, &bound).unwrap();
+    assert!(archive.is_multi_field());
+    assert_eq!(archive.field_count(), 5);
+
+    // serialize, reparse, rebuild the codec from the container header
+    let bytes = archive.to_bytes();
+    let archive2 = Archive::from_bytes(&bytes).unwrap();
+    let codec2 = b.for_archive(&archive2).unwrap();
+    let back = codec2.decompress_set(&archive2).unwrap();
+    assert_eq!(back.names(), set.names());
+    let dataset = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+    for (i, (name, orig)) in set.iter().enumerate() {
+        assert!(
+            bound.satisfied_by(orig, back.field(i), &dataset),
+            "field {name} violates {bound}"
+        );
+    }
+
+    // set-level stats: CR numerator covers all fields, payload all
+    // per-field payload sections
+    let stats = archive_stats(&archive2).unwrap();
+    assert!(stats.cr > 1.0, "set should compress: CR {}", stats.cr);
+    let per_field_payload: usize = (0..5)
+        .map(|i| archive2.field_archive(i).unwrap().cr_payload_bytes())
+        .sum();
+    assert_eq!(stats.cr_payload_bytes, per_field_payload);
+}
+
+#[test]
+fn zfp_set_round_trips_and_certifies() {
+    let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 3);
+    let bound = ErrorBound::Nrmse(1e-3);
+    let mut b = CodecBuilder::new().scale(Scale::Smoke);
+    let codec = b.build(CodecKind::Zfp, DatasetKind::E3sm, set.field(0)).unwrap();
+    let archive = codec.compress_set(&set, &bound).unwrap();
+    let back = b
+        .for_archive(&archive)
+        .unwrap()
+        .decompress_set(&archive)
+        .unwrap();
+    for (i, (_, orig)) in set.iter().enumerate() {
+        let e = attn_reduce::compressor::nrmse(orig, back.field(i));
+        assert!(e <= 1e-3, "field {i}: NRMSE {e}");
+    }
+}
+
+#[test]
+fn v1_archives_still_decompress_via_for_archive() {
+    // backward compatibility: the single-field path and its archives are
+    // untouched by the engine refactor
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let mut b = CodecBuilder::new().scale(Scale::Smoke);
+    let codec = b.build(CodecKind::Sz3, DatasetKind::E3sm, &field).unwrap();
+    let archive = codec.compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    assert_eq!(archive.version(), 1);
+    let bytes = archive.to_bytes();
+    let archive2 = Archive::from_bytes(&bytes).unwrap();
+    let recon = b.for_archive(&archive2).unwrap().decompress(&archive2).unwrap();
+    assert!(attn_reduce::compressor::nrmse(&field, &recon) <= 1e-3);
+}
+
+/// Determinism: compressing the same input with 1 thread and N threads
+/// must produce byte-identical archives. Covers the pure codecs on both
+/// the single-field and the fieldset paths.
+#[test]
+fn sz3_and_zfp_archives_byte_identical_across_thread_counts() {
+    for kind in [DatasetKind::S3d, DatasetKind::E3sm] {
+        let set = FieldSet::generate(kind, Scale::Smoke, 3);
+        let bound = ErrorBound::Nrmse(1e-3);
+        for ck in [CodecKind::Sz3, CodecKind::Zfp] {
+            let mut b = CodecBuilder::new().scale(Scale::Smoke);
+            let codec = b.build(ck, kind, set.field(0)).unwrap();
+            let parallel = codec.compress_set(&set, &bound).unwrap().to_bytes();
+            let serial = with_thread_limit(1, || {
+                codec.compress_set(&set, &bound).unwrap().to_bytes()
+            });
+            assert_eq!(parallel, serial, "{ck:?} {kind:?} set archives differ");
+
+            let single = codec.compress(set.field(0), &bound).unwrap().to_bytes();
+            let single_serial = with_thread_limit(1, || {
+                codec.compress(set.field(0), &bound).unwrap().to_bytes()
+            });
+            assert_eq!(single, single_serial, "{ck:?} {kind:?} single-field differ");
+        }
+    }
+}
+
+#[test]
+fn field_parallel_path_matches_serial_packing() {
+    let set = FieldSet::generate(DatasetKind::Xgc, Scale::Smoke, 4);
+    let bound = ErrorBound::Nrmse(5e-3);
+    let codec =
+        attn_reduce::codec::Sz3Codec::new(dataset_preset(DatasetKind::Xgc, Scale::Smoke));
+    let a = codec.compress_set(&set, &bound).unwrap().to_bytes();
+    let b = compress_set_parallel(&codec, &set, &bound).unwrap().to_bytes();
+    assert_eq!(a, b);
+}
+
+/// Learned codecs: same determinism guarantee, gated on artifacts.
+#[test]
+fn hier_and_gbae_archives_byte_identical_across_thread_counts() {
+    let Some(rt) = runtime() else { return };
+    let kind = DatasetKind::E3sm;
+    let cfg = dataset_preset(kind, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let train = TrainConfig { steps: 20, log_every: 1000, ..TrainConfig::default() };
+    let bound = ErrorBound::Nrmse(1e-2);
+    for ck in [CodecKind::Hier, CodecKind::Gbae] {
+        let mut b = CodecBuilder::new()
+            .scale(Scale::Smoke)
+            .runtime(rt.clone())
+            .ckpt_dir(ckpt_dir("determinism"))
+            .train(train.clone());
+        let codec = b.build(ck, kind, &field).unwrap();
+        let parallel = codec.compress(&field, &bound).unwrap().to_bytes();
+        let serial =
+            with_thread_limit(1, || codec.compress(&field, &bound).unwrap().to_bytes());
+        assert_eq!(parallel, serial, "{ck:?} archives differ across thread counts");
+    }
+}
