@@ -1,0 +1,140 @@
+//! Region-of-interest decode vs full decode on Archive v3 block-indexed
+//! containers: wall-clock MB/s and payload bytes touched, per pure-rust
+//! codec. Emits `BENCH_region.json` next to the CWD.
+//!
+//! Run: `cargo bench --bench region_decode`
+//! (`--smoke` or `BENCH_FAST=1` shrinks to smoke scale for CI.)
+
+use std::time::Instant;
+
+use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec, ZfpCodec};
+use attn_reduce::compressor::Archive;
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
+use attn_reduce::data::{self, region_tile_ids, Region};
+use attn_reduce::util::json::{self, Value};
+use attn_reduce::util::parallel::num_threads;
+
+fn median_secs(mut f: impl FnMut(), iters: usize) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    if n % 2 == 1 {
+        times[n / 2]
+    } else {
+        (times[n / 2 - 1] + times[n / 2]) / 2.0
+    }
+}
+
+fn bench_codec<C: Codec>(
+    name: &str,
+    codec: &C,
+    field: &attn_reduce::tensor::Tensor,
+    bound: &ErrorBound,
+    region: &Region,
+    iters: usize,
+) -> Value {
+    let archive = codec.compress(field, bound).expect("compress");
+    // decode from reparsed bytes, like a cold consumer would
+    let archive = Archive::from_bytes(&archive.to_bytes()).expect("reparse");
+    let index = archive.block_index().expect("index parses").expect("v3 archive");
+    let dims = field.shape();
+    let ids = region_tile_ids(dims, &index.tile, region);
+    let n_tiles = index.entries.len();
+    let payload_bytes = index.total_bytes();
+    let bytes_touched = index.bytes_for(&ids);
+
+    let full_s = median_secs(|| drop(codec.decompress(&archive).expect("full")), iters);
+    let region_s = median_secs(
+        || drop(codec.decompress_region(&archive, region).expect("region")),
+        iters,
+    );
+    let raw_mb = (field.len() * 4) as f64 / 1e6;
+    let region_mb = (region.n_points() * 4) as f64 / 1e6;
+    let speedup = full_s / region_s.max(1e-12);
+    println!(
+        "{name:>4}: full {:>8.2} MB/s | region {:>8.2} MB/s (of region bytes) | \
+         speedup {speedup:>5.2}x | blocks {}/{} | bytes {}/{} ({:.1}%)",
+        raw_mb / full_s,
+        region_mb / region_s,
+        ids.len(),
+        n_tiles,
+        bytes_touched,
+        payload_bytes,
+        100.0 * bytes_touched as f64 / payload_bytes.max(1) as f64,
+    );
+    json::obj(vec![
+        ("codec", json::s(name)),
+        ("raw_mb", json::num(raw_mb)),
+        ("region_mb", json::num(region_mb)),
+        ("full_s", json::num(full_s)),
+        ("region_s", json::num(region_s)),
+        ("mb_s_full", json::num(raw_mb / full_s)),
+        ("mb_s_region", json::num(region_mb / region_s)),
+        ("speedup", json::num(speedup)),
+        ("blocks_total", json::num(n_tiles as f64)),
+        ("blocks_touched", json::num(ids.len() as f64)),
+        ("payload_bytes", json::num(payload_bytes as f64)),
+        ("bytes_touched", json::num(bytes_touched as f64)),
+        (
+            "frac_bytes_touched",
+            json::num(bytes_touched as f64 / payload_bytes.max(1) as f64),
+        ),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var_os("BENCH_FAST").is_some()
+        || std::env::args().any(|a| a == "--smoke");
+    let (scale, iters) = if smoke { (Scale::Smoke, 2) } else { (Scale::Bench, 5) };
+    let cfg = dataset_preset(DatasetKind::E3sm, scale);
+    let field = data::generate(&cfg);
+    // a corner region of ~1/4 extent per axis: a handful of blocks on a
+    // mesh of hundreds (the post-hoc analysis / visualization workload)
+    let region = Region::new(
+        vec![0; cfg.dims.len()],
+        cfg.dims.iter().map(|&d| (d / 4).max(1)).collect(),
+    )
+    .expect("region");
+    println!(
+        "region_decode: e3sm {:?}, region {:?}, {} threads",
+        cfg.dims,
+        region.shape(),
+        num_threads()
+    );
+    let sz3 = bench_codec(
+        "sz3",
+        &Sz3Codec::new(cfg.clone()),
+        &field,
+        &ErrorBound::Nrmse(1e-3),
+        &region,
+        iters,
+    );
+    // `None` keeps the zfp numbers about decode, not the precision search
+    let zfp = bench_codec(
+        "zfp",
+        &ZfpCodec::new(cfg.clone()),
+        &field,
+        &ErrorBound::None,
+        &region,
+        iters,
+    );
+    let report = json::obj(vec![
+        ("dataset", json::s("e3sm")),
+        ("scale", json::s(if smoke { "smoke" } else { "bench" })),
+        ("dims", json::arr_usize(&cfg.dims)),
+        ("region_lo", json::arr_usize(&region.lo)),
+        ("region_hi", json::arr_usize(&region.hi)),
+        ("threads", json::num(num_threads() as f64)),
+        ("codecs", Value::Arr(vec![sz3, zfp])),
+    ]);
+    std::fs::write("BENCH_region.json", report.to_string_pretty())
+        .expect("write BENCH_region.json");
+    println!("wrote BENCH_region.json");
+}

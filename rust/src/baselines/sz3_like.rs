@@ -28,6 +28,21 @@ use anyhow::ensure;
 
 const UNPRED: i32 = i32::MIN; // sentinel code for raw-stored values
 const MAX_CODE: i32 = 1 << 20;
+/// Default decode cap: large enough for paper-scale fields (S3D full is
+/// ~1.2e9 points) while stopping a corrupt header's 2^60-point claim
+/// from sizing an allocation. Callers that know the real geometry pass
+/// a tight cap via [`Sz3Like::decompress_capped`].
+const MAX_POINTS_DEFAULT: usize = 1 << 31;
+const MAX_RANK: usize = 16;
+
+/// Length-checked little-endian u64 read (corrupt input errors, never
+/// panics on a short slice).
+fn read_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
+    ensure!(bytes.len() >= *off + 8, "sz3: truncated");
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
 
 /// SZ3-like compressor with pointwise absolute error bound `eps`.
 #[derive(Debug, Clone, Copy)]
@@ -62,25 +77,46 @@ impl Sz3Like {
     }
 
     pub fn decompress(bytes: &[u8]) -> Result<Tensor> {
+        Self::decompress_capped(bytes, MAX_POINTS_DEFAULT)
+    }
+
+    /// Decompress with an explicit cap on the decoded point count. Every
+    /// header field is untrusted: lengths are bounds-checked before they
+    /// size an allocation, so corrupt or truncated streams return `Err`
+    /// — never panic, never balloon memory.
+    pub fn decompress_capped(bytes: &[u8], max_points: usize) -> Result<Tensor> {
         ensure!(bytes.len() >= 8, "sz3: truncated");
         let eps = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        ensure!(eps.is_finite() && eps > 0.0, "sz3: corrupt eps {eps}");
         let rank = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        ensure!(rank <= MAX_RANK, "sz3: corrupt rank {rank}");
         let mut off = 8;
         let mut shape = Vec::with_capacity(rank);
+        let mut n_points = 1usize;
         for _ in 0..rank {
-            shape.push(u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize);
-            off += 8;
+            let d = usize::try_from(read_u64(bytes, &mut off)?)
+                .map_err(|_| anyhow::anyhow!("sz3: shape dim overflow"))?;
+            n_points = n_points
+                .checked_mul(d)
+                .filter(|&n| n <= max_points)
+                .ok_or_else(|| anyhow::anyhow!("sz3: declared points exceed cap {max_points}"))?;
+            shape.push(d);
         }
-        let n_raw = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
-        off += 8;
+        let n_raw = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("sz3: raw count overflow"))?;
+        ensure!(
+            n_raw <= n_points && n_raw <= bytes.len().saturating_sub(off) / 4,
+            "sz3: corrupt raw count {n_raw}"
+        );
         let mut raws = Vec::with_capacity(n_raw);
         for _ in 0..n_raw {
             raws.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
             off += 4;
         }
-        let zlen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
-        off += 8;
-        let n_points: usize = shape.iter().product();
+        let zlen = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("sz3: stream length overflow"))?;
+        ensure!(zlen <= bytes.len() - off, "sz3: entropy stream truncated");
+        ensure!(off + zlen == bytes.len(), "sz3: trailing bytes");
         // huffman stream ≤ table (5 B/symbol) + ~8 B/value worst case
         let cap = n_points.saturating_mul(13) + (1 << 20);
         let huff = lossless_decompress(&bytes[off..off + zlen], cap)?;

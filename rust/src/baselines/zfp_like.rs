@@ -23,6 +23,19 @@ use anyhow::ensure;
 const BLOCK: usize = 4;
 /// Fixed-point fraction bits when converting to integers.
 const FRAC_BITS: u32 = 26;
+/// Default decode cap on declared points (same policy as the SZ3-like
+/// decoder): big enough for paper-scale fields, small enough that a
+/// corrupt header cannot size an absurd allocation.
+const MAX_POINTS_DEFAULT: usize = 1 << 31;
+const MAX_RANK: usize = 16;
+
+/// Length-checked little-endian u64 read.
+fn read_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
+    ensure!(bytes.len() >= *off + 8, "zfp: truncated");
+    let v = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
 
 /// ZFP-like compressor: `precision` = bits retained per transform
 /// coefficient (1..=26); smaller = higher compression, larger error.
@@ -136,6 +149,14 @@ impl ZfpLike {
     }
 
     pub fn decompress(bytes: &[u8]) -> Result<Tensor> {
+        Self::decompress_capped(bytes, MAX_POINTS_DEFAULT)
+    }
+
+    /// Decompress with an explicit cap on the decoded point count. All
+    /// header fields are untrusted: lengths are bounds-checked before
+    /// sizing any allocation, so corrupt or truncated streams return
+    /// `Err` — never panic, never balloon memory.
+    pub fn decompress_capped(bytes: &[u8], max_points: usize) -> Result<Tensor> {
         ensure!(bytes.len() > 5, "zfp: truncated");
         let precision = bytes[0] as u32;
         ensure!(
@@ -143,42 +164,62 @@ impl ZfpLike {
             "zfp: corrupt precision {precision}"
         );
         let rank = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+        ensure!((1..=MAX_RANK).contains(&rank), "zfp: corrupt rank {rank}");
         let mut off = 5;
         let mut shape = Vec::with_capacity(rank);
+        let mut n_points = 1usize;
         for _ in 0..rank {
-            shape.push(u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize);
-            off += 8;
+            let dim = usize::try_from(read_u64(bytes, &mut off)?)
+                .map_err(|_| anyhow::anyhow!("zfp: shape dim overflow"))?;
+            n_points = n_points
+                .checked_mul(dim)
+                .filter(|&n| n <= max_points)
+                .ok_or_else(|| anyhow::anyhow!("zfp: declared points exceed cap {max_points}"))?;
+            shape.push(dim);
         }
-        let n_exp = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
-        off += 8;
-        let zel = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
-        off += 8;
-        let exp_bytes = lossless_decompress(&bytes[off..off + zel], n_exp * 2 + 16)?;
-        off += zel;
-        let exps: Vec<i16> = exp_bytes
-            .chunks_exact(2)
-            .map(|b| i16::from_le_bytes([b[0], b[1]]))
-            .collect();
-        let zl = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
-        off += 8;
-        let huff = lossless_decompress(&bytes[off..off + zl], 1 << 30)?;
-        let (codes, _) = huffman_decode(&huff)?;
-
+        // geometry the stream must be consistent with (checked before any
+        // length-derived allocation)
         let d = rank.min(3);
         let lattice: Vec<usize> = shape[rank - d..].to_vec();
         let batch: usize = shape[..rank - d].iter().product();
         let vol: usize = lattice.iter().product();
         let bsz = BLOCK.pow(d as u32);
         let origins = crate::tensor::block_origins(&lattice, &vec![BLOCK; d]);
-        ensure!(codes.len() == batch * origins.len() * bsz, "zfp: code count");
-        ensure!(exps.len() == batch * origins.len(), "zfp: exponent count");
+        let n_blocks = batch
+            .checked_mul(origins.len())
+            .ok_or_else(|| anyhow::anyhow!("zfp: block count overflow"))?;
+        let n_codes = n_blocks
+            .checked_mul(bsz)
+            .ok_or_else(|| anyhow::anyhow!("zfp: code count overflow"))?;
+
+        let n_exp = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("zfp: exponent count overflow"))?;
+        ensure!(n_exp == n_blocks, "zfp: exponent count {n_exp} != {n_blocks} blocks");
+        let zel = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("zfp: exponent stream overflow"))?;
+        ensure!(zel <= bytes.len() - off, "zfp: exponent stream truncated");
+        let exp_bytes = lossless_decompress(&bytes[off..off + zel], n_exp * 2 + 16)?;
+        off += zel;
+        ensure!(exp_bytes.len() == n_exp * 2, "zfp: exponent bytes corrupt");
+        let exps: Vec<i16> = exp_bytes
+            .chunks_exact(2)
+            .map(|b| i16::from_le_bytes([b[0], b[1]]))
+            .collect();
+        let zl = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("zfp: entropy stream overflow"))?;
+        ensure!(zl <= bytes.len() - off, "zfp: entropy stream truncated");
+        ensure!(off + zl == bytes.len(), "zfp: trailing bytes");
+        // huffman stream ≤ table (5 B/symbol) + ~8 B/value worst case
+        let cap = n_codes.saturating_mul(13) + (1 << 20);
+        let huff = lossless_decompress(&bytes[off..off + zl], cap)?;
+        let (codes, _) = huffman_decode(&huff)?;
+        ensure!(codes.len() == n_codes, "zfp: code count");
 
         let shift = FRAC_BITS - precision;
         // every block decodes independently (codes/exps are indexed by
         // global block number); blocks are decoded in groups to amortize
         // allocations, then scattered serially
         const DEC_GROUP: usize = 64;
-        let n_blocks = batch * origins.len();
         let n_groups = n_blocks.div_ceil(DEC_GROUP);
         let groups: Vec<Vec<f32>> = Executor::global().par_map_scratch(n_groups, |g, s| {
             let lo = g * DEC_GROUP;

@@ -9,8 +9,8 @@
 
 use crate::baselines::GbaeCompressor;
 use crate::coder::{decode_latents, encode_latents, Quantizer};
-use crate::compressor::{gae_bound_stage, gae_restore_stage, Archive};
-use crate::data::{NormStats, Normalizer};
+use crate::compressor::{gae_bound_stage, gae_restore_stage_region, Archive};
+use crate::data::{NormStats, Normalizer, Region};
 use crate::tensor::Tensor;
 use crate::util::json::{self, Value};
 use crate::Result;
@@ -96,6 +96,23 @@ impl Codec for GbaeCodec {
     }
 
     fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        self.decompress_inner(archive, None)
+    }
+
+    fn decompress_region(&self, archive: &Archive, region: &Region) -> Result<Tensor> {
+        // latents are whole-stream coded (the AE decodes fully); the GAE
+        // correction stage runs only on the region's blocks, then crop
+        let full = self.decompress_inner(archive, Some(region))?;
+        region.crop(&full)
+    }
+}
+
+impl GbaeCodec {
+    fn decompress_inner(
+        &self,
+        archive: &Archive,
+        region: Option<&Region>,
+    ) -> Result<Tensor> {
         let h = &archive.header;
         let dataset = crate::config::DatasetConfig::from_json(h.req("dataset")?)?;
         let stats = NormStats::from_json(h.req("norm")?)?;
@@ -105,6 +122,9 @@ impl Codec for GbaeCodec {
             h.req("ae_group")?.as_str().unwrap_or("") == self.comp.ae.group,
             "archive AE group mismatch"
         );
+        if let Some(r) = region {
+            r.validate_in(&dataset.dims)?;
+        }
         let q = Quantizer::new(bin.max(0.0));
         let lat_rows = decode_latents(archive.section("GLAT")?, q)?;
         let corr_rows = if archive.has_section("GCLT") {
@@ -113,7 +133,7 @@ impl Codec for GbaeCodec {
             None
         };
         let mut recon = self.comp.decode(&lat_rows, corr_rows.as_deref())?;
-        gae_restore_stage(&dataset, &stats, tau, archive, &mut recon)?;
+        gae_restore_stage_region(&dataset, &stats, tau, archive, &mut recon, region)?;
         Normalizer::invert(&stats, &mut recon);
         Ok(recon)
     }

@@ -95,4 +95,14 @@ impl Codec for HierCodec {
     fn decompress(&self, archive: &Archive) -> Result<Tensor> {
         self.comp.decompress(archive)
     }
+
+    fn decompress_region(
+        &self,
+        archive: &Archive,
+        region: &crate::data::Region,
+    ) -> Result<Tensor> {
+        // AE latents are whole-stream coded, so the stack decodes fully;
+        // the GAE correction stage runs only on the region's blocks
+        self.comp.decompress_region(archive, region)
+    }
 }

@@ -32,6 +32,7 @@ mod builder;
 mod gbae;
 mod hier;
 mod sz3;
+mod tiled;
 mod zfp;
 
 pub use bound::ErrorBound;
@@ -43,6 +44,7 @@ pub use zfp::ZfpCodec;
 
 use crate::compressor::{compression_ratio, Archive, CompressStats};
 use crate::config::DatasetConfig;
+use crate::data::Region;
 use crate::tensor::Tensor;
 use crate::util::json::Value;
 use crate::Result;
@@ -58,6 +60,18 @@ pub trait Codec {
 
     /// Restore a field from an archive produced by this codec.
     fn decompress(&self, archive: &Archive) -> Result<Tensor>;
+
+    /// Restore only `region` (a half-open hyper-rectangle) of a field.
+    ///
+    /// Bit-identical to cropping a full decode, on every codec and every
+    /// archive version. The default decodes fully and crops — correct
+    /// for v1/v2 archives, whose payloads are whole-stream coded; codecs
+    /// with a v3 block index override this to decode only the blocks the
+    /// region intersects.
+    fn decompress_region(&self, archive: &Archive, region: &Region) -> Result<Tensor> {
+        let full = self.decompress(archive)?;
+        region.crop(&full)
+    }
 
     /// Compress and also return the reconstruction. The default decodes
     /// the archive it just built; codecs whose forward pass already

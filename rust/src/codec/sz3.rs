@@ -1,19 +1,28 @@
 //! [`Codec`] adapter for the SZ3-like prediction-based compressor.
 //!
-//! Wraps [`Sz3Like`]'s raw byte stream into a self-describing [`Archive`]
-//! (section `SZ3B`) and derives the pointwise ε from the typed
-//! [`ErrorBound`], fixing the old asymmetric `new(eps).compress` /
-//! static-`decompress` surface.
+//! Writes **Archive v3**: the field is tiled by the dataset's AE block
+//! shape, every tile is an independent [`Sz3Like`] stream (encoded
+//! block-parallel on the shared executor), and a `BIDX` block index maps
+//! tile id → byte span inside the `SZ3B` section. A full decode streams
+//! every tile; [`Codec::decompress_region`] slices only the tiles the
+//! region intersects. Legacy v1 archives (one whole-field stream, no
+//! index) keep decoding through the original path, so old data stays
+//! readable.
+//!
+//! The pointwise ε derives from the typed [`ErrorBound`] exactly as
+//! before — per-tile streams share one ε, so the bound semantics are
+//! unchanged.
 
 use crate::baselines::Sz3Like;
 use crate::compressor::Archive;
 use crate::config::DatasetConfig;
+use crate::data::Region;
 use crate::tensor::Tensor;
 use crate::util::json;
 use crate::Result;
 use anyhow::ensure;
 
-use super::{base_header, Codec, ErrorBound};
+use super::{base_header, tiled, Codec, ErrorBound};
 
 /// SZ3-like codec (Lorenzo predictor + error quantization + entropy).
 pub struct Sz3Codec {
@@ -23,6 +32,31 @@ pub struct Sz3Codec {
 impl Sz3Codec {
     pub fn new(dataset: DatasetConfig) -> Self {
         Self { dataset }
+    }
+
+    /// Decode through the v3 block index when present (optionally only a
+    /// region), else fall back to the v1 whole-stream path.
+    fn decode(&self, archive: &Archive, region: Option<&Region>) -> Result<Tensor> {
+        let payload = archive.section("SZ3B")?;
+        match archive.block_index()? {
+            Some(index) => {
+                // the per-tile cap is computed inside the closure: it
+                // only runs after decode_tiled has validated the
+                // (untrusted) tile shape against the field dims
+                tiled::decode_tiled(payload, &index, &self.dataset.dims, region, |b| {
+                    Sz3Like::decompress_capped(b, index.tile.iter().product())
+                })
+            }
+            None => {
+                // v1 legacy archive: whole-field stream, no index; the
+                // header geometry caps what a corrupt stream may allocate
+                let full = Sz3Like::decompress_capped(payload, self.dataset.total_points())?;
+                match region {
+                    Some(r) => r.crop(&full),
+                    None => Ok(full),
+                }
+            }
+        }
     }
 }
 
@@ -43,15 +77,22 @@ impl Codec for Sz3Codec {
             eps.is_finite() && eps > 0.0,
             "bound {bound} yields eps {eps} (constant field or zero bound?)"
         );
-        let bytes = Sz3Like::new(eps).compress(field)?;
+        let (payload, index) = tiled::encode_tiled(field, &self.dataset.ae_block, |tile| {
+            Sz3Like::new(eps).compress(tile)
+        })?;
         let mut header = base_header(self.id(), &self.dataset, bound);
         header.push(("eps".to_string(), json::num(eps as f64)));
-        let mut archive = Archive::new(crate::util::json::Value::Obj(header));
-        archive.add_section("SZ3B", bytes);
+        let mut archive = Archive::new_v3(crate::util::json::Value::Obj(header));
+        archive.add_section("SZ3B", payload);
+        archive.add_block_index(&index);
         Ok(archive)
     }
 
     fn decompress(&self, archive: &Archive) -> Result<Tensor> {
-        Sz3Like::decompress(archive.section("SZ3B")?)
+        self.decode(archive, None)
+    }
+
+    fn decompress_region(&self, archive: &Archive, region: &Region) -> Result<Tensor> {
+        self.decode(archive, Some(region))
     }
 }

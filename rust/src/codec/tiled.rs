@@ -1,0 +1,96 @@
+//! Shared v3 tiled-payload machinery for the block-granular codecs.
+//!
+//! A v3 archive's payload is a concatenation of independently-decodable
+//! per-tile streams (tile = the dataset's AE block shape), described by a
+//! [`BlockIndex`]. Encode fans the tiles out across the shared
+//! [`Executor`] and concatenates in tile order — byte-identical at every
+//! thread count, like every other parallel stage. Decode touches only
+//! the entries of the requested tiles: a full decode asks for all of
+//! them, a region decode for the intersecting ones, and both reassemble
+//! through the `data::blocking` scatter helpers.
+
+use crate::compressor::BlockIndex;
+use crate::data::{region_tile_ids, scatter_tile_into_region, Region};
+use crate::engine::Executor;
+use crate::tensor::{block_origins, extract_block, Tensor};
+use crate::Result;
+use anyhow::ensure;
+
+/// Tile a field and encode every tile independently. Returns the
+/// concatenated payload plus the block index over it.
+pub(crate) fn encode_tiled<F>(
+    field: &Tensor,
+    tile: &[usize],
+    encode_tile: F,
+) -> Result<(Vec<u8>, BlockIndex)>
+where
+    F: Fn(&Tensor) -> Result<Vec<u8>> + Sync,
+{
+    // clamp each tile dim to the field dim: a tile larger than the field
+    // only adds padding, and `BlockIndex::validate` bounds untrusted tile
+    // shapes by the field geometry on decode
+    let tile: Vec<usize> = tile
+        .iter()
+        .zip(field.shape())
+        .map(|(&t, &d)| t.min(d).max(1))
+        .collect();
+    let origins = block_origins(field.shape(), &tile);
+    let tile_len: usize = tile.iter().product();
+    let parts: Vec<Vec<u8>> = Executor::global().try_par_map(origins.len(), |i| {
+        let mut buf = vec![0f32; tile_len];
+        extract_block(field, &origins[i], &tile, &mut buf);
+        encode_tile(&Tensor::new(tile.clone(), buf))
+    })?;
+    let mut payload = Vec::with_capacity(parts.iter().map(Vec::len).sum());
+    let mut entries = Vec::with_capacity(parts.len());
+    for p in &parts {
+        entries.push((payload.len() as u64, p.len() as u64));
+        payload.extend_from_slice(p);
+    }
+    Ok((payload, BlockIndex { tile, entries }))
+}
+
+/// Decode the tiles of a v3 payload that intersect `region` (all tiles
+/// when `None`) and reassemble them into a tensor shaped as the region
+/// (the full field when `None`). Only the indexed byte spans of the
+/// selected tiles are ever sliced — the acceptance contract of the
+/// region path.
+pub(crate) fn decode_tiled<F>(
+    payload: &[u8],
+    index: &BlockIndex,
+    dims: &[usize],
+    region: Option<&Region>,
+    decode_tile: F,
+) -> Result<Tensor>
+where
+    F: Fn(&[u8]) -> Result<Tensor> + Sync,
+{
+    index.validate(dims, payload.len())?;
+    let origins = block_origins(dims, &index.tile);
+    let full = Region::full(dims);
+    let r = match region {
+        Some(r) => {
+            r.validate_in(dims)?;
+            r
+        }
+        None => &full,
+    };
+    let ids = region_tile_ids(dims, &index.tile, r);
+    let tiles: Vec<Tensor> = Executor::global().try_par_map(ids.len(), |i| {
+        let (off, len) = index.entry(ids[i])?;
+        let t = decode_tile(&payload[off..off + len])?;
+        ensure!(
+            t.shape() == &index.tile[..],
+            "tile {} decoded to shape {:?}, index says {:?}",
+            ids[i],
+            t.shape(),
+            index.tile
+        );
+        Ok(t)
+    })?;
+    let mut out = Tensor::zeros(r.shape());
+    for (&id, t) in ids.iter().zip(&tiles) {
+        scatter_tile_into_region(&mut out, r, &origins[id], &index.tile, t.data());
+    }
+    Ok(out)
+}

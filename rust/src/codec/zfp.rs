@@ -6,16 +6,22 @@
 //! smallest precision whose reconstruction measurably satisfies the
 //! requested [`ErrorBound`]. The error is monotone non-increasing in
 //! precision, so the search is sound.
+//!
+//! Writes **Archive v3** like the SZ3 adapter: one independent
+//! [`ZfpLike`] stream per AE-block tile plus a `BIDX` block index, so
+//! [`Codec::decompress_region`] touches only the intersecting tiles.
+//! Legacy v1 whole-stream archives keep decoding unchanged.
 
 use crate::baselines::ZfpLike;
-use crate::compressor::Archive;
+use crate::compressor::{Archive, BlockIndex};
 use crate::config::DatasetConfig;
+use crate::data::Region;
 use crate::tensor::Tensor;
 use crate::util::json;
 use crate::Result;
 use anyhow::{bail, ensure};
 
-use super::{base_header, Codec, ErrorBound};
+use super::{base_header, tiled, Codec, ErrorBound};
 
 /// Precision used for `ErrorBound::None` (best effort; matches the old
 /// bench default).
@@ -32,26 +38,56 @@ impl ZfpCodec {
         Self { dataset }
     }
 
-    /// Smallest precision whose reconstruction satisfies `bound`, with its
-    /// compressed bytes.
-    fn certify(&self, field: &Tensor, bound: &ErrorBound) -> Result<(u32, Vec<u8>)> {
-        let meets = |p: u32| -> Result<Option<Vec<u8>>> {
-            let bytes = ZfpLike::new(p).compress(field)?;
-            let recon = ZfpLike::decompress(&bytes)?;
+    /// Tiled (v3) encode of the whole field at one precision.
+    fn encode(&self, field: &Tensor, precision: u32) -> Result<(Vec<u8>, BlockIndex)> {
+        tiled::encode_tiled(field, &self.dataset.ae_block, |tile| {
+            ZfpLike::new(precision).compress(tile)
+        })
+    }
+
+    /// Decode through the v3 block index when present (optionally only a
+    /// region), else fall back to the v1 whole-stream path.
+    fn decode_archive(&self, archive: &Archive, region: Option<&Region>) -> Result<Tensor> {
+        let payload = archive.section("ZFPB")?;
+        match archive.block_index()? {
+            Some(index) => decode(payload, &index, &self.dataset.dims, region),
+            None => {
+                // v1 legacy archive: whole-field stream; the header
+                // geometry caps what a corrupt stream may allocate
+                let full =
+                    ZfpLike::decompress_capped(payload, self.dataset.total_points())?;
+                match region {
+                    Some(r) => r.crop(&full),
+                    None => Ok(full),
+                }
+            }
+        }
+    }
+
+    /// Smallest precision whose reconstruction satisfies `bound`, with
+    /// its tiled payload + index.
+    fn certify(
+        &self,
+        field: &Tensor,
+        bound: &ErrorBound,
+    ) -> Result<(u32, Vec<u8>, BlockIndex)> {
+        let meets = |p: u32| -> Result<Option<(Vec<u8>, BlockIndex)>> {
+            let (payload, index) = self.encode(field, p)?;
+            let recon = decode(&payload, &index, &self.dataset.dims, None)?;
             if bound.satisfied_by(field, &recon, &self.dataset) {
-                Ok(Some(bytes))
+                Ok(Some((payload, index)))
             } else {
                 Ok(None)
             }
         };
         // binary search the smallest satisfying precision in [1, 26]
         let (mut lo, mut hi) = (1u32, MAX_PRECISION);
-        let mut best: Option<(u32, Vec<u8>)> = None;
+        let mut best: Option<(u32, Vec<u8>, BlockIndex)> = None;
         while lo <= hi {
             let mid = (lo + hi) / 2;
             match meets(mid)? {
-                Some(bytes) => {
-                    best = Some((mid, bytes));
+                Some((payload, index)) => {
+                    best = Some((mid, payload, index));
                     if mid == 1 {
                         break;
                     }
@@ -70,6 +106,21 @@ impl ZfpCodec {
     }
 }
 
+/// Decode a tiled ZFP payload (whole field, or only `region`). The
+/// per-tile cap is computed inside the closure: it only runs after
+/// `decode_tiled` has validated the (untrusted) tile shape against the
+/// field dims.
+fn decode(
+    payload: &[u8],
+    index: &BlockIndex,
+    dims: &[usize],
+    region: Option<&Region>,
+) -> Result<Tensor> {
+    tiled::decode_tiled(payload, index, dims, region, |b| {
+        ZfpLike::decompress_capped(b, index.tile.iter().product())
+    })
+}
+
 impl Codec for ZfpCodec {
     fn id(&self) -> &str {
         "zfp"
@@ -82,20 +133,26 @@ impl Codec for ZfpCodec {
             field.shape(),
             self.dataset.dims
         );
-        let (precision, bytes) = match bound {
+        let (precision, payload, index) = match bound {
             ErrorBound::None => {
-                (DEFAULT_PRECISION, ZfpLike::new(DEFAULT_PRECISION).compress(field)?)
+                let (payload, index) = self.encode(field, DEFAULT_PRECISION)?;
+                (DEFAULT_PRECISION, payload, index)
             }
             _ => self.certify(field, bound)?,
         };
         let mut header = base_header(self.id(), &self.dataset, bound);
         header.push(("precision".to_string(), json::num(precision as f64)));
-        let mut archive = Archive::new(crate::util::json::Value::Obj(header));
-        archive.add_section("ZFPB", bytes);
+        let mut archive = Archive::new_v3(crate::util::json::Value::Obj(header));
+        archive.add_section("ZFPB", payload);
+        archive.add_block_index(&index);
         Ok(archive)
     }
 
     fn decompress(&self, archive: &Archive) -> Result<Tensor> {
-        ZfpLike::decompress(archive.section("ZFPB")?)
+        self.decode_archive(archive, None)
+    }
+
+    fn decompress_region(&self, archive: &Archive, region: &Region) -> Result<Tensor> {
+        self.decode_archive(archive, Some(region))
     }
 }

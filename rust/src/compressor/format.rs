@@ -20,29 +20,184 @@
 //!
 //! **Version 2** is the multi-field *dataset container* produced by
 //! [`crate::engine::CodecExt::compress_set`]: section `F000`..`F999`
-//! holds field *i*'s complete v1 archive, and the header carries the
-//! field-name list (`fields`) plus the shared per-field stats dictionary
-//! (`stats`). CR accounting recurses into the embedded field archives —
-//! payload sections only, headers excluded — so multi-field ratios match
-//! the paper's accounting.
+//! holds field *i*'s complete single-field archive, and the header
+//! carries the field-name list (`fields`) plus the shared per-field
+//! stats dictionary (`stats`). CR accounting recurses into the embedded
+//! field archives — payload sections only, headers excluded — so
+//! multi-field ratios match the paper's accounting.
+//!
+//! **Version 3** is a single-field archive whose payload section is a
+//! concatenation of independently-decodable per-block streams, described
+//! by a [`BlockIndex`] in section `BIDX` (block id → byte offset/length).
+//! [`crate::codec::Codec::decompress_region`] uses the index to decode
+//! only the blocks intersecting a requested hyper-rectangle. v3 bumps
+//! the container version because the payload *layout* changed — a v1
+//! reader must not misparse a chunked stream as a whole stream.
 //!
 //! Unknown section tags are preserved verbatim by the parser, so newer
 //! writers stay readable by older readers (forward compatibility), and
-//! v1 archives parse and decompress unchanged (backward compatibility).
+//! v1/v2 archives parse and decompress unchanged (backward
+//! compatibility, pinned by the golden corpus in `tests/golden/`).
 
 use crate::util::json::Value;
 use crate::Result;
 use anyhow::{bail, ensure};
 
 const MAGIC: &[u8; 4] = b"ARDC";
-/// Single-field archive (the seed format — still written by every codec).
+/// Single-field archive (the seed format — whole-stream payloads).
 pub const VERSION_V1: u16 = 1;
 /// Multi-field dataset container (engine `compress_set`).
 pub const VERSION_V2: u16 = 2;
+/// Single-field archive with a block index (`BIDX`): the payload is a
+/// concatenation of independently-decodable per-block streams, so a
+/// region of interest decodes without touching the rest of the payload.
+pub const VERSION_V3: u16 = 3;
+
+/// Section tag of the v3 block index.
+pub const BLOCK_INDEX_TAG: &str = "BIDX";
 
 /// Sections whose bytes count toward the paper's compression ratio.
 pub const CR_SECTIONS: [&str; 8] =
     ["HLAT", "BLAT", "GLAT", "GCLT", "GCOF", "GIDX", "SZ3B", "ZFPB"];
+
+/// The Archive v3 block index: where each block's independently-coded
+/// stream lives inside the payload section.
+///
+/// `tile` is the block shape the field was tiled with (ceil division;
+/// row-major block ids, matching [`crate::tensor::block_origins`]), and
+/// `entries[id]` is that block's `(byte offset, byte length)` into the
+/// codec's payload section. Region decodes slice exactly the entries of
+/// the intersecting blocks — the rest of the payload is never touched.
+///
+/// Serialized layout (little-endian, section `BIDX`):
+/// ```text
+///   u32 rank | rank x u32 tile_dim | u64 n_blocks | n x (u64 off, u64 len)
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockIndex {
+    pub tile: Vec<usize>,
+    pub entries: Vec<(u64, u64)>,
+}
+
+/// Sanity cap on index rank (fields are rank 1..4 in practice).
+const MAX_INDEX_RANK: usize = 16;
+
+impl BlockIndex {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + self.tile.len() * 4 + 8 + self.entries.len() * 16);
+        out.extend_from_slice(&(self.tile.len() as u32).to_le_bytes());
+        for &t in &self.tile {
+            out.extend_from_slice(&(t as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for &(off, len) in &self.entries {
+            out.extend_from_slice(&off.to_le_bytes());
+            out.extend_from_slice(&len.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse an index section. Untrusted input: every length is checked
+    /// before it sizes an allocation, so corrupt archives error instead
+    /// of panicking or ballooning memory.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() >= 4, "block index truncated");
+        let rank = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        ensure!(
+            (1..=MAX_INDEX_RANK).contains(&rank),
+            "block index rank {rank} out of range"
+        );
+        let mut off = 4usize;
+        ensure!(bytes.len() >= off + rank * 4 + 8, "block index truncated");
+        let mut tile = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let t = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            ensure!(t >= 1, "block index tile dim is zero");
+            tile.push(t);
+            off += 4;
+        }
+        let n = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        off += 8;
+        let n = usize::try_from(n)
+            .map_err(|_| anyhow::anyhow!("block index entry count overflow"))?;
+        // allocation cap from the actual bytes present: 16 B per entry
+        ensure!(
+            n <= (bytes.len() - off) / 16,
+            "block index declares {n} entries, impossible in {} bytes",
+            bytes.len()
+        );
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let o = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+            let l = u64::from_le_bytes(bytes[off + 8..off + 16].try_into().unwrap());
+            entries.push((o, l));
+            off += 16;
+        }
+        ensure!(off == bytes.len(), "block index has trailing bytes");
+        Ok(Self { tile, entries })
+    }
+
+    /// Check the index is consistent with the field geometry and payload
+    /// it claims to describe: one entry per tile of `dims`, every entry
+    /// inside `payload_len`, and every tile dim within the field dim —
+    /// the tile shape is untrusted input, and it later sizes per-tile
+    /// decode allocations, so the trusted `dims` must bound it.
+    pub fn validate(&self, dims: &[usize], payload_len: usize) -> Result<()> {
+        ensure!(
+            self.tile.len() == dims.len(),
+            "block index rank {} != field rank {}",
+            self.tile.len(),
+            dims.len()
+        );
+        let mut expect = 1usize;
+        for (d, (&dim, &t)) in dims.iter().zip(&self.tile).enumerate() {
+            ensure!(
+                (1..=dim.max(1)).contains(&t),
+                "block index tile dim {d} ({t}) outside field dim {dim}"
+            );
+            expect = expect
+                .checked_mul(dim.div_ceil(t))
+                .ok_or_else(|| anyhow::anyhow!("block index tile count overflow"))?;
+        }
+        ensure!(
+            self.entries.len() == expect,
+            "block index has {} entries, geometry needs {expect}",
+            self.entries.len()
+        );
+        for (id, &(off, len)) in self.entries.iter().enumerate() {
+            let end = off
+                .checked_add(len)
+                .ok_or_else(|| anyhow::anyhow!("block {id} extent overflow"))?;
+            ensure!(
+                end <= payload_len as u64,
+                "block {id} extent {off}+{len} exceeds payload {payload_len}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Byte span of block `id` as usize offsets.
+    pub fn entry(&self, id: usize) -> Result<(usize, usize)> {
+        let &(off, len) = self
+            .entries
+            .get(id)
+            .ok_or_else(|| anyhow::anyhow!("block id {id} out of index range"))?;
+        Ok((off as usize, len as usize))
+    }
+
+    /// Total payload bytes a decode of exactly `ids` touches.
+    pub fn bytes_for(&self, ids: &[usize]) -> usize {
+        ids.iter()
+            .filter_map(|&id| self.entries.get(id))
+            .map(|&(_, len)| len as usize)
+            .sum()
+    }
+
+    /// Total payload bytes covered by the index.
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|&(_, len)| len as usize).sum()
+    }
+}
 
 /// A tagged-section archive with a JSON header.
 #[derive(Debug, Clone)]
@@ -62,9 +217,30 @@ impl Archive {
         Self { header, version: VERSION_V2, sections: Vec::new() }
     }
 
-    /// Container version (1 = single field, 2 = multi-field set).
+    /// A new (empty) v3 single-field archive (block-indexed payload).
+    pub fn new_v3(header: Value) -> Self {
+        Self { header, version: VERSION_V3, sections: Vec::new() }
+    }
+
+    /// Container version (1 = single field, 2 = multi-field set,
+    /// 3 = single field with block index).
     pub fn version(&self) -> u16 {
         self.version
+    }
+
+    /// Attach the v3 block index (requires a [`Self::new_v3`] archive).
+    pub fn add_block_index(&mut self, index: &BlockIndex) {
+        assert_eq!(self.version, VERSION_V3, "block index only in v3 archives");
+        self.add_section(BLOCK_INDEX_TAG, index.to_bytes());
+    }
+
+    /// The block index of a v3 archive (`None` for v1/v2 — callers fall
+    /// back to full decode + crop, keeping the region API uniform).
+    pub fn block_index(&self) -> Result<Option<BlockIndex>> {
+        if !self.has_section(BLOCK_INDEX_TAG) {
+            return Ok(None);
+        }
+        Ok(Some(BlockIndex::from_bytes(self.section(BLOCK_INDEX_TAG)?)?))
     }
 
     /// Is this a multi-field dataset container?
@@ -72,11 +248,17 @@ impl Archive {
         self.version == VERSION_V2
     }
 
-    /// Section tag of field `i` in a v2 container.
+    /// Section tag of field `i` in a v2 container. Tags are `F` + three
+    /// digits, so a container holds at most [`Self::MAX_FIELDS`] fields;
+    /// [`Self::add_field_archive`] enforces the cap with a typed error
+    /// before any tag could collide or garble.
     pub fn field_tag(i: usize) -> String {
-        assert!(i < 1000, "v2 containers hold at most 1000 fields");
+        assert!(i < Self::MAX_FIELDS, "v2 containers hold at most 1000 fields");
         format!("F{i:03}")
     }
+
+    /// `F000`..`F999`: the most fields one v2 container can hold.
+    pub const MAX_FIELDS: usize = 1000;
 
     /// Field names recorded in a v2 header, in section order. Every
     /// entry must be a string — silently dropping a malformed entry
@@ -111,19 +293,29 @@ impl Archive {
             && tag[1..].bytes().all(|b| b.is_ascii_digit())
     }
 
-    /// Append a field's complete v1 archive to a v2 container.
-    pub fn add_field_archive(&mut self, sub: &Archive) {
+    /// Append a field's complete single-field (v1 or v3) archive to a v2
+    /// container. Errors with a clear message once the `F000`..`F999` tag
+    /// space is exhausted instead of producing colliding tags.
+    pub fn add_field_archive(&mut self, sub: &Archive) -> Result<()> {
         assert_eq!(self.version, VERSION_V2, "field sections only in v2");
-        let tag = Self::field_tag(self.field_count());
-        self.add_section(&tag, sub.to_bytes());
+        let i = self.field_count();
+        ensure!(
+            i < Self::MAX_FIELDS,
+            "v2 containers hold at most {} fields (F000..F999 tag space)",
+            Self::MAX_FIELDS
+        );
+        self.add_section(&Self::field_tag(i), sub.to_bytes());
+        Ok(())
     }
 
-    /// Parse the embedded v1 archive of field `i` in a v2 container.
+    /// Parse the embedded single-field (v1 or v3) archive of field `i`
+    /// in a v2 container.
     pub fn field_archive(&self, i: usize) -> Result<Archive> {
         ensure!(self.version == VERSION_V2, "not a multi-field container");
+        ensure!(i < Self::MAX_FIELDS, "field index {i} out of tag space");
         let sub = Archive::from_bytes(self.section(&Self::field_tag(i))?)?;
         ensure!(
-            sub.version == VERSION_V1,
+            sub.version == VERSION_V1 || sub.version == VERSION_V3,
             "nested multi-field containers are not supported"
         );
         Ok(sub)
@@ -270,7 +462,7 @@ impl Archive {
         }
         let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
         ensure!(
-            version == VERSION_V1 || version == VERSION_V2,
+            version == VERSION_V1 || version == VERSION_V2 || version == VERSION_V3,
             "unsupported archive version {version}"
         );
         let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
@@ -413,8 +605,8 @@ mod tests {
                 Value::Arr(vec![json::s("temp"), json::s("pressure")]),
             ),
         ]));
-        v2.add_field_archive(&f0);
-        v2.add_field_archive(&f1);
+        v2.add_field_archive(&f0).unwrap();
+        v2.add_field_archive(&f1).unwrap();
         v2
     }
 
@@ -462,6 +654,120 @@ mod tests {
         assert!(back.field_names().is_err());
         // the F-tag filter never hides ordinary v1 sections
         assert_eq!(back.cr_payload_bytes(), 3);
+    }
+
+    #[test]
+    fn block_index_round_trips_and_validates() {
+        let idx = BlockIndex {
+            tile: vec![4, 8],
+            entries: vec![(0, 10), (10, 7), (17, 0), (17, 3)],
+        };
+        let back = BlockIndex::from_bytes(&idx.to_bytes()).unwrap();
+        assert_eq!(back, idx);
+        // geometry 7 x 16 with 4 x 8 tiles -> 2 x 2 = 4 entries
+        back.validate(&[7, 16], 20).unwrap();
+        assert!(back.validate(&[7, 16], 19).is_err(), "extent past payload");
+        assert!(back.validate(&[9, 16], 20).is_err(), "wrong entry count");
+        assert!(back.validate(&[7, 16, 2], 20).is_err(), "rank mismatch");
+        assert_eq!(back.entry(1).unwrap(), (10, 7));
+        assert!(back.entry(4).is_err());
+        assert_eq!(back.bytes_for(&[0, 3]), 13);
+        assert_eq!(back.total_bytes(), 20);
+    }
+
+    #[test]
+    fn block_index_rejects_corrupt_input() {
+        let idx = BlockIndex { tile: vec![4], entries: vec![(0, 5), (5, 5)] };
+        let bytes = idx.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(BlockIndex::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // absurd entry count must not allocate
+        let mut b = bytes.clone();
+        let n_off = 4 + 4; // rank + one tile dim
+        b[n_off..n_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(BlockIndex::from_bytes(&b).is_err());
+        // zero tile dim
+        let mut b = bytes.clone();
+        b[4..8].copy_from_slice(&0u32.to_le_bytes());
+        assert!(BlockIndex::from_bytes(&b).is_err());
+        // absurd rank
+        let mut b = bytes;
+        b[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(BlockIndex::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn block_index_rejects_tile_dims_outside_field() {
+        // tile dims are untrusted and later size per-tile decode
+        // allocations: anything beyond the trusted field dims must error
+        // before a decoder can use it as a cap
+        let huge = BlockIndex {
+            tile: vec![u32::MAX as usize, u32::MAX as usize],
+            entries: vec![(0, 4)],
+        };
+        assert!(huge.validate(&[7, 16], 4).is_err());
+        // count arithmetic is overflow-checked even for absurd dims
+        let tiny = BlockIndex { tile: vec![1, 1], entries: vec![(0, 4)] };
+        assert!(tiny.validate(&[usize::MAX, usize::MAX], 4).is_err());
+        // boundary: tile == dims is one tile and valid
+        let exact = BlockIndex { tile: vec![7, 16], entries: vec![(0, 4)] };
+        exact.validate(&[7, 16], 4).unwrap();
+    }
+
+    #[test]
+    fn v3_archives_round_trip_with_index() {
+        let mut a = Archive::new_v3(json::obj(vec![("codec", json::s("sz3"))]));
+        a.add_section("SZ3B", vec![1; 12]);
+        a.add_block_index(&BlockIndex { tile: vec![4], entries: vec![(0, 12)] });
+        assert_eq!(a.version(), VERSION_V3);
+        assert!(!a.is_multi_field());
+        let back = Archive::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(back.version(), VERSION_V3);
+        let idx = back.block_index().unwrap().expect("index present");
+        assert_eq!(idx.tile, vec![4]);
+        assert_eq!(idx.entries, vec![(0, 12)]);
+        // v1 archives report no index
+        assert!(sample().block_index().unwrap().is_none());
+        // v3 payload sections still count toward CR, the index does not
+        assert_eq!(back.cr_payload_bytes(), 12);
+    }
+
+    #[test]
+    fn v2_can_embed_v3_field_archives() {
+        let mut f = Archive::new_v3(json::obj(vec![("codec", json::s("sz3"))]));
+        f.add_section("SZ3B", vec![3; 9]);
+        f.add_block_index(&BlockIndex { tile: vec![2], entries: vec![(0, 9)] });
+        let mut v2 = Archive::new_v2(json::obj(vec![(
+            "fields",
+            Value::Arr(vec![json::s("t")]),
+        )]));
+        v2.add_field_archive(&f).unwrap();
+        let back = Archive::from_bytes(&v2.to_bytes()).unwrap();
+        let sub = back.field_archive(0).unwrap();
+        assert_eq!(sub.version(), VERSION_V3);
+        assert!(sub.block_index().unwrap().is_some());
+        assert_eq!(back.cr_payload_bytes(), 9);
+    }
+
+    #[test]
+    fn field_archive_cap_is_a_clear_error_not_a_collision() {
+        // fill the full F000..F999 tag space with tiny field archives;
+        // the 1001st append must error, not panic or collide
+        let mut sub = Archive::new(json::obj(vec![("codec", json::s("sz3"))]));
+        sub.add_section("SZ3B", vec![1, 2, 3]);
+        let sub_bytes = sub.to_bytes();
+        let mut v2 = Archive::new_v2(json::obj(vec![("fields", Value::Arr(vec![]))]));
+        for _ in 0..Archive::MAX_FIELDS {
+            v2.add_field_archive(&sub).unwrap();
+        }
+        assert_eq!(v2.field_count(), Archive::MAX_FIELDS);
+        let err = v2.add_field_archive(&sub).unwrap_err();
+        assert!(err.to_string().contains("at most"), "{err}");
+        // count unchanged, existing sections intact
+        assert_eq!(v2.field_count(), Archive::MAX_FIELDS);
+        assert_eq!(v2.field_archive(999).unwrap().to_bytes(), sub_bytes);
+        assert!(v2.field_archive(1000).is_err(), "index out of tag space");
     }
 
     #[test]

@@ -288,6 +288,24 @@ pub fn gae_restore_stage(
     archive: &Archive,
     recon: &mut Tensor,
 ) -> Result<()> {
+    gae_restore_stage_region(dataset, stats, tau, archive, recon, None)
+}
+
+/// Region-of-interest variant of [`gae_restore_stage`]: when `region` is
+/// set, only the GAE blocks intersecting it are corrected — blocks the
+/// caller will crop away skip the O(d²) coefficient reconstruction. The
+/// GIDX index sets decode fully either way (they carry the per-block
+/// coefficient extents into GCOF, so the cursor walk cannot be skipped),
+/// and the corrected values inside the region are bit-identical to a
+/// full restore.
+pub fn gae_restore_stage_region(
+    dataset: &DatasetConfig,
+    stats: &NormStats,
+    tau: f32,
+    archive: &Archive,
+    recon: &mut Tensor,
+    region: Option<&crate::data::Region>,
+) -> Result<()> {
     if tau <= 0.0 || !archive.has_section("GBAS") {
         return Ok(());
     }
@@ -312,13 +330,41 @@ pub fn gae_restore_stage(
         });
         cur += n;
     }
-    let mut rows = vec![0f32; origins.len() * d];
-    for (bi, o) in origins.iter().enumerate() {
-        extract_block(recon, o, &dataset.gae_block, &mut rows[bi * d..(bi + 1) * d]);
+    // blocks to restore: all of them, or only the region's
+    let keep: Vec<usize> = match region {
+        Some(r) => {
+            r.validate_in(&dataset.dims)?;
+            (0..origins.len())
+                .filter(|&bi| r.intersects(&origins[bi], &dataset.gae_block))
+                .collect()
+        }
+        None => (0..origins.len()).collect(),
+    };
+    let mut rows = vec![0f32; keep.len() * d];
+    for (ri, &bi) in keep.iter().enumerate() {
+        extract_block(
+            recon,
+            &origins[bi],
+            &dataset.gae_block,
+            &mut rows[ri * d..(ri + 1) * d],
+        );
     }
-    gae_decode(&mut rows, d, &taus, &pca, &corrections)?;
-    for (bi, o) in origins.iter().enumerate() {
-        scatter_block(recon, o, &dataset.gae_block, &rows[bi * d..(bi + 1) * d]);
+    if keep.len() == origins.len() {
+        // full restore: use the decoded corrections as-is (no copies)
+        gae_decode(&mut rows, d, &taus, &pca, &corrections)?;
+    } else {
+        let kept_taus: Vec<f32> = keep.iter().map(|&bi| taus[bi]).collect();
+        let kept_corr: Vec<BlockCorrection> =
+            keep.iter().map(|&bi| corrections[bi].clone()).collect();
+        gae_decode(&mut rows, d, &kept_taus, &pca, &kept_corr)?;
+    }
+    for (ri, &bi) in keep.iter().enumerate() {
+        scatter_block(
+            recon,
+            &origins[bi],
+            &dataset.gae_block,
+            &rows[ri * d..(ri + 1) * d],
+        );
     }
     Ok(())
 }
@@ -516,6 +562,47 @@ mod tests {
         let mut untouched = base.clone();
         assert!(gae_bound_stage(&cfg, &stats, 0.0, &norm, &mut untouched).unwrap().is_none());
         assert_eq!(untouched.data(), base.data());
+    }
+
+    #[test]
+    fn region_restore_matches_full_restore_inside_region() {
+        use crate::config::{dataset_preset, DatasetKind, Scale};
+        use crate::data::Region;
+        use crate::util::json;
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke); // dims [24,32,32]
+        let norm = crate::data::generate(&cfg);
+        let stats = NormStats { kind: Normalization::ZScore, channels: vec![(0.0, 1.0)] };
+        let mut recon = norm.clone();
+        for v in recon.data_mut() {
+            *v *= 0.97;
+        }
+        let base = recon.clone();
+        let tau = 0.5f32;
+        let sections = gae_bound_stage(&cfg, &stats, tau, &norm, &mut recon)
+            .unwrap()
+            .expect("stage should run");
+        assert!(sections.corrected_blocks > 0);
+        let mut archive = Archive::new(json::obj(vec![]));
+        archive.add_section("GCOF", sections.gcof);
+        archive.add_section("GIDX", sections.gidx);
+        archive.add_section("GBAS", sections.gbas);
+        let mut full = base.clone();
+        gae_restore_stage(&cfg, &stats, tau, &archive, &mut full).unwrap();
+        let region = Region::parse("3:17,0:32,8:24").unwrap();
+        let mut partial = base.clone();
+        gae_restore_stage_region(&cfg, &stats, tau, &archive, &mut partial, Some(&region))
+            .unwrap();
+        // bit-identical inside the region
+        assert_eq!(
+            region.crop(&partial).unwrap().data(),
+            region.crop(&full).unwrap().data()
+        );
+        // and blocks fully outside were genuinely skipped
+        let outside = Region::parse("20:24,0:32,0:8").unwrap();
+        assert_eq!(
+            outside.crop(&partial).unwrap().data(),
+            outside.crop(&base).unwrap().data()
+        );
     }
 
     #[test]

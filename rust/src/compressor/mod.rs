@@ -11,10 +11,10 @@ pub mod gae;
 pub mod metrics;
 pub mod pipeline;
 
-pub use format::Archive;
+pub use format::{Archive, BlockIndex};
 pub use gae::{
-    coeff_bin, gae_apply, gae_bound_stage, gae_decode, gae_restore_stage, gae_taus,
-    BlockCorrection, GaeOutput, GaeSections,
+    coeff_bin, gae_apply, gae_bound_stage, gae_decode, gae_restore_stage,
+    gae_restore_stage_region, gae_taus, BlockCorrection, GaeOutput, GaeSections,
 };
 pub use metrics::{
     compression_ratio, log_histogram, mean_channel_nrmse, nrmse, nrmse_per_channel,

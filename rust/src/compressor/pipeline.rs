@@ -35,7 +35,7 @@ use crate::Result;
 use anyhow::ensure;
 
 use super::format::Archive;
-use super::gae::{gae_bound_stage, gae_restore_stage, GaeSections};
+use super::gae::{gae_bound_stage, gae_restore_stage_region, GaeSections};
 
 /// Compression statistics for reporting.
 #[derive(Debug, Clone)]
@@ -474,8 +474,34 @@ impl HierCompressor {
     /// (The method twin of [`Self::decompress_with_params`] — the codec
     /// trait's symmetric `compress`/`decompress` surface routes here.)
     pub fn decompress(&self, archive: &Archive) -> Result<Tensor> {
-        let h = &archive.header;
-        let want: Vec<&str> = h
+        self.verify_groups(archive)?;
+        Self::decompress_with_params(&self.rt, archive, &self.hbae, &self.baes)
+    }
+
+    /// Region-of-interest decompress: the AE stack still decodes in its
+    /// fixed-shape batches (the latent sections are whole-stream entropy
+    /// coded), but the GAE correction stage — O(d²) per corrected block —
+    /// runs only on the blocks intersecting `region`, and the result is
+    /// cropped. Bit-identical to cropping [`Self::decompress`].
+    pub fn decompress_region(
+        &self,
+        archive: &Archive,
+        region: &crate::data::Region,
+    ) -> Result<Tensor> {
+        self.verify_groups(archive)?;
+        let full = Self::decompress_inner(
+            &self.rt,
+            archive,
+            &self.hbae,
+            &self.baes,
+            Some(region),
+        )?;
+        region.crop(&full)
+    }
+
+    fn verify_groups(&self, archive: &Archive) -> Result<()> {
+        let want: Vec<&str> = archive
+            .header
             .req("bae_groups")?
             .as_arr()
             .unwrap_or(&[])
@@ -483,11 +509,8 @@ impl HierCompressor {
             .filter_map(|v| v.as_str())
             .collect();
         let have: Vec<&str> = self.baes.iter().map(|b| b.group.as_str()).collect();
-        ensure!(
-            want == have,
-            "archive BAE stack {want:?} != loaded {have:?}"
-        );
-        Self::decompress_with_params(&self.rt, archive, &self.hbae, &self.baes)
+        ensure!(want == have, "archive BAE stack {want:?} != loaded {have:?}");
+        Ok(())
     }
 
     /// Decompress an archive given explicitly-loaded parameters (static:
@@ -499,6 +522,16 @@ impl HierCompressor {
         hbae: &ParamStore,
         baes: &[ParamStore],
     ) -> Result<Tensor> {
+        Self::decompress_inner(rt, archive, hbae, baes, None)
+    }
+
+    fn decompress_inner(
+        rt: &Runtime,
+        archive: &Archive,
+        hbae: &ParamStore,
+        baes: &[ParamStore],
+        region: Option<&crate::data::Region>,
+    ) -> Result<Tensor> {
         let h = &archive.header;
         let dataset = DatasetConfig::from_json(h.req("dataset")?)?;
         let model = ModelConfig::from_json(h.req("model")?)?;
@@ -508,6 +541,9 @@ impl HierCompressor {
             hbae.group == h.req("hbae_group")?.as_str().unwrap_or(""),
             "hbae group mismatch"
         );
+        if let Some(r) = region {
+            r.validate_in(&dataset.dims)?;
+        }
 
         let qh = Quantizer::new(model.bin_hbae.max(0.0));
         let qb = Quantizer::new(model.bin_bae.max(0.0));
@@ -515,7 +551,7 @@ impl HierCompressor {
         let lb_all = decode_latent_groups(archive.section("BLAT")?, qb, baes.len())?;
 
         let mut recon = Self::decode_all(rt, &dataset, hbae, baes, &lh_all, &lb_all)?;
-        gae_restore_stage(&dataset, &stats, tau, archive, &mut recon)?;
+        gae_restore_stage_region(&dataset, &stats, tau, archive, &mut recon, region)?;
         Normalizer::invert(&stats, &mut recon);
         Ok(recon)
     }

@@ -10,6 +10,8 @@
 
 use crate::config::DatasetConfig;
 use crate::tensor::{extract_block, scatter_block, Tensor};
+use crate::Result;
+use anyhow::{bail, ensure};
 
 /// Resolved blocking geometry for one dataset config.
 #[derive(Debug, Clone)]
@@ -152,6 +154,205 @@ impl Blocking {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Regions of interest — the hyper-rectangles the Archive v3 block index
+// lets consumers decode without touching the rest of the payload
+// ---------------------------------------------------------------------------
+
+/// A half-open hyper-rectangle `[lo, hi)` in a field's index space.
+///
+/// Scientific consumers (post-hoc analysis, visualization) read small
+/// sub-regions of huge meshes; a `Region` names such a request. The CLI
+/// spelling is one `lo:hi` pair per dimension: `extract --region
+/// 0:8,16:48,0:64`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub lo: Vec<usize>,
+    pub hi: Vec<usize>,
+}
+
+impl Region {
+    /// A region from per-dim half-open bounds (every `lo < hi` required).
+    pub fn new(lo: Vec<usize>, hi: Vec<usize>) -> Result<Self> {
+        ensure!(lo.len() == hi.len(), "region lo/hi rank mismatch");
+        ensure!(!lo.is_empty(), "region must have at least one dimension");
+        for (d, (&l, &h)) in lo.iter().zip(&hi).enumerate() {
+            ensure!(l < h, "region dim {d} is empty ({l}:{h})");
+        }
+        Ok(Self { lo, hi })
+    }
+
+    /// The region covering all of `dims`.
+    pub fn full(dims: &[usize]) -> Self {
+        Self { lo: vec![0; dims.len()], hi: dims.to_vec() }
+    }
+
+    /// Parse the CLI syntax `i0:i1,j0:j1,...` (one pair per dimension).
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut lo = Vec::new();
+        let mut hi = Vec::new();
+        for part in s.split(',') {
+            let Some((a, b)) = part.split_once(':') else {
+                bail!("bad region component {part:?} (expected lo:hi)");
+            };
+            let l: usize = a
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad region bound {a:?} in {part:?}"))?;
+            let h: usize = b
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad region bound {b:?} in {part:?}"))?;
+            lo.push(l);
+            hi.push(h);
+        }
+        Self::new(lo, hi)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Per-dim extent `hi - lo`.
+    pub fn shape(&self) -> Vec<usize> {
+        self.lo.iter().zip(&self.hi).map(|(&l, &h)| h - l).collect()
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Does the region fit inside a field of shape `dims`?
+    pub fn validate_in(&self, dims: &[usize]) -> Result<()> {
+        ensure!(
+            self.rank() == dims.len(),
+            "region rank {} != field rank {}",
+            self.rank(),
+            dims.len()
+        );
+        for (d, (&h, &dim)) in self.hi.iter().zip(dims).enumerate() {
+            ensure!(h <= dim, "region dim {d} ends at {h}, field has {dim}");
+        }
+        Ok(())
+    }
+
+    /// Does the region overlap the block at `origin` with shape `size`?
+    pub fn intersects(&self, origin: &[usize], size: &[usize]) -> bool {
+        origin
+            .iter()
+            .zip(size)
+            .zip(self.lo.iter().zip(&self.hi))
+            .all(|((&o, &s), (&l, &h))| o < h && o + s > l)
+    }
+
+    /// Copy the region out of a full-field tensor (row-major).
+    pub fn crop(&self, t: &Tensor) -> Result<Tensor> {
+        self.validate_in(t.shape())?;
+        let shape = self.shape();
+        let n = self.n_points();
+        let rank = self.rank();
+        let strides = t.strides();
+        let mut data = Vec::with_capacity(n);
+        // copy innermost-dim runs; iterate over the outer dims row-major
+        let run = shape[rank - 1];
+        let outer: usize = n / run;
+        let mut idx = vec![0usize; rank];
+        for _ in 0..outer {
+            let mut pos = 0usize;
+            for d in 0..rank - 1 {
+                pos += (self.lo[d] + idx[d]) * strides[d];
+            }
+            pos += self.lo[rank - 1];
+            data.extend_from_slice(&t.data()[pos..pos + run]);
+            // advance the outer multi-index
+            for d in (0..rank.saturating_sub(1)).rev() {
+                idx[d] += 1;
+                if idx[d] < shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Ok(Tensor::new(shape, data))
+    }
+}
+
+/// Row-major ids of the tiles (of shape `tile`, ceil-tiling `dims`) that
+/// intersect `region` — the blocks a v3 region decode must touch.
+pub fn region_tile_ids(dims: &[usize], tile: &[usize], region: &Region) -> Vec<usize> {
+    assert_eq!(dims.len(), tile.len());
+    assert_eq!(dims.len(), region.rank());
+    let counts: Vec<usize> = dims.iter().zip(tile).map(|(&d, &b)| d.div_ceil(b)).collect();
+    // per-dim tile-index ranges covered by the region
+    let t_lo: Vec<usize> = region.lo.iter().zip(tile).map(|(&l, &b)| l / b).collect();
+    let t_hi: Vec<usize> = region
+        .hi
+        .iter()
+        .zip(tile)
+        .zip(&counts)
+        .map(|((&h, &b), &c)| h.div_ceil(b).min(c))
+        .collect();
+    let total: usize = t_lo.iter().zip(&t_hi).map(|(&l, &h)| h - l).product();
+    let mut out = Vec::with_capacity(total);
+    let rank = dims.len();
+    let mut idx = t_lo.clone();
+    for _ in 0..total {
+        let mut id = 0usize;
+        for d in 0..rank {
+            id = id * counts[d] + idx[d];
+        }
+        out.push(id);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < t_hi[d] {
+                break;
+            }
+            idx[d] = t_lo[d];
+        }
+    }
+    out
+}
+
+/// Scatter a decoded tile (at absolute `origin`, shape `size`, row-major
+/// in `data`) into `dst`, which holds only `region` — the reassembly step
+/// of a region decode. Positions outside the region are dropped, exactly
+/// like [`scatter_block`] drops positions outside the field.
+pub fn scatter_tile_into_region(
+    dst: &mut Tensor,
+    region: &Region,
+    origin: &[usize],
+    size: &[usize],
+    data: &[f32],
+) {
+    let rank = region.rank();
+    assert_eq!(origin.len(), rank);
+    assert_eq!(size.len(), rank);
+    assert_eq!(data.len(), size.iter().product::<usize>());
+    assert_eq!(dst.shape(), &region.shape()[..]);
+    let strides = dst.strides();
+    let mut idx = vec![0usize; rank];
+    for (oi, &val) in data.iter().enumerate() {
+        let mut rem = oi;
+        for d in (0..rank).rev() {
+            idx[d] = rem % size[d];
+            rem /= size[d];
+        }
+        let mut pos = 0usize;
+        let mut inside = true;
+        for d in 0..rank {
+            let p = origin[d] + idx[d];
+            if p < region.lo[d] || p >= region.hi[d] {
+                inside = false;
+                break;
+            }
+            pos += (p - region.lo[d]) * strides[d];
+        }
+        if inside {
+            dst.data_mut()[pos] = val;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +445,78 @@ mod tests {
         assert_eq!(b.counts[0], 8);
         assert_eq!(b.hyper_groups, 1);
         assert_eq!(b.k, 8);
+    }
+
+    #[test]
+    fn region_parse_and_validate() {
+        let r = Region::parse("0:8,16:48").unwrap();
+        assert_eq!(r.lo, vec![0, 16]);
+        assert_eq!(r.hi, vec![8, 48]);
+        assert_eq!(r.shape(), vec![8, 32]);
+        assert_eq!(r.n_points(), 256);
+        r.validate_in(&[8, 48]).unwrap();
+        assert!(r.validate_in(&[8, 47]).is_err(), "out of bounds");
+        assert!(r.validate_in(&[8, 48, 2]).is_err(), "rank mismatch");
+        for bad in ["", "1:2,", "3:1", "2:2", "a:b", "1-2", "1:2,x:4"] {
+            assert!(Region::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn region_crop_matches_naive_indexing() {
+        let t = Tensor::new(vec![4, 5, 6], (0..120).map(|i| i as f32).collect());
+        let r = Region::parse("1:3,2:5,0:4").unwrap();
+        let c = r.crop(&t).unwrap();
+        assert_eq!(c.shape(), &[2, 3, 4]);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..4 {
+                    let want = ((i + 1) * 30 + (j + 2) * 6 + k) as f32;
+                    assert_eq!(c.data()[i * 12 + j * 4 + k], want);
+                }
+            }
+        }
+        // full region is the identity
+        let full = Region::full(t.shape()).crop(&t).unwrap();
+        assert_eq!(full.data(), t.data());
+    }
+
+    #[test]
+    fn region_tile_ids_cover_exactly_intersecting_tiles() {
+        let dims = vec![10, 12];
+        let tile = vec![4, 4];
+        // tiles: 3 x 3 grid, row-major ids 0..9
+        let r = Region::parse("5:9,0:5").unwrap();
+        // rows 5..9 touch tile-rows 1..3; cols 0..5 touch tile-cols 0..2
+        assert_eq!(region_tile_ids(&dims, &tile, &r), vec![3, 4, 6, 7]);
+        // and matches the intersects() predicate over all origins
+        let origins = crate::tensor::block_origins(&dims, &tile);
+        let by_pred: Vec<usize> = origins
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| r.intersects(o, &tile))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(region_tile_ids(&dims, &tile, &r), by_pred);
+        // full region selects every tile
+        let full = Region::full(&dims);
+        assert_eq!(region_tile_ids(&dims, &tile, &full).len(), origins.len());
+    }
+
+    #[test]
+    fn scatter_into_region_reassembles_a_crop() {
+        let dims = vec![9, 7];
+        let tile = vec![4, 4];
+        let t = Tensor::new(dims.clone(), (0..63).map(|i| i as f32).collect());
+        let r = Region::parse("2:8,1:6").unwrap();
+        let mut out = Tensor::zeros(r.shape());
+        let origins = crate::tensor::block_origins(&dims, &tile);
+        let mut buf = vec![0f32; 16];
+        for id in region_tile_ids(&dims, &tile, &r) {
+            extract_block(&t, &origins[id], &tile, &mut buf);
+            scatter_tile_into_region(&mut out, &r, &origins[id], &tile, &buf);
+        }
+        assert_eq!(out.data(), r.crop(&t).unwrap().data());
     }
 
     #[test]

@@ -14,7 +14,9 @@ mod normalize;
 mod s3d;
 mod xgc;
 
-pub use blocking::{BlockLayout, Blocking};
+pub use blocking::{
+    region_tile_ids, scatter_tile_into_region, BlockLayout, Blocking, Region,
+};
 pub use e3sm::generate_e3sm;
 pub use io::{read_f32_file, write_f32_file};
 pub use normalize::{NormStats, Normalizer};

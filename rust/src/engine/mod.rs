@@ -16,8 +16,9 @@
 //!   in the header, and CR accounting that recurses into the per-field
 //!   payloads (headers excluded — the paper's accounting). v1
 //!   single-field archives remain fully readable: `Archive::from_bytes`
-//!   accepts both versions and `CodecBuilder::for_archive` restores
-//!   either.
+//!   accepts every version and `CodecBuilder::for_archive` restores any.
+//!   [`CodecExt::decompress_set_region`] decodes one region of interest
+//!   of every field (v3 fields touch only the intersecting blocks).
 //! * [`Executor`] — the persistent fork-join worker pool (+ per-thread
 //!   [`Scratch`] arenas) behind every block-parallel stage: the SZ3-like
 //!   and ZFP-like baselines, the GBAE latent coder, the hier GAE bound
@@ -97,6 +98,39 @@ pub trait CodecExt: Codec {
         }
         Ok(set)
     }
+
+    /// Restore only `region` of every field of a v2 container, in
+    /// recorded order. Returns `(name, region tensor)` pairs (region
+    /// shapes don't match the dataset dims, so this is not a
+    /// [`FieldSet`]). Fields stored as v3 archives decode only the
+    /// blocks the region intersects; v1 fields fall back to full decode
+    /// + crop — the API is uniform across versions.
+    fn decompress_set_region(
+        &self,
+        archive: &Archive,
+        region: &crate::data::Region,
+    ) -> Result<Vec<(String, crate::tensor::Tensor)>> {
+        ensure!(
+            archive.is_multi_field(),
+            "not a multi-field (v2) archive — use Codec::decompress_region"
+        );
+        let names = archive.field_names()?;
+        ensure!(
+            names.len() == archive.field_count(),
+            "v2 header lists {} fields but container has {} sections",
+            names.len(),
+            archive.field_count()
+        );
+        let mut out = Vec::with_capacity(names.len());
+        for (i, name) in names.iter().enumerate() {
+            let sub = archive.field_archive(i)?;
+            let field = self
+                .decompress_region(&sub, region)
+                .with_context(|| format!("decompressing region of field {name:?}"))?;
+            out.push((name.clone(), field));
+        }
+        Ok(out)
+    }
 }
 
 impl<C: Codec + ?Sized> CodecExt for C {}
@@ -163,7 +197,7 @@ fn pack_set(
     ]);
     let mut archive = Archive::new_v2(header);
     for sub in &subs {
-        archive.add_field_archive(sub);
+        archive.add_field_archive(sub)?;
     }
     Ok(archive)
 }
@@ -210,6 +244,28 @@ mod tests {
             let entry = stats.req(name).unwrap();
             assert!(entry.req("range").unwrap().as_f64().unwrap() > 0.0);
         }
+    }
+
+    #[test]
+    fn set_region_decode_matches_cropped_full_decode() {
+        use crate::data::Region;
+        let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 2);
+        let codec = Sz3Codec::new(set.dataset().clone());
+        let archive = codec.compress_set(&set, &ErrorBound::Nrmse(1e-3)).unwrap();
+        let full = codec.decompress_set(&archive).unwrap();
+        let region = Region::parse("2:14,8:24,0:16").unwrap();
+        let parts = codec.decompress_set_region(&archive, &region).unwrap();
+        assert_eq!(parts.len(), 2);
+        for (i, (name, t)) in parts.iter().enumerate() {
+            assert_eq!(name, &set.names()[i]);
+            assert_eq!(t.shape(), &region.shape()[..]);
+            assert_eq!(t.data(), region.crop(full.field(i)).unwrap().data());
+        }
+        // misuse: the set-region API on a single-field archive
+        let single = codec
+            .compress(set.field(0), &ErrorBound::Nrmse(1e-3))
+            .unwrap();
+        assert!(codec.decompress_set_region(&single, &region).is_err());
     }
 
     #[test]

@@ -31,6 +31,12 @@
 //! Each codec derives its own knob from the bound (Eq.-11 τ, pointwise ε,
 //! or a certified precision search) instead of taking a raw `f32`.
 //!
+//! Archives written by the pure-rust codecs carry a **block index**
+//! (Archive v3): [`codec::Codec::decompress_region`] decodes only the
+//! blocks a requested [`data::Region`] hyper-rectangle intersects,
+//! bit-identical to cropping a full decode; v1/v2 archives transparently
+//! fall back to full decode + crop.
+//!
 //! ## The dataset engine
 //!
 //! [`engine`] scales the codec API from field-level to dataset-level:

@@ -8,6 +8,7 @@
 //! attn-reduce compress   --all-vars [--vars N]    # one Archive v2 per dataset
 //! attn-reduce compress   --in a.f32,b.f32,...     # multi-input -> Archive v2
 //! attn-reduce decompress --in data.ardc --out recon.f32
+//! attn-reduce extract    --in data.ardc --region 0:8,16:48,0:64 --out sub.f32
 //! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
 //! attn-reduce info       # manifest + platform summary
 //! ```
@@ -42,6 +43,11 @@ COMMANDS:
                  --in a.f32,b.f32,...    load several fields
   decompress   decompress an archive using only its header (--in A --out F;
                a v2 archive writes one F.<field>.f32 per field)
+  extract      decode only a region of interest (--in A --region
+               i0:i1,j0:j1,... --out F); v3 archives touch only the
+               intersecting blocks, v1/v2 fall back to full decode + crop;
+               multi-field archives take [--field NAME] or write one
+               F.<field>.f32 per field
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         show artifact manifest + platform
   help         show this message
@@ -89,6 +95,7 @@ fn run(raw: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "compress" => cmd_compress(&args),
         "decompress" => cmd_decompress(&args),
+        "extract" => cmd_extract(&args),
         "experiment" => {
             let id = args
                 .positional
@@ -299,6 +306,65 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let recon = codec.decompress(&archive)?;
     data::write_f32_file(out, &recon)?;
     println!("codec = {} -> wrote {out} ({} points)", codec.id(), recon.len());
+    Ok(())
+}
+
+fn cmd_extract(args: &Args) -> Result<()> {
+    let archive = Archive::load(
+        args.get("in").ok_or_else(|| anyhow::anyhow!("--in archive required"))?,
+    )?;
+    let region = attn_reduce::data::Region::parse(
+        args.get("region")
+            .ok_or_else(|| anyhow::anyhow!("--region i0:i1,j0:j1,... required"))?,
+    )?;
+    let mut b = builder(args)?;
+    let codec = b.for_archive(&archive)?;
+    let out = args.get_or("out", "region.f32");
+    anyhow::ensure!(
+        archive.is_multi_field() || args.get("field").is_none(),
+        "--field only applies to multi-field (v2) archives; this archive holds one field"
+    );
+    if archive.is_multi_field() {
+        if let Some(name) = args.get("field") {
+            let names = archive.field_names()?;
+            let i = names
+                .iter()
+                .position(|n| n == name)
+                .ok_or_else(|| anyhow::anyhow!("no field {name:?} (have: {names:?})"))?;
+            let sub = archive.field_archive(i)?;
+            let t = codec.decompress_region(&sub, &region)?;
+            data::write_f32_file(out, &t)?;
+            println!(
+                "codec = {} -> wrote {out} (field {name:?}, region {:?}, {} points)",
+                codec.id(),
+                region.shape(),
+                t.len()
+            );
+            return Ok(());
+        }
+        let parts = codec.decompress_set_region(&archive, &region)?;
+        let stem = out.strip_suffix(".f32").unwrap_or(out);
+        for (name, t) in &parts {
+            let path = format!("{stem}.{name}.f32");
+            data::write_f32_file(&path, t)?;
+            println!("  wrote {path} ({} points)", t.len());
+        }
+        println!(
+            "codec = {} -> region {:?} of {} fields extracted",
+            codec.id(),
+            region.shape(),
+            parts.len()
+        );
+        return Ok(());
+    }
+    let t = codec.decompress_region(&archive, &region)?;
+    data::write_f32_file(out, &t)?;
+    println!(
+        "codec = {} -> wrote {out} (region {:?}, {} points)",
+        codec.id(),
+        region.shape(),
+        t.len()
+    );
     Ok(())
 }
 

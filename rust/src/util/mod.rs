@@ -9,4 +9,5 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod parallel;
+pub mod propgen;
 pub mod rng;

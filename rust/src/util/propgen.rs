@@ -1,0 +1,163 @@
+//! Seeded case generation + shrink-by-halving for the in-tree property
+//! harness (`tests/prop_roundtrip.rs`).
+//!
+//! No external crates: cases derive from [`crate::util::rng::Rng`], so a
+//! failure reproduces from `(seed, case index)` alone. CI pins the seed
+//! via `ATTN_REDUCE_PROP_SEED`; local runs default to a fixed seed so
+//! `cargo test` is deterministic everywhere. On failure the harness
+//! halves the dims until the failure disappears and reports the smallest
+//! still-failing geometry.
+
+use crate::config::{DatasetConfig, DatasetKind, Normalization};
+use crate::data::Region;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// The harness seed: `ATTN_REDUCE_PROP_SEED` when set (CI pins it),
+/// otherwise `default`.
+pub fn seed_from_env(default: u64) -> u64 {
+    std::env::var("ATTN_REDUCE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Random-case generator over dataset geometries, fields, and regions.
+pub struct CaseGen {
+    rng: Rng,
+}
+
+impl CaseGen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed) }
+    }
+
+    /// A random dataset geometry: rank 2..=4, modest dims (decode cost
+    /// is bounded so the zfp certification search stays test-sized),
+    /// arbitrary AE blocking (tiles need not divide the dims — edge
+    /// tiles are padded), and a small GAE block.
+    pub fn dataset(&mut self) -> DatasetConfig {
+        let rank = 2 + self.rng.below(3);
+        // smaller per-dim extents at higher rank to bound total points
+        let dim_max = if rank == 4 { 10 } else { 18 };
+        let dims: Vec<usize> =
+            (0..rank).map(|_| 4 + self.rng.below(dim_max - 3)).collect();
+        let ae_block: Vec<usize> = dims
+            .iter()
+            .map(|&d| 1 + self.rng.below(d.min(6)))
+            .collect();
+        let gae_block: Vec<usize> = dims
+            .iter()
+            .map(|&d| 1 + self.rng.below(d.min(4)))
+            .collect();
+        let hyper_axis = self.rng.below(rank);
+        DatasetConfig {
+            kind: DatasetKind::E3sm,
+            dims,
+            ae_block,
+            k: 1 + self.rng.below(3),
+            hyper_axis,
+            gae_block,
+            normalization: Normalization::ZScore,
+            seed: self.rng.next_u64(),
+        }
+    }
+
+    /// A random field over `dims`: smooth multi-frequency structure plus
+    /// mild noise, with a deterministic ramp so the range is never zero
+    /// (a constant field has no derivable ε).
+    pub fn field(&mut self, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        let mut rng = self.rng.fork(n as u64);
+        let (a, b, amp) = (
+            rng.range(1.0, 9.0),
+            rng.range(5.0, 40.0),
+            rng.range(0.5, 4.0),
+        );
+        let data: Vec<f32> = (0..n)
+            .map(|i| {
+                let x = i as f64 / n.max(1) as f64;
+                (amp * ((a * x * std::f64::consts::PI).sin()
+                    + 0.3 * (b * x).cos()
+                    + 0.05 * rng.normal())
+                    + x) as f32
+            })
+            .collect();
+        Tensor::new(dims.to_vec(), data)
+    }
+
+    /// A random non-empty in-bounds region of `dims`.
+    pub fn region(&mut self, dims: &[usize]) -> Region {
+        let lo: Vec<usize> = dims.iter().map(|&d| self.rng.below(d)).collect();
+        let hi: Vec<usize> = lo
+            .iter()
+            .zip(dims)
+            .map(|(&l, &d)| l + 1 + self.rng.below(d - l))
+            .collect();
+        Region::new(lo, hi).expect("generated region is valid")
+    }
+}
+
+/// Shrink a failing geometry by halving every dim (floor, min 2),
+/// clamping the block shapes to the new dims. `None` once nothing can
+/// shrink further — the current case is the minimal reproduction.
+pub fn shrink(cfg: &DatasetConfig) -> Option<DatasetConfig> {
+    if cfg.dims.iter().all(|&d| d <= 2) {
+        return None;
+    }
+    let dims: Vec<usize> = cfg.dims.iter().map(|&d| (d / 2).max(2)).collect();
+    let clamp = |block: &[usize]| -> Vec<usize> {
+        block.iter().zip(&dims).map(|(&b, &d)| b.min(d).max(1)).collect()
+    };
+    Some(DatasetConfig {
+        kind: cfg.kind,
+        dims: dims.clone(),
+        ae_block: clamp(&cfg.ae_block),
+        k: cfg.k,
+        hyper_axis: cfg.hyper_axis,
+        gae_block: clamp(&cfg.gae_block),
+        normalization: cfg.normalization,
+        seed: cfg.seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let mut a = CaseGen::new(7);
+        let mut b = CaseGen::new(7);
+        for _ in 0..5 {
+            let ca = a.dataset();
+            let cb = b.dataset();
+            assert_eq!(ca.dims, cb.dims);
+            assert_eq!(ca.ae_block, cb.ae_block);
+            assert_eq!(a.field(&ca.dims).data(), b.field(&cb.dims).data());
+            let (ra, rb) = (a.region(&ca.dims), b.region(&cb.dims));
+            assert_eq!(ra, rb);
+            ra.validate_in(&ca.dims).unwrap();
+            assert!(a.field(&ca.dims).range() > 0.0);
+            // keep streams aligned after the extra field draw
+            let _ = b.field(&cb.dims);
+        }
+    }
+
+    #[test]
+    fn shrink_halves_until_minimal() {
+        let mut g = CaseGen::new(3);
+        let mut cfg = g.dataset();
+        let mut steps = 0;
+        while let Some(smaller) = shrink(&cfg) {
+            assert!(smaller.dims.iter().sum::<usize>() < cfg.dims.iter().sum::<usize>());
+            for (b, d) in smaller.ae_block.iter().zip(&smaller.dims) {
+                assert!(b <= d && *b >= 1);
+            }
+            cfg = smaller;
+            steps += 1;
+            assert!(steps < 32, "shrink must terminate");
+        }
+        assert!(cfg.dims.iter().all(|&d| d == 2));
+    }
+}

@@ -167,6 +167,77 @@ fn all_vars_cli_builds_one_v2_archive_and_restores_every_field() {
 }
 
 #[test]
+fn extract_cli_decodes_a_region_matching_the_full_decode() {
+    let archive_p = tmp("xfield.ardc");
+    let recon_p = tmp("xrecon.f32");
+    let region_p = tmp("xregion.f32");
+
+    // e3sm smoke is [24, 32, 32]
+    let out = bin()
+        .args([
+            "compress", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset", "e3sm",
+            "--scale", "smoke", "--out",
+        ])
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    assert!(bin()
+        .arg("decompress")
+        .arg("--in")
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&recon_p)
+        .status()
+        .unwrap()
+        .success());
+
+    // extract a sub-cube; like decompress it needs only --in (+ region)
+    let out = bin()
+        .args(["extract", "--region", "2:10,4:20,8:24", "--in"])
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&region_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("region"), "{stdout}");
+
+    // the extracted region equals the crop of the full decode, bit for bit
+    let full = read_f32(&recon_p);
+    let part = read_f32(&region_p);
+    assert_eq!(part.len(), 8 * 16 * 16);
+    let (h, w) = (32, 32);
+    let mut want = Vec::new();
+    for i in 2..10 {
+        for j in 4..20 {
+            for k in 8..24 {
+                want.push(full[(i * h + j) * w + k]);
+            }
+        }
+    }
+    assert_eq!(part.len(), want.len());
+    for (a, b) in part.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // bad regions are usage errors, not panics
+    let out = bin()
+        .args(["extract", "--region", "9:1,0:4,0:4", "--in"])
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("region"));
+
+    let out = bin().args(["extract", "--in"]).arg(&archive_p).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--region"));
+}
+
+#[test]
 fn threads_flag_rejects_garbage() {
     let out = bin()
         .args(["compress", "--codec", "sz3", "--scale", "smoke", "--threads", "zero"])

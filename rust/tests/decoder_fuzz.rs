@@ -1,0 +1,234 @@
+//! Decoder corruption fuzzing, extending the `archive_format.rs`-style
+//! sweeps to every untrusted byte stream a consumer can hand the crate:
+//! the chunked lossless container (magic 0xB4), the bit-level Huffman
+//! stage, the SZ3/ZFP baseline streams, and the new v3 `BIDX` block
+//! index.
+//!
+//! Contract: **truncated** input always returns `Err`; **mutated** input
+//! must never panic and never balloon memory (every length that sizes an
+//! allocation is capped by the declared geometry before use). Bit flips
+//! in opaque payload bytes may legally decode to different values — the
+//! invariant there is no-panic plus a well-formed result.
+
+use attn_reduce::baselines::{Sz3Like, ZfpLike};
+use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound, Sz3Codec};
+use attn_reduce::coder::{
+    huffman_decode, huffman_encode, lossless_compress, lossless_decompress,
+};
+use attn_reduce::compressor::Archive;
+use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
+use attn_reduce::data::{self, Region};
+use attn_reduce::tensor::Tensor;
+use attn_reduce::util::rng::Rng;
+
+/// Evenly-spaced sample of cut points (full sweeps are quadratic in
+/// stream size; sampling keeps the test fast while covering every
+/// framing field of interest via the dense prefix).
+fn cuts(len: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (0..len.min(64)).collect();
+    let step = (len / 199).max(1);
+    out.extend((64..len).step_by(step));
+    out.push(len.saturating_sub(1));
+    out
+}
+
+fn smooth_field(shape: Vec<usize>, seed: u64) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(seed);
+    let (a, b) = (rng.uniform() * 5.0 + 1.0, rng.uniform());
+    let data: Vec<f32> = (0..n)
+        .map(|i| {
+            let x = i as f64 / 57.0;
+            ((a * x).sin() + 0.2 * (b + x).cos()) as f32
+        })
+        .collect();
+    Tensor::new(shape, data)
+}
+
+#[test]
+fn chunked_lossless_truncations_always_error() {
+    // > PAR_CHUNK so the 0xB4 chunked container is exercised
+    let mut rng = Rng::new(11);
+    let mut raw = Vec::with_capacity(attn_reduce::coder::lossless::PAR_CHUNK + 5000);
+    while raw.len() < attn_reduce::coder::lossless::PAR_CHUNK + 5000 {
+        let run = 1 + (rng.next_u64() % 40) as usize;
+        let byte = (rng.next_u64() % 5) as u8 * 50;
+        raw.extend(std::iter::repeat(byte).take(run));
+    }
+    let c = lossless_compress(&raw).unwrap();
+    assert_eq!(c[0], 0xB4, "large input should use the chunked container");
+    for cut in cuts(c.len()) {
+        assert!(
+            lossless_decompress(&c[..cut], raw.len()).is_err(),
+            "chunked cut {cut} of {} parsed",
+            c.len()
+        );
+    }
+}
+
+#[test]
+fn chunked_lossless_bitflips_never_panic_and_respect_cap() {
+    let raw: Vec<u8> = (0..attn_reduce::coder::lossless::PAR_CHUNK + 777)
+        .map(|i| (i % 251) as u8)
+        .collect();
+    let c = lossless_compress(&raw).unwrap();
+    let mut rng = Rng::new(23);
+    for _ in 0..400 {
+        let mut m = c.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        // Err or Ok — never panic, and Ok output never exceeds the cap
+        if let Ok(out) = lossless_decompress(&m, raw.len()) {
+            assert!(out.len() <= raw.len());
+        }
+    }
+}
+
+#[test]
+fn huffman_bitstream_fuzz_never_panics() {
+    let mut rng = Rng::new(37);
+    let values: Vec<i32> = (0..4000)
+        .map(|_| (rng.next_u64() % 23) as i32 - 11)
+        .collect();
+    let enc = huffman_encode(&values);
+    // truncations: structured Err or a shorter-but-well-formed decode,
+    // never a panic (trailing padding cuts can still satisfy n_values)
+    for cut in cuts(enc.len()) {
+        if let Ok((vals, used)) = huffman_decode(&enc[..cut]) {
+            assert_eq!(vals.len(), values.len());
+            assert!(used <= cut);
+        }
+    }
+    // bit flips across table, counts, and bitstream
+    for _ in 0..500 {
+        let mut m = enc.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        let _ = huffman_decode(&m); // must not panic
+    }
+}
+
+#[test]
+fn sz3_stream_truncations_error_and_flips_never_panic() {
+    let t = smooth_field(vec![6, 16, 16], 5);
+    let stream = Sz3Like::new(1e-3).compress(&t).unwrap();
+    for cut in cuts(stream.len()) {
+        assert!(
+            Sz3Like::decompress(&stream[..cut]).is_err(),
+            "sz3 cut {cut} of {} parsed",
+            stream.len()
+        );
+    }
+    let mut rng = Rng::new(41);
+    for _ in 0..400 {
+        let mut m = stream.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        // tight cap: a corrupt header may not allocate past the true size
+        let _ = Sz3Like::decompress_capped(&m, t.len());
+    }
+}
+
+#[test]
+fn zfp_stream_truncations_error_and_flips_never_panic() {
+    let t = smooth_field(vec![5, 12, 12], 7);
+    let stream = ZfpLike::new(14).compress(&t).unwrap();
+    for cut in cuts(stream.len()) {
+        assert!(
+            ZfpLike::decompress(&stream[..cut]).is_err(),
+            "zfp cut {cut} of {} parsed",
+            stream.len()
+        );
+    }
+    let mut rng = Rng::new(43);
+    for _ in 0..400 {
+        let mut m = stream.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        let _ = ZfpLike::decompress_capped(&m, t.len());
+    }
+}
+
+/// A real v3 archive with its BIDX section located in the serialized
+/// bytes, so the index itself can be attacked in place.
+fn v3_archive_bytes() -> (Vec<u8>, usize, usize) {
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let codec = Sz3Codec::new(cfg);
+    let archive = codec.compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    let bytes = archive.to_bytes();
+    let tag_pos = bytes
+        .windows(4)
+        .position(|w| w == b"BIDX")
+        .expect("v3 archive has an index section");
+    let len = u64::from_le_bytes(bytes[tag_pos + 4..tag_pos + 12].try_into().unwrap());
+    (bytes, tag_pos + 12, len as usize)
+}
+
+#[test]
+fn v3_index_corruption_never_panics_and_oob_extents_error() {
+    let (bytes, idx_off, idx_len) = v3_archive_bytes();
+    let region = Region::parse("0:6,0:16,0:16").unwrap();
+    let mut rng = Rng::new(47);
+    let mut builder = CodecBuilder::new();
+    // dense flip sweep over the entire index section
+    for pos in idx_off..idx_off + idx_len {
+        for _ in 0..2 {
+            let mut m = bytes.clone();
+            m[pos] ^= 1 << rng.below(8);
+            let Ok(archive) = Archive::from_bytes(&m) else {
+                continue;
+            };
+            let Ok(codec) = builder.for_archive(&archive) else {
+                continue;
+            };
+            // Err or Ok with the right shape — never a panic
+            if let Ok(t) = codec.decompress(&archive) {
+                assert_eq!(t.shape(), &[24, 32, 32]);
+            }
+            if let Ok(t) = codec.decompress_region(&archive, &region) {
+                assert_eq!(t.shape(), &region.shape()[..]);
+            }
+        }
+    }
+    // an index whose extents point past the payload must error cleanly
+    let mut m = bytes.clone();
+    // first entry offset lives right after rank(4) + tile dims(3 x 4) + count(8)
+    let first_entry = idx_off + 4 + 3 * 4 + 8;
+    m[first_entry..first_entry + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    if let Ok(archive) = Archive::from_bytes(&m) {
+        let codec = builder.for_archive(&archive).unwrap();
+        assert!(codec.decompress(&archive).is_err(), "oob extent must error");
+        assert!(codec.decompress_region(&archive, &region).is_err());
+    }
+    // truncating anywhere inside the archive still always errors
+    for cut in cuts(bytes.len()) {
+        assert!(Archive::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+    }
+}
+
+#[test]
+fn v3_payload_bitflips_never_panic() {
+    let (bytes, _, _) = v3_archive_bytes();
+    let payload_pos = bytes
+        .windows(4)
+        .position(|w| w == b"SZ3B")
+        .expect("payload section")
+        + 12;
+    let mut rng = Rng::new(53);
+    let mut builder = CodecBuilder::new();
+    let region = Region::parse("2:20,0:8,8:30").unwrap();
+    for _ in 0..300 {
+        let mut m = bytes.clone();
+        let pos = payload_pos + rng.below(bytes.len() - payload_pos);
+        m[pos] ^= 1 << rng.below(8);
+        let Ok(archive) = Archive::from_bytes(&m) else {
+            continue;
+        };
+        let Ok(codec) = builder.for_archive(&archive) else {
+            continue;
+        };
+        let _ = codec.decompress(&archive);
+        let _ = codec.decompress_region(&archive, &region);
+    }
+}

@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Generate the golden conformance corpus (see README.md in this dir).
+
+The archives are handcrafted minimal-but-valid instances of the ARDC
+container formats:
+
+  v1_sz3.ardc  -- version-1 single-field archive, whole-stream SZ3B payload
+  v2_sz3.ardc  -- version-2 multi-field container embedding two v1 archives
+  v3_sz3.ardc  -- version-3 block-indexed archive (per-tile SZ3B + BIDX)
+
+Each SZ3 stream stores row 0 of its lattice as raw ("unpredictable")
+values and codes every later row as Lorenzo code 0, which makes the
+decoded field an exact row-0 repeat -- so the expected outputs are known
+in closed form and the streams still exercise the real decode machinery:
+container framing, header JSON, the canonical two-symbol Huffman table,
+the LZSS literal path, the Lorenzo predictor, and the raw-value path.
+
+These files are *frozen*: they pin decoder backward compatibility
+byte-for-byte. Never regenerate an existing golden after its format has
+shipped -- add a new one instead when a new container version lands.
+"""
+
+import json
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+I32_MIN = -(1 << 31)  # the SZ3 "unpredictable" sentinel code
+
+
+def varint(v: int) -> bytes:
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            out.append(b)
+            return bytes(out)
+        out.append(b | 0x80)
+
+
+def lzss_literals(data: bytes) -> bytes:
+    """LZSS stream using only literal tokens (always valid, never optimal)."""
+    out = bytearray([0xB3])
+    out += varint(len(data))
+    for g in range(0, len(data), 8):
+        chunk = data[g : g + 8]
+        out.append((1 << len(chunk)) - 1)  # flag bits: all literals
+        out += chunk
+    return bytes(out)
+
+
+def huffman_two_symbol(n_unpred: int, n_zero: int) -> bytes:
+    """Huffman stream for [UNPRED]*n_unpred + [0]*n_zero (in that order).
+
+    Canonical table sorted by (len, symbol): UNPRED (i32 MIN) gets code 0,
+    symbol 0 gets code 1; both length 1. Bits are packed LSB-first.
+    """
+    out = bytearray()
+    out += struct.pack("<I", 2)
+    out += struct.pack("<i", I32_MIN) + b"\x01"
+    out += struct.pack("<i", 0) + b"\x01"
+    out += struct.pack("<Q", n_unpred + n_zero)
+    bits = [0] * n_unpred + [1] * n_zero
+    for g in range(0, len(bits), 8):
+        byte = 0
+        for j, bit in enumerate(bits[g : g + 8]):
+            byte |= bit << j
+        out.append(byte)
+    return bytes(out)
+
+
+def sz3_stream(eps: float, dims: list[int], row0: list[float]) -> bytes:
+    """SZ3 payload over `dims` (rank 2: [rows, cols]) decoding to a field
+    whose every row equals `row0` (row 0 raw, later rows Lorenzo code 0)."""
+    rows, cols = dims
+    assert len(row0) == cols
+    out = bytearray()
+    out += struct.pack("<f", eps)
+    out += struct.pack("<I", len(dims))
+    for d in dims:
+        out += struct.pack("<Q", d)
+    out += struct.pack("<Q", cols)  # n_raw = row 0
+    for v in row0:
+        out += struct.pack("<f", v)
+    z = lzss_literals(huffman_two_symbol(cols, (rows - 1) * cols))
+    out += struct.pack("<Q", len(z))
+    out += z
+    return bytes(out)
+
+
+def dataset_json(dims, ae_block):
+    return {
+        "kind": "e3sm",
+        "dims": dims,
+        "ae_block": ae_block,
+        "k": 2,
+        "hyper_axis": 0,
+        "gae_block": [1, 4],
+        "normalization": "z_score",
+        "seed": 1,
+    }
+
+
+def archive(version: int, header: dict, sections: list[tuple[str, bytes]]) -> bytes:
+    hdr = json.dumps(header, separators=(",", ":")).encode()
+    out = bytearray(b"ARDC")
+    out += struct.pack("<H", version)
+    out += struct.pack("<I", len(hdr))
+    out += hdr
+    out += struct.pack("<I", len(sections))
+    for tag, payload in sections:
+        assert len(tag) == 4
+        out += tag.encode()
+        out += struct.pack("<Q", len(payload))
+        out += payload
+    return bytes(out)
+
+
+def block_index(tile: list[int], entries: list[tuple[int, int]]) -> bytes:
+    out = bytearray(struct.pack("<I", len(tile)))
+    for t in tile:
+        out += struct.pack("<I", t)
+    out += struct.pack("<Q", len(entries))
+    for off, ln in entries:
+        out += struct.pack("<Q", off) + struct.pack("<Q", ln)
+    return bytes(out)
+
+
+def f32s(values) -> bytes:
+    return b"".join(struct.pack("<f", v) for v in values)
+
+
+def write(name: str, data: bytes):
+    path = os.path.join(HERE, name)
+    with open(path, "wb") as f:
+        f.write(data)
+    print(f"wrote {name} ({len(data)} bytes)")
+
+
+EPS = 0.001
+BOUND = {"kind": "nrmse", "value": 0.001}
+
+# ---- v1: single field [6, 8], whole-stream payload ----------------------
+DIMS = [6, 8]
+ROW0_V1 = [1.5, -2.25, 0.75, 3.0, -0.5, 2.0, 1.25, -1.0]
+v1 = archive(
+    1,
+    {
+        "codec": "sz3",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, [2, 4]),
+        "eps": EPS,
+    },
+    [("SZ3B", sz3_stream(EPS, DIMS, ROW0_V1))],
+)
+write("v1_sz3.ardc", v1)
+write("v1_sz3.expected.f32", f32s(ROW0_V1 * DIMS[0]))
+
+# ---- v2: two fields, each an embedded v1 archive ------------------------
+ROW0_TEMP = [0.5, 1.5, 2.5, 3.5, -4.5, 5.5, -6.5, 7.5]
+ROW0_PRES = [-8.0, 0.25, 16.0, -0.125, 4.0, 1.0, -2.0, 0.0625]
+
+
+def v1_field(row0):
+    return archive(
+        1,
+        {
+            "codec": "sz3",
+            "bound": BOUND,
+            "dataset": dataset_json(DIMS, [2, 4]),
+            "eps": EPS,
+        },
+        [("SZ3B", sz3_stream(EPS, DIMS, row0))],
+    )
+
+
+v2 = archive(
+    2,
+    {
+        "codec": "sz3",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, [2, 4]),
+        "fields": ["temp", "pressure"],
+        # integral values stay ints: the in-repo JSON writer re-emits
+        # integral floats without a ".0", and the conformance test pins
+        # parse -> serialize as a byte fixed point
+        "stats": {
+            "temp": {"min": -6.5, "max": 7.5, "range": 14},
+            "pressure": {"min": -8, "max": 16, "range": 24},
+        },
+    },
+    [("F000", v1_field(ROW0_TEMP)), ("F001", v1_field(ROW0_PRES))],
+)
+write("v2_sz3.ardc", v2)
+write("v2_sz3.temp.expected.f32", f32s(ROW0_TEMP * DIMS[0]))
+write("v2_sz3.pressure.expected.f32", f32s(ROW0_PRES * DIMS[0]))
+
+# ---- v3: block-indexed payload, tile = ae_block [6, 4] ------------------
+TILE = [6, 4]
+ROW0_T0 = [1.5, 2.5, -3.5, 0.25]
+ROW0_T1 = [4.0, -0.125, 0.5, 8.0]
+tile0 = sz3_stream(EPS, TILE, ROW0_T0)
+tile1 = sz3_stream(EPS, TILE, ROW0_T1)
+payload = tile0 + tile1
+v3 = archive(
+    3,
+    {
+        "codec": "sz3",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, TILE),
+        "eps": EPS,
+    },
+    [
+        ("SZ3B", payload),
+        ("BIDX", block_index(TILE, [(0, len(tile0)), (len(tile0), len(tile1))])),
+    ],
+)
+write("v3_sz3.ardc", v3)
+write("v3_sz3.expected.f32", f32s((ROW0_T0 + ROW0_T1) * DIMS[0]))

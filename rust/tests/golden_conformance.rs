@@ -1,0 +1,125 @@
+//! Golden-archive conformance: the committed v1 / v2 / v3 archives under
+//! `tests/golden/` must decode to their committed expected outputs,
+//! bit-for-bit, forever. This pins decoder backward compatibility so
+//! format-touching PRs cannot silently break old archives (see
+//! `tests/golden/README.md` for the corpus and its regeneration policy).
+
+use attn_reduce::codec::{Codec, CodecBuilder};
+use attn_reduce::compressor::Archive;
+use attn_reduce::data::Region;
+use attn_reduce::engine::CodecExt;
+use attn_reduce::tensor::Tensor;
+
+fn golden_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden")).join(name)
+}
+
+fn golden_archive(name: &str) -> Archive {
+    let bytes = std::fs::read(golden_path(name)).expect("read golden archive");
+    Archive::from_bytes(&bytes).expect("parse golden archive")
+}
+
+fn expected_f32(name: &str) -> Vec<f32> {
+    std::fs::read(golden_path(name))
+        .expect("read expected output")
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+/// Bit-exact comparison (a golden must not drift by even one ULP).
+fn assert_bits_equal(got: &Tensor, want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.data().iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: value {i} decoded {g}, expected {w}"
+        );
+    }
+}
+
+fn codec_for(archive: &Archive) -> Box<dyn Codec> {
+    CodecBuilder::new()
+        .for_archive(archive)
+        .expect("rebuild codec from golden header")
+}
+
+#[test]
+fn v1_golden_decodes_unchanged() {
+    let archive = golden_archive("v1_sz3.ardc");
+    assert_eq!(archive.version(), 1);
+    assert!(archive.block_index().unwrap().is_none(), "v1 has no index");
+    let codec = codec_for(&archive);
+    let recon = codec.decompress(&archive).expect("decode v1 golden");
+    assert_eq!(recon.shape(), &[6, 8]);
+    assert_bits_equal(&recon, &expected_f32("v1_sz3.expected.f32"), "v1");
+    // the region API works on v1 via full-decode + crop
+    let region = Region::parse("1:5,2:7").unwrap();
+    let part = codec.decompress_region(&archive, &region).expect("v1 region");
+    assert_bits_equal(
+        &part,
+        region.crop(&recon).unwrap().data(),
+        "v1 region fallback",
+    );
+}
+
+#[test]
+fn v2_golden_decodes_unchanged() {
+    let archive = golden_archive("v2_sz3.ardc");
+    assert_eq!(archive.version(), 2);
+    assert_eq!(archive.field_names().unwrap(), vec!["temp", "pressure"]);
+    let codec = codec_for(&archive);
+    let set = codec.decompress_set(&archive).expect("decode v2 golden");
+    assert_eq!(set.names(), &["temp", "pressure"]);
+    assert_bits_equal(
+        set.by_name("temp").unwrap(),
+        &expected_f32("v2_sz3.temp.expected.f32"),
+        "v2 temp",
+    );
+    assert_bits_equal(
+        set.by_name("pressure").unwrap(),
+        &expected_f32("v2_sz3.pressure.expected.f32"),
+        "v2 pressure",
+    );
+    // set-level region decode agrees with the pinned outputs
+    let region = Region::parse("0:6,4:8").unwrap();
+    let parts = codec.decompress_set_region(&archive, &region).unwrap();
+    for (name, t) in &parts {
+        let want = expected_f32(&format!("v2_sz3.{name}.expected.f32"));
+        let full = Tensor::new(vec![6, 8], want);
+        assert_bits_equal(t, region.crop(&full).unwrap().data(), name);
+    }
+}
+
+#[test]
+fn v3_golden_decodes_unchanged_and_region_touches_less() {
+    let archive = golden_archive("v3_sz3.ardc");
+    assert_eq!(archive.version(), 3);
+    let index = archive.block_index().unwrap().expect("v3 golden has index");
+    assert_eq!(index.tile, vec![6, 4]);
+    assert_eq!(index.entries.len(), 2);
+    let codec = codec_for(&archive);
+    let recon = codec.decompress(&archive).expect("decode v3 golden");
+    let want = expected_f32("v3_sz3.expected.f32");
+    assert_bits_equal(&recon, &want, "v3");
+    // region covering only the second tile: identical to the crop and
+    // touching only that tile's bytes
+    let region = Region::parse("0:6,4:8").unwrap();
+    let part = codec.decompress_region(&archive, &region).expect("v3 region");
+    assert_bits_equal(&part, region.crop(&recon).unwrap().data(), "v3 region");
+    let ids = attn_reduce::data::region_tile_ids(&[6, 8], &index.tile, &region);
+    assert_eq!(ids, vec![1]);
+    assert!(index.bytes_for(&ids) < index.total_bytes());
+}
+
+#[test]
+fn goldens_are_reparse_fixed_points() {
+    // serializing a parsed golden reproduces its bytes exactly — the
+    // container writer has not drifted either
+    for name in ["v1_sz3.ardc", "v2_sz3.ardc", "v3_sz3.ardc"] {
+        let bytes = std::fs::read(golden_path(name)).unwrap();
+        let archive = Archive::from_bytes(&bytes).unwrap();
+        assert_eq!(archive.to_bytes(), bytes, "{name} round-trip drifted");
+    }
+}

@@ -1,0 +1,255 @@
+//! In-tree property harness: randomized dims / blocking / field counts /
+//! bounds across the codecs, asserting (1) round-trip through serialized
+//! bytes, (2) the typed error bound holds on the reconstruction, and
+//! (3) v3 region decode is bit-identical to full-decode-then-crop on
+//! random regions.
+//!
+//! No external crates: cases come from `util::propgen` (seeded — CI pins
+//! `ATTN_REDUCE_PROP_SEED`), and a failing case shrinks by halving its
+//! dims until the failure disappears, panicking with the smallest
+//! reproduction.
+//!
+//! `sz3` / `zfp` run everywhere with fully random geometry. `hier` /
+//! `gbae` need the PJRT artifacts and trained checkpoints, so they run
+//! on the smoke preset geometry and skip (like the other integration
+//! tests) when `artifacts/manifest.json` is absent.
+
+use std::rc::Rc;
+
+use attn_reduce::codec::{Codec, CodecBuilder, CodecKind, ErrorBound};
+use attn_reduce::compressor::Archive;
+use attn_reduce::config::{dataset_preset, DatasetConfig, DatasetKind, Scale, TrainConfig};
+use attn_reduce::data::Region;
+use attn_reduce::runtime::Runtime;
+use attn_reduce::tensor::Tensor;
+use attn_reduce::util::propgen::{seed_from_env, shrink, CaseGen};
+
+const DEFAULT_SEED: u64 = 20260730;
+
+/// The four bound variants, sized to the field so every codec can
+/// certify them (zfp is near-lossless, not lossless).
+fn bounds_for(field: &Tensor, gae_len: usize) -> [ErrorBound; 4] {
+    let range = field.range() as f64;
+    [
+        ErrorBound::Nrmse(1e-3),
+        ErrorBound::L2Tau(1e-2 * range * (gae_len as f64).sqrt()),
+        ErrorBound::PointwiseAbs(1e-3 * range),
+        ErrorBound::None,
+    ]
+}
+
+/// The bound with the same 1.0001 measurement slack the unit tests use:
+/// ε/τ derivations round through f32, so a reconstruction can sit a few
+/// ULPs past the exact bound without being a real violation.
+fn relaxed(b: &ErrorBound) -> ErrorBound {
+    const SLACK: f64 = 1.0 + 1e-4;
+    match *b {
+        ErrorBound::Nrmse(t) => ErrorBound::Nrmse(t * SLACK),
+        ErrorBound::L2Tau(t) => ErrorBound::L2Tau(t * SLACK),
+        ErrorBound::PointwiseAbs(a) => ErrorBound::PointwiseAbs(a * SLACK),
+        ErrorBound::None => ErrorBound::None,
+    }
+}
+
+/// One full property check. Returns a failure description instead of
+/// panicking so the caller can shrink first.
+fn check_case(
+    codec: &dyn Codec,
+    cfg: &DatasetConfig,
+    field: &Tensor,
+    bound: &ErrorBound,
+    region: &Region,
+) -> Result<(), String> {
+    let archive = codec
+        .compress(field, bound)
+        .map_err(|e| format!("compress failed: {e:#}"))?;
+    // round-trip through serialized bytes, like a real consumer
+    let archive = Archive::from_bytes(&archive.to_bytes())
+        .map_err(|e| format!("reparse failed: {e:#}"))?;
+    let recon = codec
+        .decompress(&archive)
+        .map_err(|e| format!("decompress failed: {e:#}"))?;
+    if recon.shape() != field.shape() {
+        return Err(format!(
+            "shape mismatch: {:?} != {:?}",
+            recon.shape(),
+            field.shape()
+        ));
+    }
+    if !relaxed(bound).satisfied_by(field, &recon, cfg) {
+        return Err(format!("bound {bound} violated by reconstruction"));
+    }
+    // region decode ≡ full decode + crop, bit for bit
+    let via_region = codec
+        .decompress_region(&archive, region)
+        .map_err(|e| format!("region decompress failed: {e:#}"))?;
+    let via_crop = region
+        .crop(&recon)
+        .map_err(|e| format!("crop failed: {e:#}"))?;
+    if via_region.shape() != via_crop.shape() {
+        return Err(format!(
+            "region shape mismatch: {:?} != {:?}",
+            via_region.shape(),
+            via_crop.shape()
+        ));
+    }
+    let identical = via_region
+        .data()
+        .iter()
+        .zip(via_crop.data())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    if !identical {
+        return Err(format!("region {:?}:{:?} decode != cropped full decode", region.lo, region.hi));
+    }
+    Ok(())
+}
+
+/// Run `check_case`; on failure, shrink the geometry by halving dims
+/// while the failure persists and panic with the smallest reproduction.
+fn check_shrinking(
+    make_codec: &dyn Fn(&DatasetConfig) -> Box<dyn Codec>,
+    cg: &mut CaseGen,
+    cfg: DatasetConfig,
+    bound_idx: usize,
+    label: &str,
+    seed: u64,
+    case: usize,
+) {
+    let field = cg.field(&cfg.dims);
+    let bound = bounds_for(&field, cfg.gae_block_len())[bound_idx];
+    let region = cg.region(&cfg.dims);
+    let codec = make_codec(&cfg);
+    let Err(mut failure) = check_case(&*codec, &cfg, &field, &bound, &region) else {
+        return;
+    };
+    // shrink: halve dims until the failure disappears
+    let mut smallest = cfg.clone();
+    let mut cur = cfg;
+    while let Some(candidate) = shrink(&cur) {
+        let field = cg.field(&candidate.dims);
+        let bound = bounds_for(&field, candidate.gae_block_len())[bound_idx];
+        let region = cg.region(&candidate.dims);
+        let codec = make_codec(&candidate);
+        match check_case(&*codec, &candidate, &field, &bound, &region) {
+            Err(e) => {
+                failure = e;
+                smallest = candidate.clone();
+                cur = candidate;
+            }
+            Ok(()) => break,
+        }
+    }
+    panic!(
+        "property failure [{label}, seed {seed}, case {case}]: {failure}\n\
+         smallest failing geometry: dims {:?}, ae_block {:?}, gae_block {:?}, bound #{bound_idx}",
+        smallest.dims, smallest.ae_block, smallest.gae_block
+    );
+}
+
+fn run_pure_codec(label: &str, make: impl Fn(&DatasetConfig) -> Box<dyn Codec>, cases: usize) {
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed);
+    for case in 0..cases {
+        let cfg = cg.dataset();
+        // every case cycles through all four ErrorBound variants
+        check_shrinking(&make, &mut cg, cfg, case % 4, label, seed, case);
+    }
+}
+
+#[test]
+fn sz3_random_geometry_roundtrip_bound_and_region() {
+    run_pure_codec(
+        "sz3",
+        |cfg| Box::new(attn_reduce::codec::Sz3Codec::new(cfg.clone())),
+        12,
+    );
+}
+
+#[test]
+fn zfp_random_geometry_roundtrip_bound_and_region() {
+    // fewer cases: each one runs the precision certification search
+    run_pure_codec(
+        "zfp",
+        |cfg| Box::new(attn_reduce::codec::ZfpCodec::new(cfg.clone())),
+        8,
+    );
+}
+
+/// Multi-field property: random field counts packed into one v2
+/// container, round-tripped per field, with set-level region decode
+/// matching per-field crops.
+#[test]
+fn fieldset_random_field_counts_roundtrip_and_region() {
+    use attn_reduce::engine::{CodecExt, FieldSet};
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed ^ 0xF1E1D);
+    for case in 0..4 {
+        let cfg = cg.dataset();
+        let n_fields = 1 + (case % 3);
+        let mut set = FieldSet::new(cfg.clone());
+        for f in 0..n_fields {
+            set.push(format!("v{f}"), cg.field(&cfg.dims)).unwrap();
+        }
+        let codec = attn_reduce::codec::Sz3Codec::new(cfg.clone());
+        let bound = ErrorBound::Nrmse(1e-3);
+        let archive = codec.compress_set(&set, &bound).unwrap();
+        let archive = Archive::from_bytes(&archive.to_bytes()).unwrap();
+        let back = codec.decompress_set(&archive).unwrap();
+        assert_eq!(back.names(), set.names(), "case {case}");
+        let region = cg.region(&cfg.dims);
+        let parts = codec.decompress_set_region(&archive, &region).unwrap();
+        for (i, (name, t)) in parts.iter().enumerate() {
+            assert_eq!(name, &set.names()[i]);
+            assert!(relaxed(&bound).satisfied_by(set.field(i), back.field(i), &cfg));
+            let cropped = region.crop(back.field(i)).unwrap();
+            assert_eq!(t.data(), cropped.data(), "case {case} field {i}");
+        }
+    }
+}
+
+// --- learned codecs: preset geometry, gated on the PJRT artifacts ------
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+    Some(Rc::new(Runtime::open(dir).expect("open artifacts")))
+}
+
+fn run_learned_codec(kind: CodecKind, label: &str) {
+    let Some(rt) = runtime() else { return };
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed ^ 0xAE);
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let ckpt = std::env::temp_dir().join(format!("attn_reduce_prop_{label}"));
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let mut b = CodecBuilder::new()
+        .runtime(rt)
+        .ckpt_dir(&ckpt)
+        .scale(Scale::Smoke)
+        .train(TrainConfig { steps: 40, ..TrainConfig::default() });
+    let field = attn_reduce::data::generate(&cfg);
+    let codec = b.build(kind, DatasetKind::E3sm, &field).expect("build codec");
+    for (case, bound) in bounds_for(&field, cfg.gae_block_len()).iter().enumerate() {
+        if matches!(bound, ErrorBound::None) {
+            continue; // learned codecs quantize; None gives no guarantee to check
+        }
+        let region = cg.region(&cfg.dims);
+        if let Err(e) = check_case(&*codec, &cfg, &field, bound, &region) {
+            panic!("property failure [{label}, seed {seed}, case {case}]: {e}");
+        }
+    }
+}
+
+#[test]
+fn hier_preset_geometry_roundtrip_bound_and_region() {
+    run_learned_codec(CodecKind::Hier, "hier");
+}
+
+#[test]
+fn gbae_preset_geometry_roundtrip_bound_and_region() {
+    run_learned_codec(CodecKind::Gbae, "gbae");
+}

@@ -1,0 +1,137 @@
+//! Region-of-interest decode acceptance: on a v3 block-indexed archive,
+//! `decompress_region` over a region covering <10% of the blocks is
+//! bit-identical to cropping a full decode while touching <25% of the
+//! payload bytes — and v1 whole-stream archives transparently fall back
+//! to full decode + crop through the same API.
+
+use attn_reduce::baselines::Sz3Like;
+use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound, Sz3Codec, ZfpCodec};
+use attn_reduce::compressor::Archive;
+use attn_reduce::config::{dataset_preset, DatasetConfig, DatasetKind, Scale};
+use attn_reduce::data::{self, region_tile_ids, Region};
+use attn_reduce::tensor::Tensor;
+use attn_reduce::util::json;
+
+fn assert_bit_identical(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: value {i}: {x} vs {y}");
+    }
+}
+
+/// The acceptance contract, checked for one codec on one geometry.
+fn check_acceptance(
+    codec: &dyn Codec,
+    cfg: &DatasetConfig,
+    field: &Tensor,
+    bound: &ErrorBound,
+    region: &Region,
+) {
+    let archive = codec.compress(field, bound).expect("compress");
+    let archive = Archive::from_bytes(&archive.to_bytes()).expect("reparse");
+    assert_eq!(archive.version(), 3, "pure codecs write v3");
+
+    let full = codec.decompress(&archive).expect("full decode");
+    let part = codec.decompress_region(&archive, region).expect("region decode");
+    assert_bit_identical(&part, &region.crop(&full).unwrap(), "region vs crop");
+
+    // the region covers <10% of the blocks and touches <25% of payload
+    let index = archive.block_index().unwrap().expect("v3 index");
+    let ids = region_tile_ids(&cfg.dims, &index.tile, region);
+    let n_blocks = index.entries.len();
+    assert!(
+        ids.len() * 10 < n_blocks,
+        "test region must cover <10% of blocks ({} of {n_blocks})",
+        ids.len()
+    );
+    let touched = index.bytes_for(&ids);
+    let payload = index.total_bytes();
+    assert!(
+        touched * 4 < payload,
+        "region touched {touched} of {payload} payload bytes (>= 25%)"
+    );
+
+    // the decode restored from the header alone agrees too
+    let rebuilt = CodecBuilder::new().for_archive(&archive).expect("for_archive");
+    let part2 = rebuilt.decompress_region(&archive, region).expect("region via header");
+    assert_bit_identical(&part2, &part, "header-rebuilt codec");
+}
+
+#[test]
+fn sz3_region_decode_is_cheap_and_exact() {
+    // s3d smoke: 1 x 2 x 4 x 4 = 32 tiles; the region intersects 1 (3.1%)
+    let cfg = dataset_preset(DatasetKind::S3d, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let region = Region::parse("0:16,1:5,2:4,0:3").unwrap();
+    check_acceptance(
+        &Sz3Codec::new(cfg.clone()),
+        &cfg,
+        &field,
+        &ErrorBound::Nrmse(1e-3),
+        &region,
+    );
+}
+
+#[test]
+fn zfp_region_decode_is_cheap_and_exact() {
+    // e3sm bench geometry at smoke scale has only 16 tiles (6.25% each),
+    // so use the bench dims tiling on a synthetic field: 20 x 6 x 12 =
+    // 1440 tiles, region covers 2 x 1 x 2 = 4 of them (0.3%)
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Bench);
+    let field = data::generate(&cfg);
+    let region = Region::parse("3:12,0:10,16:48").unwrap();
+    check_acceptance(
+        &ZfpCodec::new(cfg.clone()),
+        &cfg,
+        &field,
+        &ErrorBound::None,
+        &region,
+    );
+}
+
+#[test]
+fn unaligned_regions_spanning_tile_borders_match_crop() {
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let codec = Sz3Codec::new(cfg.clone());
+    let archive = codec.compress(&field, &ErrorBound::PointwiseAbs(1e-3)).unwrap();
+    let full = codec.decompress(&archive).unwrap();
+    for spec in ["0:24,0:32,0:32", "5:19,7:25,15:17", "23:24,31:32,0:1", "0:1,0:1,0:1"] {
+        let region = Region::parse(spec).unwrap();
+        let part = codec.decompress_region(&archive, &region).unwrap();
+        assert_bit_identical(&part, &region.crop(&full).unwrap(), spec);
+    }
+    // out-of-bounds / wrong-rank regions are typed errors
+    assert!(codec
+        .decompress_region(&archive, &Region::parse("0:25,0:32,0:32").unwrap())
+        .is_err());
+    assert!(codec
+        .decompress_region(&archive, &Region::parse("0:8,0:8").unwrap())
+        .is_err());
+}
+
+#[test]
+fn v1_whole_stream_archives_fall_back_to_full_decode_plus_crop() {
+    // a legacy v1 archive exactly as the pre-index sz3 codec wrote it:
+    // one whole-field stream, no BIDX section
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let bound = ErrorBound::Nrmse(1e-3);
+    let eps = bound.pointwise_eps(&cfg, field.range() as f64);
+    let mut archive = Archive::new(json::obj(vec![
+        ("codec", json::s("sz3")),
+        ("bound", bound.to_json()),
+        ("dataset", cfg.to_json()),
+        ("eps", json::num(eps as f64)),
+    ]));
+    archive.add_section("SZ3B", Sz3Like::new(eps).compress(&field).unwrap());
+    let archive = Archive::from_bytes(&archive.to_bytes()).unwrap();
+    assert_eq!(archive.version(), 1);
+    assert!(archive.block_index().unwrap().is_none());
+
+    let codec = CodecBuilder::new().for_archive(&archive).unwrap();
+    let full = codec.decompress(&archive).unwrap();
+    let region = Region::parse("2:9,8:24,16:32").unwrap();
+    let part = codec.decompress_region(&archive, &region).unwrap();
+    assert_bit_identical(&part, &region.crop(&full).unwrap(), "v1 fallback");
+}
