@@ -5,33 +5,12 @@
 //! Run: `cargo bench --bench fieldset_throughput`
 //! (`BENCH_FAST=1` shrinks to smoke scale for CI.)
 
-use std::time::Instant;
-
 use attn_reduce::codec::{archive_stats, Codec, ErrorBound, Sz3Codec, ZfpCodec};
 use attn_reduce::config::{DatasetKind, Scale};
 use attn_reduce::engine::{compress_set_parallel, CodecExt, FieldSet};
+use attn_reduce::util::bench::median_secs;
 use attn_reduce::util::json::{self, Value};
 use attn_reduce::util::parallel::{num_threads, with_thread_limit};
-
-fn median_secs(mut f: impl FnMut(), iters: usize) -> f64 {
-    f(); // warmup
-    let mut times: Vec<f64> = (0..iters)
-        .map(|_| {
-            let t0 = Instant::now();
-            f();
-            t0.elapsed().as_secs_f64()
-        })
-        .collect();
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = times.len();
-    if n % 2 == 1 {
-        times[n / 2]
-    } else {
-        // true median for even sample counts (with 2 samples, picking
-        // times[1] would report the worst case, not the middle)
-        (times[n / 2 - 1] + times[n / 2]) / 2.0
-    }
-}
 
 fn bench_codec<C: Codec + Sync>(
     name: &str,

@@ -5,32 +5,13 @@
 //! Run: `cargo bench --bench region_decode`
 //! (`--smoke` or `BENCH_FAST=1` shrinks to smoke scale for CI.)
 
-use std::time::Instant;
-
 use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec, ZfpCodec};
 use attn_reduce::compressor::Archive;
 use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
 use attn_reduce::data::{self, region_tile_ids, Region};
+use attn_reduce::util::bench::median_secs;
 use attn_reduce::util::json::{self, Value};
 use attn_reduce::util::parallel::num_threads;
-
-fn median_secs(mut f: impl FnMut(), iters: usize) -> f64 {
-    f(); // warmup
-    let mut times: Vec<f64> = (0..iters)
-        .map(|_| {
-            let t0 = Instant::now();
-            f();
-            t0.elapsed().as_secs_f64()
-        })
-        .collect();
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let n = times.len();
-    if n % 2 == 1 {
-        times[n / 2]
-    } else {
-        (times[n / 2 - 1] + times[n / 2]) / 2.0
-    }
-}
 
 fn bench_codec<C: Codec>(
     name: &str,

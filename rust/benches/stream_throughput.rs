@@ -1,0 +1,128 @@
+//! Temporal stream throughput: append MB/s, compression ratio vs
+//! independent-per-step v3 archives at the same error bound, and
+//! `(step, region)` random-access latency as a function of the keyframe
+//! interval K. Emits `BENCH_stream.json` next to the CWD.
+//!
+//! Run: `cargo bench --bench stream_throughput`
+//! (`--smoke` or `BENCH_FAST=1` shrinks to smoke scale for CI.)
+
+use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
+use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
+use attn_reduce::data::{timeseries, Region};
+use attn_reduce::stream::{StreamReader, StreamWriter};
+use attn_reduce::util::bench::median_secs;
+use attn_reduce::util::json::{self, Value};
+use attn_reduce::util::parallel::num_threads;
+
+fn main() {
+    let smoke = std::env::var_os("BENCH_FAST").is_some()
+        || std::env::args().any(|a| a == "--smoke");
+    let (scale, steps, iters) = if smoke {
+        (Scale::Smoke, 16usize, 2usize)
+    } else {
+        (Scale::Bench, 64, 5)
+    };
+    let cfg = stream_frame_preset(DatasetKind::E3sm, scale);
+    let bound = ErrorBound::Nrmse(1e-3);
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, steps);
+    let raw_mb = (steps * cfg.total_points() * 4) as f64 / 1e6;
+    let dir = std::env::temp_dir().join("attn_reduce_stream_bench");
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    println!(
+        "stream_throughput: e3sm frames {:?} x {steps} steps, bound {bound}, {} threads",
+        cfg.dims,
+        num_threads()
+    );
+
+    // baseline: every step an independent v3 archive (what the engine
+    // did before the stream subsystem existed)
+    let independent_payload: usize = frames
+        .iter()
+        .map(|f| codec.compress(f, &bound).expect("compress").cr_payload_bytes())
+        .sum();
+    let n_points = steps * cfg.total_points();
+    let cr_independent = n_points as f64 / independent_payload.max(1) as f64;
+    println!(
+        "independent per-step archives: payload {independent_payload} bytes, CR {cr_independent:.1}"
+    );
+
+    // a corner region of ~1/4 extent per axis, read at the worst-case
+    // step of a GOP (longest residual chain)
+    let region = Region::new(
+        vec![0; cfg.dims.len()],
+        cfg.dims.iter().map(|&d| (d / 4).max(1)).collect(),
+    )
+    .expect("region");
+
+    let mut per_k = Vec::new();
+    for k in [1usize, 4, 8, 16] {
+        let path = dir.join(format!("bench_k{k}.tstr"));
+        let append_s = median_secs(
+            || {
+                let mut w =
+                    StreamWriter::create(&path, codec.id(), cfg.clone(), bound, k)
+                        .expect("create stream");
+                w.append_frames(&codec, &frames).expect("append");
+                w.finish().expect("finish");
+            },
+            iters,
+        );
+        let reader = StreamReader::open(&path).expect("open stream");
+        let stats = reader.stats().expect("stats");
+        // worst-case chain: the final step (step counts divide every K
+        // here, so its chain has the full K-step length)
+        let step = steps - 1;
+        let cost = reader.region_cost(step, &region).expect("cost");
+        let extract_s = median_secs(
+            || drop(reader.extract(&codec, step, &region).expect("extract")),
+            iters,
+        );
+        let frame_s = median_secs(
+            || drop(reader.frame(&codec, step).expect("frame")),
+            iters,
+        );
+        let cr_ratio = stats.cr / cr_independent;
+        println!(
+            "K={k:>2}: append {:>7.2} MB/s | CR {:>6.1} ({cr_ratio:>4.2}x vs independent) | \
+             extract(step {step}, region) {:>8.3} ms over {} chain steps | full frame {:>8.3} ms",
+            raw_mb / append_s,
+            stats.cr,
+            extract_s * 1e3,
+            cost.steps,
+            frame_s * 1e3,
+        );
+        per_k.push(json::obj(vec![
+            ("k", json::num(k as f64)),
+            ("append_s", json::num(append_s)),
+            ("append_mb_s", json::num(raw_mb / append_s)),
+            ("payload_bytes", json::num(stats.payload_bytes as f64)),
+            ("file_bytes", json::num(stats.file_bytes as f64)),
+            ("cr", json::num(stats.cr)),
+            ("cr_vs_independent", json::num(cr_ratio)),
+            ("extract_step", json::num(step as f64)),
+            ("chain_steps", json::num(cost.steps as f64)),
+            ("region_bytes_touched", json::num(cost.bytes_touched as f64)),
+            ("region_bytes_total", json::num(cost.bytes_total as f64)),
+            ("extract_region_s", json::num(extract_s)),
+            ("extract_frame_s", json::num(frame_s)),
+        ]));
+    }
+
+    let report = json::obj(vec![
+        ("dataset", json::s("e3sm")),
+        ("scale", json::s(if smoke { "smoke" } else { "bench" })),
+        ("dims", json::arr_usize(&cfg.dims)),
+        ("steps", json::num(steps as f64)),
+        ("bound", json::s(bound.to_string())),
+        ("threads", json::num(num_threads() as f64)),
+        ("raw_mb", json::num(raw_mb)),
+        ("independent_payload_bytes", json::num(independent_payload as f64)),
+        ("cr_independent", json::num(cr_independent)),
+        ("ks", Value::Arr(per_k)),
+    ]);
+    std::fs::write("BENCH_stream.json", report.to_string_pretty())
+        .expect("write BENCH_stream.json");
+    println!("wrote BENCH_stream.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

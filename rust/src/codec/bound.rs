@@ -124,6 +124,31 @@ impl ErrorBound {
         }
     }
 
+    /// The bound to compress a *temporal residual* under so that the
+    /// absolute reconstructed frame satisfies `self`.
+    ///
+    /// A residual is coded against the previous **reconstructed** frame,
+    /// so the error on the absolute frame equals the error on the
+    /// residual exactly — no accumulation along the chain. Two variants
+    /// need translation because their codec knobs derive from the
+    /// *field's own range*, which for a residual is near zero:
+    ///
+    /// * `Nrmse(t)` wrt the frame means RMSE ≤ `t · frame_range`; a
+    ///   pointwise bound of `t · frame_range` on the residual certifies
+    ///   it (conservatively) without referencing the residual's range.
+    /// * `None` (best effort) keeps the frame-relative default fidelity
+    ///   `1e-3 · frame_range` instead of `1e-3 · residual_range` (a
+    ///   near-constant residual would otherwise derive ε = 0).
+    /// * `L2Tau` / `PointwiseAbs` are already absolute: per-block ℓ2 and
+    ///   pointwise error of the frame equal those of the residual.
+    pub fn for_residual(&self, frame_range: f64) -> ErrorBound {
+        match *self {
+            Self::Nrmse(t) => Self::PointwiseAbs(t * frame_range),
+            Self::None if frame_range > 0.0 => Self::PointwiseAbs(1e-3 * frame_range),
+            other => other,
+        }
+    }
+
     /// Measure whether a reconstruction satisfies this bound (used by the
     /// ZFP-like precision search and the integration tests).
     pub fn satisfied_by(
@@ -228,6 +253,26 @@ mod tests {
         // block l2 of constant 1e-4 offset over 256 points = 1.6e-3
         assert!(ErrorBound::L2Tau(2e-3).satisfied_by(&orig, &recon, &d));
         assert!(!ErrorBound::L2Tau(1e-3).satisfied_by(&orig, &recon, &d));
+    }
+
+    #[test]
+    fn residual_bound_translation() {
+        // Nrmse wrt the frame becomes an absolute pointwise bound in
+        // frame units — independent of the residual's own (tiny) range
+        assert_eq!(
+            ErrorBound::Nrmse(1e-3).for_residual(2000.0),
+            ErrorBound::PointwiseAbs(2.0)
+        );
+        // absolute bounds pass through unchanged
+        assert_eq!(ErrorBound::L2Tau(0.5).for_residual(10.0), ErrorBound::L2Tau(0.5));
+        assert_eq!(
+            ErrorBound::PointwiseAbs(1e-4).for_residual(10.0),
+            ErrorBound::PointwiseAbs(1e-4)
+        );
+        // best-effort anchors to the frame range (a constant residual
+        // must not derive ε = 0)
+        assert_eq!(ErrorBound::None.for_residual(4.0), ErrorBound::PointwiseAbs(4e-3));
+        assert_eq!(ErrorBound::None.for_residual(0.0), ErrorBound::None);
     }
 
     #[test]

@@ -86,6 +86,27 @@ pub trait Codec {
         let recon = self.decompress(&archive)?;
         Ok((archive, recon))
     }
+
+    /// Compress a *temporal residual* (current frame minus the previous
+    /// frame's reconstruction) so that the absolute reconstructed frame
+    /// satisfies `bound`. The bound is translated into residual terms by
+    /// [`ErrorBound::for_residual`] using `frame_range` (the current
+    /// frame's value range), and the archive is stamped
+    /// `temporal: "residual"` so tooling can tell a residual archive
+    /// from a keyframe one. Used by [`crate::stream::StreamWriter`];
+    /// keyframes go through plain [`Codec::compress_with_recon`] and
+    /// stay byte-identical to independently-compressed frames.
+    fn compress_residual(
+        &self,
+        residual: &Tensor,
+        bound: &ErrorBound,
+        frame_range: f64,
+    ) -> Result<(Archive, Tensor)> {
+        let rb = bound.for_residual(frame_range);
+        let (mut archive, recon) = self.compress_with_recon(residual, &rb)?;
+        archive.set_header("temporal", crate::util::json::s("residual"));
+        Ok((archive, recon))
+    }
 }
 
 /// Common archive header fields every codec writes (codec id, bound,

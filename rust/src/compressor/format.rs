@@ -34,6 +34,17 @@
 //! the container version because the payload *layout* changed — a v1
 //! reader must not misparse a chunked stream as a whole stream.
 //!
+//! **Version 4** is the *temporal stream* container — a different magic
+//! (`TSTR`, not `ARDC`) because its framing is append-only rather than
+//! section-counted: a header, then a sequence of self-delimiting records
+//! (`KSTP` keyframe step / `RSTP` residual step, each holding a complete
+//! single-field v1/v3 archive), then a `TIDX` timeline-index record and
+//! a fixed 12-byte footer locating it. A crashed or still-growing stream
+//! simply lacks the footer; readers recover by scanning complete
+//! records. The writer/reader live in [`crate::stream`]; this module
+//! owns the byte-level framing so all container formats stay in one
+//! place.
+//!
 //! Unknown section tags are preserved verbatim by the parser, so newer
 //! writers stay readable by older readers (forward compatibility), and
 //! v1/v2 archives parse and decompress unchanged (backward
@@ -53,8 +64,93 @@ pub const VERSION_V2: u16 = 2;
 /// region of interest decodes without touching the rest of the payload.
 pub const VERSION_V3: u16 = 3;
 
+/// Temporal stream container (`TSTR` magic, append-only record framing —
+/// see [`crate::stream`]). Not an `ARDC` section container: the version
+/// number continues the series so headers and docs can name it "v4".
+pub const VERSION_V4: u16 = 4;
+
 /// Section tag of the v3 block index.
 pub const BLOCK_INDEX_TAG: &str = "BIDX";
+
+// ---------------------------------------------------------------------------
+// v4 temporal-stream framing (magic TSTR): header + self-delimiting
+// records + footer. Byte-level only — the timeline index, writer, and
+// reader live in `crate::stream`.
+// ---------------------------------------------------------------------------
+
+/// Magic of the v4 temporal stream container.
+pub const STREAM_MAGIC: &[u8; 4] = b"TSTR";
+/// Record tag: a keyframe step (payload = complete v1/v3 archive of the
+/// absolute frame).
+pub const STREAM_KEY_TAG: &[u8; 4] = b"KSTP";
+/// Record tag: a residual step (payload = complete v1/v3 archive of the
+/// temporal residual against the previous *reconstructed* frame).
+pub const STREAM_RES_TAG: &[u8; 4] = b"RSTP";
+/// Record tag: the timeline index written by `finish()`.
+pub const STREAM_TIDX_TAG: &[u8; 4] = b"TIDX";
+/// Footer magic: the last 12 bytes of a finished stream are
+/// `u64 tidx_record_offset | "TEND"`.
+pub const STREAM_END_MAGIC: &[u8; 4] = b"TEND";
+
+/// Serialize the v4 stream header:
+/// `"TSTR" | u16 version | u32 header_len | header JSON`.
+pub fn stream_header_bytes(header: &Value) -> Vec<u8> {
+    let json = header.to_string_compact().into_bytes();
+    let mut out = Vec::with_capacity(10 + json.len());
+    out.extend_from_slice(STREAM_MAGIC);
+    out.extend_from_slice(&VERSION_V4.to_le_bytes());
+    out.extend_from_slice(&(json.len() as u32).to_le_bytes());
+    out.extend_from_slice(&json);
+    out
+}
+
+/// Parse a v4 stream header, returning `(header, records_start_offset)`.
+/// Untrusted input: truncation and bad magic/version are clean errors.
+pub fn parse_stream_header(bytes: &[u8]) -> Result<(Value, usize)> {
+    ensure!(bytes.len() >= 10, "stream truncated (no header)");
+    if &bytes[0..4] != STREAM_MAGIC {
+        if &bytes[0..4] == MAGIC {
+            bail!("this is an ARDC archive, not a TSTR stream — use Archive::from_bytes");
+        }
+        bail!("not a TSTR temporal stream");
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
+    ensure!(version == VERSION_V4, "unsupported stream version {version}");
+    let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let end = 10usize
+        .checked_add(hlen)
+        .ok_or_else(|| anyhow::anyhow!("stream header length overflow"))?;
+    ensure!(bytes.len() >= end, "stream header truncated");
+    let header = Value::parse(std::str::from_utf8(&bytes[10..end])?)?;
+    Ok((header, end))
+}
+
+/// Frame one stream record: `tag | u64 len | payload`.
+pub fn stream_record_bytes(tag: &[u8; 4], payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + payload.len());
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Parse the record at `off`, returning `(tag, payload_offset,
+/// payload_len, next_record_offset)`. Errors on truncation or a length
+/// that overflows the buffer — the recovery scan stops at the first
+/// incomplete record.
+pub fn parse_stream_record(bytes: &[u8], off: usize) -> Result<([u8; 4], usize, usize, usize)> {
+    ensure!(bytes.len() >= off + 12, "stream record header truncated");
+    let tag: [u8; 4] = bytes[off..off + 4].try_into().unwrap();
+    let len = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+    let len = usize::try_from(len)
+        .map_err(|_| anyhow::anyhow!("stream record length overflow"))?;
+    let payload = off + 12;
+    let next = payload
+        .checked_add(len)
+        .ok_or_else(|| anyhow::anyhow!("stream record length overflow"))?;
+    ensure!(bytes.len() >= next, "stream record payload truncated");
+    Ok((tag, payload, len, next))
+}
 
 /// Sections whose bytes count toward the paper's compression ratio.
 pub const CR_SECTIONS: [&str; 8] =
@@ -458,6 +554,12 @@ impl Archive {
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         ensure!(bytes.len() >= 10, "archive truncated");
         if &bytes[0..4] != MAGIC {
+            if &bytes[0..4] == STREAM_MAGIC {
+                bail!(
+                    "this is a v4 temporal stream container — \
+                     use stream::StreamReader, not Archive::from_bytes"
+                );
+            }
             bail!("not an ARDC archive");
         }
         let version = u16::from_le_bytes(bytes[4..6].try_into().unwrap());
@@ -768,6 +870,55 @@ mod tests {
         assert_eq!(v2.field_count(), Archive::MAX_FIELDS);
         assert_eq!(v2.field_archive(999).unwrap().to_bytes(), sub_bytes);
         assert!(v2.field_archive(1000).is_err(), "index out of tag space");
+    }
+
+    #[test]
+    fn stream_header_round_trips_and_rejects_corruption() {
+        let h = json::obj(vec![("codec", json::s("sz3")), ("keyint", json::num(4.0))]);
+        let bytes = stream_header_bytes(&h);
+        let (back, off) = parse_stream_header(&bytes).unwrap();
+        assert_eq!(back.req("codec").unwrap().as_str(), Some("sz3"));
+        assert_eq!(off, bytes.len());
+        for cut in 0..bytes.len() {
+            assert!(parse_stream_header(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(parse_stream_header(&bad).is_err());
+        // version mismatch
+        let mut bad = bytes;
+        bad[4..6].copy_from_slice(&9u16.to_le_bytes());
+        assert!(parse_stream_header(&bad).is_err());
+        // an ARDC archive is a readable misuse error, and vice versa
+        let ar = sample().to_bytes();
+        let err = parse_stream_header(&ar).unwrap_err().to_string();
+        assert!(err.contains("ARDC archive"), "{err}");
+        let mut ts = stream_header_bytes(&json::obj(vec![]));
+        ts.extend_from_slice(&stream_record_bytes(STREAM_KEY_TAG, &[1, 2, 3]));
+        let err = Archive::from_bytes(&ts).unwrap_err().to_string();
+        assert!(err.contains("StreamReader"), "{err}");
+    }
+
+    #[test]
+    fn stream_records_parse_in_sequence_and_stop_at_truncation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&stream_record_bytes(STREAM_KEY_TAG, &[9; 5]));
+        buf.extend_from_slice(&stream_record_bytes(STREAM_RES_TAG, &[]));
+        let (tag, p, len, next) = parse_stream_record(&buf, 0).unwrap();
+        assert_eq!(&tag, STREAM_KEY_TAG);
+        assert_eq!((p, len), (12, 5));
+        let (tag2, _, len2, next2) = parse_stream_record(&buf, next).unwrap();
+        assert_eq!(&tag2, STREAM_RES_TAG);
+        assert_eq!(len2, 0);
+        assert_eq!(next2, buf.len());
+        assert!(parse_stream_record(&buf, next2).is_err(), "past the end");
+        // any truncation inside a record is a clean error
+        for cut in 0..buf.len() {
+            if cut < 12 {
+                assert!(parse_stream_record(&buf[..cut], 0).is_err(), "cut {cut}");
+            }
+        }
+        assert!(parse_stream_record(&buf[..16], 0).is_err(), "payload cut");
     }
 
     #[test]

@@ -290,6 +290,70 @@ pub fn dataset_preset(kind: DatasetKind, scale: Scale) -> DatasetConfig {
     }
 }
 
+/// Per-frame geometry preset for the temporal stream subsystem
+/// ([`crate::stream`]): one *timestep* of each application, i.e. the
+/// dataset preset with the time/plane axis dropped. A v4 stream appends
+/// frames of this shape; the dataset presets above keep describing the
+/// whole space-time volume the one-shot codecs compress.
+pub fn stream_frame_preset(kind: DatasetKind, scale: Scale) -> DatasetConfig {
+    match kind {
+        DatasetKind::S3d => {
+            // one temporal snapshot: [species, x, y]
+            let (species, x, y) = match scale {
+                Scale::Paper => (58, 640, 640),
+                Scale::Bench => (16, 64, 64),
+                Scale::Smoke => (16, 16, 16),
+            };
+            DatasetConfig {
+                kind,
+                dims: vec![species, x, y],
+                ae_block: vec![species, 4, 4],
+                k: 4,
+                hyper_axis: 1,
+                gae_block: vec![1, 4, 4],
+                normalization: Normalization::PerSpeciesMeanRange,
+                seed: 131,
+            }
+        }
+        DatasetKind::E3sm => {
+            // one hourly snapshot: [lat, lon]
+            let (h, w) = match scale {
+                Scale::Paper => (240, 1440),
+                Scale::Bench => (96, 192),
+                Scale::Smoke => (32, 32),
+            };
+            DatasetConfig {
+                kind,
+                dims: vec![h, w],
+                ae_block: vec![16, 16],
+                k: 4,
+                hyper_axis: 0,
+                gae_block: vec![16, 16],
+                normalization: Normalization::ZScore,
+                seed: 147,
+            }
+        }
+        DatasetKind::Xgc => {
+            // one toroidal plane of velocity histograms: [nodes, vx, vy]
+            let nodes = match scale {
+                Scale::Paper => 16395,
+                Scale::Bench => 2048,
+                Scale::Smoke => 128,
+            };
+            DatasetConfig {
+                kind,
+                dims: vec![nodes, 39, 39],
+                ae_block: vec![1, 39, 39],
+                k: 4,
+                hyper_axis: 0,
+                gae_block: vec![1, 39, 39],
+                normalization: Normalization::ZScore,
+                seed: 163,
+            }
+        }
+    }
+}
+
 /// Model preset matching `configs.default_groups()` on the python side.
 pub fn model_preset(kind: DatasetKind) -> ModelConfig {
     match kind {
@@ -340,6 +404,26 @@ mod tests {
         assert_eq!(d.block_dim(), 1536);
         let d = dataset_preset(DatasetKind::Xgc, Scale::Bench);
         assert_eq!(d.block_dim(), 1521);
+    }
+
+    #[test]
+    fn stream_frame_presets_drop_the_temporal_axis() {
+        for kind in [DatasetKind::S3d, DatasetKind::E3sm, DatasetKind::Xgc] {
+            for scale in [Scale::Bench, Scale::Smoke] {
+                let f = stream_frame_preset(kind, scale);
+                let d = dataset_preset(kind, scale);
+                assert_eq!(f.dims.len() + 1, d.dims.len(), "{kind:?} rank");
+                assert_eq!(f.dims.len(), f.ae_block.len());
+                assert_eq!(f.dims.len(), f.gae_block.len());
+                for (dim, b) in f.dims.iter().zip(&f.ae_block) {
+                    assert!(b <= dim, "{kind:?} block fits frame");
+                }
+            }
+        }
+        // e3sm frame = one [h, w] snapshot of the volume preset
+        let f = stream_frame_preset(DatasetKind::E3sm, Scale::Bench);
+        let d = dataset_preset(DatasetKind::E3sm, Scale::Bench);
+        assert_eq!(f.dims[..], d.dims[1..]);
     }
 
     #[test]

@@ -12,6 +12,7 @@ mod e3sm;
 mod io;
 mod normalize;
 mod s3d;
+pub mod timeseries;
 mod xgc;
 
 pub use blocking::{

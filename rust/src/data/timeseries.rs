@@ -1,0 +1,198 @@
+//! Synthetic smoothly-evolving frame sequences for the temporal stream
+//! subsystem (E3SM/XGC-like evolution).
+//!
+//! A simulation emits one spatial frame per timestep; consecutive frames
+//! differ by slow dynamics (traveling synoptic waves, drifting large
+//! scale modes), which is exactly the redundancy residual coding
+//! exploits. Each frame here is **closed-form in `t`** — no recurrent
+//! state — so `frame_at(dims, seed, t)` is identical whether frames are
+//! generated in one run or across separate incremental-ingest
+//! invocations (the CLI `stream append` relies on this determinism).
+//!
+//! The recipe, generic over frame rank:
+//! * traveling waves: `amp · sin(2π(k·x) + φ − ω t)` with slow per-step
+//!   phase speeds — the temporally-correlated bulk of the signal;
+//! * slow scalar modes `sin(2π t / P + ψ)` gating fixed Gaussian bumps —
+//!   large-scale drift with periods of tens of steps;
+//! * a *static* fine-grained texture — spatial detail the codec must
+//!   still code in keyframes, but which cancels exactly in residuals.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+struct Wave {
+    k: Vec<f64>,
+    omega: f64,
+    amp: f64,
+    phase: f64,
+}
+
+struct Mode {
+    center: Vec<f64>,
+    width: f64,
+    amp: f64,
+    period: f64,
+    phase: f64,
+}
+
+struct Texture {
+    k: Vec<f64>,
+    amp: f64,
+    phase: f64,
+}
+
+/// The deterministic field parameters for one `(dims, seed)` pair.
+struct Series {
+    dims: Vec<usize>,
+    waves: Vec<Wave>,
+    modes: Vec<Mode>,
+    texture: Vec<Texture>,
+}
+
+impl Series {
+    fn new(dims: &[usize], seed: u64) -> Self {
+        assert!(!dims.is_empty(), "frame dims must be non-empty");
+        let rank = dims.len();
+        let mut rng = Rng::new(seed ^ 0x7153_57AE);
+        let waves = (0..6)
+            .map(|i| Wave {
+                k: (0..rank).map(|_| (1 + rng.below(3)) as f64).collect(),
+                // slow eastward drift: ~1% of a cycle per step
+                omega: std::f64::consts::TAU * rng.range(0.003, 0.012),
+                amp: 1.2 / (1.0 + i as f64 * 0.6),
+                phase: rng.range(0.0, std::f64::consts::TAU),
+            })
+            .collect();
+        let modes = (0..3)
+            .map(|_| Mode {
+                center: (0..rank).map(|_| rng.uniform()).collect(),
+                width: rng.range(0.12, 0.3),
+                amp: rng.range(0.4, 1.0),
+                period: rng.range(60.0, 150.0),
+                phase: rng.range(0.0, std::f64::consts::TAU),
+            })
+            .collect();
+        let texture = (0..4)
+            .map(|_| Texture {
+                k: (0..rank).map(|_| (4 + rng.below(5)) as f64).collect(),
+                amp: rng.range(0.01, 0.04),
+                phase: rng.range(0.0, std::f64::consts::TAU),
+            })
+            .collect();
+        Self { dims: dims.to_vec(), waves, modes, texture }
+    }
+
+    fn frame(&self, t: usize) -> Tensor {
+        let tau = std::f64::consts::TAU;
+        let tt = t as f64;
+        let n: usize = self.dims.iter().product();
+        let rank = self.dims.len();
+        // slow mode gates are per-frame scalars
+        let gates: Vec<f64> = self
+            .modes
+            .iter()
+            .map(|m| (tau * tt / m.period + m.phase).sin())
+            .collect();
+        let mut x = vec![0f64; rank];
+        let mut idx = vec![0usize; rank];
+        let data: Vec<f32> = (0..n)
+            .map(|flat| {
+                let mut rem = flat;
+                for d in (0..rank).rev() {
+                    idx[d] = rem % self.dims[d];
+                    rem /= self.dims[d];
+                    x[d] = idx[d] as f64 / self.dims[d] as f64;
+                }
+                let mut v = 0.0f64;
+                for w in &self.waves {
+                    let kx: f64 = w.k.iter().zip(&x).map(|(k, xd)| k * xd).sum();
+                    v += w.amp * (tau * kx + w.phase - w.omega * tt).sin();
+                }
+                for (m, gate) in self.modes.iter().zip(&gates) {
+                    let d2: f64 = m
+                        .center
+                        .iter()
+                        .zip(&x)
+                        .map(|(c, xd)| {
+                            let mut d = (c - xd).abs();
+                            d = d.min(1.0 - d); // periodic domain
+                            d * d
+                        })
+                        .sum();
+                    v += m.amp * gate * (-d2 / (2.0 * m.width * m.width)).exp();
+                }
+                for tx in &self.texture {
+                    let kx: f64 = tx.k.iter().zip(&x).map(|(k, xd)| k * xd).sum();
+                    v += tx.amp * (tau * kx + tx.phase).sin();
+                }
+                v as f32
+            })
+            .collect();
+        Tensor::new(self.dims.clone(), data)
+    }
+}
+
+/// The frame at absolute step `t` of the series `(dims, seed)` —
+/// closed-form in `t`, so incremental producers regenerate identical
+/// frames at any step without replaying history.
+pub fn frame_at(dims: &[usize], seed: u64, t: usize) -> Tensor {
+    Series::new(dims, seed).frame(t)
+}
+
+/// Frames for steps `start..start + steps`.
+pub fn generate_frames(dims: &[usize], seed: u64, start: usize, steps: usize) -> Vec<Tensor> {
+    let series = Series::new(dims, seed);
+    (start..start + steps).map(|t| series.frame(t)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_batch_generation() {
+        let dims = [12, 16];
+        let frames = generate_frames(&dims, 7, 3, 4);
+        assert_eq!(frames.len(), 4);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.shape(), &dims);
+            assert_eq!(f.data(), frame_at(&dims, 7, 3 + i).data(), "step {}", 3 + i);
+            assert!(f.data().iter().all(|v| v.is_finite()));
+            assert!(f.range() > 0.0);
+        }
+    }
+
+    #[test]
+    fn consecutive_frames_are_strongly_correlated() {
+        // the temporal-redundancy premise: |f(t+1) - f(t)| is a small
+        // fraction of the field range, while distant frames differ a lot
+        let dims = [24, 24];
+        let f = generate_frames(&dims, 11, 0, 40);
+        let mean_abs = |a: &Tensor, b: &Tensor| -> f64 {
+            a.data()
+                .iter()
+                .zip(b.data())
+                .map(|(&x, &y)| (x - y).abs() as f64)
+                .sum::<f64>()
+                / a.len() as f64
+        };
+        let adjacent = mean_abs(&f[0], &f[1]);
+        let distant = mean_abs(&f[0], &f[30]);
+        assert!(
+            adjacent < 0.12 * f[0].range() as f64,
+            "adjacent delta {adjacent} vs range {}",
+            f[0].range()
+        );
+        assert!(adjacent * 3.0 < distant, "adjacent {adjacent} vs distant {distant}");
+    }
+
+    #[test]
+    fn generic_over_rank() {
+        for dims in [vec![32], vec![8, 8, 6], vec![4, 5, 6, 3]] {
+            let a = frame_at(&dims, 3, 10);
+            assert_eq!(a.shape(), &dims[..]);
+            let b = frame_at(&dims, 3, 10);
+            assert_eq!(a.data(), b.data(), "deterministic");
+        }
+    }
+}

@@ -22,10 +22,13 @@
 //! * [`Executor`] — the persistent fork-join worker pool (+ per-thread
 //!   [`Scratch`] arenas) behind every block-parallel stage: the SZ3-like
 //!   and ZFP-like baselines, the GBAE latent coder, the hier GAE bound
-//!   stage (Algorithm 1), the lossless coder's chunk streams, and the
-//!   streaming coordinator's sink stage. Work items are independent and
-//!   order-preserving, so archives are byte-identical at every thread
-//!   count (1 thread ≡ N threads).
+//!   stage (Algorithm 1), the lossless coder's chunk streams, the
+//!   streaming coordinator's sink stage, and the temporal stream
+//!   writer's per-GOP jobs ([`crate::stream::StreamWriter::append_frames`]
+//!   schedules whole keyframe+residual chains as pool work items, with
+//!   each step's blocks fanning out inside its job). Work items are
+//!   independent and order-preserving, so archives are byte-identical at
+//!   every thread count (1 thread ≡ N threads).
 //!
 //! Thread knobs: CLI `--threads N` > `ATTN_REDUCE_THREADS` >
 //! `available_parallelism()` (see [`crate::util::parallel`]).

@@ -49,6 +49,20 @@
 //! thread count (`--threads` > `ATTN_REDUCE_THREADS` >
 //! `available_parallelism`).
 //!
+//! ## The temporal stream subsystem
+//!
+//! [`stream`] adds the time axis as a first-class workload: a
+//! [`stream::StreamWriter`] appends timesteps to one append-only **v4
+//! `TSTR` container** — every K-th step a keyframe compressed with any
+//! codec, intermediate steps temporal residuals against the previous
+//! *reconstruction* (so the typed bound holds on every absolute frame,
+//! with no error accumulation along the chain) — and a
+//! [`stream::StreamReader`] gives `(step, region)` random access that
+//! decodes only the chain `keyframe..=step`, and within each chain
+//! archive only the blocks the region intersects. Smoothly-evolving
+//! output compresses several times better than independent per-step
+//! archives at the same bound (see the `stream_throughput` bench).
+//!
 //! ### Migrating from the pre-codec entry points
 //!
 //! | old                                                     | new |
@@ -102,6 +116,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod model;
 pub mod runtime;
+pub mod stream;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -9,13 +9,18 @@
 //! attn-reduce compress   --in a.f32,b.f32,...     # multi-input -> Archive v2
 //! attn-reduce decompress --in data.ardc --out recon.f32
 //! attn-reduce extract    --in data.ardc --region 0:8,16:48,0:64 --out sub.f32
+//! attn-reduce stream append  --out run.tstr --codec sz3 --steps 16 [--keyint 8]
+//! attn-reduce stream extract --in run.tstr --step 12 [--region 0:32,0:64]
+//! attn-reduce stream info    --in run.tstr
 //! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
 //! attn-reduce info       # manifest + platform summary
 //! ```
 
 use std::rc::Rc;
 
-use attn_reduce::codec::{archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound};
+use attn_reduce::codec::{
+    archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound, Sz3Codec, ZfpCodec,
+};
 use attn_reduce::compressor::{self, Archive, HierCompressor};
 use attn_reduce::config::{self, DatasetKind, Scale};
 use attn_reduce::data;
@@ -23,6 +28,7 @@ use attn_reduce::engine::{CodecExt, FieldSet};
 use attn_reduce::experiments;
 use attn_reduce::model::ParamStore;
 use attn_reduce::runtime::Runtime;
+use attn_reduce::stream::{StreamReader, StreamWriter};
 use attn_reduce::util::cli::Args;
 use attn_reduce::util::parallel;
 use attn_reduce::Result;
@@ -48,6 +54,15 @@ COMMANDS:
                intersecting blocks, v1/v2 fall back to full decode + crop;
                multi-field archives take [--field NAME] or write one
                F.<field>.f32 per field
+  stream       temporal streams (append-only v4 TSTR containers):
+                 append  --out S [--codec sz3|zfp] [--bound B] [--keyint K]
+                         [--dataset D --scale SC] --steps N | --in a.f32,b.f32,...
+                         creates S or appends to it (codec/bound/keyint
+                         then come from the stream header)
+                 extract --in S --step T [--region i0:i1,...] --out F
+                         decodes keyframe + residual chain, region decodes
+                         only the intersecting blocks of each chain step
+                 info    --in S   timeline, CR, per-step sizes
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         show artifact manifest + platform
   help         show this message
@@ -96,6 +111,7 @@ fn run(raw: &[String]) -> Result<()> {
         "compress" => cmd_compress(&args),
         "decompress" => cmd_decompress(&args),
         "extract" => cmd_extract(&args),
+        "stream" => cmd_stream(&args),
         "experiment" => {
             let id = args
                 .positional
@@ -309,13 +325,28 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--region`, treating a malformed or reversed range (`i1 < i0`,
+/// missing `:`) as a *usage* error: one clear line on stderr, exit 2 —
+/// same contract as an unknown subcommand, not a runtime failure.
+fn parse_region_arg(s: &str) -> attn_reduce::data::Region {
+    match attn_reduce::data::Region::parse(s) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: bad --region {s:?}: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn cmd_extract(args: &Args) -> Result<()> {
-    let archive = Archive::load(
-        args.get("in").ok_or_else(|| anyhow::anyhow!("--in archive required"))?,
-    )?;
-    let region = attn_reduce::data::Region::parse(
+    // validate the region spelling before touching the archive: a
+    // malformed --region is a usage error whatever --in points at
+    let region = parse_region_arg(
         args.get("region")
             .ok_or_else(|| anyhow::anyhow!("--region i0:i1,j0:j1,... required"))?,
+    );
+    let archive = Archive::load(
+        args.get("in").ok_or_else(|| anyhow::anyhow!("--in archive required"))?,
     )?;
     let mut b = builder(args)?;
     let codec = b.for_archive(&archive)?;
@@ -365,6 +396,188 @@ fn cmd_extract(args: &Args) -> Result<()> {
         region.shape(),
         t.len()
     );
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    match sub {
+        "append" => cmd_stream_append(args),
+        "extract" => cmd_stream_extract(args),
+        "info" => cmd_stream_info(args),
+        other => {
+            eprintln!("error: unknown stream subcommand {other:?} (append|extract|info)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_stream_append(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out stream path required"))?;
+    let exists = std::path::Path::new(out).exists();
+    // codec / geometry / bound / cadence: from the stream header when
+    // appending to an existing stream (the reader is threaded through to
+    // the writer so the file is read once), from flags when creating one
+    let (codec_id, cfg, bnd, keyint, reader) = if exists {
+        let r = StreamReader::open(out)?;
+        (
+            r.codec_id().to_string(),
+            r.dataset().clone(),
+            r.bound(),
+            r.keyframe_interval(),
+            Some(r),
+        )
+    } else {
+        let kind = dataset_kind(args)?;
+        (
+            args.get_or("codec", "sz3").to_ascii_lowercase(),
+            config::stream_frame_preset(kind, scale(args)?),
+            bound(args)?,
+            args.get_usize("keyint", 8)?,
+            None,
+        )
+    };
+    match codec_id.as_str() {
+        "sz3" => {
+            stream_append_with(args, out, reader, Sz3Codec::new(cfg.clone()), cfg, bnd, keyint)
+        }
+        "zfp" => {
+            stream_append_with(args, out, reader, ZfpCodec::new(cfg.clone()), cfg, bnd, keyint)
+        }
+        other => anyhow::bail!(
+            "stream append supports the pure-rust codecs (sz3|zfp); \
+             {other:?} streams go through the library API"
+        ),
+    }
+}
+
+fn stream_append_with<C: Codec + Sync>(
+    args: &Args,
+    out: &str,
+    reader: Option<StreamReader>,
+    codec: C,
+    cfg: config::DatasetConfig,
+    bnd: ErrorBound,
+    keyint: usize,
+) -> Result<()> {
+    let mut w = match reader {
+        Some(r) => StreamWriter::reopen_from(out, r, &codec)?,
+        None => StreamWriter::create(out, codec.id(), cfg, bnd, keyint)?,
+    };
+    // frames: --in a.f32,b.f32,... or synthesized smoothly-evolving
+    // steps continuing from the stream's current length (the generator
+    // is closed-form in t, so increments across invocations line up)
+    let frames: Vec<attn_reduce::tensor::Tensor> = match args.get("in") {
+        Some(list) => list
+            .split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(|p| data::read_f32_file(p, w.dataset().dims.clone()))
+            .collect::<Result<_>>()?,
+        None => data::timeseries::generate_frames(
+            &w.dataset().dims,
+            w.dataset().seed,
+            w.next_step(),
+            args.get_usize("steps", 8)?,
+        ),
+    };
+    anyhow::ensure!(!frames.is_empty(), "nothing to append (--steps N or --in files)");
+    let first = w.next_step();
+    let raw_mb = (frames.len() * w.dataset().total_points() * 4) as f64 / 1e6;
+    let t0 = std::time::Instant::now();
+    let stats = w.append_frames(&codec, &frames)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let keyframes = stats.iter().filter(|s| s.keyframe).count();
+    let summary = w.finish()?;
+    println!(
+        "appended steps {first}..{} ({keyframes} keyframes) at {:.1} MB/s",
+        first + frames.len() - 1,
+        raw_mb / secs.max(1e-9)
+    );
+    println!(
+        "stream: {out} — {} steps, {} keyframes, {} bytes (payload {} bytes)",
+        summary.steps, summary.keyframes, summary.file_bytes, summary.payload_bytes
+    );
+    Ok(())
+}
+
+fn cmd_stream_extract(args: &Args) -> Result<()> {
+    let reader = StreamReader::open(
+        args.get("in").ok_or_else(|| anyhow::anyhow!("--in stream required"))?,
+    )?;
+    let step: usize = args
+        .get("step")
+        .ok_or_else(|| anyhow::anyhow!("--step N required"))?
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--step expects a step index"))?;
+    let mut b = builder(args)?;
+    let codec = reader.build_codec(&mut b)?;
+    let out = args.get_or("out", "frame.f32");
+    match args.get("region") {
+        Some(spec) => {
+            let region = parse_region_arg(spec);
+            let cost = reader.region_cost(step, &region)?;
+            let t = reader.extract(&*codec, step, &region)?;
+            data::write_f32_file(out, &t)?;
+            println!(
+                "codec = {} -> wrote {out} (step {step}, region {:?}, {} points)",
+                codec.id(),
+                region.shape(),
+                t.len()
+            );
+            println!(
+                "chain: {} steps, blocks {}/{}, payload bytes {}/{} ({:.1}%)",
+                cost.steps,
+                cost.blocks_touched,
+                cost.blocks_total,
+                cost.bytes_touched,
+                cost.bytes_total,
+                100.0 * cost.bytes_touched as f64 / cost.bytes_total.max(1) as f64
+            );
+        }
+        None => {
+            let t = reader.frame(&*codec, step)?;
+            data::write_f32_file(out, &t)?;
+            println!(
+                "codec = {} -> wrote {out} (step {step}, {} points)",
+                codec.id(),
+                t.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream_info(args: &Args) -> Result<()> {
+    let reader = StreamReader::open(
+        args.get("in").ok_or_else(|| anyhow::anyhow!("--in stream required"))?,
+    )?;
+    let stats = reader.stats()?;
+    println!(
+        "stream: codec = {}, bound = {}, frame dims {:?}, keyint {}{}",
+        reader.codec_id(),
+        reader.bound(),
+        reader.dataset().dims,
+        reader.keyframe_interval(),
+        if reader.is_finished() { "" } else { " (unsealed — timeline recovered by scan)" }
+    );
+    println!(
+        "steps = {} ({} keyframes), file {} bytes, payload {} bytes",
+        stats.steps, stats.keyframes, stats.file_bytes, stats.payload_bytes
+    );
+    println!(
+        "CR (paper accounting) = {:.1}, CR (total bytes) = {:.1}",
+        stats.cr, stats.cr_total
+    );
+    const SHOW: usize = 24;
+    for (s, e) in reader.timeline().entries.iter().enumerate().take(SHOW) {
+        println!("  step {s:>4} {} {} bytes", if e.keyframe { "K" } else { "R" }, e.len);
+    }
+    if reader.n_steps() > SHOW {
+        println!("  ... {} more steps", reader.n_steps() - SHOW);
+    }
     Ok(())
 }
 

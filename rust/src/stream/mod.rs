@@ -1,0 +1,259 @@
+//! Temporal stream subsystem: append-only time-series archives with
+//! keyframe/residual coding and `(step, region)` random access.
+//!
+//! Simulation codes emit data *as a stream of timesteps*, and
+//! frame-to-frame redundancy dominates CFD/climate output — yet a plain
+//! [`crate::codec::Codec`] call compresses each timestep independently,
+//! discarding exactly the temporal correlation the paper says reduction
+//! must exploit. This module adds the missing workload on top of the
+//! existing engine and archive formats:
+//!
+//! * **v4 `TSTR` container** (framing in [`crate::compressor::format`]):
+//!   a self-describing header, then one self-delimiting record per step
+//!   (`KSTP`/`RSTP`, each embedding a complete v1/v3 archive), then a
+//!   [`TimelineIndex`] (`TIDX`) + footer written on `finish`. Unsealed
+//!   streams (crash, still-growing producer) recover by scanning.
+//! * **Keyframe/residual coding** (the `residual` submodule): every
+//!   K-th step is a keyframe compressed with any existing codec;
+//!   intermediate steps code `frame - prev_reconstruction`, so the
+//!   typed [`crate::codec::ErrorBound`] holds on every *absolute* frame
+//!   with no accumulation along the chain
+//!   ([`crate::codec::ErrorBound::for_residual`] handles the
+//!   range-relative variants). With K = 1 a stream degenerates to
+//!   independent per-step archives, byte-identical to `Codec::compress`.
+//! * **[`StreamWriter`]** — incremental ingest: `create`, `append` (or
+//!   GOP-parallel [`StreamWriter::append_frames`] on the shared
+//!   [`crate::engine::Executor`]), `finish`; `reopen` continues a stream
+//!   across process lifetimes.
+//! * **[`StreamReader`]** — `(step, region)` random access decoding
+//!   only the chain `keyframe..=step`, and within each chain archive
+//!   only the blocks the region intersects (its `BIDX`); plus an
+//!   in-order playback iterator that decodes each step once.
+//!   [`StreamReader::region_cost`] accounts the bytes a region decode
+//!   touches.
+//!
+//! The keyframe interval K trades compression for access latency:
+//! larger K amortizes keyframe cost over more (much smaller) residuals
+//! but lengthens the chain a random access must decode. The
+//! `stream_throughput` bench sweeps K and reports both sides.
+//!
+//! ```ignore
+//! use attn_reduce::stream::{StreamReader, StreamWriter};
+//!
+//! let mut w = StreamWriter::create("run.tstr", codec.id(), frame_cfg, bound, 8)?;
+//! for frame in frames {
+//!     w.append(&*codec, &frame)?;
+//! }
+//! w.finish()?;
+//!
+//! let r = StreamReader::open("run.tstr")?;
+//! let codec = r.build_codec(&mut builder)?;        // self-describing
+//! let t42 = r.frame(&*codec, 42)?;                 // keyframe + residuals
+//! let roi = r.extract(&*codec, 42, &region)?;      // only intersecting blocks
+//! ```
+
+mod reader;
+mod residual;
+mod timeline;
+mod writer;
+
+pub use reader::{FrameIter, RegionCost, StreamReader, StreamStats};
+pub use residual::{add_residual, encode_chain, residual_of, EncodedStep};
+pub use timeline::{StepEntry, TimelineIndex};
+pub use writer::{StepStats, StreamSummary, StreamWriter};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{Codec, ErrorBound, Sz3Codec};
+    use crate::config::{DatasetConfig, DatasetKind, Normalization};
+    use crate::data::{timeseries, Region};
+
+    fn frame_cfg() -> DatasetConfig {
+        DatasetConfig {
+            kind: DatasetKind::E3sm,
+            dims: vec![24, 32],
+            ae_block: vec![8, 8],
+            k: 2,
+            hyper_axis: 0,
+            gae_block: vec![4, 4],
+            normalization: Normalization::ZScore,
+            seed: 9,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("attn_reduce_stream_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn write_read_roundtrip_with_random_access() {
+        let cfg = frame_cfg();
+        let codec = Sz3Codec::new(cfg.clone());
+        let frames = timeseries::generate_frames(&cfg.dims, 5, 0, 7);
+        let bound = ErrorBound::Nrmse(1e-3);
+        let path = tmp("roundtrip.tstr");
+        let mut w = StreamWriter::create(&path, codec.id(), cfg.clone(), bound, 3).unwrap();
+        for f in &frames {
+            w.append(&codec, f).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.steps, 7);
+        assert_eq!(summary.keyframes, 3); // steps 0, 3, 6
+
+        let r = StreamReader::open(&path).unwrap();
+        assert!(r.is_finished());
+        assert_eq!(r.n_steps(), 7);
+        assert_eq!(r.keyframe_interval(), 3);
+        assert_eq!(r.codec_id(), "sz3");
+        // every random-access frame meets the bound on the absolute frame
+        for (t, orig) in frames.iter().enumerate() {
+            let recon = r.frame(&codec, t).unwrap();
+            assert!(
+                ErrorBound::Nrmse(1e-3 * 1.0001).satisfied_by(orig, &recon, &cfg),
+                "step {t} violates the bound"
+            );
+        }
+        // playback iterator agrees with random access bit-for-bit
+        for (t, f) in r.frames(&codec).enumerate() {
+            assert_eq!(f.unwrap().data(), r.frame(&codec, t).unwrap().data(), "step {t}");
+        }
+        // region extraction is bit-identical to cropping the full frame
+        let region = Region::parse("4:20,8:24").unwrap();
+        for t in [0, 2, 4, 6] {
+            let part = r.extract(&codec, t, &region).unwrap();
+            let crop = region.crop(&r.frame(&codec, t).unwrap()).unwrap();
+            assert_eq!(part.data(), crop.data(), "step {t} region mismatch");
+        }
+    }
+
+    #[test]
+    fn region_decode_touches_only_intersecting_chain_blocks() {
+        let cfg = frame_cfg();
+        let codec = Sz3Codec::new(cfg.clone());
+        let frames = timeseries::generate_frames(&cfg.dims, 5, 0, 6);
+        let path = tmp("cost.tstr");
+        let mut w =
+            StreamWriter::create(&path, codec.id(), cfg.clone(), ErrorBound::Nrmse(1e-3), 4)
+                .unwrap();
+        w.append_frames(&codec, &frames).unwrap();
+        w.finish().unwrap();
+        let r = StreamReader::open(&path).unwrap();
+        // one 8x8 tile of a 3x4 tiling
+        let region = Region::parse("0:8,0:8").unwrap();
+        let cost = r.region_cost(5, &region).unwrap();
+        assert_eq!(cost.steps, 2); // keyframe 4 + residual 5
+        assert_eq!(cost.blocks_total, 2 * 12);
+        assert_eq!(cost.blocks_touched, 2 * 1);
+        assert!(cost.bytes_touched < cost.bytes_total);
+        // the exact byte accounting: sum of the intersecting entries of
+        // each chain archive's BIDX, nothing more
+        let mut want = 0usize;
+        for s in 4..=5 {
+            let idx = r.step_archive(s).unwrap().block_index().unwrap().unwrap();
+            let ids = crate::data::region_tile_ids(&cfg.dims, &idx.tile, &region);
+            assert_eq!(ids, vec![0]);
+            want += idx.bytes_for(&ids);
+        }
+        assert_eq!(cost.bytes_touched, want);
+        // a full-frame region touches everything in the chain
+        let full = Region::full(&cfg.dims);
+        let all = r.region_cost(5, &full).unwrap();
+        assert_eq!(all.bytes_touched, all.bytes_total);
+    }
+
+    #[test]
+    fn bulk_append_is_byte_identical_to_sequential() {
+        let cfg = frame_cfg();
+        let codec = Sz3Codec::new(cfg.clone());
+        let frames = timeseries::generate_frames(&cfg.dims, 5, 0, 9);
+        let bound = ErrorBound::PointwiseAbs(1e-3 * 8.0);
+        let (pa, pb) = (tmp("seq.tstr"), tmp("bulk.tstr"));
+        let mut w = StreamWriter::create(&pa, codec.id(), cfg.clone(), bound, 4).unwrap();
+        for f in &frames {
+            w.append(&codec, f).unwrap();
+        }
+        w.finish().unwrap();
+        let mut w = StreamWriter::create(&pb, codec.id(), cfg.clone(), bound, 4).unwrap();
+        w.append_frames(&codec, &frames).unwrap();
+        w.finish().unwrap();
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    }
+
+    #[test]
+    fn reopen_continues_the_stream_and_its_chains() {
+        let cfg = frame_cfg();
+        let codec = Sz3Codec::new(cfg.clone());
+        let frames = timeseries::generate_frames(&cfg.dims, 5, 0, 8);
+        let bound = ErrorBound::Nrmse(1e-3);
+        // one-shot reference
+        let pa = tmp("oneshot.tstr");
+        let mut w = StreamWriter::create(&pa, codec.id(), cfg.clone(), bound, 3).unwrap();
+        w.append_frames(&codec, &frames).unwrap();
+        w.finish().unwrap();
+        // split mid-GOP: 5 steps (ends inside the second GOP), then reopen
+        let pb = tmp("split.tstr");
+        let mut w = StreamWriter::create(&pb, codec.id(), cfg.clone(), bound, 3).unwrap();
+        w.append_frames(&codec, &frames[..5]).unwrap();
+        w.finish().unwrap();
+        let mut w = StreamWriter::reopen(&pb, &codec).unwrap();
+        assert_eq!(w.next_step(), 5);
+        for f in &frames[5..] {
+            w.append(&codec, f).unwrap();
+        }
+        w.finish().unwrap();
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        // reopening with the wrong codec is a typed error
+        let zfp = crate::codec::ZfpCodec::new(cfg.clone());
+        let err = StreamWriter::reopen(&pb, &zfp).unwrap_err().to_string();
+        assert!(err.contains("codec"), "{err}");
+    }
+
+    #[test]
+    fn unsealed_streams_recover_by_scanning() {
+        let cfg = frame_cfg();
+        let codec = Sz3Codec::new(cfg.clone());
+        let frames = timeseries::generate_frames(&cfg.dims, 5, 0, 4);
+        let path = tmp("unsealed.tstr");
+        let mut w =
+            StreamWriter::create(&path, codec.id(), cfg.clone(), ErrorBound::Nrmse(1e-3), 2)
+                .unwrap();
+        for f in &frames {
+            w.append(&codec, f).unwrap();
+        }
+        drop(w); // never finished — no TIDX, no footer
+        let r = StreamReader::open(&path).unwrap();
+        assert!(!r.is_finished());
+        assert_eq!(r.n_steps(), 4);
+        let recon = r.frame(&codec, 3).unwrap();
+        assert!(ErrorBound::Nrmse(1e-3 * 1.0001).satisfied_by(&frames[3], &recon, &cfg));
+        // reopen after the crash and seal it
+        let mut w = StreamWriter::reopen(&path, &codec).unwrap();
+        assert_eq!(w.next_step(), 4);
+        w.finish().unwrap();
+        assert!(StreamReader::open(&path).unwrap().is_finished());
+    }
+
+    #[test]
+    fn writer_misuse_is_rejected() {
+        let cfg = frame_cfg();
+        let codec = Sz3Codec::new(cfg.clone());
+        let path = tmp("misuse.tstr");
+        assert!(
+            StreamWriter::create(&path, "sz3", cfg.clone(), ErrorBound::None, 0).is_err(),
+            "keyint 0"
+        );
+        let mut w =
+            StreamWriter::create(&path, "sz3", cfg.clone(), ErrorBound::Nrmse(1e-3), 2).unwrap();
+        // wrong codec id
+        let zfp = crate::codec::ZfpCodec::new(cfg.clone());
+        let frame = timeseries::frame_at(&cfg.dims, 5, 0);
+        assert!(w.append(&zfp, &frame).is_err());
+        // wrong frame shape
+        let bad = crate::tensor::Tensor::zeros(vec![3, 3]);
+        assert!(w.append(&codec, &bad).is_err());
+        assert_eq!(w.next_step(), 0, "failed appends must not advance the stream");
+    }
+}

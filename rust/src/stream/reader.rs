@@ -1,0 +1,368 @@
+//! [`StreamReader`] — random access and playback over v4 temporal
+//! streams.
+//!
+//! Random access by `(step, region)` decodes the *chain* of `step`: the
+//! nearest keyframe at or before it plus every residual up to it — and
+//! for a region, only the blocks each chain archive's `BIDX` says the
+//! region intersects (`Codec::decompress_region` per step). The result
+//! is bit-identical to cropping a full-frame decode, and
+//! [`StreamReader::region_cost`] accounts exactly which payload bytes a
+//! region decode touches so tests (and capacity planning) can verify
+//! the locality claim.
+
+use std::path::Path;
+
+use crate::codec::{archive_bound, Codec, CodecBuilder, ErrorBound};
+use crate::compressor::format::{
+    parse_stream_header, parse_stream_record, STREAM_END_MAGIC, STREAM_KEY_TAG,
+    STREAM_RES_TAG, STREAM_TIDX_TAG,
+};
+use crate::compressor::{compression_ratio, Archive};
+use crate::config::DatasetConfig;
+use crate::data::{region_tile_ids, Region};
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+use super::residual::add_residual;
+use super::timeline::{StepEntry, TimelineIndex};
+
+/// Exactly what a `(step, region)` decode touches, in payload bytes and
+/// blocks, summed over the chain `keyframe..=step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionCost {
+    /// Chain length (keyframe + residuals decoded).
+    pub steps: usize,
+    pub blocks_touched: usize,
+    pub blocks_total: usize,
+    pub bytes_touched: usize,
+    pub bytes_total: usize,
+}
+
+/// Compression statistics of a whole stream.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamStats {
+    pub steps: usize,
+    pub keyframes: usize,
+    /// Summed CR-payload bytes across step archives (paper accounting).
+    pub payload_bytes: usize,
+    /// The whole file, framing included.
+    pub file_bytes: usize,
+    pub cr: f64,
+    pub cr_total: f64,
+}
+
+/// Read-side view of one v4 stream.
+pub struct StreamReader {
+    bytes: Vec<u8>,
+    header: Value,
+    records_start: usize,
+    dataset: DatasetConfig,
+    bound: ErrorBound,
+    codec_id: String,
+    index: TimelineIndex,
+    finished: bool,
+}
+
+impl StreamReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading stream {}", path.display()))?;
+        Self::from_bytes(bytes)
+    }
+
+    /// Parse a stream from its bytes. A sealed stream (footer present)
+    /// loads its `TIDX` timeline directly; an unsealed one — a crashed
+    /// or still-growing producer — recovers the timeline by scanning
+    /// complete step records, dropping any torn tail.
+    pub fn from_bytes(bytes: Vec<u8>) -> Result<Self> {
+        let (header, records_start) = parse_stream_header(&bytes)?;
+        let codec_id = header
+            .req("codec")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("stream header codec is not a string"))?
+            .to_string();
+        let dataset = DatasetConfig::from_json(header.req("dataset")?)?;
+        let bound = ErrorBound::from_json(header.req("bound")?)?;
+        let keyint = header
+            .req("keyint")?
+            .as_usize()
+            .filter(|&k| k >= 1)
+            .ok_or_else(|| anyhow::anyhow!("stream header keyint is not a positive integer"))?;
+        // prefer the sealed-stream TIDX; on any footer/index corruption
+        // fall back to the recovery scan (which trusts only complete,
+        // well-formed records), so a damaged seal degrades instead of
+        // bricking the stream
+        let footer = Self::footer_index(&bytes, records_start).filter(|idx| {
+            idx.keyframe_interval as usize == keyint
+                && idx.validate(bytes.len() as u64).is_ok()
+        });
+        let (index, finished) = match footer {
+            Some(idx) => (idx, true),
+            None => {
+                let idx = Self::scan_index(&bytes, records_start, keyint);
+                idx.validate(bytes.len() as u64)?;
+                (idx, false)
+            }
+        };
+        Ok(Self {
+            bytes,
+            header,
+            records_start,
+            dataset,
+            bound,
+            codec_id,
+            index,
+            finished,
+        })
+    }
+
+    /// The sealed-stream path: footer → `TIDX` record → timeline.
+    /// `None` on any inconsistency — the caller falls back to scanning.
+    fn footer_index(bytes: &[u8], records_start: usize) -> Option<TimelineIndex> {
+        if bytes.len() < records_start + 12 {
+            return None;
+        }
+        let foot = &bytes[bytes.len() - 12..];
+        if &foot[8..12] != STREAM_END_MAGIC {
+            return None;
+        }
+        let off = u64::from_le_bytes(foot[0..8].try_into().unwrap());
+        let off = usize::try_from(off)
+            .ok()
+            .filter(|&o| o >= records_start && o < bytes.len())?;
+        let (tag, p, len, _) = parse_stream_record(bytes, off).ok()?;
+        if &tag != STREAM_TIDX_TAG {
+            return None;
+        }
+        TimelineIndex::from_bytes(&bytes[p..p + len]).ok()
+    }
+
+    /// Recovery scan: walk complete records from the header, keeping
+    /// every well-formed step, stopping at the first torn or non-step
+    /// record. Never errors — a truncated tail just yields fewer steps.
+    fn scan_index(bytes: &[u8], records_start: usize, keyint: usize) -> TimelineIndex {
+        let mut entries = Vec::new();
+        let mut off = records_start;
+        while let Ok((tag, p, len, next)) = parse_stream_record(bytes, off) {
+            let keyframe = match &tag {
+                t if t == STREAM_KEY_TAG => true,
+                t if t == STREAM_RES_TAG => false,
+                _ => break,
+            };
+            entries.push(StepEntry { keyframe, offset: p as u64, len: len as u64 });
+            off = next;
+        }
+        TimelineIndex { keyframe_interval: keyint as u32, entries }
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.index.n_steps()
+    }
+
+    pub fn keyframe_interval(&self) -> usize {
+        self.index.keyframe_interval as usize
+    }
+
+    pub fn dataset(&self) -> &DatasetConfig {
+        &self.dataset
+    }
+
+    pub fn bound(&self) -> ErrorBound {
+        self.bound
+    }
+
+    pub fn codec_id(&self) -> &str {
+        &self.codec_id
+    }
+
+    /// Was the stream sealed by `finish()` (vs timeline recovered by
+    /// scanning)?
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    pub fn timeline(&self) -> &TimelineIndex {
+        &self.index
+    }
+
+    pub fn header(&self) -> &Value {
+        &self.header
+    }
+
+    /// Byte offset where step records begin (just past the header).
+    pub fn records_start(&self) -> usize {
+        self.records_start
+    }
+
+    /// Parse the embedded archive of one step.
+    pub fn step_archive(&self, step: usize) -> Result<Archive> {
+        let e = self
+            .index
+            .entries
+            .get(step)
+            .ok_or_else(|| anyhow::anyhow!("step {step} out of range ({} steps)", self.n_steps()))?;
+        let (off, len) = (e.offset as usize, e.len as usize);
+        Archive::from_bytes(&self.bytes[off..off + len])
+            .with_context(|| format!("parsing step {step} archive"))
+    }
+
+    /// Rebuild the stream's codec from its first step archive (steps are
+    /// self-describing, and all steps share codec, dataset, and model
+    /// groups). Requires at least one step.
+    pub fn build_codec(&self, builder: &mut CodecBuilder) -> Result<Box<dyn Codec>> {
+        ensure!(self.n_steps() > 0, "stream holds no steps yet");
+        builder.for_archive(&self.step_archive(0)?)
+    }
+
+    /// Decode the absolute frame at `step`: the nearest keyframe plus
+    /// every residual up to `step`, summed in chain order.
+    pub fn frame(&self, codec: &dyn Codec, step: usize) -> Result<Tensor> {
+        let chain = self.index.chain(step)?;
+        let mut recon: Option<Tensor> = None;
+        for s in chain {
+            let dec = codec.decompress(&self.step_archive(s)?)?;
+            recon = Some(match recon {
+                None => dec,
+                Some(prev) => add_residual(&prev, &dec),
+            });
+        }
+        Ok(recon.expect("chain is non-empty"))
+    }
+
+    /// Decode only `region` of the frame at `step`: every chain archive
+    /// decodes just the blocks the region intersects (via its `BIDX`),
+    /// and the partial frames sum in the same order as [`Self::frame`] —
+    /// so the result is bit-identical to cropping the full decode.
+    pub fn extract(&self, codec: &dyn Codec, step: usize, region: &Region) -> Result<Tensor> {
+        region.validate_in(&self.dataset.dims)?;
+        let chain = self.index.chain(step)?;
+        let mut recon: Option<Tensor> = None;
+        for s in chain {
+            let dec = codec.decompress_region(&self.step_archive(s)?, region)?;
+            recon = Some(match recon {
+                None => dec,
+                Some(prev) => add_residual(&prev, &dec),
+            });
+        }
+        Ok(recon.expect("chain is non-empty"))
+    }
+
+    /// Account exactly what a `(step, region)` decode touches: per chain
+    /// archive, the indexed byte spans of the intersecting blocks (a
+    /// v1-style step without a block index counts fully — it can only
+    /// decode whole).
+    pub fn region_cost(&self, step: usize, region: &Region) -> Result<RegionCost> {
+        region.validate_in(&self.dataset.dims)?;
+        let chain = self.index.chain(step)?;
+        let mut cost = RegionCost {
+            steps: 0,
+            blocks_touched: 0,
+            blocks_total: 0,
+            bytes_touched: 0,
+            bytes_total: 0,
+        };
+        for s in chain {
+            let archive = self.step_archive(s)?;
+            cost.steps += 1;
+            match archive.block_index()? {
+                Some(idx) => {
+                    let ids = region_tile_ids(&self.dataset.dims, &idx.tile, region);
+                    cost.blocks_touched += ids.len();
+                    cost.blocks_total += idx.entries.len();
+                    cost.bytes_touched += idx.bytes_for(&ids);
+                    cost.bytes_total += idx.total_bytes();
+                }
+                None => {
+                    let b = archive.cr_payload_bytes();
+                    cost.blocks_touched += 1;
+                    cost.blocks_total += 1;
+                    cost.bytes_touched += b;
+                    cost.bytes_total += b;
+                }
+            }
+        }
+        Ok(cost)
+    }
+
+    /// In-order playback: decodes each step once, carrying the running
+    /// reconstruction (keyframes reset it), so a full pass costs one
+    /// decode per step instead of one chain per step.
+    pub fn frames<'a>(&'a self, codec: &'a dyn Codec) -> FrameIter<'a> {
+        FrameIter { reader: self, codec, next: 0, prev: None }
+    }
+
+    /// Stream-level compression statistics (paper accounting: summed
+    /// step payload sections; numerator = points × steps).
+    pub fn stats(&self) -> Result<StreamStats> {
+        let mut payload = 0usize;
+        let mut keyframes = 0usize;
+        for s in 0..self.n_steps() {
+            payload += self.step_archive(s)?.cr_payload_bytes();
+            keyframes += self.index.entries[s].keyframe as usize;
+        }
+        let n_points = self.dataset.total_points() * self.n_steps();
+        Ok(StreamStats {
+            steps: self.n_steps(),
+            keyframes,
+            payload_bytes: payload,
+            file_bytes: self.bytes.len(),
+            cr: compression_ratio(n_points, payload),
+            cr_total: compression_ratio(n_points, self.bytes.len()),
+        })
+    }
+
+    /// The bound a given step archive was written under (keyframes carry
+    /// the stream bound; residuals the translated residual bound).
+    pub fn step_bound(&self, step: usize) -> Result<ErrorBound> {
+        Ok(archive_bound(&self.step_archive(step)?))
+    }
+}
+
+/// Iterator over absolute frames in step order (see
+/// [`StreamReader::frames`]). Yields `Result<Tensor>`; a decode error
+/// ends iteration after being reported once.
+pub struct FrameIter<'a> {
+    reader: &'a StreamReader,
+    codec: &'a dyn Codec,
+    next: usize,
+    prev: Option<Tensor>,
+}
+
+impl Iterator for FrameIter<'_> {
+    type Item = Result<Tensor>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.reader.n_steps() {
+            return None;
+        }
+        let step = self.next;
+        let out: Result<Tensor> = (|| {
+            let entry = self.reader.index.entries[step];
+            let dec = self.codec.decompress(&self.reader.step_archive(step)?)?;
+            let recon = if entry.keyframe {
+                dec
+            } else {
+                let prev = self
+                    .prev
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("residual step {step} has no base frame"))?;
+                add_residual(prev, &dec)
+            };
+            Ok(recon)
+        })();
+        match out {
+            Ok(recon) => {
+                self.prev = Some(recon.clone());
+                self.next += 1;
+                Some(Ok(recon))
+            }
+            Err(e) => {
+                self.next = self.reader.n_steps(); // stop after the error
+                Some(Err(e))
+            }
+        }
+    }
+}

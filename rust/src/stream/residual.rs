@@ -1,0 +1,170 @@
+//! The temporal residual coding stage.
+//!
+//! Every K-th step is a **keyframe**: the absolute frame compressed with
+//! the stream's codec under the stream's bound. Intermediate steps are
+//! **residuals**: `frame_t - recon_{t-1}`, where `recon_{t-1}` is the
+//! previous frame's *reconstruction* (not its raw values) — so the error
+//! of the absolute frame at every step equals the error of that one
+//! step's coding, and the typed [`ErrorBound`] holds on every frame of a
+//! residual chain with no accumulation ([`ErrorBound::for_residual`]
+//! translates range-relative bounds into frame units).
+//!
+//! A keyframe plus its residuals form a **GOP** (group of pictures, in
+//! video terms). GOPs share no state, which is what
+//! [`crate::stream::StreamWriter::append_frames`] exploits to schedule
+//! whole GOPs across the [`crate::engine::Executor`] worker pool.
+
+use crate::codec::{Codec, ErrorBound};
+use crate::tensor::Tensor;
+use crate::Result;
+use anyhow::ensure;
+
+/// `frame - prev_recon`, elementwise.
+pub fn residual_of(frame: &Tensor, prev_recon: &Tensor) -> Tensor {
+    debug_assert_eq!(frame.shape(), prev_recon.shape());
+    let data = frame
+        .data()
+        .iter()
+        .zip(prev_recon.data())
+        .map(|(&f, &p)| f - p)
+        .collect();
+    Tensor::new(frame.shape().to_vec(), data)
+}
+
+/// `prev_recon + residual_recon`, elementwise — the absolute frame a
+/// residual decode reconstructs. Addition order is fixed (prev first),
+/// so chain decodes are bit-identical however they are assembled.
+pub fn add_residual(prev_recon: &Tensor, residual_recon: &Tensor) -> Tensor {
+    debug_assert_eq!(prev_recon.shape(), residual_recon.shape());
+    let data = prev_recon
+        .data()
+        .iter()
+        .zip(residual_recon.data())
+        .map(|(&p, &r)| p + r)
+        .collect();
+    Tensor::new(prev_recon.shape().to_vec(), data)
+}
+
+/// One encoded step of a GOP: the serialized step archive plus what the
+/// timeline needs to index it.
+pub struct EncodedStep {
+    pub keyframe: bool,
+    pub bytes: Vec<u8>,
+    /// CR-payload bytes of the step archive (paper accounting).
+    pub payload_bytes: usize,
+}
+
+/// Encode `frames` as one chain starting at absolute step `start`:
+/// steps where `step % keyint == 0` restart the chain as keyframes,
+/// other steps code residuals against the running reconstruction.
+/// `prev_recon` carries the chain state into a non-keyframe start (the
+/// reopen-mid-GOP case) and must be `Some` iff `start % keyint != 0`.
+/// Returns the encoded steps plus the final reconstruction (the chain
+/// state for whatever is appended next).
+pub fn encode_chain(
+    codec: &dyn Codec,
+    frames: &[Tensor],
+    start: usize,
+    keyint: usize,
+    bound: &ErrorBound,
+    prev_recon: Option<&Tensor>,
+) -> Result<(Vec<EncodedStep>, Option<Tensor>)> {
+    ensure!(keyint >= 1, "keyframe interval must be at least 1");
+    ensure!(
+        (start % keyint == 0) != prev_recon.is_some(),
+        "chain state mismatch: step {start} with keyint {keyint} \
+         {} a previous reconstruction",
+        if prev_recon.is_some() { "must not carry" } else { "needs" }
+    );
+    let mut out = Vec::with_capacity(frames.len());
+    let mut prev = prev_recon.cloned();
+    for (i, frame) in frames.iter().enumerate() {
+        let step = start + i;
+        let keyframe = step % keyint == 0;
+        let (archive, recon) = if keyframe {
+            codec.compress_with_recon(frame, bound)?
+        } else {
+            let base = prev.as_ref().expect("residual step has a previous recon");
+            let residual = residual_of(frame, base);
+            let (archive, res_recon) =
+                codec.compress_residual(&residual, bound, frame.range() as f64)?;
+            (archive, add_residual(base, &res_recon))
+        };
+        out.push(EncodedStep {
+            keyframe,
+            payload_bytes: archive.cr_payload_bytes(),
+            bytes: archive.to_bytes(),
+        });
+        prev = Some(recon);
+    }
+    Ok((out, prev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Sz3Codec;
+    use crate::config::{dataset_preset, DatasetKind, Scale};
+    use crate::data;
+
+    #[test]
+    fn residual_ops_are_exact_inverses() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![2, 3], vec![0.5, 2.5, 2.0, 4.0, 7.0, -1.0]);
+        let r = residual_of(&a, &b);
+        assert_eq!(r.data(), &[0.5, -0.5, 1.0, 0.0, -2.0, 7.0]);
+        let back = add_residual(&b, &r);
+        assert_eq!(back.data(), a.data());
+    }
+
+    #[test]
+    fn chain_bounds_hold_on_absolute_frames() {
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let codec = Sz3Codec::new(cfg.clone());
+        let f0 = data::generate(&cfg);
+        // a smoothly-shifted second and third frame
+        let mut f1 = f0.clone();
+        for v in f1.data_mut() {
+            *v += 3.0;
+        }
+        let mut f2 = f1.clone();
+        for v in f2.data_mut() {
+            *v *= 1.0001;
+        }
+        let bound = ErrorBound::Nrmse(1e-3);
+        let frames = [f0.clone(), f1.clone(), f2.clone()];
+        let (steps, last) = encode_chain(&codec, &frames, 0, 3, &bound, None).unwrap();
+        assert_eq!(steps.len(), 3);
+        assert!(steps[0].keyframe && !steps[1].keyframe && !steps[2].keyframe);
+        // replay the chain by decoding the emitted archives
+        let mut prev: Option<Tensor> = None;
+        for (frame, step) in frames.iter().zip(&steps) {
+            let archive = crate::compressor::Archive::from_bytes(&step.bytes).unwrap();
+            let dec = codec.decompress(&archive).unwrap();
+            let recon = match &prev {
+                None => dec,
+                Some(p) => add_residual(p, &dec),
+            };
+            assert!(
+                ErrorBound::Nrmse(1e-3 * 1.0001).satisfied_by(frame, &recon, &cfg),
+                "bound violated on a chain frame"
+            );
+            prev = Some(recon);
+        }
+        // the writer-side running recon equals the replayed one
+        assert_eq!(last.unwrap().data(), prev.unwrap().data());
+    }
+
+    #[test]
+    fn chain_state_misuse_is_an_error() {
+        let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+        let codec = Sz3Codec::new(cfg.clone());
+        let f = data::generate(&cfg);
+        let frames = [f.clone()];
+        // keyframe start must not carry state
+        assert!(encode_chain(&codec, &frames, 0, 2, &ErrorBound::None, Some(&f)).is_err());
+        // mid-GOP start needs state
+        assert!(encode_chain(&codec, &frames, 1, 2, &ErrorBound::None, None).is_err());
+        assert!(encode_chain(&codec, &frames, 0, 0, &ErrorBound::None, None).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! [`TimelineIndex`] — the `TIDX` section of a v4 temporal stream: step
+//! id → keyframe flag + byte span of that step's embedded archive.
+//!
+//! Entry *i* describes step *i* (steps are dense, starting at 0). The
+//! span points at the step archive's payload bytes inside the stream
+//! file (past the 12-byte record header), so random access is one index
+//! lookup plus one `Archive::from_bytes` per chain step — and each step
+//! archive carries its own `BIDX` block index, giving the second level
+//! of granularity for `(step, region)` decodes.
+
+use crate::Result;
+use anyhow::ensure;
+
+/// One step's index entry: keyframe flag + byte span of its archive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepEntry {
+    pub keyframe: bool,
+    /// Byte offset of the step archive inside the stream file.
+    pub offset: u64,
+    /// Byte length of the step archive.
+    pub len: u64,
+}
+
+/// The v4 timeline index.
+///
+/// Serialized layout (little-endian, record `TIDX`):
+/// ```text
+///   u32 keyframe_interval | u64 n_steps | n x (u8 flag, u64 off, u64 len)
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TimelineIndex {
+    /// The writer's keyframe cadence (step `i` is a keyframe when
+    /// `i % K == 0`); informational — the per-entry flags are
+    /// authoritative.
+    pub keyframe_interval: u32,
+    pub entries: Vec<StepEntry>,
+}
+
+impl TimelineIndex {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.entries.len() * 17);
+        out.extend_from_slice(&self.keyframe_interval.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for e in &self.entries {
+            out.push(e.keyframe as u8);
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.len.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse a `TIDX` payload. Untrusted input: the declared entry count
+    /// is capped by the bytes actually present (17 B per entry) before
+    /// it sizes an allocation, and flag bytes must be 0/1.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(bytes.len() >= 12, "timeline index truncated");
+        let keyframe_interval = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        ensure!(keyframe_interval >= 1, "timeline keyframe interval is zero");
+        let n = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+        let n = usize::try_from(n)
+            .map_err(|_| anyhow::anyhow!("timeline entry count overflow"))?;
+        ensure!(
+            n <= (bytes.len() - 12) / 17,
+            "timeline declares {n} steps, impossible in {} bytes",
+            bytes.len()
+        );
+        let mut entries = Vec::with_capacity(n);
+        let mut off = 12usize;
+        for i in 0..n {
+            let flag = bytes[off];
+            ensure!(flag <= 1, "timeline step {i} has flag byte {flag}");
+            let o = u64::from_le_bytes(bytes[off + 1..off + 9].try_into().unwrap());
+            let l = u64::from_le_bytes(bytes[off + 9..off + 17].try_into().unwrap());
+            entries.push(StepEntry { keyframe: flag == 1, offset: o, len: l });
+            off += 17;
+        }
+        ensure!(off == bytes.len(), "timeline index has trailing bytes");
+        Ok(Self { keyframe_interval, entries })
+    }
+
+    /// Check every span lies inside `file_len` and the first step is a
+    /// keyframe (a residual with no base frame is undecodable).
+    pub fn validate(&self, file_len: u64) -> Result<()> {
+        if let Some(first) = self.entries.first() {
+            ensure!(first.keyframe, "timeline step 0 is not a keyframe");
+        }
+        for (i, e) in self.entries.iter().enumerate() {
+            let end = e
+                .offset
+                .checked_add(e.len)
+                .ok_or_else(|| anyhow::anyhow!("timeline step {i} extent overflow"))?;
+            ensure!(
+                end <= file_len,
+                "timeline step {i} extent {}+{} exceeds file {file_len}",
+                e.offset,
+                e.len
+            );
+        }
+        Ok(())
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The nearest keyframe at or before `step` — the base of `step`'s
+    /// residual chain.
+    pub fn keyframe_for(&self, step: usize) -> Result<usize> {
+        ensure!(step < self.entries.len(), "step {step} out of range ({} steps)", self.entries.len());
+        (0..=step)
+            .rev()
+            .find(|&s| self.entries[s].keyframe)
+            .ok_or_else(|| anyhow::anyhow!("no keyframe at or before step {step}"))
+    }
+
+    /// The steps a decode of `step` must touch: the chain
+    /// `keyframe..=step`.
+    pub fn chain(&self, step: usize) -> Result<std::ops::RangeInclusive<usize>> {
+        Ok(self.keyframe_for(step)?..=step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TimelineIndex {
+        TimelineIndex {
+            keyframe_interval: 3,
+            entries: vec![
+                StepEntry { keyframe: true, offset: 22, len: 100 },
+                StepEntry { keyframe: false, offset: 134, len: 40 },
+                StepEntry { keyframe: false, offset: 186, len: 41 },
+                StepEntry { keyframe: true, offset: 239, len: 99 },
+                StepEntry { keyframe: false, offset: 350, len: 38 },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trips_and_validates() {
+        let idx = sample();
+        let back = TimelineIndex::from_bytes(&idx.to_bytes()).unwrap();
+        assert_eq!(back, idx);
+        back.validate(388).unwrap();
+        assert!(back.validate(387).is_err(), "extent past file end");
+        assert_eq!(back.n_steps(), 5);
+    }
+
+    #[test]
+    fn keyframe_chain_resolution() {
+        let idx = sample();
+        assert_eq!(idx.keyframe_for(0).unwrap(), 0);
+        assert_eq!(idx.keyframe_for(2).unwrap(), 0);
+        assert_eq!(idx.keyframe_for(3).unwrap(), 3);
+        assert_eq!(idx.keyframe_for(4).unwrap(), 3);
+        assert_eq!(idx.chain(2).unwrap(), 0..=2);
+        assert_eq!(idx.chain(4).unwrap(), 3..=4);
+        assert!(idx.keyframe_for(5).is_err(), "out of range");
+    }
+
+    #[test]
+    fn rejects_corrupt_input() {
+        let bytes = sample().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(TimelineIndex::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // absurd entry count must not allocate
+        let mut b = bytes.clone();
+        b[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(TimelineIndex::from_bytes(&b).is_err());
+        // non-boolean flag byte
+        let mut b = bytes.clone();
+        b[12] = 7;
+        assert!(TimelineIndex::from_bytes(&b).is_err());
+        // zero keyframe interval
+        let mut b = bytes;
+        b[0..4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(TimelineIndex::from_bytes(&b).is_err());
+        // a stream whose first step is a residual has no decodable base
+        let orphan = TimelineIndex {
+            keyframe_interval: 2,
+            entries: vec![StepEntry { keyframe: false, offset: 22, len: 10 }],
+        };
+        assert!(orphan.validate(1000).is_err());
+    }
+}

@@ -1,0 +1,343 @@
+//! [`StreamWriter`] — append-only producer of v4 temporal streams.
+//!
+//! `create` writes the `TSTR` header; every `append` adds one step
+//! record (`KSTP` keyframe / `RSTP` residual, chosen by `step % K`);
+//! `finish` seals the stream with the `TIDX` timeline record and the
+//! 12-byte footer. A stream that was never finished (crash, or a
+//! producer still running) is readable too — [`super::StreamReader`]
+//! recovers the timeline by scanning complete records — and `reopen`
+//! continues appending to either kind, reconstructing the chain state
+//! from the existing steps, so simulation output can be ingested
+//! incrementally across process lifetimes.
+//!
+//! [`StreamWriter::append_frames`] is the bulk path: whole GOPs
+//! (keyframe + following residuals) are independent, so they are
+//! scheduled across the [`Executor`] worker pool while the records still
+//! land on disk in step order — output is byte-identical to sequential
+//! `append` calls at every thread count.
+
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::codec::{Codec, ErrorBound};
+use crate::compressor::format::{
+    stream_header_bytes, stream_record_bytes, STREAM_END_MAGIC, STREAM_KEY_TAG,
+    STREAM_RES_TAG, STREAM_TIDX_TAG,
+};
+use crate::config::DatasetConfig;
+use crate::engine::Executor;
+use crate::tensor::Tensor;
+use crate::util::json;
+use crate::Result;
+use anyhow::{ensure, Context};
+
+use super::residual::{encode_chain, EncodedStep};
+use super::timeline::{StepEntry, TimelineIndex};
+use super::StreamReader;
+
+/// What one `append` did (sizes in bytes).
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: usize,
+    pub keyframe: bool,
+    /// On-disk record bytes (framing + embedded archive).
+    pub record_bytes: usize,
+    /// CR-payload bytes of the step archive (paper accounting).
+    pub payload_bytes: usize,
+}
+
+/// What a sealed stream holds (returned by [`StreamWriter::finish`]).
+#[derive(Debug, Clone, Copy)]
+pub struct StreamSummary {
+    pub steps: usize,
+    pub keyframes: usize,
+    /// Total file size including header, framing, index, and footer.
+    pub file_bytes: u64,
+    /// Summed CR-payload bytes across all step archives.
+    pub payload_bytes: usize,
+}
+
+/// Append-only writer over one v4 stream file.
+pub struct StreamWriter {
+    file: std::fs::File,
+    path: PathBuf,
+    dataset: DatasetConfig,
+    bound: ErrorBound,
+    codec_id: String,
+    keyint: usize,
+    entries: Vec<StepEntry>,
+    payload_bytes: usize,
+    /// Reconstruction of the last appended step (chain state); `None`
+    /// exactly when the next step is a keyframe.
+    prev_recon: Option<Tensor>,
+    offset: u64,
+}
+
+impl StreamWriter {
+    /// Create a new stream at `path` (parent dirs are created). The
+    /// header records `codec_id`, the per-frame `dataset` geometry, the
+    /// stream-wide `bound`, and the keyframe interval `keyint` — the
+    /// stream is self-describing like every archive.
+    pub fn create(
+        path: impl AsRef<Path>,
+        codec_id: &str,
+        dataset: DatasetConfig,
+        bound: ErrorBound,
+        keyint: usize,
+    ) -> Result<Self> {
+        ensure!(keyint >= 1, "keyframe interval must be at least 1");
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let header = json::obj(vec![
+            ("codec", json::s(codec_id)),
+            ("bound", bound.to_json()),
+            ("dataset", dataset.to_json()),
+            ("keyint", json::num(keyint as f64)),
+        ]);
+        let bytes = stream_header_bytes(&header);
+        let mut file = std::fs::File::create(&path)
+            .with_context(|| format!("creating stream {}", path.display()))?;
+        file.write_all(&bytes)?;
+        Ok(Self {
+            file,
+            path,
+            dataset,
+            bound,
+            codec_id: codec_id.to_string(),
+            keyint,
+            entries: Vec::new(),
+            payload_bytes: 0,
+            prev_recon: None,
+            offset: bytes.len() as u64,
+        })
+    }
+
+    /// Reopen an existing stream for further appends. Works on both
+    /// sealed streams (the index/footer are truncated away and rewritten
+    /// by the next `finish`) and unsealed ones (the timeline is
+    /// recovered by scanning). `codec` must match the stream's recorded
+    /// codec; it is used to reconstruct the chain state when the next
+    /// step continues a GOP.
+    pub fn reopen(path: impl AsRef<Path>, codec: &dyn Codec) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let reader = StreamReader::open(&path)?;
+        Self::reopen_from(path, reader, codec)
+    }
+
+    /// [`Self::reopen`] when the caller has already opened a
+    /// [`StreamReader`] on `path` (avoids reading and parsing the file a
+    /// second time — the CLI `stream append` path, which first consults
+    /// the header for the codec).
+    pub fn reopen_from(
+        path: impl AsRef<Path>,
+        reader: StreamReader,
+        codec: &dyn Codec,
+    ) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        ensure!(
+            codec.id() == reader.codec_id(),
+            "stream {} was written with codec {:?}, reopened with {:?}",
+            path.display(),
+            reader.codec_id(),
+            codec.id()
+        );
+        let n = reader.n_steps();
+        let keyint = reader.keyframe_interval();
+        // chain state: only needed when step n continues the last GOP
+        let prev_recon = if n > 0 && n % keyint != 0 {
+            Some(reader.frame(codec, n - 1)?)
+        } else {
+            None
+        };
+        let entries = reader.timeline().entries.clone();
+        let payload_bytes = (0..n)
+            .map(|s| Ok(reader.step_archive(s)?.cr_payload_bytes()))
+            .sum::<Result<usize>>()?;
+        // truncate to the end of the last complete step record — drops
+        // any index/footer (rewritten on finish) and any torn record
+        let end = entries
+            .last()
+            .map(|e| e.offset + e.len)
+            .unwrap_or_else(|| reader.records_start() as u64);
+        let dataset = reader.dataset().clone();
+        let bound = reader.bound();
+        let codec_id = reader.codec_id().to_string();
+        drop(reader);
+        let mut file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("reopening stream {}", path.display()))?;
+        file.set_len(end)?;
+        file.seek(SeekFrom::End(0))?;
+        Ok(Self {
+            file,
+            path,
+            dataset,
+            bound,
+            codec_id,
+            keyint,
+            entries,
+            payload_bytes,
+            prev_recon,
+            offset: end,
+        })
+    }
+
+    /// The absolute step id the next `append` will write.
+    pub fn next_step(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn keyframe_interval(&self) -> usize {
+        self.keyint
+    }
+
+    pub fn dataset(&self) -> &DatasetConfig {
+        &self.dataset
+    }
+
+    pub fn bound(&self) -> ErrorBound {
+        self.bound
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn check_codec_and_frame(&self, codec: &dyn Codec, frame: &Tensor) -> Result<()> {
+        ensure!(
+            codec.id() == self.codec_id,
+            "stream records codec {:?}, append called with {:?}",
+            self.codec_id,
+            codec.id()
+        );
+        ensure!(
+            frame.shape() == &self.dataset.dims[..],
+            "frame shape {:?} != stream frame dims {:?}",
+            frame.shape(),
+            self.dataset.dims
+        );
+        Ok(())
+    }
+
+    fn write_encoded(&mut self, steps: Vec<EncodedStep>) -> Result<Vec<StepStats>> {
+        let mut out = Vec::with_capacity(steps.len());
+        for s in steps {
+            let tag = if s.keyframe { STREAM_KEY_TAG } else { STREAM_RES_TAG };
+            let record = stream_record_bytes(tag, &s.bytes);
+            self.file.write_all(&record)?;
+            self.entries.push(StepEntry {
+                keyframe: s.keyframe,
+                offset: self.offset + 12,
+                len: s.bytes.len() as u64,
+            });
+            out.push(StepStats {
+                step: self.entries.len() - 1,
+                keyframe: s.keyframe,
+                record_bytes: record.len(),
+                payload_bytes: s.payload_bytes,
+            });
+            self.payload_bytes += s.payload_bytes;
+            self.offset += record.len() as u64;
+        }
+        Ok(out)
+    }
+
+    /// Append one timestep. Every `keyint`-th step (by absolute id) is a
+    /// keyframe; the rest code temporal residuals against the running
+    /// reconstruction, so the stream bound holds on every absolute frame.
+    pub fn append(&mut self, codec: &dyn Codec, frame: &Tensor) -> Result<StepStats> {
+        self.check_codec_and_frame(codec, frame)?;
+        let step = self.next_step();
+        let prev = if step % self.keyint == 0 { None } else { self.prev_recon.as_ref() };
+        let (steps, last) = encode_chain(
+            codec,
+            std::slice::from_ref(frame),
+            step,
+            self.keyint,
+            &self.bound,
+            prev,
+        )?;
+        self.prev_recon = last;
+        Ok(self.write_encoded(steps)?.remove(0))
+    }
+
+    /// Bulk append with GOP-level parallelism: complete GOPs are
+    /// independent chains, so they compress concurrently on the shared
+    /// [`Executor`] pool (each step's blocks additionally fan out inside
+    /// its GOP job). Records land in step order — the file is
+    /// byte-identical to sequential `append`s at every thread count.
+    pub fn append_frames<C: Codec + Sync>(
+        &mut self,
+        codec: &C,
+        frames: &[Tensor],
+    ) -> Result<Vec<StepStats>> {
+        for f in frames {
+            self.check_codec_and_frame(codec, f)?;
+        }
+        let start = self.next_step();
+        // finish the in-progress GOP sequentially (it needs prev_recon)
+        let head_len = (self.keyint - start % self.keyint) % self.keyint;
+        let head_len = head_len.min(frames.len());
+        let mut stats = Vec::with_capacity(frames.len());
+        if head_len > 0 {
+            let (steps, last) = encode_chain(
+                codec,
+                &frames[..head_len],
+                start,
+                self.keyint,
+                &self.bound,
+                self.prev_recon.as_ref(),
+            )?;
+            self.prev_recon = last;
+            stats.extend(self.write_encoded(steps)?);
+        }
+        let rest = &frames[head_len..];
+        if rest.is_empty() {
+            return Ok(stats);
+        }
+        // whole GOPs from here: fan them out across the pool
+        let gops: Vec<&[Tensor]> = rest.chunks(self.keyint).collect();
+        let gop_start = start + head_len;
+        let keyint = self.keyint;
+        let bound = self.bound;
+        let encoded = Executor::global().try_par_map(gops.len(), |g| {
+            encode_chain(codec, gops[g], gop_start + g * keyint, keyint, &bound, None)
+        })?;
+        for (steps, last) in encoded {
+            self.prev_recon = last;
+            stats.extend(self.write_encoded(steps)?);
+        }
+        Ok(stats)
+    }
+
+    /// Seal the stream: write the `TIDX` timeline record and the footer
+    /// locating it. The file stays valid for `reopen` afterwards.
+    pub fn finish(mut self) -> Result<StreamSummary> {
+        let index = TimelineIndex {
+            keyframe_interval: self.keyint as u32,
+            entries: self.entries.clone(),
+        };
+        let tidx_offset = self.offset;
+        let record = stream_record_bytes(STREAM_TIDX_TAG, &index.to_bytes());
+        self.file.write_all(&record)?;
+        let mut footer = Vec::with_capacity(12);
+        footer.extend_from_slice(&tidx_offset.to_le_bytes());
+        footer.extend_from_slice(STREAM_END_MAGIC);
+        self.file.write_all(&footer)?;
+        self.file.flush()?;
+        let file_bytes = self.offset + record.len() as u64 + 12;
+        Ok(StreamSummary {
+            steps: self.entries.len(),
+            keyframes: self.entries.iter().filter(|e| e.keyframe).count(),
+            file_bytes,
+            payload_bytes: self.payload_bytes,
+        })
+    }
+
+}

@@ -172,6 +172,30 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Median wall-clock seconds of `iters` runs of `f` (after one warmup
+/// run). The shared timing helper of the `harness = false` bench
+/// binaries (`fieldset_throughput`, `region_decode`,
+/// `stream_throughput`) — true median for even sample counts (with 2
+/// samples, picking `times[1]` would report the worst case, not the
+/// middle).
+pub fn median_secs(mut f: impl FnMut(), iters: usize) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    if n % 2 == 1 {
+        times[n / 2]
+    } else {
+        (times[n / 2 - 1] + times[n / 2]) / 2.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -223,18 +223,132 @@ fn extract_cli_decodes_a_region_matching_the_full_decode() {
         assert_eq!(a.to_bits(), b.to_bits());
     }
 
-    // bad regions are usage errors, not panics
-    let out = bin()
-        .args(["extract", "--region", "9:1,0:4,0:4", "--in"])
-        .arg(&archive_p)
-        .output()
-        .unwrap();
-    assert_eq!(out.status.code(), Some(1));
-    assert!(String::from_utf8_lossy(&out.stderr).contains("region"));
-
     let out = bin().args(["extract", "--in"]).arg(&archive_p).output().unwrap();
     assert_eq!(out.status.code(), Some(1));
     assert!(String::from_utf8_lossy(&out.stderr).contains("--region"));
+}
+
+#[test]
+fn malformed_region_is_a_usage_error_with_exit_2() {
+    // reversed range (i1 < i0): exit 2 with a one-line pinned message —
+    // and the check runs before --in is touched, so no archive is needed
+    let out = bin()
+        .args(["extract", "--region", "9:1,0:4,0:4", "--in", "does-not-matter.ardc"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "reversed range is a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(stderr.lines().count(), 1, "one-line error, got: {stderr}");
+    assert!(
+        stderr.contains("error: bad --region \"9:1,0:4,0:4\": region dim 0 is empty (9:1)"),
+        "pinned message drifted: {stderr}"
+    );
+
+    // missing ':' separator
+    let out = bin()
+        .args(["extract", "--region", "0-4,0:4", "--in", "x.ardc"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "missing colon is a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(stderr.lines().count(), 1, "one-line error, got: {stderr}");
+    assert!(
+        stderr.contains("bad region component \"0-4\" (expected lo:hi)"),
+        "pinned message drifted: {stderr}"
+    );
+
+    // empty range and garbage bounds take the same path
+    for bad in ["2:2", "a:b,0:4"] {
+        let out = bin()
+            .args(["extract", "--region", bad, "--in", "x.ardc"])
+            .output()
+            .unwrap();
+        assert_eq!(out.status.code(), Some(2), "{bad:?} should exit 2");
+    }
+}
+
+#[test]
+fn stream_cli_appends_incrementally_and_extracts_regions() {
+    let stream_p = tmp("cli_stream.tstr");
+    std::fs::remove_file(&stream_p).ok(); // stale runs would reopen it
+    let frame_p = tmp("cli_stream_frame.f32");
+    let region_p = tmp("cli_stream_region.f32");
+
+    // create: 5 synthesized smoothly-evolving steps, keyint 3
+    let out = bin()
+        .args([
+            "stream", "append", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset",
+            "e3sm", "--scale", "smoke", "--keyint", "3", "--steps", "5", "--out",
+        ])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("appended steps 0..4"), "{stdout}");
+
+    // append again: codec/bound/keyint come from the stream header now
+    let out = bin()
+        .args(["stream", "append", "--steps", "2", "--out"])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("appended steps 5..6"), "{stdout}");
+    assert!(stdout.contains("7 steps"), "{stdout}");
+
+    // info: timeline with keyframes at 0, 3, 6
+    let out = bin().args(["stream", "info", "--in"]).arg(&stream_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("steps = 7 (3 keyframes)"), "{stdout}");
+    assert!(stdout.contains("codec = sz3"), "{stdout}");
+
+    // extract a full frame, then a region of the same step: the region
+    // must be the bit-exact crop of the frame (e3sm smoke frame is 32x32)
+    let out = bin()
+        .args(["stream", "extract", "--step", "4", "--in"])
+        .arg(&stream_p)
+        .arg("--out")
+        .arg(&frame_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args(["stream", "extract", "--step", "4", "--region", "8:24,16:32", "--in"])
+        .arg(&stream_p)
+        .arg("--out")
+        .arg(&region_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("chain: 2 steps"), "{stdout}");
+
+    let full = read_f32(&frame_p);
+    let part = read_f32(&region_p);
+    assert_eq!(full.len(), 32 * 32);
+    assert_eq!(part.len(), 16 * 16);
+    for i in 0..16 {
+        for j in 0..16 {
+            let want = full[(i + 8) * 32 + (j + 16)];
+            assert_eq!(part[i * 16 + j].to_bits(), want.to_bits(), "({i},{j})");
+        }
+    }
+
+    // malformed region in stream extract is the same exit-2 usage error
+    let out = bin()
+        .args(["stream", "extract", "--step", "1", "--region", "5:2", "--in"])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2));
+
+    // unknown stream subcommand exits 2
+    let out = bin().args(["stream", "frobnicate"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("stream subcommand"));
 }
 
 #[test]

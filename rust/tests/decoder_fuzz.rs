@@ -207,6 +207,108 @@ fn v3_index_corruption_never_panics_and_oob_extents_error() {
     }
 }
 
+/// A small sealed v4 stream (4 steps, keyint 2) as raw bytes, plus the
+/// offset of its `TIDX` record. `name` must be unique per caller: the
+/// fuzz tests run on parallel threads and a shared path would race
+/// (File::create truncates under a concurrent fs::read).
+fn v4_stream_bytes(name: &str) -> (Vec<u8>, usize) {
+    use attn_reduce::config::{stream_frame_preset, Scale};
+    use attn_reduce::stream::StreamWriter;
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = attn_reduce::data::timeseries::generate_frames(&cfg.dims, cfg.seed, 0, 4);
+    let dir = std::env::temp_dir().join("attn_reduce_fuzz_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg, ErrorBound::Nrmse(1e-3), 2).unwrap();
+    w.append_frames(&codec, &frames).unwrap();
+    w.finish().unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    // the footer's u64 locates the TIDX record
+    let foot = &bytes[bytes.len() - 12..];
+    assert_eq!(&foot[8..12], b"TEND");
+    let tidx_off = u64::from_le_bytes(foot[0..8].try_into().unwrap()) as usize;
+    assert_eq!(&bytes[tidx_off..tidx_off + 4], b"TIDX");
+    (bytes, tidx_off)
+}
+
+#[test]
+fn v4_timeline_corruption_never_panics() {
+    use attn_reduce::stream::StreamReader;
+    let (bytes, tidx_off) = v4_stream_bytes("timeline.tstr");
+    let mut rng = Rng::new(59);
+    let mut builder = CodecBuilder::new();
+    // dense flip sweep over the TIDX record and the footer: the reader
+    // must never panic — it either errors, falls back to the recovery
+    // scan, or reads a stream whose frames still decode to frame shape
+    for pos in tidx_off..bytes.len() {
+        for _ in 0..2 {
+            let mut m = bytes.clone();
+            m[pos] ^= 1 << rng.below(8);
+            let Ok(reader) = StreamReader::from_bytes(m) else {
+                continue;
+            };
+            let Ok(codec) = reader.build_codec(&mut builder) else {
+                continue;
+            };
+            for step in 0..reader.n_steps() {
+                if let Ok(t) = reader.frame(&*codec, step) {
+                    assert_eq!(t.shape(), reader.dataset().dims.as_slice());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn v4_truncations_and_residual_payload_cuts_never_panic() {
+    use attn_reduce::stream::StreamReader;
+    let (bytes, _) = v4_stream_bytes("truncation.tstr");
+    let full = StreamReader::from_bytes(bytes.clone()).unwrap();
+    assert_eq!(full.n_steps(), 4);
+    let mut builder = CodecBuilder::new();
+    // every truncation: clean error or a recovered stream with fewer
+    // steps, whose surviving frames all still decode
+    for cut in cuts(bytes.len()) {
+        let Ok(reader) = StreamReader::from_bytes(bytes[..cut].to_vec()) else {
+            continue;
+        };
+        assert!(reader.n_steps() <= 4);
+        let Ok(codec) = reader.build_codec(&mut builder) else {
+            continue;
+        };
+        for step in 0..reader.n_steps() {
+            let t = reader
+                .frame(&*codec, step)
+                .unwrap_or_else(|e| panic!("recovered step {step} at cut {cut}: {e:#}"));
+            assert_eq!(t.shape(), reader.dataset().dims.as_slice());
+        }
+    }
+    // bit flips inside a residual step's archive payload: parsing and
+    // chain decodes must never panic (values may legally differ)
+    let entry = full.timeline().entries[1];
+    assert!(!entry.keyframe, "step 1 of a keyint-2 stream is a residual");
+    let (off, len) = (entry.offset as usize, entry.len as usize);
+    let mut rng = Rng::new(61);
+    for _ in 0..300 {
+        let mut m = bytes.clone();
+        let pos = off + rng.below(len);
+        m[pos] ^= 1 << rng.below(8);
+        let Ok(reader) = StreamReader::from_bytes(m) else {
+            continue;
+        };
+        let Ok(codec) = reader.build_codec(&mut builder) else {
+            continue;
+        };
+        let region = Region::parse("0:16,8:32").unwrap();
+        for step in 0..reader.n_steps() {
+            let _ = reader.frame(&*codec, step);
+            let _ = reader.extract(&*codec, step, &region);
+        }
+    }
+}
+
 #[test]
 fn v3_payload_bitflips_never_panic() {
     let (bytes, _, _) = v3_archive_bytes();

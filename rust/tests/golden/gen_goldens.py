@@ -4,9 +4,13 @@
 The archives are handcrafted minimal-but-valid instances of the ARDC
 container formats:
 
-  v1_sz3.ardc  -- version-1 single-field archive, whole-stream SZ3B payload
-  v2_sz3.ardc  -- version-2 multi-field container embedding two v1 archives
-  v3_sz3.ardc  -- version-3 block-indexed archive (per-tile SZ3B + BIDX)
+  v1_sz3.ardc   -- version-1 single-field archive, whole-stream SZ3B payload
+  v2_sz3.ardc   -- version-2 multi-field container embedding two v1 archives
+  v3_sz3.ardc   -- version-3 block-indexed archive (per-tile SZ3B + BIDX)
+  v4_stream.ardc -- version-4 temporal stream (TSTR framing): 4 steps at
+                    keyframe interval 2, each step an embedded v3 archive
+                    (keyframes absolute, residuals against the previous
+                    reconstruction), sealed with a TIDX record + footer
 
 Each SZ3 stream stores row 0 of its lattice as raw ("unpredictable")
 values and codes every later row as Lorenzo code 0, which makes the
@@ -219,3 +223,93 @@ v3 = archive(
 )
 write("v3_sz3.ardc", v3)
 write("v3_sz3.expected.f32", f32s((ROW0_T0 + ROW0_T1) * DIMS[0]))
+
+# ---- v4: temporal stream (TSTR framing), 4 steps, keyint 2 ---------------
+# Steps 0/2 are keyframes, 1/3 residuals. Every step is a v3 block-indexed
+# archive over the same [6, 8] field with [6, 4] tiles. All values are
+# small dyadics, so the chain additions (frame = prev + residual) are
+# exact in f32 and the expected frames are known in closed form.
+
+
+def stream_record(tag: str, payload: bytes) -> bytes:
+    return tag.encode() + struct.pack("<Q", len(payload)) + payload
+
+
+def v3_step(row0_t0, row0_t1, extra: dict) -> bytes:
+    t0 = sz3_stream(EPS, TILE, row0_t0)
+    t1 = sz3_stream(EPS, TILE, row0_t1)
+    hdr = {
+        "codec": "sz3",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, TILE),
+        "eps": EPS,
+    }
+    hdr.update(extra)
+    return archive(
+        3,
+        hdr,
+        [
+            ("SZ3B", t0 + t1),
+            ("BIDX", block_index(TILE, [(0, len(t0)), (len(t0), len(t1))])),
+        ],
+    )
+
+
+K0_T0 = [1.5, 2.5, -3.5, 0.25]
+K0_T1 = [4.0, -0.125, 0.5, 8.0]
+R1_T0 = [0.25, -0.5, 0.75, 0.125]
+R1_T1 = [-1.0, 0.25, 0.5, -0.25]
+K2_T0 = [2.0, 1.0, -1.5, 0.5]
+K2_T1 = [0.0, 3.25, -2.0, 1.0]
+R3_T0 = [-0.25, 0.5, 0.25, -0.125]
+R3_T1 = [0.75, -0.5, 1.25, 0.0]
+
+RES_BOUND = {"kind": "abs", "value": 0.01}  # the translated residual bound
+STEPS = [
+    (True, v3_step(K0_T0, K0_T1, {})),
+    (False, v3_step(R1_T0, R1_T1, {"bound": RES_BOUND, "temporal": "residual"})),
+    (True, v3_step(K2_T0, K2_T1, {})),
+    (False, v3_step(R3_T0, R3_T1, {"bound": RES_BOUND, "temporal": "residual"})),
+]
+
+stream_hdr = json.dumps(
+    {
+        "codec": "sz3",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, TILE),
+        "keyint": 2,
+    },
+    separators=(",", ":"),
+).encode()
+v4 = bytearray(b"TSTR")
+v4 += struct.pack("<H", 4)
+v4 += struct.pack("<I", len(stream_hdr))
+v4 += stream_hdr
+entries = []
+for keyframe, ar in STEPS:
+    entries.append((keyframe, len(v4) + 12, len(ar)))
+    v4 += stream_record("KSTP" if keyframe else "RSTP", ar)
+tidx_off = len(v4)
+tidx = struct.pack("<I", 2) + struct.pack("<Q", len(entries))
+for keyframe, off, ln in entries:
+    tidx += struct.pack("<B", 1 if keyframe else 0)
+    tidx += struct.pack("<Q", off) + struct.pack("<Q", ln)
+v4 += stream_record("TIDX", tidx)
+v4 += struct.pack("<Q", tidx_off) + b"TEND"
+write("v4_stream.ardc", bytes(v4))
+
+
+def frame_rows(t0, t1):
+    return (t0 + t1) * DIMS[0]
+
+
+def add(a, b):
+    return [x + y for x, y in zip(a, b)]
+
+
+F0 = frame_rows(K0_T0, K0_T1)
+F1 = add(F0, frame_rows(R1_T0, R1_T1))
+F2 = frame_rows(K2_T0, K2_T1)
+F3 = add(F2, frame_rows(R3_T0, R3_T1))
+for i, frame in enumerate([F0, F1, F2, F3]):
+    write(f"v4_stream.step{i}.expected.f32", f32s(frame))

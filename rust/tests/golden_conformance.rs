@@ -114,6 +114,51 @@ fn v3_golden_decodes_unchanged_and_region_touches_less() {
 }
 
 #[test]
+fn v4_stream_golden_decodes_unchanged_across_chains() {
+    use attn_reduce::stream::StreamReader;
+    let reader = StreamReader::open(golden_path("v4_stream.ardc")).expect("open v4 golden");
+    assert!(reader.is_finished(), "golden stream is sealed");
+    assert_eq!(reader.n_steps(), 4);
+    assert_eq!(reader.keyframe_interval(), 2);
+    assert_eq!(reader.codec_id(), "sz3");
+    let flags: Vec<bool> = reader.timeline().entries.iter().map(|e| e.keyframe).collect();
+    assert_eq!(flags, vec![true, false, true, false]);
+    let codec = reader
+        .build_codec(&mut CodecBuilder::new())
+        .expect("rebuild codec from golden stream");
+    // every absolute frame — keyframes and residual-chain sums — decodes
+    // to its pinned output bit-for-bit
+    for step in 0..4 {
+        let frame = reader.frame(&*codec, step).expect("decode golden step");
+        assert_eq!(frame.shape(), &[6, 8]);
+        assert_bits_equal(
+            &frame,
+            &expected_f32(&format!("v4_stream.step{step}.expected.f32")),
+            &format!("v4 step {step}"),
+        );
+    }
+    // region covering only the second tile: bit-identical to the crop,
+    // touching only that tile's bytes in each chain archive
+    let region = Region::parse("0:6,4:8").unwrap();
+    let part = reader.extract(&*codec, 3, &region).expect("v4 region");
+    let full = reader.frame(&*codec, 3).unwrap();
+    assert_bits_equal(&part, region.crop(&full).unwrap().data(), "v4 region");
+    let cost = reader.region_cost(3, &region).unwrap();
+    assert_eq!(cost.steps, 2, "chain of step 3 is keyframe 2 + residual 3");
+    assert_eq!(cost.blocks_touched, 2, "one tile per chain archive");
+    assert_eq!(cost.blocks_total, 4);
+    assert!(cost.bytes_touched < cost.bytes_total);
+    // playback agrees with random access
+    for (step, f) in reader.frames(&*codec).enumerate() {
+        assert_bits_equal(
+            &f.unwrap(),
+            &expected_f32(&format!("v4_stream.step{step}.expected.f32")),
+            &format!("v4 playback step {step}"),
+        );
+    }
+}
+
+#[test]
 fn goldens_are_reparse_fixed_points() {
     // serializing a parsed golden reproduces its bytes exactly — the
     // container writer has not drifted either

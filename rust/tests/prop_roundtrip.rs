@@ -207,6 +207,111 @@ fn fieldset_random_field_counts_roundtrip_and_region() {
     }
 }
 
+// --- temporal streams: keyframe/residual coding over random geometry ---
+
+/// With K = 1 every step is a keyframe, and a stream must degenerate to
+/// independent per-step archives *exactly*: step archives byte-identical
+/// to `Codec::compress` of the same frame, and stream reads bit-identical
+/// to independent decompression.
+#[test]
+fn stream_k1_is_bit_identical_to_independent_compression() {
+    use attn_reduce::stream::{StreamReader, StreamWriter};
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed ^ 0x57AE);
+    let dir = std::env::temp_dir().join("attn_reduce_prop_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..4 {
+        let cfg = cg.dataset();
+        let codec = attn_reduce::codec::Sz3Codec::new(cfg.clone());
+        let frames: Vec<Tensor> = (0..3).map(|_| cg.field(&cfg.dims)).collect();
+        let bound = bounds_for(&frames[0], cfg.gae_block_len())[case % 4];
+        let path = dir.join(format!("k1_{seed}_{case}.tstr"));
+        let mut w = StreamWriter::create(&path, codec.id(), cfg.clone(), bound, 1)
+            .unwrap_or_else(|e| panic!("[stream-k1, seed {seed}, case {case}] create: {e:#}"));
+        for f in &frames {
+            w.append(&codec, f)
+                .unwrap_or_else(|e| panic!("[stream-k1, seed {seed}, case {case}] append: {e:#}"));
+        }
+        w.finish().unwrap();
+        let reader = StreamReader::open(&path).unwrap();
+        assert_eq!(reader.n_steps(), 3);
+        for (t, frame) in frames.iter().enumerate() {
+            let independent = codec.compress(frame, &bound).unwrap();
+            let step = reader.step_archive(t).unwrap();
+            assert_eq!(
+                step.to_bytes(),
+                independent.to_bytes(),
+                "[stream-k1, seed {seed}, case {case}] step {t} archive differs \
+                 from independent compression (dims {:?})",
+                cfg.dims
+            );
+            let via_stream = reader.frame(&codec, t).unwrap();
+            let via_codec = codec.decompress(&independent).unwrap();
+            let identical = via_stream
+                .data()
+                .iter()
+                .zip(via_codec.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(
+                identical,
+                "[stream-k1, seed {seed}, case {case}] step {t} decode differs"
+            );
+        }
+    }
+}
+
+/// Residual chains must satisfy all four `ErrorBound` variants on every
+/// *absolute* reconstructed frame, and `(step, region)` extraction must
+/// equal the cropped full decode bit-for-bit on random regions.
+#[test]
+fn stream_residual_chains_respect_all_bounds_and_regions() {
+    use attn_reduce::data::timeseries;
+    use attn_reduce::stream::{StreamReader, StreamWriter};
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed ^ 0xD1FF);
+    let dir = std::env::temp_dir().join("attn_reduce_prop_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..4 {
+        let cfg = cg.dataset();
+        let codec = attn_reduce::codec::Sz3Codec::new(cfg.clone());
+        // smoothly-evolving frames so residuals carry real structure
+        let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, 5);
+        let bound = bounds_for(&frames[0], cfg.gae_block_len())[case % 4];
+        let path = dir.join(format!("chain_{seed}_{case}.tstr"));
+        let mut w = StreamWriter::create(&path, codec.id(), cfg.clone(), bound, 3)
+            .unwrap_or_else(|e| panic!("[stream-chain, seed {seed}, case {case}] create: {e:#}"));
+        w.append_frames(&codec, &frames)
+            .unwrap_or_else(|e| panic!("[stream-chain, seed {seed}, case {case}] append: {e:#}"));
+        w.finish().unwrap();
+        let reader = StreamReader::open(&path).unwrap();
+        for (t, orig) in frames.iter().enumerate() {
+            let recon = reader.frame(&codec, t).unwrap();
+            assert!(
+                relaxed(&bound).satisfied_by(orig, &recon, &cfg),
+                "[stream-chain, seed {seed}, case {case}] bound {bound} violated \
+                 at step {t} (dims {:?}, ae_block {:?})",
+                cfg.dims,
+                cfg.ae_block
+            );
+            let region = cg.region(&cfg.dims);
+            let part = reader.extract(&codec, t, &region).unwrap();
+            let crop = region.crop(&recon).unwrap();
+            let identical = part
+                .data()
+                .iter()
+                .zip(crop.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(
+                identical,
+                "[stream-chain, seed {seed}, case {case}] step {t} region \
+                 {:?}:{:?} != cropped decode",
+                region.lo,
+                region.hi
+            );
+        }
+    }
+}
+
 // --- learned codecs: preset geometry, gated on the PJRT artifacts ------
 
 fn runtime() -> Option<Rc<Runtime>> {

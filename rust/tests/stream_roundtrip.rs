@@ -1,0 +1,171 @@
+//! Temporal stream integration tests: the acceptance contract of the v4
+//! subsystem.
+//!
+//! * Streaming CR on a smoothly-evolving 64-step field beats
+//!   independent-per-step v3 archives by ≥ 1.5× at the same bound (the
+//!   `stream_throughput` bench reports the same quantity).
+//! * `(step, region)` extraction decodes only the keyframe + residual
+//!   blocks intersecting the region — byte accounting asserted against
+//!   each chain archive's `BIDX`.
+//! * Every reconstructed frame of a residual chain satisfies the typed
+//!   `ErrorBound`, for both pure-rust codecs.
+//! * Streams are self-describing: the reader rebuilds the codec from
+//!   the first step archive's header alone.
+
+use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound, Sz3Codec, ZfpCodec};
+use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
+use attn_reduce::data::{region_tile_ids, timeseries, Region};
+use attn_reduce::stream::{StreamReader, StreamWriter};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("attn_reduce_stream_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// The acceptance benchmark, pinned as a test: 64 smoothly-evolving
+/// steps, keyframe interval 8, same NRMSE bound both ways.
+#[test]
+fn streaming_cr_beats_independent_per_step_archives() {
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = Sz3Codec::new(cfg.clone());
+    let bound = ErrorBound::Nrmse(1e-3);
+    let steps = 64usize;
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, steps);
+
+    let independent_payload: usize = frames
+        .iter()
+        .map(|f| codec.compress(f, &bound).unwrap().cr_payload_bytes())
+        .sum();
+
+    let path = tmp("cr64.tstr");
+    let mut w = StreamWriter::create(&path, codec.id(), cfg.clone(), bound, 8).unwrap();
+    w.append_frames(&codec, &frames).unwrap();
+    w.finish().unwrap();
+    let reader = StreamReader::open(&path).unwrap();
+    let stats = reader.stats().unwrap();
+    assert_eq!(stats.steps, steps);
+    assert_eq!(stats.keyframes, 8);
+
+    let ratio = independent_payload as f64 / stats.payload_bytes as f64;
+    assert!(
+        ratio >= 1.5,
+        "stream payload {} vs independent {} — only {ratio:.2}x better",
+        stats.payload_bytes,
+        independent_payload
+    );
+
+    // and the bound still holds on every absolute frame of every chain
+    for (t, orig) in frames.iter().enumerate() {
+        let recon = reader.frame(&codec, t).unwrap();
+        assert!(
+            ErrorBound::Nrmse(1e-3 * 1.0001).satisfied_by(orig, &recon, &cfg),
+            "step {t} violates the stream bound"
+        );
+    }
+}
+
+#[test]
+fn region_extraction_touches_only_intersecting_chain_blocks() {
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke); // [32, 32], 16x16 tiles
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, 10);
+    let path = tmp("region.tstr");
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg.clone(), ErrorBound::Nrmse(1e-3), 4).unwrap();
+    w.append_frames(&codec, &frames).unwrap();
+    w.finish().unwrap();
+
+    let reader = StreamReader::open(&path).unwrap();
+    // self-describing: rebuild the codec from the stream itself
+    let codec = reader.build_codec(&mut CodecBuilder::new()).unwrap();
+    // one tile of the 2x2 tiling
+    let region = Region::parse("16:32,0:16").unwrap();
+    let step = 6; // chain 4..=6
+    let cost = reader.region_cost(step, &region).unwrap();
+    assert_eq!(cost.steps, 3);
+    assert_eq!(cost.blocks_total, 3 * 4);
+    assert_eq!(cost.blocks_touched, 3 * 1, "one tile per chain archive");
+
+    // byte accounting: exactly the BIDX entries of the intersecting tile
+    // in each chain archive, nothing else
+    let mut want = 0usize;
+    for s in 4..=step {
+        let idx = reader.step_archive(s).unwrap().block_index().unwrap().unwrap();
+        let ids = region_tile_ids(&cfg.dims, &idx.tile, &region);
+        assert_eq!(ids.len(), 1);
+        want += idx.bytes_for(&ids);
+    }
+    assert_eq!(cost.bytes_touched, want);
+    assert!(
+        cost.bytes_touched * 2 < cost.bytes_total,
+        "a 1-of-4-tiles region should touch well under half the chain payload \
+         ({} of {})",
+        cost.bytes_touched,
+        cost.bytes_total
+    );
+
+    // and the decoded region is bit-identical to cropping the full frame
+    let part = reader.extract(&*codec, step, &region).unwrap();
+    let full = reader.frame(&*codec, step).unwrap();
+    let crop = region.crop(&full).unwrap();
+    assert_eq!(part.shape(), crop.shape());
+    for (a, b) in part.data().iter().zip(crop.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn zfp_streams_respect_the_bound_across_chains() {
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = ZfpCodec::new(cfg.clone());
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed + 1, 0, 6);
+    let range = frames[0].range() as f64;
+    let bound = ErrorBound::PointwiseAbs(1e-3 * range);
+    let path = tmp("zfp.tstr");
+    let mut w = StreamWriter::create(&path, codec.id(), cfg.clone(), bound, 3).unwrap();
+    for f in &frames {
+        w.append(&codec, f).unwrap();
+    }
+    w.finish().unwrap();
+    let reader = StreamReader::open(&path).unwrap();
+    assert_eq!(reader.codec_id(), "zfp");
+    for (t, orig) in frames.iter().enumerate() {
+        let recon = reader.frame(&codec, t).unwrap();
+        let slack = ErrorBound::PointwiseAbs(1e-3 * range * 1.0001);
+        assert!(slack.satisfied_by(orig, &recon, &cfg), "zfp step {t}");
+    }
+    // residual steps carry the translated bound in their own headers
+    assert_eq!(reader.step_bound(0).unwrap(), bound, "keyframe keeps the stream bound");
+    assert_eq!(
+        reader.step_bound(1).unwrap(),
+        bound.for_residual(frames[1].range() as f64),
+        "residual records its translated bound"
+    );
+}
+
+#[test]
+fn stream_iterator_matches_random_access_across_gops() {
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed + 2, 0, 9);
+    let path = tmp("iter.tstr");
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg.clone(), ErrorBound::Nrmse(1e-3), 4).unwrap();
+    w.append_frames(&codec, &frames).unwrap();
+    w.finish().unwrap();
+    let reader = StreamReader::open(&path).unwrap();
+    let played: Vec<_> = reader.frames(&codec).map(|f| f.unwrap()).collect();
+    assert_eq!(played.len(), 9);
+    for (t, via_iter) in played.iter().enumerate() {
+        let via_chain = reader.frame(&codec, t).unwrap();
+        assert_eq!(via_iter.data(), via_chain.data(), "step {t}");
+    }
+    // out-of-range access is a typed error, not a panic
+    assert!(reader.frame(&codec, 9).is_err());
+    assert!(reader.extract(&codec, 9, &Region::parse("0:8,0:8").unwrap()).is_err());
+    // a region outside the frame is rejected before any decode
+    assert!(reader
+        .extract(&codec, 0, &Region::parse("0:64,0:64").unwrap())
+        .is_err());
+}
