@@ -1,0 +1,203 @@
+//! Entropy-coder hot-path throughput: Huffman encode/decode MB/s (LUT
+//! decoder vs the bit-at-a-time oracle), symbol-container sizes on a
+//! zero-peaked residual-shaped stream, and residual GOP payload bytes /
+//! CR at equal bound with the zero-run modes on vs forced off (the PR-4
+//! plain framing). Emits `BENCH_coder.json` so this and future perf PRs
+//! have a pinned trajectory.
+//!
+//! Run: `cargo bench --bench coder_throughput`
+//! (`--smoke` or `BENCH_FAST=1` shrinks the workload for CI.)
+
+use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
+use attn_reduce::coder::{
+    compress_symbols_mode, decompress_symbols, huffman_decode, huffman_decode_bitwise,
+    huffman_encode, with_symbol_mode, SymbolMode,
+};
+use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
+use attn_reduce::data::timeseries;
+use attn_reduce::stream::StreamWriter;
+use attn_reduce::tensor::Tensor;
+use attn_reduce::util::bench::median_secs;
+use attn_reduce::util::json;
+use attn_reduce::util::parallel::{num_threads, with_thread_limit};
+use attn_reduce::util::rng::Rng;
+
+/// Residual GOP write with the symbol mode optionally forced; returns
+/// (residual payload bytes, total payload bytes).
+fn stream_payload(
+    frames: &[Tensor],
+    cfg: &attn_reduce::config::DatasetConfig,
+    keyint: usize,
+    mode: Option<SymbolMode>,
+    path: &std::path::Path,
+) -> (usize, usize) {
+    let codec = Sz3Codec::new(cfg.clone());
+    let bound = ErrorBound::Nrmse(1e-3);
+    with_thread_limit(1, || {
+        let run = || {
+            std::fs::remove_file(path).ok();
+            let mut w =
+                StreamWriter::create(path, codec.id(), cfg.clone(), bound, keyint)
+                    .expect("create stream");
+            let stats = w.append_frames(&codec, frames).expect("append");
+            w.finish().expect("finish");
+            let residual: usize = stats
+                .iter()
+                .filter(|s| !s.keyframe)
+                .map(|s| s.payload_bytes)
+                .sum();
+            let total: usize = stats.iter().map(|s| s.payload_bytes).sum();
+            (residual, total)
+        };
+        match mode {
+            Some(m) => with_symbol_mode(m, run),
+            None => run(),
+        }
+    })
+}
+
+fn main() {
+    let smoke = std::env::var_os("BENCH_FAST").is_some()
+        || std::env::args().any(|a| a == "--smoke");
+    let (n_syms, steps, iters) = if smoke {
+        (200_000usize, 8usize, 2usize)
+    } else {
+        (2_000_000, 32, 5)
+    };
+
+    // zero-peaked residual-shaped quantized codes (~92% zeros)
+    let mut rng = Rng::new(17);
+    let codes: Vec<i32> = (0..n_syms)
+        .map(|_| if rng.below(12) == 0 { (rng.below(7) as i32) - 3 } else { 0 })
+        .collect();
+    let raw_mb = (n_syms * 4) as f64 / 1e6;
+    println!(
+        "coder_throughput: {n_syms} zero-peaked symbols ({raw_mb:.1} MB raw), {} threads",
+        num_threads()
+    );
+
+    let enc_s = median_secs(
+        || {
+            std::hint::black_box(huffman_encode(std::hint::black_box(&codes)));
+        },
+        iters,
+    );
+    let enc = huffman_encode(&codes);
+    let dec_s = median_secs(
+        || {
+            std::hint::black_box(huffman_decode(std::hint::black_box(&enc)).unwrap());
+        },
+        iters,
+    );
+    let dec_bitwise_s = median_secs(
+        || {
+            std::hint::black_box(huffman_decode_bitwise(std::hint::black_box(&enc)).unwrap());
+        },
+        iters,
+    );
+    println!(
+        "huffman: encode {:7.1} MB/s | decode {:7.1} MB/s (LUT) vs {:7.1} MB/s (bitwise) \
+         -> {:.2}x",
+        raw_mb / enc_s,
+        raw_mb / dec_s,
+        raw_mb / dec_bitwise_s,
+        dec_bitwise_s / dec_s
+    );
+
+    let plain = compress_symbols_mode(&codes, SymbolMode::Plain).expect("plain");
+    let zrun = compress_symbols_mode(&codes, SymbolMode::ZeroRun).expect("zero-run");
+    let zrun_dec_s = median_secs(
+        || {
+            std::hint::black_box(
+                decompress_symbols(std::hint::black_box(&zrun), codes.len()).unwrap(),
+            );
+        },
+        iters,
+    );
+    println!(
+        "container: plain {} B vs zero-run {} B ({:.1}% smaller) | zero-run decode {:7.1} MB/s",
+        plain.len(),
+        zrun.len(),
+        100.0 * (1.0 - zrun.len() as f64 / plain.len() as f64),
+        raw_mb / zrun_dec_s
+    );
+
+    // residual GOPs at equal bound: auto modes vs the PR-4 plain framing.
+    // One tile per frame so the entropy stage dominates the payload.
+    let mut cfg = stream_frame_preset(
+        DatasetKind::E3sm,
+        if smoke { Scale::Smoke } else { Scale::Bench },
+    );
+    cfg.ae_block = cfg.dims.clone();
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, steps);
+    let n_points = steps * cfg.total_points();
+    let dir = std::env::temp_dir().join("attn_reduce_coder_bench");
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let keyint = 8usize;
+    let (res_plain, tot_plain) = stream_payload(
+        &frames,
+        &cfg,
+        keyint,
+        Some(SymbolMode::Plain),
+        &dir.join("plain.tstr"),
+    );
+    let (res_auto, tot_auto) =
+        stream_payload(&frames, &cfg, keyint, None, &dir.join("auto.tstr"));
+    let cr_plain = n_points as f64 / tot_plain.max(1) as f64;
+    let cr_auto = n_points as f64 / tot_auto.max(1) as f64;
+    let saving = 1.0 - res_auto as f64 / res_plain.max(1) as f64;
+    println!(
+        "residual (e3sm x {steps} steps, K={keyint}, nrmse:1e-3): payload {res_plain} B \
+         plain -> {res_auto} B auto ({:.1}% smaller) | CR {cr_plain:.1} -> {cr_auto:.1}",
+        100.0 * saving
+    );
+
+    let report = json::obj(vec![
+        ("scale", json::s(if smoke { "smoke" } else { "bench" })),
+        ("threads", json::num(num_threads() as f64)),
+        ("n_symbols", json::num(n_syms as f64)),
+        ("raw_mb", json::num(raw_mb)),
+        (
+            "huffman",
+            json::obj(vec![
+                ("encode_mb_s", json::num(raw_mb / enc_s)),
+                ("decode_mb_s", json::num(raw_mb / dec_s)),
+                ("decode_bitwise_mb_s", json::num(raw_mb / dec_bitwise_s)),
+                ("decode_speedup_vs_bitwise", json::num(dec_bitwise_s / dec_s)),
+            ]),
+        ),
+        (
+            "container",
+            json::obj(vec![
+                ("plain_bytes", json::num(plain.len() as f64)),
+                ("zero_run_bytes", json::num(zrun.len() as f64)),
+                (
+                    "zero_run_saving",
+                    json::num(1.0 - zrun.len() as f64 / plain.len() as f64),
+                ),
+                ("zero_run_decode_mb_s", json::num(raw_mb / zrun_dec_s)),
+            ]),
+        ),
+        (
+            "residual",
+            json::obj(vec![
+                ("dataset", json::s("e3sm")),
+                ("dims", json::arr_usize(&cfg.dims)),
+                ("steps", json::num(steps as f64)),
+                ("keyint", json::num(keyint as f64)),
+                ("bound", json::s("nrmse:1e-3")),
+                ("payload_plain_bytes", json::num(res_plain as f64)),
+                ("payload_auto_bytes", json::num(res_auto as f64)),
+                ("residual_saving", json::num(saving)),
+                ("total_payload_plain_bytes", json::num(tot_plain as f64)),
+                ("total_payload_auto_bytes", json::num(tot_auto as f64)),
+                ("cr_plain", json::num(cr_plain)),
+                ("cr_auto", json::num(cr_auto)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_coder.json", report.to_string_pretty())
+        .expect("write BENCH_coder.json");
+    println!("wrote BENCH_coder.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

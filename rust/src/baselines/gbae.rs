@@ -15,7 +15,7 @@
 
 use std::rc::Rc;
 
-use crate::coder::{huffman_encode, Quantizer};
+use crate::coder::{huffman_encoded_size, Quantizer};
 use crate::compressor::gae_bound_stage;
 use crate::config::{DatasetConfig, TrainConfig};
 use crate::data::{Blocking, Normalizer};
@@ -322,7 +322,9 @@ impl GbaeCompressor {
             if let Some(c) = &corr_rows {
                 codes.extend(q.codes(c));
             }
-            huffman_encode(&codes).len()
+            // exact size via the shared frequency counter — no bitstream
+            // needs to be materialized for accounting
+            huffman_encoded_size(&codes)
         } else {
             n_latents * 4
         };

@@ -18,3 +18,22 @@ pub mod zfp_like;
 pub use gbae::GbaeCompressor;
 pub use sz3_like::Sz3Like;
 pub use zfp_like::ZfpLike;
+
+/// Byte breakdown of one baseline stream (`cli info` diagnostics):
+/// container framing, auxiliary payload (sz3 raw values / zfp exponent
+/// stream), and the entropy stage's table/symbol split. For plain
+/// (LZSS-wrapped) entropy streams the table/symbol numbers are measured
+/// in the entropy domain — the compressed split is not byte-attributable.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamBreakdown {
+    /// Entropy container mode: `"plain"`, `"zero-run"`, or `"const"`.
+    pub mode: &'static str,
+    /// Header/length fields of the stream container.
+    pub framing_bytes: usize,
+    /// sz3 raw ("unpredictable") values / zfp compressed exponents.
+    pub aux_bytes: usize,
+    /// Serialized Huffman table bytes.
+    pub table_bytes: usize,
+    /// Coded symbol payload bytes.
+    pub symbol_bytes: usize,
+}

@@ -5,9 +5,11 @@
 //! (inclusion–exclusion over the corner hypercube, up to 3 fastest-moving
 //! dims), quantize the prediction error to `code = round(err / (2·eps))`
 //! — which guarantees the pointwise bound |x − x̂| ≤ eps — and entropy-
-//! code the (heavily zero-peaked) codes with Huffman + LZSS. Values whose
-//! code exceeds the code range are stored raw ("unpredictable", as SZ
-//! does).
+//! code the (heavily zero-peaked) codes through the symbol container
+//! ([`crate::coder::compress_symbols`]): Huffman + LZSS, or the zero-run
+//! / constant modes when trial sampling says they win (residual tiles,
+//! overwhelmingly). Values whose code exceeds the code range are stored
+//! raw ("unpredictable", as SZ does).
 //!
 //! This is the same algorithm family and error-control mechanism as SZ3's
 //! default path (SZ3 adds regression predictors and adaptive selection;
@@ -18,13 +20,17 @@
 //! independent — encode and decode fan batches out across the shared
 //! [`crate::engine::Executor`], concatenating per-batch streams in batch
 //! order, so the byte stream is identical to the serial one at every
-//! thread count.
+//! thread count. The `_scratch` entry points are the v3 per-tile hot
+//! path: recon, code, and entropy buffers come from the caller's
+//! [`Scratch`] arena instead of fresh `Vec`s per tile.
 
-use crate::coder::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
-use crate::engine::{reuse_f32, Executor};
+use crate::coder::{compress_symbols, decompress_symbols_into, symbol_stream_stats};
+use crate::engine::{reuse_f32, Executor, Scratch};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::ensure;
+
+use super::StreamBreakdown;
 
 const UNPRED: i32 = i32::MIN; // sentinel code for raw-stored values
 const MAX_CODE: i32 = 1 << 20;
@@ -44,6 +50,17 @@ fn read_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
     Ok(v)
 }
 
+/// Validated stream header: geometry, raw-value span, entropy span.
+struct Header {
+    eps: f32,
+    shape: Vec<usize>,
+    n_points: usize,
+    raws_off: usize,
+    n_raw: usize,
+    z_off: usize,
+    z_len: usize,
+}
+
 /// SZ3-like compressor with pointwise absolute error bound `eps`.
 #[derive(Debug, Clone, Copy)]
 pub struct Sz3Like {
@@ -56,35 +73,68 @@ impl Sz3Like {
         Self { eps }
     }
 
-    /// Compress; returns the archive bytes.
-    pub fn compress(&self, t: &Tensor) -> Result<Vec<u8>> {
-        let (codes, raws) = self.encode_codes(t);
+    /// Serialize geometry + raw values + the entropy-coded code stream.
+    fn serialize(&self, shape: &[usize], raws: &[f32], codes: &[i32]) -> Result<Vec<u8>> {
         let mut out = Vec::new();
         out.extend_from_slice(&self.eps.to_le_bytes());
-        out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
-        for &d in t.shape() {
+        out.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
             out.extend_from_slice(&(d as u64).to_le_bytes());
         }
         out.extend_from_slice(&(raws.len() as u64).to_le_bytes());
-        for &r in &raws {
+        for &r in raws {
             out.extend_from_slice(&r.to_le_bytes());
         }
-        let huff = huffman_encode(&codes);
-        let z = lossless_compress(&huff)?;
+        let z = compress_symbols(codes)?;
         out.extend_from_slice(&(z.len() as u64).to_le_bytes());
         out.extend(z);
         Ok(out)
     }
 
-    pub fn decompress(bytes: &[u8]) -> Result<Tensor> {
-        Self::decompress_capped(bytes, MAX_POINTS_DEFAULT)
+    /// Compress; returns the archive bytes.
+    pub fn compress(&self, t: &Tensor) -> Result<Vec<u8>> {
+        let (codes, raws) = self.encode_codes(t);
+        self.serialize(t.shape(), &raws, &codes)
     }
 
-    /// Decompress with an explicit cap on the decoded point count. Every
-    /// header field is untrusted: lengths are bounds-checked before they
-    /// size an allocation, so corrupt or truncated streams return `Err`
-    /// — never panic, never balloon memory.
-    pub fn decompress_capped(bytes: &[u8], max_points: usize) -> Result<Tensor> {
+    /// Single-lattice compress on the caller's scratch arena — the v3
+    /// per-tile hot path (serial: tiles are already the parallel grain).
+    /// Byte-identical to [`Sz3Like::compress`] of the same data.
+    pub fn compress_scratch(
+        &self,
+        shape: &[usize],
+        data: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "sz3: shape {:?} does not match {} values",
+            shape,
+            data.len()
+        );
+        let rank = shape.len();
+        let lor = rank.min(3);
+        let lattice = &shape[rank - lor..];
+        let batch: usize = shape[..rank - lor].iter().product();
+        let vol: usize = lattice.iter().product();
+        let Scratch { f32_a, i32_a, .. } = scratch;
+        let codes = i32_a;
+        codes.clear();
+        let mut raws = Vec::new();
+        if vol > 0 {
+            for b in 0..batch {
+                let recon = reuse_f32(f32_a, vol);
+                let src = &data[b * vol..(b + 1) * vol];
+                self.encode_lattice(src, lattice, recon, codes, &mut raws);
+            }
+        }
+        self.serialize(shape, &raws, codes)
+    }
+
+    /// Parse + validate the header. Every field is untrusted: lengths are
+    /// bounds-checked before they size an allocation, so corrupt or
+    /// truncated streams return `Err` — never panic, never balloon memory.
+    fn parse_header(bytes: &[u8], max_points: usize) -> Result<Header> {
         ensure!(bytes.len() >= 8, "sz3: truncated");
         let eps = f32::from_le_bytes(bytes[0..4].try_into().unwrap());
         ensure!(eps.is_finite() && eps > 0.0, "sz3: corrupt eps {eps}");
@@ -108,20 +158,61 @@ impl Sz3Like {
             n_raw <= n_points && n_raw <= bytes.len().saturating_sub(off) / 4,
             "sz3: corrupt raw count {n_raw}"
         );
-        let mut raws = Vec::with_capacity(n_raw);
-        for _ in 0..n_raw {
-            raws.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-            off += 4;
-        }
-        let zlen = usize::try_from(read_u64(bytes, &mut off)?)
+        let raws_off = off;
+        off += n_raw * 4;
+        let z_len = usize::try_from(read_u64(bytes, &mut off)?)
             .map_err(|_| anyhow::anyhow!("sz3: stream length overflow"))?;
-        ensure!(zlen <= bytes.len() - off, "sz3: entropy stream truncated");
-        ensure!(off + zlen == bytes.len(), "sz3: trailing bytes");
-        // huffman stream ≤ table (5 B/symbol) + ~8 B/value worst case
-        let cap = n_points.saturating_mul(13) + (1 << 20);
-        let huff = lossless_decompress(&bytes[off..off + zlen], cap)?;
-        let (codes, _) = huffman_decode(&huff)?;
-        Self::decode_codes(&codes, &raws, shape, eps)
+        ensure!(z_len <= bytes.len() - off, "sz3: entropy stream truncated");
+        ensure!(off + z_len == bytes.len(), "sz3: trailing bytes");
+        Ok(Header { eps, shape, n_points, raws_off, n_raw, z_off: off, z_len })
+    }
+
+    pub fn decompress(bytes: &[u8]) -> Result<Tensor> {
+        Self::decompress_capped(bytes, MAX_POINTS_DEFAULT)
+    }
+
+    /// Decompress with an explicit cap on the decoded point count.
+    pub fn decompress_capped(bytes: &[u8], max_points: usize) -> Result<Tensor> {
+        Self::decompress_capped_scratch(bytes, max_points, &mut Scratch::default())
+    }
+
+    /// [`Sz3Like::decompress_capped`] on the caller's scratch arena — the
+    /// v3 per-tile hot path (entropy table/LUT and code buffers reused
+    /// across tiles).
+    pub fn decompress_capped_scratch(
+        bytes: &[u8],
+        max_points: usize,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let h = Self::parse_header(bytes, max_points)?;
+        let mut raws = Vec::with_capacity(h.n_raw);
+        for i in 0..h.n_raw {
+            let o = h.raws_off + i * 4;
+            raws.push(f32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()));
+        }
+        let Scratch { i32_a, symbols, .. } = scratch;
+        decompress_symbols_into(
+            &bytes[h.z_off..h.z_off + h.z_len],
+            h.n_points,
+            i32_a,
+            symbols,
+        )?;
+        Self::decode_codes(i32_a, &raws, h.shape, h.eps)
+    }
+
+    /// Byte breakdown of one stream for `cli info` (see
+    /// [`StreamBreakdown`]): framing vs raw values vs entropy table vs
+    /// coded symbols.
+    pub fn stream_breakdown(bytes: &[u8], max_points: usize) -> Result<StreamBreakdown> {
+        let h = Self::parse_header(bytes, max_points)?;
+        let stats = symbol_stream_stats(&bytes[h.z_off..h.z_off + h.z_len], h.n_points)?;
+        Ok(StreamBreakdown {
+            mode: stats.mode,
+            framing_bytes: bytes.len() - h.n_raw * 4 - h.z_len,
+            aux_bytes: h.n_raw * 4,
+            table_bytes: stats.table_bytes,
+            symbol_bytes: stats.symbol_bytes,
+        })
     }
 
     /// Lorenzo-predict + quantize one lattice. `recon` is a scratch
@@ -366,5 +457,36 @@ mod tests {
                 Sz3Like::decompress(&Sz3Like::new(1e-3).compress(&t).unwrap()).unwrap();
             assert_eq!(back.shape(), t.shape());
         }
+    }
+
+    #[test]
+    fn scratch_compress_matches_plain_compress() {
+        // the per-tile scratch path must be byte-identical to the
+        // batch-parallel path on the same data
+        let mut scratch = Scratch::default();
+        for (seed, shape) in [(3u64, vec![4, 16, 16]), (7, vec![30]), (9, vec![2, 5, 8, 8])] {
+            let t = smooth_field(shape, seed);
+            let sz = Sz3Like::new(1e-3);
+            let a = sz.compress(&t).unwrap();
+            let b = sz.compress_scratch(t.shape(), t.data(), &mut scratch).unwrap();
+            assert_eq!(a, b);
+            // and the scratch decode round-trips it
+            let back =
+                Sz3Like::decompress_capped_scratch(&b, t.len(), &mut scratch).unwrap();
+            assert_eq!(back.shape(), t.shape());
+        }
+    }
+
+    #[test]
+    fn stream_breakdown_accounts_for_the_container() {
+        let t = smooth_field(vec![6, 16, 16], 5);
+        let bytes = Sz3Like::new(1e-3).compress(&t).unwrap();
+        let b = Sz3Like::stream_breakdown(&bytes, t.len()).unwrap();
+        assert!(b.mode == "plain" || b.mode == "zero-run" || b.mode == "const");
+        // framing is exactly the header fields: eps + rank + 3 dims +
+        // raw count + entropy length
+        assert_eq!(b.framing_bytes, 4 + 4 + 3 * 8 + 8 + 8);
+        assert!(b.table_bytes > 0);
+        assert!(b.symbol_bytes > 0);
     }
 }

@@ -5,20 +5,31 @@
 //! transform along every axis to decorrelate, then code coefficient
 //! bit-planes. We keep the exact ZFP lifting transform and block-exponent
 //! stage, and replace the negabinary bit-plane coder with a
-//! shift-truncate + Huffman stage controlled by `precision` (bits kept per
-//! coefficient) — the same fixed-precision rate-distortion knob.
+//! shift-truncate stage + the symbol container
+//! ([`crate::coder::compress_symbols`]: Huffman/LZSS, or the zero-run /
+//! constant modes when trial sampling says they win) controlled by
+//! `precision` (bits kept per coefficient) — the same fixed-precision
+//! rate-distortion knob.
 
 //! Every 4^d block is independent, so both directions run block-parallel
 //! on the shared [`crate::engine::Executor`]: compression fans out over
 //! batches (or origin chunks when there is a single batch) and
 //! decompression over individual blocks, with streams concatenated in
 //! block order — byte-identical to the serial path at every thread count.
+//! The `_scratch` entry points are the v3 per-tile hot path: block,
+//! coefficient, and entropy buffers come from the caller's [`Scratch`]
+//! arena instead of fresh `Vec`s per tile.
 
-use crate::coder::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
-use crate::engine::{reuse_f32, reuse_i64, Executor};
+use crate::coder::{
+    compress_symbols, decompress_symbols_into, lossless_compress, lossless_decompress,
+    symbol_stream_stats,
+};
+use crate::engine::{reuse_f32, reuse_i64, Executor, Scratch};
 use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::ensure;
+
+use super::StreamBreakdown;
 
 const BLOCK: usize = 4;
 /// Fixed-point fraction bits when converting to integers.
@@ -130,10 +141,16 @@ impl ZfpLike {
             codes.extend(c);
         }
 
+        self.serialize(&shape, &exps, &codes)
+    }
+
+    /// Serialize geometry + compressed exponents + the entropy-coded
+    /// coefficient stream.
+    fn serialize(&self, shape: &[usize], exps: &[i16], codes: &[i32]) -> Result<Vec<u8>> {
         let mut out = Vec::new();
         out.push(self.precision as u8);
-        out.extend_from_slice(&(rank as u32).to_le_bytes());
-        for &s in &shape {
+        out.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &s in shape {
             out.extend_from_slice(&(s as u64).to_le_bytes());
         }
         out.extend_from_slice(&(exps.len() as u64).to_le_bytes());
@@ -141,22 +158,70 @@ impl ZfpLike {
         let zexp = lossless_compress(&exp_bytes)?;
         out.extend_from_slice(&(zexp.len() as u64).to_le_bytes());
         out.extend(zexp);
-        let huff = huffman_encode(&codes);
-        let z = lossless_compress(&huff)?;
+        let z = compress_symbols(codes)?;
         out.extend_from_slice(&(z.len() as u64).to_le_bytes());
         out.extend(z);
         Ok(out)
+    }
+
+    /// Single-lattice compress on the caller's scratch arena — the v3
+    /// per-tile hot path (serial: tiles are already the parallel grain).
+    /// Byte-identical to [`ZfpLike::compress`] of the same data.
+    pub fn compress_scratch(
+        &self,
+        shape: &[usize],
+        data: &[f32],
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "zfp: shape {:?} does not match {} values",
+            shape,
+            data.len()
+        );
+        let rank = shape.len();
+        let d = rank.min(3);
+        let lattice: Vec<usize> = shape[rank - d..].to_vec();
+        let batch: usize = shape[..rank - d].iter().product();
+        let vol: usize = lattice.iter().product();
+        let bsz = BLOCK.pow(d as u32);
+        let origins = crate::tensor::block_origins(&lattice, &vec![BLOCK; d]);
+        let Scratch { f32_a, i64_a, i32_a, .. } = scratch;
+        let codes = i32_a;
+        codes.clear();
+        let mut exps: Vec<i16> = Vec::with_capacity(batch * origins.len());
+        if batch > 0 && vol > 0 {
+            for b in 0..batch {
+                let sub =
+                    Tensor::new(lattice.clone(), data[b * vol..(b + 1) * vol].to_vec());
+                let blk = reuse_f32(f32_a, bsz);
+                let ints = reuse_i64(i64_a, bsz);
+                self.encode_blocks(&sub, &origins, d, blk, ints, &mut exps, codes);
+            }
+        }
+        self.serialize(shape, &exps, codes)
     }
 
     pub fn decompress(bytes: &[u8]) -> Result<Tensor> {
         Self::decompress_capped(bytes, MAX_POINTS_DEFAULT)
     }
 
-    /// Decompress with an explicit cap on the decoded point count. All
-    /// header fields are untrusted: lengths are bounds-checked before
-    /// sizing any allocation, so corrupt or truncated streams return
-    /// `Err` — never panic, never balloon memory.
+    /// Decompress with an explicit cap on the decoded point count.
     pub fn decompress_capped(bytes: &[u8], max_points: usize) -> Result<Tensor> {
+        Self::decompress_capped_scratch(bytes, max_points, &mut Scratch::default())
+    }
+
+    /// [`ZfpLike::decompress_capped`] on the caller's scratch arena — the
+    /// v3 per-tile hot path (entropy table/LUT and code buffers reused
+    /// across tiles). All header fields are untrusted: lengths are
+    /// bounds-checked before sizing any allocation, so corrupt or
+    /// truncated streams return `Err` — never panic, never balloon
+    /// memory.
+    pub fn decompress_capped_scratch(
+        bytes: &[u8],
+        max_points: usize,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
         ensure!(bytes.len() > 5, "zfp: truncated");
         let precision = bytes[0] as u32;
         ensure!(
@@ -184,6 +249,17 @@ impl ZfpLike {
         let batch: usize = shape[..rank - d].iter().product();
         let vol: usize = lattice.iter().product();
         let bsz = BLOCK.pow(d as u32);
+        // bound the origin-grid size before materializing it: a zero
+        // batch dim zeroes n_points, which must not let huge lattice
+        // dims smuggle an astronomic origin allocation past the cap
+        let n_lattice_blocks = lattice
+            .iter()
+            .try_fold(1usize, |a, &dim| a.checked_mul(dim.div_ceil(BLOCK)))
+            .ok_or_else(|| anyhow::anyhow!("zfp: block count overflow"))?;
+        ensure!(
+            n_lattice_blocks <= n_points.max(1),
+            "zfp: {n_lattice_blocks} lattice blocks inconsistent with {n_points} points"
+        );
         let origins = crate::tensor::block_origins(&lattice, &vec![BLOCK; d]);
         let n_blocks = batch
             .checked_mul(origins.len())
@@ -209,10 +285,11 @@ impl ZfpLike {
             .map_err(|_| anyhow::anyhow!("zfp: entropy stream overflow"))?;
         ensure!(zl <= bytes.len() - off, "zfp: entropy stream truncated");
         ensure!(off + zl == bytes.len(), "zfp: trailing bytes");
-        // huffman stream ≤ table (5 B/symbol) + ~8 B/value worst case
-        let cap = n_codes.saturating_mul(13) + (1 << 20);
-        let huff = lossless_decompress(&bytes[off..off + zl], cap)?;
-        let (codes, _) = huffman_decode(&huff)?;
+        // symbol container: plain streams from old archives and the new
+        // zero-run/const modes all dispatch on the leading magic
+        let Scratch { i32_a, symbols, .. } = scratch;
+        decompress_symbols_into(&bytes[off..off + zl], n_codes, i32_a, symbols)?;
+        let codes: &[i32] = i32_a;
         ensure!(codes.len() == n_codes, "zfp: code count");
 
         let shift = FRAC_BITS - precision;
@@ -256,6 +333,63 @@ impl ZfpLike {
             data[b * vol..(b + 1) * vol].copy_from_slice(sub.data());
         }
         Ok(Tensor::new(shape, data))
+    }
+
+    /// Byte breakdown of one stream for `cli info` (see
+    /// [`StreamBreakdown`]): framing vs compressed exponents vs entropy
+    /// table vs coded symbols.
+    pub fn stream_breakdown(bytes: &[u8], max_points: usize) -> Result<StreamBreakdown> {
+        ensure!(bytes.len() > 5, "zfp: truncated");
+        let rank = u32::from_le_bytes(bytes[1..5].try_into().unwrap()) as usize;
+        ensure!((1..=MAX_RANK).contains(&rank), "zfp: corrupt rank {rank}");
+        let mut off = 5;
+        let mut shape = Vec::with_capacity(rank);
+        let mut n_points = 1usize;
+        for _ in 0..rank {
+            let dim = usize::try_from(read_u64(bytes, &mut off)?)
+                .map_err(|_| anyhow::anyhow!("zfp: shape dim overflow"))?;
+            n_points = n_points
+                .checked_mul(dim)
+                .filter(|&n| n <= max_points)
+                .ok_or_else(|| anyhow::anyhow!("zfp: declared points exceed cap {max_points}"))?;
+            shape.push(dim);
+        }
+        let d = rank.min(3);
+        let lattice: Vec<usize> = shape[rank - d..].to_vec();
+        let batch: usize = shape[..rank - d].iter().product();
+        let bsz = BLOCK.pow(d as u32);
+        // same origin-grid bound as the decoder: a zero batch dim must
+        // not let huge lattice dims size the origin allocation
+        let n_lattice_blocks = lattice
+            .iter()
+            .try_fold(1usize, |a, &dim| a.checked_mul(dim.div_ceil(BLOCK)))
+            .ok_or_else(|| anyhow::anyhow!("zfp: block count overflow"))?;
+        ensure!(
+            n_lattice_blocks <= n_points.max(1),
+            "zfp: {n_lattice_blocks} lattice blocks inconsistent with {n_points} points"
+        );
+        let origins = crate::tensor::block_origins(&lattice, &vec![BLOCK; d]);
+        let n_codes = batch
+            .checked_mul(origins.len())
+            .and_then(|b| b.checked_mul(bsz))
+            .ok_or_else(|| anyhow::anyhow!("zfp: code count overflow"))?;
+        let _ = read_u64(bytes, &mut off)?; // n_exp
+        let zel = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("zfp: exponent stream overflow"))?;
+        ensure!(zel <= bytes.len() - off, "zfp: exponent stream truncated");
+        off += zel;
+        let zl = usize::try_from(read_u64(bytes, &mut off)?)
+            .map_err(|_| anyhow::anyhow!("zfp: entropy stream overflow"))?;
+        ensure!(zl <= bytes.len() - off, "zfp: entropy stream truncated");
+        ensure!(off + zl == bytes.len(), "zfp: trailing bytes");
+        let stats = symbol_stream_stats(&bytes[off..off + zl], n_codes)?;
+        Ok(StreamBreakdown {
+            mode: stats.mode,
+            framing_bytes: bytes.len() - zel - zl,
+            aux_bytes: zel,
+            table_bytes: stats.table_bytes,
+            symbol_bytes: stats.symbol_bytes,
+        })
     }
 }
 
@@ -453,5 +587,33 @@ mod tests {
         let t = Tensor::new(vec![4, 4], vec![0.0; 16]);
         let back = ZfpLike::decompress(&ZfpLike::new(10).compress(&t).unwrap()).unwrap();
         assert_eq!(back.data(), t.data());
+    }
+
+    #[test]
+    fn scratch_compress_matches_plain_compress() {
+        // the per-tile scratch path must be byte-identical to the
+        // batch-parallel path on the same data
+        let mut scratch = Scratch::default();
+        for (seed, shape) in [(3u64, vec![16, 16, 16]), (5, vec![9]), (7, vec![2, 3, 8, 8])] {
+            let t = smooth(shape, seed);
+            let z = ZfpLike::new(14);
+            let a = z.compress(&t).unwrap();
+            let b = z.compress_scratch(t.shape(), t.data(), &mut scratch).unwrap();
+            assert_eq!(a, b);
+            let back = ZfpLike::decompress_capped_scratch(&b, t.len(), &mut scratch).unwrap();
+            assert_eq!(back.shape(), t.shape());
+        }
+    }
+
+    #[test]
+    fn stream_breakdown_reports_the_entropy_split() {
+        let t = smooth(vec![12, 12, 12], 11);
+        let bytes = ZfpLike::new(14).compress(&t).unwrap();
+        let b = ZfpLike::stream_breakdown(&bytes, t.len()).unwrap();
+        assert!(b.aux_bytes > 0, "exponent stream present");
+        // framing is exactly the header fields: precision + rank +
+        // 3 dims + exponent count + two stream lengths
+        assert_eq!(b.framing_bytes, 1 + 4 + 3 * 8 + 8 + 8 + 8);
+        assert!(b.table_bytes + b.symbol_bytes > 0);
     }
 }

@@ -43,8 +43,8 @@ impl Sz3Codec {
                 // the per-tile cap is computed inside the closure: it
                 // only runs after decode_tiled has validated the
                 // (untrusted) tile shape against the field dims
-                tiled::decode_tiled(payload, &index, &self.dataset.dims, region, |b| {
-                    Sz3Like::decompress_capped(b, index.tile.iter().product())
+                tiled::decode_tiled(payload, &index, &self.dataset.dims, region, |b, s| {
+                    Sz3Like::decompress_capped_scratch(b, index.tile.iter().product(), s)
                 })
             }
             None => {
@@ -77,8 +77,8 @@ impl Codec for Sz3Codec {
             eps.is_finite() && eps > 0.0,
             "bound {bound} yields eps {eps} (constant field or zero bound?)"
         );
-        let (payload, index) = tiled::encode_tiled(field, &self.dataset.ae_block, |tile| {
-            Sz3Like::new(eps).compress(tile)
+        let (payload, index) = tiled::encode_tiled(field, &self.dataset.ae_block, |shape, data, s| {
+            Sz3Like::new(eps).compress_scratch(shape, data, s)
         })?;
         let mut header = base_header(self.id(), &self.dataset, bound);
         header.push(("eps".to_string(), json::num(eps as f64)));

@@ -8,23 +8,30 @@
 //! the entries of the requested tiles: a full decode asks for all of
 //! them, a region decode for the intersecting ones, and both reassemble
 //! through the `data::blocking` scatter helpers.
+//!
+//! Per-tile coding is allocation-light: the tile extract buffer and the
+//! codecs' recon/code/entropy buffers all come from the worker's
+//! per-thread [`Scratch`] arena, so the hot loop stops paying one fresh
+//! `Vec` per tile per stage.
 
 use crate::compressor::BlockIndex;
 use crate::data::{region_tile_ids, scatter_tile_into_region, Region};
-use crate::engine::Executor;
+use crate::engine::{reuse_f32, Executor, Scratch};
 use crate::tensor::{block_origins, extract_block, Tensor};
 use crate::Result;
 use anyhow::ensure;
 
 /// Tile a field and encode every tile independently. Returns the
-/// concatenated payload plus the block index over it.
+/// concatenated payload plus the block index over it. `encode_tile`
+/// receives `(tile shape, tile data, scratch)` — the data slice lives in
+/// the per-thread arena, so implementations must not stash it.
 pub(crate) fn encode_tiled<F>(
     field: &Tensor,
     tile: &[usize],
     encode_tile: F,
 ) -> Result<(Vec<u8>, BlockIndex)>
 where
-    F: Fn(&Tensor) -> Result<Vec<u8>> + Sync,
+    F: Fn(&[usize], &[f32], &mut Scratch) -> Result<Vec<u8>> + Sync,
 {
     // clamp each tile dim to the field dim: a tile larger than the field
     // only adds padding, and `BlockIndex::validate` bounds untrusted tile
@@ -36,10 +43,15 @@ where
         .collect();
     let origins = block_origins(field.shape(), &tile);
     let tile_len: usize = tile.iter().product();
-    let parts: Vec<Vec<u8>> = Executor::global().try_par_map(origins.len(), |i| {
-        let mut buf = vec![0f32; tile_len];
+    let parts: Vec<Vec<u8>> = Executor::global().try_par_map_scratch(origins.len(), |i, s| {
+        // the tile buffer is moved out of the arena for the call so the
+        // encoder can use the remaining scratch fields freely
+        let mut buf = std::mem::take(&mut s.f32_b);
+        reuse_f32(&mut buf, tile_len);
         extract_block(field, &origins[i], &tile, &mut buf);
-        encode_tile(&Tensor::new(tile.clone(), buf))
+        let r = encode_tile(&tile, &buf, s);
+        s.f32_b = buf;
+        r
     })?;
     let mut payload = Vec::with_capacity(parts.iter().map(Vec::len).sum());
     let mut entries = Vec::with_capacity(parts.len());
@@ -63,7 +75,7 @@ pub(crate) fn decode_tiled<F>(
     decode_tile: F,
 ) -> Result<Tensor>
 where
-    F: Fn(&[u8]) -> Result<Tensor> + Sync,
+    F: Fn(&[u8], &mut Scratch) -> Result<Tensor> + Sync,
 {
     index.validate(dims, payload.len())?;
     let origins = block_origins(dims, &index.tile);
@@ -76,9 +88,9 @@ where
         None => &full,
     };
     let ids = region_tile_ids(dims, &index.tile, r);
-    let tiles: Vec<Tensor> = Executor::global().try_par_map(ids.len(), |i| {
+    let tiles: Vec<Tensor> = Executor::global().try_par_map_scratch(ids.len(), |i, s| {
         let (off, len) = index.entry(ids[i])?;
-        let t = decode_tile(&payload[off..off + len])?;
+        let t = decode_tile(&payload[off..off + len], s)?;
         ensure!(
             t.shape() == &index.tile[..],
             "tile {} decoded to shape {:?}, index says {:?}",

@@ -40,8 +40,8 @@ impl ZfpCodec {
 
     /// Tiled (v3) encode of the whole field at one precision.
     fn encode(&self, field: &Tensor, precision: u32) -> Result<(Vec<u8>, BlockIndex)> {
-        tiled::encode_tiled(field, &self.dataset.ae_block, |tile| {
-            ZfpLike::new(precision).compress(tile)
+        tiled::encode_tiled(field, &self.dataset.ae_block, |shape, data, s| {
+            ZfpLike::new(precision).compress_scratch(shape, data, s)
         })
     }
 
@@ -116,8 +116,8 @@ fn decode(
     dims: &[usize],
     region: Option<&Region>,
 ) -> Result<Tensor> {
-    tiled::decode_tiled(payload, index, dims, region, |b| {
-        ZfpLike::decompress_capped(b, index.tile.iter().product())
+    tiled::decode_tiled(payload, index, dims, region, |b, s| {
+        ZfpLike::decompress_capped_scratch(b, index.tile.iter().product(), s)
     })
 }
 

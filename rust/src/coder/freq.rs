@@ -1,0 +1,113 @@
+//! Shared symbol-frequency counting (the one histogram everybody uses).
+//!
+//! Three call sites used to hand-roll this (`huffman_encode`'s
+//! `HashMap` counter, the sz3 quantized-stream stats, and the
+//! experiments runners' per-species re-encoding); they all route through
+//! [`symbol_freqs`] now. The common case — quantized prediction errors /
+//! transform coefficients, a compact alphabet peaked at zero — takes a
+//! dense-array path; wide alphabets (e.g. streams carrying the sz3
+//! `UNPRED` sentinel at `i32::MIN`) fall back to sort-and-run-length.
+//! No hashing on either path, and both produce the same symbol-sorted
+//! output, so encoders are byte-identical whichever path ran.
+
+/// Dense-window threshold shared by the counter and the Huffman
+/// encoder's symbol-code lookup: dense when the table stays small next
+/// to the input (the cap keeps a hostile spread from sizing a huge
+/// table).
+pub(crate) fn dense_range_cap(n_values: usize) -> i64 {
+    (n_values as i64 * 4).max(4096).min(1 << 21)
+}
+
+/// Count symbol occurrences. Returns `(symbol, count)` pairs sorted by
+/// symbol ascending, one entry per distinct symbol.
+pub fn symbol_freqs(values: &[i32]) -> Vec<(i32, u64)> {
+    if values.is_empty() {
+        return Vec::new();
+    }
+    let mut min = i32::MAX;
+    let mut max = i32::MIN;
+    for &v in values {
+        min = min.min(v);
+        max = max.max(v);
+    }
+    let range = (max as i64) - (min as i64) + 1;
+    if range <= dense_range_cap(values.len()) {
+        let mut counts = vec![0u64; range as usize];
+        for &v in values {
+            counts[((v as i64) - (min as i64)) as usize] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (((i as i64) + (min as i64)) as i32, c))
+            .collect()
+    } else {
+        let mut sorted = values.to_vec();
+        sorted.sort_unstable();
+        let mut out = Vec::new();
+        let mut cur = sorted[0];
+        let mut n = 0u64;
+        for &v in &sorted {
+            if v == cur {
+                n += 1;
+            } else {
+                out.push((cur, n));
+                cur = v;
+                n = 1;
+            }
+        }
+        out.push((cur, n));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reference(values: &[i32]) -> Vec<(i32, u64)> {
+        let mut sorted = values.to_vec();
+        sorted.sort_unstable();
+        let mut out: Vec<(i32, u64)> = Vec::new();
+        for v in sorted {
+            match out.last_mut() {
+                Some(last) if last.0 == v => last.1 += 1,
+                _ => out.push((v, 1)),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(symbol_freqs(&[]).is_empty());
+        assert_eq!(symbol_freqs(&[5]), vec![(5, 1)]);
+        assert_eq!(symbol_freqs(&[-3; 10]), vec![(-3, 10)]);
+    }
+
+    #[test]
+    fn dense_and_sparse_paths_agree() {
+        let mut rng = Rng::new(5);
+        // compact alphabet: dense path
+        let peaked: Vec<i32> = (0..5000).map(|_| (rng.normal() * 2.0) as i32).collect();
+        assert_eq!(symbol_freqs(&peaked), reference(&peaked));
+        // wide spread (sentinel at i32::MIN): sort path
+        let mut wide = peaked.clone();
+        wide.push(i32::MIN);
+        wide.push(i32::MAX);
+        assert_eq!(symbol_freqs(&wide), reference(&wide));
+    }
+
+    #[test]
+    fn counts_sum_to_input_length() {
+        let vals: Vec<i32> = (0..1000).map(|i| (i % 7) - 3).collect();
+        let freqs = symbol_freqs(&vals);
+        assert_eq!(freqs.iter().map(|&(_, c)| c).sum::<u64>(), 1000);
+        // sorted by symbol, no duplicates
+        for w in freqs.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

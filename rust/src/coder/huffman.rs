@@ -10,18 +10,51 @@
 //!   padding to byte | bitstream
 //!
 //! Degenerate case (single distinct symbol): bitlen 0, no payload bits.
+//!
+//! Hot-path design (the entropy-coder overhaul):
+//!
+//! * **No hashing anywhere.** Frequencies come from the shared dense /
+//!   sort-based counter in [`super::freq`]; encode looks codes up through
+//!   a dense `symbol - min` table (compact alphabets) or binary search;
+//!   decode is table-driven.
+//! * **Table-driven decode.** A flat first-level LUT resolves every code
+//!   of up to [`LUT_BITS`] bits with one peek + one lookup; longer codes
+//!   (rare by construction — canonical codes sort short-first) fall back
+//!   to a canonical bit-at-a-time walk over per-length
+//!   `first_code`/`first_index` arrays. The old `HashMap`-per-bit
+//!   decoder survives as [`huffman_decode_bitwise`] (now backed by a
+//!   sorted table) purely as the equivalence/speedup oracle.
+//! * **Reusable decode state.** [`huffman_decode_into`] threads a
+//!   [`HuffScratch`] so per-tile decodes reuse the table and LUT buffers
+//!   instead of allocating per call (wired through the engine's
+//!   per-thread [`crate::engine::Scratch`] arenas).
+//!
+//! Untrusted input: every declared count is validated against the bytes
+//! actually present *before* it sizes an allocation.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
-
-use super::bitstream::{BitReader, BitWriter};
+use super::bitstream::BitReader;
+use super::bitstream::BitWriter;
+use super::freq::{dense_range_cap, symbol_freqs};
 use crate::Result;
 use anyhow::{bail, ensure};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 const MAX_CODE_LEN: u32 = 58; // fits a u64 accumulator comfortably
 
-/// Compute canonical code lengths for `symbols` (must be non-empty).
-fn code_lengths(freqs: &HashMap<i32, u64>) -> Vec<(i32, u32)> {
+/// First-level decode LUT width: one `peek` resolves any code of up to
+/// this many bits. 12 bits covers every code the peaked streams produce
+/// while the 4096-entry table still fills fast and stays cache-resident.
+const LUT_BITS: u32 = 12;
+
+/// Default cap on the declared value count (mirrors the baselines'
+/// `MAX_POINTS_DEFAULT`): large enough for paper-scale streams, small
+/// enough that a corrupt 2^60 claim cannot size an allocation.
+const MAX_VALUES_DEFAULT: usize = 1 << 31;
+
+/// Compute canonical code lengths for symbol frequencies (sorted by
+/// symbol, non-empty).
+fn code_lengths(freqs: &[(i32, u64)]) -> Vec<(i32, u32)> {
     // package into a heap of (weight, tie, node); standard Huffman tree.
     #[derive(PartialEq, Eq, PartialOrd, Ord)]
     struct Node {
@@ -29,15 +62,13 @@ fn code_lengths(freqs: &HashMap<i32, u64>) -> Vec<(i32, u32)> {
         tie: u64,
         idx: usize,
     }
-    let mut syms: Vec<(i32, u64)> = freqs.iter().map(|(&s, &f)| (s, f)).collect();
-    syms.sort_unstable();
-    if syms.len() == 1 {
-        return vec![(syms[0].0, 0)];
+    if freqs.len() == 1 {
+        return vec![(freqs[0].0, 0)];
     }
     // leaves 0..n, internal nodes appended
-    let n = syms.len();
+    let n = freqs.len();
     let mut parent = vec![usize::MAX; n];
-    let mut heap: BinaryHeap<Reverse<Node>> = syms
+    let mut heap: BinaryHeap<Reverse<Node>> = freqs
         .iter()
         .enumerate()
         .map(|(i, &(_, f))| Reverse(Node { weight: f, tie: i as u64, idx: i }))
@@ -65,7 +96,7 @@ fn code_lengths(freqs: &HashMap<i32, u64>) -> Vec<(i32, u32)> {
     }
     // depth of each leaf
     let mut out = Vec::with_capacity(n);
-    for (i, &(sym, _)) in syms.iter().enumerate() {
+    for (i, &(sym, _)) in freqs.iter().enumerate() {
         let mut depth = 0u32;
         let mut p = parent[i];
         while p != usize::MAX {
@@ -82,22 +113,23 @@ fn code_lengths(freqs: &HashMap<i32, u64>) -> Vec<(i32, u32)> {
     out
 }
 
-/// Assign canonical codes from (symbol, len) pairs.
-/// Returns map symbol -> (code, len); codes are MSB-first per canonical
-/// convention, emitted LSB-first bit-reversed for the LSB bitstream.
-fn canonical_codes(lens: &[(i32, u32)]) -> HashMap<i32, (u64, u32)> {
+/// Assign canonical codes from (symbol, len) pairs. Returns
+/// `(symbol, code, len)` in (len, symbol) order; codes are MSB-first per
+/// canonical convention, emitted LSB-first bit-reversed for the LSB
+/// bitstream.
+fn canonical_table(lens: &[(i32, u32)]) -> Vec<(i32, u64, u32)> {
     let mut sorted: Vec<(u32, i32)> = lens.iter().map(|&(s, l)| (l, s)).collect();
     sorted.sort_unstable();
-    let mut map = HashMap::with_capacity(sorted.len());
+    let mut out = Vec::with_capacity(sorted.len());
     let mut code = 0u64;
     let mut prev_len = sorted.first().map(|&(l, _)| l).unwrap_or(0);
     for &(len, sym) in &sorted {
         code <<= len - prev_len;
         prev_len = len;
-        map.insert(sym, (code, len));
+        out.push((sym, code, len));
         code += 1;
     }
-    map
+    out
 }
 
 fn reverse_bits(v: u64, n: u32) -> u64 {
@@ -107,75 +139,340 @@ fn reverse_bits(v: u64, n: u32) -> u64 {
     v.reverse_bits() >> (64 - n)
 }
 
+/// Exact byte length of [`huffman_encode`]'s output without building the
+/// bitstream — the shared size accountant (per-species CR splits, GBAE
+/// payload accounting, the zero-run mode trials).
+pub fn huffman_encoded_size(values: &[i32]) -> usize {
+    if values.is_empty() {
+        return 4 + 8;
+    }
+    let freqs = symbol_freqs(values);
+    let lens = code_lengths(&freqs);
+    // freqs and lens share symbol order, so zip them for the bit total
+    let bits: u64 = freqs
+        .iter()
+        .zip(&lens)
+        .map(|(&(_, f), &(_, l))| f * l as u64)
+        .sum();
+    4 + lens.len() * 5 + 8 + bits.div_ceil(8) as usize
+}
+
 /// Encode values into a self-contained byte stream.
 pub fn huffman_encode(values: &[i32]) -> Vec<u8> {
-    let mut freqs: HashMap<i32, u64> = HashMap::new();
-    for &v in values {
-        *freqs.entry(v).or_insert(0) += 1;
-    }
     let mut out = Vec::new();
     if values.is_empty() {
         out.extend_from_slice(&0u32.to_le_bytes());
         out.extend_from_slice(&0u64.to_le_bytes());
         return out;
     }
+    let freqs = symbol_freqs(values);
     let lens = code_lengths(&freqs);
     out.extend_from_slice(&(lens.len() as u32).to_le_bytes());
     // canonical table: sort by (len, symbol) so decoder derivation matches
-    let mut table = lens.clone();
-    table.sort_unstable_by_key(|&(s, l)| (l, s));
-    for &(sym, len) in &table {
+    let table = canonical_table(&lens);
+    for &(sym, _, len) in &table {
         out.extend_from_slice(&sym.to_le_bytes());
         out.push(len as u8);
     }
     out.extend_from_slice(&(values.len() as u64).to_le_bytes());
-    let codes = canonical_codes(&lens);
+
+    // symbol -> (reversed code, len) lookup: dense over `sym - min` for
+    // compact alphabets, sorted-by-symbol binary search otherwise
+    let min_sym = freqs.first().map(|&(s, _)| s).unwrap();
+    let max_sym = freqs.last().map(|&(s, _)| s).unwrap();
+    let range = (max_sym as i64) - (min_sym as i64) + 1;
     let mut w = BitWriter::new();
-    for &v in values {
-        let (code, len) = codes[&v];
-        if len > 0 {
-            w.write_bits(reverse_bits(code, len), len);
+    if range <= dense_range_cap(freqs.len()) {
+        let mut lut = vec![(0u64, 0u32); range as usize];
+        for &(sym, code, len) in &table {
+            lut[((sym as i64) - (min_sym as i64)) as usize] = (reverse_bits(code, len), len);
+        }
+        for &v in values {
+            let (rc, len) = lut[((v as i64) - (min_sym as i64)) as usize];
+            if len > 0 {
+                w.write_bits(rc, len);
+            }
+        }
+    } else {
+        let mut by_sym: Vec<(i32, u64, u32)> = table
+            .iter()
+            .map(|&(s, c, l)| (s, reverse_bits(c, l), l))
+            .collect();
+        by_sym.sort_unstable_by_key(|&(s, _, _)| s);
+        for &v in values {
+            let i = by_sym
+                .binary_search_by_key(&v, |&(s, _, _)| s)
+                .expect("symbol missing from its own frequency table");
+            let (_, rc, len) = by_sym[i];
+            if len > 0 {
+                w.write_bits(rc, len);
+            }
         }
     }
     out.extend_from_slice(w.as_bytes());
     out
 }
 
-/// Decode a stream produced by [`huffman_encode`]. Returns the values and
-/// the number of bytes consumed.
-pub fn huffman_decode(bytes: &[u8]) -> Result<(Vec<i32>, usize)> {
+/// Reusable decoder state: the parsed `(symbol, len)` table and the
+/// first-level LUT, recycled across calls so per-tile decodes stop
+/// allocating (lives inside the engine's per-thread
+/// [`crate::engine::Scratch`]).
+#[derive(Default)]
+pub struct HuffScratch {
+    table: Vec<(i32, u32)>,
+    lut: Vec<u32>,
+}
+
+/// Fast LSB-first bit cursor over the payload (u64 refill buffer).
+struct Bits<'a> {
+    data: &'a [u8],
+    byte: usize,
+    buf: u64,
+    n: u32,
+}
+
+impl<'a> Bits<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        Self { data, byte: 0, buf: 0, n: 0 }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.n <= 56 && self.byte < self.data.len() {
+            self.buf |= (self.data[self.byte] as u64) << self.n;
+            self.byte += 1;
+            self.n += 8;
+        }
+    }
+
+    /// Low `k` bits of the buffer (zero-padded past the stream end);
+    /// `k <= 57` so the refill always covers it.
+    #[inline]
+    fn peek(&mut self, k: u32) -> u64 {
+        if self.n < k {
+            self.refill();
+        }
+        self.buf & ((1u64 << k) - 1)
+    }
+
+    #[inline]
+    fn consume(&mut self, k: u32) {
+        debug_assert!(k <= self.n);
+        self.buf >>= k;
+        self.n -= k;
+    }
+
+    #[inline]
+    fn take_bit(&mut self) -> Option<u64> {
+        if self.n == 0 {
+            self.refill();
+            if self.n == 0 {
+                return None;
+            }
+        }
+        let b = self.buf & 1;
+        self.consume(1);
+        Some(b)
+    }
+
+    fn consumed_bits(&self) -> usize {
+        self.byte * 8 - self.n as usize
+    }
+}
+
+/// Parse and validate the stream header. Returns `(n_values, payload
+/// offset)` with the `(symbol, len)` table written into `table`. The
+/// declared table size is checked against the bytes present *before* it
+/// sizes the allocation (untrusted input).
+fn read_header(
+    bytes: &[u8],
+    max_values: usize,
+    table: &mut Vec<(i32, u32)>,
+) -> Result<(usize, usize)> {
     ensure!(bytes.len() >= 4, "huffman: truncated header");
     let n_sym = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
-    let mut off = 4;
-    let mut table: Vec<(i32, u32)> = Vec::with_capacity(n_sym);
-    ensure!(bytes.len() >= off + n_sym * 5 + 8, "huffman: truncated table");
+    let mut off = 4usize;
+    let need = n_sym
+        .checked_mul(5)
+        .and_then(|t| t.checked_add(off + 8))
+        .ok_or_else(|| anyhow::anyhow!("huffman: table length overflow"))?;
+    ensure!(bytes.len() >= need, "huffman: truncated table");
+    table.clear();
+    table.reserve(n_sym);
     for _ in 0..n_sym {
         let sym = i32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
         let len = bytes[off + 4] as u32;
         table.push((sym, len));
         off += 5;
     }
-    let n_vals = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+    let n_vals = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
     off += 8;
+    let n_vals = usize::try_from(n_vals)
+        .map_err(|_| anyhow::anyhow!("huffman: value count overflow"))?;
+    ensure!(
+        n_vals <= max_values,
+        "huffman: declared count {n_vals} exceeds cap {max_values}"
+    );
+    Ok((n_vals, off))
+}
+
+/// Decode a stream produced by [`huffman_encode`]. Returns the values and
+/// the number of bytes consumed.
+pub fn huffman_decode(bytes: &[u8]) -> Result<(Vec<i32>, usize)> {
+    let mut out = Vec::new();
+    let mut hs = HuffScratch::default();
+    let used = huffman_decode_capped(bytes, MAX_VALUES_DEFAULT, &mut out, &mut hs)?;
+    Ok((out, used))
+}
+
+/// [`huffman_decode`] into reusable buffers (the per-tile hot path):
+/// decoded values land in `out` (cleared first), table/LUT state in
+/// `hs`. Returns the bytes consumed.
+pub fn huffman_decode_into(
+    bytes: &[u8],
+    out: &mut Vec<i32>,
+    hs: &mut HuffScratch,
+) -> Result<usize> {
+    huffman_decode_capped(bytes, MAX_VALUES_DEFAULT, out, hs)
+}
+
+/// [`huffman_decode_into`] with an explicit cap on the declared value
+/// count — callers that know the real geometry pass a tight cap so a
+/// corrupt count cannot size an allocation.
+pub fn huffman_decode_capped(
+    bytes: &[u8],
+    max_values: usize,
+    out: &mut Vec<i32>,
+    hs: &mut HuffScratch,
+) -> Result<usize> {
+    out.clear();
+    let HuffScratch { table, lut } = hs;
+    let (n_vals, off) = read_header(bytes, max_values, table)?;
+    if n_vals == 0 {
+        return Ok(off);
+    }
+    if table.len() == 1 {
+        // degenerate: all values are the single symbol
+        out.resize(n_vals, table[0].0);
+        return Ok(off);
+    }
+    ensure!(!table.is_empty(), "huffman: empty table with {n_vals} values");
+    // every value consumes at least one bit
+    ensure!(
+        n_vals <= (bytes.len() - off).saturating_mul(8),
+        "huffman: declared count {n_vals} exceeds payload bits"
+    );
+    for &(_, len) in table.iter() {
+        ensure!(
+            (1..=MAX_CODE_LEN).contains(&len),
+            "huffman: invalid code length {len}"
+        );
+    }
+    table.sort_unstable_by_key(|&(s, l)| (l, s));
+
+    // canonical per-length metadata: codes of length L are
+    // first_code[L] .. first_code[L] + count[L], mapping onto table
+    // entries first_idx[L] ..
+    const L: usize = MAX_CODE_LEN as usize + 1;
+    let mut count = [0u64; L];
+    for &(_, len) in table.iter() {
+        count[len as usize] += 1;
+    }
+    let mut first_code = [0u64; L];
+    let mut first_idx = [0usize; L];
+    let mut code = 0u64;
+    let mut idx = 0usize;
+    let mut max_len = 0u32;
+    for len in 1..L {
+        first_code[len] = code;
+        first_idx[len] = idx;
+        let c = count[len];
+        if c > 0 {
+            ensure!((code + (c - 1)) >> len == 0, "huffman: corrupt code table");
+            max_len = len as u32;
+        }
+        idx += c as usize;
+        code = (code + c) << 1;
+    }
+
+    // first-level LUT: for every lut_bits-wide (LSB-first) window, the
+    // (table index, len) of the code occupying its low bits; u32::MAX
+    // marks codes longer than the LUT (resolved by the canonical walk)
+    let lut_bits = max_len.min(LUT_BITS);
+    let lut_size = 1usize << lut_bits;
+    lut.clear();
+    lut.resize(lut_size, u32::MAX);
+    for (i, &(_, len)) in table.iter().enumerate() {
+        if len > lut_bits || i >= (1 << 26) {
+            continue;
+        }
+        let code = first_code[len as usize] + (i - first_idx[len as usize]) as u64;
+        let rev = reverse_bits(code, len) as usize;
+        let entry = ((i as u32) << 6) | len;
+        let step = 1usize << len;
+        let mut j = rev;
+        while j < lut_size {
+            lut[j] = entry;
+            j += step;
+        }
+    }
+
+    let payload = &bytes[off..];
+    let mut bits = Bits::new(payload);
+    out.reserve(n_vals);
+    for _ in 0..n_vals {
+        let entry = lut[bits.peek(lut_bits) as usize];
+        if entry != u32::MAX {
+            let len = entry & 63;
+            ensure!(len <= bits.n, "huffman: bitstream underrun");
+            bits.consume(len);
+            out.push(table[(entry >> 6) as usize].0);
+            continue;
+        }
+        // rare: code longer than the LUT — canonical bit-at-a-time walk
+        let mut code = 0u64;
+        let mut found = false;
+        for len in 1..=max_len {
+            let Some(bit) = bits.take_bit() else {
+                bail!("huffman: bitstream underrun");
+            };
+            code = (code << 1) | bit;
+            let l = len as usize;
+            if count[l] > 0 && code >= first_code[l] && code - first_code[l] < count[l] {
+                out.push(table[first_idx[l] + (code - first_code[l]) as usize].0);
+                found = true;
+                break;
+            }
+        }
+        ensure!(found, "huffman: invalid code in stream");
+    }
+    Ok(off + bits.consumed_bits().div_ceil(8))
+}
+
+/// The pre-overhaul bit-at-a-time decoder (one `(len, code)` lookup per
+/// bit), kept as the oracle for the LUT-equivalence tests and the
+/// decode-speedup ratio in the `coder_throughput` bench. Do not use on
+/// hot paths.
+#[doc(hidden)]
+pub fn huffman_decode_bitwise(bytes: &[u8]) -> Result<(Vec<i32>, usize)> {
+    let mut table = Vec::new();
+    let (n_vals, off) = read_header(bytes, MAX_VALUES_DEFAULT, &mut table)?;
     if n_vals == 0 {
         return Ok((vec![], off));
     }
-    if n_sym == 1 {
-        // degenerate: all values are the single symbol
+    if table.len() == 1 {
         return Ok((vec![table[0].0; n_vals], off));
     }
-    // rebuild canonical codes; decode via a (len-bucketed) lookup
-    let codes = canonical_codes(&table);
-    // invert: sorted by (len, canonical code) for sequential decode
-    let mut dec: HashMap<(u32, u64), i32> = HashMap::with_capacity(codes.len());
-    let mut max_len = 0;
-    for (&sym, &(code, len)) in &codes {
-        dec.insert((len, code), sym);
-        max_len = max_len.max(len);
-    }
+    ensure!(!table.is_empty(), "huffman: empty table with {n_vals} values");
+    // rebuild canonical codes; decode via a sorted (len, code) lookup
+    let codes = canonical_table(&table);
+    let mut dec: Vec<((u32, u64), i32)> =
+        codes.iter().map(|&(sym, code, len)| ((len, code), sym)).collect();
+    dec.sort_unstable_by_key(|&(key, _)| key);
+    let max_len = codes.iter().map(|&(_, _, len)| len).max().unwrap_or(0);
     let payload = &bytes[off..];
     let mut r = BitReader::new(payload);
-    let mut out = Vec::with_capacity(n_vals);
+    let mut out = Vec::with_capacity(n_vals.min(1 << 20));
     'outer: for _ in 0..n_vals {
         let mut code = 0u64;
         for len in 1..=max_len {
@@ -183,8 +480,8 @@ pub fn huffman_decode(bytes: &[u8]) -> Result<(Vec<i32>, usize)> {
                 bail!("huffman: bitstream underrun");
             };
             code = (code << 1) | bit as u64;
-            if let Some(&sym) = dec.get(&(len, code)) {
-                out.push(sym);
+            if let Ok(i) = dec.binary_search_by_key(&(len, code), |&(key, _)| key) {
+                out.push(dec[i].1);
                 continue 'outer;
             }
         }
@@ -192,6 +489,18 @@ pub fn huffman_decode(bytes: &[u8]) -> Result<(Vec<i32>, usize)> {
     }
     let consumed = off + r.bit_pos().div_ceil(8);
     Ok((out, consumed))
+}
+
+/// Byte layout of one stream for `cli info` diagnostics:
+/// `(table_bytes, payload_bytes, n_values)` where `table_bytes` covers
+/// the serialized (symbol, len) pairs and `payload_bytes` the coded
+/// bits; the fixed framing (u32 count + u64 n_values) is neither.
+/// Reads only the header — nothing is decoded.
+pub fn huffman_stream_layout(bytes: &[u8]) -> Result<(usize, usize, usize)> {
+    let mut table = Vec::new();
+    let (n_vals, off) = read_header(bytes, usize::MAX, &mut table)?;
+    let table_bytes = table.len() * 5;
+    Ok((table_bytes, bytes.len().saturating_sub(off), n_vals))
 }
 
 #[cfg(test)]
@@ -204,6 +513,12 @@ mod tests {
         let (dec, used) = huffman_decode(&enc).unwrap();
         assert_eq!(dec, vals);
         assert_eq!(used, enc.len());
+        // the bitwise oracle agrees on values and consumed bytes
+        let (dec2, used2) = huffman_decode_bitwise(&enc).unwrap();
+        assert_eq!(dec2, vals);
+        assert_eq!(used2, used);
+        // and the size accountant predicts the exact encoded size
+        assert_eq!(huffman_encoded_size(vals), enc.len());
     }
 
     #[test]
@@ -244,6 +559,17 @@ mod tests {
     }
 
     #[test]
+    fn wide_alphabet_exercises_long_codes() {
+        // tens of thousands of near-distinct symbols force code lengths
+        // past LUT_BITS, covering the canonical fallback walk
+        let mut rng = Rng::new(11);
+        let vals: Vec<i32> = (0..60_000)
+            .map(|_| (rng.next_u64() % 40_000) as i32 - 20_000)
+            .collect();
+        round_trip(&vals);
+    }
+
+    #[test]
     fn extreme_symbol_values() {
         round_trip(&[i32::MAX, i32::MIN, 0, i32::MAX, -1, 1]);
     }
@@ -270,6 +596,43 @@ mod tests {
     }
 
     #[test]
+    fn hostile_counts_error_before_allocating() {
+        // table count far beyond the bytes present
+        let mut s = Vec::new();
+        s.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.extend_from_slice(&[0u8; 64]);
+        assert!(huffman_decode(&s).is_err());
+        // degenerate single-symbol stream claiming u64::MAX values
+        let mut s = Vec::new();
+        s.extend_from_slice(&1u32.to_le_bytes());
+        s.extend_from_slice(&7i32.to_le_bytes());
+        s.push(0);
+        s.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(huffman_decode(&s).is_err());
+        // a tight explicit cap rejects a count the default cap allows
+        let enc = huffman_encode(&[3; 100]);
+        let mut out = Vec::new();
+        let mut hs = HuffScratch::default();
+        assert!(huffman_decode_capped(&enc, 99, &mut out, &mut hs).is_err());
+        assert!(huffman_decode_capped(&enc, 100, &mut out, &mut hs).is_ok());
+        assert_eq!(out, vec![3; 100]);
+    }
+
+    #[test]
+    fn scratch_reuse_decodes_repeatedly() {
+        let mut hs = HuffScratch::default();
+        let mut out = Vec::new();
+        for seed in 0..4u64 {
+            let mut rng = Rng::new(seed + 1);
+            let vals: Vec<i32> = (0..3000).map(|_| (rng.normal() * 4.0) as i32).collect();
+            let enc = huffman_encode(&vals);
+            let used = huffman_decode_into(&enc, &mut out, &mut hs).unwrap();
+            assert_eq!(out, vals);
+            assert_eq!(used, enc.len());
+        }
+    }
+
+    #[test]
     fn near_optimal_for_skewed_data() {
         // H(p) for p = [0.9, 0.05, 0.05] ≈ 0.569 bits; huffman gives ~1.1
         let mut vals = vec![0i32; 9000];
@@ -280,5 +643,15 @@ mod tests {
         let enc = huffman_encode(&vals);
         let bits_per_sym = (enc.len() * 8) as f64 / vals.len() as f64;
         assert!(bits_per_sym < 1.3, "bits/sym = {bits_per_sym}");
+    }
+
+    #[test]
+    fn stream_layout_reports_table_and_payload_split() {
+        let vals = vec![0, 0, 1, 0, 2, 0, 0, 1];
+        let enc = huffman_encode(&vals);
+        let (table, payload, n) = huffman_stream_layout(&enc).unwrap();
+        assert_eq!(n, vals.len());
+        assert_eq!(table, 3 * 5); // symbols 0, 1, 2
+        assert_eq!(4 + table + 8 + payload, enc.len());
     }
 }

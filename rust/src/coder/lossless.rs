@@ -25,17 +25,62 @@
 //!   0xB4 | varint raw_len | varint n_chunks |
 //!   n x ( varint chunk_compressed_len | 0xB3 stream )
 //! ```
+//!
+//! ## The symbol container (quantized-stream entropy framing)
+//!
+//! The baselines' quantized i32 code streams go through
+//! [`compress_symbols`] / [`decompress_symbols`], which extend the same
+//! one-byte magic dispatch with two symbol-level modes:
+//!
+//! * **Plain** (magic 0xB3/0xB4): `lossless(huffman(values))` — byte
+//!   identical to the pre-overhaul framing, and the only mode older
+//!   archives contain, so every existing stream keeps decoding.
+//! * **Zero-run** (magic [`MAGIC_ZRUN`] = 0xB5): residual tiles are
+//!   heavily zero-peaked, and plain Huffman pays ≥ 1 bit per zero. The
+//!   stream is RLE0-transformed first — a run of L zeros becomes the
+//!   single symbol `-L`, a nonzero literal v becomes `zigzag(v) ≥ 0` —
+//!   and one Huffman table covers both, so a run costs one code instead
+//!   of L. Layout: `0xB5 | u64 n_values | huffman(transformed)`.
+//!   Literals are capped at ±2^29 so the zigzag stays in i32; streams
+//!   carrying wider symbols (e.g. the sz3 `UNPRED` sentinel) simply stay
+//!   plain.
+//! * **Constant** (magic [`MAGIC_CONST`] = 0xB6): an all-same stream
+//!   (the all-zero residual tile, overwhelmingly) collapses to
+//!   `0xB6 | varint n_values | i32 value` — no table at all.
+//!
+//! Mode selection is automatic: a contiguous ≤ 4 Ki-symbol window is
+//! sized both ways ([`crate::coder::huffman_encoded_size`], with the
+//! coded payload scaled to the stream length and the table kept fixed)
+//! and zero-run is taken only when it beats plain by ≥ 10% (hysteresis
+//! for LZSS's own gains on sparse bitstreams). [`with_symbol_mode`]
+//! forces a mode thread-locally for A/B tests and benches (combine with
+//! `with_thread_limit(1)` so pool workers inherit it).
 
+use std::cell::Cell;
+
+use super::freq::symbol_freqs;
+use super::huffman::{
+    huffman_decode_capped, huffman_encode, huffman_encoded_size, huffman_stream_layout,
+    HuffScratch,
+};
 use crate::engine::Executor;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 
 const MAGIC_LZ: u8 = 0xB3;
 const MAGIC_LZ_CHUNKED: u8 = 0xB4;
+/// Symbol-container magic: zero-run (RLE0 + zigzag) coded stream.
+pub const MAGIC_ZRUN: u8 = 0xB5;
+/// Symbol-container magic: constant (all-same) stream.
+pub const MAGIC_CONST: u8 = 0xB6;
 const MIN_MATCH: usize = 4;
 const MAX_DIST: usize = 65_535;
 const HASH_BITS: u32 = 15;
 const MAX_CHAIN: usize = 64;
+
+/// Largest literal magnitude the zero-run transform can carry (zigzag
+/// must stay inside i32).
+const ZRUN_MAX_ABS: i32 = 1 << 29;
 
 /// Input-chunk size of the parallel container. Each chunk restarts the
 /// LZ window, trading a sliver of ratio for block parallelism.
@@ -223,15 +268,27 @@ fn lossless_compress_single(data: &[u8]) -> Result<Vec<u8>> {
 /// plain 0xB3 streams (v1 archives) and chunked 0xB4 containers both
 /// decode.
 pub fn lossless_decompress(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    lossless_decompress_into(data, max_size, &mut out)?;
+    Ok(out)
+}
+
+/// [`lossless_decompress`] into a reusable buffer (cleared first) — the
+/// per-tile hot path skips one allocation per stream.
+pub fn lossless_decompress_into(data: &[u8], max_size: usize, out: &mut Vec<u8>) -> Result<()> {
     ensure!(!data.is_empty(), "lossless: empty input");
     match data[0] {
-        MAGIC_LZ => lossless_decompress_single(data, max_size),
-        MAGIC_LZ_CHUNKED => lossless_decompress_chunked(data, max_size),
+        MAGIC_LZ => lossless_decompress_single_into(data, max_size, out),
+        MAGIC_LZ_CHUNKED => lossless_decompress_chunked_into(data, max_size, out),
         m => bail!("lossless: bad magic {m:#04x}"),
     }
 }
 
-fn lossless_decompress_chunked(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+fn lossless_decompress_chunked_into(
+    data: &[u8],
+    max_size: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     let mut pos = 1usize;
     let raw_len = read_varint(data, &mut pos)? as usize;
     ensure!(
@@ -261,21 +318,28 @@ fn lossless_decompress_chunked(data: &[u8], max_size: usize) -> Result<Vec<u8>> 
     }
     ensure!(pos == data.len(), "lossless: {} trailing bytes", data.len() - pos);
     let parts = Executor::global().try_par_map(spans.len(), |i| {
-        lossless_decompress_single(spans[i], PAR_CHUNK)
+        let mut part = Vec::new();
+        lossless_decompress_single_into(spans[i], PAR_CHUNK, &mut part)?;
+        Ok(part)
     })?;
-    let mut out = Vec::with_capacity(raw_len);
-    for p in parts {
-        out.extend(p);
+    out.clear();
+    out.reserve(raw_len);
+    for p in &parts {
+        out.extend_from_slice(p);
     }
     ensure!(
         out.len() == raw_len,
         "lossless: chunked payload {} != declared {raw_len}",
         out.len()
     );
-    Ok(out)
+    Ok(())
 }
 
-fn lossless_decompress_single(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
+fn lossless_decompress_single_into(
+    data: &[u8],
+    max_size: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
     ensure!(!data.is_empty(), "lossless: empty input");
     if data[0] != MAGIC_LZ {
         bail!("lossless: bad magic {:#04x}", data[0]);
@@ -286,7 +350,8 @@ fn lossless_decompress_single(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
         raw_len <= max_size,
         "lossless: declared size {raw_len} exceeds cap {max_size}"
     );
-    let mut out = Vec::with_capacity(raw_len);
+    out.clear();
+    out.reserve(raw_len);
     while out.len() < raw_len {
         let flags = *data.get(pos).context("lossless: flags truncated")?;
         pos += 1;
@@ -318,7 +383,325 @@ fn lossless_decompress_single(data: &[u8], max_size: usize) -> Result<Vec<u8>> {
         }
     }
     ensure!(pos == data.len(), "lossless: {} trailing bytes", data.len() - pos);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Symbol container: plain (LZSS'd Huffman) / zero-run / constant modes
+// ---------------------------------------------------------------------------
+
+/// Entropy-coding mode of one quantized symbol stream (see the module
+/// docs for the byte layouts and when each wins).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymbolMode {
+    /// `lossless(huffman(values))` — the pre-overhaul framing.
+    Plain,
+    /// RLE0 + zigzag transform under one Huffman table (magic 0xB5).
+    ZeroRun,
+    /// All-same stream: varint count + the value (magic 0xB6).
+    Const,
+}
+
+thread_local! {
+    static SYMBOL_MODE: Cell<Option<SymbolMode>> = const { Cell::new(None) };
+}
+
+/// Force the symbol-container mode for the duration of `f` on this
+/// thread (A/B tests and benches; the previous setting is restored even
+/// if `f` panics). Thread-local: wrap in
+/// [`crate::util::parallel::with_thread_limit`]`(1, ..)` so pool batches
+/// run inline and inherit it. A forced `ZeroRun` still falls back to
+/// plain for streams the transform cannot carry (literals beyond ±2^29).
+pub fn with_symbol_mode<R>(mode: SymbolMode, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<SymbolMode>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            SYMBOL_MODE.with(|m| m.set(prev));
+        }
+    }
+    let _restore = Restore(SYMBOL_MODE.with(|m| m.replace(Some(mode))));
+    f()
+}
+
+#[inline]
+fn zigzag(v: i32) -> u32 {
+    ((v << 1) ^ (v >> 31)) as u32
+}
+
+#[inline]
+fn unzigzag(z: u32) -> i32 {
+    ((z >> 1) as i32) ^ -((z & 1) as i32)
+}
+
+/// RLE0 transform: zero runs become negative run-length symbols, nonzero
+/// literals their (non-negative) zigzag code — one shared alphabet, so a
+/// run of L zeros costs one Huffman code instead of L. `None` when a
+/// literal is outside ±[`ZRUN_MAX_ABS`] (the stream must stay plain).
+/// Caller guarantees `values.len() <= i32::MAX`.
+fn zero_run_transform(values: &[i32]) -> Option<Vec<i32>> {
+    let mut out = Vec::with_capacity(values.len() / 4 + 8);
+    let mut run = 0i64;
+    for &v in values {
+        if v == 0 {
+            run += 1;
+            continue;
+        }
+        if !(-ZRUN_MAX_ABS..=ZRUN_MAX_ABS).contains(&v) {
+            return None;
+        }
+        if run > 0 {
+            out.push(-(run as i32));
+            run = 0;
+        }
+        out.push(zigzag(v) as i32);
+    }
+    if run > 0 {
+        out.push(-(run as i32));
+    }
+    Some(out)
+}
+
+/// Expand an RLE0 stream back to exactly `n_total` symbols.
+fn zero_run_invert(stream: &[i32], n_total: usize, out: &mut Vec<i32>) -> Result<()> {
+    out.reserve(n_total);
+    for &s in stream {
+        if s < 0 {
+            let run = (-(s as i64)) as usize;
+            ensure!(
+                out.len() + run <= n_total,
+                "symbols: zero-run overruns declared count"
+            );
+            out.resize(out.len() + run, 0);
+        } else {
+            ensure!(out.len() < n_total, "symbols: literal overruns declared count");
+            out.push(unzigzag(s as u32));
+        }
+    }
+    ensure!(
+        out.len() == n_total,
+        "symbols: zero-run stream expands to {} of {n_total} values",
+        out.len()
+    );
+    Ok(())
+}
+
+/// Pick the container mode: thread-local override first, then constant
+/// folding, then a size trial on a contiguous sample window with a 10%
+/// hysteresis in plain's favor (plain additionally enjoys LZSS).
+fn select_mode(values: &[i32]) -> SymbolMode {
+    let forced = SYMBOL_MODE.with(|m| m.get());
+    if forced == Some(SymbolMode::Plain) {
+        return SymbolMode::Plain;
+    }
+    if values.is_empty() || values.len() > i32::MAX as usize {
+        return SymbolMode::Plain;
+    }
+    let mut min = i32::MAX;
+    let mut max = i32::MIN;
+    for &v in values {
+        min = min.min(v);
+        max = max.max(v);
+    }
+    let eligible = min >= -ZRUN_MAX_ABS && max <= ZRUN_MAX_ABS;
+    match forced {
+        Some(SymbolMode::ZeroRun) => {
+            return if eligible { SymbolMode::ZeroRun } else { SymbolMode::Plain };
+        }
+        Some(SymbolMode::Const) => {
+            return if min == max { SymbolMode::Const } else { SymbolMode::Plain };
+        }
+        _ => {}
+    }
+    if min == max {
+        return SymbolMode::Const;
+    }
+    if !eligible {
+        return SymbolMode::Plain;
+    }
+    // trial sampling: a contiguous middle window preserves the zero-run
+    // structure (a strided sample would shorten every run by the
+    // stride); tables and framing are fixed costs while the coded
+    // payload scales with the stream length, so the estimate models the
+    // table amortization large streams actually get
+    const SAMPLE: usize = 4096;
+    let (sample, scale): (&[i32], f64) = if values.len() <= SAMPLE {
+        (values, 1.0)
+    } else {
+        let start = (values.len() - SAMPLE) / 2;
+        (&values[start..start + SAMPLE], values.len() as f64 / SAMPLE as f64)
+    };
+    let plain_est = scaled_estimate(sample, scale);
+    let zrun_est = match zero_run_transform(sample) {
+        Some(t) => 9.0 + scaled_estimate(&t, scale),
+        None => f64::INFINITY,
+    };
+    if zrun_est < plain_est * 0.9 {
+        SymbolMode::ZeroRun
+    } else {
+        SymbolMode::Plain
+    }
+}
+
+/// Full-stream Huffman size estimated from a sample: table + framing
+/// are fixed costs, the coded payload scales with the length ratio.
+fn scaled_estimate(sample: &[i32], scale: f64) -> f64 {
+    let distinct = symbol_freqs(sample).len();
+    let total = huffman_encoded_size(sample);
+    let fixed = 12 + distinct * 5;
+    fixed as f64 + total.saturating_sub(fixed) as f64 * scale
+}
+
+/// Entropy-code a quantized symbol stream, selecting the container mode
+/// automatically (see [`SymbolMode`] and the module docs). Decoders
+/// dispatch on the leading magic byte, so plain streams written by older
+/// versions keep decoding unchanged — the new magics appear only in
+/// newly written payloads.
+pub fn compress_symbols(values: &[i32]) -> Result<Vec<u8>> {
+    compress_symbols_mode(values, select_mode(values))
+}
+
+/// [`compress_symbols`] with an explicit mode (tests / benches). Errors
+/// when the stream cannot be represented in the requested mode
+/// (`ZeroRun` with literals beyond ±2^29, `Const` on a non-constant
+/// stream).
+pub fn compress_symbols_mode(values: &[i32], mode: SymbolMode) -> Result<Vec<u8>> {
+    match mode {
+        SymbolMode::Plain => lossless_compress(&huffman_encode(values)),
+        SymbolMode::ZeroRun => {
+            ensure!(
+                values.len() <= i32::MAX as usize,
+                "zero-run mode caps at {} symbols",
+                i32::MAX
+            );
+            let transformed = zero_run_transform(values).ok_or_else(|| {
+                anyhow::anyhow!("zero-run mode cannot carry literals beyond ±2^29")
+            })?;
+            let mut out = Vec::with_capacity(16 + transformed.len());
+            out.push(MAGIC_ZRUN);
+            out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+            out.extend(huffman_encode(&transformed));
+            Ok(out)
+        }
+        SymbolMode::Const => {
+            ensure!(!values.is_empty(), "constant mode needs at least one symbol");
+            let v = values[0];
+            ensure!(
+                values.iter().all(|&x| x == v),
+                "constant mode on a non-constant stream"
+            );
+            let mut out = vec![MAGIC_CONST];
+            push_varint(&mut out, values.len() as u64);
+            out.extend_from_slice(&v.to_le_bytes());
+            Ok(out)
+        }
+    }
+}
+
+/// Reusable decode state for [`decompress_symbols_into`]: Huffman
+/// table/LUT, the RLE0 staging buffer, and the LZSS output buffer — one
+/// per pool thread via [`crate::engine::Scratch`], so per-tile decodes
+/// stop allocating.
+#[derive(Default)]
+pub struct SymbolScratch {
+    huff: HuffScratch,
+    tmp: Vec<i32>,
+    bytes: Vec<u8>,
+}
+
+/// Decode a [`compress_symbols`] stream. `max_values` caps every
+/// declared count before it sizes an allocation.
+pub fn decompress_symbols(data: &[u8], max_values: usize) -> Result<Vec<i32>> {
+    let mut out = Vec::new();
+    decompress_symbols_into(data, max_values, &mut out, &mut SymbolScratch::default())?;
     Ok(out)
+}
+
+/// [`decompress_symbols`] into reusable buffers (cleared first) — the
+/// per-tile hot path.
+pub fn decompress_symbols_into(
+    data: &[u8],
+    max_values: usize,
+    out: &mut Vec<i32>,
+    scratch: &mut SymbolScratch,
+) -> Result<()> {
+    out.clear();
+    ensure!(!data.is_empty(), "symbols: empty input");
+    let SymbolScratch { huff, tmp, bytes } = scratch;
+    match data[0] {
+        MAGIC_LZ | MAGIC_LZ_CHUNKED => {
+            // plain mode: the huffman stream is at most 5 B/table entry +
+            // ~8 B/value; the cap stops a corrupt header from ballooning
+            let cap = max_values.saturating_mul(13).saturating_add(1 << 20);
+            lossless_decompress_into(data, cap, bytes)?;
+            huffman_decode_capped(bytes, max_values, out, huff)?;
+            Ok(())
+        }
+        MAGIC_ZRUN => {
+            ensure!(data.len() >= 9, "symbols: zero-run header truncated");
+            let n = u64::from_le_bytes(data[1..9].try_into().unwrap());
+            let n = usize::try_from(n)
+                .map_err(|_| anyhow::anyhow!("symbols: count overflow"))?;
+            ensure!(
+                n <= max_values,
+                "symbols: declared count {n} exceeds cap {max_values}"
+            );
+            // every transformed symbol expands to >= 1 value
+            let used = huffman_decode_capped(&data[9..], n, tmp, huff)?;
+            ensure!(9 + used == data.len(), "symbols: trailing bytes");
+            zero_run_invert(tmp, n, out)
+        }
+        MAGIC_CONST => {
+            let mut pos = 1usize;
+            let n = read_varint(data, &mut pos)? as usize;
+            ensure!(
+                n <= max_values,
+                "symbols: declared count {n} exceeds cap {max_values}"
+            );
+            ensure!(pos + 4 == data.len(), "symbols: constant container malformed");
+            let v = i32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
+            out.resize(n, v);
+            Ok(())
+        }
+        m => bail!("symbols: bad magic {m:#04x}"),
+    }
+}
+
+/// Byte breakdown of one symbol stream for `cli info`: the mode, the
+/// declared value count, and the Huffman table/payload split. Plain
+/// streams are measured in the entropy domain (after LZSS) — their
+/// compressed split is not byte-attributable; zero-run streams as
+/// stored.
+pub struct SymbolStreamStats {
+    pub mode: &'static str,
+    pub n_values: usize,
+    pub table_bytes: usize,
+    pub symbol_bytes: usize,
+}
+
+/// Inspect a [`compress_symbols`] stream without decoding its values.
+pub fn symbol_stream_stats(data: &[u8], max_values: usize) -> Result<SymbolStreamStats> {
+    ensure!(!data.is_empty(), "symbols: empty input");
+    match data[0] {
+        MAGIC_LZ | MAGIC_LZ_CHUNKED => {
+            let cap = max_values.saturating_mul(13).saturating_add(1 << 20);
+            let huff = lossless_decompress(data, cap)?;
+            let (table_bytes, symbol_bytes, n_values) = huffman_stream_layout(&huff)?;
+            Ok(SymbolStreamStats { mode: "plain", n_values, table_bytes, symbol_bytes })
+        }
+        MAGIC_ZRUN => {
+            ensure!(data.len() >= 9, "symbols: zero-run header truncated");
+            let n_values = u64::from_le_bytes(data[1..9].try_into().unwrap()) as usize;
+            let (table_bytes, symbol_bytes, _) = huffman_stream_layout(&data[9..])?;
+            Ok(SymbolStreamStats { mode: "zero-run", n_values, table_bytes, symbol_bytes })
+        }
+        MAGIC_CONST => {
+            let mut pos = 1usize;
+            let n_values = read_varint(data, &mut pos)? as usize;
+            Ok(SymbolStreamStats { mode: "const", n_values, table_bytes: 0, symbol_bytes: 4 })
+        }
+        m => bail!("symbols: bad magic {m:#04x}"),
+    }
 }
 
 #[cfg(test)]
@@ -455,5 +838,152 @@ mod tests {
         data.extend_from_slice(&block);
         let c = lossless_compress(&data).unwrap();
         assert_eq!(lossless_decompress(&c, data.len()).unwrap(), data);
+    }
+
+    // --- symbol container ------------------------------------------------
+
+    fn peaked_stream(n: usize, seed: u64) -> Vec<i32> {
+        // ~92% zeros, small literal alphabet — residual-tile shaped
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                if rng.below(12) == 0 {
+                    (rng.below(5) as i32) - 2
+                } else {
+                    0
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_run_mode_round_trips_and_shrinks_peaked_streams() {
+        let vals = peaked_stream(32_768, 7);
+        let plain = compress_symbols_mode(&vals, SymbolMode::Plain).unwrap();
+        let zrun = compress_symbols_mode(&vals, SymbolMode::ZeroRun).unwrap();
+        assert_eq!(zrun[0], MAGIC_ZRUN);
+        assert_eq!(decompress_symbols(&plain, vals.len()).unwrap(), vals);
+        assert_eq!(decompress_symbols(&zrun, vals.len()).unwrap(), vals);
+        assert!(
+            (zrun.len() as f64) < plain.len() as f64 * 0.8,
+            "zero-run {} should be >=20% under plain {}",
+            zrun.len(),
+            plain.len()
+        );
+        // auto selection takes the win
+        let auto = compress_symbols(&vals).unwrap();
+        assert_eq!(auto[0], MAGIC_ZRUN);
+    }
+
+    #[test]
+    fn uniform_streams_stay_plain_and_round_trip() {
+        let mut rng = Rng::new(8);
+        let vals: Vec<i32> = (0..8000).map(|_| rng.below(200) as i32 - 100).collect();
+        let auto = compress_symbols(&vals).unwrap();
+        assert!(auto[0] == 0xB3 || auto[0] == 0xB4, "uniform data stays plain");
+        assert_eq!(decompress_symbols(&auto, vals.len()).unwrap(), vals);
+        // forced zero-run still round-trips, it is just bigger
+        let zrun = compress_symbols_mode(&vals, SymbolMode::ZeroRun).unwrap();
+        assert_eq!(decompress_symbols(&zrun, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn constant_streams_collapse_to_a_few_bytes() {
+        let vals = vec![0i32; 10_000];
+        let auto = compress_symbols(&vals).unwrap();
+        assert_eq!(auto[0], MAGIC_CONST);
+        assert!(auto.len() <= 8, "constant container is tiny, got {}", auto.len());
+        assert_eq!(decompress_symbols(&auto, vals.len()).unwrap(), vals);
+        // non-zero constants too
+        let vals = vec![-9i32; 500];
+        let auto = compress_symbols(&vals).unwrap();
+        assert_eq!(auto[0], MAGIC_CONST);
+        assert_eq!(decompress_symbols(&auto, vals.len()).unwrap(), vals);
+    }
+
+    #[test]
+    fn wide_literals_fall_back_to_plain() {
+        // the sz3 UNPRED sentinel (i32::MIN) cannot ride the zigzag
+        let mut vals = peaked_stream(4096, 3);
+        vals[100] = i32::MIN;
+        let auto = compress_symbols(&vals).unwrap();
+        assert!(auto[0] == 0xB3 || auto[0] == 0xB4);
+        assert_eq!(decompress_symbols(&auto, vals.len()).unwrap(), vals);
+        assert!(compress_symbols_mode(&vals, SymbolMode::ZeroRun).is_err());
+        // forced zero-run degrades to plain rather than failing
+        let forced = with_symbol_mode(SymbolMode::ZeroRun, || compress_symbols(&vals).unwrap());
+        assert!(forced[0] == 0xB3 || forced[0] == 0xB4);
+    }
+
+    #[test]
+    fn forced_plain_reproduces_the_legacy_framing() {
+        let vals = peaked_stream(10_000, 5);
+        let legacy = lossless_compress(&huffman_encode(&vals)).unwrap();
+        let forced = with_symbol_mode(SymbolMode::Plain, || compress_symbols(&vals).unwrap());
+        assert_eq!(forced, legacy, "forced plain must match the PR-4 bytes");
+    }
+
+    #[test]
+    fn symbol_container_decode_caps_and_empty() {
+        let vals = peaked_stream(1000, 11);
+        let enc = compress_symbols(&vals).unwrap();
+        assert!(decompress_symbols(&enc, vals.len() - 1).is_err(), "cap enforced");
+        let empty = compress_symbols(&[]).unwrap();
+        assert!(decompress_symbols(&empty, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn symbol_scratch_reuse_across_modes() {
+        let mut scratch = SymbolScratch::default();
+        let mut out = Vec::new();
+        for (i, vals) in [
+            peaked_stream(5000, 1),
+            vec![4i32; 300],
+            (0..2000).map(|i| (i % 17) - 8).collect::<Vec<i32>>(),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let enc = compress_symbols(vals).unwrap();
+            decompress_symbols_into(&enc, vals.len(), &mut out, &mut scratch).unwrap();
+            assert_eq!(&out, vals, "stream {i}");
+        }
+    }
+
+    #[test]
+    fn symbol_stream_stats_report_modes() {
+        let peaked = peaked_stream(32_768, 9);
+        let zrun = compress_symbols_mode(&peaked, SymbolMode::ZeroRun).unwrap();
+        let st = symbol_stream_stats(&zrun, peaked.len()).unwrap();
+        assert_eq!(st.mode, "zero-run");
+        assert_eq!(st.n_values, peaked.len());
+        assert!(st.table_bytes > 0 && st.symbol_bytes > 0);
+        let plain = compress_symbols_mode(&peaked, SymbolMode::Plain).unwrap();
+        let st = symbol_stream_stats(&plain, peaked.len()).unwrap();
+        assert_eq!(st.mode, "plain");
+        assert_eq!(st.n_values, peaked.len());
+        let zeros = vec![0i32; 64];
+        let konst = compress_symbols(&zeros).unwrap();
+        assert_eq!(symbol_stream_stats(&konst, 64).unwrap().mode, "const");
+    }
+
+    #[test]
+    fn zero_run_truncations_and_flips_never_panic() {
+        let vals = peaked_stream(4096, 13);
+        let enc = compress_symbols_mode(&vals, SymbolMode::ZeroRun).unwrap();
+        for cut in 0..enc.len().min(128) {
+            if let Ok(out) = decompress_symbols(&enc[..cut], vals.len()) {
+                assert_eq!(out.len(), vals.len());
+            }
+        }
+        let mut rng = Rng::new(17);
+        for _ in 0..400 {
+            let mut m = enc.clone();
+            let pos = rng.below(m.len());
+            m[pos] ^= 1 << rng.below(8);
+            if let Ok(out) = decompress_symbols(&m, vals.len()) {
+                assert!(out.len() <= vals.len());
+            }
+        }
     }
 }

@@ -7,11 +7,16 @@
 //!   the index-set codec, and the ZFP-like baseline.
 //! * [`indexset`] — Fig. 3 shortest-prefix bitmap encoding of PCA basis
 //!   index sets, concatenated and lossless-compressed.
-//! * [`lossless`] — LZSS lossless backend (in-tree ZSTD substitute).
+//! * [`lossless`] — LZSS lossless backend (in-tree ZSTD substitute) plus
+//!   the symbol container (plain / zero-run / constant modes) the
+//!   baselines' quantized streams ride in.
+//! * [`freq`] — the shared symbol-frequency histogram (dense or
+//!   sort-based, never hashed).
 //! * [`latents`] — latent-row payload codec shared by the hierarchical
 //!   pipeline and the GBAE baseline codec.
 
 pub mod bitstream;
+pub mod freq;
 pub mod huffman;
 pub mod indexset;
 pub mod latents;
@@ -19,8 +24,16 @@ pub mod lossless;
 pub mod quantizer;
 
 pub use bitstream::{BitReader, BitWriter};
-pub use huffman::{huffman_decode, huffman_encode};
+pub use freq::symbol_freqs;
+pub use huffman::{
+    huffman_decode, huffman_decode_bitwise, huffman_decode_capped, huffman_decode_into,
+    huffman_encode, huffman_encoded_size, HuffScratch,
+};
 pub use indexset::{decode_index_sets, encode_index_sets};
 pub use latents::{decode_latent_groups, decode_latents, encode_latent_groups, encode_latents};
-pub use lossless::{lossless_compress, lossless_decompress};
+pub use lossless::{
+    compress_symbols, compress_symbols_mode, decompress_symbols, decompress_symbols_into,
+    lossless_compress, lossless_decompress, symbol_stream_stats, with_symbol_mode, SymbolMode,
+    SymbolScratch, SymbolStreamStats,
+};
 pub use quantizer::Quantizer;

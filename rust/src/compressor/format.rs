@@ -49,6 +49,14 @@
 //! writers stay readable by older readers (forward compatibility), and
 //! v1/v2 archives parse and decompress unchanged (backward
 //! compatibility, pinned by the golden corpus in `tests/golden/`).
+//!
+//! **Entropy-stream framing inside payload sections** (`SZ3B` / `ZFPB`):
+//! the quantized code streams dispatch on a one-byte magic —
+//! 0xB3/0xB4 plain LZSS'd Huffman (the only mode pre-overhaul archives
+//! contain), 0xB5 zero-run, 0xB6 constant (see
+//! [`crate::coder::lossless`]). The new magics appear only in newly
+//! written payloads; every committed golden decodes byte-identically
+//! through the 0xB3/0xB4 path.
 
 use crate::util::json::Value;
 use crate::Result;

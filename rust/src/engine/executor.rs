@@ -51,6 +51,9 @@ pub struct Scratch {
     pub i64_a: Vec<i64>,
     pub i32_a: Vec<i32>,
     pub bytes: Vec<u8>,
+    /// Entropy-stage decode state (Huffman table/LUT + staging buffers),
+    /// reused across per-tile decodes on this thread.
+    pub symbols: crate::coder::lossless::SymbolScratch,
 }
 
 /// Clear + zero-fill a scratch `f32` buffer to `len`, returning the slice.
@@ -365,6 +368,17 @@ impl Executor {
         F: Fn(usize) -> crate::Result<T> + Sync,
     {
         let results = self.par_map(n, f);
+        results.into_iter().collect()
+    }
+
+    /// [`Self::try_par_map`] with the per-thread scratch arena (the tile
+    /// encode/decode hot path).
+    pub fn try_par_map_scratch<T, F>(&self, n: usize, f: F) -> crate::Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, &mut Scratch) -> crate::Result<T> + Sync,
+    {
+        let results = self.par_map_scratch(n, f);
         results.into_iter().collect()
     }
 }

@@ -681,7 +681,9 @@ fn fig9(args: &Args) -> Result<()> {
             let n_codes: usize = s_sets.iter().map(|x| x.len()).sum();
             let s_codes = &codes[cursor..cursor + n_codes];
             cursor += n_codes;
-            let gae_bytes = crate::coder::huffman_encode(s_codes).len()
+            // exact per-species Huffman size via the shared frequency
+            // counter (no per-species bitstream materialized)
+            let gae_bytes = crate::coder::huffman_encoded_size(s_codes)
                 + crate::coder::encode_index_sets(&s_sets, d)?.len();
             let payload = latent_bytes / species + gae_bytes;
             let cr = (per * 4) as f64 / payload.max(1) as f64;

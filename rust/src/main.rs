@@ -64,7 +64,10 @@ COMMANDS:
                          only the intersecting blocks of each chain step
                  info    --in S   timeline, CR, per-step sizes
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
-  info         show artifact manifest + platform
+  info         --in A: per-section byte breakdown of an archive or stream
+               (payload vs index vs framing, plus the entropy table/symbol
+               split for sz3/zfp payloads); without --in: artifact
+               manifest + platform
   help         show this message
 COMMON OPTIONS:
   --artifacts DIR   (default: ./artifacts; only the learned codecs need it)
@@ -581,7 +584,150 @@ fn cmd_stream_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `info --in`: per-section byte breakdown of an archive (payload vs
+/// index vs framing), plus the entropy-stage split (tables vs symbols)
+/// for sz3/zfp payloads — the numbers a ratio regression hides in. For
+/// plain (LZSS-wrapped) streams the table/symbol numbers are measured in
+/// the entropy domain; zero-run/const tiles as stored.
+fn archive_info(path: &str) -> Result<()> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    if bytes.len() >= 4 && &bytes[0..4] == compressor::format::STREAM_MAGIC {
+        return stream_file_info(&bytes);
+    }
+    let archive = Archive::from_bytes(&bytes)?;
+    let codec = archive
+        .header
+        .get("codec")
+        .and_then(|v| v.as_str())
+        .unwrap_or("?")
+        .to_string();
+    println!(
+        "archive: v{}, codec = {}, {} bytes",
+        archive.version(),
+        codec,
+        bytes.len()
+    );
+    let sizes = archive.section_sizes();
+    let mut sections_total = 0usize;
+    for (tag, sz) in &sizes {
+        let base = tag.rsplit('/').next().unwrap_or(tag);
+        let class = if base == compressor::format::BLOCK_INDEX_TAG {
+            "index"
+        } else if compressor::format::CR_SECTIONS.contains(&base) {
+            "payload"
+        } else {
+            "other"
+        };
+        println!("  section {tag}: {sz} bytes [{class}]");
+        sections_total += sz;
+    }
+    // v2 expands nested sections, so the framing delta only adds up for
+    // single-field containers
+    if archive.version() != 2 {
+        println!(
+            "  header + framing: {} bytes",
+            bytes.len().saturating_sub(sections_total)
+        );
+    }
+    entropy_breakdown(&archive, &codec)?;
+    Ok(())
+}
+
+/// The per-tile entropy split of a single-field sz3/zfp archive.
+fn entropy_breakdown(archive: &Archive, codec: &str) -> Result<()> {
+    if archive.version() == 2 || (codec != "sz3" && codec != "zfp") {
+        return Ok(());
+    }
+    let Some(dsv) = archive.header.get("dataset") else {
+        return Ok(());
+    };
+    let Ok(ds) = config::DatasetConfig::from_json(dsv) else {
+        return Ok(());
+    };
+    let tag = if codec == "sz3" { "SZ3B" } else { "ZFPB" };
+    let payload = archive.section(tag)?;
+    let index = archive.block_index()?;
+    let (spans, cap): (Vec<(usize, usize)>, usize) = match &index {
+        Some(ix) => {
+            // untrusted index: bound tile dims and byte spans against
+            // the header geometry before slicing the payload
+            ix.validate(&ds.dims, payload.len())?;
+            (
+                (0..ix.entries.len())
+                    .map(|i| ix.entry(i))
+                    .collect::<Result<_>>()?,
+                ix.tile.iter().product(),
+            )
+        }
+        None => (vec![(0, payload.len())], ds.total_points()),
+    };
+    let (mut n_plain, mut n_zrun, mut n_const) = (0usize, 0usize, 0usize);
+    let (mut table_b, mut sym_b, mut aux_b, mut frame_b) = (0usize, 0usize, 0usize, 0usize);
+    for &(off, len) in &spans {
+        let b = if codec == "sz3" {
+            attn_reduce::baselines::Sz3Like::stream_breakdown(&payload[off..off + len], cap)?
+        } else {
+            attn_reduce::baselines::ZfpLike::stream_breakdown(&payload[off..off + len], cap)?
+        };
+        match b.mode {
+            "plain" => n_plain += 1,
+            "zero-run" => n_zrun += 1,
+            _ => n_const += 1,
+        }
+        table_b += b.table_bytes;
+        sym_b += b.symbol_bytes;
+        aux_b += b.aux_bytes;
+        frame_b += b.framing_bytes;
+    }
+    println!(
+        "entropy: {} tiles (plain {n_plain}, zero-run {n_zrun}, const {n_const}): \
+         tables {table_b} B, symbols {sym_b} B, raw/exps {aux_b} B, tile framing {frame_b} B",
+        spans.len()
+    );
+    Ok(())
+}
+
+/// `info --in` on a v4 temporal stream: record/index/framing byte classes.
+fn stream_file_info(bytes: &[u8]) -> Result<()> {
+    let (header, start) = compressor::format::parse_stream_header(bytes)?;
+    let codec = header.get("codec").and_then(|v| v.as_str()).unwrap_or("?");
+    let mut off = start;
+    let (mut steps, mut keyframes) = (0usize, 0usize);
+    let (mut record_payload, mut tidx_bytes) = (0usize, 0usize);
+    let mut framing = start;
+    while off + 12 <= bytes.len() {
+        let Ok((tag, _, len, next)) = compressor::format::parse_stream_record(bytes, off) else {
+            break;
+        };
+        if tag == *compressor::format::STREAM_KEY_TAG {
+            steps += 1;
+            keyframes += 1;
+            record_payload += len;
+        } else if tag == *compressor::format::STREAM_RES_TAG {
+            steps += 1;
+            record_payload += len;
+        } else if tag == *compressor::format::STREAM_TIDX_TAG {
+            tidx_bytes += len;
+        }
+        framing += 12;
+        off = next;
+    }
+    framing += bytes.len() - off; // footer + any trailing partial record
+    println!(
+        "stream: v4, codec = {codec}, {} bytes, {steps} steps ({keyframes} keyframes)",
+        bytes.len()
+    );
+    println!("  step records: {record_payload} bytes [payload]");
+    println!("  timeline (TIDX): {tidx_bytes} bytes [index]");
+    println!("  header + framing: {framing} bytes");
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("in") {
+        return archive_info(path);
+    }
     let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
     println!("platform: {}", rt.platform());
     println!("jax: {}", rt.manifest.jax_version);

@@ -13,6 +13,16 @@
 //! video terms). GOPs share no state, which is what
 //! [`crate::stream::StreamWriter::append_frames`] exploits to schedule
 //! whole GOPs across the [`crate::engine::Executor`] worker pool.
+//!
+//! Residual tiles are heavily zero-peaked (most of a frame changes by
+//! less than the bound between steps), so their per-tile entropy streams
+//! ride the symbol container's zero-run / constant modes
+//! ([`crate::coder::compress_symbols`]) whenever trial sampling says
+//! they beat plain Huffman+LZSS — an all-zero residual tile costs a few
+//! bytes instead of a full Huffman table. Keyframes keep selecting plain
+//! for their dense code streams, and the choice is per tile and
+//! data-deterministic, so streams stay byte-identical at every thread
+//! count.
 
 use crate::codec::{Codec, ErrorBound};
 use crate::tensor::Tensor;

@@ -352,6 +352,59 @@ fn stream_cli_appends_incrementally_and_extracts_regions() {
 }
 
 #[test]
+fn info_reports_per_section_byte_breakdown() {
+    let archive_p = tmp("info_field.ardc");
+
+    // e3sm smoke [24, 32, 32] with ae_block [6, 16, 16] -> 16 tiles
+    let out = bin()
+        .args([
+            "compress", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset", "e3sm",
+            "--scale", "smoke", "--out",
+        ])
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin().args(["info", "--in"]).arg(&archive_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // pinned format: archive line, per-section classes, framing delta,
+    // and the per-tile entropy split
+    assert!(stdout.contains("archive: v3, codec = sz3"), "{stdout}");
+    assert!(stdout.contains("section SZ3B:"), "{stdout}");
+    assert!(stdout.contains("bytes [payload]"), "{stdout}");
+    assert!(stdout.contains("section BIDX:"), "{stdout}");
+    assert!(stdout.contains("bytes [index]"), "{stdout}");
+    assert!(stdout.contains("header + framing:"), "{stdout}");
+    assert!(stdout.contains("entropy: 16 tiles (plain "), "{stdout}");
+    assert!(stdout.contains("tables "), "{stdout}");
+    assert!(stdout.contains("symbols "), "{stdout}");
+
+    // the same flag on a v4 stream reports record/index/framing classes
+    let stream_p = tmp("info_stream.tstr");
+    std::fs::remove_file(&stream_p).ok();
+    let out = bin()
+        .args([
+            "stream", "append", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset",
+            "e3sm", "--scale", "smoke", "--keyint", "2", "--steps", "4", "--out",
+        ])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin().args(["info", "--in"]).arg(&stream_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("stream: v4, codec = sz3"), "{stdout}");
+    assert!(stdout.contains("4 steps (2 keyframes)"), "{stdout}");
+    assert!(stdout.contains("step records:"), "{stdout}");
+    assert!(stdout.contains("bytes [payload]"), "{stdout}");
+    assert!(stdout.contains("timeline (TIDX):"), "{stdout}");
+    assert!(stdout.contains("bytes [index]"), "{stdout}");
+}
+
+#[test]
 fn threads_flag_rejects_garbage() {
     let out = bin()
         .args(["compress", "--codec", "sz3", "--scale", "smoke", "--threads", "zero"])

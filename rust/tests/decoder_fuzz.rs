@@ -13,7 +13,8 @@
 use attn_reduce::baselines::{Sz3Like, ZfpLike};
 use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound, Sz3Codec};
 use attn_reduce::coder::{
-    huffman_decode, huffman_encode, lossless_compress, lossless_decompress,
+    compress_symbols, compress_symbols_mode, decompress_symbols, huffman_decode,
+    huffman_encode, lossless_compress, lossless_decompress, SymbolMode,
 };
 use attn_reduce::compressor::Archive;
 use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
@@ -105,6 +106,67 @@ fn huffman_bitstream_fuzz_never_panics() {
         let pos = rng.below(m.len());
         m[pos] ^= 1 << rng.below(8);
         let _ = huffman_decode(&m); // must not panic
+    }
+}
+
+#[test]
+fn huffman_hostile_counts_error_before_allocating() {
+    // a declared table size far beyond the bytes present must be a clean
+    // error before `Vec::with_capacity` can run (the old decoder
+    // allocated first and only then noticed the truncation)
+    let mut s = Vec::new();
+    s.extend_from_slice(&u32::MAX.to_le_bytes());
+    s.extend_from_slice(&[0u8; 256]);
+    assert!(huffman_decode(&s).is_err());
+    // a degenerate single-symbol stream claiming u64::MAX values must
+    // not size the output allocation either
+    let mut s = Vec::new();
+    s.extend_from_slice(&1u32.to_le_bytes());
+    s.extend_from_slice(&7i32.to_le_bytes());
+    s.push(0);
+    s.extend_from_slice(&u64::MAX.to_le_bytes());
+    assert!(huffman_decode(&s).is_err());
+}
+
+#[test]
+fn zero_run_container_truncations_and_flips_never_panic() {
+    // a residual-shaped stream that selects the 0xB5 zero-run container
+    let mut rng = Rng::new(71);
+    let values: Vec<i32> = (0..8000)
+        .map(|_| if rng.below(10) == 0 { (rng.below(7) as i32) - 3 } else { 0 })
+        .collect();
+    let enc = compress_symbols_mode(&values, SymbolMode::ZeroRun).unwrap();
+    assert_eq!(enc[0], 0xB5);
+    // truncations: structured Err, or a decode whose expansion still
+    // matched the declared count — never a panic
+    for cut in cuts(enc.len()) {
+        if let Ok(out) = decompress_symbols(&enc[..cut], values.len()) {
+            assert_eq!(out.len(), values.len());
+        }
+    }
+    // bit flips across the count, table, and transformed bitstream
+    for _ in 0..500 {
+        let mut m = enc.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        if let Ok(out) = decompress_symbols(&m, values.len()) {
+            assert!(out.len() <= values.len());
+        }
+    }
+    // the constant container (0xB6) under the same sweeps
+    let zeros = vec![0i32; 4096];
+    let konst = compress_symbols(&zeros).unwrap();
+    assert_eq!(konst[0], 0xB6);
+    for cut in 0..konst.len() {
+        let _ = decompress_symbols(&konst[..cut], 4096);
+    }
+    for _ in 0..100 {
+        let mut m = konst.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        if let Ok(out) = decompress_symbols(&m, 4096) {
+            assert!(out.len() <= 4096);
+        }
     }
 }
 

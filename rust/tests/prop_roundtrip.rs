@@ -207,6 +207,73 @@ fn fieldset_random_field_counts_roundtrip_and_region() {
     }
 }
 
+/// Entropy-mode property: forcing the zero-run symbol container must be
+/// bit-equivalent to plain end to end — same reconstructions out of both
+/// archives, across random geometry and all four bounds, for both
+/// pure-rust codecs. (`with_symbol_mode` is thread-local, so the whole
+/// leg runs under `with_thread_limit(1)` — pool batches execute inline
+/// and inherit the forced mode.)
+#[test]
+fn entropy_mode_forcing_is_bit_equivalent_end_to_end() {
+    use attn_reduce::coder::{with_symbol_mode, SymbolMode};
+    use attn_reduce::util::parallel::with_thread_limit;
+    let seed = seed_from_env(DEFAULT_SEED);
+    with_thread_limit(1, || {
+        let mut cg = CaseGen::new(seed ^ 0x2E80);
+        for case in 0..4 {
+            let cfg = cg.dataset();
+            let field = cg.field(&cfg.dims);
+            let bound = bounds_for(&field, cfg.gae_block_len())[case % 4];
+            let codecs: [(&str, Box<dyn Codec>); 2] = [
+                ("sz3", Box::new(attn_reduce::codec::Sz3Codec::new(cfg.clone()))),
+                ("zfp", Box::new(attn_reduce::codec::ZfpCodec::new(cfg.clone()))),
+            ];
+            for (label, codec) in &codecs {
+                // zfp runs its certification search per compress; keep
+                // its legs to the cheap bounds
+                if *label == "zfp" && !matches!(bound, ErrorBound::None) && case != 1 {
+                    continue;
+                }
+                let ctx = format!("[entropy-mode {label}, seed {seed}, case {case}]");
+                let plain = with_symbol_mode(SymbolMode::Plain, || codec.compress(&field, &bound));
+                let plain = plain.unwrap_or_else(|e| panic!("{ctx} plain: {e:#}"));
+                let zrun = with_symbol_mode(SymbolMode::ZeroRun, || codec.compress(&field, &bound));
+                let zrun = zrun.unwrap_or_else(|e| panic!("{ctx} zero-run: {e:#}"));
+                let plain_parsed = Archive::from_bytes(&plain.to_bytes()).unwrap();
+                let zrun_parsed = Archive::from_bytes(&zrun.to_bytes()).unwrap();
+                let d_plain = codec.decompress(&plain_parsed).unwrap();
+                let d_zrun = codec.decompress(&zrun_parsed).unwrap();
+                let identical = d_plain
+                    .data()
+                    .iter()
+                    .zip(d_zrun.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(
+                    identical,
+                    "{ctx} zero-run decode differs from plain (dims {:?}, bound {bound})",
+                    cfg.dims
+                );
+                // auto selection also reconstructs identically, and never
+                // regresses the payload beyond estimate noise
+                let auto = codec.compress(&field, &bound).unwrap();
+                let d_auto = codec.decompress(&auto).unwrap();
+                let auto_identical = d_auto
+                    .data()
+                    .iter()
+                    .zip(d_plain.data())
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(auto_identical, "{ctx} auto decode differs");
+                let auto_payload = auto.cr_payload_bytes();
+                let plain_payload = plain.cr_payload_bytes();
+                assert!(
+                    auto_payload as f64 <= plain_payload as f64 * 1.25,
+                    "{ctx} auto payload {auto_payload} regressed past plain {plain_payload}"
+                );
+            }
+        }
+    });
+}
+
 // --- temporal streams: keyframe/residual coding over random geometry ---
 
 /// With K = 1 every step is a keyframe, and a stream must degenerate to
