@@ -1,0 +1,208 @@
+//! Serving-layer throughput: request rate and latency percentiles for
+//! `(step, region)` extraction over HTTP, cold (cache misses decode the
+//! keyframe) vs warm (hits pay only the residual chain). The keyframe
+//! payload accounting in the report is the acceptance criterion made
+//! measurable: the warm pass must decode zero keyframe payload bytes.
+//! Emits `BENCH_serve.json` next to the CWD.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+//! (`--smoke` or `BENCH_FAST=1` shrinks to smoke scale for CI.)
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
+use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
+use attn_reduce::data::timeseries;
+use attn_reduce::serve::{ServeConfig, Server};
+use attn_reduce::stream::StreamWriter;
+use attn_reduce::util::json::{self, Value};
+use attn_reduce::util::parallel::num_threads;
+
+/// One GET; returns (body bytes, keyframe payload bytes this request
+/// decoded, latency in µs).
+fn get(addr: SocketAddr, target: &str) -> (usize, usize, f64) {
+    let t0 = Instant::now();
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(format!("GET {target} HTTP/1.1\r\nhost: bench\r\n\r\n").as_bytes())
+        .expect("write");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read");
+    let us = t0.elapsed().as_secs_f64() * 1e6;
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response header");
+    let head = String::from_utf8_lossy(&raw[..split]).into_owned();
+    assert!(head.starts_with("HTTP/1.1 200"), "request failed: {head}");
+    let kf_bytes = head
+        .lines()
+        .find_map(|l| l.strip_prefix("x-keyframe-payload-bytes: "))
+        .map(|v| v.trim().parse().expect("kf header"))
+        .unwrap_or(0);
+    (raw.len() - split - 4, kf_bytes, us)
+}
+
+fn get_body(addr: SocketAddr, target: &str) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.write_all(format!("GET {target} HTTP/1.1\r\nhost: bench\r\n\r\n").as_bytes())
+        .expect("write");
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).expect("read");
+    let split = raw.windows(4).position(|w| w == b"\r\n\r\n").expect("split");
+    String::from_utf8_lossy(&raw[split + 4..]).into_owned()
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted_us.len() - 1) as f64 * p).round() as usize;
+    sorted_us[i]
+}
+
+fn pass(addr: SocketAddr, targets: &[String]) -> (Vec<f64>, usize, usize, f64) {
+    let t0 = Instant::now();
+    let mut lat = Vec::with_capacity(targets.len());
+    let (mut bytes, mut kf) = (0usize, 0usize);
+    for t in targets {
+        let (b, k, us) = get(addr, t);
+        bytes += b;
+        kf += k;
+        lat.push(us);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lat, bytes, kf, secs)
+}
+
+fn main() {
+    let smoke = std::env::var_os("BENCH_FAST").is_some()
+        || std::env::args().any(|a| a == "--smoke");
+    let (scale, steps, warm_rounds) = if smoke {
+        (Scale::Smoke, 16usize, 3usize)
+    } else {
+        (Scale::Bench, 64, 10)
+    };
+    std::env::set_var("ATTN_REDUCE_QUIET", "1");
+
+    // fixture: one sz3 stream, keyint 4 (every request chains residuals)
+    let cfg = stream_frame_preset(DatasetKind::E3sm, scale);
+    let codec = Sz3Codec::new(cfg.clone());
+    let bound = ErrorBound::Nrmse(1e-3);
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, steps);
+    let dir = std::env::temp_dir().join("attn_reduce_serve_bench");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let path = dir.join("bench.tstr");
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg.clone(), bound, 4).expect("create stream");
+    w.append_frames(&codec, &frames).expect("append");
+    w.finish().expect("finish");
+
+    let server = Server::bind(ServeConfig::new(&dir, "127.0.0.1:0")).expect("bind");
+    let addr = server.local_addr();
+    let stop = server.stop_handle();
+    let thread = std::thread::spawn(move || server.run().expect("serve"));
+    println!(
+        "serve_throughput: e3sm {:?} x {steps} steps on {addr}, {} threads",
+        cfg.dims,
+        num_threads()
+    );
+
+    // request mix: a corner quarter-region of every step — distinct
+    // (keyframe, region) classes cold, all cached warm
+    let region: String = cfg
+        .dims
+        .iter()
+        .map(|&d| format!("0:{}", (d / 4).max(1)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let targets: Vec<String> = (0..steps)
+        .map(|s| format!("/v1/streams/bench.tstr/extract?step={s}&region={region}"))
+        .collect();
+
+    let (cold_lat, cold_bytes, cold_kf, cold_secs) = pass(addr, &targets);
+    println!(
+        "cold: {} req in {cold_secs:.2}s ({:.0} req/s), p50 {:.0}µs p99 {:.0}µs, \
+         {cold_kf} keyframe payload bytes decoded",
+        targets.len(),
+        targets.len() as f64 / cold_secs,
+        percentile(&cold_lat, 0.50),
+        percentile(&cold_lat, 0.99),
+    );
+
+    let mut warm_lat = Vec::new();
+    let (mut warm_bytes, mut warm_kf, mut warm_secs) = (0usize, 0usize, 0.0f64);
+    for _ in 0..warm_rounds {
+        let (lat, bytes, kf, secs) = pass(addr, &targets);
+        warm_lat.extend(lat);
+        warm_bytes += bytes;
+        warm_kf += kf;
+        warm_secs += secs;
+    }
+    warm_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let warm_n = targets.len() * warm_rounds;
+    println!(
+        "warm: {warm_n} req in {warm_secs:.2}s ({:.0} req/s), p50 {:.0}µs p99 {:.0}µs, \
+         {warm_kf} keyframe payload bytes decoded",
+        warm_n as f64 / warm_secs,
+        percentile(&warm_lat, 0.50),
+        percentile(&warm_lat, 0.99),
+    );
+    assert_eq!(
+        warm_kf, 0,
+        "warm requests must serve keyframes from the cache (region_cost accounting)"
+    );
+
+    // cache effectiveness straight from the server's own counters
+    let stats = get_body(addr, "/v1/stats");
+    let hit_rate = stats
+        .lines()
+        .find_map(|l| l.trim().strip_prefix("\"hit_rate\": "))
+        .map(|v| v.trim_end_matches(',').parse::<f64>().expect("hit_rate"))
+        .unwrap_or(0.0);
+    println!("server cache hit rate: {hit_rate:.3}");
+
+    stop.stop();
+    thread.join().expect("server thread");
+
+    let report = json::obj(vec![
+        ("dataset", json::s("e3sm")),
+        ("scale", json::s(if smoke { "smoke" } else { "bench" })),
+        ("dims", json::arr_usize(&cfg.dims)),
+        ("steps", json::num(steps as f64)),
+        ("keyint", json::num(4.0)),
+        ("bound", json::s(bound.to_string())),
+        ("threads", json::num(num_threads() as f64)),
+        ("region", json::s(region)),
+        (
+            "cold",
+            json::obj(vec![
+                ("requests", json::num(targets.len() as f64)),
+                ("requests_per_s", json::num(targets.len() as f64 / cold_secs)),
+                ("p50_us", json::num(percentile(&cold_lat, 0.50))),
+                ("p99_us", json::num(percentile(&cold_lat, 0.99))),
+                ("body_bytes", json::num(cold_bytes as f64)),
+                ("keyframe_payload_bytes", json::num(cold_kf as f64)),
+            ]),
+        ),
+        (
+            "warm",
+            json::obj(vec![
+                ("requests", json::num(warm_n as f64)),
+                ("requests_per_s", json::num(warm_n as f64 / warm_secs)),
+                ("p50_us", json::num(percentile(&warm_lat, 0.50))),
+                ("p99_us", json::num(percentile(&warm_lat, 0.99))),
+                ("body_bytes", json::num(warm_bytes as f64)),
+                ("keyframe_payload_bytes", json::num(warm_kf as f64)),
+            ]),
+        ),
+        ("cache_hit_rate", json::num(hit_rate)),
+    ]);
+    std::fs::write("BENCH_serve.json", report.to_string_pretty())
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -381,6 +381,27 @@ impl Executor {
         let results = self.par_map_scratch(n, f);
         results.into_iter().collect()
     }
+
+    /// Panic-isolated parallel map: each item runs under `catch_unwind`,
+    /// so one panicking item yields `Err(message)` in its slot instead
+    /// of tearing down the whole batch. Built for request-pool callers
+    /// (the serving layer) where work items are independent client
+    /// connections and the process must outlive any of them.
+    pub fn par_map_isolated<T, F>(&self, n: usize, f: F) -> Vec<std::result::Result<T, String>>
+    where
+        T: Send,
+        F: Fn(usize, &mut Scratch) -> T + Sync,
+    {
+        self.par_map_scratch(n, move |i, scratch| {
+            catch_unwind(AssertUnwindSafe(|| f(i, scratch))).map_err(|payload| {
+                payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "non-string panic payload".to_string())
+            })
+        })
+    }
 }
 
 impl Drop for Executor {
@@ -475,6 +496,30 @@ mod tests {
             .try_par_map(4, |i| -> crate::Result<usize> { Ok(i * 2) })
             .unwrap();
         assert_eq!(ok, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn isolated_map_contains_panics_to_their_slot() {
+        let ex = Executor::new(4);
+        let out = ex.par_map_isolated(40, |i, _| {
+            if i == 13 {
+                panic!("connection {i} blew up");
+            }
+            i * 3
+        });
+        for (i, r) in out.iter().enumerate() {
+            match r {
+                Ok(v) => assert_eq!(*v, i * 3),
+                Err(msg) => {
+                    assert_eq!(i, 13, "only item 13 panics");
+                    assert!(msg.contains("connection 13 blew up"), "{msg}");
+                }
+            }
+        }
+        // the batch itself completed: every non-panicking slot is Ok
+        assert_eq!(out.iter().filter(|r| r.is_err()).count(), 1);
+        // pool still usable afterwards
+        assert_eq!(ex.par_map(4, |i| i), vec![0, 1, 2, 3]);
     }
 
     #[test]

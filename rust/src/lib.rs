@@ -63,6 +63,17 @@
 //! output compresses several times better than independent per-step
 //! archives at the same bound (see the `stream_throughput` bench).
 //!
+//! ## The serving layer
+//!
+//! [`serve`] turns the library into a long-running service (`cli
+//! serve`): a dependency-free HTTP/1.1 server over a root directory of
+//! archives and streams, with `(step, region)` extraction, JSON `info`,
+//! and compression over POST. Open readers and decoded keyframes are
+//! reused across requests through a byte-bounded LRU
+//! ([`serve::LruCache`]), and request handling fans out onto the same
+//! [`engine::Executor`] pool (and per-thread scratch arenas) as the
+//! decode kernels it calls.
+//!
 //! ### Migrating from the pre-codec entry points
 //!
 //! | old                                                     | new |
@@ -116,6 +127,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod stream;
 pub mod tensor;
 pub mod train;

@@ -14,6 +14,8 @@
 //! attn-reduce stream info    --in run.tstr
 //! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
 //! attn-reduce info       # manifest + platform summary
+//! attn-reduce info       --in data.ardc [--json]   # byte breakdown
+//! attn-reduce serve      --root DIR --addr 127.0.0.1:8080
 //! ```
 
 use std::rc::Rc;
@@ -28,6 +30,7 @@ use attn_reduce::engine::{CodecExt, FieldSet};
 use attn_reduce::experiments;
 use attn_reduce::model::ParamStore;
 use attn_reduce::runtime::Runtime;
+use attn_reduce::serve::{self, ServeConfig, Server};
 use attn_reduce::stream::{StreamReader, StreamWriter};
 use attn_reduce::util::cli::Args;
 use attn_reduce::util::parallel;
@@ -63,10 +66,20 @@ COMMANDS:
                          decodes keyframe + residual chain, region decodes
                          only the intersecting blocks of each chain step
                  info    --in S   timeline, CR, per-step sizes
+  serve        long-running HTTP service over a directory of archives and
+               streams (--root DIR --addr HOST:PORT [--cache-bytes B]):
+               GET  /v1/archives                     paginated listing
+               GET  /v1/archives/{name}/info        byte breakdown (JSON)
+               GET  /v1/archives/{name}/extract?region=i0:i1,...[&field=N]
+               GET  /v1/streams/{name}/steps        timeline page
+               GET  /v1/streams/{name}/extract?step=S[&region=...]
+               POST /v1/compress?name=N[&codec=C&bound=B]   raw f32 body
+               GET  /v1/stats                       counters + cache
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         --in A: per-section byte breakdown of an archive or stream
                (payload vs index vs framing, plus the entropy table/symbol
-               split for sz3/zfp payloads); without --in: artifact
+               split for sz3/zfp payloads); --json prints the same numbers
+               as one JSON document; without --in: artifact
                manifest + platform
   help         show this message
 COMMON OPTIONS:
@@ -92,7 +105,7 @@ fn main() {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quiet", "retrain", "full", "help", "all-vars"])?;
+    let args = Args::parse(raw, &["quiet", "retrain", "full", "help", "all-vars", "json"])?;
     if args.flag("quiet") {
         std::env::set_var("ATTN_REDUCE_QUIET", "1");
     }
@@ -115,6 +128,7 @@ fn run(raw: &[String]) -> Result<()> {
         "decompress" => cmd_decompress(&args),
         "extract" => cmd_extract(&args),
         "stream" => cmd_stream(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => {
             let id = args
                 .positional
@@ -515,6 +529,15 @@ fn cmd_stream_extract(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--step N required"))?
         .parse()
         .map_err(|_| anyhow::anyhow!("--step expects a step index"))?;
+    // a step past the timeline is a usage error (exit 2), same contract
+    // as a malformed --region: caught before any codec work starts
+    if step >= reader.n_steps() {
+        eprintln!(
+            "error: --step {step} out of range ({} steps in stream)",
+            reader.n_steps()
+        );
+        std::process::exit(2);
+    }
     let mut b = builder(args)?;
     let codec = reader.build_codec(&mut b)?;
     let out = args.get_or("out", "frame.f32");
@@ -588,7 +611,9 @@ fn cmd_stream_info(args: &Args) -> Result<()> {
 /// index vs framing), plus the entropy-stage split (tables vs symbols)
 /// for sz3/zfp payloads — the numbers a ratio regression hides in. For
 /// plain (LZSS-wrapped) streams the table/symbol numbers are measured in
-/// the entropy domain; zero-run/const tiles as stored.
+/// the entropy domain; zero-run/const tiles as stored. The numbers come
+/// from [`serve::info`], the same summaries the `/v1/.../info` route
+/// serializes — this function only renders them as text.
 fn archive_info(path: &str) -> Result<()> {
     let bytes = std::fs::read(path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
@@ -611,14 +636,7 @@ fn archive_info(path: &str) -> Result<()> {
     let sizes = archive.section_sizes();
     let mut sections_total = 0usize;
     for (tag, sz) in &sizes {
-        let base = tag.rsplit('/').next().unwrap_or(tag);
-        let class = if base == compressor::format::BLOCK_INDEX_TAG {
-            "index"
-        } else if compressor::format::CR_SECTIONS.contains(&base) {
-            "payload"
-        } else {
-            "other"
-        };
+        let class = serve::info::section_class(tag);
         println!("  section {tag}: {sz} bytes [{class}]");
         sections_total += sz;
     }
@@ -630,101 +648,67 @@ fn archive_info(path: &str) -> Result<()> {
             bytes.len().saturating_sub(sections_total)
         );
     }
-    entropy_breakdown(&archive, &codec)?;
-    Ok(())
-}
-
-/// The per-tile entropy split of a single-field sz3/zfp archive.
-fn entropy_breakdown(archive: &Archive, codec: &str) -> Result<()> {
-    if archive.version() == 2 || (codec != "sz3" && codec != "zfp") {
-        return Ok(());
+    if let Some(e) = serve::info::entropy_summary(&archive, &codec)? {
+        println!(
+            "entropy: {} tiles (plain {}, zero-run {}, const {}): \
+             tables {} B, symbols {} B, raw/exps {} B, tile framing {} B",
+            e.tiles,
+            e.plain,
+            e.zero_run,
+            e.constant,
+            e.table_bytes,
+            e.symbol_bytes,
+            e.aux_bytes,
+            e.framing_bytes
+        );
     }
-    let Some(dsv) = archive.header.get("dataset") else {
-        return Ok(());
-    };
-    let Ok(ds) = config::DatasetConfig::from_json(dsv) else {
-        return Ok(());
-    };
-    let tag = if codec == "sz3" { "SZ3B" } else { "ZFPB" };
-    let payload = archive.section(tag)?;
-    let index = archive.block_index()?;
-    let (spans, cap): (Vec<(usize, usize)>, usize) = match &index {
-        Some(ix) => {
-            // untrusted index: bound tile dims and byte spans against
-            // the header geometry before slicing the payload
-            ix.validate(&ds.dims, payload.len())?;
-            (
-                (0..ix.entries.len())
-                    .map(|i| ix.entry(i))
-                    .collect::<Result<_>>()?,
-                ix.tile.iter().product(),
-            )
-        }
-        None => (vec![(0, payload.len())], ds.total_points()),
-    };
-    let (mut n_plain, mut n_zrun, mut n_const) = (0usize, 0usize, 0usize);
-    let (mut table_b, mut sym_b, mut aux_b, mut frame_b) = (0usize, 0usize, 0usize, 0usize);
-    for &(off, len) in &spans {
-        let b = if codec == "sz3" {
-            attn_reduce::baselines::Sz3Like::stream_breakdown(&payload[off..off + len], cap)?
-        } else {
-            attn_reduce::baselines::ZfpLike::stream_breakdown(&payload[off..off + len], cap)?
-        };
-        match b.mode {
-            "plain" => n_plain += 1,
-            "zero-run" => n_zrun += 1,
-            _ => n_const += 1,
-        }
-        table_b += b.table_bytes;
-        sym_b += b.symbol_bytes;
-        aux_b += b.aux_bytes;
-        frame_b += b.framing_bytes;
-    }
-    println!(
-        "entropy: {} tiles (plain {n_plain}, zero-run {n_zrun}, const {n_const}): \
-         tables {table_b} B, symbols {sym_b} B, raw/exps {aux_b} B, tile framing {frame_b} B",
-        spans.len()
-    );
     Ok(())
 }
 
 /// `info --in` on a v4 temporal stream: record/index/framing byte classes.
 fn stream_file_info(bytes: &[u8]) -> Result<()> {
-    let (header, start) = compressor::format::parse_stream_header(bytes)?;
-    let codec = header.get("codec").and_then(|v| v.as_str()).unwrap_or("?");
-    let mut off = start;
-    let (mut steps, mut keyframes) = (0usize, 0usize);
-    let (mut record_payload, mut tidx_bytes) = (0usize, 0usize);
-    let mut framing = start;
-    while off + 12 <= bytes.len() {
-        let Ok((tag, _, len, next)) = compressor::format::parse_stream_record(bytes, off) else {
-            break;
-        };
-        if tag == *compressor::format::STREAM_KEY_TAG {
-            steps += 1;
-            keyframes += 1;
-            record_payload += len;
-        } else if tag == *compressor::format::STREAM_RES_TAG {
-            steps += 1;
-            record_payload += len;
-        } else if tag == *compressor::format::STREAM_TIDX_TAG {
-            tidx_bytes += len;
-        }
-        framing += 12;
-        off = next;
-    }
-    framing += bytes.len() - off; // footer + any trailing partial record
+    let s = serve::info::stream_byte_summary(bytes)?;
     println!(
-        "stream: v4, codec = {codec}, {} bytes, {steps} steps ({keyframes} keyframes)",
-        bytes.len()
+        "stream: v4, codec = {}, {} bytes, {} steps ({} keyframes)",
+        s.codec, s.file_bytes, s.steps, s.keyframes
     );
-    println!("  step records: {record_payload} bytes [payload]");
-    println!("  timeline (TIDX): {tidx_bytes} bytes [index]");
-    println!("  header + framing: {framing} bytes");
+    println!("  step records: {} bytes [payload]", s.record_payload_bytes);
+    println!("  timeline (TIDX): {} bytes [index]", s.tidx_bytes);
+    println!("  header + framing: {} bytes", s.framing_bytes);
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::new(
+        args.get_or("root", "."),
+        args.get_or("addr", "127.0.0.1:8080"),
+    );
+    cfg.cache_bytes = args.get_usize("cache-bytes", cfg.cache_bytes)?;
+    cfg.batch = args.get_usize("batch", cfg.batch)?;
+    let server = Server::bind(cfg)?;
+    println!(
+        "serving {} on http://{} ({} worker threads)",
+        std::fs::canonicalize(args.get_or("root", "."))
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|_| args.get_or("root", ".").to_string()),
+        server.local_addr(),
+        parallel::num_threads()
+    );
+    server.run()
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
+    // --json: the machine-readable document (identical to what the
+    // serve layer's /v1/archives/{name}/info route returns)
+    if args.flag("json") {
+        let path = args
+            .get("in")
+            .ok_or_else(|| anyhow::anyhow!("info --json needs --in FILE"))?;
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        println!("{}", serve::info::info_json(&bytes)?.to_string_pretty());
+        return Ok(());
+    }
     if let Some(path) = args.get("in") {
         return archive_info(path);
     }

@@ -1,0 +1,243 @@
+//! Bounded LRU cache for the serving layer: open [`StreamReader`]s /
+//! parsed [`Archive`]s (keyed by file path) and decoded keyframe
+//! regions (keyed by `(path, keyframe step, region class)`).
+//!
+//! Admission and eviction are driven by byte accounting — an entry's
+//! cost is what it pins in memory (file bytes for readers/archives,
+//! `4 * points` for decoded frames), and each entry records the payload
+//! bytes a hit *saves* (from `StreamReader::region_cost` for keyframes),
+//! so the `/v1/stats` route and `BENCH_serve.json` can report exactly
+//! how many compressed bytes the cache kept off the decode path.
+//! Everything lives behind one `Mutex`: entries are `Arc`s, so the lock
+//! covers only map bookkeeping, never decode work.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::compressor::Archive;
+use crate::stream::StreamReader;
+use crate::tensor::Tensor;
+
+/// What a cached entry is keyed by.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CacheKey {
+    /// A parsed on-disk file (stream reader or archive).
+    File(PathBuf),
+    /// A decoded keyframe region: `(file, keyframe step, region class)`
+    /// where the class is the canonical `lo:hi,...` spelling (a full
+    /// frame and an explicit full region share one entry).
+    Keyframe(PathBuf, usize, String),
+}
+
+impl CacheKey {
+    fn path(&self) -> &Path {
+        match self {
+            CacheKey::File(p) => p,
+            CacheKey::Keyframe(p, _, _) => p,
+        }
+    }
+}
+
+/// Shared handles to cached objects (cheap to clone out of the lock).
+#[derive(Clone)]
+pub enum CacheValue {
+    Reader(Arc<StreamReader>),
+    Archive(Arc<Archive>),
+    Frame(Arc<Tensor>),
+}
+
+struct Slot {
+    value: CacheValue,
+    /// Resident bytes this entry pins.
+    cost: usize,
+    /// Payload bytes one hit on this entry avoids decoding/reading.
+    saved: usize,
+    /// LRU clock tick of the last touch.
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<CacheKey, Slot>,
+    bytes: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    insertions: u64,
+    /// Cumulative `saved` over all hits.
+    bytes_saved: u64,
+}
+
+/// Counter snapshot for `/v1/stats` and the bench report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub entries: usize,
+    pub bytes: usize,
+    pub capacity_bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+    pub bytes_saved: u64,
+}
+
+/// Byte-bounded LRU over [`CacheKey`] → [`CacheValue`].
+pub struct LruCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl LruCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self { capacity: capacity_bytes, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Look up `key`, counting a hit (and its saved bytes) or a miss.
+    pub fn get(&self, key: &CacheKey) -> Option<CacheValue> {
+        let mut guard = self.inner.lock().unwrap();
+        // reborrow so map access and counter updates split by field
+        let inner = &mut *guard;
+        inner.tick += 1;
+        match inner.map.get_mut(key) {
+            Some(slot) => {
+                slot.last_used = inner.tick;
+                inner.hits += 1;
+                inner.bytes_saved += slot.saved as u64;
+                Some(slot.value.clone())
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Admit `value` at `cost` resident bytes, evicting least-recently
+    /// used entries until it fits. An entry larger than the whole cache
+    /// is refused (the request still succeeds, it just isn't cached).
+    pub fn insert(&self, key: CacheKey, value: CacheValue, cost: usize, saved: usize) {
+        if cost > self.capacity {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.cost;
+        }
+        while inner.bytes + cost > self.capacity {
+            let Some(victim) = inner
+                .map
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let gone = inner.map.remove(&victim).expect("victim present");
+            inner.bytes -= gone.cost;
+            inner.evictions += 1;
+        }
+        inner.bytes += cost;
+        inner.insertions += 1;
+        inner.map.insert(key, Slot { value, cost, saved, last_used: tick });
+    }
+
+    /// Drop every entry derived from `path` (the `POST /v1/compress`
+    /// overwrite path: a rewritten file invalidates its reader, archive
+    /// and keyframes together).
+    pub fn invalidate_file(&self, path: &Path) {
+        let mut inner = self.inner.lock().unwrap();
+        let doomed: Vec<CacheKey> = inner
+            .map
+            .keys()
+            .filter(|k| k.path() == path)
+            .cloned()
+            .collect();
+        for key in doomed {
+            let gone = inner.map.remove(&key).expect("doomed key present");
+            inner.bytes -= gone.cost;
+        }
+    }
+
+    pub fn counters(&self) -> CacheCounters {
+        let inner = self.inner.lock().unwrap();
+        CacheCounters {
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            capacity_bytes: self.capacity,
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            insertions: inner.insertions,
+            bytes_saved: inner.bytes_saved,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(points: usize) -> CacheValue {
+        CacheValue::Frame(Arc::new(Tensor::new(vec![points], vec![0.0; points])))
+    }
+
+    fn key(name: &str, step: usize) -> CacheKey {
+        CacheKey::Keyframe(PathBuf::from(name), step, "full".to_string())
+    }
+
+    #[test]
+    fn hit_miss_and_saved_byte_accounting() {
+        let cache = LruCache::new(1000);
+        assert!(cache.get(&key("a", 0)).is_none());
+        cache.insert(key("a", 0), frame(10), 40, 777);
+        assert!(cache.get(&key("a", 0)).is_some());
+        assert!(cache.get(&key("a", 0)).is_some());
+        let c = cache.counters();
+        assert_eq!((c.hits, c.misses, c.entries, c.bytes), (2, 1, 1, 40));
+        assert_eq!(c.bytes_saved, 2 * 777, "each hit saves the recorded bytes");
+    }
+
+    #[test]
+    fn evicts_least_recently_used_to_stay_bounded() {
+        let cache = LruCache::new(100);
+        cache.insert(key("a", 0), frame(1), 40, 0);
+        cache.insert(key("b", 0), frame(1), 40, 0);
+        assert!(cache.get(&key("a", 0)).is_some(), "touch a — b is now LRU");
+        cache.insert(key("c", 0), frame(1), 40, 0);
+        assert!(cache.get(&key("b", 0)).is_none(), "b evicted");
+        assert!(cache.get(&key("a", 0)).is_some(), "a survived");
+        assert!(cache.get(&key("c", 0)).is_some(), "c admitted");
+        let c = cache.counters();
+        assert_eq!(c.evictions, 1);
+        assert!(c.bytes <= c.capacity_bytes);
+    }
+
+    #[test]
+    fn oversized_entries_are_refused_and_reinsert_replaces() {
+        let cache = LruCache::new(100);
+        cache.insert(key("big", 0), frame(1), 101, 0);
+        assert_eq!(cache.counters().entries, 0, "over-capacity entry refused");
+        cache.insert(key("a", 0), frame(1), 60, 0);
+        cache.insert(key("a", 0), frame(1), 80, 0);
+        let c = cache.counters();
+        assert_eq!((c.entries, c.bytes), (1, 80), "replacement, not double count");
+        assert_eq!(c.evictions, 0, "replacing a key never evicts others");
+    }
+
+    #[test]
+    fn invalidate_drops_all_keys_for_a_file() {
+        let cache = LruCache::new(1000);
+        cache.insert(CacheKey::File(PathBuf::from("x")), frame(1), 10, 0);
+        cache.insert(key("x", 0), frame(1), 10, 0);
+        cache.insert(key("x", 8), frame(1), 10, 0);
+        cache.insert(key("y", 0), frame(1), 10, 0);
+        cache.invalidate_file(Path::new("x"));
+        let c = cache.counters();
+        assert_eq!((c.entries, c.bytes), (1, 10), "only y remains");
+        assert!(cache.get(&key("y", 0)).is_some());
+    }
+}

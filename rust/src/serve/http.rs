@@ -1,0 +1,337 @@
+//! Minimal HTTP/1.1 request parsing and response writing over any
+//! `Read + Write` transport (std `TcpStream` in production, in-memory
+//! cursors in tests). In-tree by design: the serving layer follows the
+//! repo's offline-build policy, so no hyper/axum — just the subset of
+//! RFC 9112 the `/v1` routes need (request line, headers,
+//! `Content-Length` bodies, `Expect: 100-continue`), with hard caps on
+//! header and body sizes so an abusive peer cannot balloon memory.
+
+use std::io::{Read, Write};
+
+use crate::util::json::Value;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Header block cap: a legitimate `/v1` request line + headers fits in
+/// well under a page; anything larger is rejected before it allocates.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Body cap for `POST /v1/compress` — "small payloads" per the route
+/// contract (a bench-scale field is a few MB; 64 MiB leaves headroom).
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// One parsed request. `path` and `query` are kept *raw* (still
+/// percent-encoded): the router decodes per path segment, so an encoded
+/// `%2F` can never smuggle a separator past name validation.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Raw path component of the request target (before `?`).
+    pub path: String,
+    /// Raw query component (after `?`, possibly empty).
+    pub query: String,
+    /// Header names lowercased; values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// `path?query` for request logs.
+    pub fn target(&self) -> String {
+        if self.query.is_empty() {
+            self.path.clone()
+        } else {
+            format!("{}?{}", self.path, self.query)
+        }
+    }
+}
+
+/// Decode `%XX` escapes (and `+` as space, form-style). Invalid escapes
+/// pass through literally — names are validated downstream anyway.
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => {
+                let hex = &s[i + 1..i + 3];
+                match u8::from_str_radix(hex, 16) {
+                    Ok(v) => {
+                        out.push(v);
+                        i += 3;
+                    }
+                    Err(_) => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Read one request from `stream`. `buf` is the connection read buffer
+/// (a pool thread's scratch — reused across requests, never shrunk).
+/// Writes `100 Continue` when the client asked for it, so plain `curl`
+/// POSTs with bodies over 1 KB don't stall.
+pub fn read_request<S: Read + Write>(stream: &mut S, buf: &mut Vec<u8>) -> Result<Request> {
+    buf.clear();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_blank_line(buf) {
+            break pos;
+        }
+        ensure!(buf.len() <= MAX_HEADER_BYTES, "request header exceeds {MAX_HEADER_BYTES} bytes");
+        let n = stream.read(&mut chunk)?;
+        ensure!(n > 0, "connection closed before end of header");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end])?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let target = parts.next().unwrap_or("");
+    let version = parts.next().unwrap_or("");
+    ensure!(!method.is_empty() && !target.is_empty(), "malformed request line {request_line:?}");
+    ensure!(
+        version.starts_with("HTTP/1."),
+        "unsupported protocol version {version:?}"
+    );
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("malformed header line {line:?}"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+
+    let mut req = Request { method, path, query, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        bail!("transfer-encoding is not supported; send content-length");
+    }
+    let content_length: usize = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad content-length {v:?}"))?,
+    };
+    ensure!(
+        content_length <= MAX_BODY_BYTES,
+        "body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+    );
+    if req
+        .header("expect")
+        .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+    {
+        stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        stream.flush()?;
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        ensure!(n > 0, "connection closed mid-body ({}/{} bytes)", body.len(), content_length);
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    req.body = body;
+    Ok(req)
+}
+
+/// One response. Always `Connection: close` — one request per
+/// connection keeps the dispatcher's batch model simple, and every
+/// route's cost is dominated by decode work, not connection setup.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    /// Extra headers beyond content-type/length (e.g. `x-cache`).
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(v: &Value) -> Self {
+        let mut body = v.to_string_pretty().into_bytes();
+        body.push(b'\n');
+        Response {
+            status: 200,
+            content_type: "application/json",
+            headers: Vec::new(),
+            body,
+        }
+    }
+
+    /// Raw little-endian payload bytes (f32 regions/frames).
+    pub fn octets(body: Vec<u8>) -> Self {
+        Response {
+            status: 200,
+            content_type: "application/octet-stream",
+            headers: Vec::new(),
+            body,
+        }
+    }
+
+    pub fn error(status: u16, msg: &str) -> Self {
+        let mut r = Response::json(&crate::util::json::obj(vec![(
+            "error",
+            crate::util::json::s(msg),
+        )]));
+        r.status = status;
+        r
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Self {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    pub fn status_text(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            500 => "Internal Server Error",
+            501 => "Not Implemented",
+            _ => "Unknown",
+        }
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: close\r\n",
+            self.status,
+            Self::status_text(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        for (k, v) in &self.headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Request> {
+        let mut stream = Cursor::new(raw.to_vec());
+        let mut buf = Vec::new();
+        read_request(&mut stream, &mut buf)
+    }
+
+    #[test]
+    fn parses_get_with_query() {
+        let req = parse(
+            b"GET /v1/streams/run.tstr/extract?step=3&region=0:4,0:8 HTTP/1.1\r\n\
+              Host: localhost\r\nAccept: */*\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/v1/streams/run.tstr/extract");
+        assert_eq!(req.query, "step=3&region=0:4,0:8");
+        assert_eq!(req.header("host"), Some("localhost"));
+        assert_eq!(req.header("HOST"), Some("localhost"));
+        assert!(req.body.is_empty());
+        assert_eq!(req.target(), "/v1/streams/run.tstr/extract?step=3&region=0:4,0:8");
+    }
+
+    #[test]
+    fn parses_post_body_with_length() {
+        let req = parse(
+            b"POST /v1/compress?name=a.ardc HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn rejects_oversized_header_and_bad_lines() {
+        let mut big = b"GET /x HTTP/1.1\r\npad: ".to_vec();
+        big.resize(big.len() + MAX_HEADER_BYTES + 1024, b'a');
+        big.extend_from_slice(b"\r\n\r\n");
+        assert!(parse(&big).is_err());
+        assert!(parse(b"BROKEN\r\n\r\n").is_err(), "no target");
+        assert!(parse(b"GET /x SPDY/9\r\n\r\n").is_err(), "bad version");
+        assert!(parse(b"GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n").is_err());
+        assert!(
+            parse(b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n").is_err(),
+            "chunked unsupported"
+        );
+        assert!(
+            parse(b"POST /x HTTP/1.1\r\ncontent-length: 99999999999999\r\n\r\n").is_err(),
+            "body cap"
+        );
+    }
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("a%20b+c"), "a b c");
+        assert_eq!(percent_decode("0%3A4%2C0%3A8"), "0:4,0:8");
+        assert_eq!(percent_decode("plain"), "plain");
+        assert_eq!(percent_decode("bad%zz"), "bad%zz");
+        assert_eq!(percent_decode("%2"), "%2");
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let r = Response::octets(vec![1, 2, 3]).with_header("x-cache", "hit");
+        let mut out = Vec::new();
+        r.write_to(&mut out).unwrap();
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-length: 3\r\n"));
+        assert!(text.contains("connection: close\r\n"));
+        assert!(text.contains("x-cache: hit\r\n"));
+        assert!(out.ends_with(&[1, 2, 3]));
+
+        let e = Response::error(404, "no archive");
+        let mut out = Vec::new();
+        e.write_to(&mut out).unwrap();
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("\"error\": \"no archive\""));
+    }
+}

@@ -1,0 +1,227 @@
+//! Shared byte-breakdown summaries behind `cli info --in` and the
+//! `GET /v1/archives/{name}/info` route.
+//!
+//! The CLI's pinned text output and the route's JSON body are two
+//! renderings of the same structs ([`EntropySummary`],
+//! [`StreamByteSummary`]) computed here, so the numbers can never
+//! drift between the two surfaces. [`info_json`] is the machine form:
+//! `cli info --json --in F` prints it and the route returns it
+//! verbatim.
+
+use crate::baselines::{Sz3Like, ZfpLike};
+use crate::compressor::format::{
+    parse_stream_header, parse_stream_record, BLOCK_INDEX_TAG, CR_SECTIONS, STREAM_KEY_TAG,
+    STREAM_MAGIC, STREAM_RES_TAG, STREAM_TIDX_TAG,
+};
+use crate::compressor::Archive;
+use crate::config::DatasetConfig;
+use crate::util::json::{self, Value};
+use crate::Result;
+
+/// payload / index / other, from a section tag (v2 nested tags like
+/// `F000/SZ3B` classify by their base name).
+pub fn section_class(tag: &str) -> &'static str {
+    let base = tag.rsplit('/').next().unwrap_or(tag);
+    if base == BLOCK_INDEX_TAG {
+        "index"
+    } else if CR_SECTIONS.contains(&base) {
+        "payload"
+    } else {
+        "other"
+    }
+}
+
+/// The per-tile entropy split of a single-field sz3/zfp archive:
+/// container modes and where the compressed bytes actually sit
+/// (Huffman tables vs symbol stream vs raw/exponent planes vs tile
+/// framing). `None` when the archive has no measurable entropy stream
+/// (v2 container, learned codec, or no dataset header).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntropySummary {
+    pub tiles: usize,
+    pub plain: usize,
+    pub zero_run: usize,
+    pub constant: usize,
+    pub table_bytes: usize,
+    pub symbol_bytes: usize,
+    pub aux_bytes: usize,
+    pub framing_bytes: usize,
+}
+
+pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropySummary>> {
+    if archive.version() == 2 || (codec != "sz3" && codec != "zfp") {
+        return Ok(None);
+    }
+    let Some(dsv) = archive.header.get("dataset") else {
+        return Ok(None);
+    };
+    let Ok(ds) = DatasetConfig::from_json(dsv) else {
+        return Ok(None);
+    };
+    let tag = if codec == "sz3" { "SZ3B" } else { "ZFPB" };
+    let payload = archive.section(tag)?;
+    let index = archive.block_index()?;
+    let (spans, cap): (Vec<(usize, usize)>, usize) = match &index {
+        Some(ix) => {
+            // untrusted index: bound tile dims and byte spans against
+            // the header geometry before slicing the payload
+            ix.validate(&ds.dims, payload.len())?;
+            (
+                (0..ix.entries.len())
+                    .map(|i| ix.entry(i))
+                    .collect::<Result<_>>()?,
+                ix.tile.iter().product(),
+            )
+        }
+        None => (vec![(0, payload.len())], ds.total_points()),
+    };
+    let mut out = EntropySummary {
+        tiles: spans.len(),
+        plain: 0,
+        zero_run: 0,
+        constant: 0,
+        table_bytes: 0,
+        symbol_bytes: 0,
+        aux_bytes: 0,
+        framing_bytes: 0,
+    };
+    for &(off, len) in &spans {
+        let b = if codec == "sz3" {
+            Sz3Like::stream_breakdown(&payload[off..off + len], cap)?
+        } else {
+            ZfpLike::stream_breakdown(&payload[off..off + len], cap)?
+        };
+        match b.mode {
+            "plain" => out.plain += 1,
+            "zero-run" => out.zero_run += 1,
+            _ => out.constant += 1,
+        }
+        out.table_bytes += b.table_bytes;
+        out.symbol_bytes += b.symbol_bytes;
+        out.aux_bytes += b.aux_bytes;
+        out.framing_bytes += b.framing_bytes;
+    }
+    Ok(Some(out))
+}
+
+/// Byte classes of a v4 temporal stream file: step-record payload vs
+/// timeline index vs framing (header, record headers, footer, torn
+/// tail).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamByteSummary {
+    pub codec: String,
+    pub file_bytes: usize,
+    pub steps: usize,
+    pub keyframes: usize,
+    pub record_payload_bytes: usize,
+    pub tidx_bytes: usize,
+    pub framing_bytes: usize,
+}
+
+pub fn stream_byte_summary(bytes: &[u8]) -> Result<StreamByteSummary> {
+    let (header, start) = parse_stream_header(bytes)?;
+    let codec = header
+        .get("codec")
+        .and_then(|v| v.as_str())
+        .unwrap_or("?")
+        .to_string();
+    let mut off = start;
+    let (mut steps, mut keyframes) = (0usize, 0usize);
+    let (mut record_payload, mut tidx_bytes) = (0usize, 0usize);
+    let mut framing = start;
+    while off + 12 <= bytes.len() {
+        let Ok((tag, _, len, next)) = parse_stream_record(bytes, off) else {
+            break;
+        };
+        if tag == *STREAM_KEY_TAG {
+            steps += 1;
+            keyframes += 1;
+            record_payload += len;
+        } else if tag == *STREAM_RES_TAG {
+            steps += 1;
+            record_payload += len;
+        } else if tag == *STREAM_TIDX_TAG {
+            tidx_bytes += len;
+        }
+        framing += 12;
+        off = next;
+    }
+    framing += bytes.len() - off; // footer + any trailing partial record
+    Ok(StreamByteSummary {
+        codec,
+        file_bytes: bytes.len(),
+        steps,
+        keyframes,
+        record_payload_bytes: record_payload,
+        tidx_bytes,
+        framing_bytes: framing,
+    })
+}
+
+fn entropy_json(e: &EntropySummary) -> Value {
+    json::obj(vec![
+        ("tiles", json::num(e.tiles as f64)),
+        ("plain", json::num(e.plain as f64)),
+        ("zero_run", json::num(e.zero_run as f64)),
+        ("const", json::num(e.constant as f64)),
+        ("table_bytes", json::num(e.table_bytes as f64)),
+        ("symbol_bytes", json::num(e.symbol_bytes as f64)),
+        ("aux_bytes", json::num(e.aux_bytes as f64)),
+        ("tile_framing_bytes", json::num(e.framing_bytes as f64)),
+    ])
+}
+
+/// The machine-readable `info` document for an archive or stream file.
+pub fn info_json(bytes: &[u8]) -> Result<Value> {
+    if bytes.len() >= 4 && &bytes[0..4] == STREAM_MAGIC {
+        let s = stream_byte_summary(bytes)?;
+        return Ok(json::obj(vec![
+            ("kind", json::s("stream")),
+            ("version", json::num(4.0)),
+            ("codec", json::s(s.codec)),
+            ("bytes", json::num(s.file_bytes as f64)),
+            ("steps", json::num(s.steps as f64)),
+            ("keyframes", json::num(s.keyframes as f64)),
+            ("record_payload_bytes", json::num(s.record_payload_bytes as f64)),
+            ("tidx_bytes", json::num(s.tidx_bytes as f64)),
+            ("framing_bytes", json::num(s.framing_bytes as f64)),
+        ]));
+    }
+    let archive = Archive::from_bytes(bytes)?;
+    let codec = archive
+        .header
+        .get("codec")
+        .and_then(|v| v.as_str())
+        .unwrap_or("?")
+        .to_string();
+    let sizes = archive.section_sizes();
+    let mut sections_total = 0usize;
+    let mut sections = Vec::new();
+    for (tag, sz) in &sizes {
+        sections.push(json::obj(vec![
+            ("tag", json::s(tag.clone())),
+            ("bytes", json::num(*sz as f64)),
+            ("class", json::s(section_class(tag))),
+        ]));
+        sections_total += sz;
+    }
+    let mut pairs = vec![
+        ("kind", json::s("archive")),
+        ("version", json::num(archive.version() as f64)),
+        ("codec", json::s(codec.clone())),
+        ("bytes", json::num(bytes.len() as f64)),
+        ("sections", Value::Arr(sections)),
+    ];
+    // v2 expands nested sections, so the framing delta only adds up for
+    // single-field containers — same rule as the text renderer
+    if archive.version() != 2 {
+        pairs.push((
+            "framing_bytes",
+            json::num(bytes.len().saturating_sub(sections_total) as f64),
+        ));
+    }
+    if let Some(e) = entropy_summary(&archive, &codec)? {
+        pairs.push(("entropy", entropy_json(&e)));
+    }
+    Ok(json::obj(pairs))
+}

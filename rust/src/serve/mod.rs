@@ -1,0 +1,30 @@
+//! HTTP serving layer: `compress` / `extract` / `info` as a
+//! long-running service (`cli serve`).
+//!
+//! The read-mostly access pattern the paper's `(step, region)` random
+//! access targets — scientists repeatedly pulling bounded-error regions
+//! out of large compressed stores — only pays off when open readers and
+//! decoded keyframes are reused across requests. This module provides
+//! that reuse: a dependency-free HTTP/1.1 server (std `TcpListener`
+//! plus in-tree parsing, per the offline-build policy) whose request
+//! handling fans out onto the crate's [`Executor`] worker pool and
+//! whose hot state lives in a byte-bounded LRU cache.
+//!
+//! Layout:
+//!
+//! * [`http`] — request parsing / response writing over `Read + Write`
+//! * [`router`] — typed `/v1` route + query extraction
+//! * [`cache`] — bounded LRU over readers, archives, decoded keyframes
+//! * [`info`] — byte-breakdown summaries shared with `cli info`
+//! * [`server`] — accept loop, executor dispatch, route handlers
+//!
+//! [`Executor`]: crate::engine::Executor
+
+pub mod cache;
+pub mod http;
+pub mod info;
+pub mod router;
+pub mod server;
+
+pub use cache::{CacheCounters, CacheKey, CacheValue, LruCache};
+pub use server::{ServeConfig, Server, StopHandle};

@@ -1,0 +1,204 @@
+//! Typed route + query extraction for the `/v1` API.
+//!
+//! `Route::resolve` turns `(method, raw path)` into a typed route or an
+//! `(status, message)` error; resource names are percent-decoded per
+//! segment *after* splitting (so an encoded `/` cannot cross a
+//! boundary) and validated against traversal. [`Query`] gives handlers
+//! typed access to `?key=value` parameters with 400-grade errors.
+
+use crate::data::Region;
+
+use super::http::percent_decode;
+
+/// Handler-level result: `Err((http_status, message))` renders as a
+/// JSON error body.
+pub type HttpResult<T> = std::result::Result<T, (u16, String)>;
+
+/// The `/v1` route table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /v1/archives` — cursor-paginated listing of the root dir.
+    ListArchives,
+    /// `GET /v1/archives/{name}/info` — JSON byte breakdown.
+    ArchiveInfo { name: String },
+    /// `GET /v1/archives/{name}/extract?region=..&field=..` — raw f32s.
+    ArchiveExtract { name: String },
+    /// `GET /v1/streams/{name}/steps` — timeline listing.
+    StreamSteps { name: String },
+    /// `GET /v1/streams/{name}/extract?step=S&region=..` — raw f32s.
+    StreamExtract { name: String },
+    /// `POST /v1/compress?name=..&codec=..&bound=..` — small payloads.
+    Compress,
+    /// `GET /v1/stats` — request + cache counters.
+    Stats,
+}
+
+/// A stored-file name from the URL: decoded, non-empty, and unable to
+/// escape the serving root.
+pub fn validate_name(raw: &str) -> HttpResult<String> {
+    let name = percent_decode(raw);
+    if name.is_empty()
+        || name.contains('/')
+        || name.contains('\\')
+        || name.contains("..")
+        || name.starts_with('.')
+    {
+        return Err((400, format!("invalid resource name {name:?}")));
+    }
+    Ok(name)
+}
+
+impl Route {
+    pub fn resolve(method: &str, path: &str) -> HttpResult<Route> {
+        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        let route = match segs.as_slice() {
+            ["v1", "archives"] => Route::ListArchives,
+            ["v1", "archives", name, "info"] => Route::ArchiveInfo { name: validate_name(name)? },
+            ["v1", "archives", name, "extract"] => {
+                Route::ArchiveExtract { name: validate_name(name)? }
+            }
+            ["v1", "streams", name, "steps"] => Route::StreamSteps { name: validate_name(name)? },
+            ["v1", "streams", name, "extract"] => {
+                Route::StreamExtract { name: validate_name(name)? }
+            }
+            ["v1", "compress"] => Route::Compress,
+            ["v1", "stats"] => Route::Stats,
+            _ => return Err((404, format!("no route for {path:?}"))),
+        };
+        let want = if matches!(route, Route::Compress) { "POST" } else { "GET" };
+        if method != want {
+            return Err((405, format!("{path} expects {want}, got {method}")));
+        }
+        Ok(route)
+    }
+}
+
+/// Percent-decoded `?key=value` pairs with typed accessors.
+#[derive(Debug, Default)]
+pub struct Query {
+    pairs: Vec<(String, String)>,
+}
+
+impl Query {
+    pub fn parse(raw: &str) -> Query {
+        let pairs = raw
+            .split('&')
+            .filter(|p| !p.is_empty())
+            .map(|p| match p.split_once('=') {
+                Some((k, v)) => (percent_decode(k), percent_decode(v)),
+                None => (percent_decode(p), String::new()),
+            })
+            .collect();
+        Query { pairs }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn req(&self, key: &str) -> HttpResult<&str> {
+        self.get(key)
+            .ok_or_else(|| (400, format!("missing query parameter {key:?}")))
+    }
+
+    pub fn usize_opt(&self, key: &str) -> HttpResult<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| (400, format!("{key} expects a non-negative integer, got {v:?}"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> HttpResult<usize> {
+        Ok(self.usize_opt(key)?.unwrap_or(default))
+    }
+
+    /// The optional `region=i0:i1,j0:j1,...` parameter, 400 on a
+    /// malformed spelling (same contract as the CLI's `--region`).
+    pub fn region_opt(&self, key: &str) -> HttpResult<Option<Region>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(spec) => Region::parse(spec)
+                .map(Some)
+                .map_err(|e| (400, format!("bad region {spec:?}: {e:#}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_every_route() {
+        assert_eq!(Route::resolve("GET", "/v1/archives").unwrap(), Route::ListArchives);
+        assert_eq!(
+            Route::resolve("GET", "/v1/archives/a.ardc/info").unwrap(),
+            Route::ArchiveInfo { name: "a.ardc".into() }
+        );
+        assert_eq!(
+            Route::resolve("GET", "/v1/archives/a.ardc/extract").unwrap(),
+            Route::ArchiveExtract { name: "a.ardc".into() }
+        );
+        assert_eq!(
+            Route::resolve("GET", "/v1/streams/run.tstr/steps").unwrap(),
+            Route::StreamSteps { name: "run.tstr".into() }
+        );
+        assert_eq!(
+            Route::resolve("GET", "/v1/streams/run.tstr/extract").unwrap(),
+            Route::StreamExtract { name: "run.tstr".into() }
+        );
+        assert_eq!(Route::resolve("POST", "/v1/compress").unwrap(), Route::Compress);
+        assert_eq!(Route::resolve("GET", "/v1/stats").unwrap(), Route::Stats);
+        // trailing slash tolerated (empty segments are dropped)
+        assert_eq!(Route::resolve("GET", "/v1/archives/").unwrap(), Route::ListArchives);
+    }
+
+    #[test]
+    fn unknown_paths_and_wrong_methods() {
+        assert_eq!(Route::resolve("GET", "/").unwrap_err().0, 404);
+        assert_eq!(Route::resolve("GET", "/v2/archives").unwrap_err().0, 404);
+        assert_eq!(Route::resolve("GET", "/v1/archives/a/b/c").unwrap_err().0, 404);
+        assert_eq!(Route::resolve("POST", "/v1/archives").unwrap_err().0, 405);
+        assert_eq!(Route::resolve("GET", "/v1/compress").unwrap_err().0, 405);
+        assert_eq!(Route::resolve("DELETE", "/v1/stats").unwrap_err().0, 405);
+    }
+
+    #[test]
+    fn name_validation_blocks_traversal() {
+        assert!(validate_name("run.tstr").is_ok());
+        assert_eq!(validate_name("..").unwrap_err().0, 400);
+        assert_eq!(validate_name(".hidden").unwrap_err().0, 400);
+        assert_eq!(validate_name("a%2Fb").unwrap_err().0, 400, "encoded slash");
+        assert_eq!(validate_name("a%5Cb").unwrap_err().0, 400, "encoded backslash");
+        assert_eq!(validate_name("%2e%2e").unwrap_err().0, 400, "encoded dots");
+        // resolve applies the same validation in place
+        assert_eq!(
+            Route::resolve("GET", "/v1/archives/%2e%2e/info").unwrap_err().0,
+            400
+        );
+    }
+
+    #[test]
+    fn typed_query_extraction() {
+        let q = Query::parse("step=3&region=0%3A4%2C0%3A8&limit=10&empty");
+        assert_eq!(q.get("step"), Some("3"));
+        assert_eq!(q.req("step").unwrap(), "3");
+        assert_eq!(q.req("missing").unwrap_err().0, 400);
+        assert_eq!(q.usize_or("limit", 5).unwrap(), 10);
+        assert_eq!(q.usize_or("absent", 5).unwrap(), 5);
+        assert_eq!(q.get("empty"), Some(""));
+        let r = q.region_opt("region").unwrap().unwrap();
+        assert_eq!(r.shape(), vec![4, 8]);
+        assert!(q.region_opt("nope").unwrap().is_none());
+
+        let bad = Query::parse("step=x&region=5:1");
+        assert_eq!(bad.usize_opt("step").unwrap_err().0, 400);
+        assert_eq!(bad.region_opt("region").unwrap_err().0, 400, "reversed range");
+    }
+}

@@ -1,0 +1,651 @@
+//! The `serve` mode: a long-running HTTP server over a root directory
+//! of archives and temporal streams.
+//!
+//! Concurrency model: an acceptor thread feeds connections into a
+//! channel; a dispatcher drains them in batches and fans each batch out
+//! onto the crate-wide [`Executor`] worker pool, so request handling
+//! reuses the same threads and per-thread [`Scratch`] arenas as the
+//! decode kernels it calls into (nested decode parallelism runs inline
+//! on the pool, by the executor's design). Hot state is shared through
+//! [`LruCache`]: open stream readers and parsed archives by path,
+//! decoded keyframe regions by `(path, step, region class)` — a warm
+//! `(step, region)` extract decodes only the residual chain, touching
+//! zero keyframe payload bytes.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::codec::{archive_stats, Codec, CodecBuilder, ErrorBound, Sz3Codec, ZfpCodec};
+use crate::compressor::format::STREAM_MAGIC;
+use crate::compressor::Archive;
+use crate::config::{self, DatasetKind, Scale};
+use crate::data::Region;
+use crate::engine::{Executor, Scratch};
+use crate::stream::StreamReader;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Value};
+use crate::util::parallel;
+use crate::Result;
+
+use super::cache::{CacheKey, CacheValue, LruCache};
+use super::http::{self, Request, Response};
+use super::info;
+use super::router::{validate_name, HttpResult, Query, Route};
+
+/// `cli serve` knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Directory holding the `.ardc` / `.tstr` files to serve.
+    pub root: PathBuf,
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks a free port).
+    pub addr: String,
+    /// Max connections dispatched per executor batch (0 = thread count).
+    pub batch: usize,
+    /// LRU cache capacity in bytes.
+    pub cache_bytes: usize,
+}
+
+impl ServeConfig {
+    pub fn new(root: impl Into<PathBuf>, addr: impl Into<String>) -> Self {
+        Self {
+            root: root.into(),
+            addr: addr.into(),
+            batch: 0,
+            cache_bytes: 256 * 1024 * 1024,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Metrics {
+    requests: AtomicU64,
+    status_2xx: AtomicU64,
+    status_4xx: AtomicU64,
+    status_5xx: AtomicU64,
+    /// Compressed keyframe payload bytes actually decoded (cache misses
+    /// pay `region_cost.bytes_touched`; hits pay zero).
+    kf_payload_bytes: AtomicU64,
+}
+
+struct Shared {
+    root: PathBuf,
+    cache: LruCache,
+    metrics: Metrics,
+    quiet: bool,
+}
+
+/// A bound-but-not-yet-running server; [`Server::run`] blocks until
+/// [`StopHandle::stop`] is called.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    batch: usize,
+}
+
+/// Cloneable handle that wakes the accept loop and shuts the server
+/// down.
+#[derive(Clone)]
+pub struct StopHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl StopHandle {
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.root.is_dir(),
+            "serve root {} is not a directory",
+            cfg.root.display()
+        );
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let batch = if cfg.batch == 0 { parallel::num_threads() } else { cfg.batch };
+        Ok(Server {
+            listener,
+            addr,
+            shared: Arc::new(Shared {
+                root: cfg.root,
+                cache: LruCache::new(cfg.cache_bytes),
+                metrics: Metrics::default(),
+                quiet: std::env::var_os("ATTN_REDUCE_QUIET").is_some(),
+            }),
+            stop: Arc::new(AtomicBool::new(false)),
+            batch: batch.max(1),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle { stop: self.stop.clone(), addr: self.addr }
+    }
+
+    /// Accept until stopped. Connections are handed to a dispatcher
+    /// thread that batches them onto the executor pool.
+    pub fn run(self) -> Result<()> {
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let shared = self.shared.clone();
+        let batch = self.batch;
+        let dispatcher = std::thread::Builder::new()
+            .name("serve-dispatch".to_string())
+            .spawn(move || dispatch_loop(rx, shared, batch))?;
+        for conn in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Ok(stream) = conn {
+                let _ = tx.send(stream);
+            }
+        }
+        drop(tx); // dispatcher drains the queue, then exits
+        dispatcher
+            .join()
+            .map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
+        Ok(())
+    }
+}
+
+fn dispatch_loop(rx: mpsc::Receiver<TcpStream>, shared: Arc<Shared>, batch_cap: usize) {
+    loop {
+        let Ok(first) = rx.recv() else {
+            return; // acceptor gone
+        };
+        // opportunistically batch whatever else is already queued
+        let mut batch = vec![std::sync::Mutex::new(Some(first))];
+        while batch.len() < batch_cap {
+            match rx.try_recv() {
+                Ok(s) => batch.push(std::sync::Mutex::new(Some(s))),
+                Err(_) => break,
+            }
+        }
+        let shared_ref = &shared;
+        let batch_ref = &batch;
+        let outcomes = Executor::global().par_map_isolated(batch.len(), move |i, scratch| {
+            if let Some(mut stream) = batch_ref[i].lock().unwrap().take() {
+                handle_connection(shared_ref, &mut stream, scratch);
+            }
+        });
+        for outcome in outcomes {
+            if let Err(panic_msg) = outcome {
+                // the connection died without a response; the server
+                // itself must keep going
+                if !shared.quiet {
+                    eprintln!("serve: handler panicked: {panic_msg}");
+                }
+            }
+        }
+    }
+}
+
+fn handle_connection(shared: &Shared, stream: &mut TcpStream, scratch: &mut Scratch) {
+    let t0 = Instant::now();
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let (target, method, response, cache_note) =
+        match http::read_request(stream, &mut scratch.bytes) {
+            Ok(req) => {
+                let (resp, note) = respond(shared, &req);
+                (req.target(), req.method.clone(), resp, note)
+            }
+            Err(e) => (
+                "-".to_string(),
+                "?".to_string(),
+                Response::error(400, &format!("{e:#}")),
+                "-",
+            ),
+        };
+    let _ = response.write_to(stream);
+    let m = &shared.metrics;
+    m.requests.fetch_add(1, Ordering::Relaxed);
+    match response.status {
+        200..=299 => m.status_2xx.fetch_add(1, Ordering::Relaxed),
+        400..=499 => m.status_4xx.fetch_add(1, Ordering::Relaxed),
+        _ => m.status_5xx.fetch_add(1, Ordering::Relaxed),
+    };
+    if !shared.quiet {
+        eprintln!(
+            "serve: {method} {target} -> {} {}B {}µs cache={cache_note}",
+            response.status,
+            response.body.len(),
+            t0.elapsed().as_micros()
+        );
+    }
+}
+
+/// Route + dispatch. The second element is the request log's cache
+/// column: `hit` / `miss` for cacheable routes, `-` otherwise.
+fn respond(shared: &Shared, req: &Request) -> (Response, &'static str) {
+    let route = match Route::resolve(&req.method, &req.path) {
+        Ok(r) => r,
+        Err((status, msg)) => return (Response::error(status, &msg), "-"),
+    };
+    let query = Query::parse(&req.query);
+    let out = match route {
+        Route::ListArchives => list_archives(shared, &query).map(|r| (r, "-")),
+        Route::ArchiveInfo { name } => archive_info(shared, &name).map(|r| (r, "-")),
+        Route::ArchiveExtract { name } => archive_extract(shared, &name, &query),
+        Route::StreamSteps { name } => stream_steps(shared, &name, &query),
+        Route::StreamExtract { name } => stream_extract(shared, &name, &query),
+        Route::Compress => compress(shared, &query, &req.body).map(|r| (r, "-")),
+        Route::Stats => stats(shared).map(|r| (r, "-")),
+    };
+    match out {
+        Ok(pair) => pair,
+        Err((status, msg)) => (Response::error(status, &msg), "-"),
+    }
+}
+
+/// Map a library error onto a 500 (handlers pre-classify 4xx cases).
+fn internal<T>(r: Result<T>) -> HttpResult<T> {
+    r.map_err(|e| (500, format!("{e:#}")))
+}
+
+fn read_file(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Vec<u8>)> {
+    let path = shared.root.join(name);
+    match std::fs::read(&path) {
+        Ok(bytes) => Ok((path, bytes)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Err((404, format!("no file {name:?} under the serve root")))
+        }
+        Err(e) => Err((500, format!("reading {name:?}: {e}"))),
+    }
+}
+
+fn is_stream_bytes(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && &bytes[0..4] == STREAM_MAGIC
+}
+
+/// Canonical `lo:hi,...` spelling — the cache's region class (an
+/// explicit full region and a defaulted one share an entry).
+fn region_class(region: &Region) -> String {
+    region
+        .lo
+        .iter()
+        .zip(&region.hi)
+        .map(|(l, h)| format!("{l}:{h}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn tensor_bytes(t: &Tensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(t.len() * 4);
+    for v in t.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+// -- GET /v1/archives -------------------------------------------------------
+
+fn list_archives(shared: &Shared, query: &Query) -> HttpResult<Response> {
+    let limit = query.usize_or("limit", 100)?.clamp(1, 1000);
+    let cursor = query.get("cursor").map(http::percent_decode);
+    let dir = std::fs::read_dir(&shared.root)
+        .map_err(|e| (500, format!("reading serve root: {e}")))?;
+    let mut files: Vec<(String, u64)> = Vec::new();
+    for entry in dir.flatten() {
+        let Ok(name) = entry.file_name().into_string() else {
+            continue;
+        };
+        if !(name.ends_with(".ardc") || name.ends_with(".tstr")) {
+            continue;
+        }
+        let size = entry.metadata().map(|m| m.len()).unwrap_or(0);
+        files.push((name, size));
+    }
+    files.sort();
+    let start = match &cursor {
+        Some(c) => files.partition_point(|(n, _)| n.as_str() <= c.as_str()),
+        None => 0,
+    };
+    let page = &files[start..(start + limit).min(files.len())];
+    let mut items = Vec::new();
+    for (name, size) in page {
+        // classify by magic, not extension: a `.ardc`-named stream (the
+        // golden corpus has one) must route to /v1/streams
+        let mut magic = [0u8; 4];
+        let kind = match std::fs::File::open(shared.root.join(name))
+            .and_then(|mut f| f.read_exact(&mut magic))
+        {
+            Ok(()) if &magic == STREAM_MAGIC => "stream",
+            Ok(()) => "archive",
+            Err(_) => "unknown",
+        };
+        items.push(json::obj(vec![
+            ("name", json::s(name.clone())),
+            ("bytes", json::num(*size as f64)),
+            ("kind", json::s(kind)),
+        ]));
+    }
+    let next_cursor = if start + page.len() < files.len() {
+        page.last()
+            .map(|(n, _)| json::s(n.clone()))
+            .unwrap_or(Value::Null)
+    } else {
+        Value::Null
+    };
+    Ok(Response::json(&json::obj(vec![
+        ("archives", Value::Arr(items)),
+        ("total", json::num(files.len() as f64)),
+        ("next_cursor", next_cursor),
+    ])))
+}
+
+// -- GET /v1/archives/{name}/info -------------------------------------------
+
+fn archive_info(shared: &Shared, name: &str) -> HttpResult<Response> {
+    let (_, bytes) = read_file(shared, name)?;
+    let doc = internal(info::info_json(&bytes))?;
+    Ok(Response::json(&doc))
+}
+
+// -- shared loaders ---------------------------------------------------------
+
+/// The parsed archive for `name`, through the cache. Second element:
+/// was it a cache hit?
+fn load_archive(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<Archive>, bool)> {
+    let path = shared.root.join(name);
+    let key = CacheKey::File(path.clone());
+    if let Some(CacheValue::Archive(a)) = shared.cache.get(&key) {
+        return Ok((path, a, true));
+    }
+    let (path, bytes) = read_file(shared, name)?;
+    if is_stream_bytes(&bytes) {
+        return Err((400, format!("{name:?} is a temporal stream; use /v1/streams/{name}/...")));
+    }
+    let archive = Arc::new(
+        Archive::from_bytes(&bytes).map_err(|e| (400, format!("bad archive {name:?}: {e:#}")))?,
+    );
+    let cost = bytes.len();
+    shared.cache.insert(key, CacheValue::Archive(archive.clone()), cost, cost);
+    Ok((path, archive, false))
+}
+
+/// The open stream reader for `name`, through the cache.
+fn load_reader(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<StreamReader>, bool)> {
+    let path = shared.root.join(name);
+    let key = CacheKey::File(path.clone());
+    if let Some(CacheValue::Reader(r)) = shared.cache.get(&key) {
+        return Ok((path, r, true));
+    }
+    let (path, bytes) = read_file(shared, name)?;
+    if !is_stream_bytes(&bytes) {
+        let msg = format!("{name:?} is not a temporal stream; use /v1/archives/{name}/...");
+        return Err((400, msg));
+    }
+    let cost = bytes.len();
+    let reader = Arc::new(
+        StreamReader::from_bytes(bytes)
+            .map_err(|e| (400, format!("bad stream {name:?}: {e:#}")))?,
+    );
+    shared.cache.insert(key, CacheValue::Reader(reader.clone()), cost, cost);
+    Ok((path, reader, false))
+}
+
+fn require_served_codec(codec_id: &str) -> HttpResult<()> {
+    if codec_id == "sz3" || codec_id == "zfp" {
+        Ok(())
+    } else {
+        Err((
+            501,
+            format!(
+                "serving decodes the pure-rust codecs (sz3|zfp); {codec_id:?} archives \
+                 need checkpoints and go through the CLI"
+            ),
+        ))
+    }
+}
+
+// -- GET /v1/archives/{name}/extract ----------------------------------------
+
+fn archive_extract(
+    shared: &Shared,
+    name: &str,
+    query: &Query,
+) -> HttpResult<(Response, &'static str)> {
+    let (_, archive, hit) = load_archive(shared, name)?;
+    let codec_id = archive
+        .header
+        .get("codec")
+        .and_then(|v| v.as_str())
+        .unwrap_or("?")
+        .to_string();
+    require_served_codec(&codec_id)?;
+    let dsv = archive.header.req("dataset").map_err(|e| (400, format!("{e:#}")))?;
+    let dataset = internal(config::DatasetConfig::from_json(dsv))?;
+    let region = match query.region_opt("region")? {
+        Some(r) => {
+            r.validate_in(&dataset.dims).map_err(|e| (400, format!("{e:#}")))?;
+            r
+        }
+        None => Region::full(&dataset.dims),
+    };
+    let mut b = CodecBuilder::new();
+    let codec = internal(b.for_archive(&archive))?;
+    let tensor = if archive.is_multi_field() {
+        let names = internal(archive.field_names())?;
+        let field = query.req("field").map_err(|_| {
+            (400, format!("multi-field archive: field=NAME required (have: {names:?})"))
+        })?;
+        let i = names
+            .iter()
+            .position(|n| n == field)
+            .ok_or_else(|| (404, format!("no field {field:?} (have: {names:?})")))?;
+        let sub = internal(archive.field_archive(i))?;
+        internal(codec.decompress_region(&sub, &region))?
+    } else {
+        if query.get("field").is_some() {
+            return Err((400, "field= only applies to multi-field (v2) archives".to_string()));
+        }
+        internal(codec.decompress_region(&archive, &region))?
+    };
+    let resp = Response::octets(tensor_bytes(&tensor))
+        .with_header("x-cache", if hit { "hit" } else { "miss" })
+        .with_header("x-points", tensor.len().to_string());
+    Ok((resp, if hit { "hit" } else { "miss" }))
+}
+
+// -- GET /v1/streams/{name}/steps -------------------------------------------
+
+fn stream_steps(
+    shared: &Shared,
+    name: &str,
+    query: &Query,
+) -> HttpResult<(Response, &'static str)> {
+    let (_, reader, hit) = load_reader(shared, name)?;
+    let n = reader.n_steps();
+    let cursor = query.usize_or("cursor", 0)?.min(n);
+    let limit = query.usize_or("limit", 256)?.clamp(1, 4096);
+    let end = (cursor + limit).min(n);
+    let steps: Vec<Value> = reader.timeline().entries[cursor..end]
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            json::obj(vec![
+                ("step", json::num((cursor + i) as f64)),
+                ("keyframe", Value::Bool(e.keyframe)),
+                ("bytes", json::num(e.len as f64)),
+            ])
+        })
+        .collect();
+    let next_cursor = if end < n { json::num(end as f64) } else { Value::Null };
+    let doc = json::obj(vec![
+        ("name", json::s(name)),
+        ("codec", json::s(reader.codec_id())),
+        ("bound", json::s(reader.bound().to_string())),
+        ("dims", json::arr_usize(&reader.dataset().dims)),
+        ("n_steps", json::num(n as f64)),
+        ("keyint", json::num(reader.keyframe_interval() as f64)),
+        ("finished", Value::Bool(reader.is_finished())),
+        ("steps", Value::Arr(steps)),
+        ("next_cursor", next_cursor),
+    ]);
+    Ok((Response::json(&doc), if hit { "hit" } else { "miss" }))
+}
+
+// -- GET /v1/streams/{name}/extract -----------------------------------------
+
+fn stream_extract(
+    shared: &Shared,
+    name: &str,
+    query: &Query,
+) -> HttpResult<(Response, &'static str)> {
+    let (path, reader, _) = load_reader(shared, name)?;
+    require_served_codec(reader.codec_id())?;
+    let step = query
+        .req("step")?
+        .parse::<usize>()
+        .map_err(|_| (400, "step expects a non-negative integer".to_string()))?;
+    if step >= reader.n_steps() {
+        let msg = format!("step {step} out of range ({} steps in stream)", reader.n_steps());
+        return Err((400, msg));
+    }
+    let region = match query.region_opt("region")? {
+        Some(r) => {
+            r.validate_in(&reader.dataset().dims).map_err(|e| (400, format!("{e:#}")))?;
+            r
+        }
+        None => Region::full(&reader.dataset().dims),
+    };
+    let mut b = CodecBuilder::new();
+    let codec = internal(reader.build_codec(&mut b))?;
+    let kstep = internal(reader.keyframe_step(step))?;
+
+    // the keyframe is the reusable prefix of every chain that starts at
+    // it: cache the decoded region once, then warm requests pay only
+    // the residual steps
+    let key = CacheKey::Keyframe(path, kstep, region_class(&region));
+    let (base, hit, kf_bytes) = match shared.cache.get(&key) {
+        Some(CacheValue::Frame(f)) => (f, true, 0usize),
+        _ => {
+            let cost = internal(reader.region_cost(kstep, &region))?;
+            let frame = Arc::new(internal(reader.extract(&*codec, kstep, &region))?);
+            shared.cache.insert(
+                key,
+                CacheValue::Frame(frame.clone()),
+                frame.len() * 4,
+                cost.bytes_touched,
+            );
+            (frame, false, cost.bytes_touched)
+        }
+    };
+    shared
+        .metrics
+        .kf_payload_bytes
+        .fetch_add(kf_bytes as u64, Ordering::Relaxed);
+    let tensor = if step == kstep {
+        (*base).clone()
+    } else {
+        internal(reader.extract_from(&*codec, &base, kstep, step, &region))?
+    };
+    let resp = Response::octets(tensor_bytes(&tensor))
+        .with_header("x-cache", if hit { "hit" } else { "miss" })
+        .with_header("x-keyframe-payload-bytes", kf_bytes.to_string())
+        .with_header("x-chain-steps", (step - kstep + 1).to_string())
+        .with_header("x-points", tensor.len().to_string());
+    Ok((resp, if hit { "hit" } else { "miss" }))
+}
+
+// -- POST /v1/compress ------------------------------------------------------
+
+fn compress(shared: &Shared, query: &Query, body: &[u8]) -> HttpResult<Response> {
+    let name = validate_name(query.req("name")?)?;
+    let codec_id = query.get("codec").unwrap_or("sz3").to_string();
+    require_served_codec(&codec_id)?;
+    let kind = DatasetKind::parse(query.get("dataset").unwrap_or("s3d"))
+        .map_err(|e| (400, format!("{e:#}")))?;
+    let scale = Scale::parse(query.get("scale").unwrap_or("bench"))
+        .map_err(|e| (400, format!("{e:#}")))?;
+    let bound = ErrorBound::parse(query.get("bound").unwrap_or("nrmse:1e-3"))
+        .map_err(|e| (400, format!("{e:#}")))?;
+    let cfg = config::dataset_preset(kind, scale);
+    let expect = cfg.total_points() * 4;
+    if body.len() != expect {
+        return Err((
+            400,
+            format!(
+                "body holds {} bytes; dataset {}/{:?} expects {expect} (dims {:?} as raw \
+                 little-endian f32)",
+                body.len(),
+                kind.name(),
+                scale,
+                cfg.dims
+            ),
+        ));
+    }
+    let data: Vec<f32> = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let field = Tensor::new(cfg.dims.clone(), data);
+    let archive = internal(match codec_id.as_str() {
+        "sz3" => Sz3Codec::new(cfg.clone()).compress(&field, &bound),
+        _ => ZfpCodec::new(cfg.clone()).compress(&field, &bound),
+    })?;
+    let path = shared.root.join(&name);
+    internal(archive.save(&path))?;
+    // a rewritten file invalidates any cached reader/archive/keyframes
+    shared.cache.invalidate_file(&path);
+    let stats = internal(archive_stats(&archive))?;
+    Ok(Response::json(&json::obj(vec![
+        ("name", json::s(name)),
+        ("codec", json::s(codec_id)),
+        ("bound", json::s(bound.to_string())),
+        ("bytes", json::num(stats.archive_bytes as f64)),
+        ("cr", json::num(stats.cr)),
+        ("cr_total", json::num(stats.cr_total)),
+    ])))
+}
+
+// -- GET /v1/stats ----------------------------------------------------------
+
+fn stats(shared: &Shared) -> HttpResult<Response> {
+    let m = &shared.metrics;
+    let c = shared.cache.counters();
+    let lookups = c.hits + c.misses;
+    let hit_rate = if lookups == 0 { 0.0 } else { c.hits as f64 / lookups as f64 };
+    Ok(Response::json(&json::obj(vec![
+        ("requests", json::num(m.requests.load(Ordering::Relaxed) as f64)),
+        (
+            "responses",
+            json::obj(vec![
+                ("ok_2xx", json::num(m.status_2xx.load(Ordering::Relaxed) as f64)),
+                ("client_4xx", json::num(m.status_4xx.load(Ordering::Relaxed) as f64)),
+                ("server_5xx", json::num(m.status_5xx.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
+        (
+            "cache",
+            json::obj(vec![
+                ("entries", json::num(c.entries as f64)),
+                ("bytes", json::num(c.bytes as f64)),
+                ("capacity_bytes", json::num(c.capacity_bytes as f64)),
+                ("hits", json::num(c.hits as f64)),
+                ("misses", json::num(c.misses as f64)),
+                ("hit_rate", json::num(hit_rate)),
+                ("evictions", json::num(c.evictions as f64)),
+                ("bytes_saved", json::num(c.bytes_saved as f64)),
+            ]),
+        ),
+        (
+            "keyframe_payload_bytes_decoded",
+            json::num(m.kf_payload_bytes.load(Ordering::Relaxed) as f64),
+        ),
+    ])))
+}

@@ -57,7 +57,7 @@ mod residual;
 mod timeline;
 mod writer;
 
-pub use reader::{FrameIter, RegionCost, StreamReader, StreamStats};
+pub use reader::{FrameIter, RegionCost, SharedReader, StreamReader, StreamStats};
 pub use residual::{add_residual, encode_chain, residual_of, EncodedStep};
 pub use timeline::{StepEntry, TimelineIndex};
 pub use writer::{StepStats, StreamSummary, StreamWriter};

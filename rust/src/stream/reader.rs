@@ -53,6 +53,12 @@ pub struct StreamStats {
     pub cr_total: f64,
 }
 
+/// A shareable reader handle: a [`StreamReader`] is immutable after
+/// open (plain data + parsed index), so concurrent `(step, region)`
+/// decodes need no locking — the serving layer clones one `Arc` per
+/// request.
+pub type SharedReader = std::sync::Arc<StreamReader>;
+
 /// Read-side view of one v4 stream.
 pub struct StreamReader {
     bytes: Vec<u8>,
@@ -197,6 +203,16 @@ impl StreamReader {
         self.records_start
     }
 
+    /// Size of the backing file in bytes (cache cost accounting).
+    pub fn file_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// The keyframe step at the base of `step`'s residual chain.
+    pub fn keyframe_step(&self, step: usize) -> Result<usize> {
+        self.index.keyframe_for(step)
+    }
+
     /// Parse the embedded archive of one step.
     pub fn step_archive(&self, step: usize) -> Result<Archive> {
         let e = self
@@ -248,6 +264,34 @@ impl StreamReader {
             });
         }
         Ok(recon.expect("chain is non-empty"))
+    }
+
+    /// [`Self::extract`] resumed from an already-decoded base: `base`
+    /// must be the decode of `(base_step, region)` where `base_step` is
+    /// `step`'s keyframe (see [`Self::keyframe_step`]) — the serving
+    /// layer caches decoded keyframe regions and replays only the
+    /// residual tail through here. Summing the same archives in the
+    /// same order keeps the result bit-identical to a cold
+    /// [`Self::extract`].
+    pub fn extract_from(
+        &self,
+        codec: &dyn Codec,
+        base: &Tensor,
+        base_step: usize,
+        step: usize,
+        region: &Region,
+    ) -> Result<Tensor> {
+        region.validate_in(&self.dataset.dims)?;
+        ensure!(
+            self.index.keyframe_for(step)? == base_step,
+            "base step {base_step} is not the keyframe of step {step}"
+        );
+        let mut recon = base.clone();
+        for s in base_step + 1..=step {
+            let dec = codec.decompress_region(&self.step_archive(s)?, region)?;
+            recon = add_residual(&recon, &dec);
+        }
+        Ok(recon)
     }
 
     /// Account exactly what a `(step, region)` decode touches: per chain
@@ -364,5 +408,19 @@ impl Iterator for FrameIter<'_> {
                 Some(Err(e))
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The serving layer shares one reader across pool threads; this
+    /// pins the auto-trait guarantee at compile time.
+    #[test]
+    fn reader_handles_are_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<StreamReader>();
+        assert_send_sync::<SharedReader>();
     }
 }

@@ -405,6 +405,108 @@ fn info_reports_per_section_byte_breakdown() {
 }
 
 #[test]
+fn info_json_pins_the_machine_readable_breakdown() {
+    let archive_p = tmp("info_json_field.ardc");
+    let out = bin()
+        .args([
+            "compress", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset", "e3sm",
+            "--scale", "smoke", "--out",
+        ])
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin().args(["info", "--json", "--in"]).arg(&archive_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    // pinned keys of the document (the /v1/archives/{name}/info route
+    // returns exactly this body): kind/version/codec, classed sections,
+    // framing delta, entropy split — integers print without decimals
+    assert!(stdout.contains("\"kind\": \"archive\""), "{stdout}");
+    assert!(stdout.contains("\"version\": 3"), "{stdout}");
+    assert!(stdout.contains("\"codec\": \"sz3\""), "{stdout}");
+    assert!(stdout.contains("\"tag\": \"SZ3B\""), "{stdout}");
+    assert!(stdout.contains("\"class\": \"payload\""), "{stdout}");
+    assert!(stdout.contains("\"tag\": \"BIDX\""), "{stdout}");
+    assert!(stdout.contains("\"class\": \"index\""), "{stdout}");
+    assert!(stdout.contains("\"framing_bytes\": "), "{stdout}");
+    assert!(stdout.contains("\"entropy\": "), "{stdout}");
+    assert!(stdout.contains("\"tiles\": 16"), "{stdout}");
+    assert!(stdout.contains("\"symbol_bytes\": "), "{stdout}");
+    // the file size in the document matches the file on disk
+    let bytes = std::fs::metadata(&archive_p).unwrap().len();
+    assert!(stdout.contains(&format!("\"bytes\": {bytes}")), "{stdout}");
+
+    // the same flag on a v4 stream
+    let stream_p = tmp("info_json_stream.tstr");
+    std::fs::remove_file(&stream_p).ok();
+    let out = bin()
+        .args([
+            "stream", "append", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset",
+            "e3sm", "--scale", "smoke", "--keyint", "2", "--steps", "4", "--out",
+        ])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin().args(["info", "--json", "--in"]).arg(&stream_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"kind\": \"stream\""), "{stdout}");
+    assert!(stdout.contains("\"version\": 4"), "{stdout}");
+    assert!(stdout.contains("\"steps\": 4"), "{stdout}");
+    assert!(stdout.contains("\"keyframes\": 2"), "{stdout}");
+    assert!(stdout.contains("\"record_payload_bytes\": "), "{stdout}");
+    assert!(stdout.contains("\"tidx_bytes\": "), "{stdout}");
+
+    // --json without --in is a runtime error, not silence
+    let out = bin().args(["info", "--json"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--in"));
+}
+
+#[test]
+fn stream_extract_step_out_of_range_is_a_usage_error_with_exit_2() {
+    let stream_p = tmp("cli_oor_stream.tstr");
+    std::fs::remove_file(&stream_p).ok();
+    let out = bin()
+        .args([
+            "stream", "append", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset",
+            "e3sm", "--scale", "smoke", "--keyint", "2", "--steps", "3", "--out",
+        ])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // step 3 of a 3-step stream: one pinned line on stderr, exit 2 —
+    // the same contract as a malformed --region
+    let out = bin()
+        .args(["stream", "extract", "--step", "3", "--in"])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "out-of-range step is a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(stderr.lines().count(), 1, "one-line error, got: {stderr}");
+    assert!(
+        stderr.contains("error: --step 3 out of range (3 steps in stream)"),
+        "pinned message drifted: {stderr}"
+    );
+
+    // in-range steps still work after the check
+    let out = bin()
+        .args(["stream", "extract", "--step", "2", "--in"])
+        .arg(&stream_p)
+        .arg("--out")
+        .arg(tmp("cli_oor_frame.f32"))
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+}
+
+#[test]
 fn threads_flag_rejects_garbage() {
     let out = bin()
         .args(["compress", "--codec", "sz3", "--scale", "smoke", "--threads", "zero"])

@@ -1,0 +1,345 @@
+//! End-to-end tests of the serving layer over real sockets: a server
+//! per test on an OS-assigned port, a minimal in-test HTTP client, and
+//! the acceptance contract pinned — `/v1/streams/{name}/extract` bytes
+//! are identical to `cli stream extract`, a warm repeat is a cache hit
+//! that decodes zero keyframe payload bytes, and `/info` returns the
+//! exact document `cli info --json` prints.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
+use attn_reduce::compressor::Archive;
+use attn_reduce::config::{dataset_preset, stream_frame_preset, DatasetKind, Scale};
+use attn_reduce::data::timeseries;
+use attn_reduce::serve::{ServeConfig, Server, StopHandle};
+use attn_reduce::stream::StreamWriter;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_attn-reduce"))
+}
+
+fn root(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("attn_reduce_serve_it").join(name);
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A 6-step sz3 stream with keyframe interval 2 at `dir/name`.
+fn make_stream(dir: &Path, name: &str) -> PathBuf {
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed, 0, 6);
+    let path = dir.join(name);
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg, ErrorBound::Nrmse(1e-3), 2).unwrap();
+    w.append_frames(&codec, &frames).unwrap();
+    w.finish().unwrap();
+    path
+}
+
+/// A single-field v3 sz3 archive at `dir/name`.
+fn make_archive(dir: &Path, name: &str) -> PathBuf {
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = attn_reduce::data::generate(&cfg);
+    let archive = Sz3Codec::new(cfg).compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    let path = dir.join(name);
+    archive.save(&path).unwrap();
+    path
+}
+
+/// A server running on its own thread; stopped and joined on drop.
+struct Running {
+    addr: SocketAddr,
+    stop: StopHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Running {
+    fn start(root: &Path) -> Running {
+        std::env::set_var("ATTN_REDUCE_QUIET", "1");
+        let server = Server::bind(ServeConfig::new(root, "127.0.0.1:0")).unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_handle();
+        let thread = std::thread::spawn(move || server.run().unwrap());
+        Running { addr, stop, thread: Some(thread) }
+    }
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.stop.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+struct Reply {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Reply {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+fn send(addr: SocketAddr, head: &str, body: &[u8]) -> Reply {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw).unwrap(); // connection: close delimits
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("no header/body split in response");
+    let head_text = String::from_utf8_lossy(&raw[..split]).into_owned();
+    let mut lines = head_text.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .unwrap()
+        .split_whitespace()
+        .nth(1)
+        .expect("no status code")
+        .parse()
+        .unwrap();
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+        .collect();
+    Reply { status, headers, body: raw[split + 4..].to_vec() }
+}
+
+fn get(addr: SocketAddr, target: &str) -> Reply {
+    send(addr, &format!("GET {target} HTTP/1.1\r\nhost: test\r\n\r\n"), &[])
+}
+
+fn post(addr: SocketAddr, target: &str, body: &[u8]) -> Reply {
+    let head = format!(
+        "POST {target} HTTP/1.1\r\nhost: test\r\ncontent-length: {}\r\n\r\n",
+        body.len()
+    );
+    send(addr, &head, body)
+}
+
+/// The acceptance criterion: server extract bytes == CLI extract bytes,
+/// and a warm repeat is a cache hit that decodes no keyframe payload.
+#[test]
+fn stream_extract_matches_cli_and_warm_repeat_skips_keyframe_decode() {
+    let dir = root("accept");
+    let stream_p = make_stream(&dir, "run.tstr");
+    let srv = Running::start(&dir);
+
+    // reference bytes straight from the CLI (step 3 chains from the
+    // keyframe at step 2; the region covers 2 of the 4 16x16 tiles)
+    let cli_out = dir.join("cli_region.f32");
+    let out = bin()
+        .args(["stream", "extract", "--step", "3", "--region", "8:24,0:16", "--in"])
+        .arg(&stream_p)
+        .arg("--out")
+        .arg(&cli_out)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let want = std::fs::read(&cli_out).unwrap();
+
+    let cold = get(srv.addr, "/v1/streams/run.tstr/extract?step=3&region=8:24,0:16");
+    assert_eq!(cold.status, 200, "{}", cold.text());
+    assert_eq!(cold.body, want, "served bytes differ from the CLI decode");
+    assert_eq!(cold.header("x-cache"), Some("miss"));
+    assert_eq!(cold.header("x-chain-steps"), Some("2"));
+    let kf_bytes: usize = cold
+        .header("x-keyframe-payload-bytes")
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!(kf_bytes > 0, "a cold decode must touch keyframe payload");
+
+    // warm repeat: same bytes, cache hit, zero keyframe payload decoded
+    let warm = get(srv.addr, "/v1/streams/run.tstr/extract?step=3&region=8:24,0:16");
+    assert_eq!(warm.status, 200);
+    assert_eq!(warm.body, want, "warm decode diverged");
+    assert_eq!(warm.header("x-cache"), Some("hit"));
+    assert_eq!(warm.header("x-keyframe-payload-bytes"), Some("0"));
+
+    // a keyframe step itself is served straight from the cached frame
+    let kf = get(srv.addr, "/v1/streams/run.tstr/extract?step=2&region=8:24,0:16");
+    assert_eq!(kf.status, 200);
+    assert_eq!(kf.header("x-cache"), Some("hit"), "same (keyframe, region) class");
+    assert_eq!(kf.header("x-chain-steps"), Some("1"));
+
+    // the steps route reflects the stream's timeline
+    let steps = get(srv.addr, "/v1/streams/run.tstr/steps");
+    assert_eq!(steps.status, 200);
+    let text = steps.text();
+    assert!(text.contains("\"n_steps\": 6"), "{text}");
+    assert!(text.contains("\"keyint\": 2"), "{text}");
+    assert!(text.contains("\"keyframe\": true"), "{text}");
+    assert!(text.contains("\"codec\": \"sz3\""), "{text}");
+
+    // stats: the cold request missed twice (reader + keyframe); the
+    // warm and keyframe extracts hit both, the steps route hit the
+    // reader — and the total keyframe payload decoded equals the one
+    // cold decode
+    let stats = get(srv.addr, "/v1/stats");
+    assert_eq!(stats.status, 200);
+    let text = stats.text();
+    assert!(text.contains("\"hits\": 5"), "{text}");
+    assert!(text.contains("\"misses\": 2"), "{text}");
+    assert!(
+        text.contains(&format!("\"keyframe_payload_bytes_decoded\": {kf_bytes}")),
+        "{text}"
+    );
+}
+
+#[test]
+fn archive_routes_list_info_and_extract_match_the_cli() {
+    let dir = root("archive");
+    let archive_p = make_archive(&dir, "field.ardc");
+    let srv = Running::start(&dir);
+
+    // listing: one archive, classified by magic
+    let list = get(srv.addr, "/v1/archives");
+    assert_eq!(list.status, 200);
+    let text = list.text();
+    assert!(text.contains("\"name\": \"field.ardc\""), "{text}");
+    assert!(text.contains("\"kind\": \"archive\""), "{text}");
+    assert!(text.contains("\"total\": 1"), "{text}");
+
+    // /info body is byte-identical to `cli info --json --in`
+    let out = bin().args(["info", "--json", "--in"]).arg(&archive_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let info = get(srv.addr, "/v1/archives/field.ardc/info");
+    assert_eq!(info.status, 200);
+    assert_eq!(info.body, out.stdout, "route and CLI JSON drifted apart");
+
+    // region extract equals the CLI's file output bit for bit
+    let cli_out = dir.join("cli_region.f32");
+    let out = bin()
+        .args(["extract", "--region", "2:10,4:20,8:24", "--in"])
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&cli_out)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let reply = get(srv.addr, "/v1/archives/field.ardc/extract?region=2:10,4:20,8:24");
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    assert_eq!(reply.body, std::fs::read(&cli_out).unwrap());
+    assert_eq!(reply.header("x-points"), Some("2048")); // 8*16*16
+
+    // no region = full decode, matching `cli decompress`
+    let cli_full = dir.join("cli_full.f32");
+    let out = bin()
+        .arg("decompress")
+        .arg("--in")
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&cli_full)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let reply = get(srv.addr, "/v1/archives/field.ardc/extract");
+    assert_eq!(reply.status, 200);
+    assert_eq!(reply.body, std::fs::read(&cli_full).unwrap());
+}
+
+#[test]
+fn error_paths_return_typed_statuses() {
+    let dir = root("errors");
+    make_stream(&dir, "run.tstr");
+    make_archive(&dir, "field.ardc");
+    let srv = Running::start(&dir);
+
+    // unknown file: 404
+    let r = get(srv.addr, "/v1/archives/nope.ardc/info");
+    assert_eq!(r.status, 404, "{}", r.text());
+
+    // unknown route: 404; wrong method: 405
+    assert_eq!(get(srv.addr, "/nope").status, 404);
+    assert_eq!(get(srv.addr, "/v1/compress").status, 405);
+    assert_eq!(
+        send(srv.addr, "DELETE /v1/archives HTTP/1.1\r\nhost: t\r\n\r\n", &[]).status,
+        405
+    );
+
+    // step out of range: 400 with the same message shape as the CLI
+    let r = get(srv.addr, "/v1/streams/run.tstr/extract?step=99");
+    assert_eq!(r.status, 400);
+    assert!(r.text().contains("step 99 out of range (6 steps in stream)"), "{}", r.text());
+
+    // missing step / malformed region: 400
+    assert_eq!(get(srv.addr, "/v1/streams/run.tstr/extract").status, 400);
+    let r = get(srv.addr, "/v1/streams/run.tstr/extract?step=1&region=9:1");
+    assert_eq!(r.status, 400);
+    assert!(r.text().contains("bad region"), "{}", r.text());
+
+    // path traversal in the name segment: 400, nothing leaks
+    let r = get(srv.addr, "/v1/archives/%2e%2e%2fsecret/info");
+    assert_eq!(r.status, 400);
+
+    // wrong route family for the file type: 400 pointing at the other
+    let r = get(srv.addr, "/v1/archives/run.tstr/extract");
+    assert_eq!(r.status, 400);
+    assert!(r.text().contains("temporal stream"), "{}", r.text());
+    let r = get(srv.addr, "/v1/streams/field.ardc/extract?step=0");
+    assert_eq!(r.status, 400);
+    assert!(r.text().contains("not a temporal stream"), "{}", r.text());
+
+    // garbage on the wire: 400, the server survives
+    let r = send(srv.addr, "BROKEN\r\n\r\n", &[]);
+    assert_eq!(r.status, 400);
+    assert_eq!(get(srv.addr, "/v1/stats").status, 200, "server still up");
+}
+
+#[test]
+fn post_compress_writes_a_servable_archive() {
+    let dir = root("compress");
+    let srv = Running::start(&dir);
+
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = attn_reduce::data::generate(&cfg);
+    let mut body = Vec::with_capacity(field.len() * 4);
+    for v in field.data() {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+
+    let target = "/v1/compress?name=posted.ardc&codec=sz3&dataset=e3sm&scale=smoke\
+                  &bound=nrmse:1e-3";
+    let r = post(srv.addr, target, &body);
+    assert_eq!(r.status, 200, "{}", r.text());
+    let text = r.text();
+    assert!(text.contains("\"name\": \"posted.ardc\""), "{text}");
+    assert!(text.contains("\"codec\": \"sz3\""), "{text}");
+    assert!(text.contains("\"cr\": "), "{text}");
+
+    // the archive landed under the root, loadable and servable
+    let archive = Archive::load(dir.join("posted.ardc")).unwrap();
+    assert_eq!(archive.header.get("codec").and_then(|v| v.as_str()), Some("sz3"));
+    let r = get(srv.addr, "/v1/archives/posted.ardc/extract");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.body.len(), cfg.total_points() * 4);
+
+    // wrong body size is a 400 naming the expected geometry
+    let r = post(srv.addr, target, &body[..100]);
+    assert_eq!(r.status, 400);
+    assert!(r.text().contains("dims"), "{}", r.text());
+
+    // a traversal name never reaches the filesystem
+    let r = post(srv.addr, "/v1/compress?name=../evil.ardc", &body);
+    assert_eq!(r.status, 400);
+}

@@ -15,7 +15,7 @@
 use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound, Sz3Codec, ZfpCodec};
 use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
 use attn_reduce::data::{region_tile_ids, timeseries, Region};
-use attn_reduce::stream::{StreamReader, StreamWriter};
+use attn_reduce::stream::{SharedReader, StreamReader, StreamWriter};
 
 fn tmp(name: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join("attn_reduce_stream_it");
@@ -142,6 +142,71 @@ fn zfp_streams_respect_the_bound_across_chains() {
         bound.for_residual(frames[1].range() as f64),
         "residual records its translated bound"
     );
+}
+
+/// The serving layer shares one open reader across its worker pool;
+/// this pins the contract that makes it sound: a `StreamReader` behind
+/// an `Arc` serves overlapping `(step, region)` decodes from multiple
+/// threads with output byte-identical to the same decodes run
+/// sequentially.
+#[test]
+fn shared_reader_decodes_identically_across_threads() {
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = timeseries::generate_frames(&cfg.dims, cfg.seed + 3, 0, 8);
+    let path = tmp("shared.tstr");
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg.clone(), ErrorBound::Nrmse(1e-3), 3).unwrap();
+    w.append_frames(&codec, &frames).unwrap();
+    w.finish().unwrap();
+
+    let reader: SharedReader = std::sync::Arc::new(StreamReader::open(&path).unwrap());
+    // overlapping work items: repeated steps, nested + identical regions
+    let jobs: Vec<(usize, &str)> = vec![
+        (7, "0:16,0:16"),
+        (7, "0:16,0:16"),
+        (7, "0:32,0:32"),
+        (5, "16:32,0:16"),
+        (5, "0:16,0:16"),
+        (0, "0:16,16:32"),
+        (3, "8:24,8:24"),
+        (7, "8:24,8:24"),
+    ];
+
+    // sequential reference decodes first
+    let want: Vec<Vec<f32>> = jobs
+        .iter()
+        .map(|&(step, spec)| {
+            let region = Region::parse(spec).unwrap();
+            reader.extract(&codec, step, &region).unwrap().data().to_vec()
+        })
+        .collect();
+
+    // then the same jobs concurrently, one thread per job, all through
+    // the one shared reader (each thread builds its own codec — codecs
+    // hold scratch state; readers are immutable)
+    let got: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .iter()
+            .map(|&(step, spec)| {
+                let r = reader.clone();
+                let cfg = cfg.clone();
+                scope.spawn(move || {
+                    let codec = Sz3Codec::new(cfg);
+                    let region = Region::parse(spec).unwrap();
+                    r.extract(&codec, step, &region).unwrap().data().to_vec()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(w.len(), g.len(), "job {i} length");
+        for (a, b) in w.iter().zip(g) {
+            assert_eq!(a.to_bits(), b.to_bits(), "job {i} diverged across threads");
+        }
+    }
 }
 
 #[test]
