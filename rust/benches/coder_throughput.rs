@@ -1,9 +1,11 @@
 //! Entropy-coder hot-path throughput: Huffman encode/decode MB/s (LUT
-//! decoder vs the bit-at-a-time oracle), symbol-container sizes on a
-//! zero-peaked residual-shaped stream, and residual GOP payload bytes /
-//! CR at equal bound with the zero-run modes on vs forced off (the PR-4
-//! plain framing). Emits `BENCH_coder.json` so this and future perf PRs
-//! have a pinned trajectory.
+//! decoder vs the bit-at-a-time oracle), interleaved rANS vs LUT-Huffman
+//! on a dense near-gaussian stream (MB/s + bytes at matched content),
+//! symbol-container sizes on a zero-peaked residual-shaped stream, and
+//! residual GOP payload bytes / CR at equal bound with the zero-run
+//! modes on vs forced off (the PR-4 plain framing). Emits
+//! `BENCH_coder.json` so this and future perf PRs have a pinned
+//! trajectory.
 //!
 //! Run: `cargo bench --bench coder_throughput`
 //! (`--smoke` or `BENCH_FAST=1` shrinks the workload for CI.)
@@ -11,7 +13,7 @@
 use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
 use attn_reduce::coder::{
     compress_symbols_mode, decompress_symbols, huffman_decode, huffman_decode_bitwise,
-    huffman_encode, with_symbol_mode, SymbolMode,
+    huffman_encode, rans_decode_into, rans_encode, with_symbol_mode, RansScratch, SymbolMode,
 };
 use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
 use attn_reduce::data::timeseries;
@@ -104,6 +106,52 @@ fn main() {
         dec_bitwise_s / dec_s
     );
 
+    // dense near-gaussian stream — the shape the interleaved rANS mode
+    // targets (hundreds of distinct symbols, no dominant value), coded
+    // head-to-head against raw LUT-Huffman on the same content
+    let mut rng = Rng::new(23);
+    let dense: Vec<i32> = (0..n_syms).map(|_| (rng.normal() * 40.0).round() as i32).collect();
+    let dense_huff = huffman_encode(&dense);
+    let dense_huff_dec_s = median_secs(
+        || {
+            std::hint::black_box(huffman_decode(std::hint::black_box(&dense_huff)).unwrap());
+        },
+        iters,
+    );
+    let rans_enc_s = median_secs(
+        || {
+            std::hint::black_box(rans_encode(std::hint::black_box(&dense)).unwrap());
+        },
+        iters,
+    );
+    let dense_rans = rans_encode(&dense).expect("rans encode");
+    let mut rans_scratch = RansScratch::default();
+    let mut rans_out = Vec::new();
+    let rans_dec_s = median_secs(
+        || {
+            rans_decode_into(
+                std::hint::black_box(&dense_rans),
+                dense.len(),
+                &mut rans_out,
+                &mut rans_scratch,
+            )
+            .unwrap();
+            std::hint::black_box(rans_out.len());
+        },
+        iters,
+    );
+    let rans_speedup = dense_huff_dec_s / rans_dec_s;
+    println!(
+        "rans (dense): encode {:7.1} MB/s | decode {:7.1} MB/s vs huffman LUT {:7.1} MB/s \
+         -> {:.2}x | {} B vs {} B huffman",
+        raw_mb / rans_enc_s,
+        raw_mb / rans_dec_s,
+        raw_mb / dense_huff_dec_s,
+        rans_speedup,
+        dense_rans.len(),
+        dense_huff.len()
+    );
+
     let plain = compress_symbols_mode(&codes, SymbolMode::Plain).expect("plain");
     let zrun = compress_symbols_mode(&codes, SymbolMode::ZeroRun).expect("zero-run");
     let zrun_dec_s = median_secs(
@@ -164,6 +212,21 @@ fn main() {
                 ("decode_mb_s", json::num(raw_mb / dec_s)),
                 ("decode_bitwise_mb_s", json::num(raw_mb / dec_bitwise_s)),
                 ("decode_speedup_vs_bitwise", json::num(dec_bitwise_s / dec_s)),
+            ]),
+        ),
+        (
+            "rans",
+            json::obj(vec![
+                ("encode_mb_s", json::num(raw_mb / rans_enc_s)),
+                ("decode_mb_s", json::num(raw_mb / rans_dec_s)),
+                ("huffman_lut_decode_mb_s", json::num(raw_mb / dense_huff_dec_s)),
+                ("decode_speedup_vs_huffman_lut", json::num(rans_speedup)),
+                ("dense_bytes", json::num(dense_rans.len() as f64)),
+                ("dense_huffman_bytes", json::num(dense_huff.len() as f64)),
+                (
+                    "size_ratio_vs_huffman",
+                    json::num(dense_rans.len() as f64 / dense_huff.len() as f64),
+                ),
             ]),
         ),
         (

@@ -26,14 +26,18 @@ pub use zfp_like::ZfpLike;
 /// in the entropy domain — the compressed split is not byte-attributable.
 #[derive(Debug, Clone, Copy)]
 pub struct StreamBreakdown {
-    /// Entropy container mode: `"plain"`, `"zero-run"`, or `"const"`.
+    /// Entropy container mode: `"plain"`, `"zero-run"`, `"const"`, or
+    /// `"rans"`.
     pub mode: &'static str,
     /// Header/length fields of the stream container.
     pub framing_bytes: usize,
     /// sz3 raw ("unpredictable") values / zfp compressed exponents.
     pub aux_bytes: usize,
-    /// Serialized Huffman table bytes.
+    /// Serialized entropy table bytes (Huffman code lengths or rANS
+    /// frequencies).
     pub table_bytes: usize,
     /// Coded symbol payload bytes.
     pub symbol_bytes: usize,
+    /// Interleaved rANS lanes (0 for every non-rANS mode).
+    pub lanes: usize,
 }

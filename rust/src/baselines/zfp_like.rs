@@ -6,10 +6,10 @@
 //! bit-planes. We keep the exact ZFP lifting transform and block-exponent
 //! stage, and replace the negabinary bit-plane coder with a
 //! shift-truncate stage + the symbol container
-//! ([`crate::coder::compress_symbols`]: Huffman/LZSS, or the zero-run /
-//! constant modes when trial sampling says they win) controlled by
-//! `precision` (bits kept per coefficient) — the same fixed-precision
-//! rate-distortion knob.
+//! ([`crate::coder::compress_symbols`]: Huffman/LZSS, interleaved rANS,
+//! or the zero-run / constant modes — trial sampling picks per stream)
+//! controlled by `precision` (bits kept per coefficient) — the same
+//! fixed-precision rate-distortion knob.
 
 //! Every 4^d block is independent, so both directions run block-parallel
 //! on the shared [`crate::engine::Executor`]: compression fans out over
@@ -81,17 +81,17 @@ impl ZfpLike {
             let e = if maxabs > 0.0 { maxabs.log2().ceil() as i32 } else { 0 };
             exps.push(e as i16);
             let scale = 2f64.powi(FRAC_BITS as i32 - e);
-            for i in 0..bsz {
-                ints[i] = (blk[i] as f64 * scale).round() as i64;
+            // zip-form fixed-point conversion: no bounds checks in the
+            // loop body, so the convert+round vectorizes
+            for (v, &b) in ints.iter_mut().zip(blk.iter()) {
+                *v = (b as f64 * scale).round() as i64;
             }
             fwd_transform(ints, d);
             // keep `precision` MSBs (relative to FRAC_BITS), rounding
             // to nearest to avoid floor bias
             let shift = FRAC_BITS - self.precision;
             let half = if shift > 0 { 1i64 << (shift - 1) } else { 0 };
-            for &v in ints.iter() {
-                codes.push(((v + half) >> shift) as i32);
-            }
+            codes.extend(ints.iter().map(|&v| ((v + half) >> shift) as i32));
         }
     }
 
@@ -304,15 +304,15 @@ impl ZfpLike {
             let mut out = vec![0f32; (hi - lo) * bsz];
             for bi in lo..hi {
                 let ints = reuse_i64(&mut s.i64_a, bsz);
-                for (i, v) in ints.iter_mut().enumerate() {
-                    *v = (codes[bi * bsz + i] as i64) << shift;
+                for (v, &c) in ints.iter_mut().zip(&codes[bi * bsz..(bi + 1) * bsz]) {
+                    *v = (c as i64) << shift;
                 }
                 inv_transform(ints, d);
                 let e = exps[bi] as i32;
                 let scale = 2f64.powi(e - FRAC_BITS as i32);
                 let dst = &mut out[(bi - lo) * bsz..(bi - lo + 1) * bsz];
-                for (i, &v) in ints.iter().enumerate() {
-                    dst[i] = (v as f64 * scale) as f32;
+                for (o, &v) in dst.iter_mut().zip(ints.iter()) {
+                    *o = (v as f64 * scale) as f32;
                 }
             }
             out
@@ -389,6 +389,7 @@ impl ZfpLike {
             aux_bytes: zel,
             table_bytes: stats.table_bytes,
             symbol_bytes: stats.symbol_bytes,
+            lanes: stats.lanes,
         })
     }
 }
@@ -433,6 +434,104 @@ fn unlift4(v: &mut [i64; 4]) {
     *v = [x, y, z, w];
 }
 
+/// Forward-lift one line of 4 values at `base` with constant `stride`.
+#[inline]
+fn lift_line(ints: &mut [i64], base: usize, stride: usize) {
+    let mut v = [
+        ints[base],
+        ints[base + stride],
+        ints[base + 2 * stride],
+        ints[base + 3 * stride],
+    ];
+    lift4(&mut v);
+    ints[base] = v[0];
+    ints[base + stride] = v[1];
+    ints[base + 2 * stride] = v[2];
+    ints[base + 3 * stride] = v[3];
+}
+
+/// Inverse-lift one line of 4 values at `base` with constant `stride`.
+#[inline]
+fn unlift_line(ints: &mut [i64], base: usize, stride: usize) {
+    let mut v = [
+        ints[base],
+        ints[base + stride],
+        ints[base + 2 * stride],
+        ints[base + 3 * stride],
+    ];
+    unlift4(&mut v);
+    ints[base] = v[0];
+    ints[base + stride] = v[1];
+    ints[base + 2 * stride] = v[2];
+    ints[base + 3 * stride] = v[3];
+}
+
+/// Separable forward transform, dimension-specialized: each axis pass
+/// enumerates its line bases directly with compile-time strides instead
+/// of scanning all 4^d positions with a per-element div/mod filter
+/// ([`fwd_transform_reference`], kept as the bit-equivalence oracle).
+/// Lifting is exact integer arithmetic on disjoint lines, so the
+/// specialization is bit-identical.
+fn fwd_transform(ints: &mut [i64], d: usize) {
+    match d {
+        0 => {}
+        1 => lift_line(ints, 0, 1),
+        2 => {
+            for x in 0..4 {
+                lift_line(ints, x, 4);
+            }
+            for y in 0..4 {
+                lift_line(ints, y * 4, 1);
+            }
+        }
+        3 => {
+            for i in 0..16 {
+                lift_line(ints, i, 16);
+            }
+            for z in 0..4 {
+                for x in 0..4 {
+                    lift_line(ints, z * 16 + x, 4);
+                }
+            }
+            for i in 0..16 {
+                lift_line(ints, i * 4, 1);
+            }
+        }
+        _ => unreachable!("zfp block rank is at most 3"),
+    }
+}
+
+/// Separable inverse transform, dimension-specialized (axes in reverse
+/// order of [`fwd_transform`]; see there for the equivalence argument).
+fn inv_transform(ints: &mut [i64], d: usize) {
+    match d {
+        0 => {}
+        1 => unlift_line(ints, 0, 1),
+        2 => {
+            for y in 0..4 {
+                unlift_line(ints, y * 4, 1);
+            }
+            for x in 0..4 {
+                unlift_line(ints, x, 4);
+            }
+        }
+        3 => {
+            for i in 0..16 {
+                unlift_line(ints, i * 4, 1);
+            }
+            for z in 0..4 {
+                for x in 0..4 {
+                    unlift_line(ints, z * 16 + x, 4);
+                }
+            }
+            for i in 0..16 {
+                unlift_line(ints, i, 16);
+            }
+        }
+        _ => unreachable!("zfp block rank is at most 3"),
+    }
+}
+
 fn for_each_line(d: usize, axis: usize, mut f: impl FnMut(usize, usize)) {
     // iterate lines along `axis` of a 4^d block; call f(base, stride)
     let stride = BLOCK.pow((d - 1 - axis) as u32);
@@ -448,39 +547,21 @@ fn for_each_line(d: usize, axis: usize, mut f: impl FnMut(usize, usize)) {
     }
 }
 
-fn fwd_transform(ints: &mut [i64], d: usize) {
+/// The pre-restructure generic axis walker. Oracle only: the
+/// dimension-specialized [`fwd_transform`] must match it bit for bit.
+#[doc(hidden)]
+pub fn fwd_transform_reference(ints: &mut [i64], d: usize) {
     for axis in 0..d {
-        for_each_line(d, axis, |base, stride| {
-            let mut v = [
-                ints[base],
-                ints[base + stride],
-                ints[base + 2 * stride],
-                ints[base + 3 * stride],
-            ];
-            lift4(&mut v);
-            ints[base] = v[0];
-            ints[base + stride] = v[1];
-            ints[base + 2 * stride] = v[2];
-            ints[base + 3 * stride] = v[3];
-        });
+        for_each_line(d, axis, |base, stride| lift_line(ints, base, stride));
     }
 }
 
-fn inv_transform(ints: &mut [i64], d: usize) {
+/// The pre-restructure generic inverse walker. Oracle only: the
+/// dimension-specialized [`inv_transform`] must match it bit for bit.
+#[doc(hidden)]
+pub fn inv_transform_reference(ints: &mut [i64], d: usize) {
     for axis in (0..d).rev() {
-        for_each_line(d, axis, |base, stride| {
-            let mut v = [
-                ints[base],
-                ints[base + stride],
-                ints[base + 2 * stride],
-                ints[base + 3 * stride],
-            ];
-            unlift4(&mut v);
-            ints[base] = v[0];
-            ints[base + stride] = v[1];
-            ints[base + 2 * stride] = v[2];
-            ints[base + 3 * stride] = v[3];
-        });
+        for_each_line(d, axis, |base, stride| unlift_line(ints, base, stride));
     }
 }
 
@@ -615,5 +696,28 @@ mod tests {
         // 3 dims + exponent count + two stream lengths
         assert_eq!(b.framing_bytes, 1 + 4 + 3 * 8 + 8 + 8 + 8);
         assert!(b.table_bytes + b.symbol_bytes > 0);
+        // lanes only ever reported for the rANS container mode
+        assert!(b.lanes == 0 || b.mode == "rans");
+    }
+
+    #[test]
+    fn specialized_transforms_match_the_generic_oracle() {
+        // the dimension-specialized axis passes must agree exactly with
+        // the div/mod line walker they replaced, in both directions
+        let mut rng = Rng::new(17);
+        for d in 0..=3usize {
+            let n = BLOCK.pow(d as u32);
+            for _ in 0..50 {
+                let orig: Vec<i64> = (0..n).map(|_| rng.next_u64() as i32 as i64).collect();
+                let mut a = orig.clone();
+                let mut b = orig.clone();
+                fwd_transform(&mut a, d);
+                fwd_transform_reference(&mut b, d);
+                assert_eq!(a, b, "fwd d={d}");
+                inv_transform(&mut a, d);
+                inv_transform_reference(&mut b, d);
+                assert_eq!(a, b, "inv d={d}");
+            }
+        }
     }
 }

@@ -12,6 +12,11 @@
 //! The pointwise ε derives from the typed [`ErrorBound`] exactly as
 //! before — per-tile streams share one ε, so the bound semantics are
 //! unchanged.
+//!
+//! Each tile's quantized codes ride the symbol container, which picks
+//! its mode per stream (plain Huffman+LZSS, interleaved rANS for dense
+//! tiles, zero-run / const for sparse ones); `cli info --in` breaks the
+//! per-mode tile counts and byte classes out of the `SZ3B` section.
 
 use crate::baselines::Sz3Like;
 use crate::compressor::Archive;

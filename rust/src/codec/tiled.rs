@@ -12,7 +12,9 @@
 //! Per-tile coding is allocation-light: the tile extract buffer and the
 //! codecs' recon/code/entropy buffers all come from the worker's
 //! per-thread [`Scratch`] arena, so the hot loop stops paying one fresh
-//! `Vec` per tile per stage.
+//! `Vec` per tile per stage. The extract buffer is moved out of
+//! `f32_b` for the duration of the encode callback, so tile encoders
+//! use the remaining fields (sz3's row-base pass sits in `f32_c`).
 
 use crate::compressor::BlockIndex;
 use crate::data::{region_tile_ids, scatter_tile_into_region, Region};

@@ -10,7 +10,9 @@
 //! Writes **Archive v3** like the SZ3 adapter: one independent
 //! [`ZfpLike`] stream per AE-block tile plus a `BIDX` block index, so
 //! [`Codec::decompress_region`] touches only the intersecting tiles.
-//! Legacy v1 whole-stream archives keep decoding unchanged.
+//! Legacy v1 whole-stream archives keep decoding unchanged. Coefficient
+//! streams ride the symbol container (plain Huffman+LZSS, interleaved
+//! rANS, or zero-run / const — picked per tile by trial sampling).
 
 use crate::baselines::ZfpLike;
 use crate::compressor::{Archive, BlockIndex};

@@ -47,13 +47,29 @@
 //! * **Constant** (magic [`MAGIC_CONST`] = 0xB6): an all-same stream
 //!   (the all-zero residual tile, overwhelmingly) collapses to
 //!   `0xB6 | varint n_values | i32 value` — no table at all.
+//! * **rANS** (magic [`crate::coder::rans::MAGIC_RANS`] = 0xB7): dense
+//!   near-uniform streams (keyframe quantization codes, multi-species
+//!   residuals) where Huffman's integer code lengths waste up to half a
+//!   bit per symbol. A static-frequency interleaved 4-lane rANS coder
+//!   (see [`crate::coder::rans`]) codes fractional bits and decodes as
+//!   four independent branch-light dependency chains. Streams with more
+//!   than 4096 distinct symbols stay plain.
+//!
+//! Mid-sparse zero-run streams additionally pick between the exact
+//! run-length alphabet and a geometric-bucketed one (each run split
+//! into power-of-two pieces, capping the run alphabet at ~31 symbols)
+//! by exact Huffman sizing — the decoder is oblivious, because both
+//! spell runs as negative symbols that sum to the same zero count.
 //!
 //! Mode selection is automatic: a contiguous ≤ 4 Ki-symbol window is
-//! sized both ways ([`crate::coder::huffman_encoded_size`], with the
-//! coded payload scaled to the stream length and the table kept fixed)
-//! and zero-run is taken only when it beats plain by ≥ 10% (hysteresis
-//! for LZSS's own gains on sparse bitstreams). [`with_symbol_mode`]
-//! forces a mode thread-locally for A/B tests and benches (combine with
+//! sized each way ([`crate::coder::huffman_encoded_size`] /
+//! `rans_scaled_estimate`, with the coded payload scaled to the stream
+//! length and the table kept fixed); zero-run is taken only when it
+//! beats plain by ≥ 10% (hysteresis for LZSS's own gains on sparse
+//! bitstreams), then rANS when it is within 1% of plain (it decodes
+//! several times faster at equal size, and typically shaves the
+//! fractional-bit slack too). [`with_symbol_mode`] forces a mode
+//! thread-locally for A/B tests and benches (combine with
 //! `with_thread_limit(1)` so pool workers inherit it).
 
 use std::cell::Cell;
@@ -62,6 +78,10 @@ use super::freq::symbol_freqs;
 use super::huffman::{
     huffman_decode_capped, huffman_encode, huffman_encoded_size, huffman_stream_layout,
     HuffScratch,
+};
+use super::rans::{
+    rans_decode_into, rans_encode, rans_scaled_estimate, rans_stream_layout, RansScratch,
+    MAGIC_RANS,
 };
 use crate::engine::Executor;
 use crate::Result;
@@ -400,6 +420,8 @@ pub enum SymbolMode {
     ZeroRun,
     /// All-same stream: varint count + the value (magic 0xB6).
     Const,
+    /// Interleaved 4-lane static-frequency rANS (magic 0xB7).
+    Rans,
 }
 
 thread_local! {
@@ -411,7 +433,9 @@ thread_local! {
 /// if `f` panics). Thread-local: wrap in
 /// [`crate::util::parallel::with_thread_limit`]`(1, ..)` so pool batches
 /// run inline and inherit it. A forced `ZeroRun` still falls back to
-/// plain for streams the transform cannot carry (literals beyond ±2^29).
+/// plain for streams the transform cannot carry (literals beyond ±2^29),
+/// and a forced `Rans` falls back to plain for streams with more than
+/// 4096 distinct symbols.
 pub fn with_symbol_mode<R>(mode: SymbolMode, f: impl FnOnce() -> R) -> R {
     struct Restore(Option<SymbolMode>);
     impl Drop for Restore {
@@ -460,6 +484,55 @@ fn zero_run_transform(values: &[i32]) -> Option<Vec<i32>> {
         out.push(-(run as i32));
     }
     Some(out)
+}
+
+/// Geometric bucketing: split every run-length symbol into power-of-two
+/// pieces (`-13` becomes `-8, -4, -1`), capping the run alphabet at ~31
+/// symbols. Mid-sparse tiles with many distinct run lengths pay one
+/// Huffman table entry per length under the exact transform; bucketing
+/// trades ≤ `popcount` codes per run for a far smaller table. The
+/// decoder needs no dispatch — runs are still negative symbols whose
+/// zero counts sum.
+fn bucket_runs(exact: &[i32]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(exact.len() + exact.len() / 2);
+    for &s in exact {
+        if s < 0 {
+            let mut run = (-(s as i64)) as u64;
+            while run > 0 {
+                let k = 63 - run.leading_zeros();
+                out.push(-(1i64 << k) as i32); // run <= i32::MAX, so 1<<k fits
+                run -= 1u64 << k;
+            }
+        } else {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Fewest distinct run-length symbols before the bucketed alternative is
+/// even sized (small alphabets cannot win — the table is already tiny).
+const BUCKET_MIN_DISTINCT_RUNS: usize = 16;
+
+/// The RLE0 transform that actually ships: exact run lengths, or the
+/// geometric-bucketed variant when the stream has enough distinct run
+/// lengths for the table savings to matter *and* exact Huffman sizing
+/// says it is strictly smaller. Deterministic, so archives stay
+/// byte-identical at any thread count.
+fn zero_run_best_transform(values: &[i32]) -> Option<Vec<i32>> {
+    let exact = zero_run_transform(values)?;
+    let mut runs: Vec<i32> = exact.iter().copied().filter(|&s| s < 0).collect();
+    runs.sort_unstable();
+    runs.dedup();
+    if runs.len() < BUCKET_MIN_DISTINCT_RUNS {
+        return Some(exact);
+    }
+    let bucketed = bucket_runs(&exact);
+    if huffman_encoded_size(&bucketed) < huffman_encoded_size(&exact) {
+        Some(bucketed)
+    } else {
+        Some(exact)
+    }
 }
 
 /// Expand an RLE0 stream back to exactly `n_total` symbols.
@@ -511,13 +584,14 @@ fn select_mode(values: &[i32]) -> SymbolMode {
         Some(SymbolMode::Const) => {
             return if min == max { SymbolMode::Const } else { SymbolMode::Plain };
         }
+        // eligibility (<= 4096 distinct symbols) needs a full frequency
+        // pass; the encoder does it anyway, so [`compress_symbols`]
+        // degrades a forced rANS to plain on the encoder's verdict
+        Some(SymbolMode::Rans) => return SymbolMode::Rans,
         _ => {}
     }
     if min == max {
         return SymbolMode::Const;
-    }
-    if !eligible {
-        return SymbolMode::Plain;
     }
     // trial sampling: a contiguous middle window preserves the zero-run
     // structure (a strided sample would shorten every run by the
@@ -532,14 +606,22 @@ fn select_mode(values: &[i32]) -> SymbolMode {
         (&values[start..start + SAMPLE], values.len() as f64 / SAMPLE as f64)
     };
     let plain_est = scaled_estimate(sample, scale);
-    let zrun_est = match zero_run_transform(sample) {
-        Some(t) => 9.0 + scaled_estimate(&t, scale),
-        None => f64::INFINITY,
-    };
-    if zrun_est < plain_est * 0.9 {
-        SymbolMode::ZeroRun
-    } else {
-        SymbolMode::Plain
+    if eligible {
+        let zrun_est = match zero_run_best_transform(sample) {
+            Some(t) => 9.0 + scaled_estimate(&t, scale),
+            None => f64::INFINITY,
+        };
+        if zrun_est < plain_est * 0.9 {
+            return SymbolMode::ZeroRun;
+        }
+    }
+    // dense-stream trial: rANS wins ties — it decodes several times
+    // faster, so it is taken whenever its size lands within 1% of
+    // plain's (the 1% slack keeps the compression-ratio guarantee while
+    // letting small fractional-bit losses through)
+    match rans_scaled_estimate(sample, scale) {
+        Some(r) if r <= plain_est * 1.01 => SymbolMode::Rans,
+        _ => SymbolMode::Plain,
     }
 }
 
@@ -558,23 +640,32 @@ fn scaled_estimate(sample: &[i32], scale: f64) -> f64 {
 /// versions keep decoding unchanged — the new magics appear only in
 /// newly written payloads.
 pub fn compress_symbols(values: &[i32]) -> Result<Vec<u8>> {
-    compress_symbols_mode(values, select_mode(values))
+    match select_mode(values) {
+        // the sampled trial (or a thread-local force) can pick rANS on a
+        // stream whose full alphabet turns out wider than 4096 symbols;
+        // the encoder's own eligibility check is the authority, and the
+        // fallback is deterministic
+        SymbolMode::Rans => rans_encode(values)
+            .or_else(|_| compress_symbols_mode(values, SymbolMode::Plain)),
+        mode => compress_symbols_mode(values, mode),
+    }
 }
 
 /// [`compress_symbols`] with an explicit mode (tests / benches). Errors
 /// when the stream cannot be represented in the requested mode
 /// (`ZeroRun` with literals beyond ±2^29, `Const` on a non-constant
-/// stream).
+/// stream, `Rans` with more than 4096 distinct symbols).
 pub fn compress_symbols_mode(values: &[i32], mode: SymbolMode) -> Result<Vec<u8>> {
     match mode {
         SymbolMode::Plain => lossless_compress(&huffman_encode(values)),
+        SymbolMode::Rans => rans_encode(values),
         SymbolMode::ZeroRun => {
             ensure!(
                 values.len() <= i32::MAX as usize,
                 "zero-run mode caps at {} symbols",
                 i32::MAX
             );
-            let transformed = zero_run_transform(values).ok_or_else(|| {
+            let transformed = zero_run_best_transform(values).ok_or_else(|| {
                 anyhow::anyhow!("zero-run mode cannot carry literals beyond ±2^29")
             })?;
             let mut out = Vec::with_capacity(16 + transformed.len());
@@ -599,14 +690,15 @@ pub fn compress_symbols_mode(values: &[i32], mode: SymbolMode) -> Result<Vec<u8>
 }
 
 /// Reusable decode state for [`decompress_symbols_into`]: Huffman
-/// table/LUT, the RLE0 staging buffer, and the LZSS output buffer — one
-/// per pool thread via [`crate::engine::Scratch`], so per-tile decodes
-/// stop allocating.
+/// table/LUT, the RLE0 staging buffer, the LZSS output buffer, and the
+/// rANS decode tables — one per pool thread via
+/// [`crate::engine::Scratch`], so per-tile decodes stop allocating.
 #[derive(Default)]
 pub struct SymbolScratch {
     huff: HuffScratch,
     tmp: Vec<i32>,
     bytes: Vec<u8>,
+    rans: RansScratch,
 }
 
 /// Decode a [`compress_symbols`] stream. `max_values` caps every
@@ -627,8 +719,9 @@ pub fn decompress_symbols_into(
 ) -> Result<()> {
     out.clear();
     ensure!(!data.is_empty(), "symbols: empty input");
-    let SymbolScratch { huff, tmp, bytes } = scratch;
+    let SymbolScratch { huff, tmp, bytes, rans } = scratch;
     match data[0] {
+        MAGIC_RANS => rans_decode_into(data, max_values, out, rans),
         MAGIC_LZ | MAGIC_LZ_CHUNKED => {
             // plain mode: the huffman stream is at most 5 B/table entry +
             // ~8 B/value; the cap stops a corrupt header from ballooning
@@ -668,15 +761,17 @@ pub fn decompress_symbols_into(
 }
 
 /// Byte breakdown of one symbol stream for `cli info`: the mode, the
-/// declared value count, and the Huffman table/payload split. Plain
+/// declared value count, and the entropy table/payload split. Plain
 /// streams are measured in the entropy domain (after LZSS) — their
-/// compressed split is not byte-attributable; zero-run streams as
-/// stored.
+/// compressed split is not byte-attributable; zero-run and rANS streams
+/// as stored.
 pub struct SymbolStreamStats {
     pub mode: &'static str,
     pub n_values: usize,
     pub table_bytes: usize,
     pub symbol_bytes: usize,
+    /// Interleaved rANS lanes (0 for every non-rANS mode).
+    pub lanes: usize,
 }
 
 /// Inspect a [`compress_symbols`] stream without decoding its values.
@@ -687,18 +782,34 @@ pub fn symbol_stream_stats(data: &[u8], max_values: usize) -> Result<SymbolStrea
             let cap = max_values.saturating_mul(13).saturating_add(1 << 20);
             let huff = lossless_decompress(data, cap)?;
             let (table_bytes, symbol_bytes, n_values) = huffman_stream_layout(&huff)?;
-            Ok(SymbolStreamStats { mode: "plain", n_values, table_bytes, symbol_bytes })
+            Ok(SymbolStreamStats { mode: "plain", n_values, table_bytes, symbol_bytes, lanes: 0 })
         }
         MAGIC_ZRUN => {
             ensure!(data.len() >= 9, "symbols: zero-run header truncated");
             let n_values = u64::from_le_bytes(data[1..9].try_into().unwrap()) as usize;
             let (table_bytes, symbol_bytes, _) = huffman_stream_layout(&data[9..])?;
-            Ok(SymbolStreamStats { mode: "zero-run", n_values, table_bytes, symbol_bytes })
+            Ok(SymbolStreamStats {
+                mode: "zero-run",
+                n_values,
+                table_bytes,
+                symbol_bytes,
+                lanes: 0,
+            })
         }
         MAGIC_CONST => {
             let mut pos = 1usize;
             let n_values = read_varint(data, &mut pos)? as usize;
-            Ok(SymbolStreamStats { mode: "const", n_values, table_bytes: 0, symbol_bytes: 4 })
+            Ok(SymbolStreamStats {
+                mode: "const",
+                n_values,
+                table_bytes: 0,
+                symbol_bytes: 4,
+                lanes: 0,
+            })
+        }
+        MAGIC_RANS => {
+            let (table_bytes, symbol_bytes, n_values, lanes) = rans_stream_layout(data)?;
+            Ok(SymbolStreamStats { mode: "rans", n_values, table_bytes, symbol_bytes, lanes })
         }
         m => bail!("symbols: bad magic {m:#04x}"),
     }
@@ -876,15 +987,40 @@ mod tests {
     }
 
     #[test]
-    fn uniform_streams_stay_plain_and_round_trip() {
+    fn uniform_streams_pick_rans_and_round_trip() {
+        // dense near-uniform alphabet: Huffman's integer code lengths
+        // leave fractional-bit slack, so the trial lands on rANS
         let mut rng = Rng::new(8);
         let vals: Vec<i32> = (0..8000).map(|_| rng.below(200) as i32 - 100).collect();
         let auto = compress_symbols(&vals).unwrap();
-        assert!(auto[0] == 0xB3 || auto[0] == 0xB4, "uniform data stays plain");
+        assert_eq!(auto[0], MAGIC_RANS, "dense uniform data picks rans");
         assert_eq!(decompress_symbols(&auto, vals.len()).unwrap(), vals);
-        // forced zero-run still round-trips, it is just bigger
+        // every forced mode still round-trips
+        let plain = compress_symbols_mode(&vals, SymbolMode::Plain).unwrap();
+        assert_eq!(decompress_symbols(&plain, vals.len()).unwrap(), vals);
         let zrun = compress_symbols_mode(&vals, SymbolMode::ZeroRun).unwrap();
         assert_eq!(decompress_symbols(&zrun, vals.len()).unwrap(), vals);
+        // the auto pick keeps the size guarantee: within 1% of plain
+        assert!(
+            (auto.len() as f64) <= plain.len() as f64 * 1.01,
+            "rans {} vs plain {}",
+            auto.len(),
+            plain.len()
+        );
+    }
+
+    #[test]
+    fn rans_mode_round_trips_and_forcing_degrades_when_ineligible() {
+        let vals = peaked_stream(16_384, 21);
+        let rans = compress_symbols_mode(&vals, SymbolMode::Rans).unwrap();
+        assert_eq!(rans[0], MAGIC_RANS);
+        assert_eq!(decompress_symbols(&rans, vals.len()).unwrap(), vals);
+        // > 4096 distinct symbols: explicit mode errors, forced degrades
+        let wide: Vec<i32> = (0..5000).collect();
+        assert!(compress_symbols_mode(&wide, SymbolMode::Rans).is_err());
+        let forced = with_symbol_mode(SymbolMode::Rans, || compress_symbols(&wide).unwrap());
+        assert!(forced[0] == 0xB3 || forced[0] == 0xB4, "degrades to plain");
+        assert_eq!(decompress_symbols(&forced, wide.len()).unwrap(), wide);
     }
 
     #[test]
@@ -902,17 +1038,19 @@ mod tests {
     }
 
     #[test]
-    fn wide_literals_fall_back_to_plain() {
-        // the sz3 UNPRED sentinel (i32::MIN) cannot ride the zigzag
+    fn wide_literals_fall_back_to_dense_modes() {
+        // the sz3 UNPRED sentinel (i32::MIN) cannot ride the zigzag, but
+        // rANS carries any i32 symbol — the auto pick lands there now
         let mut vals = peaked_stream(4096, 3);
         vals[100] = i32::MIN;
         let auto = compress_symbols(&vals).unwrap();
-        assert!(auto[0] == 0xB3 || auto[0] == 0xB4);
+        assert_eq!(auto[0], MAGIC_RANS, "wide literals ride rans, not zigzag");
         assert_eq!(decompress_symbols(&auto, vals.len()).unwrap(), vals);
         assert!(compress_symbols_mode(&vals, SymbolMode::ZeroRun).is_err());
         // forced zero-run degrades to plain rather than failing
         let forced = with_symbol_mode(SymbolMode::ZeroRun, || compress_symbols(&vals).unwrap());
         assert!(forced[0] == 0xB3 || forced[0] == 0xB4);
+        assert_eq!(decompress_symbols(&forced, vals.len()).unwrap(), vals);
     }
 
     #[test]
@@ -965,6 +1103,48 @@ mod tests {
         let zeros = vec![0i32; 64];
         let konst = compress_symbols(&zeros).unwrap();
         assert_eq!(symbol_stream_stats(&konst, 64).unwrap().mode, "const");
+        // rans streams report the lane count and account for every byte
+        let rans = compress_symbols_mode(&peaked, SymbolMode::Rans).unwrap();
+        let st = symbol_stream_stats(&rans, peaked.len()).unwrap();
+        assert_eq!(st.mode, "rans");
+        assert_eq!(st.n_values, peaked.len());
+        assert_eq!(st.lanes, crate::coder::rans::RANS_LANES);
+        assert!(st.table_bytes > 0 && st.symbol_bytes > 0);
+    }
+
+    #[test]
+    fn bucketed_runs_match_the_exact_oracle_and_shrink_mid_sparse_tiles() {
+        // mid-sparse tile: hundreds of distinct run lengths, each rare —
+        // the exact transform pays a table entry per length
+        let mut rng = Rng::new(29);
+        let mut vals = Vec::new();
+        for run in 1..=300usize {
+            vals.resize(vals.len() + run, 0);
+            vals.push(1 + rng.below(3) as i32);
+        }
+        let enc = compress_symbols_mode(&vals, SymbolMode::ZeroRun).unwrap();
+        assert_eq!(enc[0], MAGIC_ZRUN);
+        assert_eq!(decompress_symbols(&enc, vals.len()).unwrap(), vals);
+        // oracle: the pre-bucketing framing (exact run lengths) decodes
+        // to the same values through the same 0xB5 decoder
+        let exact = zero_run_transform(&vals).unwrap();
+        let mut oracle = vec![MAGIC_ZRUN];
+        oracle.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+        oracle.extend(huffman_encode(&exact));
+        assert_eq!(decompress_symbols(&oracle, vals.len()).unwrap(), vals);
+        assert!(
+            enc.len() < oracle.len(),
+            "bucketed {} should beat exact {} on mid-sparse runs",
+            enc.len(),
+            oracle.len()
+        );
+        // small sparse streams round-trip through the same chooser
+        let few: Vec<i32> = peaked_stream(512, 31)
+            .iter()
+            .map(|&v| if v == 0 { 0 } else { 1 })
+            .collect();
+        let enc = compress_symbols_mode(&few, SymbolMode::ZeroRun).unwrap();
+        assert_eq!(decompress_symbols(&enc, few.len()).unwrap(), few);
     }
 
     #[test]

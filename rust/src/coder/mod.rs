@@ -8,8 +8,10 @@
 //! * [`indexset`] — Fig. 3 shortest-prefix bitmap encoding of PCA basis
 //!   index sets, concatenated and lossless-compressed.
 //! * [`lossless`] — LZSS lossless backend (in-tree ZSTD substitute) plus
-//!   the symbol container (plain / zero-run / constant modes) the
+//!   the symbol container (plain / zero-run / constant / rANS modes) the
 //!   baselines' quantized streams ride in.
+//! * [`rans`] — static-frequency interleaved 4-lane rANS coder for the
+//!   dense symbol streams (magic 0xB7 in the symbol container).
 //! * [`freq`] — the shared symbol-frequency histogram (dense or
 //!   sort-based, never hashed).
 //! * [`latents`] — latent-row payload codec shared by the hierarchical
@@ -22,6 +24,7 @@ pub mod indexset;
 pub mod latents;
 pub mod lossless;
 pub mod quantizer;
+pub mod rans;
 
 pub use bitstream::{BitReader, BitWriter};
 pub use freq::symbol_freqs;
@@ -37,3 +40,6 @@ pub use lossless::{
     SymbolScratch, SymbolStreamStats,
 };
 pub use quantizer::Quantizer;
+pub use rans::{
+    rans_decode_into, rans_encode, rans_stream_layout, RansScratch, MAGIC_RANS, RANS_LANES,
+};

@@ -28,12 +28,26 @@ impl Quantizer {
         self.bin > 0.0
     }
 
-    /// Integer code for a value.
+    /// Integer code for a value. Branch-free: Rust's float→int `as`
+    /// already saturates (and maps NaN to 0), and f32 cannot represent
+    /// any value strictly between `i32::MAX as f32 = 2^31` and the next
+    /// float below it (2147483520), so the cast lands on exactly the
+    /// same codes as the old explicit-comparison path
+    /// ([`Self::code_reference`], kept as the bit-equivalence oracle) —
+    /// while compiling to a single convert the vectorizer can use.
     #[inline]
     pub fn code(&self, x: f32) -> i32 {
         debug_assert!(self.enabled());
+        (x / self.bin).round() as i32
+    }
+
+    /// The pre-vectorization [`Self::code`] with explicit saturation
+    /// comparisons. Oracle only: `code` must match it bit for bit on
+    /// every input (including ±inf, NaN and overflowing magnitudes).
+    #[doc(hidden)]
+    #[inline]
+    pub fn code_reference(&self, x: f32) -> i32 {
         let c = (x / self.bin).round();
-        // saturate instead of UB on overflow
         if c >= i32::MAX as f32 {
             i32::MAX
         } else if c <= i32::MIN as f32 {
@@ -129,5 +143,39 @@ mod tests {
         let q = Quantizer::new(1e-30);
         assert_eq!(q.code(1e10), i32::MAX);
         assert_eq!(q.code(-1e10), i32::MIN);
+    }
+
+    #[test]
+    fn branchless_code_matches_the_reference_oracle() {
+        // extremes, saturation boundaries, non-finite inputs
+        let q = Quantizer::new(1.0);
+        for x in [
+            0.0f32,
+            -0.0,
+            0.49,
+            0.5,
+            -0.5,
+            2147483520.0, // largest f32 below 2^31
+            2147483648.0, // 2^31 exactly
+            -2147483648.0,
+            -2147483904.0, // first f32 below -2^31
+            1e30,
+            -1e30,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::MIN_POSITIVE,
+        ] {
+            assert_eq!(q.code(x), q.code_reference(x), "x={x}");
+        }
+        // random sweep across bins and magnitudes
+        let mut rng = Rng::new(3);
+        for &bin in &[1e-30f32, 1e-3, 0.7, 1e6] {
+            let q = Quantizer::new(bin);
+            for _ in 0..5000 {
+                let x = (rng.range(-1.0, 1.0) * 10f64.powi(rng.below(39) as i32 - 19)) as f32;
+                assert_eq!(q.code(x), q.code_reference(x), "bin={bin} x={x}");
+            }
+        }
     }
 }

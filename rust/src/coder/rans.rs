@@ -1,0 +1,525 @@
+//! Static-frequency interleaved multi-lane rANS coder (magic 0xB7) for
+//! dense quantized-symbol streams.
+//!
+//! Huffman (the plain container mode) pays an integer number of bits per
+//! symbol, so dense near-uniform alphabets — keyframe quantization codes,
+//! multi-species residual streams — lose up to half a bit per symbol and
+//! the table-driven decode chases a LUT per code. rANS closes both gaps:
+//! it codes fractional bits against a 12-bit normalized frequency table,
+//! and the decoder is a short branch-light dependency chain (mask, table
+//! lookup, multiply-add, byte-wise refill) that interleaves across
+//! [`RANS_LANES`] independent u32 states so the CPU overlaps the chains.
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   0xB7 | u64 n_values | u8 scale_bits (= 12) | u32 n_syms |
+//!   n_syms x ( i32 symbol | u16 freq ) |
+//!   4 x u32 final_state | 4 x u32 lane_len |
+//!   lane 0 bytes | lane 1 bytes | lane 2 bytes | lane 3 bytes
+//! ```
+//!
+//! Lane `j % 4` owns value `j`. Each lane is encoded back-to-front (rANS
+//! is LIFO) and its bytes are reversed afterwards, so the decoder reads
+//! every lane strictly forward. Frequencies are normalized to sum exactly
+//! [`RANS_SCALE`] with every surviving symbol >= 1 (deterministic
+//! largest-first correction, so archives are byte-identical at any thread
+//! count). Streams with more than [`RANS_MAX_SYMS`] distinct symbols are
+//! ineligible and stay in the plain mode.
+//!
+//! Every decode-side count is validated against the bytes actually
+//! present *before* it sizes an allocation, and the final lane states
+//! must land back on [`RANS_L`] with every lane byte consumed — a
+//! truncated or desynced stream cannot decode silently.
+
+use super::freq::symbol_freqs;
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Number of interleaved rANS states (and independent byte lanes).
+pub const RANS_LANES: usize = 4;
+/// log2 of the frequency normalization total.
+pub const RANS_SCALE_BITS: u32 = 12;
+/// Frequency normalization total: all table freqs sum to exactly this.
+pub const RANS_SCALE: u32 = 1 << RANS_SCALE_BITS;
+/// Renormalization lower bound: states live in `[RANS_L, RANS_L << 8)`.
+pub const RANS_L: u32 = 1 << 23;
+/// Most distinct symbols a stream may carry and stay eligible.
+pub const RANS_MAX_SYMS: usize = RANS_SCALE as usize;
+
+/// Symbol-container magic for rANS streams (dispatched in
+/// [`crate::coder::lossless`]).
+pub const MAGIC_RANS: u8 = 0xB7;
+
+/// Fixed header bytes before the frequency table.
+const HEADER_BYTES: usize = 1 + 8 + 1 + 4;
+/// Final states + lane lengths.
+const LANE_HEADER_BYTES: usize = RANS_LANES * 4 * 2;
+
+/// Normalize raw counts to sum exactly [`RANS_SCALE`] with every entry
+/// >= 1. Proportional floor first, then a deterministic correction:
+/// excess is taken largest-first (ties by index), deficit is handed to
+/// the single most frequent symbol. `None` when the alphabet is empty or
+/// wider than [`RANS_MAX_SYMS`].
+fn normalize_freqs(counts: &[(i32, u64)]) -> Option<Vec<u32>> {
+    let n = counts.len();
+    if n == 0 || n > RANS_MAX_SYMS {
+        return None;
+    }
+    let total: u64 = counts.iter().map(|&(_, c)| c).sum();
+    // counts come from a <= i32::MAX-long stream, so c * SCALE fits u64
+    let mut norm: Vec<u32> = counts
+        .iter()
+        .map(|&(_, c)| (((c * RANS_SCALE as u64) / total) as u32).max(1))
+        .collect();
+    let sum: u64 = norm.iter().map(|&f| f as u64).sum();
+    match sum.cmp(&(RANS_SCALE as u64)) {
+        std::cmp::Ordering::Greater => {
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_unstable_by(|&a, &b| norm[b].cmp(&norm[a]).then(a.cmp(&b)));
+            let mut excess = sum - RANS_SCALE as u64;
+            for &i in &order {
+                if excess == 0 {
+                    break;
+                }
+                let take = excess.min((norm[i] - 1) as u64) as u32;
+                norm[i] -= take;
+                excess -= take as u64;
+            }
+            if excess > 0 {
+                return None; // unreachable for n <= SCALE; defensive
+            }
+        }
+        std::cmp::Ordering::Less => {
+            let mut best = 0usize;
+            for i in 1..n {
+                if norm[i] > norm[best] {
+                    best = i;
+                }
+            }
+            norm[best] += (RANS_SCALE as u64 - sum) as u32;
+        }
+        std::cmp::Ordering::Equal => {}
+    }
+    Some(norm)
+}
+
+/// Map each value to its table index. Dense offset table when the symbol
+/// range is compact (the common quantized-stream case), binary search
+/// otherwise.
+fn index_values(values: &[i32], syms: &[i32]) -> Vec<u32> {
+    let lo = syms[0] as i64;
+    let hi = syms[syms.len() - 1] as i64;
+    let range = (hi - lo + 1) as u64;
+    if range <= (RANS_MAX_SYMS as u64) * 4 {
+        let mut map = vec![0u16; range as usize];
+        for (e, &s) in syms.iter().enumerate() {
+            map[(s as i64 - lo) as usize] = e as u16;
+        }
+        values.iter().map(|&v| map[(v as i64 - lo) as usize] as u32).collect()
+    } else {
+        values
+            .iter()
+            .map(|&v| syms.binary_search(&v).expect("symbol in table") as u32)
+            .collect()
+    }
+}
+
+/// Encode a symbol stream into the 0xB7 container. Errors when the
+/// stream is empty, longer than `i32::MAX`, or carries more than
+/// [`RANS_MAX_SYMS`] distinct symbols (callers fall back to plain).
+pub fn rans_encode(values: &[i32]) -> Result<Vec<u8>> {
+    ensure!(!values.is_empty(), "rans: empty stream");
+    ensure!(
+        values.len() <= i32::MAX as usize,
+        "rans: stream longer than {} symbols",
+        i32::MAX
+    );
+    let counts = symbol_freqs(values);
+    let norm = match normalize_freqs(&counts) {
+        Some(n) => n,
+        None => bail!("rans: {} distinct symbols exceed {}", counts.len(), RANS_MAX_SYMS),
+    };
+    let syms: Vec<i32> = counts.iter().map(|&(s, _)| s).collect();
+    let mut cum = vec![0u32; norm.len()];
+    let mut acc = 0u32;
+    for (c, &f) in cum.iter_mut().zip(&norm) {
+        *c = acc;
+        acc += f;
+    }
+    let idx = index_values(values, &syms);
+
+    // each lane owns values at positions j % RANS_LANES == lane and is
+    // encoded back-to-front (rANS is LIFO); lanes are independent, so
+    // per-lane passes keep the state in a register
+    let mut states = [RANS_L; RANS_LANES];
+    let mut lane_bytes: [Vec<u8>; RANS_LANES] = Default::default();
+    for (lane, (state, bytes)) in states.iter_mut().zip(&mut lane_bytes).enumerate() {
+        let mut x = RANS_L;
+        for &e in idx[lane..].iter().step_by(RANS_LANES).rev() {
+            let f = norm[e as usize];
+            let c = cum[e as usize];
+            // largest x that still renormalizes into [L, L << 8) after
+            // the state update: ((L >> 12) << 8) * f <= 2^31, fits u32
+            let x_max = ((RANS_L >> RANS_SCALE_BITS) << 8) * f;
+            while x >= x_max {
+                bytes.push(x as u8);
+                x >>= 8;
+            }
+            x = ((x / f) << RANS_SCALE_BITS) + (x % f) + c;
+        }
+        bytes.reverse(); // decoder reads this lane strictly forward
+        *state = x;
+    }
+
+    let payload: usize = lane_bytes.iter().map(|b| b.len()).sum();
+    let mut out = Vec::with_capacity(
+        HEADER_BYTES + syms.len() * 6 + LANE_HEADER_BYTES + payload,
+    );
+    out.push(MAGIC_RANS);
+    out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+    out.push(RANS_SCALE_BITS as u8);
+    out.extend_from_slice(&(syms.len() as u32).to_le_bytes());
+    for (&s, &f) in syms.iter().zip(&norm) {
+        out.extend_from_slice(&s.to_le_bytes());
+        out.extend_from_slice(&(f as u16).to_le_bytes());
+    }
+    for &s in &states {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    for b in &lane_bytes {
+        ensure!(b.len() <= u32::MAX as usize, "rans: lane overflow");
+        out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    }
+    for b in &lane_bytes {
+        out.extend_from_slice(b);
+    }
+    Ok(out)
+}
+
+/// Reusable decode tables: one `(freq, cum, symbol)` row per table entry
+/// plus the 4096-slot slot→entry map. One per pool thread via
+/// [`crate::engine::Scratch`], so per-tile decodes stop allocating.
+#[derive(Default)]
+pub struct RansScratch {
+    rows: Vec<(u32, u32, i32)>,
+    cum2sym: Vec<u16>,
+}
+
+/// Decode a 0xB7 stream into `out` (cleared first). `max_values` caps
+/// the declared count before any allocation; every header field is
+/// validated against the bytes actually present, and the final lane
+/// states must equal [`RANS_L`] with every lane byte consumed.
+pub fn rans_decode_into(
+    data: &[u8],
+    max_values: usize,
+    out: &mut Vec<i32>,
+    scratch: &mut RansScratch,
+) -> Result<()> {
+    out.clear();
+    ensure!(data.len() >= HEADER_BYTES, "rans: header truncated");
+    ensure!(data[0] == MAGIC_RANS, "rans: bad magic {:#04x}", data[0]);
+    let n = u64::from_le_bytes(data[1..9].try_into().unwrap());
+    let n = usize::try_from(n).map_err(|_| anyhow::anyhow!("rans: count overflow"))?;
+    ensure!(n >= 1, "rans: zero-value stream");
+    ensure!(n <= max_values, "rans: declared count {n} exceeds cap {max_values}");
+    ensure!(
+        data[9] as u32 == RANS_SCALE_BITS,
+        "rans: unsupported scale_bits {}",
+        data[9]
+    );
+    let n_syms = u32::from_le_bytes(data[10..14].try_into().unwrap()) as usize;
+    ensure!(
+        n_syms >= 1 && n_syms <= RANS_MAX_SYMS,
+        "rans: table size {n_syms} out of range"
+    );
+    let table_end = HEADER_BYTES + n_syms * 6;
+    let lanes_start = table_end + LANE_HEADER_BYTES;
+    ensure!(data.len() >= lanes_start, "rans: table truncated");
+
+    let RansScratch { rows, cum2sym } = scratch;
+    rows.clear();
+    rows.reserve(n_syms);
+    cum2sym.clear();
+    cum2sym.resize(RANS_SCALE as usize, 0);
+    let mut acc = 0u32;
+    for e in 0..n_syms {
+        let off = HEADER_BYTES + e * 6;
+        let sym = i32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+        let f = u16::from_le_bytes(data[off + 4..off + 6].try_into().unwrap()) as u32;
+        ensure!(f >= 1, "rans: zero frequency in table");
+        ensure!(acc + f <= RANS_SCALE, "rans: frequencies exceed {RANS_SCALE}");
+        for slot in cum2sym[acc as usize..(acc + f) as usize].iter_mut() {
+            *slot = e as u16;
+        }
+        rows.push((f, acc, sym));
+        acc += f;
+    }
+    ensure!(acc == RANS_SCALE, "rans: frequencies sum to {acc}, not {RANS_SCALE}");
+
+    let mut states = [0u32; RANS_LANES];
+    let mut lane_lens = [0usize; RANS_LANES];
+    for (lane, s) in states.iter_mut().enumerate() {
+        let off = table_end + lane * 4;
+        *s = u32::from_le_bytes(data[off..off + 4].try_into().unwrap());
+        // valid encoder states live below 2^31; the bound also keeps the
+        // decode multiply-add inside u32
+        ensure!(*s < 1 << 31, "rans: lane {lane} state out of range");
+    }
+    let mut total = 0u64;
+    for (lane, l) in lane_lens.iter_mut().enumerate() {
+        let off = table_end + (RANS_LANES + lane) * 4;
+        *l = u32::from_le_bytes(data[off..off + 4].try_into().unwrap()) as usize;
+        total += *l as u64;
+    }
+    ensure!(
+        total == (data.len() - lanes_start) as u64,
+        "rans: lane lengths {total} != {} payload bytes",
+        data.len() - lanes_start
+    );
+    let mut lanes: [&[u8]; RANS_LANES] = [&[]; RANS_LANES];
+    let mut pos = lanes_start;
+    for (lane, len) in lanes.iter_mut().zip(&lane_lens) {
+        *lane = &data[pos..pos + len];
+        pos += len;
+    }
+
+    out.reserve(n);
+    let mut cursors = [0usize; RANS_LANES];
+    let rows = rows.as_slice();
+    let cum2sym = cum2sym.as_slice();
+
+    #[inline(always)]
+    fn step(
+        x: &mut u32,
+        lane: &[u8],
+        cursor: &mut usize,
+        rows: &[(u32, u32, i32)],
+        cum2sym: &[u16],
+    ) -> Result<i32> {
+        let slot = *x & (RANS_SCALE - 1);
+        let e = cum2sym[slot as usize] as usize;
+        let (f, c, sym) = rows[e];
+        *x = f * (*x >> RANS_SCALE_BITS) + slot - c;
+        while *x < RANS_L {
+            let Some(&b) = lane.get(*cursor) else {
+                bail!("rans: lane bytes exhausted");
+            };
+            *cursor += 1;
+            *x = (*x << 8) | b as u32;
+        }
+        Ok(sym)
+    }
+
+    // interleaved main loop: 4 independent dependency chains per round
+    let rounds = n / RANS_LANES;
+    for _ in 0..rounds {
+        let s0 = step(&mut states[0], lanes[0], &mut cursors[0], rows, cum2sym)?;
+        let s1 = step(&mut states[1], lanes[1], &mut cursors[1], rows, cum2sym)?;
+        let s2 = step(&mut states[2], lanes[2], &mut cursors[2], rows, cum2sym)?;
+        let s3 = step(&mut states[3], lanes[3], &mut cursors[3], rows, cum2sym)?;
+        out.extend_from_slice(&[s0, s1, s2, s3]);
+    }
+    let tail = n % RANS_LANES;
+    for ((x, lane), cursor) in states.iter_mut().zip(&lanes).zip(&mut cursors).take(tail) {
+        let s = step(x, lane, cursor, rows, cum2sym)?;
+        out.push(s);
+    }
+
+    for (lane, ((&x, &cur), &len)) in
+        states.iter().zip(&cursors).zip(&lane_lens).enumerate()
+    {
+        ensure!(x == RANS_L, "rans: lane {lane} final state {x:#x} desynced");
+        ensure!(cur == len, "rans: lane {lane} left {} bytes unconsumed", len - cur);
+    }
+    Ok(())
+}
+
+/// Estimated full-stream 0xB7 size from a sample window: header + table
+/// are fixed costs, the cross-entropy payload scales with the length
+/// ratio (mirrors `scaled_estimate` for the plain trial). `None` when
+/// the sample alphabet is already ineligible.
+pub(crate) fn rans_scaled_estimate(sample: &[i32], scale: f64) -> Option<f64> {
+    let counts = symbol_freqs(sample);
+    let norm = normalize_freqs(&counts)?;
+    let mut bits = 0.0f64;
+    for (&(_, c), &f) in counts.iter().zip(&norm) {
+        bits += c as f64 * (RANS_SCALE_BITS as f64 - (f as f64).log2());
+    }
+    let fixed = (HEADER_BYTES + counts.len() * 6 + LANE_HEADER_BYTES) as f64;
+    Some(fixed + (bits / 8.0) * scale)
+}
+
+/// Layout of a 0xB7 stream without decoding it:
+/// `(table_bytes, symbol_bytes, n_values, lanes)`.
+pub fn rans_stream_layout(data: &[u8]) -> Result<(usize, usize, usize, usize)> {
+    ensure!(data.len() >= HEADER_BYTES, "rans: header truncated");
+    ensure!(data[0] == MAGIC_RANS, "rans: bad magic {:#04x}", data[0]);
+    let n_values = u64::from_le_bytes(data[1..9].try_into().unwrap()) as usize;
+    let n_syms = u32::from_le_bytes(data[10..14].try_into().unwrap()) as usize;
+    ensure!(
+        n_syms >= 1 && n_syms <= RANS_MAX_SYMS,
+        "rans: table size {n_syms} out of range"
+    );
+    let table_bytes = n_syms * 6;
+    let lanes_start = HEADER_BYTES + table_bytes + LANE_HEADER_BYTES;
+    ensure!(data.len() >= lanes_start, "rans: table truncated");
+    Ok((table_bytes, data.len() - lanes_start, n_values, RANS_LANES))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn decode(data: &[u8], max: usize) -> Result<Vec<i32>> {
+        let mut out = Vec::new();
+        rans_decode_into(data, max, &mut out, &mut RansScratch::default())?;
+        Ok(out)
+    }
+
+    fn gaussish(n: usize, spread: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let s = (0..4).map(|_| rng.below(spread) as i64).sum::<i64>();
+                (s - 2 * (spread as i64 - 1)) as i32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_trips_across_shapes() {
+        let cases: Vec<Vec<i32>> = vec![
+            gaussish(100_000, 32, 1),
+            gaussish(257, 5, 2),
+            vec![7],
+            vec![7, -3],
+            vec![7, -3, 9],
+            vec![7, -3, 9, 9, 9],
+            vec![5; 4096],
+            (0..4096).collect(), // exactly RANS_MAX_SYMS distinct
+            {
+                let mut v = vec![0i32; 65_537];
+                v[65_536] = 1; // extreme skew: freq 4095 / 1
+                v
+            },
+        ];
+        for (i, vals) in cases.iter().enumerate() {
+            let enc = rans_encode(vals).unwrap();
+            assert_eq!(enc[0], MAGIC_RANS, "case {i}");
+            assert_eq!(&decode(&enc, vals.len()).unwrap(), vals, "case {i}");
+        }
+    }
+
+    #[test]
+    fn payload_tracks_entropy() {
+        // 8-bit-ish gaussian: huffman rounds code lengths up, rans should
+        // land within a fraction of a percent of the sample entropy
+        let vals = gaussish(200_000, 64, 3);
+        let enc = rans_encode(&vals).unwrap();
+        let counts = symbol_freqs(&vals);
+        let n = vals.len() as f64;
+        let entropy_bytes: f64 = counts
+            .iter()
+            .map(|&(_, c)| -(c as f64) * ((c as f64 / n).log2()) / 8.0)
+            .sum();
+        let (table, payload, _, _) = rans_stream_layout(&enc).unwrap();
+        assert!(
+            (payload as f64) < entropy_bytes * 1.01 + 16.0,
+            "payload {payload} vs entropy {entropy_bytes:.0}"
+        );
+        assert!(table > 0);
+    }
+
+    #[test]
+    fn wide_alphabets_are_rejected() {
+        let vals: Vec<i32> = (0..5000).collect();
+        assert!(rans_encode(&vals).is_err());
+        assert!(rans_encode(&[]).is_err());
+    }
+
+    #[test]
+    fn normalization_is_exact_and_deterministic() {
+        for seed in 0..8u64 {
+            let vals = gaussish(10_000, 8 + seed as usize, seed);
+            let counts = symbol_freqs(&vals);
+            let norm = normalize_freqs(&counts).unwrap();
+            assert_eq!(norm.iter().map(|&f| f as u64).sum::<u64>(), RANS_SCALE as u64);
+            assert!(norm.iter().all(|&f| f >= 1));
+            assert_eq!(norm, normalize_freqs(&counts).unwrap());
+        }
+    }
+
+    #[test]
+    fn truncations_and_flips_error_never_panic() {
+        let vals = gaussish(10_000, 16, 5);
+        let enc = rans_encode(&vals).unwrap();
+        for cut in 0..enc.len().min(96) {
+            assert!(decode(&enc[..cut], vals.len()).is_err(), "cut {cut}");
+        }
+        // dropping payload bytes breaks the lane-length accounting
+        assert!(decode(&enc[..enc.len() - 1], vals.len()).is_err());
+        let mut rng = Rng::new(6);
+        for _ in 0..500 {
+            let mut m = enc.clone();
+            let pos = rng.below(m.len());
+            m[pos] ^= 1 << rng.below(8);
+            if let Ok(out) = decode(&m, vals.len()) {
+                assert!(out.len() <= vals.len());
+            }
+        }
+    }
+
+    #[test]
+    fn count_cap_checked_before_allocation() {
+        let vals = gaussish(1000, 8, 7);
+        let mut enc = rans_encode(&vals).unwrap();
+        assert!(decode(&enc, vals.len() - 1).is_err(), "cap enforced");
+        // an absurd declared count is refused against the caller's cap
+        // before anything is allocated for it
+        enc[1..9].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&enc, 1 << 30).is_err());
+    }
+
+    #[test]
+    fn lane_desync_is_detected() {
+        let vals = gaussish(4096, 16, 8);
+        let enc = rans_encode(&vals).unwrap();
+        let table_end = HEADER_BYTES + symbol_freqs(&vals).len() * 6;
+        // corrupt lane 2's initial state: decode must error via the
+        // refill/final-state checks, never panic
+        let mut m = enc.clone();
+        m[table_end + 8] ^= 0x41;
+        assert!(decode(&m, vals.len()).is_err());
+        // swap two unequal lane byte-lengths: the payload total still
+        // matches, but every lane now reads the wrong span
+        let l0 = table_end + RANS_LANES * 4;
+        let lens: Vec<u32> = (0..RANS_LANES)
+            .map(|i| u32::from_le_bytes(enc[l0 + 4 * i..l0 + 4 * i + 4].try_into().unwrap()))
+            .collect();
+        let pair = (0..RANS_LANES)
+            .flat_map(|a| (a + 1..RANS_LANES).map(move |b| (a, b)))
+            .find(|&(a, b)| lens[a] != lens[b]);
+        if let Some((a, b)) = pair {
+            let mut m = enc.clone();
+            for k in 0..4 {
+                m.swap(l0 + 4 * a + k, l0 + 4 * b + k);
+            }
+            assert!(decode(&m, vals.len()).is_err());
+        }
+    }
+
+    #[test]
+    fn layout_accounts_for_every_byte() {
+        let vals = gaussish(50_000, 32, 9);
+        let enc = rans_encode(&vals).unwrap();
+        let (table, payload, n, lanes) = rans_stream_layout(&enc).unwrap();
+        assert_eq!(n, vals.len());
+        assert_eq!(lanes, RANS_LANES);
+        assert_eq!(
+            HEADER_BYTES + table + LANE_HEADER_BYTES + payload,
+            enc.len(),
+            "layout must account for the whole stream"
+        );
+    }
+}

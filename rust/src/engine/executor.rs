@@ -47,6 +47,9 @@ type Payload = Box<dyn std::any::Any + Send + 'static>;
 pub struct Scratch {
     pub f32_a: Vec<f32>,
     pub f32_b: Vec<f32>,
+    /// Third f32 buffer for stages that already hold `f32_a`/`f32_b`
+    /// (e.g. the sz3 row-base pass while `f32_b` carries the tile).
+    pub f32_c: Vec<f32>,
     pub f64_a: Vec<f64>,
     pub i64_a: Vec<i64>,
     pub i32_a: Vec<i32>,

@@ -650,12 +650,13 @@ fn archive_info(path: &str) -> Result<()> {
     }
     if let Some(e) = serve::info::entropy_summary(&archive, &codec)? {
         println!(
-            "entropy: {} tiles (plain {}, zero-run {}, const {}): \
+            "entropy: {} tiles (plain {}, zero-run {}, const {}, rans {}): \
              tables {} B, symbols {} B, raw/exps {} B, tile framing {} B",
             e.tiles,
             e.plain,
             e.zero_run,
             e.constant,
+            e.rans,
             e.table_bytes,
             e.symbol_bytes,
             e.aux_bytes,

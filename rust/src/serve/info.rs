@@ -42,6 +42,11 @@ pub struct EntropySummary {
     pub plain: usize,
     pub zero_run: usize,
     pub constant: usize,
+    /// Tiles riding the interleaved rANS container (magic 0xB7).
+    pub rans: usize,
+    /// Interleaved rANS lane count (fixed per build; 0 when no tile
+    /// uses the rANS mode).
+    pub rans_lanes: usize,
     pub table_bytes: usize,
     pub symbol_bytes: usize,
     pub aux_bytes: usize,
@@ -80,6 +85,8 @@ pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropyS
         plain: 0,
         zero_run: 0,
         constant: 0,
+        rans: 0,
+        rans_lanes: 0,
         table_bytes: 0,
         symbol_bytes: 0,
         aux_bytes: 0,
@@ -94,6 +101,10 @@ pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropyS
         match b.mode {
             "plain" => out.plain += 1,
             "zero-run" => out.zero_run += 1,
+            "rans" => {
+                out.rans += 1;
+                out.rans_lanes = out.rans_lanes.max(b.lanes);
+            }
             _ => out.constant += 1,
         }
         out.table_bytes += b.table_bytes;
@@ -164,6 +175,8 @@ fn entropy_json(e: &EntropySummary) -> Value {
         ("plain", json::num(e.plain as f64)),
         ("zero_run", json::num(e.zero_run as f64)),
         ("const", json::num(e.constant as f64)),
+        ("rans", json::num(e.rans as f64)),
+        ("rans_lanes", json::num(e.rans_lanes as f64)),
         ("table_bytes", json::num(e.table_bytes as f64)),
         ("symbol_bytes", json::num(e.symbol_bytes as f64)),
         ("aux_bytes", json::num(e.aux_bytes as f64)),

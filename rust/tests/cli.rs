@@ -378,6 +378,7 @@ fn info_reports_per_section_byte_breakdown() {
     assert!(stdout.contains("bytes [index]"), "{stdout}");
     assert!(stdout.contains("header + framing:"), "{stdout}");
     assert!(stdout.contains("entropy: 16 tiles (plain "), "{stdout}");
+    assert!(stdout.contains(", rans "), "{stdout}");
     assert!(stdout.contains("tables "), "{stdout}");
     assert!(stdout.contains("symbols "), "{stdout}");
 
@@ -433,6 +434,8 @@ fn info_json_pins_the_machine_readable_breakdown() {
     assert!(stdout.contains("\"framing_bytes\": "), "{stdout}");
     assert!(stdout.contains("\"entropy\": "), "{stdout}");
     assert!(stdout.contains("\"tiles\": 16"), "{stdout}");
+    assert!(stdout.contains("\"rans\": "), "{stdout}");
+    assert!(stdout.contains("\"rans_lanes\": "), "{stdout}");
     assert!(stdout.contains("\"symbol_bytes\": "), "{stdout}");
     // the file size in the document matches the file on disk
     let bytes = std::fs::metadata(&archive_p).unwrap().len();

@@ -1,8 +1,8 @@
 //! Decoder corruption fuzzing, extending the `archive_format.rs`-style
 //! sweeps to every untrusted byte stream a consumer can hand the crate:
 //! the chunked lossless container (magic 0xB4), the bit-level Huffman
-//! stage, the SZ3/ZFP baseline streams, and the new v3 `BIDX` block
-//! index.
+//! stage, the interleaved rANS container (magic 0xB7), the SZ3/ZFP
+//! baseline streams, and the new v3 `BIDX` block index.
 //!
 //! Contract: **truncated** input always returns `Err`; **mutated** input
 //! must never panic and never balloon memory (every length that sizes an
@@ -167,6 +167,69 @@ fn zero_run_container_truncations_and_flips_never_panic() {
         if let Ok(out) = decompress_symbols(&m, 4096) {
             assert!(out.len() <= 4096);
         }
+    }
+}
+
+#[test]
+fn rans_container_truncations_and_flips_never_panic() {
+    // a dense near-gaussian stream that rides the 0xB7 rANS container
+    let mut rng = Rng::new(83);
+    let values: Vec<i32> =
+        (0..8000).map(|_| (rng.normal() * 30.0).round() as i32).collect();
+    let enc = compress_symbols_mode(&values, SymbolMode::Rans).unwrap();
+    assert_eq!(enc[0], 0xB7);
+    // truncations: structured Err or a decode whose length still matched
+    // the declared count — never a panic, never an oversized allocation
+    for cut in cuts(enc.len()) {
+        if let Ok(out) = decompress_symbols(&enc[..cut], values.len()) {
+            assert_eq!(out.len(), values.len());
+        }
+    }
+    // bit flips across header, frequency table, states, and lane bytes
+    for _ in 0..500 {
+        let mut m = enc.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1 << rng.below(8);
+        if let Ok(out) = decompress_symbols(&m, values.len()) {
+            assert!(out.len() <= values.len());
+        }
+    }
+    // crafted corrupt frequency tables (layout: magic | u64 n | u8
+    // scale_bits | u32 n_syms | n_syms x (i32 sym, u16 freq) | ...):
+    // a zero frequency must error before any decode state is built
+    let mut m = enc.clone();
+    m[18] = 0;
+    m[19] = 0;
+    assert!(decompress_symbols(&m, values.len()).is_err(), "zero freq must error");
+    // frequencies that do not sum to the scale must error
+    let mut m = enc.clone();
+    m[19] = m[19].wrapping_add(0x10);
+    assert!(decompress_symbols(&m, values.len()).is_err(), "bad freq sum must error");
+    // a declared count beyond the caller cap errors before allocation
+    let mut m = enc.clone();
+    m[1..9].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(decompress_symbols(&m, values.len()).is_err(), "count cap must hold");
+    // lane desync: swapping two unequal lane byte-lengths keeps the
+    // total consistent but desynchronizes the interleave — the final
+    // state / consumption checks must reject it
+    let n_syms = u32::from_le_bytes(enc[10..14].try_into().unwrap()) as usize;
+    let lens_off = 14 + n_syms * 6 + 16;
+    let lens: Vec<u32> = (0..4)
+        .map(|i| {
+            u32::from_le_bytes(enc[lens_off + 4 * i..lens_off + 4 * i + 4].try_into().unwrap())
+        })
+        .collect();
+    let pair = (0..4)
+        .flat_map(|a| (a + 1..4).map(move |b| (a, b)))
+        .find(|&(a, b)| lens[a] != lens[b]);
+    if let Some((a, b)) = pair {
+        let mut m = enc.clone();
+        m[lens_off + 4 * a..lens_off + 4 * a + 4].copy_from_slice(&lens[b].to_le_bytes());
+        m[lens_off + 4 * b..lens_off + 4 * b + 4].copy_from_slice(&lens[a].to_le_bytes());
+        assert!(
+            decompress_symbols(&m, values.len()).is_err(),
+            "lane desync must error"
+        );
     }
 }
 
