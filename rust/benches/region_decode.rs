@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench region_decode`
 //! (`--smoke` or `BENCH_FAST=1` shrinks to smoke scale for CI.)
 
-use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec, ZfpCodec};
+use attn_reduce::codec::{AdaptiveCodec, Codec, ErrorBound, Sz3Codec, ZfpCodec};
 use attn_reduce::compressor::Archive;
 use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
 use attn_reduce::data::{self, region_tile_ids, Region};
@@ -50,7 +50,7 @@ fn bench_codec<C: Codec>(
         payload_bytes,
         100.0 * bytes_touched as f64 / payload_bytes.max(1) as f64,
     );
-    json::obj(vec![
+    let mut entry = vec![
         ("codec", json::s(name)),
         ("raw_mb", json::num(raw_mb)),
         ("region_mb", json::num(region_mb)),
@@ -67,7 +67,25 @@ fn bench_codec<C: Codec>(
             "frac_bytes_touched",
             json::num(bytes_touched as f64 / payload_bytes.max(1) as f64),
         ),
-    ])
+    ];
+    // mixed-codec archives (the adaptive leg) also report their split
+    if let Some(cids) = &index.codecs {
+        let (mut st, mut sb, mut zt, mut zb) = (0u64, 0u64, 0u64, 0u64);
+        for (&(_, len), &id) in index.entries.iter().zip(cids) {
+            if id == 0 {
+                st += 1;
+                sb += len;
+            } else {
+                zt += 1;
+                zb += len;
+            }
+        }
+        entry.push(("sz3_tiles", json::num(st as f64)));
+        entry.push(("sz3_bytes", json::num(sb as f64)));
+        entry.push(("zfp_tiles", json::num(zt as f64)));
+        entry.push(("zfp_bytes", json::num(zb as f64)));
+    }
+    json::obj(entry)
 }
 
 fn main() {
@@ -106,6 +124,16 @@ fn main() {
         &region,
         iters,
     );
+    // the adaptive leg decodes a mixed-codec archive: the per-tile
+    // dispatch overhead shows up against the single-codec baselines
+    let adaptive = bench_codec(
+        "adaptive",
+        &AdaptiveCodec::new(cfg.clone()),
+        &field,
+        &ErrorBound::Nrmse(1e-3),
+        &region,
+        iters,
+    );
     let report = json::obj(vec![
         ("dataset", json::s("e3sm")),
         ("scale", json::s(if smoke { "smoke" } else { "bench" })),
@@ -113,7 +141,7 @@ fn main() {
         ("region_lo", json::arr_usize(&region.lo)),
         ("region_hi", json::arr_usize(&region.hi)),
         ("threads", json::num(num_threads() as f64)),
-        ("codecs", Value::Arr(vec![sz3, zfp])),
+        ("codecs", Value::Arr(vec![sz3, zfp, adaptive])),
     ]);
     std::fs::write("BENCH_region.json", report.to_string_pretty())
         .expect("write BENCH_region.json");

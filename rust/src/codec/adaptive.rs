@@ -1,0 +1,434 @@
+//! [`Codec`] adapter for *adaptive per-tile codec selection* (sz3 | zfp
+//! per tile at one typed bound).
+//!
+//! The hybrid-compression observation (PAPERS.md, "Scalable Hybrid
+//! Learning Techniques for Scientific Data Compression") is that the
+//! biggest CR wins come from choosing the right compressor *per block*
+//! rather than one codec per archive. This codec trial-compresses every
+//! AE-block tile under the SZ3-like predictor and the ZFP-like transform
+//! at the same pointwise ε and keeps the smaller stream, recording the
+//! winner in the block index codec-id trailer (index minor version 1 —
+//! see [`crate::compressor::BlockIndex`]). Decode dispatches per tile on
+//! the recorded id, so mixed archives are first-class through full
+//! decode, `decompress_region`, the v4 stream paths, and the serve
+//! routes.
+//!
+//! **Bound semantics.** Both candidate encoders certify the same
+//! pointwise ε derived from the typed [`ErrorBound`]
+//! ([`ErrorBound::pointwise_eps`]): sz3 quantizes against ε directly,
+//! and zfp binary-searches the smallest precision whose *tile*
+//! reconstruction stays within ε pointwise. A per-tile pointwise
+//! guarantee implies the global guarantee for every bound kind, so
+//! mixing codecs never weakens the archive's bound.
+//!
+//! **Selection cost.** The sz3 pass is single-shot and always runs (it
+//! is also the fallback when zfp cannot certify ε — the transform is
+//! near-lossless, not lossless). The zfp certification is a
+//! ~`log2(26)`-trial encode+decode search, so dense tiles gate it behind
+//! a sampled scaled-size trial (the `coder/lossless.rs` mode-trial
+//! pattern, one level up): a centered half-size window of the tile is
+//! encoded both ways, sizes are scaled to the full tile with framing
+//! treated as fixed cost, and the full zfp search only runs when the
+//! sample says zfp is within [`GATE_SKIP_FACTOR`] of sz3. Small tiles
+//! (< [`GATE_MIN_POINTS`] points) always pay both full encodes, so the
+//! "adaptive ≤ min(forced sz3, forced zfp)" guarantee is exact there.
+//!
+//! **A/B pinning.** [`with_tile_codec`] forces the selection
+//! thread-locally (mirroring
+//! [`crate::coder::lossless::with_symbol_mode`]); the [`Executor`]
+//! propagates the forcing context to its pool workers for the duration
+//! of a batch, so forcing is byte-identical at every thread count. A
+//! forced `Zfp` still degrades to sz3 for tiles the transform cannot
+//! certify — same spirit as forced symbol modes degrading to plain.
+
+use std::cell::Cell;
+
+use crate::baselines::{Sz3Like, ZfpLike};
+use crate::compressor::{Archive, BlockIndex};
+use crate::config::DatasetConfig;
+use crate::data::Region;
+use crate::engine::{reuse_f32, Executor, Scratch};
+use crate::tensor::{block_origins, extract_block, Tensor};
+use crate::util::json;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+
+use super::zfp::DEFAULT_PRECISION;
+use super::{base_header, tiled, Codec, ErrorBound};
+
+const MAX_PRECISION: u32 = 26;
+
+/// Tiles below this point count pay both full encodes (both are cheap
+/// there, and the size comparison is exact). At or above it, the zfp
+/// certification search is gated behind the sampled trial.
+const GATE_MIN_POINTS: usize = 4096;
+
+/// Hysteresis of the sampled trial, in sz3's favor: the full zfp search
+/// only runs when the scaled zfp estimate is within this factor of the
+/// scaled sz3 estimate. Skipping requires zfp to look *decisively*
+/// worse on the sample, so a winning zfp tile is essentially never
+/// skipped.
+const GATE_SKIP_FACTOR: f64 = 1.10;
+
+/// Per-tile stream format recorded in the block index codec-id trailer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileCodec {
+    /// SZ3-like prediction stream (codec id 0).
+    Sz3,
+    /// ZFP-like transform stream (codec id 1).
+    Zfp,
+}
+
+impl TileCodec {
+    /// The on-disk codec id (the byte stored in the index trailer).
+    pub const fn id(self) -> u8 {
+        match self {
+            Self::Sz3 => 0,
+            Self::Zfp => 1,
+        }
+    }
+
+    /// Parse an on-disk codec id; unknown ids are a typed error (fuzzed
+    /// archives must never panic or dispatch to an undefined decoder).
+    pub fn from_id(id: u8) -> Result<Self> {
+        match id {
+            0 => Ok(Self::Sz3),
+            1 => Ok(Self::Zfp),
+            other => bail!("unknown per-tile codec id {other}"),
+        }
+    }
+
+    /// Human-readable name (`cli info` breakdowns).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Self::Sz3 => "sz3",
+            Self::Zfp => "zfp",
+        }
+    }
+}
+
+thread_local! {
+    static TILE_CODEC: Cell<Option<TileCodec>> = const { Cell::new(None) };
+}
+
+/// Force the per-tile codec for the duration of `f` on this thread (A/B
+/// tests and benches; the previous setting is restored even if `f`
+/// panics). The [`Executor`] captures the forcing context at batch
+/// submission and installs it on its workers, so a force wrapped around
+/// a parallel compress is byte-identical at every thread count. A forced
+/// `Zfp` still falls back to sz3 for tiles the transform cannot certify
+/// at the requested ε.
+pub fn with_tile_codec<R>(codec: TileCodec, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<TileCodec>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            TILE_CODEC.with(|m| m.set(prev));
+        }
+    }
+    let _restore = Restore(TILE_CODEC.with(|m| m.replace(Some(codec))));
+    f()
+}
+
+/// The thread's forced tile codec, if any (executor force-context capture).
+pub(crate) fn forced_tile_codec() -> Option<TileCodec> {
+    TILE_CODEC.with(|m| m.get())
+}
+
+/// Overwrite the thread's forced tile codec (executor force-context install).
+pub(crate) fn set_forced_tile_codec(codec: Option<TileCodec>) {
+    TILE_CODEC.with(|m| m.set(codec));
+}
+
+/// The zfp stream for one tile: fixed precision when the bound is
+/// `None`, else the smallest precision whose tile reconstruction stays
+/// within `eps` pointwise (`None` when even max precision cannot — the
+/// caller falls back to sz3, which certifies ε by construction).
+fn zfp_tile_stream(
+    shape: &[usize],
+    data: &[f32],
+    eps: f32,
+    fixed_precision: Option<u32>,
+    s: &mut Scratch,
+) -> Result<Option<Vec<u8>>> {
+    if let Some(p) = fixed_precision {
+        return Ok(Some(ZfpLike::new(p).compress_scratch(shape, data, s)?));
+    }
+    // binary search the smallest certifying precision in [1, 26]; the
+    // error is monotone non-increasing in precision, so this is sound
+    let (mut lo, mut hi) = (1u32, MAX_PRECISION);
+    let mut best: Option<Vec<u8>> = None;
+    while lo <= hi {
+        let mid = (lo + hi) / 2;
+        let stream = ZfpLike::new(mid).compress_scratch(shape, data, s)?;
+        let recon = ZfpLike::decompress_capped_scratch(&stream, data.len(), s)?;
+        let ok = recon
+            .data()
+            .iter()
+            .zip(data)
+            .all(|(&r, &v)| (r - v).abs() <= eps);
+        if ok {
+            best = Some(stream);
+            if mid == 1 {
+                break;
+            }
+            hi = mid - 1;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Ok(best)
+}
+
+/// Centered half-size window of a tile, for the sampled selection trial
+/// (contiguous inner rows, so the copy is cheap and the window keeps
+/// the tile's local structure).
+fn centered_window(shape: &[usize], data: &[f32]) -> (Vec<usize>, Vec<f32>) {
+    let sub: Vec<usize> = shape.iter().map(|&d| (d / 2).max(1)).collect();
+    let lo: Vec<usize> = shape.iter().zip(&sub).map(|(&d, &s)| (d - s) / 2).collect();
+    let rank = shape.len();
+    let mut strides = vec![1usize; rank];
+    for i in (0..rank.saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    let row = sub[rank - 1];
+    let n: usize = sub.iter().product();
+    let mut out = Vec::with_capacity(n);
+    let mut idx = vec![0usize; rank - 1];
+    'outer: loop {
+        let base: usize = idx
+            .iter()
+            .zip(&lo)
+            .zip(&strides)
+            .map(|((&i, &l), &st)| (i + l) * st)
+            .sum::<usize>()
+            + lo[rank - 1];
+        out.extend_from_slice(&data[base..base + row]);
+        for d in (0..rank - 1).rev() {
+            idx[d] += 1;
+            if idx[d] < sub[d] {
+                continue 'outer;
+            }
+            idx[d] = 0;
+        }
+        break;
+    }
+    debug_assert_eq!(out.len(), n);
+    (sub, out)
+}
+
+/// Full-tile stream size estimated from the sampled window: per-stream
+/// framing (magic/precision, rank, dims, section lengths) is a fixed
+/// cost, the coded payload scales with the point ratio — the same shape
+/// as `coder/lossless.rs`'s `scaled_estimate`, one level up.
+fn scaled_stream_estimate(sample_bytes: usize, rank: usize, scale: f64) -> f64 {
+    let fixed = 29 + 8 * rank;
+    fixed as f64 + sample_bytes.saturating_sub(fixed) as f64 * scale
+}
+
+/// Encode one tile under the winning codec at equal pointwise ε,
+/// returning the stream and the codec id to record.
+fn encode_tile_select(
+    shape: &[usize],
+    data: &[f32],
+    eps: f32,
+    fixed_precision: Option<u32>,
+    s: &mut Scratch,
+) -> Result<(Vec<u8>, TileCodec)> {
+    let sz3 = |s: &mut Scratch| Sz3Like::new(eps).compress_scratch(shape, data, s);
+    match forced_tile_codec() {
+        Some(TileCodec::Sz3) => return Ok((sz3(s)?, TileCodec::Sz3)),
+        Some(TileCodec::Zfp) => {
+            return match zfp_tile_stream(shape, data, eps, fixed_precision, s)? {
+                Some(stream) => Ok((stream, TileCodec::Zfp)),
+                // the transform cannot certify ε on this tile: degrade
+                // to sz3 (which can, by construction) instead of failing
+                None => Ok((sz3(s)?, TileCodec::Sz3)),
+            };
+        }
+        None => {}
+    }
+    let sz3_stream = sz3(s)?;
+    if data.len() >= GATE_MIN_POINTS {
+        // sampled scaled-size trial: skip the zfp certification search
+        // when zfp decisively loses on a centered half-size window
+        let (sub_shape, sub_data) = centered_window(shape, data);
+        let scale = data.len() as f64 / sub_data.len() as f64;
+        let sz3_sample = Sz3Like::new(eps).compress_scratch(&sub_shape, &sub_data, s)?;
+        let skip = match zfp_tile_stream(&sub_shape, &sub_data, eps, fixed_precision, s)? {
+            None => true, // cannot even certify the sample
+            Some(zfp_sample) => {
+                scaled_stream_estimate(zfp_sample.len(), sub_shape.len(), scale)
+                    > scaled_stream_estimate(sz3_sample.len(), sub_shape.len(), scale)
+                        * GATE_SKIP_FACTOR
+            }
+        };
+        if skip {
+            return Ok((sz3_stream, TileCodec::Sz3));
+        }
+    }
+    match zfp_tile_stream(shape, data, eps, fixed_precision, s)? {
+        Some(zfp_stream) if zfp_stream.len() < sz3_stream.len() => {
+            Ok((zfp_stream, TileCodec::Zfp))
+        }
+        // ties go to sz3: its decode path is the cheaper of the two
+        _ => Ok((sz3_stream, TileCodec::Sz3)),
+    }
+}
+
+/// Decode a mixed-codec tiled payload (whole field, or only `region`),
+/// dispatching every tile on its recorded codec id. The per-tile cap is
+/// the validated tile volume, so a corrupt stream cannot allocate past
+/// the geometry no matter which decoder its id routes it to.
+pub(crate) fn decode(
+    payload: &[u8],
+    index: &BlockIndex,
+    dims: &[usize],
+    region: Option<&Region>,
+) -> Result<Tensor> {
+    let codecs = index
+        .codecs
+        .as_ref()
+        .ok_or_else(|| anyhow!("adaptive archive missing per-tile codec ids"))?;
+    tiled::decode_tiled(payload, index, dims, region, |id, b, s| {
+        let cap = index.tile.iter().product();
+        let &cid = codecs
+            .get(id)
+            .ok_or_else(|| anyhow!("tile {id} has no codec id"))?;
+        match TileCodec::from_id(cid)? {
+            TileCodec::Sz3 => Sz3Like::decompress_capped_scratch(b, cap, s),
+            TileCodec::Zfp => ZfpLike::decompress_capped_scratch(b, cap, s),
+        }
+    })
+}
+
+/// Adaptive per-tile codec (sz3 | zfp per tile, equal typed bound).
+pub struct AdaptiveCodec {
+    dataset: DatasetConfig,
+}
+
+impl AdaptiveCodec {
+    pub fn new(dataset: DatasetConfig) -> Self {
+        Self { dataset }
+    }
+
+    fn decode(&self, archive: &Archive, region: Option<&Region>) -> Result<Tensor> {
+        let payload = archive.section("ADPB")?;
+        let index = archive
+            .block_index()?
+            .ok_or_else(|| anyhow!("adaptive archive missing block index"))?;
+        decode(payload, &index, &self.dataset.dims, region)
+    }
+}
+
+impl Codec for AdaptiveCodec {
+    fn id(&self) -> &str {
+        "adaptive"
+    }
+
+    fn compress(&self, field: &Tensor, bound: &ErrorBound) -> Result<Archive> {
+        ensure!(
+            field.shape() == &self.dataset.dims[..],
+            "field shape {:?} != dataset dims {:?}",
+            field.shape(),
+            self.dataset.dims
+        );
+        let eps = bound.pointwise_eps(&self.dataset, field.range() as f64);
+        ensure!(
+            eps.is_finite() && eps > 0.0,
+            "bound {bound} yields eps {eps} (constant field or zero bound?)"
+        );
+        // `None` has no ε to certify: zfp trials run at the bench-default
+        // fixed precision (like ZfpCodec), sz3 still quantizes against
+        // the best-effort ε
+        let fixed_precision = matches!(bound, ErrorBound::None).then_some(DEFAULT_PRECISION);
+        let tile: Vec<usize> = self
+            .dataset
+            .ae_block
+            .iter()
+            .zip(field.shape())
+            .map(|(&t, &d)| t.min(d).max(1))
+            .collect();
+        let origins = block_origins(field.shape(), &tile);
+        let tile_len: usize = tile.iter().product();
+        let parts: Vec<(Vec<u8>, TileCodec)> =
+            Executor::global().try_par_map_scratch(origins.len(), |i, s| {
+                let mut buf = std::mem::take(&mut s.f32_b);
+                reuse_f32(&mut buf, tile_len);
+                extract_block(field, &origins[i], &tile, &mut buf);
+                let r = encode_tile_select(&tile, &buf, eps, fixed_precision, s);
+                s.f32_b = buf;
+                r
+            })?;
+        let mut payload = Vec::with_capacity(parts.iter().map(|(p, _)| p.len()).sum());
+        let mut entries = Vec::with_capacity(parts.len());
+        let mut codecs = Vec::with_capacity(parts.len());
+        for (p, c) in &parts {
+            entries.push((payload.len() as u64, p.len() as u64));
+            payload.extend_from_slice(p);
+            codecs.push(c.id());
+        }
+        let index = BlockIndex { tile, entries, codecs: Some(codecs) };
+        let mut header = base_header(self.id(), &self.dataset, bound);
+        header.push(("eps".to_string(), json::num(eps as f64)));
+        let mut archive = Archive::new_v3(crate::util::json::Value::Obj(header));
+        archive.add_section("ADPB", payload);
+        archive.add_block_index(&index);
+        Ok(archive)
+    }
+
+    fn decompress(&self, archive: &Archive) -> Result<Tensor> {
+        self.decode(archive, None)
+    }
+
+    fn decompress_region(&self, archive: &Archive, region: &Region) -> Result<Tensor> {
+        self.decode(archive, Some(region))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn centered_window_is_the_middle_half() {
+        // 1-D: dims 8 -> sub 4 starting at 2
+        let data: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let (sub, w) = centered_window(&[8], &data);
+        assert_eq!(sub, vec![4]);
+        assert_eq!(w, vec![2.0, 3.0, 4.0, 5.0]);
+        // 2-D: 4x6 -> 2x3, rows 1..3, cols 1..4 (contiguous inner rows)
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let (sub, w) = centered_window(&[4, 6], &data);
+        assert_eq!(sub, vec![2, 3]);
+        assert_eq!(w, vec![7.0, 8.0, 9.0, 13.0, 14.0, 15.0]);
+        // a dim of 1 stays 1
+        let (sub, w) = centered_window(&[1, 3], &[5.0, 6.0, 7.0]);
+        assert_eq!(sub, vec![1, 1]);
+        assert_eq!(w, vec![6.0]);
+    }
+
+    #[test]
+    fn tile_codec_ids_round_trip_and_reject_unknown() {
+        for c in [TileCodec::Sz3, TileCodec::Zfp] {
+            assert_eq!(TileCodec::from_id(c.id()).unwrap(), c);
+        }
+        for bad in [2u8, 7, 255] {
+            let err = TileCodec::from_id(bad).unwrap_err().to_string();
+            assert!(err.contains("unknown per-tile codec id"), "{err}");
+        }
+    }
+
+    #[test]
+    fn with_tile_codec_restores_on_panic() {
+        assert_eq!(forced_tile_codec(), None);
+        let r = std::panic::catch_unwind(|| {
+            with_tile_codec(TileCodec::Zfp, || {
+                assert_eq!(forced_tile_codec(), Some(TileCodec::Zfp));
+                panic!("boom");
+            })
+        });
+        assert!(r.is_err());
+        assert_eq!(forced_tile_codec(), None);
+    }
+}

@@ -22,7 +22,7 @@ use crate::tensor::Tensor;
 use crate::Result;
 use anyhow::{bail, ensure, Context};
 
-use super::{Codec, GbaeCodec, HierCodec, Sz3Codec, ZfpCodec};
+use super::{AdaptiveCodec, Codec, GbaeCodec, HierCodec, Sz3Codec, ZfpCodec};
 
 /// The codecs the unified API can construct.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,10 +31,12 @@ pub enum CodecKind {
     Sz3,
     Zfp,
     Gbae,
+    /// Per-tile sz3 | zfp selection at equal bound (mixed-codec archives).
+    Adaptive,
 }
 
 /// All codec ids, in CLI help order.
-pub const CODEC_IDS: [&str; 4] = ["hier", "sz3", "zfp", "gbae"];
+pub const CODEC_IDS: [&str; 5] = ["hier", "sz3", "zfp", "gbae", "adaptive"];
 
 impl CodecKind {
     pub fn parse(s: &str) -> Result<Self> {
@@ -43,6 +45,7 @@ impl CodecKind {
             "sz3" => Ok(Self::Sz3),
             "zfp" => Ok(Self::Zfp),
             "gbae" => Ok(Self::Gbae),
+            "adaptive" => Ok(Self::Adaptive),
             other => bail!("unknown codec {other:?} (have: {CODEC_IDS:?})"),
         }
     }
@@ -53,6 +56,7 @@ impl CodecKind {
             Self::Sz3 => "sz3",
             Self::Zfp => "zfp",
             Self::Gbae => "gbae",
+            Self::Adaptive => "adaptive",
         }
     }
 }
@@ -139,6 +143,7 @@ impl CodecBuilder {
         Ok(match codec {
             CodecKind::Sz3 => Box::new(Sz3Codec::new(self.dataset(kind))),
             CodecKind::Zfp => Box::new(ZfpCodec::new(self.dataset(kind))),
+            CodecKind::Adaptive => Box::new(AdaptiveCodec::new(self.dataset(kind))),
             CodecKind::Hier => Box::new(self.build_hier(kind, field)?),
             CodecKind::Gbae => Box::new(self.build_gbae(kind, field)?),
         })
@@ -203,6 +208,7 @@ impl CodecBuilder {
         Ok(match id.as_str() {
             "sz3" => Box::new(Sz3Codec::new(dataset)),
             "zfp" => Box::new(ZfpCodec::new(dataset)),
+            "adaptive" => Box::new(AdaptiveCodec::new(dataset)),
             "hier" => {
                 let model = ModelConfig::from_json(h.req("model")?)?;
                 let rt = self.runtime_handle()?;

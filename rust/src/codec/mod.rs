@@ -27,6 +27,7 @@
 //! | `GbaeCompressor::compress(f, bin, tau)`      | `builder.build(Gbae, ..)` — now with a real decode path |
 //! | `coordinator::stream_compress`               | `HierCodec::compress_streaming` — same archive as one-shot |
 
+mod adaptive;
 mod bound;
 mod builder;
 mod gbae;
@@ -35,6 +36,8 @@ mod sz3;
 mod tiled;
 mod zfp;
 
+pub use adaptive::{with_tile_codec, AdaptiveCodec, TileCodec};
+pub(crate) use adaptive::{forced_tile_codec, set_forced_tile_codec};
 pub use bound::ErrorBound;
 pub use builder::{CodecBuilder, CodecKind, CODEC_IDS};
 pub use gbae::GbaeCodec;

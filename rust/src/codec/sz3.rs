@@ -48,7 +48,7 @@ impl Sz3Codec {
                 // the per-tile cap is computed inside the closure: it
                 // only runs after decode_tiled has validated the
                 // (untrusted) tile shape against the field dims
-                tiled::decode_tiled(payload, &index, &self.dataset.dims, region, |b, s| {
+                tiled::decode_tiled(payload, &index, &self.dataset.dims, region, |_, b, s| {
                     Sz3Like::decompress_capped_scratch(b, index.tile.iter().product(), s)
                 })
             }

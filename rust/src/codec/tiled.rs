@@ -61,14 +61,16 @@ where
         entries.push((payload.len() as u64, p.len() as u64));
         payload.extend_from_slice(p);
     }
-    Ok((payload, BlockIndex { tile, entries }))
+    Ok((payload, BlockIndex { tile, entries, codecs: None }))
 }
 
 /// Decode the tiles of a v3 payload that intersect `region` (all tiles
 /// when `None`) and reassemble them into a tensor shaped as the region
 /// (the full field when `None`). Only the indexed byte spans of the
 /// selected tiles are ever sliced — the acceptance contract of the
-/// region path.
+/// region path. `decode_tile` receives `(tile id, tile bytes, scratch)`;
+/// the id lets mixed-codec payloads dispatch on the index's per-tile
+/// codec ids (homogeneous codecs ignore it).
 pub(crate) fn decode_tiled<F>(
     payload: &[u8],
     index: &BlockIndex,
@@ -77,7 +79,7 @@ pub(crate) fn decode_tiled<F>(
     decode_tile: F,
 ) -> Result<Tensor>
 where
-    F: Fn(&[u8], &mut Scratch) -> Result<Tensor> + Sync,
+    F: Fn(usize, &[u8], &mut Scratch) -> Result<Tensor> + Sync,
 {
     index.validate(dims, payload.len())?;
     let origins = block_origins(dims, &index.tile);
@@ -92,7 +94,7 @@ where
     let ids = region_tile_ids(dims, &index.tile, r);
     let tiles: Vec<Tensor> = Executor::global().try_par_map_scratch(ids.len(), |i, s| {
         let (off, len) = index.entry(ids[i])?;
-        let t = decode_tile(&payload[off..off + len], s)?;
+        let t = decode_tile(ids[i], &payload[off..off + len], s)?;
         ensure!(
             t.shape() == &index.tile[..],
             "tile {} decoded to shape {:?}, index says {:?}",

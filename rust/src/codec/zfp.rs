@@ -26,8 +26,8 @@ use anyhow::{bail, ensure};
 use super::{base_header, tiled, Codec, ErrorBound};
 
 /// Precision used for `ErrorBound::None` (best effort; matches the old
-/// bench default).
-const DEFAULT_PRECISION: u32 = 12;
+/// bench default). Shared with the adaptive codec's zfp trials.
+pub(crate) const DEFAULT_PRECISION: u32 = 12;
 const MAX_PRECISION: u32 = 26;
 
 /// ZFP-like codec (4^d block transform + fixed precision), bound-certified.
@@ -118,7 +118,7 @@ fn decode(
     dims: &[usize],
     region: Option<&Region>,
 ) -> Result<Tensor> {
-    tiled::decode_tiled(payload, index, dims, region, |b, s| {
+    tiled::decode_tiled(payload, index, dims, region, |_, b, s| {
         ZfpLike::decompress_capped_scratch(b, index.tile.iter().product(), s)
     })
 }

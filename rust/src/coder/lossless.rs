@@ -69,8 +69,9 @@
 //! bitstreams), then rANS when it is within 1% of plain (it decodes
 //! several times faster at equal size, and typically shaves the
 //! fractional-bit slack too). [`with_symbol_mode`] forces a mode
-//! thread-locally for A/B tests and benches (combine with
-//! `with_thread_limit(1)` so pool workers inherit it).
+//! thread-locally for A/B tests and benches; the
+//! [`crate::engine::Executor`] propagates the forcing to its pool
+//! workers per batch, so forcing applies at every thread count.
 
 use std::cell::Cell;
 
@@ -430,12 +431,14 @@ thread_local! {
 
 /// Force the symbol-container mode for the duration of `f` on this
 /// thread (A/B tests and benches; the previous setting is restored even
-/// if `f` panics). Thread-local: wrap in
-/// [`crate::util::parallel::with_thread_limit`]`(1, ..)` so pool batches
-/// run inline and inherit it. A forced `ZeroRun` still falls back to
-/// plain for streams the transform cannot carry (literals beyond ±2^29),
-/// and a forced `Rans` falls back to plain for streams with more than
-/// 4096 distinct symbols.
+/// if `f` panics). Thread-local, but the [`crate::engine::Executor`]
+/// captures the forcing context at batch submission and installs it on
+/// its pool workers for the batch's duration — so a force wrapped
+/// around a parallel compress applies to every tile and the output is
+/// byte-identical at 1 and N threads. A forced `ZeroRun` still falls
+/// back to plain for streams the transform cannot carry (literals
+/// beyond ±2^29), and a forced `Rans` falls back to plain for streams
+/// with more than 4096 distinct symbols.
 pub fn with_symbol_mode<R>(mode: SymbolMode, f: impl FnOnce() -> R) -> R {
     struct Restore(Option<SymbolMode>);
     impl Drop for Restore {
@@ -446,6 +449,16 @@ pub fn with_symbol_mode<R>(mode: SymbolMode, f: impl FnOnce() -> R) -> R {
     }
     let _restore = Restore(SYMBOL_MODE.with(|m| m.replace(Some(mode))));
     f()
+}
+
+/// The thread's forced symbol mode, if any (executor force-context capture).
+pub(crate) fn forced_symbol_mode() -> Option<SymbolMode> {
+    SYMBOL_MODE.with(|m| m.get())
+}
+
+/// Overwrite the thread's forced symbol mode (executor force-context install).
+pub(crate) fn set_forced_symbol_mode(mode: Option<SymbolMode>) {
+    SYMBOL_MODE.with(|m| m.set(mode));
 }
 
 #[inline]

@@ -15,6 +15,7 @@
 //!   GIDX — GAE index sets (Fig. 3 + LZSS)     } counted in CR
 //!   SZ3B — SZ3-like whole-stream payload      } counted in CR
 //!   ZFPB — ZFP-like whole-stream payload      } counted in CR
+//!   ADPB — adaptive mixed-codec tiled payload } counted in CR
 //!   GBAS — PCA basis, f32 (amortized like model params — the paper's CR
 //!          counts latents + coefficients + index info; §III-C)
 //!
@@ -32,7 +33,12 @@
 //! [`crate::codec::Codec::decompress_region`] uses the index to decode
 //! only the blocks intersecting a requested hyper-rectangle. v3 bumps
 //! the container version because the payload *layout* changed — a v1
-//! reader must not misparse a chunked stream as a whole stream.
+//! reader must not misparse a chunked stream as a whole stream. The
+//! index carries an optional per-block *codec-id* trailer (index minor
+//! version 1, see [`BlockIndex`]) so a mixed-codec payload (`ADPB`,
+//! written by the adaptive codec) records which stream format each
+//! block used; homogeneous archives omit it and stay byte-identical to
+//! pre-extension writers.
 //!
 //! **Version 4** is the *temporal stream* container — a different magic
 //! (`TSTR`, not `ARDC`) because its framing is append-only rather than
@@ -161,8 +167,12 @@ pub fn parse_stream_record(bytes: &[u8], off: usize) -> Result<([u8; 4], usize, 
 }
 
 /// Sections whose bytes count toward the paper's compression ratio.
-pub const CR_SECTIONS: [&str; 8] =
-    ["HLAT", "BLAT", "GLAT", "GCLT", "GCOF", "GIDX", "SZ3B", "ZFPB"];
+pub const CR_SECTIONS: [&str; 9] =
+    ["HLAT", "BLAT", "GLAT", "GCLT", "GCOF", "GIDX", "SZ3B", "ZFPB", "ADPB"];
+
+/// Index minor version of the per-block codec-id extension (the one
+/// defined extension so far — see [`BlockIndex`]).
+pub const BLOCK_INDEX_EXT_CODECS: u8 = 1;
 
 /// The Archive v3 block index: where each block's independently-coded
 /// stream lives inside the payload section.
@@ -176,11 +186,23 @@ pub const CR_SECTIONS: [&str; 8] =
 /// Serialized layout (little-endian, section `BIDX`):
 /// ```text
 ///   u32 rank | rank x u32 tile_dim | u64 n_blocks | n x (u64 off, u64 len)
+///     [ u8 minor_version (=1) | n x u8 codec_id ]
 /// ```
+///
+/// The bracketed trailer is the *codec-id extension* (index minor
+/// version [`BLOCK_INDEX_EXT_CODECS`]), written only by mixed-codec
+/// (adaptive) archives: `codecs[id]` names the per-block stream format
+/// (`0` = sz3-like, `1` = zfp-like — see `crate::codec::TileCodec`).
+/// Homogeneous archives omit it, so every pre-extension v3/v4 archive
+/// keeps parsing byte-identically and new homogeneous archives stay
+/// readable by pre-extension readers.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BlockIndex {
     pub tile: Vec<usize>,
     pub entries: Vec<(u64, u64)>,
+    /// Per-block codec ids (one per entry) for mixed-codec payloads;
+    /// `None` for homogeneous archives (every pre-extension archive).
+    pub codecs: Option<Vec<u8>>,
 }
 
 /// Sanity cap on index rank (fields are rank 1..4 in practice).
@@ -188,7 +210,9 @@ const MAX_INDEX_RANK: usize = 16;
 
 impl BlockIndex {
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 + self.tile.len() * 4 + 8 + self.entries.len() * 16);
+        let ext = self.codecs.as_ref().map_or(0, |c| 1 + c.len());
+        let mut out =
+            Vec::with_capacity(4 + self.tile.len() * 4 + 8 + self.entries.len() * 16 + ext);
         out.extend_from_slice(&(self.tile.len() as u32).to_le_bytes());
         for &t in &self.tile {
             out.extend_from_slice(&(t as u32).to_le_bytes());
@@ -197,6 +221,11 @@ impl BlockIndex {
         for &(off, len) in &self.entries {
             out.extend_from_slice(&off.to_le_bytes());
             out.extend_from_slice(&len.to_le_bytes());
+        }
+        if let Some(codecs) = &self.codecs {
+            assert_eq!(codecs.len(), self.entries.len(), "one codec id per entry");
+            out.push(BLOCK_INDEX_EXT_CODECS);
+            out.extend_from_slice(codecs);
         }
         out
     }
@@ -237,8 +266,29 @@ impl BlockIndex {
             entries.push((o, l));
             off += 16;
         }
+        // optional codec-id extension: exactly `1 + n` trailing bytes
+        // (minor version + one id per entry); anything else is corrupt —
+        // the slice below is bounded by the bytes actually present
+        let codecs = if off == bytes.len() {
+            None
+        } else {
+            let minor = bytes[off];
+            ensure!(
+                minor == BLOCK_INDEX_EXT_CODECS,
+                "block index extension version {minor} unsupported"
+            );
+            off += 1;
+            ensure!(
+                bytes.len() - off == n,
+                "block index codec-id extension has {} of {n} ids",
+                bytes.len() - off
+            );
+            let c = bytes[off..off + n].to_vec();
+            off += n;
+            Some(c)
+        };
         ensure!(off == bytes.len(), "block index has trailing bytes");
-        Ok(Self { tile, entries })
+        Ok(Self { tile, entries, codecs })
     }
 
     /// Check the index is consistent with the field geometry and payload
@@ -268,6 +318,14 @@ impl BlockIndex {
             "block index has {} entries, geometry needs {expect}",
             self.entries.len()
         );
+        if let Some(codecs) = &self.codecs {
+            ensure!(
+                codecs.len() == self.entries.len(),
+                "block index has {} codec ids for {} entries",
+                codecs.len(),
+                self.entries.len()
+            );
+        }
         for (id, &(off, len)) in self.entries.iter().enumerate() {
             let end = off
                 .checked_add(len)
@@ -771,6 +829,7 @@ mod tests {
         let idx = BlockIndex {
             tile: vec![4, 8],
             entries: vec![(0, 10), (10, 7), (17, 0), (17, 3)],
+            codecs: None,
         };
         let back = BlockIndex::from_bytes(&idx.to_bytes()).unwrap();
         assert_eq!(back, idx);
@@ -787,7 +846,7 @@ mod tests {
 
     #[test]
     fn block_index_rejects_corrupt_input() {
-        let idx = BlockIndex { tile: vec![4], entries: vec![(0, 5), (5, 5)] };
+        let idx = BlockIndex { tile: vec![4], entries: vec![(0, 5), (5, 5)], codecs: None };
         let bytes = idx.to_bytes();
         for cut in 0..bytes.len() {
             assert!(BlockIndex::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
@@ -815,21 +874,70 @@ mod tests {
         let huge = BlockIndex {
             tile: vec![u32::MAX as usize, u32::MAX as usize],
             entries: vec![(0, 4)],
+            codecs: None,
         };
         assert!(huge.validate(&[7, 16], 4).is_err());
         // count arithmetic is overflow-checked even for absurd dims
-        let tiny = BlockIndex { tile: vec![1, 1], entries: vec![(0, 4)] };
+        let tiny = BlockIndex { tile: vec![1, 1], entries: vec![(0, 4)], codecs: None };
         assert!(tiny.validate(&[usize::MAX, usize::MAX], 4).is_err());
         // boundary: tile == dims is one tile and valid
-        let exact = BlockIndex { tile: vec![7, 16], entries: vec![(0, 4)] };
+        let exact = BlockIndex { tile: vec![7, 16], entries: vec![(0, 4)], codecs: None };
         exact.validate(&[7, 16], 4).unwrap();
+    }
+
+    #[test]
+    fn block_index_codec_id_extension_round_trips() {
+        let idx = BlockIndex {
+            tile: vec![4, 8],
+            entries: vec![(0, 10), (10, 7), (17, 3)],
+            codecs: Some(vec![0, 1, 0]),
+        };
+        let bytes = idx.to_bytes();
+        // the extension is exactly `u8 minor + n ids` past the legacy layout
+        let legacy = BlockIndex { codecs: None, ..idx.clone() };
+        assert_eq!(bytes.len(), legacy.to_bytes().len() + 1 + 3);
+        let back = BlockIndex::from_bytes(&bytes).unwrap();
+        assert_eq!(back, idx);
+        // geometry 4 x 24 with 4 x 8 tiles -> 1 x 3 = 3 entries
+        back.validate(&[4, 24], 20).unwrap();
+        // codec-id count must match the entry count
+        let bad = BlockIndex { codecs: Some(vec![0]), ..idx.clone() };
+        assert!(bad.validate(&[4, 24], 20).is_err(), "id/entry count mismatch");
+        // a legacy (extension-free) serialization still parses as before
+        assert_eq!(BlockIndex::from_bytes(&legacy.to_bytes()).unwrap(), legacy);
+    }
+
+    #[test]
+    fn block_index_rejects_corrupt_codec_extension() {
+        let idx = BlockIndex {
+            tile: vec![4],
+            entries: vec![(0, 5), (5, 5)],
+            codecs: Some(vec![1, 0]),
+        };
+        let bytes = idx.to_bytes();
+        let legacy_len = BlockIndex { codecs: None, ..idx.clone() }.to_bytes().len();
+        // dropping the whole trailer yields a valid legacy index (by design)
+        let cut = BlockIndex::from_bytes(&bytes[..legacy_len]).unwrap();
+        assert_eq!(cut.codecs, None);
+        // any partial trailer is a typed error, never a panic
+        for cut in legacy_len + 1..bytes.len() {
+            assert!(BlockIndex::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // unknown extension minor version
+        let mut b = bytes.clone();
+        b[legacy_len] = 2;
+        assert!(BlockIndex::from_bytes(&b).is_err());
+        // surplus trailer bytes
+        let mut b = bytes;
+        b.push(0);
+        assert!(BlockIndex::from_bytes(&b).is_err());
     }
 
     #[test]
     fn v3_archives_round_trip_with_index() {
         let mut a = Archive::new_v3(json::obj(vec![("codec", json::s("sz3"))]));
         a.add_section("SZ3B", vec![1; 12]);
-        a.add_block_index(&BlockIndex { tile: vec![4], entries: vec![(0, 12)] });
+        a.add_block_index(&BlockIndex { tile: vec![4], entries: vec![(0, 12)], codecs: None });
         assert_eq!(a.version(), VERSION_V3);
         assert!(!a.is_multi_field());
         let back = Archive::from_bytes(&a.to_bytes()).unwrap();
@@ -847,7 +955,7 @@ mod tests {
     fn v2_can_embed_v3_field_archives() {
         let mut f = Archive::new_v3(json::obj(vec![("codec", json::s("sz3"))]));
         f.add_section("SZ3B", vec![3; 9]);
-        f.add_block_index(&BlockIndex { tile: vec![2], entries: vec![(0, 9)] });
+        f.add_block_index(&BlockIndex { tile: vec![2], entries: vec![(0, 9)], codecs: None });
         let mut v2 = Archive::new_v2(json::obj(vec![(
             "fields",
             Value::Arr(vec![json::s("t")]),

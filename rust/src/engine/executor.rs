@@ -128,6 +128,52 @@ struct Shared {
     done_cv: Condvar,
 }
 
+/// Thread-local *forcing* state captured on the submitting thread and
+/// installed on every batch participant: the symbol-container and
+/// tile-codec overrides (`with_symbol_mode` / `with_tile_codec`) are
+/// thread-locals, and pool workers do not inherit the submitter's —
+/// without propagation a force wrapped around a parallel compress would
+/// silently apply only to the tiles the submitting thread happens to
+/// drain, making forced output thread-count-dependent.
+#[derive(Clone, Copy)]
+struct ForceContext {
+    symbol_mode: Option<crate::coder::lossless::SymbolMode>,
+    tile_codec: Option<crate::codec::TileCodec>,
+}
+
+impl ForceContext {
+    fn capture() -> Self {
+        Self {
+            symbol_mode: crate::coder::lossless::forced_symbol_mode(),
+            tile_codec: crate::codec::forced_tile_codec(),
+        }
+    }
+
+    fn set(ctx: Self) {
+        crate::coder::lossless::set_forced_symbol_mode(ctx.symbol_mode);
+        crate::codec::set_forced_tile_codec(ctx.tile_codec);
+    }
+
+    /// Install this context on the current thread, restoring the
+    /// previous state when the guard drops (panic-safe: a panicking work
+    /// item must not leak a force onto a pool worker).
+    fn install(self) -> ForceGuard {
+        let prev = ForceContext::capture();
+        ForceContext::set(self);
+        ForceGuard { prev }
+    }
+}
+
+struct ForceGuard {
+    prev: ForceContext,
+}
+
+impl Drop for ForceGuard {
+    fn drop(&mut self) {
+        ForceContext::set(self.prev);
+    }
+}
+
 struct BatchData<'a, T, F> {
     next: &'a AtomicUsize,
     n: usize,
@@ -136,6 +182,8 @@ struct BatchData<'a, T, F> {
     f: &'a F,
     out: *mut Option<T>,
     panic: &'a Mutex<Option<Payload>>,
+    /// Submitter's forcing context, installed on every participant.
+    force: ForceContext,
 }
 
 fn drain<T, F>(b: &BatchData<'_, T, F>)
@@ -143,6 +191,7 @@ where
     T: Send,
     F: Fn(usize, &mut Scratch) -> T + Sync,
 {
+    let _force = b.force.install();
     SCRATCH.with(|cell| {
         let mut borrow = cell.borrow_mut();
         let scratch: &mut Scratch = &mut borrow;
@@ -305,6 +354,10 @@ impl Executor {
             f: &f,
             out: out.as_mut_ptr(),
             panic: &panic_slot,
+            // the inline paths above run on the submitting thread and
+            // inherit its thread-locals for free; pooled workers get the
+            // same view via this captured context
+            force: ForceContext::capture(),
         };
 
         // install the batch (one in flight at a time; concurrent

@@ -3,7 +3,7 @@
 //! ```text
 //! attn-reduce generate   --dataset s3d --scale bench --out field.f32
 //! attn-reduce train      --dataset s3d [--steps N] [--ckpt-dir DIR]
-//! attn-reduce compress   --codec hier|sz3|zfp|gbae --bound nrmse:1e-3
+//! attn-reduce compress   --codec hier|sz3|zfp|gbae|adaptive --bound nrmse:1e-3
 //!                        [--dataset D] [--in field.f32] --out data.ardc
 //! attn-reduce compress   --all-vars [--vars N]    # one Archive v2 per dataset
 //! attn-reduce compress   --in a.f32,b.f32,...     # multi-input -> Archive v2
@@ -21,7 +21,8 @@
 use std::rc::Rc;
 
 use attn_reduce::codec::{
-    archive_stats, Codec, CodecBuilder, CodecKind, ErrorBound, Sz3Codec, ZfpCodec,
+    archive_stats, AdaptiveCodec, Codec, CodecBuilder, CodecKind, ErrorBound, Sz3Codec,
+    ZfpCodec,
 };
 use attn_reduce::compressor::{self, Archive, HierCompressor};
 use attn_reduce::config::{self, DatasetKind, Scale};
@@ -45,7 +46,8 @@ USAGE:
 COMMANDS:
   generate     synthesize a dataset (--dataset s3d|e3sm|xgc --scale bench --out F)
   train        train HBAE+BAE for a dataset preset (--dataset D --steps N)
-  compress     compress (--codec hier|sz3|zfp|gbae) (--bound nrmse:1e-3|tau:T|abs:A|none)
+  compress     compress (--codec hier|sz3|zfp|gbae|adaptive)
+               (--bound nrmse:1e-3|tau:T|abs:A|none)
                [--dataset D] [--in F] [--stream Q] --out A
                multi-field (one Archive v2 per dataset):
                  --all-vars [--vars N]   synthesize N variables (default 8)
@@ -58,7 +60,7 @@ COMMANDS:
                multi-field archives take [--field NAME] or write one
                F.<field>.f32 per field
   stream       temporal streams (append-only v4 TSTR containers):
-                 append  --out S [--codec sz3|zfp] [--bound B] [--keyint K]
+                 append  --out S [--codec sz3|zfp|adaptive] [--bound B] [--keyint K]
                          [--dataset D --scale SC] --steps N | --in a.f32,b.f32,...
                          creates S or appends to it (codec/bound/keyint
                          then come from the stream header)
@@ -78,7 +80,8 @@ COMMANDS:
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         --in A: per-section byte breakdown of an archive or stream
                (payload vs index vs framing, plus the entropy table/symbol
-               split for sz3/zfp payloads); --json prints the same numbers
+               split for sz3/zfp/adaptive payloads and the per-tile codec
+               split for adaptive ones); --json prints the same numbers
                as one JSON document; without --in: artifact
                manifest + platform
   help         show this message
@@ -463,8 +466,17 @@ fn cmd_stream_append(args: &Args) -> Result<()> {
         "zfp" => {
             stream_append_with(args, out, reader, ZfpCodec::new(cfg.clone()), cfg, bnd, keyint)
         }
+        "adaptive" => stream_append_with(
+            args,
+            out,
+            reader,
+            AdaptiveCodec::new(cfg.clone()),
+            cfg,
+            bnd,
+            keyint,
+        ),
         other => anyhow::bail!(
-            "stream append supports the pure-rust codecs (sz3|zfp); \
+            "stream append supports the pure-rust codecs (sz3|zfp|adaptive); \
              {other:?} streams go through the library API"
         ),
     }
@@ -661,6 +673,12 @@ fn archive_info(path: &str) -> Result<()> {
             e.symbol_bytes,
             e.aux_bytes,
             e.framing_bytes
+        );
+    }
+    if let Some(cs) = serve::info::codec_split(&archive, &codec)? {
+        println!(
+            "tile codecs: sz3 {} tiles ({} B), zfp {} tiles ({} B)",
+            cs.sz3_tiles, cs.sz3_bytes, cs.zfp_tiles, cs.zfp_bytes
         );
     }
     Ok(())

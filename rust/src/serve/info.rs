@@ -9,6 +9,7 @@
 //! verbatim.
 
 use crate::baselines::{Sz3Like, ZfpLike};
+use crate::codec::TileCodec;
 use crate::compressor::format::{
     parse_stream_header, parse_stream_record, BLOCK_INDEX_TAG, CR_SECTIONS, STREAM_KEY_TAG,
     STREAM_MAGIC, STREAM_RES_TAG, STREAM_TIDX_TAG,
@@ -54,7 +55,7 @@ pub struct EntropySummary {
 }
 
 pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropySummary>> {
-    if archive.version() == 2 || (codec != "sz3" && codec != "zfp") {
+    if archive.version() == 2 || (codec != "sz3" && codec != "zfp" && codec != "adaptive") {
         return Ok(None);
     }
     let Some(dsv) = archive.header.get("dataset") else {
@@ -63,7 +64,11 @@ pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropyS
     let Ok(ds) = DatasetConfig::from_json(dsv) else {
         return Ok(None);
     };
-    let tag = if codec == "sz3" { "SZ3B" } else { "ZFPB" };
+    let tag = match codec {
+        "sz3" => "SZ3B",
+        "zfp" => "ZFPB",
+        _ => "ADPB",
+    };
     let payload = archive.section(tag)?;
     let index = archive.block_index()?;
     let (spans, cap): (Vec<(usize, usize)>, usize) = match &index {
@@ -80,6 +85,12 @@ pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropyS
         }
         None => (vec![(0, payload.len())], ds.total_points()),
     };
+    // per-tile codec ids: an adaptive payload mixes sz3 and zfp streams,
+    // so each span's breakdown must parse under the codec that wrote it
+    let codec_ids = index.as_ref().and_then(|ix| ix.codecs.clone());
+    if codec == "adaptive" && codec_ids.is_none() {
+        return Ok(None);
+    }
     let mut out = EntropySummary {
         tiles: spans.len(),
         plain: 0,
@@ -92,8 +103,14 @@ pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropyS
         aux_bytes: 0,
         framing_bytes: 0,
     };
-    for &(off, len) in &spans {
-        let b = if codec == "sz3" {
+    for (i, &(off, len)) in spans.iter().enumerate() {
+        let use_sz3 = match (codec, &codec_ids) {
+            ("sz3", _) => true,
+            ("zfp", _) => false,
+            (_, Some(ids)) => TileCodec::from_id(ids[i])? == TileCodec::Sz3,
+            (_, None) => return Ok(None),
+        };
+        let b = if use_sz3 {
             Sz3Like::stream_breakdown(&payload[off..off + len], cap)?
         } else {
             ZfpLike::stream_breakdown(&payload[off..off + len], cap)?
@@ -113,6 +130,53 @@ pub fn entropy_summary(archive: &Archive, codec: &str) -> Result<Option<EntropyS
         out.framing_bytes += b.framing_bytes;
     }
     Ok(Some(out))
+}
+
+/// Per-codec tile counts and payload byte shares of a mixed-codec
+/// (adaptive) archive — which tiles the selector gave to sz3 vs zfp
+/// and how many payload bytes each side holds. `None` for
+/// single-codec archives (no per-tile codec-id trailer).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CodecSplit {
+    pub sz3_tiles: usize,
+    pub sz3_bytes: usize,
+    pub zfp_tiles: usize,
+    pub zfp_bytes: usize,
+}
+
+pub fn codec_split(archive: &Archive, codec: &str) -> Result<Option<CodecSplit>> {
+    if codec != "adaptive" || archive.version() == 2 {
+        return Ok(None);
+    }
+    let Some(index) = archive.block_index()? else {
+        return Ok(None);
+    };
+    let Some(ids) = &index.codecs else {
+        return Ok(None);
+    };
+    let Some(dsv) = archive.header.get("dataset") else {
+        return Ok(None);
+    };
+    let Ok(ds) = DatasetConfig::from_json(dsv) else {
+        return Ok(None);
+    };
+    let payload = archive.section("ADPB")?;
+    index.validate(&ds.dims, payload.len())?;
+    let mut split = CodecSplit::default();
+    for (i, &id) in ids.iter().enumerate() {
+        let (_, len) = index.entry(i)?;
+        match TileCodec::from_id(id)? {
+            TileCodec::Sz3 => {
+                split.sz3_tiles += 1;
+                split.sz3_bytes += len;
+            }
+            TileCodec::Zfp => {
+                split.zfp_tiles += 1;
+                split.zfp_bytes += len;
+            }
+        }
+    }
+    Ok(Some(split))
 }
 
 /// Byte classes of a v4 temporal stream file: step-record payload vs
@@ -235,6 +299,17 @@ pub fn info_json(bytes: &[u8]) -> Result<Value> {
     }
     if let Some(e) = entropy_summary(&archive, &codec)? {
         pairs.push(("entropy", entropy_json(&e)));
+    }
+    if let Some(cs) = codec_split(&archive, &codec)? {
+        pairs.push((
+            "tile_codecs",
+            json::obj(vec![
+                ("sz3_tiles", json::num(cs.sz3_tiles as f64)),
+                ("sz3_bytes", json::num(cs.sz3_bytes as f64)),
+                ("zfp_tiles", json::num(cs.zfp_tiles as f64)),
+                ("zfp_bytes", json::num(cs.zfp_bytes as f64)),
+            ]),
+        ));
     }
     Ok(json::obj(pairs))
 }

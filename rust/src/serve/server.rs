@@ -19,7 +19,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use crate::codec::{archive_stats, Codec, CodecBuilder, ErrorBound, Sz3Codec, ZfpCodec};
+use crate::codec::{
+    archive_stats, AdaptiveCodec, Codec, CodecBuilder, ErrorBound, Sz3Codec, ZfpCodec,
+};
 use crate::compressor::format::STREAM_MAGIC;
 use crate::compressor::Archive;
 use crate::config::{self, DatasetKind, Scale};
@@ -399,14 +401,14 @@ fn load_reader(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<StreamRe
 }
 
 fn require_served_codec(codec_id: &str) -> HttpResult<()> {
-    if codec_id == "sz3" || codec_id == "zfp" {
+    if codec_id == "sz3" || codec_id == "zfp" || codec_id == "adaptive" {
         Ok(())
     } else {
         Err((
             501,
             format!(
-                "serving decodes the pure-rust codecs (sz3|zfp); {codec_id:?} archives \
-                 need checkpoints and go through the CLI"
+                "serving decodes the pure-rust codecs (sz3|zfp|adaptive); {codec_id:?} \
+                 archives need checkpoints and go through the CLI"
             ),
         ))
     }
@@ -596,6 +598,7 @@ fn compress(shared: &Shared, query: &Query, body: &[u8]) -> HttpResult<Response>
     let field = Tensor::new(cfg.dims.clone(), data);
     let archive = internal(match codec_id.as_str() {
         "sz3" => Sz3Codec::new(cfg.clone()).compress(&field, &bound),
+        "adaptive" => AdaptiveCodec::new(cfg.clone()).compress(&field, &bound),
         _ => ZfpCodec::new(cfg.clone()).compress(&field, &bound),
     })?;
     let path = shared.root.join(&name);

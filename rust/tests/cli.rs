@@ -520,6 +520,156 @@ fn threads_flag_rejects_garbage() {
 }
 
 #[test]
+fn adaptive_cli_round_trip_and_info_pin_the_codec_split() {
+    let field_p = tmp("afield.f32");
+    let archive_p = tmp("afield.ardc");
+    let recon_p = tmp("arecon.f32");
+    let region_p = tmp("aregion.f32");
+
+    assert!(bin()
+        .args(["generate", "--dataset", "e3sm", "--scale", "smoke", "--out"])
+        .arg(&field_p)
+        .status()
+        .unwrap()
+        .success());
+    let out = bin()
+        .args([
+            "compress", "--codec", "adaptive", "--bound", "nrmse:1e-3", "--dataset",
+            "e3sm", "--scale", "smoke", "--in",
+        ])
+        .arg(&field_p)
+        .arg("--out")
+        .arg(&archive_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("codec = adaptive"), "{stdout}");
+
+    // decompress and extract need only the archive header
+    let out = bin()
+        .arg("decompress")
+        .arg("--in")
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&recon_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let orig = read_f32(&field_p);
+    let recon = read_f32(&recon_p);
+    assert_eq!(orig.len(), recon.len());
+
+    // a region extract is the bit-exact crop of the full decode, with
+    // every touched tile dispatched on its recorded codec id
+    let out = bin()
+        .args(["extract", "--region", "2:10,4:20,8:24", "--in"])
+        .arg(&archive_p)
+        .arg("--out")
+        .arg(&region_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let full = read_f32(&recon_p);
+    let part = read_f32(&region_p);
+    let (h, w) = (32, 32);
+    let mut want = Vec::new();
+    for i in 2..10 {
+        for j in 4..20 {
+            for k in 8..24 {
+                want.push(full[(i * h + j) * w + k]);
+            }
+        }
+    }
+    assert_eq!(part.len(), want.len());
+    for (a, b) in part.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // info: the pinned text format gains a per-codec tile breakdown
+    // whose counts sum to the 16 tiles of e3sm smoke
+    let out = bin().args(["info", "--in"]).arg(&archive_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("archive: v3, codec = adaptive"), "{stdout}");
+    assert!(stdout.contains("section ADPB:"), "{stdout}");
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("tile codecs: sz3 "))
+        .unwrap_or_else(|| panic!("no tile-codec line in: {stdout}"));
+    let tok: Vec<&str> = line.split_whitespace().collect();
+    // "tile codecs: sz3 {n} tiles ({b} B), zfp {m} tiles ({b} B)"
+    let sz3: usize = tok[3].parse().unwrap();
+    let zfp: usize = tok[8].parse().unwrap();
+    assert_eq!(sz3 + zfp, 16, "split covers every tile: {line}");
+
+    // --json carries the same split under "tile_codecs"
+    let out = bin().args(["info", "--json", "--in"]).arg(&archive_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"codec\": \"adaptive\""), "{stdout}");
+    assert!(stdout.contains("\"tile_codecs\": "), "{stdout}");
+    assert!(stdout.contains(&format!("\"sz3_tiles\": {sz3}")), "{stdout}");
+    assert!(stdout.contains(&format!("\"zfp_tiles\": {zfp}")), "{stdout}");
+    assert!(stdout.contains("\"sz3_bytes\": "), "{stdout}");
+    assert!(stdout.contains("\"zfp_bytes\": "), "{stdout}");
+}
+
+#[test]
+fn info_on_the_mixed_golden_pins_exact_codec_counts() {
+    // the frozen conformance golden has exactly one sz3 tile and one zfp
+    // tile, so the breakdown's counts are pinned byte-for-byte forever
+    let golden =
+        std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden"))
+            .join("v3_adaptive.ardc");
+    let out = bin().args(["info", "--in"]).arg(&golden).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("archive: v3, codec = adaptive"), "{stdout}");
+    assert!(stdout.contains("tile codecs: sz3 1 tiles ("), "{stdout}");
+    assert!(stdout.contains(", zfp 1 tiles ("), "{stdout}");
+    let out = bin().args(["info", "--json", "--in"]).arg(&golden).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"sz3_tiles\": 1"), "{stdout}");
+    assert!(stdout.contains("\"zfp_tiles\": 1"), "{stdout}");
+}
+
+#[test]
+fn stream_cli_accepts_the_adaptive_codec() {
+    let stream_p = tmp("cli_adaptive_stream.tstr");
+    std::fs::remove_file(&stream_p).ok();
+    let frame_p = tmp("cli_adaptive_frame.f32");
+
+    let out = bin()
+        .args([
+            "stream", "append", "--codec", "adaptive", "--bound", "nrmse:1e-3",
+            "--dataset", "e3sm", "--scale", "smoke", "--keyint", "2", "--steps", "3",
+            "--out",
+        ])
+        .arg(&stream_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("appended steps 0..2"));
+
+    let out = bin().args(["stream", "info", "--in"]).arg(&stream_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("codec = adaptive"));
+
+    // a residual-chain frame decodes through the per-tile dispatch
+    let out = bin()
+        .args(["stream", "extract", "--step", "1", "--in"])
+        .arg(&stream_p)
+        .arg("--out")
+        .arg(&frame_p)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(read_f32(&frame_p).len(), 32 * 32);
+}
+
+#[test]
 fn zfp_cli_round_trip_restores_from_header_alone() {
     let field_p = tmp("zfield.f32");
     let archive_p = tmp("zfield.ardc");

@@ -2,7 +2,8 @@
 //! sweeps to every untrusted byte stream a consumer can hand the crate:
 //! the chunked lossless container (magic 0xB4), the bit-level Huffman
 //! stage, the interleaved rANS container (magic 0xB7), the SZ3/ZFP
-//! baseline streams, and the new v3 `BIDX` block index.
+//! baseline streams, the v3 `BIDX` block index, and the index's
+//! per-tile codec-id trailer (mixed-codec adaptive archives).
 //!
 //! Contract: **truncated** input always returns `Err`; **mutated** input
 //! must never panic and never balloon memory (every length that sizes an
@@ -11,12 +12,12 @@
 //! invariant there is no-panic plus a well-formed result.
 
 use attn_reduce::baselines::{Sz3Like, ZfpLike};
-use attn_reduce::codec::{Codec, CodecBuilder, ErrorBound, Sz3Codec};
+use attn_reduce::codec::{AdaptiveCodec, Codec, CodecBuilder, ErrorBound, Sz3Codec};
 use attn_reduce::coder::{
     compress_symbols, compress_symbols_mode, decompress_symbols, huffman_decode,
     huffman_encode, lossless_compress, lossless_decompress, SymbolMode,
 };
-use attn_reduce::compressor::Archive;
+use attn_reduce::compressor::{Archive, BlockIndex};
 use attn_reduce::config::{dataset_preset, DatasetKind, Scale};
 use attn_reduce::data::{self, Region};
 use attn_reduce::tensor::Tensor;
@@ -431,6 +432,194 @@ fn v4_truncations_and_residual_payload_cuts_never_panic() {
             let _ = reader.frame(&*codec, step);
             let _ = reader.extract(&*codec, step, &region);
         }
+    }
+}
+
+/// A real adaptive (mixed-codec-capable) v3 archive with its `BIDX`
+/// section and codec-id trailer located in the serialized bytes, so the
+/// index extension itself can be attacked in place. Returns
+/// `(bytes, idx_off, idx_len, trailer_off)` where `trailer_off` is the
+/// absolute offset of the trailer's minor-version byte.
+fn adaptive_archive_bytes() -> (Vec<u8>, usize, usize, usize) {
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let codec = AdaptiveCodec::new(cfg);
+    let archive = codec.compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    let index = archive.block_index().unwrap().expect("adaptive archive has index");
+    let n = index.entries.len();
+    assert!(index.codecs.is_some(), "adaptive archive records codec ids");
+    let bytes = archive.to_bytes();
+    let tag_pos = bytes
+        .windows(4)
+        .position(|w| w == b"BIDX")
+        .expect("adaptive archive has an index section");
+    let idx_len =
+        u64::from_le_bytes(bytes[tag_pos + 4..tag_pos + 12].try_into().unwrap()) as usize;
+    let idx_off = tag_pos + 12;
+    // trailer = u8 minor | n x u8 id, after rank | tile dims | count | entries
+    let trailer_off = idx_off + 4 + index.tile.len() * 4 + 8 + n * 16;
+    assert_eq!(trailer_off + 1 + n, idx_off + idx_len, "trailer spans the section tail");
+    assert_eq!(bytes[trailer_off], 1, "codec-id extension minor version");
+    (bytes, idx_off, idx_len, trailer_off)
+}
+
+#[test]
+fn adaptive_unknown_codec_ids_are_typed_errors_and_scoped_per_tile() {
+    let (bytes, _, _, trailer_off) = adaptive_archive_bytes();
+    let mut builder = CodecBuilder::new();
+    let archive = Archive::from_bytes(&bytes).unwrap();
+    let index = archive.block_index().unwrap().unwrap();
+    let n = index.entries.len();
+    let codec = builder.for_archive(&archive).unwrap();
+    let clean = codec.decompress(&archive).unwrap();
+    assert_eq!(clean.shape(), &[24, 32, 32]);
+    // a region entirely inside tile 0 (tile dims never exceed field dims)
+    let tile0 = Region::parse(&format!(
+        "0:{},0:{},0:{}",
+        index.tile[0], index.tile[1], index.tile[2]
+    ))
+    .unwrap();
+    // every out-of-range id value on the *first* tile is a typed error
+    // from full decode and from any region touching that tile
+    for bad in [2u8, 3, 127, 255] {
+        let mut m = bytes.clone();
+        m[trailer_off + 1] = bad;
+        let archive = Archive::from_bytes(&m).unwrap();
+        let codec = builder.for_archive(&archive).unwrap();
+        let err = codec.decompress(&archive).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("unknown per-tile codec id {bad}")),
+            "full decode: {err}"
+        );
+        let err = codec.decompress_region(&archive, &tile0).unwrap_err().to_string();
+        assert!(err.contains("unknown per-tile codec id"), "region decode: {err}");
+    }
+    // a bad id on the *last* tile leaves a tile-0 region decode intact —
+    // dispatch only consults the ids of the tiles a region touches
+    let mut m = bytes.clone();
+    m[trailer_off + n] = 255;
+    let archive = Archive::from_bytes(&m).unwrap();
+    let codec = builder.for_archive(&archive).unwrap();
+    assert!(codec.decompress(&archive).is_err(), "full decode hits the bad tile");
+    let part = codec.decompress_region(&archive, &tile0).expect("tile-0 region");
+    assert_eq!(part.data(), tile0.crop(&clean).unwrap().data());
+}
+
+#[test]
+fn adaptive_id_payload_mismatches_never_panic() {
+    let (bytes, _, _, trailer_off) = adaptive_archive_bytes();
+    let mut builder = CodecBuilder::new();
+    let archive = Archive::from_bytes(&bytes).unwrap();
+    let n = archive.block_index().unwrap().unwrap().entries.len();
+    let region = Region::parse("0:6,0:16,0:16").unwrap();
+    // flipping a valid id to the *other* valid id routes that tile's
+    // payload to the wrong decoder: a structured Err or a wrong-valued
+    // decode of the right shape — never a panic, never an allocation
+    // past the tile volume (both decoders are capped by the geometry)
+    for i in 0..n {
+        let mut m = bytes.clone();
+        m[trailer_off + 1 + i] ^= 1;
+        let archive = Archive::from_bytes(&m).unwrap();
+        let codec = builder.for_archive(&archive).unwrap();
+        if let Ok(t) = codec.decompress(&archive) {
+            assert_eq!(t.shape(), &[24, 32, 32]);
+        }
+        if let Ok(t) = codec.decompress_region(&archive, &region) {
+            assert_eq!(t.shape(), &region.shape()[..]);
+        }
+    }
+}
+
+#[test]
+fn adaptive_index_trailer_truncations_and_versions_error() {
+    let (bytes, idx_off, idx_len, trailer_off) = adaptive_archive_bytes();
+    let idx = &bytes[idx_off..idx_off + idx_len];
+    let n = BlockIndex::from_bytes(idx).unwrap().entries.len();
+    let base = trailer_off - idx_off;
+    // dropping the whole trailer is the legal homogeneous encoding...
+    let legacy = BlockIndex::from_bytes(&idx[..base]).unwrap();
+    assert!(legacy.codecs.is_none());
+    // ...but a *partial* trailer is always a typed error: every cut that
+    // leaves the minor byte with fewer than n ids must name the deficit
+    for cut in base + 1..idx_len {
+        let err = BlockIndex::from_bytes(&idx[..cut]).unwrap_err().to_string();
+        assert!(
+            err.contains("codec-id extension has"),
+            "cut {cut}: {err}"
+        );
+    }
+    // surplus ids are rejected the same way, and an unsupported minor
+    // version errors before any id is interpreted
+    let mut extra = idx.to_vec();
+    extra.push(0);
+    let err = BlockIndex::from_bytes(&extra).unwrap_err().to_string();
+    assert!(err.contains("codec-id extension has"), "{err}");
+    for minor in [0u8, 2, 255] {
+        let mut m = idx.to_vec();
+        m[base] = minor;
+        let err = BlockIndex::from_bytes(&m).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("extension version {minor} unsupported")),
+            "{err}"
+        );
+    }
+    // an adaptive archive whose index *lost* its trailer (a legal legacy
+    // index) is a typed error at decode, not a misdispatch: the codec
+    // refuses to guess per-tile formats
+    let mut m = bytes.clone();
+    let tag_pos = idx_off - 12;
+    m.drain(trailer_off..trailer_off + 1 + n);
+    m[tag_pos + 4..tag_pos + 12].copy_from_slice(&((idx_len - 1 - n) as u64).to_le_bytes());
+    let archive = Archive::from_bytes(&m).expect("legacy index still parses");
+    let codec = CodecBuilder::new().for_archive(&archive).unwrap();
+    let err = codec.decompress(&archive).unwrap_err().to_string();
+    assert!(err.contains("missing per-tile codec ids"), "{err}");
+}
+
+#[test]
+fn adaptive_index_and_payload_bitflips_never_panic() {
+    let (bytes, idx_off, idx_len, _) = adaptive_archive_bytes();
+    let region = Region::parse("0:6,0:16,0:16").unwrap();
+    let mut rng = Rng::new(67);
+    let mut builder = CodecBuilder::new();
+    // dense flip sweep over the extended index section, trailer included
+    for pos in idx_off..idx_off + idx_len {
+        for _ in 0..2 {
+            let mut m = bytes.clone();
+            m[pos] ^= 1 << rng.below(8);
+            let Ok(archive) = Archive::from_bytes(&m) else {
+                continue;
+            };
+            let Ok(codec) = builder.for_archive(&archive) else {
+                continue;
+            };
+            if let Ok(t) = codec.decompress(&archive) {
+                assert_eq!(t.shape(), &[24, 32, 32]);
+            }
+            if let Ok(t) = codec.decompress_region(&archive, &region) {
+                assert_eq!(t.shape(), &region.shape()[..]);
+            }
+        }
+    }
+    // random flips across the mixed ADPB payload: the per-tile cap keeps
+    // every dispatch (right codec or wrong) inside the geometry
+    let payload_pos = bytes
+        .windows(4)
+        .position(|w| w == b"ADPB")
+        .expect("adaptive payload section")
+        + 12;
+    for _ in 0..300 {
+        let mut m = bytes.clone();
+        let pos = payload_pos + rng.below(bytes.len() - payload_pos);
+        m[pos] ^= 1 << rng.below(8);
+        let Ok(archive) = Archive::from_bytes(&m) else {
+            continue;
+        };
+        let Ok(codec) = builder.for_archive(&archive) else {
+            continue;
+        };
+        let _ = codec.decompress(&archive);
+        let _ = codec.decompress_region(&archive, &region);
     }
 }
 

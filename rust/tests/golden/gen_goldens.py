@@ -11,6 +11,20 @@ container formats:
                     keyframe interval 2, each step an embedded v3 archive
                     (keyframes absolute, residuals against the previous
                     reconstruction), sealed with a TIDX record + footer
+  v3_adaptive.ardc -- version-3 archive with the per-tile codec-id index
+                    extension (BIDX minor version 1): tile 0 is an SZ3
+                    stream (id 0), tile 1 a ZFP stream (id 1), payload
+                    under the ADPB section tag
+  v4_adaptive.ardc -- version-4 stream whose steps are adaptive v3
+                    archives: a mixed-codec keyframe plus a mixed-codec
+                    residual (codec assignments swapped between steps)
+
+The ZFP tiles store all-zero coefficient codes with all-zero block
+exponents: zero codes survive any exponent and precision through the
+inverse lifting transform, so the tile decodes to exactly +0.0
+everywhere and the expected outputs stay closed-form while the stream
+still exercises the real ZFP header parse, exponent-plane LZSS, and
+symbol-container decode.
 
 Each SZ3 stream stores row 0 of its lattice as raw ("unpredictable")
 values and codes every later row as Lorenzo code 0, which makes the
@@ -89,6 +103,38 @@ def sz3_stream(eps: float, dims: list[int], row0: list[float]) -> bytes:
     for v in row0:
         out += struct.pack("<f", v)
     z = lzss_literals(huffman_two_symbol(cols, (rows - 1) * cols))
+    out += struct.pack("<Q", len(z))
+    out += z
+    return bytes(out)
+
+
+def zfp_zero_stream(precision: int, dims: list[int]) -> bytes:
+    """ZFP-like stream over `dims` decoding to all zeros.
+
+    Layout: u8 precision | u32 rank | rank x u64 dims | u64 n_exp |
+    u64 zexp_len | LZSS(i16-LE exponents) | u64 z_len | symbol stream.
+    All-zero codes shift/unlift/scale to +0.0 whatever the exponents,
+    so zero exponents + zero codes decode to an all-zero tile exactly.
+    """
+    rank = len(dims)
+    d = min(rank, 3)
+    lattice = dims[rank - d :]
+    batch = 1
+    for s in dims[: rank - d]:
+        batch *= s
+    n_blocks = batch
+    for s in lattice:
+        n_blocks *= -(-s // 4)  # ceil-div: 4^d blocks per axis
+    n_codes = n_blocks * 4**d
+    out = bytearray([precision])
+    out += struct.pack("<I", rank)
+    for s in dims:
+        out += struct.pack("<Q", s)
+    out += struct.pack("<Q", n_blocks)
+    zexp = lzss_literals(b"\x00\x00" * n_blocks)  # i16 exponents, all zero
+    out += struct.pack("<Q", len(zexp))
+    out += zexp
+    z = lzss_literals(huffman_two_symbol(0, n_codes))  # every code = symbol 0
     out += struct.pack("<Q", len(z))
     out += z
     return bytes(out)
@@ -313,3 +359,97 @@ F2 = frame_rows(K2_T0, K2_T1)
 F3 = add(F2, frame_rows(R3_T0, R3_T1))
 for i, frame in enumerate([F0, F1, F2, F3]):
     write(f"v4_stream.step{i}.expected.f32", f32s(frame))
+
+# ---- v3 adaptive: mixed-codec tiles behind the BIDX codec-id trailer -----
+# Tile 0 is an SZ3 row-repeat stream (codec id 0), tile 1 a ZFP all-zero
+# stream (codec id 1). The index gains the minor-version-1 extension:
+# legacy entries, then u8 0x01, then one codec-id byte per tile.
+
+ZFP_PRECISION = 12
+
+
+def adaptive_archive(tiles: list[tuple[bytes, int]], extra: dict) -> bytes:
+    payload = b"".join(t for t, _ in tiles)
+    entries, off = [], 0
+    for t, _ in tiles:
+        entries.append((off, len(t)))
+        off += len(t)
+    hdr = {
+        "codec": "adaptive",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, TILE),
+        "eps": EPS,
+    }
+    hdr.update(extra)
+    bidx = block_index(TILE, entries) + b"\x01" + bytes(i for _, i in tiles)
+    return archive(3, hdr, [("ADPB", payload), ("BIDX", bidx)])
+
+
+ADP_T0 = [2.5, -1.25, 0.5, 3.0]
+v3a = adaptive_archive(
+    [(sz3_stream(EPS, TILE, ADP_T0), 0), (zfp_zero_stream(ZFP_PRECISION, TILE), 1)],
+    {},
+)
+write("v3_adaptive.ardc", v3a)
+write("v3_adaptive.expected.f32", f32s((ADP_T0 + [0.0] * TILE[1]) * DIMS[0]))
+
+# ---- v4 adaptive: stream of mixed-codec steps ----------------------------
+# Keyframe 0: sz3 tile + zfp-zero tile. Residual 1: the assignment swaps
+# (zfp-zero tile + sz3 tile), so both step kinds carry both codec ids and
+# frame 1 = frame 0 + residual stays exact in f32 (dyadic values).
+
+AK0_T0 = [1.5, -0.5, 2.0, 0.25]
+AR1_T1 = [0.5, 1.25, -0.75, 0.125]
+ASTEPS = [
+    (
+        True,
+        adaptive_archive(
+            [
+                (sz3_stream(EPS, TILE, AK0_T0), 0),
+                (zfp_zero_stream(ZFP_PRECISION, TILE), 1),
+            ],
+            {},
+        ),
+    ),
+    (
+        False,
+        adaptive_archive(
+            [
+                (zfp_zero_stream(ZFP_PRECISION, TILE), 1),
+                (sz3_stream(EPS, TILE, AR1_T1), 0),
+            ],
+            {"bound": RES_BOUND, "temporal": "residual"},
+        ),
+    ),
+]
+
+astream_hdr = json.dumps(
+    {
+        "codec": "adaptive",
+        "bound": BOUND,
+        "dataset": dataset_json(DIMS, TILE),
+        "keyint": 2,
+    },
+    separators=(",", ":"),
+).encode()
+v4a = bytearray(b"TSTR")
+v4a += struct.pack("<H", 4)
+v4a += struct.pack("<I", len(astream_hdr))
+v4a += astream_hdr
+aentries = []
+for keyframe, ar in ASTEPS:
+    aentries.append((keyframe, len(v4a) + 12, len(ar)))
+    v4a += stream_record("KSTP" if keyframe else "RSTP", ar)
+atidx_off = len(v4a)
+atidx = struct.pack("<I", 2) + struct.pack("<Q", len(aentries))
+for keyframe, off, ln in aentries:
+    atidx += struct.pack("<B", 1 if keyframe else 0)
+    atidx += struct.pack("<Q", off) + struct.pack("<Q", ln)
+v4a += stream_record("TIDX", atidx)
+v4a += struct.pack("<Q", atidx_off) + b"TEND"
+write("v4_adaptive.ardc", bytes(v4a))
+
+AF0 = frame_rows(AK0_T0, [0.0] * TILE[1])
+AF1 = add(AF0, frame_rows([0.0] * TILE[1], AR1_T1))
+for i, frame in enumerate([AF0, AF1]):
+    write(f"v4_adaptive.step{i}.expected.f32", f32s(frame))

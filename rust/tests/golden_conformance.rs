@@ -159,10 +159,75 @@ fn v4_stream_golden_decodes_unchanged_across_chains() {
 }
 
 #[test]
+fn v3_adaptive_golden_decodes_unchanged_per_codec() {
+    let archive = golden_archive("v3_adaptive.ardc");
+    assert_eq!(archive.version(), 3);
+    let index = archive.block_index().unwrap().expect("adaptive golden has index");
+    assert_eq!(index.tile, vec![6, 4]);
+    assert_eq!(
+        index.codecs.as_deref(),
+        Some(&[0u8, 1][..]),
+        "sz3 tile 0, zfp tile 1"
+    );
+    let codec = codec_for(&archive);
+    assert_eq!(codec.id(), "adaptive");
+    let recon = codec.decompress(&archive).expect("decode adaptive golden");
+    assert_eq!(recon.shape(), &[6, 8]);
+    let want = expected_f32("v3_adaptive.expected.f32");
+    assert_bits_equal(&recon, &want, "v3 adaptive");
+    // each region decode dispatches on the recorded per-tile codec id:
+    // the sz3 half, the zfp half, and a straddling region all match the
+    // crop of the full decode bit-for-bit
+    for spec in ["0:6,0:4", "0:6,4:8", "1:5,2:6"] {
+        let region = Region::parse(spec).unwrap();
+        let part = codec.decompress_region(&archive, &region).expect("adaptive region");
+        assert_bits_equal(
+            &part,
+            region.crop(&recon).unwrap().data(),
+            &format!("adaptive region {spec}"),
+        );
+    }
+    // the zfp-only region touches only that tile's bytes
+    let region = Region::parse("0:6,4:8").unwrap();
+    let ids = attn_reduce::data::region_tile_ids(&[6, 8], &index.tile, &region);
+    assert_eq!(ids, vec![1]);
+    assert!(index.bytes_for(&ids) < index.total_bytes());
+}
+
+#[test]
+fn v4_adaptive_stream_golden_decodes_unchanged() {
+    use attn_reduce::stream::StreamReader;
+    let reader =
+        StreamReader::open(golden_path("v4_adaptive.ardc")).expect("open adaptive stream");
+    assert!(reader.is_finished(), "golden stream is sealed");
+    assert_eq!(reader.n_steps(), 2);
+    assert_eq!(reader.codec_id(), "adaptive");
+    let codec = reader
+        .build_codec(&mut CodecBuilder::new())
+        .expect("rebuild adaptive codec from stream");
+    for step in 0..2 {
+        let frame = reader.frame(&*codec, step).expect("decode adaptive step");
+        assert_bits_equal(
+            &frame,
+            &expected_f32(&format!("v4_adaptive.step{step}.expected.f32")),
+            &format!("v4 adaptive step {step}"),
+        );
+    }
+    // region decode through the keyframe+residual chain dispatches per
+    // tile in each chain archive (the codec assignment swaps between
+    // the keyframe and the residual)
+    let region = Region::parse("0:6,4:8").unwrap();
+    let part = reader.extract(&*codec, 1, &region).expect("adaptive chain region");
+    let full = reader.frame(&*codec, 1).unwrap();
+    assert_bits_equal(&part, region.crop(&full).unwrap().data(), "v4 adaptive region");
+}
+
+#[test]
 fn goldens_are_reparse_fixed_points() {
     // serializing a parsed golden reproduces its bytes exactly — the
-    // container writer has not drifted either
-    for name in ["v1_sz3.ardc", "v2_sz3.ardc", "v3_sz3.ardc"] {
+    // container writer has not drifted either (v3_adaptive carries the
+    // extended BIDX section, so its trailer bytes survive verbatim)
+    for name in ["v1_sz3.ardc", "v2_sz3.ardc", "v3_sz3.ardc", "v3_adaptive.ardc"] {
         let bytes = std::fs::read(golden_path(name)).unwrap();
         let archive = Archive::from_bytes(&bytes).unwrap();
         assert_eq!(archive.to_bytes(), bytes, "{name} round-trip drifted");

@@ -175,6 +175,141 @@ fn zfp_random_geometry_roundtrip_bound_and_region() {
     );
 }
 
+#[test]
+fn adaptive_random_geometry_roundtrip_bound_and_region() {
+    // fewer cases: every tile runs the per-tile zfp certification search
+    run_pure_codec(
+        "adaptive",
+        |cfg| Box::new(attn_reduce::codec::AdaptiveCodec::new(cfg.clone())),
+        8,
+    );
+}
+
+/// Selection quality: the adaptive payload can never exceed either
+/// forced-codec payload. Propgen tiles sit far below the sampling gate,
+/// so the selector fully encodes both candidates per tile and the
+/// per-tile min is *exact* — the inequality has no slack term. Forcing
+/// sz3 everywhere must also reproduce the pure `Sz3Codec` tile payload
+/// byte-for-byte (same ε, same tiling, same streams).
+#[test]
+fn adaptive_payload_never_exceeds_either_forced_codec() {
+    use attn_reduce::codec::{with_tile_codec, AdaptiveCodec, TileCodec};
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed ^ 0xADA7);
+    for case in 0..6 {
+        let cfg = cg.dataset();
+        let field = cg.field(&cfg.dims);
+        let bound = bounds_for(&field, cfg.gae_block_len())[case % 4];
+        let codec = AdaptiveCodec::new(cfg.clone());
+        let ctx = format!(
+            "[adaptive-min, seed {seed}, case {case}, dims {:?}, bound {bound}]",
+            cfg.dims
+        );
+        let auto = codec
+            .compress(&field, &bound)
+            .unwrap_or_else(|e| panic!("{ctx} auto: {e:#}"));
+        let forced_sz3 = with_tile_codec(TileCodec::Sz3, || codec.compress(&field, &bound))
+            .unwrap_or_else(|e| panic!("{ctx} forced sz3: {e:#}"));
+        let forced_zfp = with_tile_codec(TileCodec::Zfp, || codec.compress(&field, &bound))
+            .unwrap_or_else(|e| panic!("{ctx} forced zfp: {e:#}"));
+        let (a, s, z) = (
+            auto.cr_payload_bytes(),
+            forced_sz3.cr_payload_bytes(),
+            forced_zfp.cr_payload_bytes(),
+        );
+        assert!(a <= s.min(z), "{ctx} auto payload {a} > min(sz3 {s}, zfp {z})");
+        // the forced archives round-trip under the bound too (forced zfp
+        // degrades per tile to sz3 where zfp cannot certify ε)
+        for (label, archive) in [("sz3", &forced_sz3), ("zfp", &forced_zfp)] {
+            let parsed = Archive::from_bytes(&archive.to_bytes()).unwrap();
+            let recon = codec.decompress(&parsed).unwrap();
+            assert!(
+                relaxed(&bound).satisfied_by(&field, &recon, &cfg),
+                "{ctx} forced {label} violates the bound"
+            );
+        }
+        let pure = attn_reduce::codec::Sz3Codec::new(cfg.clone())
+            .compress(&field, &bound)
+            .unwrap();
+        assert_eq!(
+            forced_sz3.section("ADPB").unwrap(),
+            pure.section("SZ3B").unwrap(),
+            "{ctx} forced-sz3 payload differs from Sz3Codec"
+        );
+    }
+}
+
+/// The forcing hooks (`with_symbol_mode`, `with_tile_codec`) are
+/// thread-local, and the executor snapshots them at batch submission and
+/// installs them on every participating worker — so a forced compress
+/// must be byte-identical at every thread count, and two OS threads
+/// forcing *different* codecs concurrently must each get exactly the
+/// archive they would get alone.
+#[test]
+fn forcing_contexts_propagate_to_pool_workers() {
+    use attn_reduce::codec::{with_tile_codec, AdaptiveCodec, TileCodec};
+    use attn_reduce::coder::{with_symbol_mode, SymbolMode};
+    use attn_reduce::util::parallel::with_thread_limit;
+    let seed = seed_from_env(DEFAULT_SEED);
+    let mut cg = CaseGen::new(seed ^ 0xF0CE);
+    let cfg = cg.dataset();
+    let field = cg.field(&cfg.dims);
+    let bound = ErrorBound::PointwiseAbs(1e-3 * field.range() as f64);
+    let codec = AdaptiveCodec::new(cfg.clone());
+    let zfp_t1 = with_thread_limit(1, || {
+        with_tile_codec(TileCodec::Zfp, || codec.compress(&field, &bound))
+            .unwrap()
+            .to_bytes()
+    });
+    let zfp_t4 = with_thread_limit(4, || {
+        with_tile_codec(TileCodec::Zfp, || codec.compress(&field, &bound))
+            .unwrap()
+            .to_bytes()
+    });
+    assert_eq!(zfp_t1, zfp_t4, "tile-codec forcing lost on pool workers [seed {seed}]");
+    let sz3 = attn_reduce::codec::Sz3Codec::new(cfg.clone());
+    let zr_t1 = with_thread_limit(1, || {
+        with_symbol_mode(SymbolMode::ZeroRun, || sz3.compress(&field, &bound))
+            .unwrap()
+            .to_bytes()
+    });
+    let zr_t4 = with_thread_limit(4, || {
+        with_symbol_mode(SymbolMode::ZeroRun, || sz3.compress(&field, &bound))
+            .unwrap()
+            .to_bytes()
+    });
+    assert_eq!(zr_t1, zr_t4, "symbol-mode forcing lost on pool workers [seed {seed}]");
+    let sz3_forced = with_tile_codec(TileCodec::Sz3, || codec.compress(&field, &bound))
+        .unwrap()
+        .to_bytes();
+    std::thread::scope(|sc| {
+        let ha = sc.spawn(|| {
+            with_tile_codec(TileCodec::Sz3, || {
+                AdaptiveCodec::new(cfg.clone()).compress(&field, &bound)
+            })
+            .unwrap()
+            .to_bytes()
+        });
+        let hb = sc.spawn(|| {
+            with_tile_codec(TileCodec::Zfp, || {
+                AdaptiveCodec::new(cfg.clone()).compress(&field, &bound)
+            })
+            .unwrap()
+            .to_bytes()
+        });
+        assert_eq!(
+            ha.join().unwrap(),
+            sz3_forced,
+            "concurrent sz3 forcing saw the other thread's codec [seed {seed}]"
+        );
+        assert_eq!(
+            hb.join().unwrap(),
+            zfp_t1,
+            "concurrent zfp forcing saw the other thread's codec [seed {seed}]"
+        );
+    });
+}
+
 /// Multi-field property: random field counts packed into one v2
 /// container, round-tripped per field, with set-level region decode
 /// matching per-field crops.
@@ -210,9 +345,11 @@ fn fieldset_random_field_counts_roundtrip_and_region() {
 /// Entropy-mode property: forcing the zero-run or rANS symbol container
 /// must be bit-equivalent to plain end to end — same reconstructions out
 /// of all archives, across random geometry and all four bounds, for both
-/// pure-rust codecs. (`with_symbol_mode` is thread-local, so the whole
-/// leg runs under `with_thread_limit(1)` — pool batches execute inline
-/// and inherit the forced mode. A forced mode degrades per stream when a
+/// pure-rust codecs. (`with_symbol_mode` is thread-local; the executor
+/// now propagates it to pool workers per batch, so the
+/// `with_thread_limit(1)` here is just a fixed configuration, not a
+/// correctness requirement — `forcing_contexts_propagate_to_pool_workers`
+/// pins the multi-thread case. A forced mode degrades per stream when a
 /// tile is ineligible — e.g. rANS on an over-wide alphabet — which is
 /// exactly the production behavior this pins.)
 #[test]

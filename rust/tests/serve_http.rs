@@ -259,6 +259,65 @@ fn archive_routes_list_info_and_extract_match_the_cli() {
 }
 
 #[test]
+fn adaptive_archive_routes_match_the_cli_and_expose_the_codec_split() {
+    let dir = root("adaptive");
+    // the frozen conformance golden is a guaranteed-mixed archive: one
+    // sz3 tile, one zfp tile, with pinned expected output bytes
+    let golden_dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden"));
+    let golden_p = dir.join("mixed.ardc");
+    std::fs::copy(golden_dir.join("v3_adaptive.ardc"), &golden_p).unwrap();
+    let srv = Running::start(&dir);
+
+    // /info body is byte-identical to `cli info --json --in` — the route
+    // and the CLI share one document builder, codec split included
+    let out = bin().args(["info", "--json", "--in"]).arg(&golden_p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let info = get(srv.addr, "/v1/archives/mixed.ardc/info");
+    assert_eq!(info.status, 200, "{}", info.text());
+    assert_eq!(info.body, out.stdout, "route and CLI JSON drifted apart");
+    let text = info.text();
+    assert!(text.contains("\"codec\": \"adaptive\""), "{text}");
+    assert!(text.contains("\"tile_codecs\": "), "{text}");
+    assert!(text.contains("\"sz3_tiles\": 1"), "{text}");
+    assert!(text.contains("\"zfp_tiles\": 1"), "{text}");
+
+    // full extract serves the golden's pinned expected output bytes
+    let want = std::fs::read(golden_dir.join("v3_adaptive.expected.f32")).unwrap();
+    let reply = get(srv.addr, "/v1/archives/mixed.ardc/extract");
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    assert_eq!(reply.body, want, "served mixed decode drifted from the golden");
+
+    // a region covering only the zfp tile dispatches on its codec id
+    // (golden dims are [6, 8], tiled [6, 4]: columns 4..8 are tile 1)
+    let reply = get(srv.addr, "/v1/archives/mixed.ardc/extract?region=0:6,4:8");
+    assert_eq!(reply.status, 200, "{}", reply.text());
+    let crop: Vec<u8> = want
+        .chunks_exact(4)
+        .enumerate()
+        .filter(|(i, _)| i % 8 >= 4)
+        .flat_map(|(_, b)| b.to_vec())
+        .collect();
+    assert_eq!(reply.body, crop, "zfp-tile region drifted from the golden");
+
+    // POST /v1/compress accepts the adaptive codec and the result is
+    // servable like any other archive
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = attn_reduce::data::generate(&cfg);
+    let mut body = Vec::with_capacity(field.len() * 4);
+    for v in field.data() {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    let target = "/v1/compress?name=posted_adaptive.ardc&codec=adaptive&dataset=e3sm\
+                  &scale=smoke&bound=nrmse:1e-3";
+    let r = post(srv.addr, target, &body);
+    assert_eq!(r.status, 200, "{}", r.text());
+    assert!(r.text().contains("\"codec\": \"adaptive\""), "{}", r.text());
+    let r = get(srv.addr, "/v1/archives/posted_adaptive.ardc/extract");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.body.len(), cfg.total_points() * 4);
+}
+
+#[test]
 fn error_paths_return_typed_statuses() {
     let dir = root("errors");
     make_stream(&dir, "run.tstr");
