@@ -15,6 +15,7 @@ use std::time::Instant;
 use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
 use attn_reduce::config::{stream_frame_preset, DatasetKind, Scale};
 use attn_reduce::data::timeseries;
+use attn_reduce::obs;
 use attn_reduce::serve::{ServeConfig, Server};
 use attn_reduce::stream::StreamWriter;
 use attn_reduce::util::json::{self, Value};
@@ -165,8 +166,38 @@ fn main() {
         .unwrap_or(0.0);
     println!("server cache hit rate: {hit_rate:.3}");
 
+    // one extra traced warm pass: its spans become the sample Chrome
+    // trace that CI uploads. Kept out of the measured passes above so
+    // the event-buffer cost never skews the trajectory numbers.
+    obs::trace::start_tracing();
+    let _ = pass(addr, &targets);
+
     stop.stop();
     thread.join().expect("server thread");
+
+    match obs::trace::finish_trace(std::path::Path::new("BENCH_serve_trace.json")) {
+        Ok(n) => println!("wrote BENCH_serve_trace.json ({n} spans)"),
+        Err(e) => println!("trace write failed: {e}"),
+    }
+
+    // per-stage span accounting from the global registry: where request
+    // wall time went, by pipeline stage (stages the fixture never
+    // exercised are dropped rather than reported as zeros)
+    let stages: Vec<Value> = obs::stages::all()
+        .iter()
+        .map(|t| (t, t.hist()))
+        .filter(|(_, h)| h.count() > 0)
+        .map(|(t, h)| {
+            json::obj(vec![
+                ("stage", json::s(t.name())),
+                ("count", json::num(h.count() as f64)),
+                ("sum_s", json::num(h.sum_scaled())),
+                ("p50_s", json::num(h.quantile(0.50))),
+                ("p99_s", json::num(h.quantile(0.99))),
+            ])
+        })
+        .collect();
+    println!("stage span aggregates: {} stages active", stages.len());
 
     let report = json::obj(vec![
         ("dataset", json::s("e3sm")),
@@ -200,6 +231,7 @@ fn main() {
             ]),
         ),
         ("cache_hit_rate", json::num(hit_rate)),
+        ("stages", Value::Arr(stages)),
     ]);
     std::fs::write("BENCH_serve.json", report.to_string_pretty())
         .expect("write BENCH_serve.json");

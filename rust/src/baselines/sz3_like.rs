@@ -133,6 +133,7 @@ impl Sz3Like {
         codes.clear();
         let mut raws = Vec::new();
         if vol > 0 {
+            let _span = crate::obs::stages::SZ3_PREDICT_QUANTIZE.span();
             for b in 0..batch {
                 let recon = reuse_f32(f32_a, vol);
                 let src = &data[b * vol..(b + 1) * vol];
@@ -208,6 +209,7 @@ impl Sz3Like {
             i32_a,
             symbols,
         )?;
+        let _span = crate::obs::stages::SZ3_RECONSTRUCT.span();
         Self::decode_codes(i32_a, &raws, h.shape, h.eps)
     }
 
@@ -309,6 +311,7 @@ impl Sz3Like {
         let lattice = &shape[rank - lor..];
         let batch: usize = shape[..rank - lor].iter().product();
         let vol: usize = lattice.iter().product();
+        let _span = crate::obs::stages::SZ3_PREDICT_QUANTIZE.span();
         let parts: Vec<(Vec<i32>, Vec<f32>)> =
             Executor::global().par_map_scratch(batch, |b, scratch| {
                 let recon = reuse_f32(&mut scratch.f32_a, vol);

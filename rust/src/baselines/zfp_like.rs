@@ -108,6 +108,7 @@ impl ZfpLike {
         // block-parallel: over batches when there are several, over
         // origin chunks of the single lattice otherwise; parts
         // concatenate in block order either way
+        let _span = crate::obs::stages::ZFP_TRANSFORM.span();
         let parts: Vec<(Vec<i16>, Vec<i32>)> = if batch == 0 || vol == 0 {
             Vec::new()
         } else if batch > 1 {
@@ -191,6 +192,7 @@ impl ZfpLike {
         codes.clear();
         let mut exps: Vec<i16> = Vec::with_capacity(batch * origins.len());
         if batch > 0 && vol > 0 {
+            let _span = crate::obs::stages::ZFP_TRANSFORM.span();
             for b in 0..batch {
                 let sub =
                     Tensor::new(lattice.clone(), data[b * vol..(b + 1) * vol].to_vec());
@@ -298,6 +300,7 @@ impl ZfpLike {
         // allocations, then scattered serially
         const DEC_GROUP: usize = 64;
         let n_groups = n_blocks.div_ceil(DEC_GROUP);
+        let _span = crate::obs::stages::ZFP_RECONSTRUCT.span();
         let groups: Vec<Vec<f32>> = Executor::global().par_map_scratch(n_groups, |g, s| {
             let lo = g * DEC_GROUP;
             let hi = (lo + DEC_GROUP).min(n_blocks);

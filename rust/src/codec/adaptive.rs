@@ -227,8 +227,23 @@ fn scaled_stream_estimate(sample_bytes: usize, rank: usize, scale: f64) -> f64 {
 }
 
 /// Encode one tile under the winning codec at equal pointwise ε,
-/// returning the stream and the codec id to record.
+/// returning the stream and the codec id to record. Each call is one
+/// `adaptive.trial` span and bumps `attn_adaptive_tiles_total` for the
+/// committed codec (forced tiles count too — they are committed tiles).
 fn encode_tile_select(
+    shape: &[usize],
+    data: &[f32],
+    eps: f32,
+    fixed_precision: Option<u32>,
+    s: &mut Scratch,
+) -> Result<(Vec<u8>, TileCodec)> {
+    let _span = crate::obs::stages::ADAPTIVE_TRIAL.span();
+    let (stream, codec) = encode_tile_select_inner(shape, data, eps, fixed_precision, s)?;
+    crate::obs::adaptive_tile(codec.name());
+    Ok((stream, codec))
+}
+
+fn encode_tile_select_inner(
     shape: &[usize],
     data: &[f32],
     eps: f32,
@@ -264,6 +279,7 @@ fn encode_tile_select(
             }
         };
         if skip {
+            crate::obs::adaptive_gate_skip();
             return Ok((sz3_stream, TileCodec::Sz3));
         }
     }

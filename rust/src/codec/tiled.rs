@@ -46,6 +46,7 @@ where
     let origins = block_origins(field.shape(), &tile);
     let tile_len: usize = tile.iter().product();
     let parts: Vec<Vec<u8>> = Executor::global().try_par_map_scratch(origins.len(), |i, s| {
+        let _span = crate::obs::stages::TILE_ENCODE.span();
         // the tile buffer is moved out of the arena for the call so the
         // encoder can use the remaining scratch fields freely
         let mut buf = std::mem::take(&mut s.f32_b);
@@ -93,6 +94,7 @@ where
     };
     let ids = region_tile_ids(dims, &index.tile, r);
     let tiles: Vec<Tensor> = Executor::global().try_par_map_scratch(ids.len(), |i, s| {
+        let _span = crate::obs::stages::TILE_DECODE.span();
         let (off, len) = index.entry(ids[i])?;
         let t = decode_tile(ids[i], &payload[off..off + len], s)?;
         ensure!(

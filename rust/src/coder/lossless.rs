@@ -653,7 +653,8 @@ fn scaled_estimate(sample: &[i32], scale: f64) -> f64 {
 /// versions keep decoding unchanged — the new magics appear only in
 /// newly written payloads.
 pub fn compress_symbols(values: &[i32]) -> Result<Vec<u8>> {
-    match select_mode(values) {
+    let _span = crate::obs::stages::ENTROPY_ENCODE.span();
+    let out = match select_mode(values) {
         // the sampled trial (or a thread-local force) can pick rANS on a
         // stream whose full alphabet turns out wider than 4096 symbols;
         // the encoder's own eligibility check is the authority, and the
@@ -661,6 +662,21 @@ pub fn compress_symbols(values: &[i32]) -> Result<Vec<u8>> {
         SymbolMode::Rans => rans_encode(values)
             .or_else(|_| compress_symbols_mode(values, SymbolMode::Plain)),
         mode => compress_symbols_mode(values, mode),
+    }?;
+    if let Some(&magic) = out.first() {
+        crate::obs::entropy_stream(container_mode_name(magic), "encode");
+    }
+    Ok(out)
+}
+
+/// Metric label for a container magic byte (unknown magics report as
+/// "plain"; the decoder rejects them immediately anyway).
+fn container_mode_name(magic: u8) -> &'static str {
+    match magic {
+        MAGIC_RANS => "rans",
+        MAGIC_ZRUN => "zero_run",
+        MAGIC_CONST => "const",
+        _ => "plain",
     }
 }
 
@@ -732,6 +748,8 @@ pub fn decompress_symbols_into(
 ) -> Result<()> {
     out.clear();
     ensure!(!data.is_empty(), "symbols: empty input");
+    let _span = crate::obs::stages::ENTROPY_DECODE.span();
+    crate::obs::entropy_stream(container_mode_name(data[0]), "decode");
     let SymbolScratch { huff, tmp, bytes, rans } = scratch;
     match data[0] {
         MAGIC_RANS => rans_decode_into(data, max_values, out, rans),

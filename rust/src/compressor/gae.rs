@@ -61,6 +61,7 @@ pub fn gae_apply(
     d: usize,
     taus: &[f32],
 ) -> Result<GaeOutput> {
+    let _span = crate::obs::stages::GAE_POSTPROCESS.span();
     ensure!(d > 0 && orig.len() == recon.len() && orig.len() % d == 0);
     let n_blocks = orig.len() / d;
     ensure!(taus.len() == n_blocks, "one tau per block");
@@ -170,6 +171,7 @@ pub fn gae_decode(
     pca: &Pca,
     corrections: &[BlockCorrection],
 ) -> Result<()> {
+    let _span = crate::obs::stages::GAE_POSTPROCESS.span();
     ensure!(recon.len() % d == 0);
     let n_blocks = recon.len() / d;
     ensure!(corrections.len() == n_blocks && taus.len() == n_blocks);

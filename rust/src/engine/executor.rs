@@ -134,11 +134,15 @@ struct Shared {
 /// thread-locals, and pool workers do not inherit the submitter's —
 /// without propagation a force wrapped around a parallel compress would
 /// silently apply only to the tiles the submitting thread happens to
-/// drain, making forced output thread-count-dependent.
+/// drain, making forced output thread-count-dependent. The
+/// observability span context rides along for the same reason: spans
+/// opened by work items nest under the submitting request/command in
+/// `--trace` output instead of floating parentless.
 #[derive(Clone, Copy)]
 struct ForceContext {
     symbol_mode: Option<crate::coder::lossless::SymbolMode>,
     tile_codec: Option<crate::codec::TileCodec>,
+    obs_span: crate::obs::SpanContext,
 }
 
 impl ForceContext {
@@ -146,12 +150,14 @@ impl ForceContext {
         Self {
             symbol_mode: crate::coder::lossless::forced_symbol_mode(),
             tile_codec: crate::codec::forced_tile_codec(),
+            obs_span: crate::obs::SpanContext::capture(),
         }
     }
 
     fn set(ctx: Self) {
         crate::coder::lossless::set_forced_symbol_mode(ctx.symbol_mode);
         crate::codec::set_forced_tile_codec(ctx.tile_codec);
+        ctx.obs_span.set();
     }
 
     /// Install this context on the current thread, restoring the

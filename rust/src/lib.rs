@@ -74,6 +74,15 @@
 //! [`engine::Executor`] pool (and per-thread scratch arenas) as the
 //! decode kernels it calls.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the cross-cutting measurement layer: a process-global
+//! metrics [`obs::Registry`] (counters / gauges / fixed-bucket
+//! histograms), RAII [`obs::Span`]s recording per-stage wall time with
+//! executor-propagated parentage, Chrome `trace_event` export
+//! (`--trace FILE`, Perfetto-loadable), structured `key=value` logging
+//! ([`obs::log`]), and Prometheus text exposition on `GET /v1/metrics`.
+//!
 //! ### Migrating from the pre-codec entry points
 //!
 //! | old                                                     | new |
@@ -126,6 +135,7 @@ pub mod engine;
 pub mod experiments;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod stream;

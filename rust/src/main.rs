@@ -30,6 +30,7 @@ use attn_reduce::data;
 use attn_reduce::engine::{CodecExt, FieldSet};
 use attn_reduce::experiments;
 use attn_reduce::model::ParamStore;
+use attn_reduce::obs;
 use attn_reduce::runtime::Runtime;
 use attn_reduce::serve::{self, ServeConfig, Server};
 use attn_reduce::stream::{StreamReader, StreamWriter};
@@ -77,6 +78,7 @@ COMMANDS:
                GET  /v1/streams/{name}/extract?step=S[&region=...]
                POST /v1/compress?name=N[&codec=C&bound=B]   raw f32 body
                GET  /v1/stats                       counters + cache
+               GET  /v1/metrics[?format=json]       Prometheus exposition
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
   info         --in A: per-section byte breakdown of an archive or stream
                (payload vs index vs framing, plus the entropy table/symbol
@@ -92,6 +94,9 @@ COMMON OPTIONS:
   --steps N         training steps (default 300)
   --threads N       worker threads (precedence: --threads >
                     ATTN_REDUCE_THREADS > available_parallelism)
+  --log-level L     error|warn|info|debug (default info; --quiet drops to error)
+  --trace FILE      write pipeline spans as Chrome trace_event JSON (Perfetto)
+  --verbose         dump the metrics registry to stderr after the command
   --quiet
 ";
 
@@ -108,9 +113,17 @@ fn main() {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quiet", "retrain", "full", "help", "all-vars", "json"])?;
+    let flags = ["quiet", "retrain", "full", "help", "all-vars", "json", "verbose"];
+    let args = Args::parse(raw, &flags)?;
     if args.flag("quiet") {
         std::env::set_var("ATTN_REDUCE_QUIET", "1");
+        obs::log::set_level(obs::log::Level::Error);
+    }
+    if let Some(lvl) = args.get("log-level") {
+        let parsed = obs::log::Level::parse(lvl).ok_or_else(|| {
+            anyhow::anyhow!("--log-level expects error|warn|info|debug, got {lvl:?}")
+        })?;
+        obs::log::set_level(parsed);
     }
     if let Some(t) = args.get("threads") {
         let n: usize = t
@@ -123,8 +136,16 @@ fn run(raw: &[String]) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     }
+    if args.flag("verbose") {
+        // materialize the full catalog so the post-command dump covers
+        // stages the command never exercised (they read as zeros)
+        obs::preregister();
+    }
+    if args.get("trace").is_some() {
+        obs::trace::start_tracing();
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let result = match cmd {
         "generate" => cmd_generate(&args),
         "train" => cmd_train(&args),
         "compress" => cmd_compress(&args),
@@ -150,7 +171,20 @@ fn run(raw: &[String]) -> Result<()> {
             eprintln!("{USAGE}");
             std::process::exit(2);
         }
+    };
+    // the trace covers whatever ran, even a failed command (the spans
+    // up to the failure are exactly what a debugger wants); serve gets
+    // here after a clean StopHandle shutdown
+    if let Some(path) = args.get("trace") {
+        match obs::trace::finish_trace(std::path::Path::new(path)) {
+            Ok(n) => eprintln!("trace: wrote {n} spans to {path}"),
+            Err(e) => eprintln!("trace: failed to write {path}: {e}"),
+        }
     }
+    if args.flag("verbose") {
+        eprint!("{}", obs::dump_text());
+    }
+    result
 }
 
 fn dataset_kind(args: &Args) -> Result<DatasetKind> {
@@ -378,16 +412,29 @@ fn cmd_extract(args: &Args) -> Result<()> {
     if archive.is_multi_field() {
         if let Some(name) = args.get("field") {
             let names = archive.field_names()?;
-            let i = names
-                .iter()
-                .position(|n| n == name)
-                .ok_or_else(|| anyhow::anyhow!("no field {name:?} (have: {names:?})"))?;
+            // by name first, then as a numeric index; an out-of-range
+            // index is a usage error (exit 2) like a malformed --region
+            let i = match names.iter().position(|n| n == name) {
+                Some(i) => i,
+                None => match name.parse::<usize>() {
+                    Ok(ix) if ix < names.len() => ix,
+                    Ok(ix) => {
+                        eprintln!(
+                            "error: --field index {ix} out of range: archive has {} fields",
+                            names.len()
+                        );
+                        std::process::exit(2);
+                    }
+                    Err(_) => anyhow::bail!("no field {name:?} (have: {names:?})"),
+                },
+            };
             let sub = archive.field_archive(i)?;
             let t = codec.decompress_region(&sub, &region)?;
             data::write_f32_file(out, &t)?;
             println!(
-                "codec = {} -> wrote {out} (field {name:?}, region {:?}, {} points)",
+                "codec = {} -> wrote {out} (field {:?}, region {:?}, {} points)",
                 codec.id(),
+                names[i],
                 region.shape(),
                 t.len()
             );

@@ -1,0 +1,188 @@
+//! Metric exposition: Prometheus text format and a JSON mirror.
+//!
+//! Both renderers consume [`FamilySnapshot`]s, so callers can compose
+//! one exposition out of several sources (a server's per-instance
+//! registry, the process-global registry, and hand-built families such
+//! as the LRU cache's snapshot counters) — see
+//! `serve/server.rs::metrics`.
+
+use std::fmt::Write as _;
+
+use super::registry::{FamilySnapshot, Kind, SeriesSnapshot, SeriesValue};
+use crate::util::json;
+
+/// Format a float the way Prometheus expects: integers without a
+/// decimal point, `+Inf` for infinity, shortest-round-trip otherwise.
+fn fmt_f64(v: f64) -> String {
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the text-format rules.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render families (sorted by name first — callers may concatenate
+/// several sources) as Prometheus text exposition format.
+pub fn render_text(families: &[FamilySnapshot]) -> String {
+    let mut order: Vec<&FamilySnapshot> = families.iter().collect();
+    order.sort_by(|a, b| a.name.cmp(&b.name));
+    let mut out = String::new();
+    for fam in order {
+        let _ = writeln!(out, "# HELP {} {}", fam.name, fam.help);
+        let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.as_str());
+        for s in &fam.series {
+            match &s.value {
+                SeriesValue::Counter(v) => {
+                    let _ = writeln!(out, "{}{} {}", fam.name, label_block(&s.labels, None), v);
+                }
+                SeriesValue::Gauge(v) => {
+                    let _ = writeln!(
+                        out,
+                        "{}{} {}",
+                        fam.name,
+                        label_block(&s.labels, None),
+                        fmt_f64(*v)
+                    );
+                }
+                SeriesValue::Histogram { buckets, sum, count } => {
+                    for (le, cum) in buckets {
+                        let le_s = fmt_f64(*le);
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {}",
+                            fam.name,
+                            label_block(&s.labels, Some(("le", le_s.as_str()))),
+                            cum
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{}_sum{} {}",
+                        fam.name,
+                        label_block(&s.labels, None),
+                        fmt_f64(*sum)
+                    );
+                    let _ = writeln!(
+                        out,
+                        "{}_count{} {}",
+                        fam.name,
+                        label_block(&s.labels, None),
+                        count
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+fn labels_json(s: &SeriesSnapshot) -> json::Value {
+    json::Value::Obj(
+        s.labels
+            .iter()
+            .map(|(k, v)| (k.clone(), json::s(v.clone())))
+            .collect(),
+    )
+}
+
+/// The same snapshot as a JSON document (`/v1/metrics?format=json`):
+/// `{"families": [{"name", "type", "help", "series": [...]}]}`.
+pub fn render_json(families: &[FamilySnapshot]) -> json::Value {
+    let mut order: Vec<&FamilySnapshot> = families.iter().collect();
+    order.sort_by(|a, b| a.name.cmp(&b.name));
+    let fams = order
+        .iter()
+        .map(|fam| {
+            let series = fam
+                .series
+                .iter()
+                .map(|s| match &s.value {
+                    SeriesValue::Counter(v) => json::obj(vec![
+                        ("labels", labels_json(s)),
+                        ("value", json::num(*v as f64)),
+                    ]),
+                    SeriesValue::Gauge(v) => {
+                        json::obj(vec![("labels", labels_json(s)), ("value", json::num(*v))])
+                    }
+                    SeriesValue::Histogram { buckets, sum, count } => json::obj(vec![
+                        ("labels", labels_json(s)),
+                        (
+                            "buckets",
+                            json::Value::Arr(
+                                buckets
+                                    .iter()
+                                    .map(|(le, cum)| {
+                                        json::obj(vec![
+                                            (
+                                                "le",
+                                                if le.is_infinite() {
+                                                    json::s("+Inf")
+                                                } else {
+                                                    json::num(*le)
+                                                },
+                                            ),
+                                            ("count", json::num(*cum as f64)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("sum", json::num(*sum)),
+                        ("count", json::num(*count as f64)),
+                    ]),
+                })
+                .collect();
+            json::obj(vec![
+                ("name", json::s(fam.name.clone())),
+                ("type", json::s(fam.kind.as_str())),
+                ("help", json::s(fam.help.clone())),
+                ("series", json::Value::Arr(series)),
+            ])
+        })
+        .collect();
+    json::obj(vec![("families", json::Value::Arr(fams))])
+}
+
+/// Build a counter family from an already-aggregated value (sources
+/// that keep their own counters, e.g. the serve LRU cache snapshot).
+pub fn counter_family(name: &str, help: &str, value: u64) -> FamilySnapshot {
+    FamilySnapshot {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: Kind::Counter,
+        series: vec![SeriesSnapshot { labels: Vec::new(), value: SeriesValue::Counter(value) }],
+    }
+}
+
+/// Build a gauge family from an already-aggregated value.
+pub fn gauge_family(name: &str, help: &str, value: f64) -> FamilySnapshot {
+    FamilySnapshot {
+        name: name.to_string(),
+        help: help.to_string(),
+        kind: Kind::Gauge,
+        series: vec![SeriesSnapshot { labels: Vec::new(), value: SeriesValue::Gauge(value) }],
+    }
+}

@@ -1,0 +1,100 @@
+//! Leveled structured logging: one `key=value` line per record.
+//!
+//! Records go to stderr as a single pre-formatted line
+//! (`ts=<unix.millis> level=<lvl> target=<module> <message>`), written
+//! under one lock acquisition so concurrent handler threads can no
+//! longer interleave fragments (the old ad-hoc `eprintln!` request and
+//! panic logging could). Filtering happens before formatting — a
+//! disabled level costs one relaxed atomic load; use the
+//! [`crate::log_at!`] macro so the `format!` is skipped entirely.
+//!
+//! The level comes from `--log-level` (error|warn|info|debug), default
+//! `info`; `--quiet` / `ATTN_REDUCE_QUIET=1` drops to `error`.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static NEXT_REQUEST_ID: AtomicU64 = AtomicU64::new(1);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+#[inline]
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Monotonic per-process request id for correlating log lines.
+pub fn next_request_id() -> u64 {
+    NEXT_REQUEST_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Emit one record. `message` should already be `key=value` formatted;
+/// prefer [`crate::log_at!`], which skips formatting below the level.
+pub fn write(lvl: Level, target: &str, message: &str) {
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    let line = format!(
+        "ts={}.{:03} level={} target={} {}\n",
+        ts.as_secs(),
+        ts.subsec_millis(),
+        lvl.as_str(),
+        target,
+        message
+    );
+    let mut err = std::io::stderr().lock();
+    let _ = err.write_all(line.as_bytes());
+}
+
+/// Log at `level` under `target`, formatting lazily: the `format!` only
+/// runs when the level is enabled.
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:expr, $target:expr, $($arg:tt)*) => {{
+        if $crate::obs::log::enabled($lvl) {
+            $crate::obs::log::write($lvl, $target, &format!($($arg)*));
+        }
+    }};
+}

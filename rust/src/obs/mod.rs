@@ -1,0 +1,147 @@
+//! Observability: metrics registry, per-stage spans, Chrome tracing,
+//! and structured logging — std-only, no external deps.
+//!
+//! Three consumers share the same data:
+//! - `GET /v1/metrics` renders the registries as Prometheus text (or
+//!   JSON with `?format=json`);
+//! - `--trace FILE` writes the recorded spans as Chrome `trace_event`
+//!   JSON for Perfetto;
+//! - `--verbose` dumps the global registry to stderr after one-shot
+//!   CLI commands.
+//!
+//! Stable-name policy: every exported family below is API — renames
+//! are breaking changes and get called out in README "Observability".
+
+pub mod expo;
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{
+    Counter, FamilySnapshot, Gauge, Histogram, Kind, Registry, SeriesSnapshot, SeriesValue,
+    DURATION_BOUNDS_NS, SCALE_NS_TO_SECONDS,
+};
+pub use trace::{Span, SpanContext, StageTimer};
+
+/// The pipeline's stage timers — one static per stage so every module
+/// shares the same `attn_stage_duration_seconds{stage=...}` series.
+pub mod stages {
+    use super::trace::StageTimer;
+
+    /// sz3 Lorenzo predict + quantize over the tile lattice (encode).
+    pub static SZ3_PREDICT_QUANTIZE: StageTimer = StageTimer::new("sz3.predict_quantize");
+    /// sz3 code-stream reconstruction (decode).
+    pub static SZ3_RECONSTRUCT: StageTimer = StageTimer::new("sz3.reconstruct");
+    /// zfp block transform + quantize (encode).
+    pub static ZFP_TRANSFORM: StageTimer = StageTimer::new("zfp.transform");
+    /// zfp block reconstruction (decode).
+    pub static ZFP_RECONSTRUCT: StageTimer = StageTimer::new("zfp.reconstruct");
+    /// Symbol-container entropy encode (mode select + code).
+    pub static ENTROPY_ENCODE: StageTimer = StageTimer::new("entropy.encode");
+    /// Symbol-container entropy decode.
+    pub static ENTROPY_DECODE: StageTimer = StageTimer::new("entropy.decode");
+    /// Adaptive per-tile codec trial compress (`codec/adaptive.rs`).
+    pub static ADAPTIVE_TRIAL: StageTimer = StageTimer::new("adaptive.trial");
+    /// One tile through its codec (encode side, executor workers).
+    pub static TILE_ENCODE: StageTimer = StageTimer::new("tile.encode");
+    /// One tile through its codec (decode side, executor workers).
+    pub static TILE_DECODE: StageTimer = StageTimer::new("tile.decode");
+    /// GAE/PCA guaranteed-error-bound post-process (residual pass).
+    pub static GAE_POSTPROCESS: StageTimer = StageTimer::new("gae.postprocess");
+    /// One GOP appended to a v4 stream.
+    pub static STREAM_APPEND_GOP: StageTimer = StageTimer::new("stream.append_gop");
+    /// One `(step, region)` extracted from a v4 stream.
+    pub static STREAM_EXTRACT: StageTimer = StageTimer::new("stream.extract");
+    /// Serve LRU probe.
+    pub static CACHE_GET: StageTimer = StageTimer::new("cache.get");
+    /// Serve LRU admission (including evictions it triggers).
+    pub static CACHE_INSERT: StageTimer = StageTimer::new("cache.insert");
+    /// One HTTP request end-to-end (also in the per-server route
+    /// histogram `attn_request_duration_seconds`).
+    pub static SERVE_REQUEST: StageTimer = StageTimer::new("serve.request");
+
+    pub fn all() -> [&'static StageTimer; 15] {
+        [
+            &SZ3_PREDICT_QUANTIZE,
+            &SZ3_RECONSTRUCT,
+            &ZFP_TRANSFORM,
+            &ZFP_RECONSTRUCT,
+            &ENTROPY_ENCODE,
+            &ENTROPY_DECODE,
+            &ADAPTIVE_TRIAL,
+            &TILE_ENCODE,
+            &TILE_DECODE,
+            &GAE_POSTPROCESS,
+            &STREAM_APPEND_GOP,
+            &STREAM_EXTRACT,
+            &CACHE_GET,
+            &CACHE_INSERT,
+            &SERVE_REQUEST,
+        ]
+    }
+}
+
+const ENTROPY_HELP: &str = "Symbol streams by container mode and direction";
+const ADAPTIVE_TILES_HELP: &str = "Tiles committed per codec by adaptive selection";
+const ADAPTIVE_SKIPS_HELP: &str =
+    "Tiles where the sampled gate skipped the zfp trial (sz3 taken without certification)";
+
+/// Count one symbol stream through the entropy coder.
+/// `mode` ∈ plain|zero_run|const|rans, `dir` ∈ encode|decode.
+pub fn entropy_stream(mode: &'static str, dir: &'static str) {
+    if !trace::enabled() {
+        return;
+    }
+    Registry::global()
+        .counter("attn_entropy_streams_total", ENTROPY_HELP, &[("mode", mode), ("dir", dir)])
+        .inc();
+}
+
+/// Count one tile committed by adaptive selection. `codec` ∈ sz3|zfp.
+pub fn adaptive_tile(codec: &'static str) {
+    if !trace::enabled() {
+        return;
+    }
+    Registry::global()
+        .counter("attn_adaptive_tiles_total", ADAPTIVE_TILES_HELP, &[("codec", codec)])
+        .inc();
+}
+
+/// Count one tile where the sampled gate skipped the zfp trial.
+pub fn adaptive_gate_skip() {
+    if !trace::enabled() {
+        return;
+    }
+    Registry::global()
+        .counter("attn_adaptive_gate_skips_total", ADAPTIVE_SKIPS_HELP, &[])
+        .inc();
+}
+
+/// Materialize every global family with zero values so scrapers (and
+/// the CI metrics smoke leg) see the full catalog before traffic.
+/// Idempotent; called from `serve` startup and `--verbose` dumps.
+pub fn preregister() {
+    for t in stages::all() {
+        t.hist();
+    }
+    let reg = Registry::global();
+    for mode in ["plain", "zero_run", "const", "rans"] {
+        for dir in ["encode", "decode"] {
+            reg.counter(
+                "attn_entropy_streams_total",
+                ENTROPY_HELP,
+                &[("mode", mode), ("dir", dir)],
+            );
+        }
+    }
+    for codec in ["sz3", "zfp"] {
+        reg.counter("attn_adaptive_tiles_total", ADAPTIVE_TILES_HELP, &[("codec", codec)]);
+    }
+    reg.counter("attn_adaptive_gate_skips_total", ADAPTIVE_SKIPS_HELP, &[]);
+}
+
+/// The global registry rendered as Prometheus text (the `--verbose`
+/// post-command dump).
+pub fn dump_text() -> String {
+    expo::render_text(&Registry::global().snapshot())
+}

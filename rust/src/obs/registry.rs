@@ -1,0 +1,374 @@
+//! Process-global metrics registry: typed counters, gauges, and
+//! fixed-bucket histograms behind `&'static` handles.
+//!
+//! Registration takes a lock and leaks the metric (`Box::leak`) so the
+//! returned handle is `&'static` and every subsequent update is a bare
+//! relaxed atomic — no locking, formatting, or allocation on the hot
+//! path. Callers cache handles (see [`crate::obs::StageTimer`]) so the
+//! registry lock is only touched once per call site.
+//!
+//! Histograms store raw integer observations (nanoseconds for
+//! durations, bytes for sizes) in ascending `le` buckets plus an
+//! implicit `+Inf` bucket; `unit_scale` converts raw units to the
+//! exposition unit (e.g. `1e-9` renders nanoseconds as seconds, the
+//! Prometheus base unit).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins integer gauge (entries, bytes, capacities).
+#[derive(Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Duration bucket upper bounds in nanoseconds: 1 µs → 10 s, roughly
+/// ×4 per step. Covers a cache probe (~µs) through a paper-scale
+/// compress (~s) in 13 buckets.
+pub const DURATION_BOUNDS_NS: &[u64] = &[
+    1_000,
+    4_000,
+    16_000,
+    64_000,
+    250_000,
+    1_000_000,
+    4_000_000,
+    16_000_000,
+    64_000_000,
+    250_000_000,
+    1_000_000_000,
+    4_000_000_000,
+    10_000_000_000,
+];
+
+/// Renders nanosecond observations as seconds (Prometheus base unit).
+pub const SCALE_NS_TO_SECONDS: f64 = 1e-9;
+
+/// Fixed-bucket histogram over non-negative integer observations.
+pub struct Histogram {
+    bounds: Vec<u64>,
+    /// Per-bucket (non-cumulative) counts; `buckets[bounds.len()]` is
+    /// the `+Inf` bucket.
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+    unit_scale: f64,
+}
+
+impl Histogram {
+    fn new(bounds: &[u64], unit_scale: f64) -> Histogram {
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "histogram bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            unit_scale,
+        }
+    }
+
+    /// Record one raw-unit observation (`le` semantics: a value equal
+    /// to a bound lands in that bound's bucket).
+    #[inline]
+    pub fn observe(&self, raw: u64) {
+        let i = self.bounds.partition_point(|&b| raw > b);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(raw, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations in raw units.
+    pub fn sum_raw(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Sum in exposition units.
+    pub fn sum_scaled(&self) -> f64 {
+        self.sum_raw() as f64 * self.unit_scale
+    }
+
+    /// Per-bucket non-cumulative counts (last entry is `+Inf`).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Bucket upper bounds in raw units (without the `+Inf` bucket).
+    pub fn bounds_raw(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    pub fn unit_scale(&self) -> f64 {
+        self.unit_scale
+    }
+
+    /// Estimate the `q`-quantile (0..=1) in exposition units by linear
+    /// interpolation inside the containing bucket — the standard
+    /// bucketed estimate, exact only at bucket boundaries. Observations
+    /// in the `+Inf` bucket clamp to the largest finite bound. Returns
+    /// 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            let prev = cum;
+            cum += c;
+            if (cum as f64) < target || c == 0 {
+                continue;
+            }
+            let lo = if i == 0 { 0 } else { self.bounds[i - 1] };
+            let hi = if i < self.bounds.len() {
+                self.bounds[i]
+            } else {
+                // +Inf bucket: clamp at the largest finite bound
+                return self.bounds.last().copied().unwrap_or(0) as f64 * self.unit_scale;
+            };
+            let frac = (target - prev as f64) / c as f64;
+            return (lo as f64 + frac * (hi - lo) as f64) * self.unit_scale;
+        }
+        self.bounds.last().copied().unwrap_or(0) as f64 * self.unit_scale
+    }
+}
+
+/// Metric family type, matching the Prometheus `# TYPE` keyword.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Handle {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+}
+
+type Labels = Vec<(&'static str, String)>;
+
+struct Family {
+    help: &'static str,
+    kind: Kind,
+    series: BTreeMap<Labels, Handle>,
+}
+
+/// A named set of metric families. Most code talks to
+/// [`Registry::global`]; the serving layer additionally keeps one
+/// registry per server instance so request counters stay test-isolated
+/// when several servers share a process.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<&'static str, Family>>,
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry { families: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The process-wide registry (pipeline stages, entropy/codec
+    /// counters).
+    pub fn global() -> &'static Registry {
+        static GLOBAL: Registry = Registry::new();
+        &GLOBAL
+    }
+
+    fn register(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: Kind,
+        labels: &[(&'static str, &str)],
+        make: impl FnOnce() -> Handle,
+    ) -> Handle {
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams
+            .entry(name)
+            .or_insert_with(|| Family { help, kind, series: BTreeMap::new() });
+        assert!(
+            fam.kind == kind,
+            "metric {name} registered as {} and {}",
+            fam.kind.as_str(),
+            kind.as_str()
+        );
+        let key: Labels = labels.iter().map(|(k, v)| (*k, v.to_string())).collect();
+        *fam.series.entry(key).or_insert_with(make)
+    }
+
+    /// Register-or-fetch a counter series. The handle is `&'static`;
+    /// cache it at the call site when the path is hot.
+    pub fn counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> &'static Counter {
+        match self.register(name, help, Kind::Counter, labels, || {
+            Handle::C(Box::leak(Box::new(Counter::new())))
+        }) {
+            Handle::C(c) => c,
+            _ => unreachable!("kind checked in register"),
+        }
+    }
+
+    /// Register-or-fetch a gauge series.
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> &'static Gauge {
+        match self.register(name, help, Kind::Gauge, labels, || {
+            Handle::G(Box::leak(Box::new(Gauge::new())))
+        }) {
+            Handle::G(g) => g,
+            _ => unreachable!("kind checked in register"),
+        }
+    }
+
+    /// Register-or-fetch a histogram series with the given raw-unit
+    /// bucket bounds and exposition scale.
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+        bounds: &[u64],
+        unit_scale: f64,
+    ) -> &'static Histogram {
+        match self.register(name, help, Kind::Histogram, labels, || {
+            Handle::H(Box::leak(Box::new(Histogram::new(bounds, unit_scale))))
+        }) {
+            Handle::H(h) => h,
+            _ => unreachable!("kind checked in register"),
+        }
+    }
+
+    /// A point-in-time copy of every family, sorted by name (and label
+    /// set within a family) for deterministic exposition.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams = self.families.lock().unwrap();
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name: name.to_string(),
+                help: fam.help.to_string(),
+                kind: fam.kind,
+                series: fam
+                    .series
+                    .iter()
+                    .map(|(labels, h)| SeriesSnapshot {
+                        labels: labels
+                            .iter()
+                            .map(|(k, v)| (k.to_string(), v.clone()))
+                            .collect(),
+                        value: match h {
+                            Handle::C(c) => SeriesValue::Counter(c.get()),
+                            Handle::G(g) => SeriesValue::Gauge(g.get() as f64),
+                            Handle::H(hist) => {
+                                let counts = hist.bucket_counts();
+                                let mut cum = 0u64;
+                                let mut buckets = Vec::with_capacity(counts.len());
+                                for (i, &c) in counts.iter().enumerate() {
+                                    cum += c;
+                                    let le = if i < hist.bounds.len() {
+                                        hist.bounds[i] as f64 * hist.unit_scale
+                                    } else {
+                                        f64::INFINITY
+                                    };
+                                    buckets.push((le, cum));
+                                }
+                                SeriesValue::Histogram {
+                                    buckets,
+                                    sum: hist.sum_scaled(),
+                                    count: hist.count(),
+                                }
+                            }
+                        },
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+/// One exposition-ready series: labels plus a typed value. Histogram
+/// buckets are cumulative (`le`-style) in exposition units.
+pub struct SeriesSnapshot {
+    pub labels: Vec<(String, String)>,
+    pub value: SeriesValue,
+}
+
+pub enum SeriesValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { buckets: Vec<(f64, u64)>, sum: f64, count: u64 },
+}
+
+/// One exposition-ready metric family.
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    pub series: Vec<SeriesSnapshot>,
+}

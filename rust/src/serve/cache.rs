@@ -66,11 +66,15 @@ struct Inner {
     misses: u64,
     evictions: u64,
     insertions: u64,
+    /// Inserts refused because a single entry exceeded the capacity.
+    refusals: u64,
+    /// Entries dropped by `invalidate_file` (file overwrites).
+    invalidations: u64,
     /// Cumulative `saved` over all hits.
     bytes_saved: u64,
 }
 
-/// Counter snapshot for `/v1/stats` and the bench report.
+/// Counter snapshot for `/v1/stats`, `/v1/metrics` and the bench report.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheCounters {
     pub entries: usize,
@@ -80,6 +84,8 @@ pub struct CacheCounters {
     pub misses: u64,
     pub evictions: u64,
     pub insertions: u64,
+    pub refusals: u64,
+    pub invalidations: u64,
     pub bytes_saved: u64,
 }
 
@@ -96,6 +102,7 @@ impl LruCache {
 
     /// Look up `key`, counting a hit (and its saved bytes) or a miss.
     pub fn get(&self, key: &CacheKey) -> Option<CacheValue> {
+        let _span = crate::obs::stages::CACHE_GET.span();
         let mut guard = self.inner.lock().unwrap();
         // reborrow so map access and counter updates split by field
         let inner = &mut *guard;
@@ -118,7 +125,9 @@ impl LruCache {
     /// used entries until it fits. An entry larger than the whole cache
     /// is refused (the request still succeeds, it just isn't cached).
     pub fn insert(&self, key: CacheKey, value: CacheValue, cost: usize, saved: usize) {
+        let _span = crate::obs::stages::CACHE_INSERT.span();
         if cost > self.capacity {
+            self.inner.lock().unwrap().refusals += 1;
             return;
         }
         let mut inner = self.inner.lock().unwrap();
@@ -159,6 +168,7 @@ impl LruCache {
         for key in doomed {
             let gone = inner.map.remove(&key).expect("doomed key present");
             inner.bytes -= gone.cost;
+            inner.invalidations += 1;
         }
     }
 
@@ -172,6 +182,8 @@ impl LruCache {
             misses: inner.misses,
             evictions: inner.evictions,
             insertions: inner.insertions,
+            refusals: inner.refusals,
+            invalidations: inner.invalidations,
             bytes_saved: inner.bytes_saved,
         }
     }
@@ -221,6 +233,7 @@ mod tests {
         let cache = LruCache::new(100);
         cache.insert(key("big", 0), frame(1), 101, 0);
         assert_eq!(cache.counters().entries, 0, "over-capacity entry refused");
+        assert_eq!(cache.counters().refusals, 1, "refusal counted");
         cache.insert(key("a", 0), frame(1), 60, 0);
         cache.insert(key("a", 0), frame(1), 80, 0);
         let c = cache.counters();
@@ -238,6 +251,8 @@ mod tests {
         cache.invalidate_file(Path::new("x"));
         let c = cache.counters();
         assert_eq!((c.entries, c.bytes), (1, 10), "only y remains");
+        assert_eq!(c.invalidations, 3, "all three x-derived entries counted");
+        assert_eq!(c.evictions, 0, "invalidation is not eviction");
         assert!(cache.get(&key("y", 0)).is_some());
     }
 }

@@ -192,6 +192,16 @@ impl Response {
         }
     }
 
+    /// Plain-text body (the Prometheus exposition on `/v1/metrics`).
+    pub fn text(body: String) -> Self {
+        Response {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            headers: Vec::new(),
+            body: body.into_bytes(),
+        }
+    }
+
     /// Raw little-endian payload bytes (f32 regions/frames).
     pub fn octets(body: Vec<u8>) -> Self {
         Response {

@@ -31,6 +31,9 @@ pub enum Route {
     Compress,
     /// `GET /v1/stats` — request + cache counters.
     Stats,
+    /// `GET /v1/metrics` — Prometheus text exposition (`?format=json`
+    /// for the JSON rendering of the same snapshot).
+    Metrics,
 }
 
 /// A stored-file name from the URL: decoded, non-empty, and unable to
@@ -63,6 +66,7 @@ impl Route {
             }
             ["v1", "compress"] => Route::Compress,
             ["v1", "stats"] => Route::Stats,
+            ["v1", "metrics"] => Route::Metrics,
             _ => return Err((404, format!("no route for {path:?}"))),
         };
         let want = if matches!(route, Route::Compress) { "POST" } else { "GET" };
@@ -155,6 +159,7 @@ mod tests {
         );
         assert_eq!(Route::resolve("POST", "/v1/compress").unwrap(), Route::Compress);
         assert_eq!(Route::resolve("GET", "/v1/stats").unwrap(), Route::Stats);
+        assert_eq!(Route::resolve("GET", "/v1/metrics").unwrap(), Route::Metrics);
         // trailing slash tolerated (empty segments are dropped)
         assert_eq!(Route::resolve("GET", "/v1/archives/").unwrap(), Route::ListArchives);
     }
@@ -167,6 +172,7 @@ mod tests {
         assert_eq!(Route::resolve("POST", "/v1/archives").unwrap_err().0, 405);
         assert_eq!(Route::resolve("GET", "/v1/compress").unwrap_err().0, 405);
         assert_eq!(Route::resolve("DELETE", "/v1/stats").unwrap_err().0, 405);
+        assert_eq!(Route::resolve("POST", "/v1/metrics").unwrap_err().0, 405);
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -27,13 +27,14 @@ use crate::compressor::Archive;
 use crate::config::{self, DatasetKind, Scale};
 use crate::data::Region;
 use crate::engine::{Executor, Scratch};
+use crate::obs::{self, expo, log};
 use crate::stream::StreamReader;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Value};
 use crate::util::parallel;
 use crate::Result;
 
-use super::cache::{CacheKey, CacheValue, LruCache};
+use super::cache::{CacheCounters, CacheKey, CacheValue, LruCache};
 use super::http::{self, Request, Response};
 use super::info;
 use super::router::{validate_name, HttpResult, Query, Route};
@@ -62,22 +63,45 @@ impl ServeConfig {
     }
 }
 
-#[derive(Default)]
+const REQUESTS_HELP: &str = "HTTP requests handled, by status class";
+const REQ_DUR_HELP: &str = "End-to-end request wall time by route";
+const KF_BYTES_HELP: &str = "Compressed keyframe payload bytes decoded (cache misses only)";
+
+/// Stable `route` label values for `attn_request_duration_seconds`,
+/// preregistered at bind so scrapers see the full catalog immediately.
+const ROUTE_LABELS: [&str; 10] = [
+    "archives_list",
+    "archive_info",
+    "archive_extract",
+    "stream_steps",
+    "stream_extract",
+    "compress",
+    "stats",
+    "metrics",
+    "unroutable",
+    "bad_request",
+];
+
+/// Per-server request counters, registered in the server's own
+/// [`obs::Registry`] so concurrent servers in one process (tests) don't
+/// see each other's traffic. Pipeline stage histograms stay global.
 struct Metrics {
-    requests: AtomicU64,
-    status_2xx: AtomicU64,
-    status_4xx: AtomicU64,
-    status_5xx: AtomicU64,
+    status_2xx: &'static obs::Counter,
+    status_4xx: &'static obs::Counter,
+    status_5xx: &'static obs::Counter,
     /// Compressed keyframe payload bytes actually decoded (cache misses
     /// pay `region_cost.bytes_touched`; hits pay zero).
-    kf_payload_bytes: AtomicU64,
+    kf_payload_bytes: &'static obs::Counter,
 }
 
 struct Shared {
     root: PathBuf,
     cache: LruCache,
+    /// This server's registry: request counters and per-route latency
+    /// histograms. `/v1/metrics` composes it with the cache snapshot
+    /// and the process-global registry.
+    registry: obs::Registry,
     metrics: Metrics,
-    quiet: bool,
 }
 
 /// A bound-but-not-yet-running server; [`Server::run`] blocks until
@@ -116,14 +140,40 @@ impl Server {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let batch = if cfg.batch == 0 { parallel::num_threads() } else { cfg.batch };
+        if std::env::var_os("ATTN_REDUCE_QUIET").is_some() {
+            log::set_level(log::Level::Error);
+        }
+        // materialize the full metric catalog before any traffic so the
+        // first scrape already carries every family at zero
+        obs::preregister();
+        let registry = obs::Registry::new();
+        let status = |class: &str| {
+            registry.counter("attn_requests_total", REQUESTS_HELP, &[("status", class)])
+        };
+        let metrics = Metrics {
+            status_2xx: status("2xx"),
+            status_4xx: status("4xx"),
+            status_5xx: status("5xx"),
+            kf_payload_bytes: registry
+                .counter("attn_keyframe_payload_bytes_total", KF_BYTES_HELP, &[]),
+        };
+        for label in ROUTE_LABELS {
+            registry.histogram(
+                "attn_request_duration_seconds",
+                REQ_DUR_HELP,
+                &[("route", label)],
+                obs::DURATION_BOUNDS_NS,
+                obs::SCALE_NS_TO_SECONDS,
+            );
+        }
         Ok(Server {
             listener,
             addr,
             shared: Arc::new(Shared {
                 root: cfg.root,
                 cache: LruCache::new(cfg.cache_bytes),
-                metrics: Metrics::default(),
-                quiet: std::env::var_os("ATTN_REDUCE_QUIET").is_some(),
+                registry,
+                metrics,
             }),
             stop: Arc::new(AtomicBool::new(false)),
             batch: batch.max(1),
@@ -187,56 +237,84 @@ fn dispatch_loop(rx: mpsc::Receiver<TcpStream>, shared: Arc<Shared>, batch_cap: 
             if let Err(panic_msg) = outcome {
                 // the connection died without a response; the server
                 // itself must keep going
-                if !shared.quiet {
-                    eprintln!("serve: handler panicked: {panic_msg}");
-                }
+                crate::log_at!(log::Level::Warn, "serve", "event=handler_panic msg={panic_msg:?}");
             }
         }
     }
 }
 
 fn handle_connection(shared: &Shared, stream: &mut TcpStream, scratch: &mut Scratch) {
+    let _span = crate::obs::stages::SERVE_REQUEST.span();
+    let rid = log::next_request_id();
     let t0 = Instant::now();
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let (target, method, response, cache_note) =
+    let (target, method, response, note, route_label) =
         match http::read_request(stream, &mut scratch.bytes) {
             Ok(req) => {
-                let (resp, note) = respond(shared, &req);
-                (req.target(), req.method.clone(), resp, note)
+                let (resp, note, label) = respond(shared, &req);
+                (req.target(), req.method.clone(), resp, note, label)
             }
             Err(e) => (
                 "-".to_string(),
                 "?".to_string(),
                 Response::error(400, &format!("{e:#}")),
                 "-",
+                "bad_request",
             ),
         };
     let _ = response.write_to(stream);
     let m = &shared.metrics;
-    m.requests.fetch_add(1, Ordering::Relaxed);
     match response.status {
-        200..=299 => m.status_2xx.fetch_add(1, Ordering::Relaxed),
-        400..=499 => m.status_4xx.fetch_add(1, Ordering::Relaxed),
-        _ => m.status_5xx.fetch_add(1, Ordering::Relaxed),
+        200..=299 => m.status_2xx.inc(),
+        400..=499 => m.status_4xx.inc(),
+        _ => m.status_5xx.inc(),
     };
-    if !shared.quiet {
-        eprintln!(
-            "serve: {method} {target} -> {} {}B {}µs cache={cache_note}",
-            response.status,
-            response.body.len(),
-            t0.elapsed().as_micros()
-        );
+    let elapsed = t0.elapsed();
+    shared
+        .registry
+        .histogram(
+            "attn_request_duration_seconds",
+            REQ_DUR_HELP,
+            &[("route", route_label)],
+            obs::DURATION_BOUNDS_NS,
+            obs::SCALE_NS_TO_SECONDS,
+        )
+        .observe(elapsed.as_nanos() as u64);
+    crate::log_at!(
+        log::Level::Info,
+        "serve",
+        "req={rid} method={method} target={target} status={} bytes={} dur_us={} cache={note}",
+        response.status,
+        response.body.len(),
+        elapsed.as_micros()
+    );
+}
+
+/// Stable metric label for a resolved route (`ROUTE_LABELS` lists the
+/// full value set).
+fn route_label(route: &Route) -> &'static str {
+    match route {
+        Route::ListArchives => "archives_list",
+        Route::ArchiveInfo { .. } => "archive_info",
+        Route::ArchiveExtract { .. } => "archive_extract",
+        Route::StreamSteps { .. } => "stream_steps",
+        Route::StreamExtract { .. } => "stream_extract",
+        Route::Compress => "compress",
+        Route::Stats => "stats",
+        Route::Metrics => "metrics",
     }
 }
 
 /// Route + dispatch. The second element is the request log's cache
-/// column: `hit` / `miss` for cacheable routes, `-` otherwise.
-fn respond(shared: &Shared, req: &Request) -> (Response, &'static str) {
+/// column (`hit` / `miss` for cacheable routes, `-` otherwise); the
+/// third is the route's metric label.
+fn respond(shared: &Shared, req: &Request) -> (Response, &'static str, &'static str) {
     let route = match Route::resolve(&req.method, &req.path) {
         Ok(r) => r,
-        Err((status, msg)) => return (Response::error(status, &msg), "-"),
+        Err((status, msg)) => return (Response::error(status, &msg), "-", "unroutable"),
     };
+    let label = route_label(&route);
     let query = Query::parse(&req.query);
     let out = match route {
         Route::ListArchives => list_archives(shared, &query).map(|r| (r, "-")),
@@ -246,10 +324,11 @@ fn respond(shared: &Shared, req: &Request) -> (Response, &'static str) {
         Route::StreamExtract { name } => stream_extract(shared, &name, &query),
         Route::Compress => compress(shared, &query, &req.body).map(|r| (r, "-")),
         Route::Stats => stats(shared).map(|r| (r, "-")),
+        Route::Metrics => metrics(shared, &query).map(|r| (r, "-")),
     };
     match out {
-        Ok(pair) => pair,
-        Err((status, msg)) => (Response::error(status, &msg), "-"),
+        Ok((resp, note)) => (resp, note, label),
+        Err((status, msg)) => (Response::error(status, &msg), "-", label),
     }
 }
 
@@ -445,10 +524,22 @@ fn archive_extract(
         let field = query.req("field").map_err(|_| {
             (400, format!("multi-field archive: field=NAME required (have: {names:?})"))
         })?;
-        let i = names
-            .iter()
-            .position(|n| n == field)
-            .ok_or_else(|| (404, format!("no field {field:?} (have: {names:?})")))?;
+        // resolve by name first, then as a numeric index (mirrors the
+        // CLI's --field); an out-of-range index is a client error and
+        // names the field count so callers can correct it
+        let i = match names.iter().position(|n| n == field) {
+            Some(i) => i,
+            None => match field.parse::<usize>() {
+                Ok(ix) if ix < names.len() => ix,
+                Ok(ix) => {
+                    let n = names.len();
+                    let msg =
+                        format!("field index {ix} out of range: archive has {n} fields (0..{n})");
+                    return Err((400, msg));
+                }
+                Err(_) => return Err((404, format!("no field {field:?} (have: {names:?})"))),
+            },
+        };
         let sub = internal(archive.field_archive(i))?;
         internal(codec.decompress_region(&sub, &region))?
     } else {
@@ -547,10 +638,7 @@ fn stream_extract(
             (frame, false, cost.bytes_touched)
         }
     };
-    shared
-        .metrics
-        .kf_payload_bytes
-        .fetch_add(kf_bytes as u64, Ordering::Relaxed);
+    shared.metrics.kf_payload_bytes.add(kf_bytes as u64);
     let tensor = if step == kstep {
         (*base).clone()
     } else {
@@ -620,17 +708,18 @@ fn compress(shared: &Shared, query: &Query, body: &[u8]) -> HttpResult<Response>
 
 fn stats(shared: &Shared) -> HttpResult<Response> {
     let m = &shared.metrics;
+    let (n2, n4, n5) = (m.status_2xx.get(), m.status_4xx.get(), m.status_5xx.get());
     let c = shared.cache.counters();
     let lookups = c.hits + c.misses;
     let hit_rate = if lookups == 0 { 0.0 } else { c.hits as f64 / lookups as f64 };
     Ok(Response::json(&json::obj(vec![
-        ("requests", json::num(m.requests.load(Ordering::Relaxed) as f64)),
+        ("requests", json::num((n2 + n4 + n5) as f64)),
         (
             "responses",
             json::obj(vec![
-                ("ok_2xx", json::num(m.status_2xx.load(Ordering::Relaxed) as f64)),
-                ("client_4xx", json::num(m.status_4xx.load(Ordering::Relaxed) as f64)),
-                ("server_5xx", json::num(m.status_5xx.load(Ordering::Relaxed) as f64)),
+                ("ok_2xx", json::num(n2 as f64)),
+                ("client_4xx", json::num(n4 as f64)),
+                ("server_5xx", json::num(n5 as f64)),
             ]),
         ),
         (
@@ -643,12 +732,65 @@ fn stats(shared: &Shared) -> HttpResult<Response> {
                 ("misses", json::num(c.misses as f64)),
                 ("hit_rate", json::num(hit_rate)),
                 ("evictions", json::num(c.evictions as f64)),
+                ("refusals", json::num(c.refusals as f64)),
+                ("invalidations", json::num(c.invalidations as f64)),
                 ("bytes_saved", json::num(c.bytes_saved as f64)),
             ]),
         ),
-        (
-            "keyframe_payload_bytes_decoded",
-            json::num(m.kf_payload_bytes.load(Ordering::Relaxed) as f64),
-        ),
+        ("keyframe_payload_bytes_decoded", json::num(m.kf_payload_bytes.get() as f64)),
     ])))
+}
+
+// -- GET /v1/metrics --------------------------------------------------------
+
+/// The LRU cache's counter snapshot as hand-built metric families (the
+/// cache's `Mutex`'d counters stay the single source of truth; they are
+/// re-rendered on every scrape rather than double-counted).
+fn cache_families(c: &CacheCounters) -> Vec<obs::FamilySnapshot> {
+    vec![
+        expo::counter_family("attn_cache_hits_total", "Cache lookups that hit", c.hits),
+        expo::counter_family("attn_cache_misses_total", "Cache lookups that missed", c.misses),
+        expo::counter_family(
+            "attn_cache_evictions_total",
+            "Entries evicted to admit new ones",
+            c.evictions,
+        ),
+        expo::counter_family("attn_cache_insertions_total", "Entries admitted", c.insertions),
+        expo::counter_family(
+            "attn_cache_refusals_total",
+            "Inserts refused because one entry exceeded the capacity",
+            c.refusals,
+        ),
+        expo::counter_family(
+            "attn_cache_invalidations_total",
+            "Entries dropped by file-overwrite invalidation",
+            c.invalidations,
+        ),
+        expo::counter_family(
+            "attn_cache_bytes_saved_total",
+            "Compressed payload bytes hits avoided decoding",
+            c.bytes_saved,
+        ),
+        expo::gauge_family("attn_cache_entries", "Resident cache entries", c.entries as f64),
+        expo::gauge_family("attn_cache_resident_bytes", "Resident cache bytes", c.bytes as f64),
+        expo::gauge_family(
+            "attn_cache_capacity_bytes",
+            "Configured cache capacity",
+            c.capacity_bytes as f64,
+        ),
+    ]
+}
+
+/// Prometheus text exposition (`?format=json` for the JSON mirror):
+/// this server's request metrics + the cache snapshot + the
+/// process-global pipeline registry, one sorted document.
+fn metrics(shared: &Shared, query: &Query) -> HttpResult<Response> {
+    let mut fams = shared.registry.snapshot();
+    fams.extend(cache_families(&shared.cache.counters()));
+    fams.extend(obs::Registry::global().snapshot());
+    match query.get("format") {
+        None => Ok(Response::text(expo::render_text(&fams))),
+        Some("json") => Ok(Response::json(&expo::render_json(&fams))),
+        Some(other) => Err((400, format!("unknown format {other:?} (expected json)"))),
+    }
 }

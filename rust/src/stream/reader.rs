@@ -236,6 +236,7 @@ impl StreamReader {
     /// Decode the absolute frame at `step`: the nearest keyframe plus
     /// every residual up to `step`, summed in chain order.
     pub fn frame(&self, codec: &dyn Codec, step: usize) -> Result<Tensor> {
+        let _span = crate::obs::stages::STREAM_EXTRACT.span();
         let chain = self.index.chain(step)?;
         let mut recon: Option<Tensor> = None;
         for s in chain {
@@ -253,6 +254,7 @@ impl StreamReader {
     /// and the partial frames sum in the same order as [`Self::frame`] —
     /// so the result is bit-identical to cropping the full decode.
     pub fn extract(&self, codec: &dyn Codec, step: usize, region: &Region) -> Result<Tensor> {
+        let _span = crate::obs::stages::STREAM_EXTRACT.span();
         region.validate_in(&self.dataset.dims)?;
         let chain = self.index.chain(step)?;
         let mut recon: Option<Tensor> = None;
@@ -281,6 +283,7 @@ impl StreamReader {
         step: usize,
         region: &Region,
     ) -> Result<Tensor> {
+        let _span = crate::obs::stages::STREAM_EXTRACT.span();
         region.validate_in(&self.dataset.dims)?;
         ensure!(
             self.index.keyframe_for(step)? == base_step,

@@ -286,6 +286,7 @@ impl StreamWriter {
         let head_len = head_len.min(frames.len());
         let mut stats = Vec::with_capacity(frames.len());
         if head_len > 0 {
+            let _span = crate::obs::stages::STREAM_APPEND_GOP.span();
             let (steps, last) = encode_chain(
                 codec,
                 &frames[..head_len],
@@ -307,6 +308,7 @@ impl StreamWriter {
         let keyint = self.keyint;
         let bound = self.bound;
         let encoded = Executor::global().try_par_map(gops.len(), |g| {
+            let _span = crate::obs::stages::STREAM_APPEND_GOP.span();
             encode_chain(codec, gops[g], gop_start + g * keyint, keyint, &bound, None)
         })?;
         for (steps, last) in encoded {

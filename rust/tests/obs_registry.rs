@@ -1,0 +1,208 @@
+//! Observability subsystem: histogram bucket semantics, quantile
+//! estimation, concurrent counting from the executor pool, exposition
+//! rendering (text + JSON), and logger level filtering.
+//!
+//! Every test registers its families in a *local* [`Registry`] (the
+//! type is the same one behind `Registry::global`), so tests stay
+//! independent of each other and of instrumented library code running
+//! in the same process.
+
+use attn_reduce::engine::Executor;
+use attn_reduce::obs::log::Level;
+use attn_reduce::obs::registry::{Registry, SeriesValue};
+use attn_reduce::obs::{expo, log};
+use attn_reduce::util::json::Value;
+
+#[test]
+fn histogram_bucket_boundaries_are_le() {
+    let reg = Registry::new();
+    let h = reg.histogram("test_h", "h", &[], &[10, 100, 1000], 1.0);
+    // `le` semantics: a value equal to a bound lands in that bucket
+    h.observe(10);
+    h.observe(11);
+    h.observe(100);
+    h.observe(1000);
+    h.observe(1001); // +Inf bucket
+    assert_eq!(h.bucket_counts(), vec![1, 2, 1, 1]);
+    assert_eq!(h.count(), 5);
+    assert_eq!(h.sum_raw(), 10 + 11 + 100 + 1000 + 1001);
+
+    // the snapshot renders cumulative buckets ending at +Inf
+    let snap = reg.snapshot();
+    assert_eq!(snap.len(), 1);
+    let SeriesValue::Histogram { buckets, sum, count } = &snap[0].series[0].value else {
+        panic!("expected histogram snapshot");
+    };
+    let cums: Vec<u64> = buckets.iter().map(|(_, c)| *c).collect();
+    assert_eq!(cums, vec![1, 3, 4, 5], "cumulative, monotone");
+    assert!(buckets.last().unwrap().0.is_infinite());
+    assert_eq!(*count, 5);
+    assert!((sum - 2122.0).abs() < 1e-9);
+}
+
+#[test]
+fn histogram_quantiles_interpolate_and_clamp() {
+    let reg = Registry::new();
+    let h = reg.histogram("test_q", "h", &[], &[100, 200, 400], 1.0);
+    assert_eq!(h.quantile(0.5), 0.0, "empty histogram reports 0");
+    // 100 observations spread evenly through (100, 200]
+    for i in 0..100 {
+        h.observe(101 + i);
+    }
+    let p50 = h.quantile(0.5);
+    assert!(
+        (100.0..=200.0).contains(&p50),
+        "median must land inside the containing bucket, got {p50}"
+    );
+    assert!((p50 - 150.0).abs() <= 2.0, "linear interpolation: got {p50}");
+    // an observation past every bound clamps to the largest finite bound
+    let reg2 = Registry::new();
+    let h2 = reg2.histogram("test_q2", "h", &[], &[100], 1.0);
+    h2.observe(1_000_000);
+    assert_eq!(h2.quantile(0.99), 100.0);
+    // unit scale applies to quantiles too
+    let reg3 = Registry::new();
+    let h3 = reg3.histogram("test_q3", "h", &[], &[1000, 2000], 1e-3);
+    for _ in 0..10 {
+        h3.observe(1500);
+    }
+    let q = h3.quantile(0.5);
+    assert!((1.0..=2.0).contains(&q), "scaled quantile in seconds, got {q}");
+}
+
+#[test]
+fn concurrent_counter_increments_from_executor_workers() {
+    let reg = Registry::new();
+    let c = reg.counter("test_conc", "c", &[]);
+    let h = reg.histogram("test_conc_h", "h", &[], &[1_000_000], 1.0);
+    const TASKS: usize = 64;
+    const PER_TASK: usize = 1000;
+    Executor::global().par_map(TASKS, |_| {
+        for _ in 0..PER_TASK {
+            c.inc();
+            h.observe(1);
+        }
+    });
+    assert_eq!(c.get(), (TASKS * PER_TASK) as u64, "no lost counter updates");
+    assert_eq!(h.count(), (TASKS * PER_TASK) as u64, "no lost observations");
+    assert_eq!(h.sum_raw(), (TASKS * PER_TASK) as u64);
+}
+
+#[test]
+fn registering_the_same_series_twice_returns_one_handle() {
+    let reg = Registry::new();
+    let a = reg.counter("test_dup", "c", &[("k", "v")]);
+    let b = reg.counter("test_dup", "c", &[("k", "v")]);
+    a.inc();
+    b.inc();
+    assert_eq!(a.get(), 2, "both handles hit the same series");
+    let other = reg.counter("test_dup", "c", &[("k", "w")]);
+    assert_eq!(other.get(), 0, "a different label set is a new series");
+}
+
+#[test]
+fn text_exposition_golden() {
+    let reg = Registry::new();
+    reg.counter("attn_test_requests_total", "Requests", &[("status", "2xx")]).add(7);
+    reg.gauge("attn_test_entries", "Entries", &[]).set(3);
+    // unit scale 0.25 is exact in binary, so the rendered le bounds and
+    // sum are bit-deterministic across platforms
+    let h = reg.histogram("attn_test_latency_seconds", "Latency", &[], &[1, 2], 0.25);
+    h.observe(1); // -> le=1 bucket (0.25 s scaled)
+    h.observe(3); // -> +Inf bucket
+    let text = expo::render_text(&reg.snapshot());
+    let expected = "\
+# HELP attn_test_entries Entries
+# TYPE attn_test_entries gauge
+attn_test_entries 3
+# HELP attn_test_latency_seconds Latency
+# TYPE attn_test_latency_seconds histogram
+attn_test_latency_seconds_bucket{le=\"0.25\"} 1
+attn_test_latency_seconds_bucket{le=\"0.5\"} 1
+attn_test_latency_seconds_bucket{le=\"+Inf\"} 2
+attn_test_latency_seconds_sum 1
+attn_test_latency_seconds_count 2
+# HELP attn_test_requests_total Requests
+# TYPE attn_test_requests_total counter
+attn_test_requests_total{status=\"2xx\"} 7
+";
+    assert_eq!(text, expected);
+}
+
+#[test]
+fn json_exposition_mirrors_the_snapshot() {
+    let reg = Registry::new();
+    reg.counter("attn_test_c", "C", &[("mode", "rans")]).add(4);
+    let h = reg.histogram("attn_test_h", "H", &[], &[100], 1.0);
+    h.observe(50);
+    let doc = expo::render_json(&reg.snapshot());
+    // round-trip through the serializer to prove it stays valid JSON
+    let parsed = Value::parse(&doc.to_string_pretty()).expect("valid JSON");
+    let families = match parsed.get("families") {
+        Some(Value::Arr(fams)) => fams,
+        other => panic!("families array missing: {other:?}"),
+    };
+    assert_eq!(families.len(), 2);
+    let c = &families[0];
+    assert_eq!(c.get("name").and_then(|v| v.as_str()), Some("attn_test_c"));
+    assert_eq!(c.get("type").and_then(|v| v.as_str()), Some("counter"));
+    let hist = &families[1];
+    assert_eq!(hist.get("type").and_then(|v| v.as_str()), Some("histogram"));
+    let series = match hist.get("series") {
+        Some(Value::Arr(s)) => s,
+        other => panic!("series missing: {other:?}"),
+    };
+    let buckets = match series[0].get("buckets") {
+        Some(Value::Arr(b)) => b,
+        other => panic!("buckets missing: {other:?}"),
+    };
+    assert_eq!(buckets.len(), 2, "finite bound + +Inf");
+    assert_eq!(
+        buckets[1].get("le").and_then(|v| v.as_str()),
+        Some("+Inf"),
+        "infinite bound spelled as a string"
+    );
+}
+
+#[test]
+fn composed_expositions_sort_across_sources() {
+    let reg = Registry::new();
+    reg.counter("attn_z_total", "Z", &[]).inc();
+    let mut fams = reg.snapshot();
+    fams.push(expo::counter_family("attn_a_total", "A", 5));
+    fams.push(expo::gauge_family("attn_m_gauge", "M", 2.5));
+    let text = expo::render_text(&fams);
+    let a = text.find("attn_a_total").unwrap();
+    let m = text.find("attn_m_gauge").unwrap();
+    let z = text.find("attn_z_total").unwrap();
+    assert!(a < m && m < z, "one sorted document regardless of source order");
+    assert!(text.contains("attn_m_gauge 2.5"));
+}
+
+#[test]
+fn log_level_filtering() {
+    assert!(Level::parse("warn") == Some(Level::Warn));
+    assert!(Level::parse("loud").is_none());
+    let prev = log::level();
+    log::set_level(Level::Warn);
+    assert!(log::enabled(Level::Error));
+    assert!(log::enabled(Level::Warn));
+    assert!(!log::enabled(Level::Info));
+    assert!(!log::enabled(Level::Debug));
+    log::set_level(prev);
+    let a = log::next_request_id();
+    let b = log::next_request_id();
+    assert!(b > a, "request ids are monotonic");
+}
+
+#[test]
+fn stage_spans_record_into_the_global_histogram() {
+    use attn_reduce::obs::stages;
+    let h = stages::STREAM_EXTRACT.hist();
+    let before = h.count();
+    {
+        let _span = stages::STREAM_EXTRACT.span();
+        std::hint::black_box(42);
+    }
+    assert!(h.count() > before, "dropping the span records an observation");
+}

@@ -14,8 +14,10 @@ use attn_reduce::codec::{Codec, ErrorBound, Sz3Codec};
 use attn_reduce::compressor::Archive;
 use attn_reduce::config::{dataset_preset, stream_frame_preset, DatasetKind, Scale};
 use attn_reduce::data::timeseries;
+use attn_reduce::engine::{CodecExt, FieldSet};
 use attn_reduce::serve::{ServeConfig, Server, StopHandle};
 use attn_reduce::stream::StreamWriter;
+use attn_reduce::util::json::Value;
 
 fn bin() -> Command {
     Command::new(env!("CARGO_BIN_EXE_attn-reduce"))
@@ -46,6 +48,16 @@ fn make_archive(dir: &Path, name: &str) -> PathBuf {
     let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
     let field = attn_reduce::data::generate(&cfg);
     let archive = Sz3Codec::new(cfg).compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    let path = dir.join(name);
+    archive.save(&path).unwrap();
+    path
+}
+
+/// A two-field v2 sz3 archive at `dir/name`.
+fn make_multi_archive(dir: &Path, name: &str) -> PathBuf {
+    let set = FieldSet::generate(DatasetKind::E3sm, Scale::Smoke, 2);
+    let codec = Sz3Codec::new(set.dataset().clone());
+    let archive = codec.compress_set(&set, &ErrorBound::Nrmse(1e-3)).unwrap();
     let path = dir.join(name);
     archive.save(&path).unwrap();
     path
@@ -134,6 +146,16 @@ fn post(addr: SocketAddr, target: &str, body: &[u8]) -> Reply {
         body.len()
     );
     send(addr, &head, body)
+}
+
+/// The value of a bare (unlabeled) series in a text exposition.
+fn metric_value(text: &str, series: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(series).and_then(|r| r.strip_prefix(' ')))
+        .unwrap_or_else(|| panic!("series {series} missing from exposition"))
+        .trim()
+        .parse()
+        .unwrap()
 }
 
 /// The acceptance criterion: server extract bytes == CLI extract bytes,
@@ -317,11 +339,89 @@ fn adaptive_archive_routes_match_the_cli_and_expose_the_codec_split() {
     assert_eq!(r.body.len(), cfg.total_points() * 4);
 }
 
+/// `/v1/metrics` exposes the full family catalog in Prometheus text,
+/// its cache counters move in lockstep with the LRU (a warm extract
+/// repeat is exactly two hits: reader probe + keyframe region), and
+/// `?format=json` is the same snapshot as parseable JSON.
+#[test]
+fn metrics_exposition_covers_the_catalog_and_pins_cache_hits() {
+    let dir = root("metrics");
+    make_stream(&dir, "run.tstr");
+    let srv = Running::start(&dir);
+
+    // cold: populates the reader + keyframe cache entries
+    let cold = get(srv.addr, "/v1/streams/run.tstr/extract?step=3&region=8:24,0:16");
+    assert_eq!(cold.status, 200, "{}", cold.text());
+
+    let scrape = get(srv.addr, "/v1/metrics");
+    assert_eq!(scrape.status, 200);
+    assert!(
+        scrape.header("content-type").unwrap().starts_with("text/plain"),
+        "prometheus text content type"
+    );
+    let text = scrape.text();
+    // the catalog: per-server request metrics, the cache's snapshot
+    // families, and the preregistered global stage/entropy/adaptive
+    // families — all present on the first scrape, before any traffic
+    // has exercised them
+    for needle in [
+        "# TYPE attn_requests_total counter",
+        "attn_requests_total{status=\"2xx\"}",
+        "# TYPE attn_request_duration_seconds histogram",
+        "attn_request_duration_seconds_bucket{route=\"stream_extract\",le=",
+        "# TYPE attn_cache_hits_total counter",
+        "attn_cache_misses_total",
+        "attn_cache_refusals_total",
+        "attn_cache_invalidations_total",
+        "attn_cache_resident_bytes",
+        "# TYPE attn_stage_duration_seconds histogram",
+        "attn_stage_duration_seconds_bucket{stage=\"stream.extract\",le=",
+        "attn_entropy_streams_total{mode=\"rans\",dir=\"decode\"}",
+        "attn_adaptive_tiles_total{codec=\"sz3\"}",
+        "attn_keyframe_payload_bytes_total",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+
+    let hits_before = metric_value(&text, "attn_cache_hits_total");
+    let warm = get(srv.addr, "/v1/streams/run.tstr/extract?step=3&region=8:24,0:16");
+    assert_eq!(warm.header("x-cache"), Some("hit"));
+    let text = get(srv.addr, "/v1/metrics").text();
+    let hits_after = metric_value(&text, "attn_cache_hits_total");
+    assert_eq!(hits_after - hits_before, 2, "reader hit + keyframe hit, nothing else");
+    assert_eq!(metric_value(&text, "attn_cache_refusals_total"), 0);
+
+    // /v1/stats carries the new cache counters alongside the old keys
+    let stats = get(srv.addr, "/v1/stats").text();
+    assert!(stats.contains("\"refusals\": 0"), "{stats}");
+    assert!(stats.contains("\"invalidations\": 0"), "{stats}");
+
+    // the JSON rendering is the same snapshot, machine-parseable
+    let json = get(srv.addr, "/v1/metrics?format=json");
+    assert_eq!(json.status, 200);
+    let doc = Value::parse(&json.text()).expect("valid JSON");
+    let families = match doc.get("families") {
+        Some(Value::Arr(f)) => f,
+        other => panic!("families array missing: {other:?}"),
+    };
+    let names: Vec<&str> = families
+        .iter()
+        .filter_map(|f| f.get("name").and_then(|v| v.as_str()))
+        .collect();
+    assert!(names.contains(&"attn_cache_hits_total"), "{names:?}");
+    assert!(names.contains(&"attn_request_duration_seconds"), "{names:?}");
+    assert!(names.contains(&"attn_stage_duration_seconds"), "{names:?}");
+
+    // unknown rendering: 400
+    assert_eq!(get(srv.addr, "/v1/metrics?format=xml").status, 400);
+}
+
 #[test]
 fn error_paths_return_typed_statuses() {
     let dir = root("errors");
     make_stream(&dir, "run.tstr");
     make_archive(&dir, "field.ardc");
+    make_multi_archive(&dir, "multi.ardc");
     let srv = Running::start(&dir);
 
     // unknown file: 404
@@ -350,6 +450,22 @@ fn error_paths_return_typed_statuses() {
     // path traversal in the name segment: 400, nothing leaks
     let r = get(srv.addr, "/v1/archives/%2e%2e%2fsecret/info");
     assert_eq!(r.status, 400);
+
+    // out-of-range field index: typed 400 naming the field count (the
+    // CLI's exit-2 contract, HTTP-shaped); an unknown field *name* is
+    // a 404; field= on a single-field archive is a 400
+    let r = get(srv.addr, "/v1/archives/multi.ardc/extract?field=9");
+    assert_eq!(r.status, 400);
+    assert!(
+        r.text().contains("field index 9 out of range: archive has 2 fields (0..2)"),
+        "{}",
+        r.text()
+    );
+    let r = get(srv.addr, "/v1/archives/multi.ardc/extract?field=nope");
+    assert_eq!(r.status, 404, "{}", r.text());
+    let r = get(srv.addr, "/v1/archives/field.ardc/extract?field=0");
+    assert_eq!(r.status, 400);
+    assert!(r.text().contains("multi-field"), "{}", r.text());
 
     // wrong route family for the file type: 400 pointing at the other
     let r = get(srv.addr, "/v1/archives/run.tstr/extract");
