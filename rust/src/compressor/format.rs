@@ -64,9 +64,46 @@
 //! written payloads; every committed golden decodes byte-identically
 //! through the 0xB3/0xB4 path.
 
+use crate::util::crc32c;
 use crate::util::json::Value;
 use crate::Result;
 use anyhow::{bail, ensure};
+
+/// Typed integrity failure: checksummed bytes did not verify, or framing
+/// carries bytes no writer of this format produces. Kept as a concrete
+/// `std::error::Error` (not just an anyhow message) so callers can react
+/// to corruption specifically — the serve layer downcasts it to answer
+/// HTTP 422 instead of a generic 400/500, and `cli verify` counts it.
+/// Constructing one increments `attn_corruption_detected_total`.
+#[derive(Debug, Clone)]
+pub struct Corruption(pub String);
+
+impl Corruption {
+    pub fn new(msg: impl Into<String>) -> Self {
+        crate::obs::corruption_detected();
+        Self(msg.into())
+    }
+}
+
+impl std::fmt::Display for Corruption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "corruption detected: {}", self.0)
+    }
+}
+
+impl std::error::Error for Corruption {}
+
+/// Shorthand: a [`Corruption`] wrapped as `anyhow::Error` (the root type
+/// survives for `downcast_ref::<Corruption>()`).
+pub(crate) fn corrupt(msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::from(Corruption::new(msg))
+}
+
+/// Is this error a detected integrity failure (as opposed to malformed
+/// input, I/O trouble, or a plain bug)?
+pub fn is_corruption(err: &anyhow::Error) -> bool {
+    err.is::<Corruption>()
+}
 
 const MAGIC: &[u8; 4] = b"ARDC";
 /// Single-field archive (the seed format — whole-stream payloads).
@@ -85,6 +122,104 @@ pub const VERSION_V4: u16 = 4;
 
 /// Section tag of the v3 block index.
 pub const BLOCK_INDEX_TAG: &str = "BIDX";
+
+// ---------------------------------------------------------------------------
+// XSUM integrity trailer (optional, declared in the header).
+//
+// A checksummed archive appends after the section container:
+// ```text
+//   "XSUM" | u8 ver=1 | u32 n | n x ( [u8;4] tag | u32 crc32c(section) )
+//   | u32 file_crc | "XEND"
+// ```
+// where `file_crc` covers every byte before itself (container + trailer
+// prefix). Presence is declared by the header key `"xsum": 1`, written
+// only at serialization time by `to_bytes_checked` — so an in-memory
+// `Archive` never carries the key, `to_bytes()` stays byte-identical to
+// every pre-trailer writer, and the legacy corpus parses unchanged. The
+// header declaration (rather than sniffing the file tail) is what makes
+// single-byte flips airtight: a flip that grows a section length to
+// swallow the trailer still leaves the declaration, and the then-missing
+// trailer is corruption; a flip that garbles the declaration makes the
+// trailer look like trailing garbage, which strict parsing rejects.
+// ---------------------------------------------------------------------------
+
+/// Header key declaring an XSUM trailer follows the section container.
+pub const XSUM_HEADER_KEY: &str = "xsum";
+const XSUM_MAGIC: &[u8; 4] = b"XSUM";
+const XSUM_END: &[u8; 4] = b"XEND";
+const XSUM_VERSION: u8 = 1;
+
+/// Exact byte length of an XSUM trailer over `n` sections.
+pub fn xsum_trailer_len(n: usize) -> usize {
+    4 + 1 + 4 + 8 * n + 4 + 4
+}
+
+fn append_xsum_trailer(out: &mut Vec<u8>, sections: &[(String, Vec<u8>)]) {
+    out.extend_from_slice(XSUM_MAGIC);
+    out.push(XSUM_VERSION);
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (tag, bytes) in sections {
+        out.extend_from_slice(tag.as_bytes());
+        out.extend_from_slice(&crc32c::crc32c(bytes).to_le_bytes());
+    }
+    let file_crc = crc32c::crc32c(out);
+    out.extend_from_slice(&file_crc.to_le_bytes());
+    out.extend_from_slice(XSUM_END);
+}
+
+/// Verify the XSUM trailer a header declared. `container_end` is the
+/// first byte after the section container; `sections` are the parsed
+/// sections in file order. Every failure is a typed [`Corruption`].
+fn verify_xsum_trailer(
+    bytes: &[u8],
+    container_end: usize,
+    sections: &[(String, Vec<u8>)],
+) -> Result<()> {
+    let n = sections.len();
+    if bytes.len() != container_end + xsum_trailer_len(n) {
+        return Err(corrupt(format!(
+            "header declares checksums but the XSUM trailer is missing or mis-sized \
+             ({} bytes after the container, trailer needs {})",
+            bytes.len().saturating_sub(container_end),
+            xsum_trailer_len(n)
+        )));
+    }
+    // The whole-file CRC is verified first: it covers the header, every
+    // section length, and the trailer itself, so any single flipped byte
+    // anywhere in the file fails here even when the structural fields
+    // still happen to parse.
+    let l = bytes.len();
+    let stored = u32::from_le_bytes(bytes[l - 8..l - 4].try_into().unwrap());
+    if crc32c::crc32c(&bytes[..l - 8]) != stored {
+        return Err(corrupt("archive file checksum mismatch"));
+    }
+    if &bytes[l - 4..] != XSUM_END {
+        return Err(corrupt("XSUM trailer end magic missing"));
+    }
+    let t = &bytes[container_end..];
+    if &t[0..4] != XSUM_MAGIC {
+        return Err(corrupt("XSUM trailer magic missing"));
+    }
+    if t[4] != XSUM_VERSION {
+        return Err(corrupt(format!("XSUM trailer version {} unsupported", t[4])));
+    }
+    let tn = u32::from_le_bytes(t[5..9].try_into().unwrap()) as usize;
+    if tn != n {
+        return Err(corrupt(format!("XSUM trailer covers {tn} of {n} sections")));
+    }
+    let mut p = 9usize;
+    for (tag, data) in sections {
+        if &t[p..p + 4] != tag.as_bytes() {
+            return Err(corrupt(format!("XSUM trailer tag order mismatch at {tag}")));
+        }
+        let crc = u32::from_le_bytes(t[p + 4..p + 8].try_into().unwrap());
+        if crc32c::crc32c(data) != crc {
+            return Err(corrupt(format!("section {tag} checksum mismatch")));
+        }
+        p += 8;
+    }
+    Ok(())
+}
 
 // ---------------------------------------------------------------------------
 // v4 temporal-stream framing (magic TSTR): header + self-delimiting
@@ -163,6 +298,45 @@ pub fn parse_stream_record(bytes: &[u8], off: usize) -> Result<([u8; 4], usize, 
         .checked_add(len)
         .ok_or_else(|| anyhow::anyhow!("stream record length overflow"))?;
     ensure!(bytes.len() >= next, "stream record payload truncated");
+    Ok((tag, payload, len, next))
+}
+
+/// Record tag of the stream integrity record: written right after the
+/// header of a checked (`"xsum": 1`) stream, its payload is the u32
+/// CRC32C of the header bytes (magic through header JSON).
+pub const STREAM_XSUM_TAG: &[u8; 4] = b"XSUM";
+
+/// Frame one *checked* stream record: `tag | u64 len | payload |
+/// u32 crc32c(tag|len|payload)`. Checked streams (header `"xsum": 1`)
+/// use this for every record; legacy streams keep the 12-byte framing.
+pub fn stream_record_bytes_checked(tag: &[u8; 4], payload: &[u8]) -> Vec<u8> {
+    let mut out = stream_record_bytes(tag, payload);
+    let crc = crc32c::crc32c(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Parse and verify the checked record at `off`, returning `(tag,
+/// payload_offset, payload_len, next_record_offset)` with `next` past
+/// the trailing CRC. Truncation is a plain error (the recovery scan
+/// treats it as a torn tail); a present-but-wrong CRC is a typed
+/// [`Corruption`].
+pub fn parse_stream_record_checked(
+    bytes: &[u8],
+    off: usize,
+) -> Result<([u8; 4], usize, usize, usize)> {
+    let (tag, payload, len, body_end) = parse_stream_record(bytes, off)?;
+    let next = body_end
+        .checked_add(4)
+        .ok_or_else(|| anyhow::anyhow!("stream record length overflow"))?;
+    ensure!(bytes.len() >= next, "stream record checksum truncated");
+    let stored = u32::from_le_bytes(bytes[body_end..next].try_into().unwrap());
+    if crc32c::crc32c(&bytes[off..body_end]) != stored {
+        return Err(corrupt(format!(
+            "stream record {} at byte {off} failed its checksum",
+            String::from_utf8_lossy(&tag)
+        )));
+    }
     Ok((tag, payload, len, next))
 }
 
@@ -367,21 +541,30 @@ pub struct Archive {
     pub header: Value,
     version: u16,
     sections: Vec<(String, Vec<u8>)>,
+    /// Parsed from bytes that carried a verified XSUM trailer. Purely
+    /// informational (reported by `cli verify` / `info`); serialization
+    /// is governed by which `to_bytes*` the caller picks, not this flag.
+    checksummed: bool,
 }
 
 impl Archive {
     pub fn new(header: Value) -> Self {
-        Self { header, version: VERSION_V1, sections: Vec::new() }
+        Self { header, version: VERSION_V1, sections: Vec::new(), checksummed: false }
     }
 
     /// A new (empty) multi-field v2 container.
     pub fn new_v2(header: Value) -> Self {
-        Self { header, version: VERSION_V2, sections: Vec::new() }
+        Self { header, version: VERSION_V2, sections: Vec::new(), checksummed: false }
     }
 
     /// A new (empty) v3 single-field archive (block-indexed payload).
     pub fn new_v3(header: Value) -> Self {
-        Self { header, version: VERSION_V3, sections: Vec::new() }
+        Self { header, version: VERSION_V3, sections: Vec::new(), checksummed: false }
+    }
+
+    /// Did these bytes carry a verified XSUM integrity trailer?
+    pub fn checksummed(&self) -> bool {
+        self.checksummed
     }
 
     /// Container version (1 = single field, 2 = multi-field set,
@@ -614,6 +797,18 @@ impl Archive {
         out
     }
 
+    /// Serialize with the XSUM integrity trailer. The `"xsum": 1` header
+    /// declaration is stamped on a clone at serialization time, so the
+    /// in-memory archive (and plain [`Self::to_bytes`]) are untouched —
+    /// embedded field archives and legacy comparisons stay byte-stable.
+    pub fn to_bytes_checked(&self) -> Vec<u8> {
+        let mut declared = self.clone();
+        declared.set_header(XSUM_HEADER_KEY, crate::util::json::num(1.0));
+        let mut out = declared.to_bytes();
+        append_xsum_trailer(&mut out, &declared.sections);
+        out
+    }
+
     /// Parse an archive. Corrupt or truncated input always returns `Err`
     /// (all offset arithmetic is overflow-checked — never panics), and
     /// unknown section tags are preserved for forward compatibility.
@@ -668,16 +863,37 @@ impl Archive {
             sections.push((tag, bytes[off..end].to_vec()));
             off = end;
         }
-        Ok(Self { header, version, sections })
+        // Past the section container: either the header declared an XSUM
+        // trailer (which must then verify), or the container must end the
+        // buffer exactly — no writer of this format emits trailing bytes,
+        // so any surplus is corruption, not forward compatibility.
+        let checksummed = header.get(XSUM_HEADER_KEY).is_some();
+        if checksummed {
+            verify_xsum_trailer(bytes, off, &sections)?;
+        } else if off != bytes.len() {
+            return Err(corrupt(format!(
+                "{} trailing bytes after the section container",
+                bytes.len() - off
+            )));
+        }
+        let mut header = header;
+        if checksummed {
+            // The declaration is a wire-format flag, not archive content:
+            // dropping it here makes parse(to_bytes_checked(a)) yield an
+            // archive whose to_bytes() equals a.to_bytes() exactly.
+            if let Value::Obj(pairs) = &mut header {
+                pairs.retain(|(k, _)| k != XSUM_HEADER_KEY);
+            }
+        }
+        Ok(Self { header, version, sections, checksummed })
     }
 
+    /// Persist atomically with the XSUM integrity trailer: bytes go
+    /// through [`crate::util::durable::write_atomic`], so a crash at any
+    /// point leaves either the previous file or nothing under `path` —
+    /// never a torn prefix.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.to_bytes())?;
-        Ok(())
+        crate::util::durable::write_atomic(path, &self.to_bytes_checked())
     }
 
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
@@ -1035,6 +1251,86 @@ mod tests {
             }
         }
         assert!(parse_stream_record(&buf[..16], 0).is_err(), "payload cut");
+    }
+
+    #[test]
+    fn checked_serialization_round_trips_and_stays_byte_stable() {
+        let a = sample();
+        let legacy = a.to_bytes();
+        let checked = a.to_bytes_checked();
+        // trailer + the `"xsum":1` header declaration are the only growth
+        assert_eq!(checked.len(), legacy.len() + xsum_trailer_len(3) + r#","xsum":1"#.len());
+        let back = Archive::from_bytes(&checked).unwrap();
+        assert!(back.checksummed());
+        assert!(back.header.get(XSUM_HEADER_KEY).is_none(), "wire flag stripped");
+        // parse(checked).to_bytes() == legacy bytes exactly
+        assert_eq!(back.to_bytes(), legacy);
+        assert_eq!(back.section("HLAT").unwrap(), &[1, 2, 3]);
+        // legacy bytes still parse, reporting unchecksummed
+        assert!(!Archive::from_bytes(&legacy).unwrap().checksummed());
+        // and to_bytes_checked is deterministic
+        assert_eq!(a.to_bytes_checked(), checked);
+    }
+
+    #[test]
+    fn every_single_byte_flip_in_a_checked_archive_is_detected() {
+        let checked = sample().to_bytes_checked();
+        let mut bytes = checked.clone();
+        for i in 0..bytes.len() {
+            for bit in [0x01u8, 0x80] {
+                bytes[i] ^= bit;
+                assert!(
+                    Archive::from_bytes(&bytes).is_err(),
+                    "flip at byte {i} (bit {bit:#x}) parsed clean"
+                );
+                bytes[i] ^= bit;
+            }
+        }
+        assert_eq!(bytes, checked, "sweep restored the buffer");
+        // flips inside section payloads are typed corruption specifically
+        let payload_pos = checked
+            .windows(3)
+            .position(|w| w == [1, 2, 3])
+            .expect("HLAT payload present");
+        bytes[payload_pos] ^= 0x40;
+        let err = Archive::from_bytes(&bytes).unwrap_err();
+        assert!(is_corruption(&err), "{err:#}");
+        assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn legacy_archives_reject_trailing_garbage_as_corruption() {
+        let mut bytes = sample().to_bytes();
+        assert!(Archive::from_bytes(&bytes).is_ok());
+        bytes.push(0);
+        let err = Archive::from_bytes(&bytes).unwrap_err();
+        assert!(is_corruption(&err), "{err:#}");
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn checked_stream_records_verify_and_detect_flips() {
+        let rec = stream_record_bytes_checked(STREAM_KEY_TAG, &[5, 6, 7, 8, 9]);
+        assert_eq!(rec.len(), 12 + 5 + 4);
+        let (tag, p, len, next) = parse_stream_record_checked(&rec, 0).unwrap();
+        assert_eq!((&tag, p, len, next), (STREAM_KEY_TAG, 12, 5, rec.len()));
+        let mut bytes = rec.clone();
+        for i in 0..bytes.len() {
+            bytes[i] ^= 0x10;
+            assert!(
+                parse_stream_record_checked(&bytes, 0).is_err(),
+                "flip at byte {i} parsed clean"
+            );
+            bytes[i] ^= 0x10;
+        }
+        // any truncation is a plain (torn-tail) error, never a panic
+        for cut in 0..rec.len() {
+            assert!(parse_stream_record_checked(&rec[..cut], 0).is_err(), "cut {cut}");
+        }
+        // a payload flip is typed corruption
+        bytes[13] ^= 0xFF;
+        let err = parse_stream_record_checked(&bytes, 0).unwrap_err();
+        assert!(is_corruption(&err), "{err:#}");
     }
 
     #[test]

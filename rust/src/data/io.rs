@@ -1,27 +1,27 @@
 //! Raw little-endian f32 file I/O — the interchange format scientific
 //! codes (and SZ3/ZFP CLIs) use for field dumps.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, Read};
 use std::path::Path;
 
 use crate::tensor::Tensor;
+use crate::util::durable;
 use crate::Result;
 use anyhow::{ensure, Context};
 
 /// Write a tensor as raw little-endian f32 (shape is external metadata).
+/// Atomic like every other output in the crate: the bytes land under a
+/// temp sibling, are fsynced, and only then renamed onto `path` — a
+/// crash mid-write can never leave a truncated field under the final
+/// name.
 pub fn write_f32_file(path: impl AsRef<Path>, t: &Tensor) -> Result<()> {
     let path = path.as_ref();
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    let mut w = BufWriter::new(f);
+    let mut bytes = Vec::with_capacity(t.len() * 4);
     for &v in t.data() {
-        w.write_all(&v.to_le_bytes())?;
+        bytes.extend_from_slice(&v.to_le_bytes());
     }
-    w.flush()?;
-    Ok(())
+    durable::write_atomic(path, &bytes)
+        .with_context(|| format!("writing {}", path.display()))
 }
 
 /// Read a raw little-endian f32 file into a tensor of the given shape.

@@ -142,6 +142,7 @@ pub mod stream;
 pub mod tensor;
 pub mod train;
 pub mod util;
+pub mod verify;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

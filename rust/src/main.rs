@@ -13,6 +13,7 @@
 //! attn-reduce stream extract --in run.tstr --step 12 [--region 0:32,0:64]
 //! attn-reduce stream info    --in run.tstr
 //! attn-reduce experiment <table1|table2|fig4|fig5|fig6|fig7|fig8|fig9>
+//! attn-reduce verify     --root DIR [--repair]   # offline fsck
 //! attn-reduce info       # manifest + platform summary
 //! attn-reduce info       --in data.ardc [--json]   # byte breakdown
 //! attn-reduce serve      --root DIR --addr 127.0.0.1:8080
@@ -70,7 +71,8 @@ COMMANDS:
                          only the intersecting blocks of each chain step
                  info    --in S   timeline, CR, per-step sizes
   serve        long-running HTTP service over a directory of archives and
-               streams (--root DIR --addr HOST:PORT [--cache-bytes B]):
+               streams (--root DIR --addr HOST:PORT [--cache-bytes B]
+               [--max-pending N]  shed connections past N queued (503)):
                GET  /v1/archives                     paginated listing
                GET  /v1/archives/{name}/info        byte breakdown (JSON)
                GET  /v1/archives/{name}/extract?region=i0:i1,...[&field=N]
@@ -80,6 +82,13 @@ COMMANDS:
                GET  /v1/stats                       counters + cache
                GET  /v1/metrics[?format=json]       Prometheus exposition
   experiment   reproduce a paper table/figure (table1 table2 fig4..fig9)
+  verify       offline fsck over a directory (or one file) of archives and
+               streams (--root DIR [--repair]): validates framing, XSUM
+               checksums, block indices and timelines; exits non-zero if
+               anything is damaged. --repair truncates torn stream tails
+               back to the last complete step record and quarantines
+               unrecoverable files (renamed to <name>.quarantine);
+               without it the walk is strictly read-only
   info         --in A: per-section byte breakdown of an archive or stream
                (payload vs index vs framing, plus the entropy table/symbol
                split for sz3/zfp/adaptive payloads and the per-tile codec
@@ -113,7 +122,7 @@ fn main() {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let flags = ["quiet", "retrain", "full", "help", "all-vars", "json", "verbose"];
+    let flags = ["quiet", "retrain", "full", "help", "all-vars", "json", "verbose", "repair"];
     let args = Args::parse(raw, &flags)?;
     if args.flag("quiet") {
         std::env::set_var("ATTN_REDUCE_QUIET", "1");
@@ -160,6 +169,7 @@ fn run(raw: &[String]) -> Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("experiment id required"))?;
             experiments::run_experiment(id, &args)
         }
+        "verify" => cmd_verify(&args),
         "info" => cmd_info(&args),
         "help" | "-h" => {
             println!("{USAGE}");
@@ -751,6 +761,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     cfg.cache_bytes = args.get_usize("cache-bytes", cfg.cache_bytes)?;
     cfg.batch = args.get_usize("batch", cfg.batch)?;
+    cfg.max_pending = args.get_usize("max-pending", cfg.max_pending)?;
     let server = Server::bind(cfg)?;
     println!(
         "serving {} on http://{} ({} worker threads)",
@@ -761,6 +772,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         parallel::num_threads()
     );
     server.run()
+}
+
+/// `verify --root DIR [--repair]` — offline fsck. Clean (or fully
+/// repaired) trees exit 0; anything still corrupt or quarantined makes
+/// the command fail, so CI can gate on it.
+fn cmd_verify(args: &Args) -> Result<()> {
+    use attn_reduce::verify::{self, Action, Status};
+    let root = std::path::PathBuf::from(args.get_or("root", "."));
+    anyhow::ensure!(root.exists(), "verify root {} does not exist", root.display());
+    let repair = args.flag("repair");
+    let report = verify::verify_root(&root, repair)?;
+    for f in &report.files {
+        let state = match (&f.status, &f.action) {
+            (Status::Clean, _) => "ok".to_string(),
+            (Status::Torn { recover_len, steps_kept, tail_bytes }, a) => format!(
+                "TORN ({tail_bytes} tail bytes; {steps_kept} steps recoverable at {recover_len} bytes){}",
+                match a {
+                    Action::Repaired => " -> repaired",
+                    Action::Failed(_) => " -> repair FAILED",
+                    _ => "",
+                }
+            ),
+            (Status::Corrupt(why), a) => format!(
+                "CORRUPT ({why}){}",
+                match a {
+                    Action::Quarantined(_) => " -> quarantined",
+                    Action::Failed(_) => " -> quarantine FAILED",
+                    _ => "",
+                }
+            ),
+        };
+        println!("  {} [{} — {}]: {state}", f.path.display(), f.kind, f.detail);
+        if let Action::Failed(e) = &f.action {
+            println!("    repair error: {e}");
+        }
+    }
+    println!(
+        "verify: {} files checked — {} clean, {} torn, {} corrupt{}",
+        report.files.len(),
+        report.clean,
+        report.torn,
+        report.corrupt,
+        if repair {
+            format!(" ({} repaired, {} quarantined)", report.repaired, report.quarantined)
+        } else {
+            String::new()
+        }
+    );
+    anyhow::ensure!(
+        report.all_ok(),
+        "{} damaged file(s) under {}{}",
+        report.torn + report.corrupt,
+        root.display(),
+        if repair { " (see quarantine)" } else { " (rerun with --repair to recover)" }
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -82,6 +82,10 @@ pub mod stages {
 }
 
 const ENTROPY_HELP: &str = "Symbol streams by container mode and direction";
+const CORRUPTION_HELP: &str =
+    "Integrity failures detected on read (bad XSUM/CRC, torn framing)";
+const DURABLE_HELP: &str = "Atomic write attempts by outcome (committed|failed)";
+const SHED_HELP: &str = "Connections shed with 503 by serve overload backpressure";
 const ADAPTIVE_TILES_HELP: &str = "Tiles committed per codec by adaptive selection";
 const ADAPTIVE_SKIPS_HELP: &str =
     "Tiles where the sampled gate skipped the zfp trial (sz3 taken without certification)";
@@ -117,6 +121,34 @@ pub fn adaptive_gate_skip() {
         .inc();
 }
 
+/// Count one detected integrity failure. Unlike the stage counters
+/// this is NOT trace-gated: corruption must be visible in production.
+pub fn corruption_detected() {
+    Registry::global()
+        .counter("attn_corruption_detected_total", CORRUPTION_HELP, &[])
+        .inc();
+}
+
+/// Count one atomic-write attempt. `outcome` ∈ committed|failed.
+/// Not trace-gated — durability outcomes must always be visible.
+pub fn durable_write(outcome: &'static str) {
+    Registry::global()
+        .counter("attn_durable_writes_total", DURABLE_HELP, &[("outcome", outcome)])
+        .inc();
+}
+
+/// Count one connection shed by serve backpressure (global registry;
+/// the per-server registry keeps its own copy for `/v1/metrics`).
+pub fn request_shed() {
+    Registry::global()
+        .counter("attn_requests_shed_total", SHED_HELP, &[])
+        .inc();
+}
+
+/// Help string for the per-server shed counter (serve registers the
+/// same family in its own registry so `/v1/metrics` exports it).
+pub const REQUESTS_SHED_HELP: &str = SHED_HELP;
+
 /// Materialize every global family with zero values so scrapers (and
 /// the CI metrics smoke leg) see the full catalog before traffic.
 /// Idempotent; called from `serve` startup and `--verbose` dumps.
@@ -138,6 +170,11 @@ pub fn preregister() {
         reg.counter("attn_adaptive_tiles_total", ADAPTIVE_TILES_HELP, &[("codec", codec)]);
     }
     reg.counter("attn_adaptive_gate_skips_total", ADAPTIVE_SKIPS_HELP, &[]);
+    reg.counter("attn_corruption_detected_total", CORRUPTION_HELP, &[]);
+    for outcome in ["committed", "failed"] {
+        reg.counter("attn_durable_writes_total", DURABLE_HELP, &[("outcome", outcome)]);
+    }
+    reg.counter("attn_requests_shed_total", SHED_HELP, &[]);
 }
 
 /// The global registry rendered as Prometheus text (the `--verbose`

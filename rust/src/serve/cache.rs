@@ -19,22 +19,48 @@ use crate::compressor::Archive;
 use crate::stream::StreamReader;
 use crate::tensor::Tensor;
 
+/// Identity of a file's *contents* at lookup time: `(len, mtime)` from
+/// a fresh stat. Baking the stamp into every cache key makes an
+/// overwritten or externally-replaced file an automatic miss — stale
+/// readers/archives/keyframes can never be served, even when the writer
+/// bypassed [`LruCache::invalidate_file`] (e.g. an out-of-process
+/// `cli compress` into the serve root).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct FileStamp {
+    pub len: u64,
+    /// Modification time as `(secs, nanos)` since the UNIX epoch
+    /// (pre-epoch or unsupported mtimes collapse to `(0, 0)`).
+    pub mtime: (u64, u32),
+}
+
+impl FileStamp {
+    pub fn of(path: &Path) -> std::io::Result<Self> {
+        let m = std::fs::metadata(path)?;
+        let mtime = match m.modified().map(|t| t.duration_since(std::time::UNIX_EPOCH)) {
+            Ok(Ok(d)) => (d.as_secs(), d.subsec_nanos()),
+            _ => (0, 0),
+        };
+        Ok(Self { len: m.len(), mtime })
+    }
+}
+
 /// What a cached entry is keyed by.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum CacheKey {
-    /// A parsed on-disk file (stream reader or archive).
-    File(PathBuf),
-    /// A decoded keyframe region: `(file, keyframe step, region class)`
-    /// where the class is the canonical `lo:hi,...` spelling (a full
-    /// frame and an explicit full region share one entry).
-    Keyframe(PathBuf, usize, String),
+    /// A parsed on-disk file (stream reader or archive), pinned to the
+    /// content stamp observed when it was loaded.
+    File(PathBuf, FileStamp),
+    /// A decoded keyframe region: `(file, stamp, keyframe step, region
+    /// class)` where the class is the canonical `lo:hi,...` spelling (a
+    /// full frame and an explicit full region share one entry).
+    Keyframe(PathBuf, FileStamp, usize, String),
 }
 
 impl CacheKey {
     fn path(&self) -> &Path {
         match self {
-            CacheKey::File(p) => p,
-            CacheKey::Keyframe(p, _, _) => p,
+            CacheKey::File(p, _) => p,
+            CacheKey::Keyframe(p, _, _, _) => p,
         }
     }
 }
@@ -198,7 +224,7 @@ mod tests {
     }
 
     fn key(name: &str, step: usize) -> CacheKey {
-        CacheKey::Keyframe(PathBuf::from(name), step, "full".to_string())
+        CacheKey::Keyframe(PathBuf::from(name), FileStamp::default(), step, "full".to_string())
     }
 
     #[test]
@@ -242,9 +268,23 @@ mod tests {
     }
 
     #[test]
+    fn a_changed_file_stamp_is_a_different_key() {
+        let cache = LruCache::new(1000);
+        let p = PathBuf::from("x");
+        let s1 = FileStamp { len: 10, mtime: (100, 0) };
+        let s2 = FileStamp { len: 10, mtime: (200, 5) };
+        cache.insert(CacheKey::File(p.clone(), s1), frame(1), 10, 0);
+        assert!(cache.get(&CacheKey::File(p.clone(), s1)).is_some());
+        assert!(
+            cache.get(&CacheKey::File(p, s2)).is_none(),
+            "an overwritten file (new mtime) must never hit the stale entry"
+        );
+    }
+
+    #[test]
     fn invalidate_drops_all_keys_for_a_file() {
         let cache = LruCache::new(1000);
-        cache.insert(CacheKey::File(PathBuf::from("x")), frame(1), 10, 0);
+        cache.insert(CacheKey::File(PathBuf::from("x"), FileStamp::default()), frame(1), 10, 0);
         cache.insert(key("x", 0), frame(1), 10, 0);
         cache.insert(key("x", 8), frame(1), 10, 0);
         cache.insert(key("y", 0), frame(1), 10, 0);

@@ -233,8 +233,10 @@ impl Response {
             404 => "Not Found",
             405 => "Method Not Allowed",
             413 => "Payload Too Large",
+            422 => "Unprocessable Entity",
             500 => "Internal Server Error",
             501 => "Not Implemented",
+            503 => "Service Unavailable",
             _ => "Unknown",
         }
     }

@@ -11,8 +11,9 @@
 use crate::baselines::{Sz3Like, ZfpLike};
 use crate::codec::TileCodec;
 use crate::compressor::format::{
-    parse_stream_header, parse_stream_record, BLOCK_INDEX_TAG, CR_SECTIONS, STREAM_KEY_TAG,
-    STREAM_MAGIC, STREAM_RES_TAG, STREAM_TIDX_TAG,
+    parse_stream_header, parse_stream_record, parse_stream_record_checked, BLOCK_INDEX_TAG,
+    CR_SECTIONS, STREAM_KEY_TAG, STREAM_MAGIC, STREAM_RES_TAG, STREAM_TIDX_TAG,
+    XSUM_HEADER_KEY,
 };
 use crate::compressor::Archive;
 use crate::config::DatasetConfig;
@@ -200,12 +201,21 @@ pub fn stream_byte_summary(bytes: &[u8]) -> Result<StreamByteSummary> {
         .and_then(|v| v.as_str())
         .unwrap_or("?")
         .to_string();
+    // checked streams frame every record with a trailing CRC and carry
+    // a header-pinning XSUM record — both count as framing here
+    let checked = header.get(XSUM_HEADER_KEY).is_some();
+    let rec_overhead = if checked { 12 + 4 } else { 12 };
     let mut off = start;
     let (mut steps, mut keyframes) = (0usize, 0usize);
     let (mut record_payload, mut tidx_bytes) = (0usize, 0usize);
     let mut framing = start;
-    while off + 12 <= bytes.len() {
-        let Ok((tag, _, len, next)) = parse_stream_record(bytes, off) else {
+    while off + rec_overhead <= bytes.len() {
+        let parsed = if checked {
+            parse_stream_record_checked(bytes, off)
+        } else {
+            parse_stream_record(bytes, off)
+        };
+        let Ok((tag, _, len, next)) = parsed else {
             break;
         };
         if tag == *STREAM_KEY_TAG {
@@ -217,8 +227,10 @@ pub fn stream_byte_summary(bytes: &[u8]) -> Result<StreamByteSummary> {
             record_payload += len;
         } else if tag == *STREAM_TIDX_TAG {
             tidx_bytes += len;
+        } else {
+            framing += len; // XSUM / unknown records are pure framing
         }
-        framing += 12;
+        framing += rec_overhead;
         off = next;
     }
     framing += bytes.len() - off; // footer + any trailing partial record

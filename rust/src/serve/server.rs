@@ -14,8 +14,8 @@
 
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -34,7 +34,7 @@ use crate::util::json::{self, Value};
 use crate::util::parallel;
 use crate::Result;
 
-use super::cache::{CacheCounters, CacheKey, CacheValue, LruCache};
+use super::cache::{CacheCounters, CacheKey, CacheValue, FileStamp, LruCache};
 use super::http::{self, Request, Response};
 use super::info;
 use super::router::{validate_name, HttpResult, Query, Route};
@@ -50,6 +50,10 @@ pub struct ServeConfig {
     pub batch: usize,
     /// LRU cache capacity in bytes.
     pub cache_bytes: usize,
+    /// Overload backpressure: connections accepted while this many are
+    /// already queued or in flight are shed immediately with a `503` +
+    /// `Retry-After` instead of growing the queue without bound.
+    pub max_pending: usize,
 }
 
 impl ServeConfig {
@@ -59,6 +63,7 @@ impl ServeConfig {
             addr: addr.into(),
             batch: 0,
             cache_bytes: 256 * 1024 * 1024,
+            max_pending: 128,
         }
     }
 }
@@ -92,6 +97,8 @@ struct Metrics {
     /// Compressed keyframe payload bytes actually decoded (cache misses
     /// pay `region_cost.bytes_touched`; hits pay zero).
     kf_payload_bytes: &'static obs::Counter,
+    /// Connections shed by overload backpressure (503 before routing).
+    shed: &'static obs::Counter,
 }
 
 struct Shared {
@@ -102,6 +109,9 @@ struct Shared {
     /// and the process-global registry.
     registry: obs::Registry,
     metrics: Metrics,
+    /// Connections accepted but not yet finished handling — the
+    /// backpressure gauge the acceptor sheds against.
+    pending: AtomicUsize,
 }
 
 /// A bound-but-not-yet-running server; [`Server::run`] blocks until
@@ -112,6 +122,7 @@ pub struct Server {
     shared: Arc<Shared>,
     stop: Arc<AtomicBool>,
     batch: usize,
+    max_pending: usize,
 }
 
 /// Cloneable handle that wakes the accept loop and shuts the server
@@ -156,6 +167,7 @@ impl Server {
             status_5xx: status("5xx"),
             kf_payload_bytes: registry
                 .counter("attn_keyframe_payload_bytes_total", KF_BYTES_HELP, &[]),
+            shed: registry.counter("attn_requests_shed_total", obs::REQUESTS_SHED_HELP, &[]),
         };
         for label in ROUTE_LABELS {
             registry.histogram(
@@ -174,9 +186,11 @@ impl Server {
                 cache: LruCache::new(cfg.cache_bytes),
                 registry,
                 metrics,
+                pending: AtomicUsize::new(0),
             }),
             stop: Arc::new(AtomicBool::new(false)),
             batch: batch.max(1),
+            max_pending: cfg.max_pending.max(1),
         })
     }
 
@@ -188,8 +202,12 @@ impl Server {
         StopHandle { stop: self.stop.clone(), addr: self.addr }
     }
 
-    /// Accept until stopped. Connections are handed to a dispatcher
-    /// thread that batches them onto the executor pool.
+    /// Accept until stopped, shedding load once the pending-connection
+    /// queue saturates. Shutdown is a graceful drain: the accept loop
+    /// stops taking new connections, the channel closes, and the
+    /// dispatcher finishes every connection already accepted (queued or
+    /// in flight) before [`Server::run`] returns — a stopped server
+    /// never drops a request it said yes to.
     pub fn run(self) -> Result<()> {
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let shared = self.shared.clone();
@@ -201,15 +219,45 @@ impl Server {
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
-            if let Ok(stream) = conn {
-                let _ = tx.send(stream);
+            let Ok(mut stream) = conn else { continue };
+            // backpressure: answer over-capacity connections straight
+            // from the acceptor thread (tiny fixed response, short
+            // write timeout) rather than queueing without bound
+            if self.shared.pending.load(Ordering::Acquire) >= self.max_pending {
+                shed(&self.shared, &mut stream);
+                continue;
             }
+            self.shared.pending.fetch_add(1, Ordering::AcqRel);
+            let _ = tx.send(stream);
         }
         drop(tx); // dispatcher drains the queue, then exits
         dispatcher
             .join()
             .map_err(|_| anyhow::anyhow!("serve dispatcher panicked"))?;
         Ok(())
+    }
+}
+
+/// Overload response (`503` + `Retry-After`), written on the acceptor
+/// thread so a saturated worker pool cannot delay it.
+fn shed(shared: &Shared, stream: &mut TcpStream) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+    let resp = Response::error(503, "server overloaded; retry shortly")
+        .with_header("retry-after", "1");
+    let _ = resp.write_to(stream);
+    shared.metrics.shed.inc();
+    shared.metrics.status_5xx.inc();
+    obs::request_shed();
+    crate::log_at!(log::Level::Warn, "serve", "event=request_shed status=503");
+}
+
+/// Decrements the pending-connection gauge when handling ends, however
+/// it ends (normal return or handler panic — the unwind runs Drop).
+struct PendingGuard<'a>(&'a AtomicUsize);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
     }
 }
 
@@ -230,6 +278,7 @@ fn dispatch_loop(rx: mpsc::Receiver<TcpStream>, shared: Arc<Shared>, batch_cap: 
         let batch_ref = &batch;
         let outcomes = Executor::global().par_map_isolated(batch.len(), move |i, scratch| {
             if let Some(mut stream) = batch_ref[i].lock().unwrap().take() {
+                let _pending = PendingGuard(&shared_ref.pending);
                 handle_connection(shared_ref, &mut stream, scratch);
             }
         });
@@ -332,9 +381,19 @@ fn respond(shared: &Shared, req: &Request) -> (Response, &'static str, &'static 
     }
 }
 
-/// Map a library error onto a 500 (handlers pre-classify 4xx cases).
+/// Map a library error onto an HTTP status (handlers pre-classify 4xx
+/// cases): detected data corruption — a typed
+/// [`crate::compressor::format::Corruption`] anywhere in the chain — is
+/// the *file's* fault, not the server's, and surfaces as `422` so
+/// operators can tell "run `cli verify`" apart from real 500s.
 fn internal<T>(r: Result<T>) -> HttpResult<T> {
-    r.map_err(|e| (500, format!("{e:#}")))
+    r.map_err(|e| {
+        if crate::compressor::format::is_corruption(&e) {
+            (422, format!("{e:#}"))
+        } else {
+            (500, format!("{e:#}"))
+        }
+    })
 }
 
 fn read_file(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Vec<u8>)> {
@@ -345,6 +404,28 @@ fn read_file(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Vec<u8>)> {
             Err((404, format!("no file {name:?} under the serve root")))
         }
         Err(e) => Err((500, format!("reading {name:?}: {e}"))),
+    }
+}
+
+/// The file's current content stamp — every cache key embeds it, so an
+/// overwritten file (new len/mtime) can never hit a stale entry.
+fn file_stamp(path: &Path, name: &str) -> HttpResult<FileStamp> {
+    match FileStamp::of(path) {
+        Ok(s) => Ok(s),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Err((404, format!("no file {name:?} under the serve root")))
+        }
+        Err(e) => Err((500, format!("stat {name:?}: {e}"))),
+    }
+}
+
+/// Parse failures split by kind: checksum/framing damage is `422`
+/// (verifiable corruption), anything else a plain `400`.
+fn parse_status(e: &anyhow::Error) -> u16 {
+    if crate::compressor::format::is_corruption(e) {
+        422
+    } else {
+        400
     }
 }
 
@@ -442,7 +523,8 @@ fn archive_info(shared: &Shared, name: &str) -> HttpResult<Response> {
 /// was it a cache hit?
 fn load_archive(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<Archive>, bool)> {
     let path = shared.root.join(name);
-    let key = CacheKey::File(path.clone());
+    let stamp = file_stamp(&path, name)?;
+    let key = CacheKey::File(path.clone(), stamp);
     if let Some(CacheValue::Archive(a)) = shared.cache.get(&key) {
         return Ok((path, a, true));
     }
@@ -451,7 +533,8 @@ fn load_archive(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<Archive
         return Err((400, format!("{name:?} is a temporal stream; use /v1/streams/{name}/...")));
     }
     let archive = Arc::new(
-        Archive::from_bytes(&bytes).map_err(|e| (400, format!("bad archive {name:?}: {e:#}")))?,
+        Archive::from_bytes(&bytes)
+            .map_err(|e| (parse_status(&e), format!("bad archive {name:?}: {e:#}")))?,
     );
     let cost = bytes.len();
     shared.cache.insert(key, CacheValue::Archive(archive.clone()), cost, cost);
@@ -459,11 +542,15 @@ fn load_archive(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<Archive
 }
 
 /// The open stream reader for `name`, through the cache.
-fn load_reader(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<StreamReader>, bool)> {
+fn load_reader(
+    shared: &Shared,
+    name: &str,
+) -> HttpResult<(PathBuf, FileStamp, Arc<StreamReader>, bool)> {
     let path = shared.root.join(name);
-    let key = CacheKey::File(path.clone());
+    let stamp = file_stamp(&path, name)?;
+    let key = CacheKey::File(path.clone(), stamp);
     if let Some(CacheValue::Reader(r)) = shared.cache.get(&key) {
-        return Ok((path, r, true));
+        return Ok((path, stamp, r, true));
     }
     let (path, bytes) = read_file(shared, name)?;
     if !is_stream_bytes(&bytes) {
@@ -473,10 +560,10 @@ fn load_reader(shared: &Shared, name: &str) -> HttpResult<(PathBuf, Arc<StreamRe
     let cost = bytes.len();
     let reader = Arc::new(
         StreamReader::from_bytes(bytes)
-            .map_err(|e| (400, format!("bad stream {name:?}: {e:#}")))?,
+            .map_err(|e| (parse_status(&e), format!("bad stream {name:?}: {e:#}")))?,
     );
     shared.cache.insert(key, CacheValue::Reader(reader.clone()), cost, cost);
-    Ok((path, reader, false))
+    Ok((path, stamp, reader, false))
 }
 
 fn require_served_codec(codec_id: &str) -> HttpResult<()> {
@@ -561,7 +648,7 @@ fn stream_steps(
     name: &str,
     query: &Query,
 ) -> HttpResult<(Response, &'static str)> {
-    let (_, reader, hit) = load_reader(shared, name)?;
+    let (_, _, reader, hit) = load_reader(shared, name)?;
     let n = reader.n_steps();
     let cursor = query.usize_or("cursor", 0)?.min(n);
     let limit = query.usize_or("limit", 256)?.clamp(1, 4096);
@@ -599,7 +686,7 @@ fn stream_extract(
     name: &str,
     query: &Query,
 ) -> HttpResult<(Response, &'static str)> {
-    let (path, reader, _) = load_reader(shared, name)?;
+    let (path, stamp, reader, _) = load_reader(shared, name)?;
     require_served_codec(reader.codec_id())?;
     let step = query
         .req("step")?
@@ -623,7 +710,7 @@ fn stream_extract(
     // the keyframe is the reusable prefix of every chain that starts at
     // it: cache the decoded region once, then warm requests pay only
     // the residual steps
-    let key = CacheKey::Keyframe(path, kstep, region_class(&region));
+    let key = CacheKey::Keyframe(path, stamp, kstep, region_class(&region));
     let (base, hit, kf_bytes) = match shared.cache.get(&key) {
         Some(CacheValue::Frame(f)) => (f, true, 0usize),
         _ => {
@@ -690,8 +777,12 @@ fn compress(shared: &Shared, query: &Query, body: &[u8]) -> HttpResult<Response>
         _ => ZfpCodec::new(cfg.clone()).compress(&field, &bound),
     })?;
     let path = shared.root.join(&name);
+    // `save` is atomic (temp + fsync + rename): a failure here leaves
+    // the previous file — and thus every stamped cache entry — intact,
+    // never a half-written archive under the final name
     internal(archive.save(&path))?;
-    // a rewritten file invalidates any cached reader/archive/keyframes
+    // drop entries for the overwritten content eagerly; the stamp baked
+    // into each key already guarantees they could never be served
     shared.cache.invalidate_file(&path);
     let stats = internal(archive_stats(&archive))?;
     Ok(Response::json(&json::obj(vec![

@@ -14,13 +14,15 @@ use std::path::Path;
 
 use crate::codec::{archive_bound, Codec, CodecBuilder, ErrorBound};
 use crate::compressor::format::{
-    parse_stream_header, parse_stream_record, STREAM_END_MAGIC, STREAM_KEY_TAG,
-    STREAM_RES_TAG, STREAM_TIDX_TAG,
+    corrupt, parse_stream_header, parse_stream_record, parse_stream_record_checked,
+    STREAM_END_MAGIC, STREAM_KEY_TAG, STREAM_RES_TAG, STREAM_TIDX_TAG, STREAM_XSUM_TAG,
+    XSUM_HEADER_KEY,
 };
 use crate::compressor::{compression_ratio, Archive};
 use crate::config::DatasetConfig;
 use crate::data::{region_tile_ids, Region};
 use crate::tensor::Tensor;
+use crate::util::crc32c;
 use crate::util::json::Value;
 use crate::Result;
 use anyhow::{ensure, Context};
@@ -69,6 +71,9 @@ pub struct StreamReader {
     codec_id: String,
     index: TimelineIndex,
     finished: bool,
+    /// Checked framing (`"xsum": 1` header): the header is pinned by an
+    /// `XSUM` record and every record carries a trailing CRC32C.
+    checked: bool,
 }
 
 impl StreamReader {
@@ -97,18 +102,35 @@ impl StreamReader {
             .as_usize()
             .filter(|&k| k >= 1)
             .ok_or_else(|| anyhow::anyhow!("stream header keyint is not a positive integer"))?;
+        // checked streams pin their header bytes under the XSUM record
+        // right after the header; step records begin past it
+        let checked = header.get(XSUM_HEADER_KEY).is_some();
+        let records_start = if checked {
+            let (tag, p, len, next) = parse_stream_record_checked(&bytes, records_start)
+                .context("stream declares checksums but its XSUM record is damaged")?;
+            if &tag != STREAM_XSUM_TAG || len != 4 {
+                return Err(corrupt("stream XSUM record malformed"));
+            }
+            let stored = u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap());
+            if crc32c::crc32c(&bytes[..records_start]) != stored {
+                return Err(corrupt("stream header checksum mismatch"));
+            }
+            next
+        } else {
+            records_start
+        };
         // prefer the sealed-stream TIDX; on any footer/index corruption
         // fall back to the recovery scan (which trusts only complete,
         // well-formed records), so a damaged seal degrades instead of
         // bricking the stream
-        let footer = Self::footer_index(&bytes, records_start).filter(|idx| {
+        let footer = Self::footer_index(&bytes, records_start, checked).filter(|idx| {
             idx.keyframe_interval as usize == keyint
                 && idx.validate(bytes.len() as u64).is_ok()
         });
         let (index, finished) = match footer {
             Some(idx) => (idx, true),
             None => {
-                let idx = Self::scan_index(&bytes, records_start, keyint);
+                let idx = Self::scan_index(&bytes, records_start, keyint, checked);
                 idx.validate(bytes.len() as u64)?;
                 (idx, false)
             }
@@ -122,12 +144,13 @@ impl StreamReader {
             codec_id,
             index,
             finished,
+            checked,
         })
     }
 
     /// The sealed-stream path: footer → `TIDX` record → timeline.
     /// `None` on any inconsistency — the caller falls back to scanning.
-    fn footer_index(bytes: &[u8], records_start: usize) -> Option<TimelineIndex> {
+    fn footer_index(bytes: &[u8], records_start: usize, checked: bool) -> Option<TimelineIndex> {
         if bytes.len() < records_start + 12 {
             return None;
         }
@@ -139,7 +162,11 @@ impl StreamReader {
         let off = usize::try_from(off)
             .ok()
             .filter(|&o| o >= records_start && o < bytes.len())?;
-        let (tag, p, len, _) = parse_stream_record(bytes, off).ok()?;
+        let (tag, p, len, _) = if checked {
+            parse_stream_record_checked(bytes, off).ok()?
+        } else {
+            parse_stream_record(bytes, off).ok()?
+        };
         if &tag != STREAM_TIDX_TAG {
             return None;
         }
@@ -148,11 +175,24 @@ impl StreamReader {
 
     /// Recovery scan: walk complete records from the header, keeping
     /// every well-formed step, stopping at the first torn or non-step
-    /// record. Never errors — a truncated tail just yields fewer steps.
-    fn scan_index(bytes: &[u8], records_start: usize, keyint: usize) -> TimelineIndex {
+    /// record. Never errors — a truncated tail just yields fewer steps,
+    /// and in a checked stream a record failing its CRC ends the scan
+    /// the same way (`cli verify` distinguishes torn from corrupt).
+    fn scan_index(
+        bytes: &[u8],
+        records_start: usize,
+        keyint: usize,
+        checked: bool,
+    ) -> TimelineIndex {
         let mut entries = Vec::new();
         let mut off = records_start;
-        while let Ok((tag, p, len, next)) = parse_stream_record(bytes, off) {
+        loop {
+            let parsed = if checked {
+                parse_stream_record_checked(bytes, off)
+            } else {
+                parse_stream_record(bytes, off)
+            };
+            let Ok((tag, p, len, next)) = parsed else { break };
             let keyframe = match &tag {
                 t if t == STREAM_KEY_TAG => true,
                 t if t == STREAM_RES_TAG => false,
@@ -190,6 +230,11 @@ impl StreamReader {
         self.finished
     }
 
+    /// Does this stream use checked (CRC-per-record) framing?
+    pub fn is_checksummed(&self) -> bool {
+        self.checked
+    }
+
     pub fn timeline(&self) -> &TimelineIndex {
         &self.index
     }
@@ -198,7 +243,8 @@ impl StreamReader {
         &self.header
     }
 
-    /// Byte offset where step records begin (just past the header).
+    /// Byte offset where step records begin — just past the header, and
+    /// in a checked stream also past the header-pinning `XSUM` record.
     pub fn records_start(&self) -> usize {
         self.records_start
     }
@@ -213,7 +259,10 @@ impl StreamReader {
         self.index.keyframe_for(step)
     }
 
-    /// Parse the embedded archive of one step.
+    /// Parse the embedded archive of one step. In a checked stream the
+    /// record's CRC is verified first (lazily, per access), so a flipped
+    /// byte in a sealed stream surfaces as typed corruption even though
+    /// the timeline index loaded without walking the records.
     pub fn step_archive(&self, step: usize) -> Result<Archive> {
         let e = self
             .index
@@ -221,6 +270,20 @@ impl StreamReader {
             .get(step)
             .ok_or_else(|| anyhow::anyhow!("step {step} out of range ({} steps)", self.n_steps()))?;
         let (off, len) = (e.offset as usize, e.len as usize);
+        if self.checked {
+            let rec = off
+                .checked_sub(12)
+                .ok_or_else(|| corrupt(format!("step {step} record offset inside header")))?;
+            let crc_end = off + len + 4;
+            if self.bytes.len() < crc_end {
+                return Err(corrupt(format!("step {step} record checksum truncated")));
+            }
+            let stored =
+                u32::from_le_bytes(self.bytes[off + len..crc_end].try_into().unwrap());
+            if crc32c::crc32c(&self.bytes[rec..off + len]) != stored {
+                return Err(corrupt(format!("step {step} record failed its checksum")));
+            }
+        }
         Archive::from_bytes(&self.bytes[off..off + len])
             .with_context(|| format!("parsing step {step} archive"))
     }

@@ -21,15 +21,23 @@ use std::path::{Path, PathBuf};
 
 use crate::codec::{Codec, ErrorBound};
 use crate::compressor::format::{
-    stream_header_bytes, stream_record_bytes, STREAM_END_MAGIC, STREAM_KEY_TAG,
-    STREAM_RES_TAG, STREAM_TIDX_TAG,
+    stream_header_bytes, stream_record_bytes, stream_record_bytes_checked,
+    STREAM_END_MAGIC, STREAM_KEY_TAG, STREAM_RES_TAG, STREAM_TIDX_TAG, STREAM_XSUM_TAG,
+    XSUM_HEADER_KEY,
 };
 use crate::config::DatasetConfig;
 use crate::engine::Executor;
 use crate::tensor::Tensor;
-use crate::util::json;
+use crate::util::{crc32c, durable, json};
 use crate::Result;
 use anyhow::{ensure, Context};
+
+/// Failpoint covering every byte this writer puts on disk (header,
+/// records, index, footer) — `ATTN_FAILPOINT="stream.write=after:N"`
+/// tears the stream N bytes in; `after:N:exit:C` kills the process
+/// there, which is how the crash-recovery suite simulates kill -9
+/// mid-append.
+pub const FP_STREAM_WRITE: &str = "stream.write";
 
 use super::residual::{encode_chain, EncodedStep};
 use super::timeline::{StepEntry, TimelineIndex};
@@ -71,6 +79,11 @@ pub struct StreamWriter {
     /// exactly when the next step is a keyframe.
     prev_recon: Option<Tensor>,
     offset: u64,
+    /// Checked framing: records carry a trailing CRC32C and the header
+    /// is covered by an `XSUM` record. True for every stream `create`
+    /// writes; reopened legacy streams keep their original framing so
+    /// one file never mixes record layouts.
+    checked: bool,
 }
 
 impl StreamWriter {
@@ -97,11 +110,19 @@ impl StreamWriter {
             ("bound", bound.to_json()),
             ("dataset", dataset.to_json()),
             ("keyint", json::num(keyint as f64)),
+            (XSUM_HEADER_KEY, json::num(1.0)),
         ]);
         let bytes = stream_header_bytes(&header);
         let mut file = std::fs::File::create(&path)
             .with_context(|| format!("creating stream {}", path.display()))?;
-        file.write_all(&bytes)?;
+        durable::write_all_hooked(&mut file, FP_STREAM_WRITE, &bytes)?;
+        // the XSUM record pins the header bytes under a CRC; step records
+        // follow it, each carrying its own trailing CRC
+        let xsum =
+            stream_record_bytes_checked(STREAM_XSUM_TAG, &crc32c::crc32c(&bytes).to_le_bytes());
+        durable::write_all_hooked(&mut file, FP_STREAM_WRITE, &xsum)?;
+        file.sync_all()
+            .with_context(|| format!("fsyncing stream {}", path.display()))?;
         Ok(Self {
             file,
             path,
@@ -112,7 +133,8 @@ impl StreamWriter {
             entries: Vec::new(),
             payload_bytes: 0,
             prev_recon: None,
-            offset: bytes.len() as u64,
+            offset: (bytes.len() + xsum.len()) as u64,
+            checked: true,
         })
     }
 
@@ -158,10 +180,13 @@ impl StreamWriter {
             .map(|s| Ok(reader.step_archive(s)?.cr_payload_bytes()))
             .sum::<Result<usize>>()?;
         // truncate to the end of the last complete step record — drops
-        // any index/footer (rewritten on finish) and any torn record
+        // any index/footer (rewritten on finish) and any torn record;
+        // checked records end 4 bytes past the payload (trailing CRC)
+        let checked = reader.is_checksummed();
+        let crc_len = if checked { 4 } else { 0 };
         let end = entries
             .last()
-            .map(|e| e.offset + e.len)
+            .map(|e| e.offset + e.len + crc_len)
             .unwrap_or_else(|| reader.records_start() as u64);
         let dataset = reader.dataset().clone();
         let bound = reader.bound();
@@ -185,6 +210,7 @@ impl StreamWriter {
             payload_bytes,
             prev_recon,
             offset: end,
+            checked,
         })
     }
 
@@ -229,8 +255,12 @@ impl StreamWriter {
         let mut out = Vec::with_capacity(steps.len());
         for s in steps {
             let tag = if s.keyframe { STREAM_KEY_TAG } else { STREAM_RES_TAG };
-            let record = stream_record_bytes(tag, &s.bytes);
-            self.file.write_all(&record)?;
+            let record = if self.checked {
+                stream_record_bytes_checked(tag, &s.bytes)
+            } else {
+                stream_record_bytes(tag, &s.bytes)
+            };
+            durable::write_all_hooked(&mut self.file, FP_STREAM_WRITE, &record)?;
             self.entries.push(StepEntry {
                 keyframe: s.keyframe,
                 offset: self.offset + 12,
@@ -326,13 +356,20 @@ impl StreamWriter {
             entries: self.entries.clone(),
         };
         let tidx_offset = self.offset;
-        let record = stream_record_bytes(STREAM_TIDX_TAG, &index.to_bytes());
-        self.file.write_all(&record)?;
+        let record = if self.checked {
+            stream_record_bytes_checked(STREAM_TIDX_TAG, &index.to_bytes())
+        } else {
+            stream_record_bytes(STREAM_TIDX_TAG, &index.to_bytes())
+        };
+        durable::write_all_hooked(&mut self.file, FP_STREAM_WRITE, &record)?;
         let mut footer = Vec::with_capacity(12);
         footer.extend_from_slice(&tidx_offset.to_le_bytes());
         footer.extend_from_slice(STREAM_END_MAGIC);
-        self.file.write_all(&footer)?;
+        durable::write_all_hooked(&mut self.file, FP_STREAM_WRITE, &footer)?;
         self.file.flush()?;
+        self.file
+            .sync_all()
+            .with_context(|| format!("fsyncing stream {}", self.path.display()))?;
         let file_bytes = self.offset + record.len() as u64 + 12;
         Ok(StreamSummary {
             steps: self.entries.len(),

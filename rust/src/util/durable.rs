@@ -1,0 +1,182 @@
+//! Crash-safe persistence: every archive/stream/CLI output funnels
+//! through [`write_atomic`], so a final filename always names complete
+//! bytes.
+//!
+//! The sequence is the classic temp-in-dir protocol: write to a
+//! same-directory temp file, `fsync` it, `rename(2)` over the final
+//! name, then `fsync` the parent directory so the rename itself is
+//! durable. A crash at any point leaves either the old file (or
+//! nothing) under the final name — never a torn prefix. Each step
+//! carries a [`failpoint`](crate::util::failpoint) hook
+//! (`durable.write`, `durable.fsync`, `durable.rename`,
+//! `durable.dir_fsync`) so `tests/crash_recovery.rs` can prove that
+//! claim byte-by-byte, and outcomes are counted in
+//! `attn_durable_writes_total{outcome=...}`.
+
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::failpoint::{self, Consume};
+use crate::Result;
+use anyhow::Context;
+
+/// Failpoint names, public so tests spell them consistently.
+pub const FP_WRITE: &str = "durable.write";
+pub const FP_FSYNC: &str = "durable.fsync";
+pub const FP_RENAME: &str = "durable.rename";
+pub const FP_DIR_FSYNC: &str = "durable.dir_fsync";
+
+/// Write `bytes` through a failpoint-instrumented `write_all`: a torn
+/// budget lands the partial prefix on disk (flushed to the OS) before
+/// the injected failure fires — exactly the state a crash between two
+/// `write(2)` calls leaves behind.
+pub fn write_all_hooked(f: &mut std::fs::File, name: &str, bytes: &[u8]) -> std::io::Result<()> {
+    match failpoint::consume(name, bytes.len()) {
+        Consume::Pass => f.write_all(bytes),
+        Consume::Partial(n) => {
+            let _ = f.write_all(&bytes[..n]);
+            let _ = f.sync_data();
+            Err(failpoint::trigger(name))
+        }
+    }
+}
+
+/// `fsync` a directory so a rename inside it survives power loss.
+/// Platforms where directories cannot be opened/synced (non-POSIX)
+/// degrade to a no-op rather than failing the write.
+pub fn fsync_dir(dir: &Path) -> std::io::Result<()> {
+    failpoint::hit(FP_DIR_FSYNC)?;
+    match std::fs::File::open(dir) {
+        Ok(f) => f.sync_all(),
+        Err(_) => Ok(()),
+    }
+}
+
+/// A collision-free same-directory temp name for `path`.
+fn temp_sibling(path: &Path) -> std::path::PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let file = path.file_name().map(|s| s.to_string_lossy()).unwrap_or_default();
+    path.with_file_name(format!(".{file}.tmp-{}-{n}", std::process::id()))
+}
+
+/// Atomically persist `bytes` at `path`: temp file in the same
+/// directory → write → fsync → rename → fsync the directory. On any
+/// failure the temp file is removed and the final name is untouched
+/// (the previous file, if any, survives intact). Parent directories
+/// are created as needed.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = temp_sibling(path);
+    let result = (|| -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating temp file {}", tmp.display()))?;
+        write_all_hooked(&mut f, FP_WRITE, bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        failpoint::hit(FP_FSYNC)
+            .and_then(|()| f.sync_all())
+            .with_context(|| format!("fsyncing {}", tmp.display()))?;
+        drop(f);
+        failpoint::hit(FP_RENAME)
+            .map_err(anyhow::Error::from)
+            .and_then(|()| {
+                std::fs::rename(&tmp, path).map_err(anyhow::Error::from)
+            })
+            .with_context(|| {
+                format!("renaming {} -> {}", tmp.display(), path.display())
+            })?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fsync_dir(dir)
+                    .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+            }
+        }
+        Ok(())
+    })();
+    match result {
+        Ok(()) => {
+            crate::obs::durable_write("committed");
+            Ok(())
+        }
+        Err(e) => {
+            let _ = std::fs::remove_file(&tmp);
+            crate::obs::durable_write("failed");
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::failpoint::tests::test_lock;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("attn_durable_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_land_complete_and_overwrite_atomically() {
+        let _g = test_lock();
+        failpoint::disarm_all();
+        let d = tmp_dir("ok");
+        let p = d.join("a.bin");
+        write_atomic(&p, b"first version").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first version");
+        write_atomic(&p, b"second").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second");
+        // no temp litter
+        assert_eq!(std::fs::read_dir(&d).unwrap().count(), 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn failed_write_leaves_the_old_file_and_no_temp() {
+        let _g = test_lock();
+        failpoint::disarm_all();
+        let d = tmp_dir("torn");
+        let p = d.join("a.bin");
+        write_atomic(&p, b"stable contents").unwrap();
+        for spec in ["after:4", "error"] {
+            failpoint::arm(FP_WRITE, spec).unwrap();
+            let err = write_atomic(&p, b"replacement that tears").unwrap_err();
+            failpoint::disarm_all();
+            assert!(err.to_string().contains("writing"), "{err:#}");
+            assert_eq!(std::fs::read(&p).unwrap(), b"stable contents", "{spec}");
+            assert_eq!(std::fs::read_dir(&d).unwrap().count(), 1, "temp cleaned ({spec})");
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn fsync_and_rename_failures_never_tear_the_final_name() {
+        let _g = test_lock();
+        failpoint::disarm_all();
+        let d = tmp_dir("fsync");
+        let p = d.join("a.bin");
+        for fp in [FP_FSYNC, FP_RENAME] {
+            failpoint::arm(fp, "error").unwrap();
+            assert!(write_atomic(&p, b"never visible").is_err());
+            failpoint::disarm_all();
+            assert!(!p.exists(), "{fp}: final name must stay absent");
+            assert_eq!(std::fs::read_dir(&d).unwrap().count(), 0, "{fp}: temp cleaned");
+        }
+        // a dir-fsync failure happens after the rename: the file is
+        // complete under its final name, the caller just learns the
+        // rename may not be durable yet
+        failpoint::arm(FP_DIR_FSYNC, "error").unwrap();
+        assert!(write_atomic(&p, b"complete").is_err());
+        failpoint::disarm_all();
+        assert_eq!(std::fs::read(&p).unwrap(), b"complete");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

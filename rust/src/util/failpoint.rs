@@ -1,0 +1,269 @@
+//! Deterministic fault injection for the durability layer.
+//!
+//! A *failpoint* is a named hook compiled into a write path
+//! (`durable.write`, `stream.record`, `durable.fsync`, ...). Unarmed
+//! hooks cost one relaxed atomic load. Armed hooks simulate the crash
+//! and media failures `tests/crash_recovery.rs` sweeps:
+//!
+//! - `error` — the operation fails immediately (fsync/rename refusal);
+//! - `exit:CODE` — the process exits on the spot (kill -9 mid-write:
+//!   bytes written so far are in the page cache, nothing after them);
+//! - `after:N` — the next `N` bytes succeed, then the write tears:
+//!   the budget-crossing write lands **partially** (a short write)
+//!   before the failure triggers, so the on-disk state is a torn
+//!   prefix, exactly like a crash between two `write(2)` calls;
+//! - `after:N:exit:CODE` — torn prefix, then process exit.
+//!
+//! Arming is either programmatic (tests in the same process:
+//! [`arm`]/[`disarm`]/[`disarm_all`]) or inherited from the
+//! environment: `ATTN_FAILPOINT="name=spec;name2=spec2"` — the
+//! subprocess path, which is how the kill-9 smoke drives a real CLI
+//! run to death mid-append.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// What an armed failpoint does once it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fire {
+    /// Return an `io::Error` from the hook.
+    Error,
+    /// `std::process::exit(code)` — no unwinding, no cleanup.
+    Exit(i32),
+}
+
+#[derive(Debug)]
+struct Armed {
+    /// Bytes the hook still lets through before firing (`u64::MAX`
+    /// means "fire on the very next hit, byte budget irrelevant").
+    remaining: u64,
+    fire: Fire,
+}
+
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+    static REG: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Parse one `spec` (`error` | `exit:C` | `after:N` | `after:N:exit:C`).
+fn parse_spec(spec: &str) -> Result<Armed, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts.as_slice() {
+        ["error"] => Ok(Armed { remaining: 0, fire: Fire::Error }),
+        ["exit", c] => c
+            .parse()
+            .map(|code| Armed { remaining: 0, fire: Fire::Exit(code) })
+            .map_err(|_| format!("bad exit code in failpoint spec {spec:?}")),
+        ["after", n] => n
+            .parse()
+            .map(|remaining| Armed { remaining, fire: Fire::Error })
+            .map_err(|_| format!("bad byte budget in failpoint spec {spec:?}")),
+        ["after", n, "exit", c] => {
+            let remaining = n
+                .parse()
+                .map_err(|_| format!("bad byte budget in failpoint spec {spec:?}"))?;
+            let code = c
+                .parse()
+                .map_err(|_| format!("bad exit code in failpoint spec {spec:?}"))?;
+            Ok(Armed { remaining, fire: Fire::Exit(code) })
+        }
+        _ => Err(format!("unknown failpoint spec {spec:?}")),
+    }
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        let Ok(val) = std::env::var("ATTN_FAILPOINT") else {
+            return;
+        };
+        let mut reg = registry().lock().unwrap();
+        for pair in val.split(';').filter(|p| !p.is_empty()) {
+            let Some((name, spec)) = pair.split_once('=') else {
+                eprintln!("failpoint: ignoring malformed ATTN_FAILPOINT entry {pair:?}");
+                continue;
+            };
+            match parse_spec(spec.trim()) {
+                Ok(armed) => {
+                    reg.insert(name.trim().to_string(), armed);
+                }
+                Err(e) => eprintln!("failpoint: {e}"),
+            }
+        }
+        if !reg.is_empty() {
+            ANY_ARMED.store(true, Ordering::SeqCst);
+        }
+    });
+}
+
+/// Arm failpoint `name` with `spec` (test use — same grammar as the
+/// `ATTN_FAILPOINT` env var).
+pub fn arm(name: &str, spec: &str) -> crate::Result<()> {
+    init_from_env();
+    let armed = parse_spec(spec).map_err(|e| anyhow::anyhow!(e))?;
+    registry().lock().unwrap().insert(name.to_string(), armed);
+    ANY_ARMED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Disarm failpoint `name` (no-op when it was never armed).
+pub fn disarm(name: &str) {
+    init_from_env();
+    let mut reg = registry().lock().unwrap();
+    reg.remove(name);
+    if reg.is_empty() {
+        ANY_ARMED.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Disarm everything (test teardown).
+pub fn disarm_all() {
+    init_from_env();
+    registry().lock().unwrap().clear();
+    ANY_ARMED.store(false, Ordering::SeqCst);
+}
+
+fn fire(name: &str, fire: Fire) -> std::io::Error {
+    match fire {
+        Fire::Error => std::io::Error::other(format!("failpoint {name:?} injected failure")),
+        Fire::Exit(code) => {
+            eprintln!("failpoint {name:?}: exiting with code {code}");
+            std::process::exit(code);
+        }
+    }
+}
+
+/// Non-byte hook (fsync, rename): fails/exits when `name` is armed
+/// with an exhausted budget; passes otherwise. A still-positive
+/// `after:N` budget does not fire here — byte budgets belong to
+/// [`consume`] hooks.
+pub fn hit(name: &str) -> std::io::Result<()> {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        init_from_env();
+        if !ANY_ARMED.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+    }
+    let mut reg = registry().lock().unwrap();
+    match reg.get_mut(name) {
+        Some(armed) if armed.remaining == 0 => {
+            let f = armed.fire;
+            drop(reg);
+            Err(fire(name, f))
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Outcome of a byte-budget check before writing `len` bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Consume {
+    /// Write all `len` bytes normally.
+    Pass,
+    /// Write only the first `n` bytes (torn prefix), then call
+    /// [`trigger`] to fail or exit.
+    Partial(usize),
+}
+
+/// Byte hook: account `len` bytes against `name`'s budget. `Pass` when
+/// unarmed or the budget covers the write; `Partial(n)` when the write
+/// crosses the budget boundary (`n` may be 0 — the write tears at its
+/// first byte).
+pub fn consume(name: &str, len: usize) -> Consume {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        init_from_env();
+        if !ANY_ARMED.load(Ordering::Relaxed) {
+            return Consume::Pass;
+        }
+    }
+    let mut reg = registry().lock().unwrap();
+    match reg.get_mut(name) {
+        Some(armed) => {
+            if (len as u64) <= armed.remaining {
+                armed.remaining -= len as u64;
+                Consume::Pass
+            } else {
+                let n = armed.remaining as usize;
+                armed.remaining = 0;
+                Consume::Partial(n)
+            }
+        }
+        None => Consume::Pass,
+    }
+}
+
+/// Fire `name` after a [`Consume::Partial`] write landed: returns the
+/// injected error, or exits the process (kill -9 simulation).
+pub fn trigger(name: &str) -> std::io::Error {
+    let f = registry()
+        .lock()
+        .unwrap()
+        .get(name)
+        .map(|a| a.fire)
+        .unwrap_or(Fire::Error);
+    fire(name, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // failpoint state is process-global; tests that arm it serialize
+    // through this lock so `cargo test`'s parallelism can't interleave
+    pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn unarmed_hooks_pass() {
+        let _g = test_lock();
+        disarm_all();
+        assert!(hit("nope").is_ok());
+        assert_eq!(consume("nope", 100), Consume::Pass);
+    }
+
+    #[test]
+    fn error_spec_fires_on_hit() {
+        let _g = test_lock();
+        disarm_all();
+        arm("x", "error").unwrap();
+        assert!(hit("x").is_err());
+        assert!(hit("other").is_ok(), "only the armed name fires");
+        disarm("x");
+        assert!(hit("x").is_ok());
+    }
+
+    #[test]
+    fn byte_budget_tears_exactly_at_the_boundary() {
+        let _g = test_lock();
+        disarm_all();
+        arm("w", "after:10").unwrap();
+        assert_eq!(consume("w", 4), Consume::Pass);
+        assert_eq!(consume("w", 6), Consume::Pass);
+        assert_eq!(consume("w", 5), Consume::Partial(0), "budget exhausted");
+        assert!(hit("w").is_err(), "exhausted budget also fails plain hits");
+        disarm_all();
+
+        arm("w", "after:10").unwrap();
+        assert_eq!(consume("w", 7), Consume::Pass);
+        assert_eq!(consume("w", 7), Consume::Partial(3), "short write of 3");
+        let err = trigger("w");
+        assert!(err.to_string().contains("injected"), "{err}");
+        disarm_all();
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let _g = test_lock();
+        disarm_all();
+        assert!(arm("x", "afterwards").is_err());
+        assert!(arm("x", "after:abc").is_err());
+        assert!(arm("x", "exit:none").is_err());
+        assert!(arm("x", "after:3:exit:zz").is_err());
+        assert!(hit("x").is_ok(), "failed arm leaves the hook unarmed");
+    }
+}

@@ -7,6 +7,9 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc32c;
+pub mod durable;
+pub mod failpoint;
 pub mod json;
 pub mod parallel;
 pub mod propgen;

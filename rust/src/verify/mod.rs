@@ -1,0 +1,468 @@
+//! `cli verify` — offline fsck over a tree of archives and streams.
+//!
+//! Walks a root directory, classifies every file by magic (`ARDC`
+//! archive / `TSTR` stream — anything else is ignored, a data root
+//! holds raw fields too), and validates framing, checksums, block
+//! indices, and timelines:
+//!
+//! * **archives** are atomic: they either parse fully (XSUM trailer
+//!   verified when the header declares one, strict trailing-byte check
+//!   otherwise) or they are corrupt. There is nothing to repair — a
+//!   damaged archive is quarantined under `--repair`.
+//! * **streams** are append-only, so damage has structure: a *torn
+//!   tail* (crash mid-append, or a broken seal) is recoverable by
+//!   truncating to the end of the last complete, well-formed step
+//!   record — exactly what [`crate::stream::StreamWriter::reopen`]
+//!   would keep. `--repair` performs that truncation (fsynced). A
+//!   stream whose header or header-pinning `XSUM` record is damaged
+//!   has no trustworthy framing at all and is quarantined.
+//!
+//! Default mode is strictly read-only — CI runs `cli verify --root
+//! tests/golden` and then asserts the corpus is byte-identical.
+//! Quarantine renames `f` to `f.quarantine` in place (same directory,
+//! nothing deleted); `.quarantine` files and dotfiles (including the
+//! durability layer's temp siblings) are skipped on later runs.
+
+use std::path::{Path, PathBuf};
+
+use crate::compressor::format::{
+    parse_stream_header, parse_stream_record, parse_stream_record_checked, STREAM_KEY_TAG,
+    STREAM_MAGIC, STREAM_RES_TAG, STREAM_TIDX_TAG, STREAM_XSUM_TAG, XSUM_HEADER_KEY,
+};
+use crate::compressor::Archive;
+use crate::stream::TimelineIndex;
+use crate::util::{crc32c, durable};
+use crate::Result;
+use anyhow::Context;
+
+const ARCHIVE_MAGIC: &[u8; 4] = b"ARDC";
+
+/// What verification concluded about one file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Status {
+    Clean,
+    /// The file is valid up to `recover_len` bytes (the end of the last
+    /// complete step record); everything after is a torn or damaged
+    /// tail that truncation repairs.
+    Torn { recover_len: u64, steps_kept: usize, tail_bytes: usize },
+    /// No recoverable structure (or an atomic archive that failed) —
+    /// quarantined under `--repair`.
+    Corrupt(String),
+}
+
+/// What `--repair` did to the file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    None,
+    Repaired,
+    Quarantined(PathBuf),
+    /// Repair was attempted but failed (I/O error) — reported, file
+    /// left as-is.
+    Failed(String),
+}
+
+#[derive(Debug)]
+pub struct FileReport {
+    pub path: PathBuf,
+    /// "archive" | "stream".
+    pub kind: &'static str,
+    /// Human summary: version, checksumming, step counts.
+    pub detail: String,
+    pub status: Status,
+    pub action: Action,
+}
+
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    pub files: Vec<FileReport>,
+    pub clean: usize,
+    pub torn: usize,
+    pub corrupt: usize,
+    pub repaired: usize,
+    pub quarantined: usize,
+}
+
+impl VerifyReport {
+    /// Everything either verified clean or was repaired back to clean.
+    pub fn all_ok(&self) -> bool {
+        self.files.iter().all(|f| {
+            matches!(f.status, Status::Clean) || matches!(f.action, Action::Repaired)
+        })
+    }
+}
+
+/// Deep-check one archive: full parse (XSUM verified when declared,
+/// strict trailing bytes otherwise), block-index parse, and for v2
+/// containers a recursive check of every embedded field archive.
+fn check_archive(bytes: &[u8]) -> Result<String> {
+    let a = Archive::from_bytes(bytes)?;
+    if a.version() == 2 {
+        for i in 0..a.field_count() {
+            let sub = a.field_archive(i).with_context(|| format!("field {i}"))?;
+            sub.block_index().with_context(|| format!("field {i} block index"))?;
+        }
+    } else {
+        a.block_index()?;
+    }
+    Ok(format!(
+        "v{}{}, {} sections",
+        a.version(),
+        if a.checksummed() { ", checksummed" } else { "" },
+        a.section_sizes().len()
+    ))
+}
+
+/// Walk one stream's records and classify it. Returns `(detail,
+/// status)` — never errors: every failure mode maps to a [`Status`].
+fn check_stream(bytes: &[u8]) -> (String, Status) {
+    let (header, hdr_end) = match parse_stream_header(bytes) {
+        Ok(v) => v,
+        Err(e) => return ("stream".into(), Status::Corrupt(format!("{e:#}"))),
+    };
+    let keyint = match header.get("keyint").and_then(|v| v.as_usize()).filter(|&k| k >= 1) {
+        Some(k) => k,
+        None => {
+            return ("stream".into(), Status::Corrupt("header keyint missing or invalid".into()))
+        }
+    };
+    let checked = header.get(XSUM_HEADER_KEY).is_some();
+    let detail_base = if checked { "stream, checksummed" } else { "stream" };
+    // a checked stream's header is pinned by the XSUM record; if that
+    // fails there is no trustworthy framing to recover from
+    let mut off = hdr_end;
+    if checked {
+        match parse_stream_record_checked(bytes, off) {
+            Ok((tag, p, len, next)) if &tag == STREAM_XSUM_TAG && len == 4 => {
+                let stored = u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap());
+                if crc32c::crc32c(&bytes[..hdr_end]) != stored {
+                    return (
+                        detail_base.into(),
+                        Status::Corrupt("header checksum mismatch".into()),
+                    );
+                }
+                off = next;
+            }
+            _ => {
+                return (
+                    detail_base.into(),
+                    Status::Corrupt("header XSUM record missing or damaged".into()),
+                )
+            }
+        }
+    }
+    let parse = |off: usize| {
+        if checked {
+            parse_stream_record_checked(bytes, off)
+        } else {
+            parse_stream_record(bytes, off)
+        }
+    };
+    let mut steps = 0usize;
+    let torn = |at: usize, steps: usize| Status::Torn {
+        recover_len: at as u64,
+        steps_kept: steps,
+        tail_bytes: bytes.len() - at,
+    };
+    loop {
+        let Ok((tag, p, len, next)) = parse(off) else {
+            // torn tail: truncation mid-record, or (checked) a record
+            // failing its CRC — either way the file is good up to `off`
+            break if off == bytes.len() {
+                (format!("{detail_base}, {steps} steps, unsealed"), Status::Clean)
+            } else {
+                (format!("{detail_base}, {steps} steps"), torn(off, steps))
+            };
+        };
+        let keyframe = match &tag {
+            t if t == STREAM_KEY_TAG => true,
+            t if t == STREAM_RES_TAG => false,
+            t if t == STREAM_TIDX_TAG => {
+                // candidate seal: exactly TIDX + 12-byte footer ending
+                // the file, the footer pointing back at this record,
+                // and a timeline consistent with the records walked
+                let sealed = bytes.len() == next + 12
+                    && &bytes[next + 8..next + 12] == b"TEND"
+                    && u64::from_le_bytes(bytes[next..next + 8].try_into().unwrap())
+                        == off as u64
+                    && TimelineIndex::from_bytes(&bytes[p..p + len])
+                        .map(|idx| {
+                            idx.keyframe_interval as usize == keyint
+                                && idx.n_steps() == steps
+                                && idx.validate(bytes.len() as u64).is_ok()
+                        })
+                        .unwrap_or(false);
+                break if sealed {
+                    (format!("{detail_base}, {steps} steps, sealed"), Status::Clean)
+                } else {
+                    // broken seal: the steps are fine — truncating to
+                    // the start of the TIDX record re-opens the stream
+                    (format!("{detail_base}, {steps} steps"), torn(off, steps))
+                };
+            }
+            // an unknown record tag mid-stream: nothing after it is
+            // trustworthy, the steps before it are
+            _ => break (format!("{detail_base}, {steps} steps"), torn(off, steps)),
+        };
+        if steps == 0 && !keyframe {
+            break (
+                detail_base.into(),
+                Status::Corrupt("step 0 is not a keyframe".into()),
+            );
+        }
+        // each step embeds a complete archive; in legacy (un-CRC'd)
+        // streams this parse is the only integrity check there is —
+        // a bad step archive truncates the stream just before it
+        if Archive::from_bytes(&bytes[p..p + len]).is_err() {
+            break (format!("{detail_base}, {steps} steps"), torn(off, steps));
+        }
+        steps += 1;
+        off = next;
+    }
+}
+
+/// Verify one file in place (read-only). `None` when the file is not a
+/// container this repo owns (wrong magic, unreadable, dotfile).
+pub fn verify_file(path: &Path) -> Option<FileReport> {
+    let name = path.file_name()?.to_string_lossy().into_owned();
+    if name.starts_with('.') || name.ends_with(".quarantine") {
+        return None;
+    }
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() < 4 {
+        return None;
+    }
+    let (kind, detail, status) = if &bytes[0..4] == ARCHIVE_MAGIC {
+        match check_archive(&bytes) {
+            Ok(detail) => ("archive", detail, Status::Clean),
+            Err(e) => ("archive", "archive".to_string(), Status::Corrupt(format!("{e:#}"))),
+        }
+    } else if &bytes[0..4] == STREAM_MAGIC {
+        let (detail, status) = check_stream(&bytes);
+        ("stream", detail, status)
+    } else {
+        return None;
+    };
+    Some(FileReport { path: path.to_path_buf(), kind, detail, status, action: Action::None })
+}
+
+fn apply_repair(report: &mut FileReport) {
+    match &report.status {
+        Status::Clean => {}
+        Status::Torn { recover_len, .. } => {
+            let res = (|| -> std::io::Result<()> {
+                let f = std::fs::OpenOptions::new().write(true).open(&report.path)?;
+                f.set_len(*recover_len)?;
+                f.sync_all()?;
+                if let Some(dir) = report.path.parent() {
+                    durable::fsync_dir(dir)?;
+                }
+                Ok(())
+            })();
+            report.action = match res {
+                Ok(()) => Action::Repaired,
+                Err(e) => Action::Failed(e.to_string()),
+            };
+        }
+        Status::Corrupt(_) => {
+            let mut q = report.path.as_os_str().to_os_string();
+            q.push(".quarantine");
+            let q = PathBuf::from(q);
+            report.action = match std::fs::rename(&report.path, &q) {
+                Ok(()) => Action::Quarantined(q),
+                Err(e) => Action::Failed(e.to_string()),
+            };
+        }
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .collect::<std::io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Verify every archive/stream under `root` (deterministic order).
+/// With `repair`, torn streams are truncated to their last complete
+/// record and unrecoverable files are quarantined; without it the walk
+/// is strictly read-only.
+pub fn verify_root(root: &Path, repair: bool) -> Result<VerifyReport> {
+    let mut paths = Vec::new();
+    if root.is_dir() {
+        walk(root, &mut paths)?;
+    } else {
+        paths.push(root.to_path_buf());
+    }
+    let mut report = VerifyReport::default();
+    for p in paths {
+        let Some(mut file) = verify_file(&p) else { continue };
+        match &file.status {
+            Status::Clean => report.clean += 1,
+            Status::Torn { .. } => report.torn += 1,
+            Status::Corrupt(_) => report.corrupt += 1,
+        }
+        if repair {
+            apply_repair(&mut file);
+            match &file.action {
+                Action::Repaired => report.repaired += 1,
+                Action::Quarantined(_) => report.quarantined += 1,
+                _ => {}
+            }
+        }
+        report.files.push(file);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::format::stream_record_bytes;
+    use crate::util::json;
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("attn_verify_{name}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn small_archive() -> Archive {
+        let mut a = Archive::new(json::obj(vec![("codec", json::s("sz3"))]));
+        a.add_section("SZ3B", vec![1, 2, 3, 4]);
+        a
+    }
+
+    #[test]
+    fn clean_checked_archives_verify_clean_and_stay_untouched() {
+        let d = tmp_root("arch_ok");
+        let p = d.join("a.ardc");
+        small_archive().save(&p).unwrap();
+        let before = std::fs::read(&p).unwrap();
+        let rep = verify_root(&d, false).unwrap();
+        assert_eq!(rep.clean, 1);
+        assert_eq!((rep.torn, rep.corrupt), (0, 0));
+        assert!(rep.all_ok());
+        assert!(rep.files[0].detail.contains("checksummed"), "{}", rep.files[0].detail);
+        assert_eq!(std::fs::read(&p).unwrap(), before, "read-only");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn every_flip_in_a_checked_archive_is_detected_and_quarantined() {
+        let d = tmp_root("arch_flip");
+        let p = d.join("a.ardc");
+        small_archive().save(&p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0x04;
+            std::fs::write(&p, &bad).unwrap();
+            let rep = verify_root(&d, false).unwrap();
+            // a magic-byte flip makes the file unrecognizable (skipped);
+            // every other flip must classify as corrupt — never clean
+            assert_eq!(rep.clean, 0, "flip at byte {i} verified clean");
+            if i >= 4 {
+                assert_eq!(rep.corrupt, 1, "flip at byte {i} not detected");
+            }
+        }
+        std::fs::write(&p, &good).unwrap();
+        // repair mode quarantines, and a rerun skips the quarantined file
+        let mut bad = good.clone();
+        bad[good.len() - 20] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        let rep = verify_root(&d, true).unwrap();
+        assert_eq!(rep.quarantined, 1);
+        assert!(!p.exists());
+        assert!(d.join("a.ardc.quarantine").exists());
+        let rep = verify_root(&d, false).unwrap();
+        assert!(rep.files.is_empty(), "quarantined files are skipped");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn legacy_archives_and_foreign_files_are_handled() {
+        let d = tmp_root("legacy");
+        // legacy (unchecksummed) bytes written directly
+        std::fs::write(d.join("old.ardc"), small_archive().to_bytes()).unwrap();
+        // not a container: ignored entirely
+        std::fs::write(d.join("data.f32"), [0u8; 64]).unwrap();
+        std::fs::write(d.join("tiny"), [1u8; 2]).unwrap();
+        let rep = verify_root(&d, false).unwrap();
+        assert_eq!(rep.clean, 1);
+        assert_eq!(rep.files.len(), 1);
+        assert!(!rep.files[0].detail.contains("checksummed"));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    fn synth_stream(steps: usize, seal: bool) -> Vec<u8> {
+        // a hand-framed legacy (un-CRC'd) stream embedding real archives;
+        // check_stream only reads `keyint` and the xsum flag
+        let header =
+            json::obj(vec![("codec", json::s("sz3")), ("keyint", json::num(2.0))]);
+        let mut out = crate::compressor::format::stream_header_bytes(&header);
+        let mut entries = Vec::new();
+        for s in 0..steps {
+            let payload = small_archive().to_bytes();
+            let tag = if s % 2 == 0 { STREAM_KEY_TAG } else { STREAM_RES_TAG };
+            entries.push(crate::stream::StepEntry {
+                keyframe: s % 2 == 0,
+                offset: (out.len() + 12) as u64,
+                len: payload.len() as u64,
+            });
+            out.extend_from_slice(&stream_record_bytes(tag, &payload));
+        }
+        if seal {
+            let idx = TimelineIndex { keyframe_interval: 2, entries };
+            let tidx_off = out.len() as u64;
+            out.extend_from_slice(&stream_record_bytes(STREAM_TIDX_TAG, &idx.to_bytes()));
+            out.extend_from_slice(&tidx_off.to_le_bytes());
+            out.extend_from_slice(b"TEND");
+        }
+        out
+    }
+
+    #[test]
+    fn streams_classify_as_sealed_unsealed_or_torn() {
+        let d = tmp_root("streams");
+        std::fs::write(d.join("sealed.tstr"), synth_stream(3, true)).unwrap();
+        std::fs::write(d.join("unsealed.tstr"), synth_stream(3, false)).unwrap();
+        // torn: an unsealed stream cut mid-record
+        let full = synth_stream(3, false);
+        std::fs::write(d.join("torn.tstr"), &full[..full.len() - 5]).unwrap();
+        let rep = verify_root(&d, false).unwrap();
+        assert_eq!((rep.clean, rep.torn, rep.corrupt), (2, 1, 0));
+        let torn = rep.files.iter().find(|f| f.path.ends_with("torn.tstr")).unwrap();
+        let Status::Torn { steps_kept, .. } = torn.status else {
+            panic!("expected torn: {:?}", torn.status)
+        };
+        assert_eq!(steps_kept, 2);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn repair_truncates_torn_tails_back_to_clean() {
+        let d = tmp_root("repair");
+        let full = synth_stream(4, true);
+        let p = d.join("s.tstr");
+        // cut inside the seal: steps survive, the seal does not
+        std::fs::write(&p, &full[..full.len() - 3]).unwrap();
+        let rep = verify_root(&d, true).unwrap();
+        assert_eq!(rep.repaired, 1);
+        assert!(rep.all_ok());
+        // the repaired stream verifies clean (unsealed) and kept steps
+        let rep = verify_root(&d, false).unwrap();
+        assert_eq!(rep.clean, 1);
+        assert!(rep.files[0].detail.contains("4 steps"), "{}", rep.files[0].detail);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

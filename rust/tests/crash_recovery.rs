@@ -1,0 +1,233 @@
+//! Crash-recovery and fault-injection suite: the durability layer's
+//! contract, proven byte-by-byte.
+//!
+//! Three attack surfaces:
+//!
+//! 1. **Atomic saves** — `Archive::save` (and every other
+//!    `durable::write_atomic` caller, including `POST /v1/compress`)
+//!    swept with torn writes, fsync refusals and rename refusals: a
+//!    final filename must always hold complete bytes (the previous
+//!    version, or nothing for a first write) and no temp sibling may
+//!    be left behind.
+//! 2. **Kill -9 mid-append** — a real `stream append` CLI run is shot
+//!    dead by an `ATTN_FAILPOINT=stream.write=after:N:exit:42` budget
+//!    inherited through the environment. The torn stream must reopen
+//!    via the reader's recovery scan, green up under
+//!    `cli verify --repair`, and accept further appends that seal.
+//! 3. **`cli verify` exit codes** — 0 on a clean tree, non-zero while
+//!    damage exists (even after a quarantine, which is data loss),
+//!    0 again once the tree holds only clean + repaired files.
+//!
+//! Failpoint state is process-global, so every test here serializes
+//! through one file-local lock — an armed hook must never bleed into
+//! another test's writes.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Mutex;
+
+use attn_reduce::compressor::Archive;
+use attn_reduce::stream::StreamReader;
+use attn_reduce::util::durable::{FP_DIR_FSYNC, FP_FSYNC, FP_RENAME, FP_WRITE};
+use attn_reduce::util::{failpoint, json};
+use attn_reduce::verify;
+
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FP_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_attn-reduce"))
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("attn_crash_{name}"));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn small_archive() -> Archive {
+    let mut a = Archive::new(json::obj(vec![("codec", json::s("sz3"))]));
+    a.add_section("SZ3B", (0u16..600).flat_map(u16::to_le_bytes).collect());
+    a
+}
+
+#[test]
+fn injected_save_failures_never_tear_or_litter() {
+    let _g = lock();
+    failpoint::disarm_all();
+    let d = tmp_root("save_sweep");
+    let p = d.join("field.ardc");
+    let a = small_archive();
+    a.save(&p).unwrap();
+    let committed = std::fs::read(&p).unwrap();
+    let total = committed.len();
+
+    // torn writes across the file: the final name keeps the previous
+    // complete bytes and the temp sibling is cleaned up, whether the
+    // tear lands in the header, a section payload, or the XSUM trailer
+    for n in [0, 1, 7, total / 4, total / 2, total - 1] {
+        failpoint::arm(FP_WRITE, &format!("after:{n}")).unwrap();
+        let err = a.save(&p).unwrap_err();
+        failpoint::disarm_all();
+        assert!(err.to_string().contains("writing"), "budget {n}: {err:#}");
+        assert_eq!(std::fs::read(&p).unwrap(), committed, "budget {n}: final name torn");
+        assert_eq!(std::fs::read_dir(&d).unwrap().count(), 1, "budget {n}: temp litter");
+    }
+
+    // fsync / rename refusals: same contract
+    for fp in [FP_FSYNC, FP_RENAME] {
+        failpoint::arm(fp, "error").unwrap();
+        assert!(a.save(&p).is_err(), "{fp} must surface");
+        failpoint::disarm_all();
+        assert_eq!(std::fs::read(&p).unwrap(), committed, "{fp}: final name torn");
+        assert_eq!(std::fs::read_dir(&d).unwrap().count(), 1, "{fp}: temp litter");
+    }
+
+    // a first-time save that fails must leave the name absent, not a stub
+    let q = d.join("new.ardc");
+    failpoint::arm(FP_RENAME, "error").unwrap();
+    assert!(a.save(&q).is_err());
+    failpoint::disarm_all();
+    assert!(!q.exists(), "failed first save must not create the file");
+
+    // dir-fsync failure fires after the rename: the new bytes are
+    // already complete under the final name; the caller only learns the
+    // rename may not yet be durable
+    let mut b = small_archive();
+    b.add_section("EXTR", vec![9; 64]);
+    failpoint::arm(FP_DIR_FSYNC, "error").unwrap();
+    assert!(b.save(&p).is_err());
+    failpoint::disarm_all();
+    let now = std::fs::read(&p).unwrap();
+    assert_ne!(now, committed, "dir-fsync failure happens post-rename");
+    assert!(
+        Archive::from_bytes(&now).is_ok_and(|a| a.checksummed()),
+        "post-rename bytes are a complete checked archive"
+    );
+
+    // after the whole gauntlet, fsck agrees the tree is clean
+    let rep = verify::verify_root(&d, false).unwrap();
+    assert!(rep.all_ok(), "{rep:?}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn kill_nine_mid_append_leaves_a_recoverable_stream() {
+    let _g = lock();
+    let d = tmp_root("kill9");
+    let p = d.join("run.tstr");
+    let clean = d.join("clean.tstr");
+    let create = [
+        "stream", "append", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset", "e3sm",
+        "--scale", "smoke", "--keyint", "3", "--steps", "6", "--out",
+    ];
+
+    // dry run with identical parameters to learn the sealed size — the
+    // synthesized frames are closed-form in (seed, step), so the byte
+    // budget transfers exactly to the second run
+    let out = bin().args(create).arg(&clean).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let sealed_len = std::fs::metadata(&clean).unwrap().len();
+    std::fs::remove_file(&clean).unwrap();
+
+    // same run, process killed without unwinding halfway through its bytes
+    let out = bin()
+        .args(create)
+        .arg(&p)
+        .env("ATTN_FAILPOINT", format!("stream.write=after:{}:exit:42", sealed_len / 2))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(42), "{}", String::from_utf8_lossy(&out.stderr));
+    let torn_len = std::fs::metadata(&p).unwrap().len();
+    assert!(torn_len < sealed_len, "crash really tore the file ({torn_len}/{sealed_len})");
+
+    // recovery scan: the torn file opens and serves every complete step
+    let r = StreamReader::open(&p).unwrap();
+    let recovered = r.n_steps();
+    assert!((1..6).contains(&recovered), "recovered {recovered} of 6 steps");
+    assert!(!r.is_finished(), "a crashed run can never look sealed");
+    drop(r);
+
+    // fsck sees a torn tail (or a clean unsealed stream when the cut
+    // happened to land on a record boundary), never corruption, and
+    // --repair greens the tree either way
+    let rep = verify::verify_root(&d, true).unwrap();
+    assert_eq!(rep.corrupt, 0, "a kill -9 tears, it must not corrupt: {rep:?}");
+    assert!(rep.all_ok(), "repair must green the tree: {rep:?}");
+
+    // appending to the repaired file continues the chain and seals
+    let out = bin().args(["stream", "append", "--steps", "4", "--out"]).arg(&p).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let r = StreamReader::open(&p).unwrap();
+    assert!(r.is_finished(), "resumed stream seals normally");
+    assert_eq!(r.n_steps(), recovered + 4, "append continued at the recovered step");
+    let mut builder = attn_reduce::codec::CodecBuilder::new();
+    let c = r.build_codec(&mut builder).unwrap();
+    let t = r.frame(&*c, r.n_steps() - 1).unwrap();
+    assert_eq!(t.shape(), r.dataset().dims.as_slice(), "post-crash steps decode");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn cli_verify_exit_codes_and_repair_flow() {
+    let _g = lock();
+    let d = tmp_root("fsck_cli");
+    let s = d.join("run.tstr");
+    let out = bin()
+        .args([
+            "stream", "append", "--codec", "sz3", "--bound", "nrmse:1e-3", "--dataset", "e3sm",
+            "--scale", "smoke", "--keyint", "2", "--steps", "4", "--out",
+        ])
+        .arg(&s)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let a = d.join("field.ardc");
+    small_archive().save(&a).unwrap();
+
+    // clean tree → exit 0
+    let out = bin().args(["verify", "--root"]).arg(&d).output().unwrap();
+    assert!(out.status.success(), "clean tree: {}", String::from_utf8_lossy(&out.stdout));
+
+    // damage both: tear the sealed stream mid-final-record, flip one
+    // payload byte in the checked archive
+    let bytes = std::fs::read(&s).unwrap();
+    let last = *StreamReader::from_bytes(bytes.clone()).unwrap().timeline().entries.last().unwrap();
+    let cut = (last.offset + last.len / 2) as usize;
+    std::fs::write(&s, &bytes[..cut]).unwrap();
+    let mut ab = std::fs::read(&a).unwrap();
+    let mid = ab.len() / 2;
+    ab[mid] ^= 0x20;
+    std::fs::write(&a, &ab).unwrap();
+
+    // read-only verify: non-zero exit, both files called out, nothing touched
+    let out = bin().args(["verify", "--root"]).arg(&d).output().unwrap();
+    assert!(!out.status.success(), "damaged tree must fail");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("TORN"), "{stdout}");
+    assert!(stdout.contains("CORRUPT"), "{stdout}");
+    assert_eq!(std::fs::read(&s).unwrap().len(), cut, "read-only mode must not modify files");
+    assert!(a.exists(), "read-only mode must not quarantine");
+
+    // --repair: torn stream truncated back to its complete prefix, the
+    // unrecoverable archive quarantined — which is data loss, so the
+    // exit code still reports damage
+    let out = bin().args(["verify", "--repair", "--root"]).arg(&d).output().unwrap();
+    assert!(!out.status.success(), "quarantine still reports damage");
+    assert!(d.join("field.ardc.quarantine").exists(), "archive moved aside");
+    assert!(!a.exists());
+    let r = StreamReader::open(&s).unwrap();
+    assert!(!r.is_finished(), "repair leaves an unsealed, appendable stream");
+    assert_eq!(r.n_steps(), 3, "torn step dropped, complete steps kept");
+    drop(r);
+
+    // second pass: repaired stream is clean, the quarantined file is
+    // skipped — the tree is green again
+    let out = bin().args(["verify", "--root"]).arg(&d).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stdout));
+    std::fs::remove_dir_all(&d).ok();
+}

@@ -624,6 +624,72 @@ fn adaptive_index_and_payload_bitflips_never_panic() {
 }
 
 #[test]
+fn xsum_archive_every_single_byte_flip_is_a_typed_error() {
+    use attn_reduce::compressor::format::is_corruption;
+    // a real (smoke-scale) checksummed sz3 archive, as `save` writes it
+    let cfg = dataset_preset(DatasetKind::E3sm, Scale::Smoke);
+    let field = data::generate(&cfg);
+    let archive = Sz3Codec::new(cfg).compress(&field, &ErrorBound::Nrmse(1e-3)).unwrap();
+    let bytes = archive.to_bytes_checked();
+    assert!(Archive::from_bytes(&bytes).unwrap().checksummed());
+    // every single-byte flip anywhere in the file must parse to an
+    // error — the whole-file CRC covers [0..len-8], the stored CRC and
+    // XEND cover themselves — and most land as typed Corruption
+    let mut corruption_hits = 0usize;
+    for pos in 0..bytes.len() {
+        let mut m = bytes.clone();
+        m[pos] ^= 0x10;
+        let err = Archive::from_bytes(&m)
+            .err()
+            .unwrap_or_else(|| panic!("flip at byte {pos} parsed clean"));
+        corruption_hits += is_corruption(&err) as usize;
+    }
+    assert!(
+        corruption_hits > bytes.len() / 2,
+        "most flips should surface as typed Corruption, got {corruption_hits}/{}",
+        bytes.len()
+    );
+}
+
+#[test]
+fn torn_checked_stream_reopens_cleanly_and_appends() {
+    use attn_reduce::config::stream_frame_preset;
+    use attn_reduce::stream::{StreamReader, StreamWriter};
+    let cfg = stream_frame_preset(DatasetKind::E3sm, Scale::Smoke);
+    let codec = Sz3Codec::new(cfg.clone());
+    let frames = data::timeseries::generate_frames(&cfg.dims, cfg.seed, 0, 5);
+    let dir = std::env::temp_dir().join("attn_reduce_fuzz_torn_reopen");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("torn.tstr");
+    // an unsealed stream (no finish), as a crash mid-run leaves it
+    let mut w =
+        StreamWriter::create(&path, codec.id(), cfg, ErrorBound::Nrmse(1e-3), 2).unwrap();
+    w.append_frames(&codec, &frames[..4]).unwrap();
+    drop(w);
+    let full = std::fs::read(&path).unwrap();
+    let last = *StreamReader::from_bytes(full.clone()).unwrap().timeline().entries.last().unwrap();
+    // tear the tail mid-final-record (checked framing: payload + CRC)
+    let torn_at = last.offset as usize + last.len as usize / 2;
+    std::fs::write(&path, &full[..torn_at]).unwrap();
+    // the reader's recovery scan drops the torn step; reopen + append
+    // must continue the chain as if the torn step never happened
+    let r = StreamReader::open(&path).unwrap();
+    assert_eq!(r.n_steps(), 3, "torn final record dropped by the scan");
+    let mut w = StreamWriter::reopen_from(&path, r, &codec).unwrap();
+    w.append_frames(&codec, &frames[3..]).unwrap();
+    w.finish().unwrap();
+    let r = StreamReader::open(&path).unwrap();
+    assert_eq!(r.n_steps(), 5, "reopen resumed after the torn tail");
+    let mut builder = CodecBuilder::new();
+    let c = r.build_codec(&mut builder).unwrap();
+    for step in 0..r.n_steps() {
+        let t = r.frame(&*c, step).unwrap();
+        assert_eq!(t.shape(), r.dataset().dims.as_slice());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn v3_payload_bitflips_never_panic() {
     let (bytes, _, _) = v3_archive_bytes();
     let payload_pos = bytes

@@ -481,6 +481,42 @@ fn error_paths_return_typed_statuses() {
     assert_eq!(get(srv.addr, "/v1/stats").status, 200, "server still up");
 }
 
+/// Corruption detected while serving is a 422 — "the file is damaged,
+/// run `cli verify`" — distinct from a real 500, and the durability /
+/// integrity counter families are in the catalog from the first scrape.
+#[test]
+fn corrupt_files_return_422_and_durability_metrics_are_cataloged() {
+    let dir = root("corrupt");
+    let archive_p = make_archive(&dir, "field.ardc");
+    let srv = Running::start(&dir);
+
+    // flip one payload byte: the checked container's XSUM catches it,
+    // and the changed (len, mtime) stamp guarantees a cache miss even
+    // though the server never saw the overwrite
+    let mut bytes = std::fs::read(&archive_p).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&archive_p, &bytes).unwrap();
+
+    let r = get(srv.addr, "/v1/archives/field.ardc/extract");
+    assert_eq!(r.status, 422, "{}", r.text());
+    assert!(r.text().contains("checksum"), "{}", r.text());
+
+    // the server survives, the counter moved, and the new families are
+    // all present in the exposition
+    let text = get(srv.addr, "/v1/metrics").text();
+    for needle in [
+        "# TYPE attn_corruption_detected_total counter",
+        "attn_durable_writes_total{outcome=\"committed\"}",
+        "attn_durable_writes_total{outcome=\"failed\"}",
+        "# TYPE attn_requests_shed_total counter",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    assert!(metric_value(&text, "attn_corruption_detected_total") >= 1, "{text}");
+    assert_eq!(get(srv.addr, "/v1/stats").status, 200, "server still up");
+}
+
 #[test]
 fn post_compress_writes_a_servable_archive() {
     let dir = root("compress");

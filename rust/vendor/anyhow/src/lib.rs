@@ -7,6 +7,7 @@
 //! `bail!`, `ensure!` macros. Swapping in the real crate is a one-line
 //! change in `Cargo.toml`; no call sites need to move.
 
+use std::any::Any;
 use std::fmt::{self, Debug, Display};
 
 /// A dynamic error: an outermost message plus the chain of causes.
@@ -17,18 +18,33 @@ use std::fmt::{self, Debug, Display};
 pub struct Error {
     /// `chain[0]` is the outermost (most recent) context message.
     chain: Vec<String>,
+    /// The original root error value, kept for [`Error::downcast_ref`]
+    /// (real anyhow supports downcasting; callers like the serve layer
+    /// map typed errors such as `Corruption` to specific HTTP codes).
+    root: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a printable message.
     pub fn msg<M: Display>(message: M) -> Self {
-        Self { chain: vec![message.to_string()] }
+        Self { chain: vec![message.to_string()], root: None }
     }
 
     /// Wrap with an outer context message.
     pub fn context<C: Display>(mut self, context: C) -> Self {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// Borrow the root cause as a concrete error type, if this error
+    /// was built from one (context wrapping preserves it).
+    pub fn downcast_ref<E: std::error::Error + 'static>(&self) -> Option<&E> {
+        self.root.as_ref()?.downcast_ref::<E>()
+    }
+
+    /// Whether the root cause is of concrete type `E`.
+    pub fn is<E: std::error::Error + 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// The context chain, outermost first.
@@ -79,7 +95,7 @@ where
             chain.push(s.to_string());
             src = s.source();
         }
-        Self { chain }
+        Self { chain, root: Some(Box::new(e)) }
     }
 }
 
@@ -185,6 +201,15 @@ mod tests {
         let e = v.context("missing").unwrap_err();
         assert_eq!(format!("{e}"), "missing");
         assert_eq!(Some(3).with_context(|| "x").unwrap(), 3);
+    }
+
+    #[test]
+    fn downcast_ref_reaches_the_root_through_context() {
+        let e: Error = fails_io().context("opening file").unwrap_err();
+        let io = e.downcast_ref::<std::io::Error>().expect("root preserved");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.is::<std::io::Error>());
+        assert!(!Error::msg("plain").is::<std::io::Error>());
     }
 
     #[test]
